@@ -1,0 +1,324 @@
+"""AOT compiler: lower every bundle's functions to HLO *text* + manifest.
+
+HLO text (not ``HloModuleProto.serialize``) is the interchange format: jax
+≥0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out ../artifacts --set default [--force]
+
+Python runs ONCE — the rust binary is self-contained after this.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import bundles as B
+from . import formats as F
+from . import lm as lm_mod
+from . import model as M
+from . import proxy as proxy_mod
+
+QUANTIZER_SHAPE = (128, 512)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(name, arr_spec):
+    return {
+        "name": name,
+        "shape": list(arr_spec.shape),
+        "dtype": str(arr_spec.dtype),
+    }
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _lower(fn, args):
+    # keep_unused: jit would otherwise DCE unused scalar params (e.g. the
+    # LM init ignores init_mode/gain) and change the executable arity.
+    return jax.jit(fn, keep_unused=True).lower(*args)
+
+
+def _write(outdir, fname, text):
+    path = os.path.join(outdir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    return hashlib.sha256(text.encode()).hexdigest()[:16]
+
+
+SCALARS = {
+    "seed": _sds((), jnp.int32),
+    "step": _sds((), jnp.int32),
+    "init_mode": _sds((), jnp.float32),
+    "gain": _sds((), jnp.float32),
+}
+FMT_SDS = _sds((F.FMT_LEN,))
+HYPER_SDS = _sds((F.HYPER_LEN,))
+
+METRIC_NAMES = [
+    "loss",
+    "grad_norm",
+    "ln_frac_first",
+    "ln_frac_mean",
+    "act_frac_mean",
+    "update_norm",
+    "param_norm",
+    "eps_ratio",
+    "cosine",
+]
+
+
+def compile_quantizer(outdir):
+    """Standalone Pallas mx_qdq module (golden tests + L1 benches)."""
+    from .kernels import mx as mxk
+
+    rows, cols = QUANTIZER_SHAPE
+
+    def fn(x, fmt_id, bump):
+        y, lb = mxk.mx_qdq_pallas(x, fmt_id, bump, interpret=True)
+        return y, jnp.mean(lb)
+
+    args = (_sds((rows, cols)), _sds((), jnp.float32), _sds((), jnp.float32))
+    h = _write(outdir, "step.hlo.txt", to_hlo_text(_lower(fn, args)))
+    manifest = {
+        "kind": "quantizer",
+        "name": "quantizer",
+        "block_size": F.BLOCK_SIZE,
+        "formats": {v: k for k, v in F.FORMAT_NAMES.items()},
+        "functions": {
+            "step": {
+                "file": "step.hlo.txt",
+                "sha": h,
+                "inputs": [
+                    {"name": "x", "shape": [rows, cols], "dtype": "float32"},
+                    {"name": "fmt_id", "shape": [], "dtype": "float32"},
+                    {"name": "scale_bump", "shape": [], "dtype": "float32"},
+                ],
+                "outputs": [
+                    {"name": "y", "shape": [rows, cols], "dtype": "float32"},
+                    {"name": "last_bin_frac", "shape": [], "dtype": "float32"},
+                ],
+            }
+        },
+    }
+    _write(outdir, "manifest.json", json.dumps(manifest, indent=1))
+
+
+def _state_inputs(spec):
+    return [{"name": n, "shape": list(sh), "dtype": "float32"} for n, sh in spec]
+
+
+def _common_manifest(kind, bundle, cfg, spec):
+    return {
+        "kind": kind,
+        "name": bundle.name,
+        "config": {
+            k: getattr(cfg, k)
+            for k in cfg.__dataclass_fields__  # type: ignore[attr-defined]
+        },
+        "n_params": cfg.n_params(),
+        "state": _state_inputs(spec),
+        "fmt_len": F.FMT_LEN,
+        "hyper_len": F.HYPER_LEN,
+        "formats": {v: k for k, v in F.FORMAT_NAMES.items()},
+        "metrics": METRIC_NAMES,
+        "use_pallas": bundle.use_pallas,
+        "functions": {},
+    }
+
+
+def compile_proxy(bundle, outdir):
+    cfg = bundle.cfg
+    spec = proxy_mod.state_spec(cfg)
+    state_sds = tuple(_sds(sh) for _, sh in spec)
+
+    man = _common_manifest("proxy", bundle, cfg, spec)
+
+    init = proxy_mod.make_init(cfg)
+    h = _write(
+        outdir,
+        "init.hlo.txt",
+        to_hlo_text(_lower(init, (SCALARS["seed"], SCALARS["init_mode"], SCALARS["gain"]))),
+    )
+    man["functions"]["init"] = {
+        "file": "init.hlo.txt",
+        "sha": h,
+        "inputs": [
+            {"name": "seed", "shape": [], "dtype": "int32"},
+            {"name": "init_mode", "shape": [], "dtype": "float32"},
+            {"name": "gain", "shape": [], "dtype": "float32"},
+        ],
+        "outputs": _state_inputs(spec),
+    }
+
+    step_inputs = [
+        *_state_inputs(spec),
+        {"name": "fmt", "shape": [F.FMT_LEN], "dtype": "float32"},
+        {"name": "hyper", "shape": [F.HYPER_LEN], "dtype": "float32"},
+        {"name": "seed", "shape": [], "dtype": "int32"},
+        {"name": "step", "shape": [], "dtype": "int32"},
+    ]
+    step_outputs = [
+        *_state_inputs(spec),
+        {"name": "metrics", "shape": [M.MET_LEN], "dtype": "float32"},
+    ]
+    variants = [("step", False)] + ([("paired", True)] if bundle.paired else [])
+    for fname, paired in variants:
+        fn = proxy_mod.make_step(cfg, paired=paired)
+        lowered = _lower(
+            lambda st, fmt, hy, se, stp: fn(st, fmt, hy, se, stp),
+            (state_sds, FMT_SDS, HYPER_SDS, SCALARS["seed"], SCALARS["step"]),
+        )
+        h = _write(outdir, f"{fname}.hlo.txt", to_hlo_text(lowered))
+        man["functions"][fname] = {
+            "file": f"{fname}.hlo.txt",
+            "sha": h,
+            "inputs": step_inputs,
+            "outputs": step_outputs,
+        }
+    _write(outdir, "manifest.json", json.dumps(man, indent=1))
+
+
+def compile_lm(bundle, outdir):
+    cfg = bundle.cfg
+    spec = lm_mod.state_spec(cfg)
+    state_sds = tuple(_sds(sh) for _, sh in spec)
+    tokens_sds = _sds((cfg.batch, cfg.ctx + 1), jnp.int32)
+
+    man = _common_manifest("lm", bundle, cfg, spec)
+    man["flops_per_step"] = cfg.flops_per_step()
+
+    init = lm_mod.make_init(cfg)
+    h = _write(
+        outdir,
+        "init.hlo.txt",
+        to_hlo_text(_lower(init, (SCALARS["seed"], SCALARS["init_mode"], SCALARS["gain"]))),
+    )
+    man["functions"]["init"] = {
+        "file": "init.hlo.txt",
+        "sha": h,
+        "inputs": [
+            {"name": "seed", "shape": [], "dtype": "int32"},
+            {"name": "init_mode", "shape": [], "dtype": "float32"},
+            {"name": "gain", "shape": [], "dtype": "float32"},
+        ],
+        "outputs": _state_inputs(spec),
+    }
+
+    tok_input = {
+        "name": "tokens",
+        "shape": [cfg.batch, cfg.ctx + 1],
+        "dtype": "int32",
+    }
+    step_inputs = [
+        *_state_inputs(spec),
+        tok_input,
+        {"name": "fmt", "shape": [F.FMT_LEN], "dtype": "float32"},
+        {"name": "hyper", "shape": [F.HYPER_LEN], "dtype": "float32"},
+        {"name": "seed", "shape": [], "dtype": "int32"},
+        {"name": "step", "shape": [], "dtype": "int32"},
+    ]
+    step_outputs = [
+        *_state_inputs(spec),
+        {"name": "metrics", "shape": [M.MET_LEN], "dtype": "float32"},
+    ]
+    variants = [("step", False)] + ([("paired", True)] if bundle.paired else [])
+    for fname, paired in variants:
+        fn = lm_mod.make_step(cfg, paired=paired)
+        lowered = _lower(
+            fn, (state_sds, tokens_sds, FMT_SDS, HYPER_SDS, SCALARS["seed"], SCALARS["step"])
+        )
+        h = _write(outdir, f"{fname}.hlo.txt", to_hlo_text(lowered))
+        man["functions"][fname] = {
+            "file": f"{fname}.hlo.txt",
+            "sha": h,
+            "inputs": step_inputs,
+            "outputs": step_outputs,
+        }
+
+    # eval: params only (first third of the state), tokens, fmt → loss
+    k = len(spec) // 3
+    ev = lm_mod.make_eval(cfg)
+    lowered = _lower(ev, (tuple(_sds(sh) for _, sh in spec[:k]), tokens_sds, FMT_SDS))
+    h = _write(outdir, "eval.hlo.txt", to_hlo_text(lowered))
+    man["functions"]["eval"] = {
+        "file": "eval.hlo.txt",
+        "sha": h,
+        "inputs": [
+            *_state_inputs(spec[:k]),
+            tok_input,
+            {"name": "fmt", "shape": [F.FMT_LEN], "dtype": "float32"},
+        ],
+        "outputs": [{"name": "loss", "shape": [], "dtype": "float32"}],
+    }
+    _write(outdir, "manifest.json", json.dumps(man, indent=1))
+
+
+def build(outroot: str, set_name: str, force: bool, only: str | None = None):
+    os.makedirs(outroot, exist_ok=True)
+    built, skipped = [], []
+    bundle_list = B.bundle_set(set_name)
+    for bundle in bundle_list:
+        if only and only not in bundle.name:
+            continue
+        outdir = os.path.join(outroot, bundle.name)
+        stamp = os.path.join(outdir, "manifest.json")
+        if not force and os.path.exists(stamp):
+            skipped.append(bundle.name)
+            continue
+        os.makedirs(outdir, exist_ok=True)
+        M.set_use_pallas(bundle.use_pallas)
+        try:
+            if isinstance(bundle.cfg, str):
+                compile_quantizer(outdir)
+            elif isinstance(bundle.cfg, proxy_mod.ProxyConfig):
+                compile_proxy(bundle, outdir)
+            else:
+                compile_lm(bundle, outdir)
+        finally:
+            M.set_use_pallas(False)
+        built.append(bundle.name)
+        print(f"[aot] built {bundle.name}", flush=True)
+    # Index = union of every bundle present on disk (multiple sets coexist).
+    present = sorted(
+        d
+        for d in os.listdir(outroot)
+        if os.path.exists(os.path.join(outroot, d, "manifest.json"))
+    )
+    index = {"set": set_name, "bundles": present}
+    with open(os.path.join(outroot, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"[aot] done: {len(built)} built, {len(skipped)} up-to-date")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--set", default=os.environ.get("MXSTAB_SET", "default"))
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--only", default=None, help="substring filter on bundle names")
+    args = p.parse_args()
+    build(args.out, args.set, args.force, args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Artifact bundle registry — the single list of (model-shape) bundles that
+``aot.py`` lowers and the rust coordinator loads.
+
+Set names:
+  * ``quick``   — minimal set for CI / pytest / cargo test (seconds to build)
+  * ``default`` — everything the paper-figure experiments need
+  * ``full``    — default + larger LM rungs for longer scaling-law ladders
+
+The *precision format* is NOT part of a bundle: it is a runtime input to
+every step executable (DESIGN.md §1), so one bundle per model shape covers
+the paper's entire format sweep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+from .lm import LMConfig
+from .proxy import ProxyConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Bundle:
+    cfg: object            # ProxyConfig | LMConfig | str ("quantizer")
+    paired: bool = False   # also emit paired.hlo.txt (Fig. 4 diagnostics)
+    use_pallas: bool = False  # route quantization through the Pallas kernel
+
+    @property
+    def name(self) -> str:
+        if isinstance(self.cfg, str):
+            return self.cfg
+        suffix = "_pallas" if self.use_pallas else ""
+        return self.cfg.name + suffix
+
+
+def _proxy_grid(depths: Iterable[int], widths: Iterable[int], batch: int):
+    return [
+        Bundle(ProxyConfig(depth=L, d_model=D, batch=batch))
+        for L in depths
+        for D in widths
+    ]
+
+
+def bundle_set(name: str) -> list[Bundle]:
+    if name == "quick":
+        return [
+            Bundle("quantizer"),
+            Bundle(ProxyConfig(depth=2, d_model=128, batch=64), paired=True),
+            Bundle(ProxyConfig(depth=2, d_model=128, batch=64), use_pallas=True),
+            Bundle(LMConfig(n=1, vocab=256, ctx=64, batch=8), paired=True),
+        ]
+    if name in ("default", "full"):
+        bundles = [Bundle("quantizer")]
+        # Fig. 2 / 9 depth–width grid (gelu + LN). Paper: D ∈ [384, 768],
+        # L ∈ [3, 6] is the interesting band; batch scaled 2048→256 for CPU.
+        grid = _proxy_grid((2, 3, 4), (128, 256, 384), batch=128)
+        # Fig. 4/6/7 anchor config (paper: L=4, D=512; here L=4, D=384 —
+        # the CPU-scale substitution documented in DESIGN.md) gets paired
+        # gradients.
+        bundles += [
+            b
+            if not (b.cfg.depth == 4 and b.cfg.d_model == 256)
+            else Bundle(b.cfg, paired=True)
+            for b in grid
+        ]
+        # Fig. 3 activation × layernorm ablation at the anchor size.
+        for act in ("relu", "gelu", "swiglu"):
+            for ln in (True, False):
+                if act == "gelu" and ln:
+                    continue  # already in the grid
+                bundles.append(
+                    Bundle(ProxyConfig(depth=4, d_model=256, batch=128,
+                                       activation=act, layernorm=ln))
+                )
+        # Pallas-integrated proxy (proves L1∘L2∘L3 composition end-to-end).
+        bundles.append(
+            Bundle(ProxyConfig(depth=2, d_model=256, batch=128), use_pallas=True)
+        )
+        # LM ladder (Table 3 geometry: depth = heads = n, d_model = 64n).
+        rungs = (1, 2, 3) if name == "default" else (1, 2, 3, 4)
+        bundles += [
+            Bundle(LMConfig(n=n, vocab=512, ctx=64, batch=16), paired=(n == 2))
+            for n in rungs
+        ]
+        return bundles
+    raise ValueError(f"unknown bundle set {name!r}")

@@ -1,0 +1,116 @@
+"""Numeric-format constants and the runtime `fmt` tensor layout.
+
+This module is the single source of truth for the element-format constants
+(OCP MX spec) and for the layout of the two small runtime configuration
+vectors (`fmt`, `hyper`) that the rust coordinator feeds into every compiled
+step function.  The rust mirror lives in ``rust/src/formats/spec.rs`` and is
+cross-checked by golden tests.
+
+Element formats (OCP Microscaling spec v1.0):
+
+==========  =====  =====  ======  ==========  =============
+format      ebits  mbits  e_max   max_norm    emin (normal)
+==========  =====  =====  ======  ==========  =============
+FP8  E4M3   4      3      8       448         -6
+FP8  E5M2   5      2      15      57344       -14
+FP6  E2M3   2      3      2       7.5         0
+FP6  E3M2   3      2      4       28          -2
+==========  =====  =====  ======  ==========  =============
+
+``e_max`` is the exponent of the largest *normal* value — the quantity the
+shared block scale is shifted by in Algorithm 1 of the paper.  ``emin`` is
+the exponent of the smallest normal value (``2 - 2**(ebits-1)`` with the
+IEEE-style bias the OCP spec uses); below it the grid continues with
+subnormals at a fixed step of ``2**(emin - mbits)``.
+"""
+
+from __future__ import annotations
+
+# ---------------------------------------------------------------------------
+# Format ids (values of fmt[W_FMT_FWD] etc.; must match rust formats/spec.rs)
+# ---------------------------------------------------------------------------
+FP32 = 0  # passthrough (no quantization)
+BF16 = 1  # plain bfloat16 round-to-nearest-even cast, no block scale
+E4M3 = 2  # MXFP8
+E5M2 = 3  # MXFP8
+E2M3 = 4  # MXFP6
+E3M2 = 5  # MXFP6
+
+FORMAT_NAMES = {
+    FP32: "fp32",
+    BF16: "bf16",
+    E4M3: "e4m3",
+    E5M2: "e5m2",
+    E2M3: "e2m3",
+    E3M2: "e3m2",
+}
+FORMAT_IDS = {v: k for k, v in FORMAT_NAMES.items()}
+
+# (ebits, mbits, e_max, max_norm, emin_normal) per MX element format.
+MX_CONSTANTS = {
+    E4M3: (4, 3, 8, 448.0, -6),
+    E5M2: (5, 2, 15, 57344.0, -14),
+    E2M3: (2, 3, 2, 7.5, 0),
+    E3M2: (3, 2, 4, 28.0, -2),
+}
+
+BLOCK_SIZE = 32  # hardware MX block size (k in Algorithm 1)
+
+# ---------------------------------------------------------------------------
+# Runtime `fmt` vector layout: f32[FMT_LEN], one per training step call.
+# ---------------------------------------------------------------------------
+W_FMT_FWD = 0   # weight operand format in forward GEMMs (format id)
+A_FMT_FWD = 1   # activation operand format in forward GEMMs
+G_FMT_BWD = 2   # gradient operand format in backward GEMMs
+W_FMT_BWD = 3   # weight operand format in backward GEMMs
+A_FMT_BWD = 4   # activation operand format in backward GEMMs
+QUANT_FWD = 5   # 0/1: quantize forward GEMM operands at all
+QUANT_BWD = 6   # 0/1: quantize backward GEMM operands at all
+QUANT_LN = 7    # 0/1: quantize layer-norm affine (gamma) parameters
+SCALE_BUMP = 8  # 0/1: +1 on the shared exponent (Fig. 7 intervention)
+FMT_LEN = 9
+
+# ---------------------------------------------------------------------------
+# Runtime `hyper` vector layout: f32[HYPER_LEN].
+# ---------------------------------------------------------------------------
+LR = 0          # learning rate for this step
+OPT_MODE = 1    # 0 = Adam, 1 = SGD(+momentum)
+MOMENTUM = 2    # SGD momentum coefficient (0 = vanilla SGD)
+LABEL_NOISE = 3 # std-dev of Gaussian label noise (proxy model)
+HYPER_LEN = 4
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.95
+ADAM_EPS = 1e-8
+
+
+def make_fmt(
+    w_fwd: int = FP32,
+    a_fwd: int = FP32,
+    g_bwd: int | None = None,
+    w_bwd: int | None = None,
+    a_bwd: int | None = None,
+    quant_fwd: bool = True,
+    quant_bwd: bool = True,
+    quant_ln: bool = True,
+    scale_bump: bool = False,
+):
+    """Build the fmt vector (as a plain python list of floats).
+
+    Backward formats default to the forward choices, matching the paper's
+    default of using the same element type in both passes.
+    """
+    g_bwd = a_fwd if g_bwd is None else g_bwd
+    w_bwd = w_fwd if w_bwd is None else w_bwd
+    a_bwd = a_fwd if a_bwd is None else a_bwd
+    v = [0.0] * FMT_LEN
+    v[W_FMT_FWD] = float(w_fwd)
+    v[A_FMT_FWD] = float(a_fwd)
+    v[G_FMT_BWD] = float(g_bwd)
+    v[W_FMT_BWD] = float(w_bwd)
+    v[A_FMT_BWD] = float(a_bwd)
+    v[QUANT_FWD] = 1.0 if quant_fwd else 0.0
+    v[QUANT_BWD] = 1.0 if quant_bwd else 0.0
+    v[QUANT_LN] = 1.0 if quant_ln else 0.0
+    v[SCALE_BUMP] = 1.0 if scale_bump else 0.0
+    return v

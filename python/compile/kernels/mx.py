@@ -1,0 +1,139 @@
+"""L1 — Pallas MX quantize→dequantize kernel.
+
+The paper's compute hot-spot: every GEMM operand is pushed through a
+block-32 shared-scale quantizer.  This kernel implements that transform
+with an explicit HBM→VMEM tiling schedule expressed through BlockSpec.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): tiles are (TILE_R, TILE_C)
+with TILE_C a multiple of 128 lanes, so each 128-lane vector register holds
+four 32-element MX blocks; the shared-scale reduction is a width-32
+segmented max, and the quantization itself is pure VPU element-wise math.
+There is no MXU involvement — the kernel is memory-bound, and the BlockSpec
+double-buffers HBM↔VMEM transfers tile by tile.
+
+The kernel is lowered with ``interpret=True`` (mandatory for CPU-PJRT
+execution; real TPU lowering emits a Mosaic custom-call the CPU plugin
+cannot run) and checked against the pure-jnp oracle in ``ref.py`` by
+pytest/hypothesis suites — they agree bit-for-bit.
+
+Format parameters arrive as a scalar-prefetch-style small operand
+(``fmt_ref``), so the same lowered module serves every element format.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import formats as F
+
+# Tile shape: rows × lanes. 256 lanes = 2 vector registers = 8 MX blocks.
+TILE_R = 8
+TILE_C = 256
+
+
+def _floor_log2(x):
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    return ((bits >> 23) & 0xFF) - 127
+
+
+def _pow2(e):
+    return jnp.ldexp(jnp.float32(1.0), e.astype(jnp.int32))
+
+
+def _mx_qdq_tile(x, emax, maxn, emin, mbits, bump):
+    """Quantize one (r, c) tile; c is a multiple of BLOCK_SIZE."""
+    r, c = x.shape
+    xb = x.reshape(r, c // F.BLOCK_SIZE, F.BLOCK_SIZE)
+    m = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    mz = m > 0
+    msafe = jnp.where(mz, m, jnp.float32(1.0))
+    shared_exp = _floor_log2(msafe).astype(jnp.float32) - emax + bump
+    scale = _pow2(shared_exp)
+    rq = xb / scale
+
+    a = jnp.abs(rq)
+    nz = a > 0
+    safe = jnp.where(nz, a, jnp.float32(1.0))
+    e = jnp.clip(_floor_log2(safe).astype(jnp.float32), emin, emax)
+    step = _pow2(e - mbits)
+    q = jnp.round(a / step) * step
+    q = jnp.minimum(q, maxn)
+    q = jnp.where(nz, q, jnp.float32(0.0))
+    y = jnp.sign(rq) * q * scale
+    y = jnp.where(mz, y, jnp.float32(0.0))
+    last = jnp.logical_and(jnp.abs(q) >= maxn, mz)
+    return y.reshape(r, c), last.reshape(r, c).astype(jnp.float32)
+
+
+def _kernel(fmt_ref, x_ref, y_ref, lb_ref):
+    """Pallas kernel body: one VMEM tile per grid step.
+
+    fmt_ref: f32[8] — [fmt_id, scale_bump, emax, max_norm, emin, mbits, _, _]
+    (constants are pre-selected on the host side of the jaxpr so the kernel
+    body stays pure element-wise math).
+    """
+    x = x_ref[...]
+    fid = fmt_ref[0]
+    bump = fmt_ref[1]
+    emax, maxn, emin, mbits = fmt_ref[2], fmt_ref[3], fmt_ref[4], fmt_ref[5]
+    y_mx, lb = _mx_qdq_tile(x, emax, maxn, emin, mbits, bump)
+    y_bf = x.astype(jnp.bfloat16).astype(jnp.float32)
+    y = jnp.where(fid == F.FP32, x, jnp.where(fid == F.BF16, y_bf, y_mx))
+    lb = jnp.where(fid >= F.E4M3, lb, jnp.zeros_like(lb))
+    y_ref[...] = y
+    lb_ref[...] = lb
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mx_qdq_pallas(x, fmt_id, scale_bump, interpret=True):
+    """Block-32 MX quantize→dequantize over the last axis of a 2-D array.
+
+    Returns (y, last_bin_fraction_mask as f32).  Shape must tile by
+    (TILE_R, TILE_C); the model layer shapes used in this repo all do.
+    """
+    x = x.astype(jnp.float32)
+    rows, cols = x.shape
+    tr = TILE_R if rows % TILE_R == 0 else rows
+    tc = TILE_C if cols % TILE_C == 0 else cols
+    assert cols % F.BLOCK_SIZE == 0, f"cols {cols} % 32 != 0"
+
+    # Pre-select format constants (tiny scalar jnp graph, runs once per call)
+    from . import ref
+
+    emax, maxn, emin, mbits = ref._select_constants(jnp.asarray(fmt_id))
+    fmt_op = jnp.stack(
+        [
+            jnp.asarray(fmt_id, jnp.float32),
+            jnp.asarray(scale_bump, jnp.float32),
+            emax,
+            maxn,
+            emin,
+            mbits,
+            jnp.float32(0),
+            jnp.float32(0),
+        ]
+    )
+
+    grid = (rows // tr, cols // tc)
+    y, lb = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((8,), lambda i, j: (0,)),
+            pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+            pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+            jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        ],
+        interpret=interpret,
+    )(fmt_op, x)
+    return y, lb

@@ -1,0 +1,140 @@
+"""Pure-jnp MX quantizer — the correctness oracle for the Pallas kernel and
+the implementation used inside the compiled model step functions.
+
+All format parameters are *runtime* scalars so a single lowered HLO module
+serves every precision configuration (see DESIGN.md §1).  The math is
+written so that every operation is exact in f32 except the final
+round-half-to-even onto the element grid:
+
+* ``floor(log2 |x|)`` is extracted from the f32 exponent bits (exact),
+* powers of two are built with ``ldexp`` (exact),
+* divisions/multiplications by powers of two are exact in f32.
+
+This makes the jnp oracle, the Pallas kernel, and the rust mirror
+bit-identical, which the test suites assert.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import formats as F
+
+
+def _floor_log2(x):
+    """floor(log2(x)) for positive normal f32 x, via exponent bits (exact)."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    return ((bits >> 23) & 0xFF) - 127
+
+
+def _pow2(e):
+    """2.0**e for integer-valued e (exact, handles subnormal results)."""
+    return jnp.ldexp(jnp.float32(1.0), e.astype(jnp.int32))
+
+
+def _select_constants(fmt_id):
+    """Map a runtime format id scalar to (emax, max_norm, emin, mbits)."""
+    fid = fmt_id.astype(jnp.float32)
+
+    def pick(table, default):
+        out = jnp.float32(default)
+        for key, val in table.items():
+            out = jnp.where(fid == key, jnp.float32(val), out)
+        return out
+
+    emax = pick({k: v[2] for k, v in F.MX_CONSTANTS.items()}, 0.0)
+    maxn = pick({k: v[3] for k, v in F.MX_CONSTANTS.items()}, 1.0)
+    emin = pick({k: v[4] for k, v in F.MX_CONSTANTS.items()}, 0.0)
+    mbits = pick({k: v[1] for k, v in F.MX_CONSTANTS.items()}, 0.0)
+    return emax, maxn, emin, mbits
+
+
+def quantize_elem(r, fmt_id):
+    """Quantize values (already divided by the block scale) onto the element
+    grid of ``fmt_id``: round-half-even, subnormal-aware, clamped to
+    ±max_norm (the paper's §6.1 clamping mechanism)."""
+    emax, maxn, emin, mbits = _select_constants(fmt_id)
+    a = jnp.abs(r)
+    nz = a > 0
+    safe = jnp.where(nz, a, jnp.float32(1.0))
+    e = jnp.clip(_floor_log2(safe).astype(jnp.float32), emin, emax)
+    # Quantization step for exponent band e: 2^(e - mbits).
+    step = _pow2(e - mbits)
+    q = jnp.round(a / step) * step  # exact scaling; RNE round
+    q = jnp.minimum(q, maxn)        # overflow region → clamp to max normal
+    q = jnp.where(nz, q, jnp.float32(0.0))
+    return jnp.sign(r) * q
+
+
+def mx_qdq_lastaxis(x, fmt_id, scale_bump):
+    """MX block quantize→dequantize along the last axis (blocks of 32).
+
+    Returns ``(y, last_bin)`` where ``last_bin`` is a boolean mask of
+    elements that landed in the top quantization bin (|scaled| clamped or
+    rounded to max_norm) — the paper's Fig. 5 diagnostic.
+    """
+    x = x.astype(jnp.float32)
+    shape = x.shape
+    assert shape[-1] % F.BLOCK_SIZE == 0, f"last axis {shape[-1]} % 32 != 0"
+    xb = x.reshape(shape[:-1] + (shape[-1] // F.BLOCK_SIZE, F.BLOCK_SIZE))
+
+    emax, maxn, emin, mbits = _select_constants(fmt_id)
+    m = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    mz = m > 0
+    msafe = jnp.where(mz, m, jnp.float32(1.0))
+    shared_exp = _floor_log2(msafe).astype(jnp.float32) - emax + scale_bump
+    scale = _pow2(shared_exp)
+    r = xb / scale
+    q = quantize_elem(r, fmt_id)
+    last_bin = jnp.abs(q) >= maxn
+    y = q * scale
+    y = jnp.where(mz, y, jnp.float32(0.0))
+    last_bin = jnp.logical_and(last_bin, mz)
+    return y.reshape(shape), last_bin.reshape(shape)
+
+
+def bf16_qdq(x):
+    """Round-to-nearest-even bfloat16 cast, back to f32."""
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def qdq(x, fmt_id, scale_bump, axis=-1):
+    """Runtime-dispatch quantize→dequantize.
+
+    fmt_id 0 → passthrough, 1 → bf16 cast, ≥2 → MX block quantization with
+    blocks of 32 along ``axis``.  Returns ``(y, last_bin_mask)``.
+
+    Dispatch uses ``lax.switch`` so only the *active* branch executes at
+    runtime — fp32/bf16 configurations pay nothing for the MX math. (An
+    earlier ``where``-blend of all three paths doubled step wallclock;
+    see EXPERIMENTS.md §Perf.)
+    """
+    x = x.astype(jnp.float32)
+    if axis != -1 and axis != x.ndim - 1:
+        xm = jnp.moveaxis(x, axis, -1)
+        y, lb = qdq(xm, fmt_id, scale_bump, axis=-1)
+        return jnp.moveaxis(y, -1, axis), jnp.moveaxis(lb, -1, axis)
+
+    fid = fmt_id.astype(jnp.float32)
+
+    def branch_fp32(v):
+        return v, jnp.zeros(v.shape, jnp.bool_)
+
+    def branch_bf16(v):
+        return bf16_qdq(v), jnp.zeros(v.shape, jnp.bool_)
+
+    def branch_mx(v):
+        return mx_qdq_lastaxis(v, fid, scale_bump)
+
+    idx = jnp.clip(fid, 0.0, 2.0).astype(jnp.int32)
+    return jax.lax.switch(idx, [branch_fp32, branch_bf16, branch_mx], x)
+
+
+def qdq_ste(x, fmt_id, scale_bump, axis=-1):
+    """Straight-through-estimator wrapper: forward = qdq, backward = identity.
+
+    Matches the MX emulation library's autograd semantics for tensors that
+    are quantized in place (e.g. layer-norm affine weights)."""
+    y, lb = qdq(x, fmt_id, scale_bump, axis=axis)
+    return x + jax.lax.stop_gradient(y - x), lb

@@ -1,0 +1,285 @@
+"""L2 — OLMo-style decoder-only transformer LM (paper §3 / Table 3).
+
+Architecture (matching the paper's Table 3):
+  * n layers, n heads, head dim 64 → d_model = 64·n
+  * pre-LN blocks, GeLU MLP with 4× hidden multiplier, no biases
+  * RoPE positional encoding
+  * QK normalization (layernorm over head dim with affine gamma — one of
+    the paper's clamping-prone parameter groups)
+  * untied output head, final layernorm
+  * cross-entropy next-token loss
+
+All Linear / BMM inputs pass through the MX quantizer exactly as in the MX
+emulation library: weight + activation operands in the forward pass, and
+gradient/weight/activation operands in the backward pass, each with its own
+runtime-selectable element format (python/compile/formats.py).
+
+Token batches are produced by the rust coordinator's synthetic Zipf–Markov
+corpus and passed in as an i32 tensor [batch, ctx+1].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import formats as F
+from . import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    n: int = 2              # depth = heads = n; d_model = 64 n (Table 3)
+    vocab: int = 512
+    ctx: int = 64
+    batch: int = 16
+
+    @property
+    def d_model(self) -> int:
+        return 64 * self.n
+
+    @property
+    def heads(self) -> int:
+        return self.n
+
+    @property
+    def head_dim(self) -> int:
+        return 64
+
+    @property
+    def hidden(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def name(self) -> str:
+        return f"lm_n{self.n}_v{self.vocab}_c{self.ctx}_b{self.batch}"
+
+    def n_params(self) -> int:
+        D, H, V = self.d_model, self.hidden, self.vocab
+        per_layer = 4 * D * D + 2 * D * H + 2 * D + 2 * self.head_dim
+        return self.n * per_layer + 2 * V * D + D
+
+    def flops_per_step(self) -> int:
+        """~6 N D_tokens forward+backward GEMM FLOPs (Chinchilla accounting)."""
+        return 6 * self.n_params() * self.batch * self.ctx
+
+
+# --------------------------------------------------------------------------
+# Parameters (stacked over layers for lax.scan).
+# --------------------------------------------------------------------------
+
+PARAM_SHAPES = lambda c: {
+    "embed": (c.vocab, c.d_model),
+    "wq": (c.n, c.d_model, c.d_model),
+    "wk": (c.n, c.d_model, c.d_model),
+    "wv": (c.n, c.d_model, c.d_model),
+    "wo": (c.n, c.d_model, c.d_model),
+    "wi": (c.n, c.d_model, c.hidden),
+    "wf": (c.n, c.hidden, c.d_model),
+    "ln1": (c.n, c.d_model),
+    "ln2": (c.n, c.d_model),
+    "lnq": (c.n, c.head_dim),
+    "lnk": (c.n, c.head_dim),
+    "lnf": (c.d_model,),
+    "head": (c.d_model, c.vocab),
+}
+
+
+def init_params(cfg: LMConfig, key):
+    shapes = PARAM_SHAPES(cfg)
+    params = {}
+    for i, (n, sh) in enumerate(sorted(shapes.items())):
+        k = jax.random.fold_in(key, i)
+        if n.startswith("ln"):
+            params[n] = jnp.ones(sh, jnp.float32)
+        elif n == "embed":
+            params[n] = jax.random.normal(k, sh, jnp.float32) * 0.02
+        else:
+            fan_in = sh[-2]
+            params[n] = jax.random.normal(k, sh, jnp.float32) / jnp.sqrt(
+                jnp.float32(fan_in)
+            )
+    return params
+
+
+def _rope(x):
+    """Rotary embedding over the last axis of [B, H, T, Dh]."""
+    b, h, t, d = x.shape
+    half = d // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = jnp.arange(t, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def forward(cfg: LMConfig, params, tokens, fmt):
+    """tokens: i32[B, T] → logits f32[B, T, V]; returns (logits, diag)."""
+    B, T = tokens.shape
+    D, H, Dh, nh = cfg.d_model, cfg.hidden, cfg.head_dim, cfg.heads
+    x = params["embed"][tokens]  # [B, T, D]
+
+    mask = jnp.tril(jnp.ones((T, T), jnp.float32))
+    neg = jnp.float32(-1e9)
+
+    layer_params = tuple(
+        params[n] for n in ("wq", "wk", "wv", "wo", "wi", "wf", "ln1", "ln2", "lnq", "lnk")
+    )
+
+    def block(carry, layer):
+        x = carry
+        wq, wk, wv, wo, wi, wf, g1, g2, gq, gk = layer
+        # --- attention ---
+        z, lnf1 = M.layernorm(x, g1, fmt)
+        z2 = z.reshape(B * T, D)
+        q, fq = M.mx_matmul_stats(z2, wq, fmt)
+        k, _ = M.mx_matmul_stats(z2, wk, fmt)
+        v, _ = M.mx_matmul_stats(z2, wv, fmt)
+
+        def heads(u):
+            return u.reshape(B, T, nh, Dh).transpose(0, 2, 1, 3)
+
+        q, k, v = heads(q), heads(k), heads(v)
+        # QK normalization (Henry et al. 2020) — affine gammas quantize like
+        # any other LN parameter (a clamping-prone group per the paper §6.1).
+        q, lnfq = M.layernorm(q, gq, fmt)
+        k, lnfk = M.layernorm(k, gk, fmt)
+        q, k = _rope(q), _rope(k)
+
+        qf = q.reshape(B * nh, T, Dh)
+        kf = k.reshape(B * nh, T, Dh)
+        vf = v.reshape(B * nh, T, Dh)
+        att = M.mx_bmm(qf, jnp.swapaxes(kf, -1, -2), fmt) / jnp.sqrt(
+            jnp.float32(Dh)
+        )
+        att = att + (1.0 - mask) * neg
+        att = jax.nn.softmax(att, axis=-1)
+        o = M.mx_bmm(att, vf, fmt)
+        o = o.reshape(B, nh, T, Dh).transpose(0, 2, 1, 3).reshape(B * T, D)
+        o, _ = M.mx_matmul_stats(o, wo, fmt)
+        x = x + o.reshape(B, T, D)
+        # --- mlp ---
+        z, lnf2 = M.layernorm(x, g2, fmt)
+        hline, fh = M.mx_matmul_stats(z.reshape(B * T, D), wi, fmt)
+        hact = jax.nn.gelu(hline)
+        out, _ = M.mx_matmul_stats(hact, wf, fmt)
+        x = x + out.reshape(B, T, D)
+        ln_frac_ffn = lnf2  # the paper's Fig. 5 tracks the FFN layernorm
+        ln_frac_mean = (lnf1 + lnf2 + lnfq + lnfk) / 4.0
+        return x, (ln_frac_ffn, ln_frac_mean, (fq + fh) * 0.5)
+
+    x, (ffn_fracs, ln_means, act_fracs) = jax.lax.scan(block, x, layer_params)
+
+    z, lnff = M.layernorm(x, params["lnf"], fmt)
+    logits, _ = M.mx_matmul_stats(z.reshape(B * T, D), params["head"], fmt)
+    diag = (
+        ffn_fracs[0],
+        (jnp.mean(ln_means) * cfg.n + lnff) / (cfg.n + 1),
+        jnp.mean(act_fracs),
+    )
+    return logits.reshape(B, T, cfg.vocab), diag
+
+
+def loss_fn(cfg: LMConfig, params, tokens, fmt):
+    """Next-token cross-entropy over tokens[:, :-1] → tokens[:, 1:]."""
+    logits, diag = forward(cfg, params, tokens[:, :-1], fmt)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return -jnp.mean(ll), diag
+
+
+# --------------------------------------------------------------------------
+# Exported functions.
+# --------------------------------------------------------------------------
+
+
+def state_spec(cfg: LMConfig):
+    shapes = PARAM_SHAPES(cfg)
+    names = sorted(shapes.keys())
+    spec = []
+    for prefix in ("p", "m", "v"):
+        for n in names:
+            spec.append((f"{prefix}_{n}", shapes[n]))
+    return spec
+
+
+def _unflatten(cfg: LMConfig, flat):
+    names = sorted(PARAM_SHAPES(cfg).keys())
+    k = len(names)
+    params = dict(zip(names, flat[:k]))
+    ms = dict(zip(names, flat[k : 2 * k]))
+    vs = dict(zip(names, flat[2 * k : 3 * k]))
+    return params, ms, vs
+
+
+def _flatten(cfg: LMConfig, params, ms, vs):
+    names = sorted(PARAM_SHAPES(cfg).keys())
+    return [params[n] for n in names] + [ms[n] for n in names] + [vs[n] for n in names]
+
+
+def make_init(cfg: LMConfig):
+    def init(seed, init_mode, gain):
+        del init_mode, gain  # LM uses the fixed OLMo-style init
+        params = init_params(cfg, jax.random.PRNGKey(seed))
+        ms = {n: jnp.zeros_like(p) for n, p in params.items()}
+        vs = {n: jnp.zeros_like(p) for n, p in params.items()}
+        return tuple(_flatten(cfg, params, ms, vs))
+
+    return init
+
+
+def make_step(cfg: LMConfig, paired: bool = False):
+    def step(flat_state, tokens, fmt, hyper, seed, step_idx):
+        del seed
+        params, ms, vs = _unflatten(cfg, list(flat_state))
+        grad_fn = jax.value_and_grad(
+            lambda p, f: loss_fn(cfg, p, tokens, f), has_aux=True
+        )
+        (loss, diag), grads = grad_fn(params, fmt)
+
+        extra = None
+        if paired:
+            (_, _), g_ref = grad_fn(params, jnp.zeros_like(fmt))
+            diff_sq = sum(
+                jnp.sum((a - b) ** 2)
+                for a, b in zip(
+                    jax.tree_util.tree_leaves(grads), jax.tree_util.tree_leaves(g_ref)
+                )
+            )
+            ref_norm = M.global_norm(g_ref)
+            extra = (
+                jnp.sqrt(diff_sq) / (ref_norm + 1e-30),
+                M.tree_dot(grads, g_ref) / (M.global_norm(grads) * ref_norm + 1e-30),
+            )
+
+        params2, ms2, vs2, upd_sq = M.tree_update(params, grads, ms, vs, step_idx, hyper)
+
+        met = jnp.zeros((M.MET_LEN,), jnp.float32)
+        met = met.at[M.MET_LOSS].set(loss)
+        met = met.at[M.MET_GRAD_NORM].set(M.global_norm(grads))
+        met = met.at[M.MET_LN_FRAC_FIRST].set(diag[0])
+        met = met.at[M.MET_LN_FRAC_MEAN].set(diag[1])
+        met = met.at[M.MET_ACT_FRAC_MEAN].set(diag[2])
+        met = met.at[M.MET_UPDATE_NORM].set(jnp.sqrt(upd_sq))
+        met = met.at[M.MET_PARAM_NORM].set(M.global_norm(params2))
+        if extra is not None:
+            met = met.at[M.MET_EPS_RATIO].set(extra[0])
+            met = met.at[M.MET_COSINE].set(extra[1])
+        return tuple(_flatten(cfg, params2, ms2, vs2)) + (met,)
+
+    return step
+
+
+def make_eval(cfg: LMConfig):
+    """Validation-loss function: (flat params only, tokens, fmt) → loss."""
+
+    def ev(flat_params, tokens, fmt):
+        names = sorted(PARAM_SHAPES(cfg).keys())
+        params = dict(zip(names, flat_params))
+        loss, _ = loss_fn(cfg, params, tokens, fmt)
+        return (loss,)
+
+    return ev

@@ -1,0 +1,251 @@
+"""L2 shared model components.
+
+* ``mx_matmul`` — GEMM whose operands pass through the MX quantizer in both
+  the forward and the backward pass, with independently selectable element
+  formats (the paper's quantization sites: Linear / MatMul / BMM inputs).
+* ``layernorm`` — layer normalization whose affine (gamma) parameter is
+  block-quantized (the paper's §6.1 instability mechanism).
+* ``adam_sgd_update`` — fused optimizer with runtime-selectable Adam / SGD(m).
+
+Every quantization site records the fraction of elements that land in the
+last quantization bin (Fig. 5 diagnostics); the step functions aggregate
+these into the metrics vector the rust coordinator logs.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import formats as F
+from .kernels import ref
+
+# When enabled, forward activation quantization in 2-D matmuls routes
+# through the Pallas kernel (L1) so it lowers into the same HLO module.
+# The jnp path is bit-identical (asserted by pytest) and lowers to a far
+# smaller, fusible HLO graph, so it is the default for big sweep bundles;
+# aot.py flips this on for the pallas-integrated bundles.
+_USE_PALLAS = os.environ.get("MXSTAB_PALLAS", "0") == "1"
+
+
+def set_use_pallas(on: bool):
+    """Route eligible quantization sites through the Pallas kernel for
+    functions traced after this call (used by aot.py per-bundle)."""
+    global _USE_PALLAS
+    _USE_PALLAS = bool(on)
+
+
+def _q(x, fmt_id, bump, axis):
+    """Quantize-dequantize returning (values, last-bin fraction scalar)."""
+    if _USE_PALLAS and x.ndim == 2 and axis in (-1, 1) and x.shape[1] % 256 == 0:
+        from .kernels import mx as mxk
+
+        y, lb = mxk.mx_qdq_pallas(x, fmt_id, bump, interpret=True)
+        return y, jnp.mean(lb)
+    y, lb = ref.qdq(x, fmt_id, bump, axis=axis)
+    return y, jnp.mean(lb.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Quantized matmul with custom VJP.
+#
+# Forward:   out = Q_a(x) @ Q_w(w)           (blocks along the K axis)
+# Backward:  dx  = Q_g(g) @ Q_w(w).T         (blocks along the N axis)
+#            dw  = Q_a(x).T @ Q_g(g)         (blocks along the B axis)
+#
+# fmt is the 9-element runtime configuration vector (formats.py layout);
+# flags QUANT_FWD / QUANT_BWD gate each pass (1.0 → quantize).
+# ---------------------------------------------------------------------------
+
+
+def _maybe(x, enable, fmt_id, bump, axis):
+    """Quantize when ``enable`` is set. Folding the enable flag into the
+    format id (0 = fp32 passthrough) lets the qdq ``lax.switch`` skip the
+    MX math entirely when quantization is off."""
+    eff_id = jnp.where(enable > 0.5, fmt_id, jnp.float32(F.FP32))
+    return _q(x, eff_id, bump, axis)
+
+
+@jax.custom_vjp
+def mx_matmul(x, w, fmt):
+    y, _ = _mx_matmul_fwd_impl(x, w, fmt)
+    return y
+
+
+def _mx_matmul_fwd_impl(x, w, fmt):
+    bump = fmt[F.SCALE_BUMP]
+    qx, fx = _maybe(x, fmt[F.QUANT_FWD], fmt[F.A_FMT_FWD], bump, axis=-1)
+    qw, fw = _maybe(w, fmt[F.QUANT_FWD], fmt[F.W_FMT_FWD], bump, axis=0)
+    return qx @ qw, (fx + fw) * 0.5
+
+
+def _mx_matmul_fwd(x, w, fmt):
+    y, _ = _mx_matmul_fwd_impl(x, w, fmt)
+    return y, (x, w, fmt)
+
+
+def _mx_matmul_bwd(res, g):
+    x, w, fmt = res
+    bump = fmt[F.SCALE_BUMP]
+    en = fmt[F.QUANT_BWD]
+    # dx = g @ w.T : reduction over N → g blocked on last axis, w on axis 1.
+    qg_n, _ = _maybe(g, en, fmt[F.G_FMT_BWD], bump, axis=-1)
+    qw_n, _ = _maybe(w, en, fmt[F.W_FMT_BWD], bump, axis=1)
+    dx = qg_n @ qw_n.T
+    # dw = x.T @ g : reduction over batch → both blocked on axis 0.
+    qx_b, _ = _maybe(x, en, fmt[F.A_FMT_BWD], bump, axis=0)
+    qg_b, _ = _maybe(g, en, fmt[F.G_FMT_BWD], bump, axis=0)
+    dw = qx_b.T @ qg_b
+    return dx, dw, jnp.zeros_like(fmt)
+
+
+mx_matmul.defvjp(_mx_matmul_fwd, _mx_matmul_bwd)
+
+
+def mx_matmul_stats(x, w, fmt):
+    """Like mx_matmul but also returns the forward activation last-bin
+    fraction (Fig. 5 right diagnostic). Differentiable via the custom VJP;
+    the diagnostic is quantizer-only (no extra GEMM)."""
+    y = mx_matmul(x, w, fmt)
+    xs = jax.lax.stop_gradient(x)
+    _, frac = _maybe(xs, fmt[F.QUANT_FWD], fmt[F.A_FMT_FWD], fmt[F.SCALE_BUMP], axis=-1)
+    return y, frac
+
+
+# ---------------------------------------------------------------------------
+# Batched (rank-3) quantized matmul for attention BMMs.
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def mx_bmm(a, b, fmt):
+    qa, _ = _maybe(a, fmt[F.QUANT_FWD], fmt[F.A_FMT_FWD], fmt[F.SCALE_BUMP], axis=-1)
+    qb, _ = _maybe(b, fmt[F.QUANT_FWD], fmt[F.A_FMT_FWD], fmt[F.SCALE_BUMP], axis=-2)
+    return qa @ qb
+
+
+def _mx_bmm_fwd(a, b, fmt):
+    return mx_bmm(a, b, fmt), (a, b, fmt)
+
+
+def _mx_bmm_bwd(res, g):
+    a, b, fmt = res
+    bump = fmt[F.SCALE_BUMP]
+    en = fmt[F.QUANT_BWD]
+    gid = fmt[F.G_FMT_BWD]
+    aid = fmt[F.A_FMT_BWD]
+    qg_n, _ = _maybe(g, en, gid, bump, axis=-1)
+    qb_n, _ = _maybe(b, en, aid, bump, axis=-1)
+    da = qg_n @ jnp.swapaxes(qb_n, -1, -2)
+    qa_k, _ = _maybe(a, en, aid, bump, axis=-2)
+    qg_k, _ = _maybe(g, en, gid, bump, axis=-2)
+    db = jnp.swapaxes(qa_k, -1, -2) @ qg_k
+    return da, db, jnp.zeros_like(fmt)
+
+
+mx_bmm.defvjp(_mx_bmm_fwd, _mx_bmm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Layer normalization with quantized affine weight.
+# ---------------------------------------------------------------------------
+
+
+def layernorm(x, gamma, fmt, eps=1e-5):
+    """LN(x) = gamma_q ⊙ (x - mean)/sqrt(var + eps).
+
+    gamma is quantized with the *weight* forward format when QUANT_LN is on
+    (straight-through in the backward pass, matching the emulation library).
+    Returns (out, last_bin_fraction_of_gamma) — the Fig. 5 middle diagnostic.
+    The vector arithmetic itself runs in bf16-or-better, as in the paper.
+    """
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    xhat = (x - mu) * jax.lax.rsqrt(var + eps)
+    on = jnp.logical_and(fmt[F.QUANT_LN] > 0.5, fmt[F.QUANT_FWD] > 0.5)
+    eff_id = jnp.where(on, fmt[F.W_FMT_FWD], jnp.float32(F.FP32))
+    g_eff, lb = ref.qdq_ste(gamma, eff_id, fmt[F.SCALE_BUMP], axis=-1)
+    frac = jnp.mean(lb.astype(jnp.float32))
+    return xhat * g_eff, jax.lax.stop_gradient(frac)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer: fused Adam / SGD(momentum), runtime-selectable.
+# ---------------------------------------------------------------------------
+
+
+def adam_sgd_update(p, g, m, v, step, hyper):
+    """One optimizer update for a single tensor.
+
+    hyper[OPT_MODE] = 0 → Adam(b1=0.9, b2=0.95, eps=1e-8, bias-corrected)
+                    = 1 → SGD with momentum hyper[MOMENTUM] (0 → vanilla).
+    Master weights and optimizer state stay in f32 (as in the paper).
+    """
+    lr = hyper[F.LR]
+    mode = hyper[F.OPT_MODE]
+    mu = hyper[F.MOMENTUM]
+    t = step.astype(jnp.float32) + 1.0
+
+    m_adam = F.ADAM_B1 * m + (1.0 - F.ADAM_B1) * g
+    v_adam = F.ADAM_B2 * v + (1.0 - F.ADAM_B2) * g * g
+    mhat = m_adam / (1.0 - F.ADAM_B1**t)
+    vhat = v_adam / (1.0 - F.ADAM_B2**t)
+    upd_adam = mhat / (jnp.sqrt(vhat) + F.ADAM_EPS)
+
+    m_sgd = mu * m + g
+    upd_sgd = m_sgd
+
+    is_sgd = mode > 0.5
+    m_new = jnp.where(is_sgd, m_sgd, m_adam)
+    v_new = jnp.where(is_sgd, v, v_adam)
+    upd = jnp.where(is_sgd, upd_sgd, upd_adam)
+    return p - lr * upd, m_new, v_new
+
+
+def tree_update(params, grads, ms, vs, step, hyper):
+    """Apply adam_sgd_update across a pytree; returns (params', ms', vs',
+    update_norm^2 accumulated)."""
+    leaves_p, treedef = jax.tree_util.tree_flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_m = treedef.flatten_up_to(ms)
+    leaves_v = treedef.flatten_up_to(vs)
+    new_p, new_m, new_v = [], [], []
+    upd_sq = jnp.float32(0.0)
+    for p, g, m, v in zip(leaves_p, leaves_g, leaves_m, leaves_v):
+        p2, m2, v2 = adam_sgd_update(p, g, m, v, step, hyper)
+        upd_sq = upd_sq + jnp.sum((p2 - p) ** 2)
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    return (
+        treedef.unflatten(new_p),
+        treedef.unflatten(new_m),
+        treedef.unflatten(new_v),
+        upd_sq,
+    )
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32)**2) for l in leaves))
+
+
+def tree_dot(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return sum(jnp.sum(x * y) for x, y in zip(la, lb))
+
+
+# Metrics vector layout — must match rust/src/coordinator/metrics.rs.
+MET_LOSS = 0
+MET_GRAD_NORM = 1
+MET_LN_FRAC_FIRST = 2   # last-bin fraction of first-layer LN gamma
+MET_LN_FRAC_MEAN = 3    # mean over all LN gammas
+MET_ACT_FRAC_MEAN = 4   # mean over forward GEMM operand sites
+MET_UPDATE_NORM = 5
+MET_PARAM_NORM = 6
+MET_EPS_RATIO = 7       # paired mode: ||g_mx - g_fp32|| / ||g_fp32||
+MET_COSINE = 8          # paired mode: cos(g_mx, g_fp32)
+MET_LEN = 9

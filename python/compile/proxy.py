@@ -1,0 +1,270 @@
+"""L2 — residual-MLP student–teacher proxy model (paper Eq. 1).
+
+Student:  A_0 = x;  h_k = W1_k · LN_k(A_{k-1});  A_k = A_{k-1} + W2_k · φ(h_k)
+Teacher:  identical architecture *without* layer normalization.
+Targets:  y = teacher(x) + σ·ε,  σ = hyper[LABEL_NOISE],  ε ~ N(0, I).
+Loss:     MSE.
+
+Inputs x are drawn i.i.d. N(0, I) *inside* the compiled step from
+(run_seed, step) so FP32 and MX trajectories see byte-identical batches —
+the paper's controlled-comparison protocol (§4.1).
+
+Layers are stacked on a leading axis and folded with ``lax.scan`` so the
+lowered HLO stays compact at any depth.
+
+Step functions exported (see aot.py):
+  * ``init``   : (seed, init_mode, gain) → state
+  * ``step``   : (state…, fmt, hyper, seed, step) → (state…, metrics)
+  * ``paired`` : same as step, but additionally computes the FP32 gradient
+                 at the same parameter point and reports ‖ε_t‖/‖ḡ_t‖ and
+                 cos(g̃_t, ḡ_t) (paper Fig. 4), then applies the *quantized*
+                 update.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import formats as F
+from . import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class ProxyConfig:
+    depth: int = 4
+    d_model: int = 512
+    batch: int = 256
+    activation: str = "gelu"  # relu | gelu | swiglu
+    layernorm: bool = True
+
+    @property
+    def hidden(self) -> int:
+        if self.activation == "swiglu":
+            # 8/3·D keeps parameter parity with 4·D (Shazeer 2020); round to
+            # a multiple of 32 so the MX block size divides it.
+            h = int(round(self.d_model * 8 / 3 / 32)) * 32
+            return max(h, 32)
+        return 4 * self.d_model
+
+    @property
+    def name(self) -> str:
+        ln = "ln" if self.layernorm else "noln"
+        return f"proxy_{self.activation}_{ln}_L{self.depth}_D{self.d_model}"
+
+    def n_params(self) -> int:
+        per = self.d_model * self.hidden * (3 if self.activation == "swiglu" else 2)
+        per += self.d_model if self.layernorm else 0
+        return per * self.depth
+
+
+def _act(cfg: ProxyConfig, h, g=None):
+    if cfg.activation == "relu":
+        return jax.nn.relu(h)
+    if cfg.activation == "gelu":
+        return jax.nn.gelu(h)
+    if cfg.activation == "swiglu":
+        return jax.nn.silu(h) * g
+    raise ValueError(cfg.activation)
+
+
+# --------------------------------------------------------------------------
+# Parameters. Student pytree:
+#   {"w1": [L, D, H], "w2": [L, H, D], ("wg": [L, D, H])?, ("ln": [L, D])?}
+# Teacher uses the same shapes minus "ln".
+# --------------------------------------------------------------------------
+
+
+def init_params(cfg: ProxyConfig, key, init_mode, gain, teacher: bool):
+    L, D, H = cfg.depth, cfg.d_model, cfg.hidden
+    names = ["w1", "w2"] + (["wg"] if cfg.activation == "swiglu" else [])
+    shapes = {"w1": (L, D, H), "w2": (L, H, D), "wg": (L, D, H)}
+    fan_in = {"w1": D, "w2": H, "wg": D}
+    params = {}
+    for i, n in enumerate(names):
+        k = jax.random.fold_in(key, i)
+        sh = shapes[n]
+        # init_mode 0: Kaiming-uniform U(±gain/sqrt(fan_in)) — pytorch default
+        # init_mode 1: Xavier-normal with the given gain (Fig. 11 ablation)
+        bound = gain / jnp.sqrt(jnp.float32(fan_in[n]))
+        ku = jax.random.uniform(k, sh, jnp.float32, -1.0, 1.0) * bound
+        xstd = gain * jnp.sqrt(2.0 / jnp.float32(sum(sh[1:])))
+        xn = jax.random.normal(k, sh, jnp.float32) * xstd
+        params[n] = jnp.where(init_mode > 0.5, xn, ku)
+    if cfg.layernorm and not teacher:
+        params["ln"] = jnp.ones((L, D), jnp.float32)
+    return params
+
+
+def forward(cfg: ProxyConfig, params, x, fmt):
+    """Run the student (or teacher when 'ln' absent). Returns (out, diag)
+    where diag = (ln_frac_first, ln_frac_mean, act_frac_mean)."""
+    has_ln = "ln" in params
+    names = ["w1", "w2"] + (["wg"] if cfg.activation == "swiglu" else [])
+    stacked = [params[n] for n in names] + ([params["ln"]] if has_ln else [])
+
+    def block(carry, layer):
+        a = carry
+        if has_ln:
+            *ws, ln_g = layer
+        else:
+            ws = layer
+            ln_g = None
+        w1, w2 = ws[0], ws[1]
+        if has_ln:
+            z, ln_frac = M.layernorm(a, ln_g, fmt)
+        else:
+            z, ln_frac = a, jnp.float32(0.0)
+        h, f1 = M.mx_matmul_stats(z, w1, fmt)
+        if cfg.activation == "swiglu":
+            g, _ = M.mx_matmul_stats(z, ws[2], fmt)
+            phi = _act(cfg, h, g)
+        else:
+            phi = _act(cfg, h)
+        out, f2 = M.mx_matmul_stats(phi, w2, fmt)
+        a = a + out
+        return a, (ln_frac, (f1 + f2) * 0.5)
+
+    a, (ln_fracs, act_fracs) = jax.lax.scan(block, x, tuple(stacked))
+    diag = (
+        ln_fracs[0],
+        jnp.mean(ln_fracs),
+        jnp.mean(act_fracs),
+    )
+    return a, diag
+
+
+def loss_fn(cfg: ProxyConfig, params, teacher_params, x, noise, fmt):
+    out, diag = forward(cfg, params, x, fmt)
+    fp32_fmt = jnp.zeros_like(fmt)  # teacher always runs in full precision
+    target, _ = forward(
+        dataclasses.replace(cfg, layernorm=False), teacher_params, x, fp32_fmt
+    )
+    target = jax.lax.stop_gradient(target) + noise
+    loss = 0.5 * jnp.mean((out - target) ** 2)
+    return loss, diag
+
+
+# --------------------------------------------------------------------------
+# Exported functions (flat signatures; aot.py writes the manifest).
+# --------------------------------------------------------------------------
+
+
+def param_names(cfg: ProxyConfig) -> list[str]:
+    names = ["w1", "w2"] + (["wg"] if cfg.activation == "swiglu" else [])
+    if cfg.layernorm:
+        names.append("ln")
+    return names
+
+
+def teacher_names(cfg: ProxyConfig) -> list[str]:
+    return ["w1", "w2"] + (["wg"] if cfg.activation == "swiglu" else [])
+
+
+def state_spec(cfg: ProxyConfig):
+    """Ordered (name, shape) list defining the flat state layout shared with
+    the rust coordinator: student params, adam m, adam v, teacher params."""
+    L, D, H = cfg.depth, cfg.d_model, cfg.hidden
+    shapes = {"w1": (L, D, H), "w2": (L, H, D), "wg": (L, D, H), "ln": (L, D)}
+    spec = []
+    for prefix in ("p", "m", "v"):
+        for n in param_names(cfg):
+            spec.append((f"{prefix}_{n}", shapes[n]))
+    for n in teacher_names(cfg):
+        spec.append((f"t_{n}", shapes[n]))
+    return spec
+
+
+def _unflatten_state(cfg: ProxyConfig, flat):
+    names = param_names(cfg)
+    tn = teacher_names(cfg)
+    k = len(names)
+    params = dict(zip(names, flat[:k]))
+    ms = dict(zip(names, flat[k : 2 * k]))
+    vs = dict(zip(names, flat[2 * k : 3 * k]))
+    teacher = dict(zip(tn, flat[3 * k : 3 * k + len(tn)]))
+    return params, ms, vs, teacher
+
+
+def _flatten_state(cfg: ProxyConfig, params, ms, vs, teacher):
+    names = param_names(cfg)
+    tn = teacher_names(cfg)
+    return (
+        [params[n] for n in names]
+        + [ms[n] for n in names]
+        + [vs[n] for n in names]
+        + [teacher[n] for n in tn]
+    )
+
+
+def make_init(cfg: ProxyConfig):
+    def init(seed, init_mode, gain):
+        key = jax.random.PRNGKey(seed)
+        params = init_params(cfg, jax.random.fold_in(key, 0), init_mode, gain, False)
+        teacher = init_params(cfg, jax.random.fold_in(key, 1), init_mode, gain, True)
+        zeros = {n: jnp.zeros_like(p) for n, p in params.items()}
+        ms = zeros
+        vs = {n: jnp.zeros_like(p) for n, p in params.items()}
+        return tuple(_flatten_state(cfg, params, ms, vs, teacher))
+
+    return init
+
+
+def _batch(cfg: ProxyConfig, seed, step, hyper):
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    x = jax.random.normal(jax.random.fold_in(key, 0), (cfg.batch, cfg.d_model))
+    eps = jax.random.normal(jax.random.fold_in(key, 1), (cfg.batch, cfg.d_model))
+    return x, eps * hyper[F.LABEL_NOISE]
+
+
+def _metrics(loss, grads, diag, upd_sq, params, extra=None):
+    gnorm = M.global_norm(grads)
+    met = jnp.zeros((M.MET_LEN,), jnp.float32)
+    met = met.at[M.MET_LOSS].set(loss)
+    met = met.at[M.MET_GRAD_NORM].set(gnorm)
+    met = met.at[M.MET_LN_FRAC_FIRST].set(diag[0])
+    met = met.at[M.MET_LN_FRAC_MEAN].set(diag[1])
+    met = met.at[M.MET_ACT_FRAC_MEAN].set(diag[2])
+    met = met.at[M.MET_UPDATE_NORM].set(jnp.sqrt(upd_sq))
+    met = met.at[M.MET_PARAM_NORM].set(M.global_norm(params))
+    if extra is not None:
+        met = met.at[M.MET_EPS_RATIO].set(extra[0])
+        met = met.at[M.MET_COSINE].set(extra[1])
+    return met
+
+
+def make_step(cfg: ProxyConfig, paired: bool = False):
+    def step(flat_state, fmt, hyper, seed, step_idx):
+        params, ms, vs, teacher = _unflatten_state(cfg, list(flat_state))
+        x, noise = _batch(cfg, seed, step_idx, hyper)
+
+        grad_fn = jax.value_and_grad(
+            lambda p, f: loss_fn(cfg, p, teacher, x, noise, f), has_aux=True
+        )
+        (loss, diag), grads = grad_fn(params, fmt)
+
+        extra = None
+        if paired:
+            fp32 = jnp.zeros_like(fmt)
+            (_, _), g_ref = grad_fn(params, fp32)
+            diff_sq = sum(
+                jnp.sum((a - b) ** 2)
+                for a, b in zip(
+                    jax.tree_util.tree_leaves(grads), jax.tree_util.tree_leaves(g_ref)
+                )
+            )
+            ref_norm = M.global_norm(g_ref)
+            eps_ratio = jnp.sqrt(diff_sq) / (ref_norm + 1e-30)
+            cos = M.tree_dot(grads, g_ref) / (
+                M.global_norm(grads) * ref_norm + 1e-30
+            )
+            extra = (eps_ratio, cos)
+
+        params2, ms2, vs2, upd_sq = M.tree_update(params, grads, ms, vs, step_idx, hyper)
+        met = _metrics(loss, grads, diag, upd_sq, params2, extra)
+        return tuple(_flatten_state(cfg, params2, ms2, vs2, teacher)) + (met,)
+
+    return step

@@ -1,0 +1,114 @@
+"""AOT pipeline: HLO text emission, manifest consistency, bundle registry."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, bundles, formats as F
+from compile.proxy import ProxyConfig
+from compile.lm import LMConfig
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_bundle_sets_are_wellformed():
+    for set_name in ("quick", "default", "full"):
+        bs = bundles.bundle_set(set_name)
+        names = [b.name for b in bs]
+        assert len(names) == len(set(names)), "duplicate bundle names"
+        assert "quantizer" in names
+        assert any(n.startswith("proxy_") for n in names)
+        assert any(n.startswith("lm_") for n in names)
+    with pytest.raises(ValueError):
+        bundles.bundle_set("nope")
+
+
+def test_hlo_text_emission_smoke(tmp_path):
+    """Lower a tiny function and verify parseable HLO text is emitted."""
+
+    def fn(x):
+        return (x * 2.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ROOT" in text
+    # HLO *text*, not a serialized proto (the xla 0.1.6 interchange rule).
+    assert text.startswith("HloModule")
+
+
+def test_quantizer_bundle_compiles(tmp_path):
+    aot.compile_quantizer(str(tmp_path))
+    man = json.load(open(tmp_path / "manifest.json"))
+    assert man["kind"] == "quantizer"
+    assert man["block_size"] == 32
+    step = man["functions"]["step"]
+    assert [i["name"] for i in step["inputs"]] == ["x", "fmt_id", "scale_bump"]
+    hlo = open(tmp_path / "step.hlo.txt").read()
+    assert "HloModule" in hlo
+
+
+def test_proxy_bundle_manifest_consistency(tmp_path):
+    b = bundles.Bundle(ProxyConfig(depth=2, d_model=64, batch=32), paired=True)
+    aot.compile_proxy(b, str(tmp_path))
+    man = json.load(open(tmp_path / "manifest.json"))
+    state = man["state"]
+    step = man["functions"]["step"]
+    # step inputs = state ++ [fmt, hyper, seed, step]
+    assert [i["name"] for i in step["inputs"][: len(state)]] == [s["name"] for s in state]
+    tail = [i["name"] for i in step["inputs"][len(state) :]]
+    assert tail == ["fmt", "hyper", "seed", "step"]
+    # step outputs = state ++ [metrics]
+    assert [o["name"] for o in step["outputs"][:-1]] == [s["name"] for s in state]
+    assert step["outputs"][-1]["name"] == "metrics"
+    assert step["outputs"][-1]["shape"] == [9]
+    assert "paired" in man["functions"]
+    # init outputs match state.
+    init = man["functions"]["init"]
+    assert [o["name"] for o in init["outputs"]] == [s["name"] for s in state]
+    assert man["n_params"] == ProxyConfig(depth=2, d_model=64, batch=32).n_params()
+
+
+def test_lm_bundle_manifest_consistency(tmp_path):
+    b = bundles.Bundle(LMConfig(n=1, vocab=64, ctx=32, batch=2))
+    aot.compile_lm(b, str(tmp_path))
+    man = json.load(open(tmp_path / "manifest.json"))
+    state = man["state"]
+    step = man["functions"]["step"]
+    tail = [i["name"] for i in step["inputs"][len(state) :]]
+    assert tail == ["tokens", "fmt", "hyper", "seed", "step"]
+    ev = man["functions"]["eval"]
+    k = len(state) // 3
+    assert [i["name"] for i in ev["inputs"][:k]] == [s["name"] for s in state[:k]]
+    assert man["flops_per_step"] > 0
+    assert man["metrics"][0] == "loss"
+
+
+def test_fmt_metadata_matches_formats_module(tmp_path):
+    aot.compile_quantizer(str(tmp_path))
+    man = json.load(open(tmp_path / "manifest.json"))
+    assert man["formats"] == {
+        "fp32": F.FP32,
+        "bf16": F.BF16,
+        "e4m3": F.E4M3,
+        "e5m2": F.E5M2,
+        "e2m3": F.E2M3,
+        "e3m2": F.E3M2,
+    }
+
+
+@pytest.mark.skipif(not os.path.isdir(ART), reason="artifacts not built")
+def test_built_artifacts_have_index():
+    idx = os.path.join(ART, "index.json")
+    if not os.path.exists(idx):
+        pytest.skip("no index.json")
+    index = json.load(open(idx))
+    for name in index["bundles"]:
+        man_path = os.path.join(ART, name, "manifest.json")
+        assert os.path.exists(man_path), name
+        man = json.load(open(man_path))
+        for fn in man["functions"].values():
+            assert os.path.exists(os.path.join(ART, name, fn["file"]))

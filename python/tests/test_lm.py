@@ -1,0 +1,127 @@
+"""L2 LM model: architecture invariants, loss semantics, quantization sites."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import formats as F
+from compile import lm
+from compile import model as M
+
+CFG = lm.LMConfig(n=1, vocab=128, ctx=32, batch=4)
+
+
+def _fmt(w=F.FP32, a=F.FP32, **kw):
+    return jnp.asarray(F.make_fmt(w, a, **kw), jnp.float32)
+
+
+def _hyper(lr=1e-3):
+    h = np.zeros(F.HYPER_LEN, np.float32)
+    h[F.LR] = lr
+    return jnp.asarray(h)
+
+
+@pytest.fixture(scope="module")
+def state():
+    return jax.jit(lm.make_init(CFG))(jnp.int32(0), jnp.float32(0), jnp.float32(1))
+
+
+@pytest.fixture(scope="module")
+def toks():
+    return jnp.asarray(
+        np.random.RandomState(0).randint(0, CFG.vocab, (CFG.batch, CFG.ctx + 1)),
+        jnp.int32,
+    )
+
+
+def test_geometry():
+    assert CFG.d_model == 64 and CFG.heads == 1 and CFG.head_dim == 64
+    c = lm.LMConfig(n=4)
+    assert c.d_model == 256 and c.heads == 4 and c.hidden == 1024
+
+
+def test_param_count_formula(state):
+    spec = lm.state_spec(CFG)
+    total = sum(int(np.prod(sh)) for name, sh in spec if name.startswith("p_"))
+    assert total == CFG.n_params()
+
+
+def test_initial_loss_near_uniform(state, toks):
+    names = sorted(lm.PARAM_SHAPES(CFG).keys())
+    params = dict(zip(names, state[: len(names)]))
+    loss, _ = lm.loss_fn(CFG, params, toks, _fmt())
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.6
+
+
+def test_causality(state):
+    """Changing a future token must not affect past logits."""
+    names = sorted(lm.PARAM_SHAPES(CFG).keys())
+    params = dict(zip(names, state[: len(names)]))
+    t = np.random.RandomState(1).randint(0, CFG.vocab, (1, CFG.ctx)).astype(np.int32)
+    logits1, _ = lm.forward(CFG, params, jnp.asarray(t), _fmt())
+    t2 = t.copy()
+    t2[0, -1] = (t2[0, -1] + 1) % CFG.vocab
+    logits2, _ = lm.forward(CFG, params, jnp.asarray(t2), _fmt())
+    np.testing.assert_allclose(
+        np.asarray(logits1)[0, : CFG.ctx - 1],
+        np.asarray(logits2)[0, : CFG.ctx - 1],
+        rtol=1e-5,
+    )
+    assert not np.allclose(np.asarray(logits1)[0, -1], np.asarray(logits2)[0, -1])
+
+
+def test_quantization_perturbs_forward(state, toks):
+    names = sorted(lm.PARAM_SHAPES(CFG).keys())
+    params = dict(zip(names, state[: len(names)]))
+    l_fp, _ = lm.loss_fn(CFG, params, toks, _fmt())
+    l_mx, _ = lm.loss_fn(CFG, params, toks, _fmt(F.E2M3, F.E2M3))
+    assert float(l_fp) != float(l_mx)
+    # fwd-off quantization == fp32 exactly.
+    l_off, _ = lm.loss_fn(
+        CFG, params, toks, _fmt(F.E2M3, F.E2M3, quant_fwd=False, quant_ln=False)
+    )
+    assert float(l_fp) == float(l_off)
+
+
+def test_step_trains(state, toks):
+    step = jax.jit(lm.make_step(CFG))
+    st = tuple(state)
+    losses = []
+    for t in range(8):
+        out = step(st, toks, _fmt(F.E4M3, F.E4M3), _hyper(3e-3), jnp.int32(0), jnp.int32(t))
+        st = out[:-1]
+        losses.append(float(out[-1][M.MET_LOSS]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_eval_matches_loss_fn(state, toks):
+    ev = jax.jit(lm.make_eval(CFG))
+    k = len(lm.state_spec(CFG)) // 3
+    (loss,) = ev(tuple(state[:k]), toks, _fmt())
+    names = sorted(lm.PARAM_SHAPES(CFG).keys())
+    params = dict(zip(names, state[:k]))
+    loss2, _ = lm.loss_fn(CFG, params, toks, _fmt())
+    # jit vs eager fusion order differs at the last ulp level.
+    assert abs(float(loss) - float(loss2)) < 1e-5
+
+
+def test_paired_metrics(state, toks):
+    paired = jax.jit(lm.make_step(CFG, paired=True))
+    out = paired(tuple(state), toks, _fmt(F.E5M2, F.E5M2), _hyper(), jnp.int32(0), jnp.int32(0))
+    eps = float(out[-1][M.MET_EPS_RATIO])
+    cos = float(out[-1][M.MET_COSINE])
+    assert 0 < eps < 1 and cos > 0.8
+
+
+def test_rope_rotation_properties():
+    x = jnp.asarray(np.random.RandomState(2).randn(1, 1, 8, 64), jnp.float32)
+    y = lm._rope(x)
+    # Norm-preserving per position.
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+    # Position 0 is the identity rotation.
+    np.testing.assert_allclose(np.asarray(y)[..., 0, :], np.asarray(x)[..., 0, :], rtol=1e-6)

@@ -1,0 +1,180 @@
+"""L2 proxy model: shapes, determinism, optimizer semantics, diagnostics."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import formats as F
+from compile import model as M
+from compile import proxy
+
+
+CFG = proxy.ProxyConfig(depth=2, d_model=64, batch=64)
+
+
+def _fmt(w=F.FP32, a=F.FP32, **kw):
+    return jnp.asarray(F.make_fmt(w, a, **kw), jnp.float32)
+
+
+def _hyper(lr=1e-3, opt_mode=0.0, momentum=0.0, noise=1e-3):
+    h = np.zeros(F.HYPER_LEN, np.float32)
+    h[F.LR] = lr
+    h[F.OPT_MODE] = opt_mode
+    h[F.MOMENTUM] = momentum
+    h[F.LABEL_NOISE] = noise
+    return jnp.asarray(h)
+
+
+@pytest.fixture(scope="module")
+def state():
+    init = jax.jit(proxy.make_init(CFG))
+    return init(jnp.int32(0), jnp.float32(0), jnp.float32(1.0))
+
+
+@pytest.fixture(scope="module")
+def step():
+    return jax.jit(proxy.make_step(CFG))
+
+
+def test_state_spec_matches_init(state):
+    spec = proxy.state_spec(CFG)
+    assert len(spec) == len(state)
+    for (name, shape), arr in zip(spec, state):
+        assert tuple(shape) == arr.shape, name
+
+
+def test_hidden_sizes():
+    assert proxy.ProxyConfig(activation="gelu", d_model=512).hidden == 2048
+    sw = proxy.ProxyConfig(activation="swiglu", d_model=512)
+    assert sw.hidden % 32 == 0
+    assert abs(sw.hidden - 512 * 8 / 3) < 32
+
+
+def test_param_count():
+    cfg = proxy.ProxyConfig(depth=3, d_model=128)
+    n = cfg.n_params()
+    assert n == 3 * (2 * 128 * 512 + 128)
+
+
+def test_fp32_fmt_is_noop_vs_manual_forward(state):
+    params, _, _, teacher = proxy._unflatten_state(CFG, list(state))
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, CFG.d_model))
+    out_fp, _ = proxy.forward(CFG, params, x, _fmt())
+    out_q, _ = proxy.forward(
+        CFG, params, x, _fmt(F.E4M3, F.E4M3)
+    )
+    assert not np.allclose(np.asarray(out_fp), np.asarray(out_q)), (
+        "quantization must perturb the forward pass"
+    )
+    # fmt with quant flags off equals fmt id fp32.
+    out_off, _ = proxy.forward(
+        CFG, params, x, _fmt(F.E4M3, F.E4M3, quant_fwd=False, quant_ln=False)
+    )
+    np.testing.assert_array_equal(np.asarray(out_fp), np.asarray(out_off))
+
+
+def test_step_determinism(state, step):
+    a = step(tuple(state), _fmt(), _hyper(), jnp.int32(3), jnp.int32(7))
+    b = step(tuple(state), _fmt(), _hyper(), jnp.int32(3), jnp.int32(7))
+    np.testing.assert_array_equal(np.asarray(a[-1]), np.asarray(b[-1]))
+    c = step(tuple(state), _fmt(), _hyper(), jnp.int32(3), jnp.int32(8))
+    assert not np.array_equal(np.asarray(a[-1]), np.asarray(c[-1])), (
+        "different step index must draw different data"
+    )
+
+
+def test_loss_decreases_fp32(state, step):
+    st = tuple(state)
+    losses = []
+    for t in range(25):
+        out = step(st, _fmt(), _hyper(lr=1e-3), jnp.int32(0), jnp.int32(t))
+        st = out[:-1]
+        losses.append(float(out[-1][M.MET_LOSS]))
+    assert losses[-1] < losses[0] * 0.7, losses[::6]
+
+
+def test_sgd_vs_adam_updates_differ(state, step):
+    a = step(tuple(state), _fmt(), _hyper(opt_mode=0.0), jnp.int32(0), jnp.int32(0))
+    s = step(tuple(state), _fmt(), _hyper(opt_mode=1.0, momentum=0.9), jnp.int32(0), jnp.int32(0))
+    # Same gradient, different optimizer → same loss, different update norm.
+    assert float(a[-1][M.MET_LOSS]) == float(s[-1][M.MET_LOSS])
+    assert float(a[-1][M.MET_UPDATE_NORM]) != float(s[-1][M.MET_UPDATE_NORM])
+
+
+def test_sgd_momentum_accumulates(state):
+    step = jax.jit(proxy.make_step(CFG))
+    st = tuple(state)
+    h = _hyper(lr=1e-3, opt_mode=1.0, momentum=0.9)
+    norms = []
+    for t in range(4):
+        out = step(st, _fmt(), h, jnp.int32(0), jnp.int32(t))
+        st = out[:-1]
+        norms.append(float(out[-1][M.MET_UPDATE_NORM]))
+    assert norms[2] > norms[0], "momentum should build up the update norm"
+
+
+def test_ln_diag_zero_at_init_and_nonzero_for_cluster(state, step):
+    # At init gammas are all ones → mantissa 1.0 → no clamping (§6.1).
+    out = step(tuple(state), _fmt(F.E4M3, F.E4M3), _hyper(), jnp.int32(0), jnp.int32(0))
+    assert float(out[-1][M.MET_LN_FRAC_FIRST]) == 0.0
+    # Force a clustered gamma with mantissa ≈1.8 → clamping appears.
+    st = list(state)
+    spec = proxy.state_spec(CFG)
+    ln_idx = [i for i, (n, _) in enumerate(spec) if n == "p_ln"][0]
+    st[ln_idx] = jnp.full(st[ln_idx].shape, 1.8) + jax.random.uniform(
+        jax.random.PRNGKey(0), st[ln_idx].shape, jnp.float32, -0.01, 0.01
+    )
+    out = step(tuple(st), _fmt(F.E4M3, F.E4M3), _hyper(), jnp.int32(0), jnp.int32(0))
+    assert float(out[-1][M.MET_LN_FRAC_FIRST]) > 0.9
+    # ...and quant_ln=False suppresses the diagnostic (and the quantization).
+    out = step(
+        tuple(st),
+        _fmt(F.E4M3, F.E4M3, quant_ln=False),
+        _hyper(),
+        jnp.int32(0),
+        jnp.int32(0),
+    )
+    assert float(out[-1][M.MET_LN_FRAC_FIRST]) == 0.0
+
+
+def test_paired_step_consistency(state):
+    paired = jax.jit(proxy.make_step(CFG, paired=True))
+    out = paired(tuple(state), _fmt(F.E4M3, F.E4M3), _hyper(), jnp.int32(0), jnp.int32(0))
+    eps, cos = float(out[-1][M.MET_EPS_RATIO]), float(out[-1][M.MET_COSINE])
+    assert 0 < eps < 1 and 0.9 < cos <= 1.0
+    out = paired(tuple(state), _fmt(), _hyper(), jnp.int32(0), jnp.int32(0))
+    assert float(out[-1][M.MET_EPS_RATIO]) == 0.0
+    assert abs(float(out[-1][M.MET_COSINE]) - 1.0) < 1e-5
+
+
+@pytest.mark.parametrize("act", ["relu", "gelu", "swiglu"])
+@pytest.mark.parametrize("ln", [True, False])
+def test_all_architectures_step(act, ln):
+    cfg = proxy.ProxyConfig(depth=2, d_model=64, batch=32, activation=act, layernorm=ln)
+    st = jax.jit(proxy.make_init(cfg))(jnp.int32(0), jnp.float32(0), jnp.float32(1))
+    step = jax.jit(proxy.make_step(cfg))
+    out = step(tuple(st), _fmt(F.E5M2, F.E5M2), _hyper(), jnp.int32(0), jnp.int32(0))
+    loss = float(out[-1][M.MET_LOSS])
+    assert np.isfinite(loss) and loss > 0
+
+
+def test_init_modes_differ():
+    init = jax.jit(proxy.make_init(CFG))
+    k = init(jnp.int32(0), jnp.float32(0), jnp.float32(1.0))
+    x = init(jnp.int32(0), jnp.float32(1), jnp.float32(0.5))
+    a, b = np.asarray(k[0]), np.asarray(x[0])
+    assert not np.array_equal(a, b)
+    # Kaiming-uniform is bounded; Xavier-normal with low gain has smaller std.
+    assert np.abs(a).max() <= 1 / np.sqrt(CFG.d_model) + 1e-6
+    assert b.std() < a.std()
+
+
+def test_teacher_is_not_updated(state, step):
+    out = step(tuple(state), _fmt(), _hyper(), jnp.int32(0), jnp.int32(0))
+    spec = proxy.state_spec(CFG)
+    for i, (name, _) in enumerate(spec):
+        if name.startswith("t_"):
+            np.testing.assert_array_equal(np.asarray(state[i]), np.asarray(out[i]), name)

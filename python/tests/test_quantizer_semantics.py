@@ -1,0 +1,145 @@
+"""Semantic properties of the MX quantizer (paper Algorithm 1 + §6.1)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import formats as F
+from compile.kernels import ref
+
+MX_FORMATS = [F.E4M3, F.E5M2, F.E2M3, F.E3M2]
+MAX_NORM = {k: v[3] for k, v in F.MX_CONSTANTS.items()}
+MBITS = {k: v[1] for k, v in F.MX_CONSTANTS.items()}
+
+
+def qdq(x, fid, bump=0.0):
+    y, lb = ref.qdq(jnp.asarray(x, jnp.float32), jnp.float32(fid), jnp.float32(bump))
+    return np.asarray(y), np.asarray(lb)
+
+
+def test_exact_values_pass_through_e4m3():
+    vals = np.array([1.0, -1.125, 448.0, 0.0625, 2.0, 3.5] + [0.0] * 26, np.float32)
+    y, _ = qdq(vals.reshape(1, 32), F.E4M3)
+    # With blockmax 448 the scale is 1.0 → values on the grid are preserved.
+    np.testing.assert_array_equal(y.ravel(), vals)
+
+
+def test_paper_lognormal_block_clamps_everything():
+    block = np.full((1, 32), 0.89, np.float32)
+    block[0, :5] = [0.89740956, 0.89628334, 0.88358812, 0.88474816, 0.90372837]
+    y, lb = qdq(block, F.E4M3)
+    assert lb.all(), "every element should land in the last bin"
+    assert np.unique(y).size == 1, "heterogeneity is lost (all clamp to 448·2^-9)"
+    np.testing.assert_allclose(y, 448.0 * 2.0**-9)
+
+
+def test_eq10_overflow_criterion():
+    # Block max mantissa 1.9 → scale 2^-8. The last bin starts where RNE
+    # rounds to 448, i.e. scaled values ≥ 432 (= 448 − step/2, step 32).
+    block = np.full((1, 32), 0.1, np.float32)
+    block[0, 0] = 1.9          # scaled 486 → clamps
+    block[0, 1] = 0.93 * 1.9   # scaled 452 → clamps (rounds to 448)
+    block[0, 2] = 0.85 * 1.9   # scaled 413 → rounds to 416, below last bin
+    _, lb = qdq(block, F.E4M3)
+    assert lb[0, 0] and lb[0, 1]
+    assert not lb[0, 2]
+
+
+def test_scale_bump_clears_last_bin():
+    # Cluster around 0.9 (mantissa-of-max ≈ 1.8): the §6.1 clamping regime.
+    x = (0.9 * np.exp(np.random.RandomState(0).randn(4, 128) * 0.01)).astype(np.float32)
+    _, lb0 = qdq(x, F.E4M3, bump=0.0)
+    _, lb1 = qdq(x, F.E4M3, bump=1.0)
+    assert lb0.mean() > 0.1
+    assert lb1.mean() == 0.0
+
+
+def test_zero_blocks_stay_zero():
+    x = np.zeros((2, 64), np.float32)
+    x[1, 40] = 1e-30
+    y, _ = qdq(x, F.E4M3)
+    assert (y[0] == 0).all()
+
+
+def test_bf16_path_matches_numpy_cast():
+    x = np.random.RandomState(1).randn(8, 64).astype(np.float32)
+    y, _ = qdq(x, F.BF16)
+    import ml_dtypes
+
+    expect = x.astype(ml_dtypes.bfloat16).astype(np.float32)
+    np.testing.assert_array_equal(y, expect)
+
+
+def test_fp32_is_identity():
+    x = np.random.RandomState(2).randn(8, 64).astype(np.float32) * 1e20
+    y, lb = qdq(x, F.FP32)
+    np.testing.assert_array_equal(y, x)
+    assert lb.sum() == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    fid=st.sampled_from(MX_FORMATS),
+    seed=st.integers(0, 2**31 - 1),
+    log_scale=st.integers(-20, 20),
+)
+def test_idempotence(fid, seed, log_scale):
+    x = (np.random.RandomState(seed).randn(2, 64) * 2.0**log_scale).astype(np.float32)
+    y, _ = qdq(x, fid)
+    y2, _ = qdq(y, fid)
+    np.testing.assert_array_equal(y, y2)
+
+
+@settings(max_examples=40, deadline=None)
+@given(fid=st.sampled_from(MX_FORMATS), seed=st.integers(0, 2**31 - 1))
+def test_relative_error_bound(fid, seed):
+    """Non-clamped normal-band values have rel err ≤ 2^-(mbits+1)."""
+    x = np.random.RandomState(seed).randn(2, 64).astype(np.float32)
+    y, lb = qdq(x, fid)
+    xb = x.reshape(-1, 32)
+    yb = y.reshape(-1, 32)
+    lbb = lb.reshape(-1, 32)
+    emax = F.MX_CONSTANTS[fid][2]
+    emin = F.MX_CONSTANTS[fid][4]
+    for b in range(xb.shape[0]):
+        m = np.abs(xb[b]).max()
+        if m == 0:
+            continue
+        scale = 2.0 ** (np.floor(np.log2(m)) - emax)
+        for v, q, clamped in zip(xb[b], yb[b], lbb[b]):
+            if clamped or v == 0 or abs(v / scale) < 2.0**emin:
+                continue
+            rel = abs((q - v) / v)
+            assert rel <= 2.0 ** -(MBITS[fid] + 1) * (1 + 1e-5), (v, q, rel)
+
+
+@settings(max_examples=40, deadline=None)
+@given(fid=st.sampled_from(MX_FORMATS), seed=st.integers(0, 2**31 - 1))
+def test_odd_symmetry(fid, seed):
+    x = np.random.RandomState(seed).randn(2, 64).astype(np.float32)
+    y, _ = qdq(x, fid)
+    yn, _ = qdq(-x, fid)
+    np.testing.assert_array_equal(y, -yn)
+
+
+def test_qdq_axis_argument():
+    x = np.random.RandomState(3).randn(64, 32).astype(np.float32)
+    y0, _ = ref.qdq(jnp.asarray(x), jnp.float32(F.E4M3), jnp.float32(0), axis=0)
+    yt, _ = ref.qdq(jnp.asarray(x.T), jnp.float32(F.E4M3), jnp.float32(0), axis=-1)
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(yt).T)
+
+
+def test_ste_gradient_is_identity():
+    import jax
+
+    x = jnp.asarray(np.random.RandomState(4).randn(1, 32), jnp.float32)
+
+    def f(v):
+        y, _ = ref.qdq_ste(v, jnp.float32(F.E4M3), jnp.float32(0))
+        return jnp.sum(y * y)
+
+    g = jax.grad(f)(x)
+    # STE: dy/dx = 1 while y = q(x) → df/dx = 2·q(x).
+    q, _ = qdq(np.asarray(x), F.E4M3)
+    np.testing.assert_allclose(np.asarray(g), 2 * q, rtol=1e-6)

@@ -1,0 +1,55 @@
+//! L1 bench: MX quantize→dequantize throughput.
+//!
+//! Compares the pure-rust mirror against the compiled Pallas/HLO kernel
+//! (PJRT CPU) across element formats and input distributions, reporting
+//! per-iteration latency and effective GB/s. (interpret=True Pallas on CPU
+//! measures the *emulation* path — TPU projections live in DESIGN.md §Perf.)
+
+use mxstab::bench::Bencher;
+use mxstab::formats::spec::FormatId;
+use mxstab::formats::{mx_qdq, quant};
+use mxstab::runtime::{Quantizer, Session};
+use mxstab::util::rng::Xoshiro256;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let b = Bencher::default();
+    println!("== quantizer benchmarks ==\n");
+
+    let mut rng = Xoshiro256::seed_from(0);
+    for &n in &[4096usize, 65536, 1 << 20] {
+        let x = rng.normal_vec(n);
+        let bytes = (n * 4) as f64;
+        for id in [FormatId::E4M3, FormatId::E5M2, FormatId::E2M3, FormatId::E3M2, FormatId::Bf16] {
+            let r = b.run(&format!("rust/{}/{}", id.name(), n), || {
+                std::hint::black_box(mx_qdq(std::hint::black_box(&x), id, false));
+            });
+            println!("{}", r.report_line(&format!("{:.2} GB/s", bytes / r.mean_s / 1e9)));
+        }
+    }
+
+    // In-place variant (the hot path used by analytics).
+    let mut buf = rng.normal_vec(1 << 20);
+    let f = FormatId::E4M3.elem().unwrap();
+    let r = b.run("rust/e4m3/inplace/1M", || {
+        quant::mx_qdq_slice(std::hint::black_box(&mut buf), &f, 0);
+    });
+    println!("{}", r.report_line(&format!("{:.2} GB/s", (buf.len() * 4) as f64 / r.mean_s / 1e9)));
+
+    if artifacts.join("quantizer/manifest.json").exists() {
+        let session = Session::cpu()?;
+        let q = Quantizer::load(session, &artifacts.join("quantizer"))?;
+        let x = rng.normal_vec(q.rows * q.cols);
+        let bytes = (x.len() * 4) as f64;
+        println!();
+        for id in [FormatId::E4M3, FormatId::E5M2, FormatId::Bf16] {
+            let r = b.run(&format!("hlo-pallas/{}/{}", id.name(), x.len()), || {
+                std::hint::black_box(q.qdq(&x, id as u8 as f32, 0.0).unwrap());
+            });
+            println!("{}", r.report_line(&format!("{:.2} GB/s", bytes / r.mean_s / 1e9)));
+        }
+    } else {
+        println!("\n(artifacts missing — skipping HLO kernel benches; run `make artifacts`)");
+    }
+    Ok(())
+}

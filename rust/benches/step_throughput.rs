@@ -1,0 +1,82 @@
+//! L3 bench: end-to-end training-step throughput per bundle × precision
+//! scheme — the quantity behind every sweep's wallclock. One section per
+//! paper workload family (proxy grid, LM ladder).
+
+use mxstab::bench::Bencher;
+use mxstab::coordinator::Sweeper;
+use mxstab::formats::spec::{Fmt, FormatId};
+use mxstab::runtime::{list_bundles, Session, StepArgs};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("index.json").exists() {
+        println!("artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
+    let session = Session::cpu()?;
+    let sweeper = Sweeper::new(session, &artifacts);
+    let mut b = Bencher::default();
+    b.warmup = 2;
+
+    let schemes = [
+        ("fp32", Fmt::fp32()),
+        ("e4m3-full", Fmt::full(FormatId::E4M3, FormatId::E4M3)),
+        ("e4m3-bf16act", Fmt::bf16_act(FormatId::E4M3)),
+        ("e4m3-fwdonly", Fmt::fwd_only(FormatId::E4M3, FormatId::E4M3)),
+    ];
+
+    println!("== training-step throughput ==\n");
+    let mut names = list_bundles(&artifacts)?;
+    names.retain(|n| n != "quantizer" && !n.contains("pallas"));
+    names.sort();
+    for name in names {
+        let runner = match sweeper.runner(&name) {
+            Ok(r) => r,
+            Err(e) => {
+                println!("{name}: load failed: {e:#}");
+                continue;
+            }
+        };
+        let bundle = &runner.bundle;
+        let n_params = bundle.manifest.n_params as f64;
+        let tokens = bundle.tokens_shape();
+        for (label, fmt) in &schemes {
+            let mut state = Some(bundle.init(0, 0.0, 1.0)?);
+            let mut step = 0i32;
+            let corpus = runner.corpus.clone();
+            let r = b.run(&format!("{name}/{label}"), || {
+                let toks = match (&corpus, tokens) {
+                    (Some(c), Some((bt, l))) => Some(c.batch(0, step as u64, bt, l)),
+                    _ => None,
+                };
+                let args = StepArgs {
+                    tokens: toks,
+                    fmt: fmt.to_vec(),
+                    hyper: vec![5e-4, 0.0, 0.0, 1e-3],
+                    seed: 0,
+                    step,
+                };
+                let (s2, m) = bundle.step(state.take().unwrap(), &args).unwrap();
+                std::hint::black_box(m);
+                state = Some(s2);
+                step += 1;
+            });
+            // 6·N FLOPs per token-equivalent unit: use manifest FLOPs when
+            // present (LM), else 6·N·batch for the proxy.
+            let flops = bundle.manifest.flops_per_step.map(|f| f as f64).unwrap_or_else(|| {
+                let batch = bundle.manifest.cfg_num("batch").unwrap_or(1.0);
+                6.0 * n_params * batch
+            });
+            println!(
+                "{}",
+                r.report_line(&format!(
+                    "{:.1} steps/s  {:.2} GFLOP/s(emu)",
+                    1.0 / r.mean_s,
+                    flops / r.mean_s / 1e9
+                ))
+            );
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! End-to-end bench: times a miniature slice of every paper-figure
+//! pipeline (sweep → detect → analyze → render), one bench per
+//! table/figure family. This is the `cargo bench` face of the experiment
+//! harness — the full-scale regeneration lives in `mxstab experiment <id>`.
+
+use std::time::Instant;
+
+use mxstab::analysis::{fit_chinchilla, LossPoint};
+use mxstab::analysis::spikes::count_spikes;
+use mxstab::coordinator::{Intervention, Job, RunConfig, Sweeper};
+use mxstab::formats::codes;
+use mxstab::formats::spec::{Fmt, FormatId};
+use mxstab::runtime::{list_bundles, Session};
+use mxstab::util::rng::Xoshiro256;
+
+fn timed(name: &str, f: impl FnOnce() -> anyhow::Result<String>) {
+    let t0 = Instant::now();
+    match f() {
+        Ok(extra) => println!("{name:<34} {:>8.2}s   {extra}", t0.elapsed().as_secs_f64()),
+        Err(e) => println!("{name:<34} FAILED: {e:#}"),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    println!("== per-figure pipeline benches (miniature slices) ==\n");
+
+    // Fig. 5 left / format tables — pure rust, no artifacts needed.
+    timed("fig5-left: code tables", || {
+        let mut total = 0usize;
+        for id in [FormatId::E4M3, FormatId::E5M2, FormatId::E2M3, FormatId::E3M2] {
+            total += codes::relative_gaps(&id.elem().unwrap()).len();
+        }
+        Ok(format!("{total} code gaps enumerated"))
+    });
+
+    // Table 2 analytics: Chinchilla fit on synthetic points.
+    timed("tab2: chinchilla fit (24 pts)", || {
+        let mut rng = Xoshiro256::seed_from(3);
+        let mut pts = vec![];
+        for &n in &[1e5, 1e6, 1e7] {
+            for &r in &[2.0, 8.0, 32.0, 128.0] {
+                pts.push(LossPoint {
+                    n_params: n,
+                    tokens: n * r,
+                    loss: 0.5 + 2e3 / n.powf(0.5) + 2e4 / (n * r).powf(0.55)
+                        + 0.001 * rng.normal().abs(),
+                });
+            }
+        }
+        let fit = fit_chinchilla(&pts);
+        Ok(format!("alpha={:.3} beta={:.3}", fit.alpha, fit.beta))
+    });
+
+    // Fig. 9 analytics: spike counting over a synthetic 10k-step series.
+    timed("fig9: spike census (100 series)", || {
+        let mut rng = Xoshiro256::seed_from(4);
+        let mut total = 0;
+        for _ in 0..100 {
+            let mut loss = 1.0;
+            let series: Vec<f64> = (0..10_000)
+                .map(|_| {
+                    loss *= 1.0 - 0.0001 + 0.001 * rng.normal();
+                    if rng.next_f64() < 0.0005 {
+                        loss * 500.0
+                    } else {
+                        loss
+                    }
+                })
+                .collect();
+            total += count_spikes(&series, 100.0);
+        }
+        Ok(format!("{total} spikes"))
+    });
+
+    if !artifacts.join("index.json").exists() {
+        println!("\n(artifacts missing — skipping training-pipeline benches)");
+        return Ok(());
+    }
+    let session = Session::cpu()?;
+    let sweeper = Sweeper::new(session, &artifacts);
+    let proxy = list_bundles(&artifacts)?
+        .into_iter()
+        .find(|n| n.starts_with("proxy_gelu_ln"))
+        .expect("proxy bundle");
+
+    // Fig. 1/2/3-style mini-sweep: 2 formats × 20 steps.
+    timed("fig1/2/3: mini sweep (2×20 steps)", || {
+        let jobs: Vec<Job> = [("fp32", Fmt::fp32()), ("e4m3", Fmt::full(FormatId::E4M3, FormatId::E4M3))]
+            .into_iter()
+            .map(|(l, f)| Job {
+                bundle: proxy.clone(),
+                cfg: RunConfig::new(l, f, 5e-4, 20),
+            })
+            .collect();
+        let logs = sweeper.run_all(&jobs, true);
+        Ok(format!("final losses: {:?}", logs.iter().map(|l| l.final_loss()).collect::<Vec<_>>()))
+    });
+
+    // Fig. 7-style: snapshot + one intervention branch.
+    timed("fig7: snapshot + branch (30 steps)", || {
+        let runner = sweeper.runner(&proxy)?;
+        let cfg = RunConfig::new("b", Fmt::full(FormatId::E4M3, FormatId::E4M3), 1e-3, 30);
+        let (_base, snap) = runner.run_with_snapshot(&cfg, 15)?;
+        let cfg2 = RunConfig::new("iv", Intervention::Bf16Act.apply(cfg.fmt), 1e-3, 30);
+        let out = runner.run_from(&cfg2, snap, 15)?;
+        Ok(format!("branch final {:.4}", out.log.final_loss()))
+    });
+
+    // Fig. 4-style: paired-gradient steps.
+    timed("fig4: paired steps (10)", || {
+        let paired = list_bundles(&artifacts)?
+            .into_iter()
+            .filter(|n| n.starts_with("proxy"))
+            .find(|n| {
+                mxstab::runtime::Manifest::load(&artifacts.join(n))
+                    .map(|m| m.functions.contains_key("paired"))
+                    .unwrap_or(false)
+            });
+        let Some(name) = paired else { return Ok("no paired bundle".into()) };
+        let runner = sweeper.runner(&name)?;
+        let mut cfg = RunConfig::new("p", Fmt::full(FormatId::E4M3, FormatId::E4M3), 5e-4, 10);
+        cfg.paired = true;
+        let out = runner.run(&cfg)?;
+        Ok(format!("eps_ratio@end {:.4}", out.log.rows.last().unwrap().m.eps_ratio))
+    });
+
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Gradient-bias series analysis (paper §5, Fig. 4).
+//!
+//! The paired step executable reports, per step, the ratio
+//! ‖ε_t‖/‖ḡ_t‖ (a lower bound on ‖ζ_t‖_op via Eq. 4) and the cosine
+//! between the quantized and exact gradients. This module post-processes
+//! those series: running averages, the ‖ζ‖ ≈ 2 crossing, and the
+//! turn-around point where the bias stops shrinking and starts growing.
+
+use crate::coordinator::metrics::RunLog;
+use crate::util::stats::ewma;
+
+#[derive(Debug, Clone)]
+pub struct GradBiasSummary {
+    /// Smoothed ‖ε‖/‖ḡ‖ series.
+    pub zeta_bound: Vec<f64>,
+    /// Smoothed cosine series.
+    pub cosine: Vec<f64>,
+    pub steps: Vec<f64>,
+    /// First step where the smoothed bound crosses `threshold` (paper: 2).
+    pub crossing_step: Option<usize>,
+    /// Step of the minimum of the smoothed bound (the "turn-around").
+    pub turnaround_step: Option<usize>,
+}
+
+pub fn summarize(log: &RunLog, alpha: f64, threshold: f64) -> GradBiasSummary {
+    let raw: Vec<f64> = log.series(|m| m.eps_ratio);
+    let cos: Vec<f64> = log.series(|m| m.cosine);
+    let steps = log.steps();
+    let zeta = ewma(&raw, alpha);
+    let cosine = ewma(&cos, alpha);
+
+    let crossing_step = zeta
+        .iter()
+        .zip(&steps)
+        .find(|(z, _)| **z >= threshold)
+        .map(|(_, s)| *s as usize);
+
+    let turnaround_step = {
+        let mut best = (f64::INFINITY, None);
+        for (z, s) in zeta.iter().zip(&steps) {
+            if z.is_finite() && *z < best.0 {
+                best = (*z, Some(*s as usize));
+            }
+        }
+        best.1
+    };
+
+    GradBiasSummary { zeta_bound: zeta, cosine, steps, crossing_step, turnaround_step }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Metrics;
+
+    fn log_with(eps: &[f32]) -> RunLog {
+        let mut l = RunLog::new("t");
+        for (i, &e) in eps.iter().enumerate() {
+            l.push(
+                i,
+                Metrics { loss: 1.0, grad_norm: 1.0, eps_ratio: e, cosine: 1.0 - e, ..Default::default() },
+            );
+        }
+        l
+    }
+
+    #[test]
+    fn finds_turnaround_and_crossing() {
+        // V-shape: falls to 0.05 at step 50 then climbs past 2.0.
+        let eps: Vec<f32> = (0..200)
+            .map(|t| {
+                if t < 50 {
+                    0.5 - 0.009 * t as f32
+                } else {
+                    0.05 + 0.03 * (t - 50) as f32
+                }
+            })
+            .collect();
+        let s = summarize(&log_with(&eps), 0.3, 2.0);
+        let ta = s.turnaround_step.unwrap();
+        assert!((40..=70).contains(&ta), "turnaround {ta}");
+        let cx = s.crossing_step.unwrap();
+        assert!(cx > 100, "crossing {cx}");
+    }
+
+    #[test]
+    fn no_crossing_when_stable() {
+        let eps = vec![0.1f32; 100];
+        let s = summarize(&log_with(&eps), 0.3, 2.0);
+        assert!(s.crossing_step.is_none());
+    }
+}

@@ -1,0 +1,10 @@
+//! Post-hoc analysis: scaling-law fits, spike aggregation, gradient-bias
+//! series (the quantities behind the paper's Figs. 4, 8, 9, 12, 13 and
+//! Table 2).
+
+pub mod gradbias;
+pub mod scaling;
+pub mod stability;
+pub mod spikes;
+
+pub use scaling::{fit_chinchilla, ChinchillaFit, LossPoint};

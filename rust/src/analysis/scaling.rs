@@ -1,0 +1,210 @@
+//! Chinchilla scaling-law fitting (paper Appendix C / Table 2).
+//!
+//! Fits  L(N, D) = E + A/N^α + B/D^β  to (params, tokens, loss) triples by
+//! minimizing a Huber loss in log space, following Hoffmann et al. (2022)
+//! and Brandfonbrener et al. (2024): parametrize (a, b, e, α, β) with
+//! A = exp(a), B = exp(b), E = exp(e), optimize with Adam from a grid of
+//! initializations, keep the best.
+//!
+//! The model prediction is computed with log-sum-exp for numerical
+//! stability:  log L̂ = LSE(e, a − α·logN, b − β·logD).
+
+#[derive(Debug, Clone, Copy)]
+pub struct LossPoint {
+    pub n_params: f64,
+    pub tokens: f64,
+    pub loss: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct ChinchillaFit {
+    pub a_coef: f64,  // A
+    pub b_coef: f64,  // B
+    pub e_const: f64, // E (irreducible loss)
+    pub alpha: f64,
+    pub beta: f64,
+    pub huber_loss: f64,
+    /// a = β/(α+β): exponent of optimal model size vs compute (Table 2's
+    /// last column).
+    pub opt_exponent: f64,
+}
+
+impl ChinchillaFit {
+    pub fn predict(&self, n: f64, d: f64) -> f64 {
+        self.e_const + self.a_coef / n.powf(self.alpha) + self.b_coef / d.powf(self.beta)
+    }
+
+    /// R² of predictions vs observed losses.
+    pub fn r2(&self, pts: &[LossPoint]) -> f64 {
+        let mean = pts.iter().map(|p| p.loss).sum::<f64>() / pts.len() as f64;
+        let ss_tot: f64 = pts.iter().map(|p| (p.loss - mean).powi(2)).sum();
+        let ss_res: f64 = pts
+            .iter()
+            .map(|p| (p.loss - self.predict(p.n_params, p.tokens)).powi(2))
+            .sum();
+        if ss_tot > 0.0 {
+            1.0 - ss_res / ss_tot
+        } else {
+            1.0
+        }
+    }
+}
+
+fn lse3(a: f64, b: f64, c: f64) -> f64 {
+    let m = a.max(b).max(c);
+    m + ((a - m).exp() + (b - m).exp() + (c - m).exp()).ln()
+}
+
+fn huber(x: f64, delta: f64) -> (f64, f64) {
+    if x.abs() <= delta {
+        (0.5 * x * x, x)
+    } else {
+        (delta * (x.abs() - 0.5 * delta), delta * x.signum())
+    }
+}
+
+/// Objective + gradient at θ = (e, a, b, α, β) over log-space residuals.
+fn objective(theta: &[f64; 5], pts: &[LossPoint], delta: f64) -> (f64, [f64; 5]) {
+    let [e, a, b, alpha, beta] = *theta;
+    let mut loss = 0.0;
+    let mut grad = [0.0; 5];
+    for p in pts {
+        let ln_n = p.n_params.ln();
+        let ln_d = p.tokens.ln();
+        let t_e = e;
+        let t_a = a - alpha * ln_n;
+        let t_b = b - beta * ln_d;
+        let pred = lse3(t_e, t_a, t_b);
+        let resid = pred - p.loss.ln();
+        let (h, dh) = huber(resid, delta);
+        loss += h;
+        // softmax weights of the three terms
+        let m = t_e.max(t_a).max(t_b);
+        let we = (t_e - m).exp();
+        let wa = (t_a - m).exp();
+        let wb = (t_b - m).exp();
+        let z = we + wa + wb;
+        let (we, wa, wb) = (we / z, wa / z, wb / z);
+        grad[0] += dh * we;
+        grad[1] += dh * wa;
+        grad[2] += dh * wb;
+        grad[3] += dh * wa * (-ln_n);
+        grad[4] += dh * wb * (-ln_d);
+    }
+    let inv = 1.0 / pts.len() as f64;
+    for g in &mut grad {
+        *g *= inv;
+    }
+    (loss * inv, grad)
+}
+
+fn adam(theta0: [f64; 5], pts: &[LossPoint], iters: usize, lr: f64, delta: f64) -> ([f64; 5], f64) {
+    let mut th = theta0;
+    let (mut m, mut v) = ([0.0f64; 5], [0.0f64; 5]);
+    let (b1, b2, eps) = (0.9, 0.999, 1e-8);
+    let mut last = f64::INFINITY;
+    for t in 1..=iters {
+        let (loss, g) = objective(&th, pts, delta);
+        last = loss;
+        for i in 0..5 {
+            m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+            v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+            let mh = m[i] / (1.0 - b1.powi(t as i32));
+            let vh = v[i] / (1.0 - b2.powi(t as i32));
+            th[i] -= lr * mh / (vh.sqrt() + eps);
+        }
+        // Keep exponents in a sane band (as in Hoffmann et al. fits).
+        th[3] = th[3].clamp(0.0, 2.5);
+        th[4] = th[4].clamp(0.0, 2.5);
+    }
+    (th, last)
+}
+
+/// Fit from a grid of initializations (α, β ∈ {0.3, 0.5, 0.8}, e ∈ {…}),
+/// keeping the lowest Huber objective.
+pub fn fit_chinchilla(pts: &[LossPoint]) -> ChinchillaFit {
+    assert!(pts.len() >= 5, "need ≥5 points to fit 5 parameters");
+    let delta = 1e-3;
+    let mut best: Option<([f64; 5], f64)> = None;
+    let min_loss = pts.iter().map(|p| p.loss).fold(f64::INFINITY, f64::min);
+    for &alpha0 in &[0.3, 0.5, 0.8] {
+        for &beta0 in &[0.3, 0.5, 0.8] {
+            for &efrac in &[0.25, 0.5, 0.9] {
+                let e0 = (min_loss * efrac).max(1e-4).ln();
+                // Initialize a, b so each term starts comparable to losses.
+                let med = pts[pts.len() / 2];
+                let a0 = (min_loss).ln() + alpha0 * med.n_params.ln();
+                let b0 = (min_loss).ln() + beta0 * med.tokens.ln();
+                let (th, l) = adam([e0, a0, b0, alpha0, beta0], pts, 4000, 0.01, delta);
+                if best.is_none() || l < best.unwrap().1 {
+                    best = Some((th, l));
+                }
+            }
+        }
+    }
+    let (th, l) = best.unwrap();
+    let [e, a, b, alpha, beta] = th;
+    ChinchillaFit {
+        a_coef: a.exp(),
+        b_coef: b.exp(),
+        e_const: e.exp(),
+        alpha,
+        beta,
+        huber_loss: l,
+        opt_exponent: beta / (alpha + beta),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn synth(a: f64, b: f64, e: f64, alpha: f64, beta: f64, noise: f64) -> Vec<LossPoint> {
+        let mut rng = Xoshiro256::seed_from(11);
+        let mut pts = vec![];
+        for &n in &[1e5f64, 3e5, 1e6, 3e6, 1e7, 3e7] {
+            for &ratio in &[2.0, 8.0, 32.0, 128.0] {
+                let d = n * ratio;
+                let loss = e + a / n.powf(alpha) + b / d.powf(beta);
+                let loss = loss * (1.0 + noise * rng.normal());
+                pts.push(LossPoint { n_params: n, tokens: d, loss });
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn recovers_noiseless_chinchilla_params() {
+        let pts = synth(2000.0, 20000.0, 0.55, 0.5, 0.55, 0.0);
+        let fit = fit_chinchilla(&pts);
+        assert!((fit.alpha - 0.5).abs() < 0.05, "alpha {}", fit.alpha);
+        assert!((fit.beta - 0.55).abs() < 0.05, "beta {}", fit.beta);
+        assert!((fit.e_const - 0.55).abs() < 0.08, "E {}", fit.e_const);
+        assert!(fit.r2(&pts) > 0.999, "r2 {}", fit.r2(&pts));
+    }
+
+    #[test]
+    fn robust_to_mild_noise_and_outlier() {
+        let mut pts = synth(2000.0, 20000.0, 0.55, 0.5, 0.55, 0.01);
+        // One diverged run (Huber should shrug it off).
+        pts.push(LossPoint { n_params: 1e6, tokens: 1e7, loss: 50.0 });
+        let fit = fit_chinchilla(&pts);
+        assert!((fit.alpha - 0.5).abs() < 0.15, "alpha {}", fit.alpha);
+        assert!(fit.r2(&pts[..pts.len() - 1]) > 0.98);
+    }
+
+    #[test]
+    fn opt_exponent_definition() {
+        let pts = synth(1500.0, 15000.0, 0.5, 0.4, 0.6, 0.0);
+        let fit = fit_chinchilla(&pts);
+        assert!((fit.opt_exponent - fit.beta / (fit.alpha + fit.beta)).abs() < 1e-12);
+        assert!((fit.opt_exponent - 0.6).abs() < 0.08);
+    }
+
+    #[test]
+    #[should_panic]
+    fn refuses_underdetermined_input() {
+        fit_chinchilla(&[LossPoint { n_params: 1e6, tokens: 1e7, loss: 1.0 }]);
+    }
+}

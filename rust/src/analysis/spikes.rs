@@ -1,0 +1,65 @@
+//! Spike-count aggregation (paper Fig. 9 + Appendix B).
+//!
+//! The paper's heuristic: a spike is loss[t] > 100 · loss[t−1]; aggregated
+//! over a depth × width grid per precision format.
+
+use crate::coordinator::metrics::RunLog;
+
+/// Count spikes in a raw loss series with the paper's κ rule.
+pub fn count_spikes(losses: &[f64], kappa: f64) -> usize {
+    let mut n = 0;
+    for w in losses.windows(2) {
+        let (prev, cur) = (w[0], w[1]);
+        if !cur.is_finite() || (prev > 0.0 && cur > kappa * prev) {
+            n += 1;
+        }
+    }
+    n
+}
+
+/// A (depth, width) cell of the Fig. 9 grid.
+#[derive(Debug, Clone)]
+pub struct GridCell {
+    pub depth: usize,
+    pub width: usize,
+    pub fmt_label: String,
+    pub spikes: usize,
+    pub diverged: bool,
+}
+
+/// Aggregate run logs (tagged with depth/width metadata) into grid cells.
+pub fn aggregate(logs: &[(usize, usize, String, &RunLog)]) -> Vec<GridCell> {
+    logs.iter()
+        .map(|(depth, width, fmt_label, log)| GridCell {
+            depth: *depth,
+            width: *width,
+            fmt_label: fmt_label.clone(),
+            spikes: count_spikes(&log.losses(), 100.0).max(log.spikes),
+            diverged: log.diverged_at.is_some(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_match_paper_rule() {
+        let losses = vec![1.0, 0.5, 0.4, 45.0, 0.4, 0.39];
+        assert_eq!(count_spikes(&losses, 100.0), 1); // 0.4 → 45 is 112×
+        assert_eq!(count_spikes(&losses, 200.0), 0);
+    }
+
+    #[test]
+    fn nan_counts_as_spike() {
+        let losses = vec![1.0, f64::NAN];
+        assert_eq!(count_spikes(&losses, 100.0), 1);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(count_spikes(&[], 100.0), 0);
+        assert_eq!(count_spikes(&[1.0], 100.0), 0);
+    }
+}

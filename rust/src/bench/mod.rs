@@ -1,0 +1,97 @@
+//! Miniature criterion-style benchmark harness (the criterion crate is not
+//! available offline). Used by the `[[bench]]` targets (`cargo bench`).
+//!
+//! Protocol per benchmark: warmup iterations, then timed batches until the
+//! time budget is spent; reports mean / p50 / p95 per-iteration latency and
+//! derived throughput.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::percentile;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, unit_per_iter: f64) -> f64 {
+        unit_per_iter / self.mean_s
+    }
+
+    pub fn report_line(&self, extra: &str) -> String {
+        format!(
+            "{:<44} {:>10.3} ms/iter  p50 {:>8.3}  p95 {:>8.3}  min {:>8.3}  ({} iters){}",
+            self.name,
+            self.mean_s * 1e3,
+            self.p50_s * 1e3,
+            self.p95_s * 1e3,
+            self.min_s * 1e3,
+            self.iters,
+            if extra.is_empty() { String::new() } else { format!("  {extra}") },
+        )
+    }
+}
+
+pub struct Bencher {
+    pub warmup: usize,
+    pub budget: Duration,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Respect quick runs: MXSTAB_BENCH_BUDGET_MS overrides.
+        let ms = std::env::var("MXSTAB_BENCH_BUDGET_MS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(2_000u64);
+        Bencher { warmup: 3, budget: Duration::from_millis(ms), max_iters: 10_000 }
+    }
+}
+
+impl Bencher {
+    pub fn run(&self, name: &str, mut f: impl FnMut()) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = vec![];
+        let start = Instant::now();
+        while start.elapsed() < self.budget && times.len() < self.max_iters {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        BenchResult {
+            name: name.to_string(),
+            iters: times.len(),
+            mean_s: mean,
+            p50_s: percentile(&times, 0.5),
+            p95_s: percentile(&times, 0.95),
+            min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let b = Bencher { warmup: 1, budget: Duration::from_millis(50), max_iters: 1000 };
+        let r = b.run("noop-ish", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters > 10);
+        assert!(r.mean_s > 0.0 && r.mean_s < 0.01);
+        assert!(r.p95_s >= r.p50_s && r.p50_s >= r.min_s);
+        assert!(r.report_line("").contains("noop-ish"));
+    }
+}

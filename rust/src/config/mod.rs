@@ -1,0 +1,101 @@
+//! Experiment configuration: paths, scale presets and CLI overrides.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::util::args::Args;
+
+/// Global scale preset — controls step counts and ladder sizes so the
+/// paper-figure experiments can be smoke-tested (`quick`), run at the
+/// calibrated default, or extended (`full`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Default,
+    Full,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Scale {
+        match s {
+            "quick" => Scale::Quick,
+            "full" => Scale::Full,
+            _ => Scale::Default,
+        }
+    }
+
+    /// Multiply a default step count by the preset's factor.
+    pub fn steps(&self, default: usize) -> usize {
+        match self {
+            Scale::Quick => (default / 10).max(20),
+            Scale::Default => default,
+            Scale::Full => default * 2,
+        }
+    }
+}
+
+/// Resolved experiment context shared by all drivers.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub artifacts: PathBuf,
+    pub reports: PathBuf,
+    pub runs: PathBuf,
+    pub scale: Scale,
+    /// Optional overrides.
+    pub steps_override: Option<usize>,
+    pub seeds: usize,
+    pub quiet: bool,
+}
+
+impl Config {
+    pub fn from_args(args: &Args) -> Result<Config> {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        let cfg = Config {
+            artifacts: args
+                .get("artifacts")
+                .map(PathBuf::from)
+                .unwrap_or_else(|| root.join("artifacts")),
+            reports: args
+                .get("reports")
+                .map(PathBuf::from)
+                .unwrap_or_else(|| root.join("reports")),
+            runs: args
+                .get("runs")
+                .map(PathBuf::from)
+                .unwrap_or_else(|| root.join("runs")),
+            scale: Scale::parse(args.get_or("scale", "default")),
+            steps_override: args.get("steps").and_then(|s| s.parse().ok()),
+            seeds: args.parse_or("seeds", 1usize)?,
+            quiet: args.flag("quiet"),
+        };
+        Ok(cfg)
+    }
+
+    pub fn steps(&self, default: usize) -> usize {
+        self.steps_override.unwrap_or_else(|| self.scale.steps(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_presets() {
+        assert_eq!(Scale::Quick.steps(1000), 100);
+        assert_eq!(Scale::Default.steps(1000), 1000);
+        assert_eq!(Scale::Full.steps(1000), 2000);
+        assert_eq!(Scale::Quick.steps(50), 20, "floor at 20");
+    }
+
+    #[test]
+    fn overrides_win() {
+        let args = crate::util::args::Args::parse(
+            ["x", "--steps", "42", "--scale", "quick"].iter().map(|s| s.to_string()),
+        );
+        let cfg = Config::from_args(&args).unwrap();
+        assert_eq!(cfg.steps(1000), 42);
+        assert_eq!(cfg.scale, Scale::Quick);
+    }
+}

@@ -1,0 +1,149 @@
+//! Checkpointing: persist / restore a full training state (params +
+//! optimizer moments + teacher) to disk, with a bounded ring of retained
+//! snapshots per run — what lets long sweeps resume after a crash and the
+//! intervention experiments branch without replay.
+//!
+//! Format: one directory per checkpoint with `meta.json` (manifest name,
+//! step, tensor table) and `state.bin` (little-endian raw tensors,
+//! concatenated in manifest order — all state tensors are f32).
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{lit_f32, Bundle, Session, State};
+use crate::util::json::Json;
+
+pub struct CheckpointStore {
+    root: PathBuf,
+    /// Retain at most this many checkpoints per run (oldest evicted).
+    pub keep: usize,
+}
+
+impl CheckpointStore {
+    pub fn new(root: &Path, keep: usize) -> CheckpointStore {
+        CheckpointStore { root: root.to_path_buf(), keep: keep.max(1) }
+    }
+
+    fn dir(&self, run: &str, step: usize) -> PathBuf {
+        self.root.join(run).join(format!("step{step:08}"))
+    }
+
+    /// Save `state` for (run, step); evicts the oldest beyond `keep`.
+    pub fn save(&self, bundle: &Bundle, run: &str, step: usize, state: &State) -> Result<PathBuf> {
+        let dir = self.dir(run, step);
+        std::fs::create_dir_all(&dir)?;
+        let spec = &bundle.manifest.state;
+        if spec.len() != state.0.len() {
+            bail!("state arity {} != manifest {}", state.0.len(), spec.len());
+        }
+        let mut blob: Vec<u8> = Vec::with_capacity(bundle.manifest.state_bytes());
+        let mut table = Vec::new();
+        for (ts, buf) in spec.iter().zip(&state.0) {
+            let data = buf.to_literal_sync()?.to_vec::<f32>()?;
+            if data.len() != ts.elems() {
+                bail!("tensor {}: {} elems, expected {}", ts.name, data.len(), ts.elems());
+            }
+            table.push(Json::obj(vec![
+                ("name", Json::from(ts.name.clone())),
+                ("shape", Json::Arr(ts.shape.iter().map(|&d| Json::from(d)).collect())),
+                ("offset", Json::from(blob.len())),
+            ]));
+            for v in data {
+                blob.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        std::fs::write(dir.join("state.bin"), &blob)?;
+        let meta = Json::obj(vec![
+            ("bundle", Json::from(bundle.name().to_string())),
+            ("step", Json::from(step)),
+            ("bytes", Json::from(blob.len())),
+            ("tensors", Json::Arr(table)),
+        ]);
+        std::fs::write(dir.join("meta.json"), meta.to_string())?;
+        self.evict(run)?;
+        Ok(dir)
+    }
+
+    /// Restore the state saved at (run, step), uploading to the device.
+    pub fn load(
+        &self,
+        session: &Session,
+        bundle: &Bundle,
+        run: &str,
+        step: usize,
+    ) -> Result<State> {
+        let dir = self.dir(run, step);
+        let meta = Json::parse(
+            &std::fs::read_to_string(dir.join("meta.json"))
+                .with_context(|| format!("no checkpoint at {}", dir.display()))?,
+        )?;
+        let saved_bundle = meta.req("bundle")?.as_str().unwrap_or_default();
+        if saved_bundle != bundle.name() {
+            bail!("checkpoint is for bundle {saved_bundle:?}, not {:?}", bundle.name());
+        }
+        let mut blob = Vec::new();
+        std::fs::File::open(dir.join("state.bin"))?.read_to_end(&mut blob)?;
+        let mut out = Vec::with_capacity(bundle.manifest.state.len());
+        let mut lits = Vec::with_capacity(bundle.manifest.state.len());
+        let mut off = 0usize;
+        for ts in &bundle.manifest.state {
+            let n = ts.elems();
+            let bytes = &blob[off..off + 4 * n];
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let lit = lit_f32(&data, &ts.shape)?;
+            out.push(session.upload(&lit)?);
+            lits.push(lit); // host→device copies are async; keep alive
+            off += 4 * n;
+        }
+        for b in &out {
+            let _ = b.to_literal_sync()?; // await the uploads
+        }
+        drop(lits);
+        if off != blob.len() {
+            bail!("checkpoint size mismatch: consumed {off}, file {}", blob.len());
+        }
+        Ok(State(out))
+    }
+
+    /// List available checkpoint steps for a run (ascending).
+    pub fn list(&self, run: &str) -> Vec<usize> {
+        let mut steps: Vec<usize> = std::fs::read_dir(self.root.join(run))
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter_map(|e| {
+                        e.file_name()
+                            .to_str()
+                            .and_then(|s| s.strip_prefix("step").map(str::to_string))
+                    })
+                    .filter_map(|s| s.parse::<usize>().ok())
+                    .collect()
+            })
+            .unwrap_or_default();
+        steps.sort_unstable();
+        steps
+    }
+
+    /// Latest checkpoint step, if any.
+    pub fn latest(&self, run: &str) -> Option<usize> {
+        self.list(run).pop()
+    }
+
+    fn evict(&self, run: &str) -> Result<()> {
+        let steps = self.list(run);
+        if steps.len() > self.keep {
+            for &s in &steps[..steps.len() - self.keep] {
+                std::fs::remove_dir_all(self.dir(run, s)).ok();
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Write` is used via extend_from_slice on Vec<u8>; keep the import scoped.
+#[allow(unused)]
+fn _write_sink(mut w: impl Write) {}

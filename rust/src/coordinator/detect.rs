@@ -1,0 +1,210 @@
+//! Instability detection.
+//!
+//! The paper's spike heuristic (Appendix B): loss[t] > κ·loss[t−1] with
+//! κ = 100 flags a spike. On top of that this detector tracks
+//! * NaN/Inf in loss or gradient norm (hard divergence),
+//! * sustained divergence: loss EWMA > κ_div × best-so-far EWMA,
+//! * gradient-norm growth over a trailing window (the paper observes the
+//!   grad norm rising *before* the loss lets go — Fig. 1b).
+
+/// Detector verdict after each step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Healthy,
+    /// Single-step spike (loss jumped by ≥ spike_factor).
+    Spike,
+    /// Run is considered irrecoverably diverged.
+    Diverged,
+}
+
+#[derive(Debug, Clone)]
+pub struct DetectorConfig {
+    /// κ for the single-step spike rule (paper: 100).
+    pub spike_factor: f64,
+    /// Divergence if smoothed loss exceeds best smoothed loss by this factor.
+    pub diverge_factor: f64,
+    /// EWMA smoothing coefficient.
+    pub alpha: f64,
+    /// Steps to wait before divergence checks (loss is still falling fast).
+    pub warmup: usize,
+    /// Trailing window for grad-norm growth rate.
+    pub grad_window: usize,
+}
+
+impl Default for DetectorConfig {
+    fn default() -> Self {
+        DetectorConfig {
+            spike_factor: 100.0,
+            diverge_factor: 50.0,
+            alpha: 0.1,
+            warmup: 20,
+            grad_window: 50,
+        }
+    }
+}
+
+/// Streaming instability detector (O(1) per step).
+#[derive(Debug, Clone)]
+pub struct Detector {
+    cfg: DetectorConfig,
+    step: usize,
+    prev_loss: Option<f64>,
+    ewma: Option<f64>,
+    best_ewma: f64,
+    pub spikes: usize,
+    pub first_spike_step: Option<usize>,
+    pub diverged_at: Option<usize>,
+    grad_hist: std::collections::VecDeque<f64>,
+}
+
+impl Detector {
+    pub fn new(cfg: DetectorConfig) -> Self {
+        Detector {
+            cfg,
+            step: 0,
+            prev_loss: None,
+            ewma: None,
+            best_ewma: f64::INFINITY,
+            spikes: 0,
+            first_spike_step: None,
+            diverged_at: None,
+            grad_hist: std::collections::VecDeque::new(),
+        }
+    }
+
+    pub fn push(&mut self, loss: f64, grad_norm: f64) -> Verdict {
+        let t = self.step;
+        self.step += 1;
+
+        if !loss.is_finite() || !grad_norm.is_finite() {
+            self.spikes += 1;
+            self.first_spike_step.get_or_insert(t);
+            self.diverged_at.get_or_insert(t);
+            return Verdict::Diverged;
+        }
+
+        let mut verdict = Verdict::Healthy;
+        if let Some(prev) = self.prev_loss {
+            if prev > 0.0 && loss > self.cfg.spike_factor * prev {
+                self.spikes += 1;
+                self.first_spike_step.get_or_insert(t);
+                verdict = Verdict::Spike;
+            }
+        }
+        self.prev_loss = Some(loss);
+
+        let e = match self.ewma {
+            None => loss,
+            Some(prev) => self.cfg.alpha * loss + (1.0 - self.cfg.alpha) * prev,
+        };
+        self.ewma = Some(e);
+        if t >= self.cfg.warmup {
+            self.best_ewma = self.best_ewma.min(e);
+            if e > self.cfg.diverge_factor * self.best_ewma && self.best_ewma.is_finite() {
+                self.diverged_at.get_or_insert(t);
+                verdict = Verdict::Diverged;
+            }
+        }
+
+        self.grad_hist.push_back(grad_norm);
+        if self.grad_hist.len() > self.cfg.grad_window {
+            self.grad_hist.pop_front();
+        }
+        verdict
+    }
+
+    /// Ratio of trailing-window grad norm to its window minimum — a leading
+    /// indicator of the paper's slow grad-norm climb before divergence.
+    pub fn grad_growth(&self) -> f64 {
+        if self.grad_hist.len() < 2 {
+            return 1.0;
+        }
+        let last = *self.grad_hist.back().unwrap();
+        let min = self.grad_hist.iter().cloned().fold(f64::INFINITY, f64::min);
+        if min > 0.0 {
+            last / min
+        } else {
+            1.0
+        }
+    }
+
+    pub fn diverged(&self) -> bool {
+        self.diverged_at.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_run_stays_healthy() {
+        let mut d = Detector::new(DetectorConfig::default());
+        for t in 0..500 {
+            let loss = 1.0 / (1.0 + t as f64 * 0.01);
+            assert_eq!(d.push(loss, 1.0), Verdict::Healthy);
+        }
+        assert_eq!(d.spikes, 0);
+        assert!(!d.diverged());
+    }
+
+    #[test]
+    fn spike_detected_at_100x() {
+        let mut d = Detector::new(DetectorConfig::default());
+        for _ in 0..50 {
+            d.push(0.5, 1.0);
+        }
+        assert_eq!(d.push(75.0, 5.0), Verdict::Spike);
+        assert_eq!(d.spikes, 1);
+        assert_eq!(d.first_spike_step, Some(50));
+    }
+
+    #[test]
+    fn recovered_spike_is_not_divergence() {
+        let mut d = Detector::new(DetectorConfig::default());
+        for _ in 0..100 {
+            d.push(0.5, 1.0);
+        }
+        d.push(80.0, 4.0); // spike
+        for _ in 0..100 {
+            d.push(0.5, 1.0); // recovery
+        }
+        assert!(!d.diverged());
+        assert_eq!(d.spikes, 1);
+    }
+
+    #[test]
+    fn sustained_blowup_flags_divergence() {
+        let mut d = Detector::new(DetectorConfig::default());
+        for _ in 0..100 {
+            d.push(0.1, 1.0);
+        }
+        let mut loss = 0.1;
+        let mut saw_diverged = false;
+        for _ in 0..200 {
+            loss *= 1.2;
+            if d.push(loss, loss * 10.0) == Verdict::Diverged {
+                saw_diverged = true;
+                break;
+            }
+        }
+        assert!(saw_diverged);
+        assert!(d.diverged());
+    }
+
+    #[test]
+    fn nan_is_immediate_divergence() {
+        let mut d = Detector::new(DetectorConfig::default());
+        d.push(0.5, 1.0);
+        assert_eq!(d.push(f64::NAN, 1.0), Verdict::Diverged);
+    }
+
+    #[test]
+    fn grad_growth_tracks_window() {
+        let mut d = Detector::new(DetectorConfig::default());
+        for t in 0..60 {
+            d.push(0.5, 1.0 + t as f64 * 0.1);
+        }
+        assert!(d.grad_growth() > 2.0);
+    }
+}

@@ -1,0 +1,164 @@
+//! In-situ intervention engine (paper §6.2, Fig. 7).
+//!
+//! Because the precision scheme is a *runtime input* to the compiled step
+//! function (DESIGN.md §1), an intervention is just a rewrite of the `fmt`
+//! vector between two steps — no recompilation, no state disturbance, and
+//! the random seed / batch sequence stay identical, exactly matching the
+//! paper's protocol ("the training state at the intervention step is the
+//! same as in the baseline run").
+
+use crate::formats::spec::{Fmt, FormatId};
+
+/// The intervention menu from Fig. 7.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Intervention {
+    /// Switch entirely to FP32 for the remaining steps.
+    ToFp32,
+    /// Increase the shared exponent by one ("bumping exponent").
+    BumpExponent,
+    /// Stop quantizing layer-norm affine parameters.
+    SkipLnQuant,
+    /// Quantize only the forward pass from now on.
+    ForwardOnly,
+    /// Keep weights in bf16, activations in MX (both passes).
+    Bf16Weights,
+    /// bf16 activations in the forward pass only (backward stays MX).
+    Bf16ActFwdOnly,
+    /// bf16 activations in both passes, weights stay MX.
+    Bf16Act,
+}
+
+impl Intervention {
+    pub const ALL: [Intervention; 7] = [
+        Intervention::ToFp32,
+        Intervention::BumpExponent,
+        Intervention::SkipLnQuant,
+        Intervention::ForwardOnly,
+        Intervention::Bf16Weights,
+        Intervention::Bf16ActFwdOnly,
+        Intervention::Bf16Act,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Intervention::ToFp32 => "fp32",
+            Intervention::BumpExponent => "bump-exponent",
+            Intervention::SkipLnQuant => "skip-ln-quant",
+            Intervention::ForwardOnly => "forward-only",
+            Intervention::Bf16Weights => "bf16-weights",
+            Intervention::Bf16ActFwdOnly => "bf16-act-fwd",
+            Intervention::Bf16Act => "bf16-act",
+        }
+    }
+
+    /// Apply to a base precision scheme, returning the post-intervention
+    /// scheme.
+    pub fn apply(self, base: Fmt) -> Fmt {
+        match self {
+            Intervention::ToFp32 => Fmt::fp32(),
+            Intervention::BumpExponent => base.with_scale_bump(),
+            Intervention::SkipLnQuant => base.without_ln_quant(),
+            Intervention::ForwardOnly => Fmt { quant_bwd: false, ..base },
+            Intervention::Bf16Weights => Fmt {
+                w_fwd: FormatId::Bf16,
+                w_bwd: FormatId::Bf16,
+                ..base
+            },
+            Intervention::Bf16ActFwdOnly => Fmt {
+                a_fwd: FormatId::Bf16,
+                quant_ln: false,
+                ..base
+            },
+            Intervention::Bf16Act => Fmt {
+                a_fwd: FormatId::Bf16,
+                a_bwd: FormatId::Bf16,
+                g_bwd: FormatId::Bf16,
+                quant_ln: false,
+                ..base
+            },
+        }
+    }
+}
+
+/// When to fire an intervention.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Trigger {
+    /// At a fixed step (the paper's step-4500 / step-5080 experiments).
+    AtStep(usize),
+    /// When the detector's trailing grad-norm growth crosses a threshold —
+    /// an *automatic* early-warning variant the runtime coordinator offers.
+    OnGradGrowth(f64),
+}
+
+/// A scheduled intervention policy attached to a run.
+#[derive(Debug, Clone, Copy)]
+pub struct Policy {
+    pub trigger: Trigger,
+    pub intervention: Intervention,
+}
+
+impl Policy {
+    pub fn at_step(step: usize, i: Intervention) -> Policy {
+        Policy { trigger: Trigger::AtStep(step), intervention: i }
+    }
+
+    pub fn on_grad_growth(ratio: f64, i: Intervention) -> Policy {
+        Policy { trigger: Trigger::OnGradGrowth(ratio), intervention: i }
+    }
+
+    /// Whether the policy fires at this step.
+    pub fn fires(&self, step: usize, grad_growth: f64) -> bool {
+        match self.trigger {
+            Trigger::AtStep(s) => step == s,
+            Trigger::OnGradGrowth(r) => grad_growth >= r,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp32_intervention_clears_everything() {
+        let base = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+        let f = Intervention::ToFp32.apply(base);
+        assert!(!f.quant_fwd && !f.quant_bwd);
+        assert_eq!(f.label(), "fp32");
+    }
+
+    #[test]
+    fn forward_only_keeps_fwd_quant() {
+        let base = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+        let f = Intervention::ForwardOnly.apply(base);
+        assert!(f.quant_fwd && !f.quant_bwd);
+    }
+
+    #[test]
+    fn bf16_act_formats() {
+        let base = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+        let f = Intervention::Bf16Act.apply(base);
+        assert_eq!(f.a_fwd, FormatId::Bf16);
+        assert_eq!(f.g_bwd, FormatId::Bf16);
+        assert_eq!(f.w_fwd, FormatId::E4M3, "weights stay MX");
+        assert!(!f.quant_ln, "LN gammas ride the activation mitigation");
+    }
+
+    #[test]
+    fn bump_sets_flag_only() {
+        let base = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+        let f = Intervention::BumpExponent.apply(base);
+        assert!(f.scale_bump);
+        assert_eq!(f.w_fwd, base.w_fwd);
+    }
+
+    #[test]
+    fn triggers() {
+        let p = Policy::at_step(4500, Intervention::ToFp32);
+        assert!(p.fires(4500, 1.0));
+        assert!(!p.fires(4499, 999.0));
+        let p = Policy::on_grad_growth(3.0, Intervention::Bf16Act);
+        assert!(p.fires(10, 3.5));
+        assert!(!p.fires(10, 2.9));
+    }
+}

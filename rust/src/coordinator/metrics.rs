@@ -1,0 +1,212 @@
+//! Metric capture and persistence.
+//!
+//! Every run appends a row per logged step to an in-memory [`RunLog`]; the
+//! sweep scheduler serializes logs as JSONL under `runs/<sweep>/<run>.jsonl`
+//! plus a `summary.json` per run. Buffered, no per-step fsync (perf).
+
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::Metrics;
+use crate::util::json::Json;
+
+/// One logged step.
+#[derive(Debug, Clone, Copy)]
+pub struct Row {
+    pub step: usize,
+    pub m: Metrics,
+}
+
+/// Full metric history for one training run.
+#[derive(Debug, Clone, Default)]
+pub struct RunLog {
+    pub name: String,
+    /// Static description (bundle, fmt label, lr, seed...).
+    pub meta: Vec<(String, String)>,
+    pub rows: Vec<Row>,
+    /// Steps at which an intervention fired (fmt swap).
+    pub interventions: Vec<(usize, String)>,
+    pub spikes: usize,
+    pub diverged_at: Option<usize>,
+    pub wallclock_s: f64,
+}
+
+impl RunLog {
+    pub fn new(name: &str) -> RunLog {
+        RunLog { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn push(&mut self, step: usize, m: Metrics) {
+        self.rows.push(Row { step, m });
+    }
+
+    pub fn losses(&self) -> Vec<f64> {
+        self.rows.iter().map(|r| r.m.loss as f64).collect()
+    }
+
+    pub fn steps(&self) -> Vec<f64> {
+        self.rows.iter().map(|r| r.step as f64).collect()
+    }
+
+    pub fn grad_norms(&self) -> Vec<f64> {
+        self.rows.iter().map(|r| r.m.grad_norm as f64).collect()
+    }
+
+    pub fn series(&self, f: impl Fn(&Metrics) -> f32) -> Vec<f64> {
+        self.rows.iter().map(|r| f(&r.m) as f64).collect()
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.rows.last().map(|r| r.m.loss as f64).unwrap_or(f64::NAN)
+    }
+
+    /// Mean loss over the last `k` logged rows (robust final-loss estimate).
+    pub fn tail_loss(&self, k: usize) -> f64 {
+        if self.rows.is_empty() {
+            return f64::NAN;
+        }
+        let tail = &self.rows[self.rows.len().saturating_sub(k)..];
+        tail.iter().map(|r| r.m.loss as f64).sum::<f64>() / tail.len() as f64
+    }
+
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::from(self.name.clone())),
+            (
+                "meta",
+                Json::Obj(
+                    self.meta
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::from(v.clone())))
+                        .collect(),
+                ),
+            ),
+            ("steps", Json::from(self.rows.len())),
+            ("final_loss", Json::from(self.final_loss())),
+            ("tail_loss", Json::from(self.tail_loss(10))),
+            ("spikes", Json::from(self.spikes)),
+            (
+                "diverged_at",
+                self.diverged_at.map(Json::from).unwrap_or(Json::Null),
+            ),
+            (
+                "interventions",
+                Json::Arr(
+                    self.interventions
+                        .iter()
+                        .map(|(s, n)| {
+                            Json::obj(vec![
+                                ("step", Json::from(*s)),
+                                ("intervention", Json::from(n.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("wallclock_s", Json::from(self.wallclock_s)),
+        ])
+    }
+
+    /// Write `<dir>/<name>.jsonl` (one row per step) and
+    /// `<dir>/<name>.summary.json`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.jsonl", self.name));
+        let file = std::fs::File::create(&path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut w = std::io::BufWriter::new(file);
+        for r in &self.rows {
+            let j = Json::obj(vec![
+                ("step", Json::from(r.step)),
+                ("loss", Json::from(r.m.loss as f64)),
+                ("grad_norm", Json::from(r.m.grad_norm as f64)),
+                ("ln_frac_first", Json::from(r.m.ln_frac_first as f64)),
+                ("ln_frac_mean", Json::from(r.m.ln_frac_mean as f64)),
+                ("act_frac_mean", Json::from(r.m.act_frac_mean as f64)),
+                ("update_norm", Json::from(r.m.update_norm as f64)),
+                ("param_norm", Json::from(r.m.param_norm as f64)),
+                ("eps_ratio", Json::from(r.m.eps_ratio as f64)),
+                ("cosine", Json::from(r.m.cosine as f64)),
+            ]);
+            writeln!(w, "{j}")?;
+        }
+        w.flush()?;
+        std::fs::write(
+            dir.join(format!("{}.summary.json", self.name)),
+            self.summary_json().to_string(),
+        )?;
+        Ok(())
+    }
+
+    /// Load a saved log (summary fields only partially restored).
+    pub fn load(dir: &Path, name: &str) -> Result<RunLog> {
+        let text = std::fs::read_to_string(dir.join(format!("{name}.jsonl")))?;
+        let mut log = RunLog::new(name);
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(line)?;
+            let g = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN) as f32;
+            log.push(
+                j.get("step").and_then(Json::as_usize).unwrap_or(0),
+                Metrics {
+                    loss: g("loss"),
+                    grad_norm: g("grad_norm"),
+                    ln_frac_first: g("ln_frac_first"),
+                    ln_frac_mean: g("ln_frac_mean"),
+                    act_frac_mean: g("act_frac_mean"),
+                    update_norm: g("update_norm"),
+                    param_norm: g("param_norm"),
+                    eps_ratio: g("eps_ratio"),
+                    cosine: g("cosine"),
+                },
+            );
+        }
+        if let Ok(stext) = std::fs::read_to_string(dir.join(format!("{name}.summary.json"))) {
+            let j = Json::parse(&stext)?;
+            log.spikes = j.get("spikes").and_then(Json::as_usize).unwrap_or(0);
+            log.diverged_at = j.get("diverged_at").and_then(Json::as_usize);
+        }
+        Ok(log)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy(loss: f32) -> Metrics {
+        Metrics { loss, grad_norm: 1.0, ..Default::default() }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("mxstab_log_{}", std::process::id()));
+        let mut log = RunLog::new("r0");
+        for t in 0..20 {
+            log.push(t, dummy(1.0 / (t + 1) as f32));
+        }
+        log.spikes = 2;
+        log.diverged_at = Some(15);
+        log.save(&dir).unwrap();
+        let back = RunLog::load(&dir, "r0").unwrap();
+        assert_eq!(back.rows.len(), 20);
+        assert_eq!(back.spikes, 2);
+        assert_eq!(back.diverged_at, Some(15));
+        assert!((back.final_loss() - 0.05).abs() < 1e-6);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tail_loss_averages() {
+        let mut log = RunLog::new("x");
+        for t in 0..10 {
+            log.push(t, dummy(t as f32));
+        }
+        assert!((log.tail_loss(4) - 7.5).abs() < 1e-6);
+        assert!((log.tail_loss(100) - 4.5).abs() < 1e-6);
+    }
+}

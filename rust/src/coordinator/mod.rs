@@ -1,0 +1,24 @@
+//! L3 coordinator — the paper's training-systems layer in rust.
+//!
+//! * [`run`] — single-run state machine (LR schedule, data feeding,
+//!   checkpoints, divergence handling)
+//! * [`sweep`] — multi-run scheduler over a thread pool
+//! * [`detect`] — streaming instability detector (paper's spike rule +
+//!   divergence and grad-norm-growth tracking)
+//! * [`intervene`] — the Fig. 7 in-situ intervention engine (fmt rewrites
+//!   between steps; no recompilation)
+//! * [`metrics`] — metric capture, JSONL persistence
+
+pub mod checkpoint;
+pub mod detect;
+pub mod intervene;
+pub mod metrics;
+pub mod run;
+pub mod sweep;
+
+pub use checkpoint::CheckpointStore;
+pub use detect::{Detector, DetectorConfig, Verdict};
+pub use intervene::{Intervention, Policy, Trigger};
+pub use metrics::RunLog;
+pub use run::{LrSchedule, Optimizer, RunConfig, RunOutcome, Runner};
+pub use sweep::{Job, Sweeper};

@@ -1,0 +1,268 @@
+//! Single-run state machine: the training loop the coordinator executes
+//! for every configuration in a sweep.
+//!
+//! Owns: the model state, the per-step `fmt`/`hyper` vectors (including the
+//! LR schedule), data feeding (synthetic corpus for LM bundles, in-graph
+//! Gaussian batches for the proxy), the instability detector, checkpoint
+//! snapshots, and the intervention engine.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::detect::{Detector, DetectorConfig, Verdict};
+use super::intervene::Policy;
+use super::metrics::RunLog;
+use crate::data::Corpus;
+use crate::formats::spec::{hyper_idx, Fmt};
+use crate::runtime::{Bundle, State, StepArgs};
+
+/// Learning-rate schedule (paper Appendix D: linear warmup + cosine decay).
+#[derive(Debug, Clone, Copy)]
+pub enum LrSchedule {
+    Constant(f32),
+    /// warmup linearly from `lo` to `peak` over `warmup` steps, then cosine
+    /// back down to `lo` at `total`.
+    WarmupCosine { lo: f32, peak: f32, warmup: usize, total: usize },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f32 {
+        match *self {
+            LrSchedule::Constant(lr) => lr,
+            LrSchedule::WarmupCosine { lo, peak, warmup, total } => {
+                if step < warmup {
+                    lo + (peak - lo) * step as f32 / warmup.max(1) as f32
+                } else {
+                    let t = (step - warmup) as f32 / (total.saturating_sub(warmup)).max(1) as f32;
+                    let t = t.clamp(0.0, 1.0);
+                    lo + 0.5 * (peak - lo) * (1.0 + (std::f32::consts::PI * t).cos())
+                }
+            }
+        }
+    }
+}
+
+/// Optimizer selection (runtime scalars; see python/compile/model.py).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Optimizer {
+    Adam,
+    Sgd { momentum: f32 },
+}
+
+/// Everything one training run needs.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub name: String,
+    pub fmt: Fmt,
+    pub lr: LrSchedule,
+    pub optimizer: Optimizer,
+    pub steps: usize,
+    pub seed: i32,
+    /// Proxy: σ of the Gaussian label noise (paper: 1e-3).
+    pub label_noise: f32,
+    /// Init-scheme inputs (Fig. 11): 0 = Kaiming-uniform, 1 = Xavier-normal.
+    pub init_mode: f32,
+    pub init_gain: f32,
+    /// Log metrics every `log_every` steps (1 = every step).
+    pub log_every: usize,
+    /// Use the paired-gradient executable (Fig. 4 diagnostics).
+    pub paired: bool,
+    /// Scheduled interventions (Fig. 7).
+    pub policies: Vec<Policy>,
+    /// Stop early once the detector declares divergence (sweeps set this;
+    /// intervention studies keep running to show the divergence shape).
+    pub stop_on_divergence: bool,
+    pub detector: DetectorConfig,
+}
+
+impl RunConfig {
+    pub fn new(name: &str, fmt: Fmt, lr: f32, steps: usize) -> RunConfig {
+        RunConfig {
+            name: name.to_string(),
+            fmt,
+            lr: LrSchedule::Constant(lr),
+            optimizer: Optimizer::Adam,
+            steps,
+            seed: 0,
+            label_noise: 1e-3,
+            init_mode: 0.0,
+            init_gain: 1.0,
+            log_every: 1,
+            paired: false,
+            policies: vec![],
+            stop_on_divergence: false,
+            detector: DetectorConfig::default(),
+        }
+    }
+
+    fn hyper(&self, step: usize) -> Vec<f32> {
+        let mut h = vec![0.0f32; hyper_idx::HYPER_LEN];
+        h[hyper_idx::LR] = self.lr.at(step);
+        match self.optimizer {
+            Optimizer::Adam => {}
+            Optimizer::Sgd { momentum } => {
+                h[hyper_idx::OPT_MODE] = 1.0;
+                h[hyper_idx::MOMENTUM] = momentum;
+            }
+        }
+        h[hyper_idx::LABEL_NOISE] = self.label_noise;
+        h
+    }
+}
+
+/// Outcome of [`Runner::run`]: the metric log plus the final model state
+/// (kept so callers can eval / continue / snapshot).
+pub struct RunOutcome {
+    pub log: RunLog,
+    pub final_state: Option<State>,
+}
+
+/// Executes one training run over a loaded bundle.
+pub struct Runner {
+    pub bundle: Arc<Bundle>,
+    pub corpus: Option<Arc<Corpus>>,
+}
+
+impl Runner {
+    pub fn new(bundle: Arc<Bundle>, corpus: Option<Arc<Corpus>>) -> Runner {
+        Runner { bundle, corpus }
+    }
+
+    /// Train from scratch according to `cfg`.
+    pub fn run(&self, cfg: &RunConfig) -> Result<RunOutcome> {
+        let state = self.bundle.init(cfg.seed, cfg.init_mode, cfg.init_gain)?;
+        self.run_from(cfg, state, 0)
+    }
+
+    /// Continue from an existing state at `start_step` (used by the
+    /// intervention experiments to branch a run mid-training).
+    pub fn run_from(
+        &self,
+        cfg: &RunConfig,
+        mut state: State,
+        start_step: usize,
+    ) -> Result<RunOutcome> {
+        let mut log = RunLog::new(&cfg.name);
+        log.meta = vec![
+            ("bundle".into(), self.bundle.name().to_string()),
+            ("fmt".into(), cfg.fmt.label()),
+            ("steps".into(), cfg.steps.to_string()),
+            ("seed".into(), cfg.seed.to_string()),
+        ];
+        let mut detector = Detector::new(cfg.detector.clone());
+        let mut fmt = cfg.fmt;
+        let mut pending: Vec<Policy> = cfg.policies.clone();
+        let t0 = Instant::now();
+
+        let tokens_shape = self.bundle.tokens_shape();
+        for step in start_step..cfg.steps {
+            // Interventions fire *before* the step, matching the paper's
+            // "intervene at step s" semantics.
+            let growth = detector.grad_growth();
+            pending.retain(|p| {
+                if p.fires(step, growth) {
+                    fmt = p.intervention.apply(fmt);
+                    log.interventions.push((step, p.intervention.name().to_string()));
+                    false
+                } else {
+                    true
+                }
+            });
+
+            let tokens = match (&self.corpus, tokens_shape) {
+                (Some(c), Some((b, l))) => Some(c.batch(cfg.seed as u64, step as u64, b, l)),
+                (None, Some(_)) => anyhow::bail!("LM bundle requires a corpus"),
+                _ => None,
+            };
+            let args = StepArgs {
+                tokens,
+                fmt: fmt.to_vec(),
+                hyper: cfg.hyper(step),
+                seed: cfg.seed,
+                step: step as i32,
+            };
+            let (next, met) = if cfg.paired && self.bundle.has_paired() {
+                self.bundle.paired_step(state, &args)?
+            } else {
+                self.bundle.step(state, &args)?
+            };
+            state = next;
+
+            let verdict = detector.push(met.loss as f64, met.grad_norm as f64);
+            if step % cfg.log_every == 0 || verdict != Verdict::Healthy {
+                log.push(step, met);
+            }
+            if verdict == Verdict::Diverged && cfg.stop_on_divergence {
+                break;
+            }
+            // Hard stop on NaN state — no point burning cycles.
+            if !met.loss.is_finite() && cfg.stop_on_divergence {
+                break;
+            }
+        }
+
+        log.spikes = detector.spikes;
+        log.diverged_at = detector.diverged_at;
+        log.wallclock_s = t0.elapsed().as_secs_f64();
+        Ok(RunOutcome { log, final_state: Some(state) })
+    }
+
+    /// Train `steps`, snapshot the state at `snapshot_step`, return both the
+    /// baseline log and the snapshot (intervention experiments branch from
+    /// it). The baseline continues to `cfg.steps` as usual.
+    pub fn run_with_snapshot(
+        &self,
+        cfg: &RunConfig,
+        snapshot_step: usize,
+    ) -> Result<(RunOutcome, State)> {
+        let mut state = self.bundle.init(cfg.seed, cfg.init_mode, cfg.init_gain)?;
+        // Advance to the snapshot point.
+        let mut pre = cfg.clone();
+        pre.steps = snapshot_step;
+        pre.name = format!("{}@pre", cfg.name);
+        let out = self.run_from(&pre, state, 0)?;
+        state = out.final_state.unwrap();
+        let snapshot = state.clone_state()?;
+        // Continue the baseline to the end.
+        let mut post = cfg.clone();
+        post.name = cfg.name.clone();
+        let mut full = self.run_from(&post, state, snapshot_step)?;
+        // Merge logs: pre + post.
+        let mut rows = out.log.rows;
+        rows.extend(full.log.rows.iter().copied());
+        full.log.rows = rows;
+        full.log.spikes += out.log.spikes;
+        full.log.diverged_at = out.log.diverged_at.or(full.log.diverged_at);
+        Ok((full, snapshot))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shapes() {
+        let s = LrSchedule::WarmupCosine { lo: 2e-5, peak: 2e-4, warmup: 100, total: 1000 };
+        assert!((s.at(0) - 2e-5).abs() < 1e-9);
+        assert!((s.at(100) - 2e-4).abs() < 1e-9);
+        assert!(s.at(50) > 2e-5 && s.at(50) < 2e-4);
+        assert!((s.at(1000) - 2e-5).abs() < 1e-6);
+        assert!(s.at(550) < 2e-4 && s.at(550) > 2e-5);
+        let c = LrSchedule::Constant(1e-3);
+        assert_eq!(c.at(0), c.at(999));
+    }
+
+    #[test]
+    fn hyper_vector_encoding() {
+        let mut cfg = RunConfig::new("t", Fmt::fp32(), 1e-3, 10);
+        cfg.optimizer = Optimizer::Sgd { momentum: 0.9 };
+        let h = cfg.hyper(0);
+        assert_eq!(h[hyper_idx::OPT_MODE], 1.0);
+        assert_eq!(h[hyper_idx::MOMENTUM], 0.9);
+        assert_eq!(h[hyper_idx::LR], 1e-3);
+        assert_eq!(h[hyper_idx::LABEL_NOISE], 1e-3);
+    }
+}

@@ -1,0 +1,154 @@
+//! Sweep scheduler: runs many training configurations across a thread pool.
+//!
+//! The PJRT CPU client parallelizes *within* a step (intra-op thread pool),
+//! so the scheduler defaults to a small number of concurrent runs and
+//! relies on XLA for core saturation; `MXSTAB_JOBS` overrides.
+//!
+//! Executables are compiled once per bundle and shared (`Arc<Bundle>`);
+//! states are per-run. Results stream into a `Vec<RunLog>` in submission
+//! order regardless of completion order.
+
+use std::collections::BTreeMap;
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::metrics::RunLog;
+use super::run::{RunConfig, Runner};
+use crate::data::{Corpus, CorpusConfig};
+use crate::runtime::{Bundle, Session};
+
+/// One sweep item: which bundle to train and how.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub bundle: String,
+    pub cfg: RunConfig,
+}
+
+/// Shared bundle/corpus registry + scheduler.
+pub struct Sweeper {
+    session: Arc<Session>,
+    artifacts: std::path::PathBuf,
+    bundles: Mutex<BTreeMap<String, Arc<Bundle>>>,
+    corpus: Mutex<BTreeMap<usize, Arc<Corpus>>>,
+    pub jobs_parallel: usize,
+}
+
+impl Sweeper {
+    pub fn new(session: Arc<Session>, artifacts: &std::path::Path) -> Sweeper {
+        let jobs = std::env::var("MXSTAB_JOBS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(2)
+            .max(1);
+        Sweeper {
+            session,
+            artifacts: artifacts.to_path_buf(),
+            bundles: Mutex::new(BTreeMap::new()),
+            corpus: Mutex::new(BTreeMap::new()),
+            jobs_parallel: jobs,
+        }
+    }
+
+    pub fn bundle(&self, name: &str) -> Result<Arc<Bundle>> {
+        if let Some(b) = self.bundles.lock().unwrap().get(name) {
+            return Ok(b.clone());
+        }
+        let dir = self.artifacts.join(name);
+        let b = Arc::new(
+            Bundle::load(self.session.clone(), &dir)
+                .with_context(|| format!("loading bundle {name}"))?,
+        );
+        self.bundles.lock().unwrap().insert(name.to_string(), b.clone());
+        Ok(b)
+    }
+
+    /// Corpus keyed by vocab size (deterministic; shared across runs).
+    pub fn corpus(&self, vocab: usize) -> Arc<Corpus> {
+        self.corpus
+            .lock()
+            .unwrap()
+            .entry(vocab)
+            .or_insert_with(|| {
+                Arc::new(Corpus::new(CorpusConfig { vocab, ..Default::default() }))
+            })
+            .clone()
+    }
+
+    pub fn runner(&self, bundle_name: &str) -> Result<Runner> {
+        let bundle = self.bundle(bundle_name)?;
+        let corpus = match bundle.tokens_shape() {
+            Some(_) => {
+                let vocab = bundle
+                    .manifest
+                    .cfg_num("vocab")
+                    .ok_or_else(|| anyhow!("LM bundle without vocab in manifest"))?
+                    as usize;
+                Some(self.corpus(vocab))
+            }
+            None => None,
+        };
+        Ok(Runner::new(bundle, corpus))
+    }
+
+    /// Run all jobs; returns logs in submission order. Failures become
+    /// error-marked logs rather than poisoning the sweep.
+    pub fn run_all(&self, jobs: &[Job], quiet: bool) -> Vec<RunLog> {
+        let n = jobs.len();
+        let (tx, rx) = mpsc::channel::<(usize, Result<RunLog>)>();
+        let next = std::sync::atomic::AtomicUsize::new(0);
+
+        std::thread::scope(|scope| {
+            for _ in 0..self.jobs_parallel.min(n.max(1)) {
+                let tx = tx.clone();
+                let next = &next;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                    if i >= n {
+                        break;
+                    }
+                    let job = &jobs[i];
+                    let res = self
+                        .runner(&job.bundle)
+                        .and_then(|r| r.run(&job.cfg))
+                        .map(|o| o.log);
+                    let _ = tx.send((i, res));
+                });
+            }
+            drop(tx);
+            let mut out: Vec<Option<RunLog>> = (0..n).map(|_| None).collect();
+            for (i, res) in rx {
+                let log = match res {
+                    Ok(log) => {
+                        if !quiet {
+                            eprintln!(
+                                "[sweep {}/{}] {}: final={:.4} spikes={} {}",
+                                i + 1,
+                                n,
+                                log.name,
+                                log.final_loss(),
+                                log.spikes,
+                                if log.diverged() { "DIVERGED" } else { "" }
+                            );
+                        }
+                        log
+                    }
+                    Err(e) => {
+                        eprintln!("[sweep {}/{}] {} FAILED: {e:#}", i + 1, n, jobs[i].cfg.name);
+                        let mut l = RunLog::new(&jobs[i].cfg.name);
+                        l.meta.push(("error".into(), format!("{e:#}")));
+                        l
+                    }
+                };
+                out[i] = Some(log);
+            }
+            out.into_iter().map(|o| o.unwrap()).collect()
+        })
+    }
+}
+
+impl RunLog {
+    pub fn diverged(&self) -> bool {
+        self.diverged_at.is_some()
+    }
+}

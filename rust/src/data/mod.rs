@@ -1,0 +1,10 @@
+//! Synthetic data substrates.
+//!
+//! The paper trains on Fineweb-Edu; this repo substitutes a synthetic
+//! Zipf–Markov corpus (see DESIGN.md §3) generated deterministically in
+//! rust, so the LM experiments have a learnable, heavy-tailed token stream
+//! with nontrivial bigram structure and no external data dependency.
+
+pub mod corpus;
+
+pub use corpus::{Corpus, CorpusConfig};

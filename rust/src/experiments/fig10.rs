@@ -1,0 +1,57 @@
+//! Fig. 10 — optimizer ablation: SGD vs SGD+momentum (vs Adam) at the
+//! exaggerated learning rate η = 1e-2, FP32 vs MXFP8-mix.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::coordinator::{Job, Optimizer, RunConfig};
+use crate::util::table::Table;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let steps = ctx.cfg.steps(200);
+    let opts = [
+        ("sgd", Optimizer::Sgd { momentum: 0.0 }),
+        ("sgd-m0.9", Optimizer::Sgd { momentum: 0.9 }),
+        ("adam", Optimizer::Adam),
+    ];
+    // Adam at 1e-2 is uninformative (explodes everywhere); the paper uses
+    // 1e-2 for the SGD variants — Adam keeps its 5e-4 band for reference.
+    let lr_for = |o: &Optimizer| match o {
+        Optimizer::Adam => 5e-4f32,
+        _ => 1e-2,
+    };
+    let formats = [("fp32", crate::formats::spec::Fmt::fp32()), ("mx", crate::formats::spec::Fmt::mx_mix())];
+
+    let mut jobs = vec![];
+    for (olabel, opt) in &opts {
+        for (flabel, fmt) in &formats {
+            let name = format!("{olabel}_{flabel}");
+            let mut cfg = RunConfig::new(&name, *fmt, lr_for(opt), steps);
+            cfg.optimizer = *opt;
+            cfg.log_every = 1;
+            jobs.push(Job { bundle: "proxy_gelu_ln_L4_D256".into(), cfg });
+        }
+    }
+    let logs = ctx.sweep("fig10", jobs)?;
+
+    let mut rep = ctx.report("fig10")?;
+    rep.heading("Optimizer ablation (paper Fig. 10)");
+    let refs: Vec<_> = logs.iter().collect();
+    rep.loss_plot("loss", "SGD / SGD+momentum (η=1e-2), Adam (η=5e-4)", &refs)?;
+    let mut t = Table::new(&["run", "final", "spikes", "diverged@"]);
+    for l in &logs {
+        t.row(vec![
+            l.name.clone(),
+            format!("{:.5}", l.tail_loss(10)),
+            l.spikes.to_string(),
+            l.diverged_at.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    rep.table("summary", &t)?;
+    rep.para(
+        "Paper shape: SGD variants tolerate low precision better than Adam \
+         (second-moment accumulation amplifies quantization bias).",
+    );
+    rep.finish()?;
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Figs. 16/17 — the unstable fully-quantized weight/activation format
+//! combinations in the LM setting (MXFP8 and MXFP6-weight combos).
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::coordinator::{Job, LrSchedule, RunConfig};
+use crate::formats::spec::{Fmt, FormatId};
+use crate::util::table::Table;
+
+pub fn combos() -> Vec<(&'static str, Fmt)> {
+    use FormatId::*;
+    vec![
+        ("e4m3-e4m3", Fmt::full(E4M3, E4M3)),
+        ("e4m3-e5m2", Fmt::full(E4M3, E5M2)),
+        ("e5m2-e4m3", Fmt::full(E5M2, E4M3)),
+        ("e5m2-e5m2", Fmt::full(E5M2, E5M2)),
+        ("e2m3-e4m3", Fmt::full(E2M3, E4M3)),
+        ("e2m3-e2m3", Fmt::full(E2M3, E2M3)),
+        ("e3m2-e4m3", Fmt::full(E3M2, E4M3)),
+        ("e3m2-e3m2", Fmt::full(E3M2, E3M2)),
+    ]
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let steps = ctx.cfg.steps(120);
+    let rungs = super::fig1::ladder(ctx);
+    // Two largest rungs — the paper sees instabilities mainly in larger,
+    // longer-trained models.
+    let rungs: Vec<_> = rungs.into_iter().rev().take(1).collect();
+    anyhow::ensure!(!rungs.is_empty(), "no lm bundles");
+
+    let mut jobs = vec![];
+    for bundle in &rungs {
+        for (label, fmt) in combos() {
+            let name = format!("{bundle}_{label}");
+            let mut cfg = RunConfig::new(&name, fmt, 0.0, steps);
+            cfg.lr = LrSchedule::WarmupCosine {
+                lo: 2e-5,
+                peak: 1.5e-3, // hotter peak — the instability-prone band
+                warmup: steps / 10,
+                total: steps,
+            };
+            cfg.log_every = 2;
+            jobs.push(Job { bundle: bundle.clone(), cfg });
+        }
+    }
+    let logs = ctx.sweep("fig16", jobs)?;
+
+    let mut rep = ctx.report("fig16")?;
+    rep.heading("Unstable fully-quantized LM format combos (paper Figs. 16/17)");
+    for bundle in &rungs {
+        let subset: Vec<_> = logs.iter().filter(|l| l.name.starts_with(bundle.as_str())).collect();
+        rep.loss_plot(&format!("loss_{bundle}"), bundle, &subset)?;
+        rep.gradnorm_plot(&format!("gradnorm_{bundle}"), bundle, &subset)?;
+    }
+    let mut t = Table::new(&["run", "final", "spikes", "diverged@"]);
+    let mut unstable = 0;
+    for l in &logs {
+        if l.spikes > 0 || l.diverged() {
+            unstable += 1;
+        }
+        t.row(vec![
+            l.name.clone(),
+            format!("{:.4}", l.tail_loss(10)),
+            l.spikes.to_string(),
+            l.diverged_at.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    rep.table("summary", &t)?;
+    rep.para(&format!(
+        "{unstable}/{} fully-quantized combos show spikes or divergence. \
+         Paper shape: no stable fully-quantized weight/activation combo \
+         was found across MXFP8/MXFP6.",
+        logs.len()
+    ));
+    rep.finish()?;
+    Ok(())
+}

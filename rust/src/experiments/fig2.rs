@@ -1,0 +1,73 @@
+//! Fig. 2 — proxy LR sweep: FP32 vs MXFP8-mix vs MXFP6 across depths and
+//! widths. One panel (SVG) per learning rate; series per (size, format).
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::coordinator::{Job, RunConfig};
+use crate::formats::spec::{Fmt, FormatId};
+use crate::util::table::Table;
+
+pub const LRS: [f64; 5] = [1e-5, 5e-5, 1e-4, 5e-4, 1e-3];
+
+/// (depth, width) sizes; must exist as proxy bundles (bundles.py grid).
+pub const SIZES: [(usize, usize); 2] = [(2, 128), (3, 256)];
+
+pub fn formats() -> Vec<(&'static str, Fmt)> {
+    vec![
+        ("fp32", Fmt::fp32()),
+        // Paper's MX-mix: E4M3 forward / E5M2 backward.
+        ("mxfp8-mix", Fmt::mx_mix()),
+        // MXFP6 (E3M2 both passes — the FP6 variant with E4M3-like range).
+        ("mxfp6", Fmt::full(FormatId::E3M2, FormatId::E3M2)),
+    ]
+}
+
+pub fn bundle_name(depth: usize, width: usize) -> String {
+    format!("proxy_gelu_ln_L{depth}_D{width}")
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let steps = ctx.cfg.steps(150);
+    let mut jobs = vec![];
+    for &lr in &LRS {
+        for &(depth, width) in &SIZES {
+            for (flabel, fmt) in formats() {
+                let name = format!("L{depth}D{width}_{flabel}_lr{lr:.0e}");
+                let mut cfg = RunConfig::new(&name, fmt, lr as f32, steps);
+                cfg.log_every = 2;
+                jobs.push(Job { bundle: bundle_name(depth, width), cfg });
+            }
+        }
+    }
+    let logs = ctx.sweep("fig2", jobs)?;
+
+    let mut rep = ctx.report("fig2")?;
+    rep.heading("Proxy LR sweep (paper Fig. 2)");
+    for &lr in &LRS {
+        let tag = format!("lr{lr:.0e}");
+        let subset: Vec<_> = logs.iter().filter(|l| l.name.ends_with(&tag)).collect();
+        rep.loss_plot(&format!("loss_{tag}"), &format!("η = {lr:e}"), &subset)?;
+    }
+
+    // Instability census per (lr, format) — the paper's qualitative claim:
+    // low lrs stable everywhere; at 5e-4 low precision shows more unstable
+    // runs than FP32; at 1e-3 everything can go.
+    let mut t = Table::new(&["lr", "format", "unstable runs", "of"]);
+    for &lr in &LRS {
+        for (flabel, _) in formats() {
+            let tag = format!("_{flabel}_lr{lr:.0e}");
+            let group: Vec<_> = logs.iter().filter(|l| l.name.contains(&tag)).collect();
+            let unstable = group.iter().filter(|l| l.spikes > 0 || l.diverged()).count();
+            t.row(vec![
+                format!("{lr:e}"),
+                flabel.to_string(),
+                unstable.to_string(),
+                group.len().to_string(),
+            ]);
+        }
+    }
+    rep.table("instability_census", &t)?;
+    rep.finish()?;
+    Ok(())
+}

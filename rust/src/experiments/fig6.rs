@@ -1,0 +1,59 @@
+//! Fig. 6 — mitigation sweep on the proxy: fully-quantized MXFP8 E4M3
+//! baseline vs (1) forward-only quantization, (2) bf16 activations + LN,
+//! vs the FP32 skyline, across model sizes.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::coordinator::{Job, RunConfig};
+use crate::formats::spec::{Fmt, FormatId};
+use crate::util::table::Table;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let steps = ctx.cfg.steps(250);
+    let sizes = super::fig2::SIZES;
+    let schemes = [
+        ("e4m3-full", Fmt::full(FormatId::E4M3, FormatId::E4M3)),
+        ("e4m3-fwd-only", Fmt::fwd_only(FormatId::E4M3, FormatId::E4M3)),
+        ("e4m3-bf16act", Fmt::bf16_act(FormatId::E4M3)),
+        ("fp32", Fmt::fp32()),
+    ];
+
+    let mut jobs = vec![];
+    for &(depth, width) in &sizes {
+        for (label, fmt) in &schemes {
+            // η = 6e-4: the band where the baseline shows instabilities.
+            let name = format!("L{depth}D{width}_{label}");
+            let mut cfg = RunConfig::new(&name, *fmt, 6e-4, steps);
+            cfg.log_every = 2;
+            jobs.push(Job { bundle: super::fig2::bundle_name(depth, width), cfg });
+        }
+    }
+    let logs = ctx.sweep("fig6", jobs)?;
+
+    let mut rep = ctx.report("fig6")?;
+    rep.heading("Mitigations vs fully-quantized baseline (paper Fig. 6)");
+    for (label, _) in &schemes {
+        let subset: Vec<_> = logs.iter().filter(|l| l.name.ends_with(label)).collect();
+        rep.loss_plot(&format!("loss_{label}"), label, &subset)?;
+    }
+
+    let mut t = Table::new(&["scheme", "divergent runs", "spiky runs", "of"]);
+    for (label, _) in &schemes {
+        let group: Vec<_> = logs.iter().filter(|l| l.name.ends_with(label)).collect();
+        t.row(vec![
+            label.to_string(),
+            group.iter().filter(|l| l.diverged()).count().to_string(),
+            group.iter().filter(|l| l.spikes > 0).count().to_string(),
+            group.len().to_string(),
+        ]);
+    }
+    rep.table("divergence_census", &t)?;
+    rep.para(
+        "Paper shape: both mitigations cut divergent runs sharply vs the \
+         fully-quantized baseline (6 → 2 in the paper's sweep), approaching \
+         the FP32 skyline.",
+    );
+    rep.finish()?;
+    Ok(())
+}

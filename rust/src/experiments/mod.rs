@@ -1,0 +1,132 @@
+//! Experiment drivers — one per paper table/figure (see DESIGN.md §5).
+//!
+//! Every driver regenerates its artifact (CSV + SVG + markdown) under
+//! `reports/<id>/` from runs executed by the L3 coordinator. Completed runs
+//! are cached as JSONL under `runs/<id>/` and reloaded on re-invocation
+//! (`--force` reruns).
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig9;
+pub mod fig10;
+pub mod fig11;
+pub mod fig16;
+pub mod scaling;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::config::Config;
+use crate::coordinator::{Job, RunConfig, RunLog, Sweeper};
+use crate::report::Report;
+use crate::runtime::Session;
+
+pub struct Ctx {
+    pub cfg: Config,
+    pub sweeper: Sweeper,
+    pub force: bool,
+}
+
+impl Ctx {
+    pub fn new(cfg: Config, session: Arc<Session>, force: bool) -> Ctx {
+        let sweeper = Sweeper::new(session, &cfg.artifacts);
+        Ctx { cfg, sweeper, force }
+    }
+
+    pub fn report(&self, id: &str) -> Result<Report> {
+        Report::new(&self.cfg.reports, id)
+    }
+
+    fn cache_dir(&self, exp: &str) -> PathBuf {
+        self.cfg.runs.join(exp)
+    }
+
+    /// Run jobs with a JSONL cache per run name.
+    pub fn sweep(&self, exp: &str, jobs: Vec<Job>) -> Result<Vec<RunLog>> {
+        let dir = self.cache_dir(exp);
+        std::fs::create_dir_all(&dir)?;
+        let mut cached: Vec<Option<RunLog>> = Vec::with_capacity(jobs.len());
+        let mut todo: Vec<Job> = vec![];
+        for j in &jobs {
+            let hit = if self.force {
+                None
+            } else {
+                RunLog::load(&dir, &j.cfg.name).ok().filter(|l| !l.rows.is_empty())
+            };
+            if hit.is_none() {
+                todo.push(j.clone());
+            }
+            cached.push(hit);
+        }
+        if !todo.is_empty() {
+            eprintln!(
+                "[{}] running {} jobs ({} cached)",
+                exp,
+                todo.len(),
+                jobs.len() - todo.len()
+            );
+            let fresh = self.sweeper.run_all(&todo, self.cfg.quiet);
+            for log in fresh {
+                log.save(&dir)?;
+                let slot = cached
+                    .iter_mut()
+                    .zip(&jobs)
+                    .find(|(c, j)| c.is_none() && j.cfg.name == log.name);
+                if let Some((slot, _)) = slot {
+                    *slot = Some(log);
+                }
+            }
+        }
+        Ok(cached.into_iter().map(|c| c.unwrap()).collect())
+    }
+
+    /// Single cached run (outside the scheduler — used by drivers that need
+    /// the final state, e.g. fig7 snapshots).
+    pub fn single(&self, exp: &str, bundle: &str, cfg: &RunConfig) -> Result<RunLog> {
+        let mut logs = self.sweep(
+            exp,
+            vec![Job { bundle: bundle.to_string(), cfg: cfg.clone() }],
+        )?;
+        Ok(logs.remove(0))
+    }
+}
+
+/// All known experiment ids in run order.
+pub const ALL: &[&str] = &[
+    // Core-claim experiments first so partial sweeps still cover the
+    // paper's headline results.
+    "fig4", "fig5", "fig7", "scaling", "fig1", "fig2", "fig6", "fig9",
+    "fig3", "fig10", "fig11", "fig16",
+];
+
+pub fn run(ctx: &Ctx, id: &str) -> Result<()> {
+    match id {
+        "fig1" => fig1::run(ctx),
+        "fig2" => fig2::run(ctx),
+        "fig3" => fig3::run(ctx),
+        "fig4" => fig4::run(ctx),
+        "fig5" => fig5::run(ctx),
+        "fig6" => fig6::run(ctx),
+        "fig7" => fig7::run(ctx),
+        "fig9" => fig9::run(ctx),
+        "fig10" => fig10::run(ctx),
+        "fig11" => fig11::run(ctx),
+        "fig16" | "fig17" => fig16::run(ctx),
+        "scaling" | "fig8" | "fig12" | "fig13" | "tab1" | "tab2" | "tab45" => scaling::run(ctx),
+        "all" => {
+            for e in ALL {
+                eprintln!("=== experiment {e} ===");
+                run(ctx, e)?;
+            }
+            Ok(())
+        }
+        _ => bail!("unknown experiment {id:?}; known: {ALL:?} or 'all'"),
+    }
+}

@@ -1,0 +1,290 @@
+//! Scaling-law experiments: Figs. 8/12/13, Tables 1/2/4/5, Figs. 14/15.
+//!
+//! Per (LM rung, precision scheme): one training run with the paper's
+//! warmup+cosine schedule; validation loss evaluated at geometric
+//! checkpoints along training. Each checkpoint contributes a
+//! (N = params, D = tokens seen, val loss) point — the paper's D/N-ratio
+//! columns. Chinchilla L(N,D) fits per scheme reproduce Table 2; deltas vs
+//! the bf16 baseline reproduce Tables 1/4/5; the loss curves are Figs. 14/15
+//! and the fit plots Figs. 8/12/13.
+
+use anyhow::{Context, Result};
+
+use super::Ctx;
+use crate::analysis::{fit_chinchilla, ChinchillaFit, LossPoint};
+use crate::coordinator::{LrSchedule, RunConfig, RunLog};
+use crate::formats::spec::{Fmt, FormatId};
+use crate::util::json::Json;
+use crate::util::svg::{Plot, Series, PALETTE};
+use crate::util::table::{fnum, Table};
+
+pub fn schemes() -> Vec<(&'static str, Fmt)> {
+    use FormatId::*;
+    vec![
+        ("bf16-bf16", Fmt::full(Bf16, Bf16)),
+        ("e4m3-bf16", Fmt::bf16_act(E4M3)),
+        ("e5m2-bf16", Fmt::bf16_act(E5M2)),
+        ("e4m3-e4m3-fwd", Fmt::fwd_only(E4M3, E4M3)),
+        ("e5m2-e5m2-fwd", Fmt::fwd_only(E5M2, E5M2)),
+        ("e2m3-bf16", Fmt::bf16_act(E2M3)),
+    ]
+}
+
+/// Validation-loss point with metadata.
+#[derive(Debug, Clone, Copy)]
+pub struct ValPoint {
+    pub n_params: f64,
+    pub tokens: f64,
+    pub val_loss: f64,
+    pub step: usize,
+}
+
+/// Train one (bundle, scheme) run, eval at checkpoints. Cached as JSON.
+fn run_with_evals(
+    ctx: &Ctx,
+    bundle_name: &str,
+    scheme: &str,
+    fmt: Fmt,
+    steps: usize,
+    checkpoints: &[usize],
+) -> Result<(Vec<ValPoint>, RunLog)> {
+    let dir = ctx.cfg.runs.join("scaling");
+    std::fs::create_dir_all(&dir)?;
+    let run_name = format!("{bundle_name}_{scheme}");
+    let points_path = dir.join(format!("{run_name}.points.json"));
+
+    if !ctx.force && points_path.exists() {
+        if let (Ok(log), Ok(text)) = (
+            RunLog::load(&dir, &run_name),
+            std::fs::read_to_string(&points_path),
+        ) {
+            let j = Json::parse(&text)?;
+            let pts = j
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|p| ValPoint {
+                    n_params: p.get("n").and_then(Json::as_f64).unwrap_or(0.0),
+                    tokens: p.get("d").and_then(Json::as_f64).unwrap_or(0.0),
+                    val_loss: p.get("loss").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                    step: p.get("step").and_then(Json::as_usize).unwrap_or(0),
+                })
+                .collect();
+            return Ok((pts, log));
+        }
+    }
+
+    let runner = ctx.sweeper.runner(bundle_name)?;
+    let bundle = &runner.bundle;
+    let n_params = bundle.manifest.n_params as f64;
+    let (batch, len) = bundle.tokens_shape().context("LM bundle expected")?;
+    let tokens_per_step = (batch * (len - 1)) as f64;
+    let corpus = runner.corpus.clone().context("corpus")?;
+
+    let mut cfg = RunConfig::new(&run_name, fmt, 0.0, steps);
+    cfg.lr = LrSchedule::WarmupCosine { lo: 2e-5, peak: 6e-4, warmup: steps / 20, total: steps };
+    cfg.log_every = 4;
+
+    // Train in segments, eval at each checkpoint on held-out batches.
+    let mut state = bundle.init(cfg.seed, cfg.init_mode, cfg.init_gain)?;
+    let mut log = RunLog::new(&run_name);
+    let mut points = vec![];
+    let mut at = 0usize;
+    let eval_fmt = fmt.to_vec();
+    for &ck in checkpoints {
+        let mut seg = cfg.clone();
+        seg.steps = ck;
+        let out = runner.run_from(&seg, state, at)?;
+        state = out.final_state.unwrap();
+        log.rows.extend(out.log.rows);
+        log.spikes += out.log.spikes;
+        log.diverged_at = log.diverged_at.or(out.log.diverged_at.map(|_| at + 1));
+        at = ck;
+        // Held-out eval: 8 batches from a disjoint seed stream.
+        let mut acc = 0.0;
+        const EVAL_BATCHES: usize = 8;
+        for b in 0..EVAL_BATCHES {
+            let toks = corpus.batch(u64::MAX - 7, b as u64, batch, len);
+            acc += bundle.eval(&state, &toks, &eval_fmt)? as f64;
+        }
+        points.push(ValPoint {
+            n_params,
+            tokens: ck as f64 * tokens_per_step,
+            val_loss: acc / EVAL_BATCHES as f64,
+            step: ck,
+        });
+    }
+
+    log.save(&dir)?;
+    let j = Json::Arr(
+        points
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("n", Json::from(p.n_params)),
+                    ("d", Json::from(p.tokens)),
+                    ("loss", Json::from(p.val_loss)),
+                    ("step", Json::from(p.step)),
+                ])
+            })
+            .collect(),
+    );
+    std::fs::write(&points_path, j.to_string())?;
+    Ok((points, log))
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let rungs = super::fig1::ladder(ctx);
+    anyhow::ensure!(!rungs.is_empty(), "no lm_* bundles");
+    let steps = ctx.cfg.steps(320);
+    // Geometric checkpoints: D varies 8× within one run.
+    let checkpoints: Vec<usize> =
+        [8, 4, 2, 1].iter().map(|d| (steps / d).max(1)).collect();
+
+    let mut all: Vec<(String, String, Vec<ValPoint>, RunLog)> = vec![];
+    for bundle in &rungs {
+        for (scheme, fmt) in schemes() {
+            eprintln!("[scaling] {bundle} / {scheme}");
+            let (pts, log) = run_with_evals(ctx, bundle, scheme, fmt, steps, &checkpoints)?;
+            all.push((bundle.clone(), scheme.to_string(), pts, log));
+        }
+    }
+
+    let mut rep = ctx.report("scaling")?;
+
+    // ---- Figs. 14/15: loss curves per scheme ----
+    rep.heading("Loss curves under mitigations (paper Figs. 14/15)");
+    for (scheme, _) in schemes() {
+        let logs: Vec<&RunLog> = all
+            .iter()
+            .filter(|(_, s, _, _)| s == scheme)
+            .map(|(_, _, _, l)| l)
+            .collect();
+        rep.loss_plot(&format!("loss_{scheme}"), scheme, &logs)?;
+    }
+
+    // ---- Table 2: Chinchilla fits per scheme ----
+    rep.heading("Chinchilla fits (paper Table 2, Figs. 8/12/13)");
+    let mut fits: Vec<(String, ChinchillaFit, Vec<LossPoint>)> = vec![];
+    let mut t2 = Table::new(&["scheme", "A", "B", "E", "alpha", "beta", "a=β/(α+β)", "R²"]);
+    for (scheme, _) in schemes() {
+        let pts: Vec<LossPoint> = all
+            .iter()
+            .filter(|(_, s, _, _)| s == scheme)
+            .flat_map(|(_, _, pts, _)| pts.iter())
+            .filter(|p| p.val_loss.is_finite())
+            .map(|p| LossPoint { n_params: p.n_params, tokens: p.tokens, loss: p.val_loss })
+            .collect();
+        if pts.len() < 5 {
+            continue;
+        }
+        let fit = fit_chinchilla(&pts);
+        t2.row(vec![
+            scheme.to_string(),
+            format!("{:.2e}", fit.a_coef),
+            format!("{:.2e}", fit.b_coef),
+            fnum(fit.e_const, 3),
+            fnum(fit.alpha, 3),
+            fnum(fit.beta, 3),
+            fnum(fit.opt_exponent, 3),
+            fnum(fit.r2(&pts), 4),
+        ]);
+        fits.push((scheme.to_string(), fit, pts));
+    }
+    rep.table("tab2_fits", &t2)?;
+
+    // ---- Figs. 8/12/13: fit curves (loss vs D, one series per N) ----
+    for (scheme, fit, pts) in &fits {
+        let mut p = Plot::new(
+            &format!("scaling fit — {scheme}"),
+            "tokens D",
+            "val loss",
+        )
+        .logx()
+        .logy();
+        let mut ns: Vec<f64> = pts.iter().map(|p| p.n_params).collect();
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ns.dedup();
+        for (i, &n) in ns.iter().enumerate() {
+            let mut obs: Vec<(f64, f64)> = pts
+                .iter()
+                .filter(|p| p.n_params == n)
+                .map(|p| (p.tokens, p.loss))
+                .collect();
+            obs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let (xs, ys): (Vec<f64>, Vec<f64>) = obs.into_iter().unzip();
+            let fitted: Vec<f64> = xs.iter().map(|&d| fit.predict(n, d)).collect();
+            let c = PALETTE[i % PALETTE.len()];
+            p.add(Series::line(&format!("N={:.2}M", n / 1e6), xs.clone(), ys, c).with_points());
+            p.add(Series::line(&format!("fit N={:.2}M", n / 1e6), xs, fitted, c).dashed());
+        }
+        rep.plot(&format!("fit_{scheme}"), &p)?;
+    }
+
+    // ---- Tables 1/4/5: val-loss deltas vs bf16 ----
+    rep.heading("Validation-loss deltas vs bf16 (paper Tables 1/4/5)");
+    let header: Vec<String> = std::iter::once("D/N @ rung".to_string())
+        .chain(schemes().iter().map(|(s, _)| s.to_string()))
+        .collect();
+    let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = Table::new(&header_refs);
+    for bundle in &rungs {
+        for &ck in &checkpoints {
+            let base = all
+                .iter()
+                .find(|(b, s, _, _)| b == bundle && s == "bf16-bf16")
+                .and_then(|(_, _, pts, _)| pts.iter().find(|p| p.step == ck))
+                .map(|p| p.val_loss);
+            let Some(base) = base else { continue };
+            let dn = all
+                .iter()
+                .find(|(b, s, _, _)| b == bundle && s == "bf16-bf16")
+                .and_then(|(_, _, pts, _)| pts.iter().find(|p| p.step == ck))
+                .map(|p| p.tokens / p.n_params)
+                .unwrap_or(f64::NAN);
+            let mut row = vec![format!("{:.1} @ {}", dn, bundle)];
+            for (scheme, _) in schemes() {
+                let v = all
+                    .iter()
+                    .find(|(b, s, _, _)| b == bundle && s == scheme)
+                    .and_then(|(_, _, pts, _)| pts.iter().find(|p| p.step == ck))
+                    .map(|p| p.val_loss);
+                row.push(match v {
+                    Some(v) if scheme == "bf16-bf16" => format!("{v:.4}"),
+                    Some(v) => format!("{:+.4}", v - base),
+                    None => "-".into(),
+                });
+            }
+            t.row(row);
+        }
+    }
+    rep.table("tab45_deltas", &t)?;
+
+    // Headline claim (Table 1): e4m3 weights + bf16 activations ≈ bf16.
+    let worst_e4m3_delta = all
+        .iter()
+        .filter(|(_, s, _, _)| s == "e4m3-bf16")
+        .flat_map(|(b, _, pts, _)| {
+            let base = all
+                .iter()
+                .find(|(bb, ss, _, _)| bb == b && ss == "bf16-bf16")
+                .map(|(_, _, p, _)| p.clone())
+                .unwrap_or_default();
+            pts.iter()
+                .filter_map(move |p| {
+                    base.iter()
+                        .find(|q| q.step == p.step)
+                        .map(|q| p.val_loss - q.val_loss)
+                })
+                .collect::<Vec<_>>()
+        })
+        .fold(f64::NEG_INFINITY, f64::max);
+    rep.para(&format!(
+        "Headline check (paper Table 1): max val-loss excess of \
+         MXFP8-E4M3-weights + bf16-activations over the bf16 baseline \
+         across all rungs/checkpoints = {worst_e4m3_delta:+.4} nats \
+         (paper: ≈0, within ±0.01)."
+    ));
+    rep.finish()?;
+    Ok(())
+}

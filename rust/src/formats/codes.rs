@@ -1,0 +1,123 @@
+//! Exact code enumeration for MX element formats.
+//!
+//! Regenerates the paper's Fig. 5 (left): the relative gap between
+//! successive positive codes, the overflow (clamp) region, and code
+//! counts (e.g. E4M3 has 126 positive codes — index 0 is the smallest
+//! subnormal 2^-9, index 125 is 448; S1111111 is NaN and S0000000 zero).
+
+use super::spec::ElemFormat;
+use crate::formats::quant::pow2;
+
+/// Enumerate all positive representable values of the format, ascending
+/// (subnormals first, then normals band by band).
+pub fn positive_codes(f: &ElemFormat) -> Vec<f64> {
+    let mut out = Vec::new();
+    let m = f.mbits as i32;
+    let steps = 1i64 << m;
+    // Subnormals: k · 2^(emin - m) for k = 1..2^m - 1... plus k = 2^m - 1?
+    // (k = 2^m would be the first normal).
+    for k in 1..steps {
+        out.push(k as f64 * pow2(f.emin() - m) as f64);
+    }
+    // Normal bands e = emin..=emax: (2^m + k) · 2^(e - m), k = 0..2^m.
+    for e in f.emin()..=f.emax() {
+        for k in 0..steps {
+            let v = (steps + k) as f64 * pow2(e - m) as f64;
+            if v <= f.max_norm() as f64 {
+                out.push(v);
+            }
+        }
+    }
+    out
+}
+
+/// Relative gaps (x_{i+1} - x_i) / x_i between successive positive codes.
+pub fn relative_gaps(f: &ElemFormat) -> Vec<(f64, f64)> {
+    let codes = positive_codes(f);
+    codes
+        .windows(2)
+        .map(|w| (w[0], (w[1] - w[0]) / w[0]))
+        .collect()
+}
+
+/// The Eq. 10 overflow threshold for a block: values v with
+/// |v| > threshold·absmax clamp to max_norm after scale division.
+/// Returns the fraction (1.75/f_max for E4M3-style formats) where f_max is
+/// the mantissa of the block's absolute max; this is the quantity the paper
+/// quotes as "0.875 × abs-max" for f_max → 2.
+pub fn overflow_threshold(f: &ElemFormat, absmax: f32) -> f32 {
+    use crate::formats::quant::floor_log2;
+    if absmax <= 0.0 {
+        return f32::INFINITY;
+    }
+    let scale = pow2(floor_log2(absmax) - f.emax());
+    // Clamping starts where RNE rounds above max_norm: the midpoint between
+    // max_norm and the next (unrepresentable) step.
+    let step = pow2(f.emax() - f.mbits as i32);
+    (f.max_norm() + 0.5 * step) * scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::spec::FormatId;
+
+    #[test]
+    fn e4m3_code_census() {
+        let f = FormatId::E4M3.elem().unwrap();
+        let codes = positive_codes(&f);
+        // Paper §6.1: 126 positive codes, index 0 = 2^-9, index 125 = 448.
+        assert_eq!(codes.len(), 126);
+        assert_eq!(codes[0], 2.0f64.powi(-9));
+        assert_eq!(*codes.last().unwrap(), 448.0);
+        // Strictly ascending.
+        assert!(codes.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn e4m3_relative_gap_envelope() {
+        // Paper Fig. 5: within a band the relative gap decays 12.5% → 6.6%.
+        let f = FormatId::E4M3.elem().unwrap();
+        let gaps = relative_gaps(&f);
+        // Normal-band gaps only (skip the subnormal ramp).
+        let normal: Vec<f64> = gaps
+            .iter()
+            .filter(|(x, _)| *x >= 2.0f64.powi(-6))
+            .map(|(_, g)| *g)
+            .collect();
+        let max_gap = normal.iter().cloned().fold(0.0, f64::max);
+        let min_gap = normal.iter().cloned().fold(1.0, f64::min);
+        assert!((max_gap - 0.125).abs() < 1e-9, "max gap {max_gap}");
+        assert!((min_gap - 1.0 / 15.0).abs() < 1e-3, "min gap {min_gap}"); // ≈6.6%
+    }
+
+    #[test]
+    fn e5m2_census() {
+        let f = FormatId::E5M2.elem().unwrap();
+        let codes = positive_codes(&f);
+        assert_eq!(*codes.last().unwrap(), 57344.0);
+        assert_eq!(codes[0], 2.0f64.powi(-16)); // 2^(emin-mbits) = 2^(-14-2)
+    }
+
+    #[test]
+    fn fp6_censuses() {
+        let e2m3 = FormatId::E2M3.elem().unwrap();
+        let codes = positive_codes(&e2m3);
+        assert_eq!(codes[0], 0.125);
+        assert_eq!(*codes.last().unwrap(), 7.5);
+        let e3m2 = FormatId::E3M2.elem().unwrap();
+        let codes = positive_codes(&e3m2);
+        assert_eq!(*codes.last().unwrap(), 28.0);
+    }
+
+    #[test]
+    fn overflow_threshold_limits() {
+        let f = FormatId::E4M3.elem().unwrap();
+        // absmax with mantissa → 2.0: threshold/absmax → 448+16 over 512 ≈ 0.90625
+        let t = overflow_threshold(&f, 1.9999999);
+        assert!((t / 1.9999999 - (448.0 + 16.0) / 512.0).abs() < 1e-3);
+        // absmax with mantissa 1.0: threshold above absmax → nothing clamps.
+        let t = overflow_threshold(&f, 1.0);
+        assert!(t > 1.0);
+    }
+}

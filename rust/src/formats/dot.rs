@@ -1,0 +1,166 @@
+//! MX dot-product / GEMM semantics (paper Appendix A, Darvish Rouhani et
+//! al. 2023): elements are multiplied in low precision while the per-block
+//! shared scales are "carried around and multiplied at the end".
+//!
+//! This rust reference implements exactly that contract:
+//!   dot(a, b) = Σ_blocks  X_a · X_b · Σ_k  P_a[k] · P_b[k]
+//! with the inner accumulation in f32 (as hardware MX GEMMs accumulate in
+//! ≥fp32). It is used to cross-check the emulation identity the whole
+//! stack relies on: quantize→dequantize→f32-GEMM ≡ scale-carried MX GEMM.
+
+use super::quant::{block_scale, quantize_elem};
+use super::spec::{ElemFormat, FormatId, BLOCK_SIZE};
+
+/// One MX-encoded block: shared scale + low-precision elements (stored
+/// dequantized *relative to the scale*, i.e. the P_i of Algorithm 1).
+#[derive(Debug, Clone)]
+pub struct MxBlock {
+    pub scale: f32,
+    pub elems: [f32; BLOCK_SIZE],
+}
+
+/// Encode a 32-multiple slice into MX blocks for a given element format.
+pub fn encode(v: &[f32], f: &ElemFormat, scale_bump: i32) -> Vec<MxBlock> {
+    assert_eq!(v.len() % BLOCK_SIZE, 0);
+    v.chunks(BLOCK_SIZE)
+        .map(|chunk| match block_scale(chunk, f, scale_bump) {
+            None => MxBlock { scale: 0.0, elems: [0.0; BLOCK_SIZE] },
+            Some(scale) => {
+                let mut elems = [0.0f32; BLOCK_SIZE];
+                for (e, &x) in elems.iter_mut().zip(chunk) {
+                    *e = quantize_elem(x / scale, f);
+                }
+                MxBlock { scale, elems }
+            }
+        })
+        .collect()
+}
+
+/// Decode MX blocks back to dense values (the dequantization the emulation
+/// path performs before its f32 GEMM).
+pub fn decode(blocks: &[MxBlock]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(blocks.len() * BLOCK_SIZE);
+    for b in blocks {
+        for &e in &b.elems {
+            out.push(e * b.scale);
+        }
+    }
+    out
+}
+
+/// Scale-carried MX dot product: per-block integer-like accumulation of
+/// P_a·P_b in f32, multiplied by X_a·X_b at the end of each block.
+pub fn mx_dot(a: &[MxBlock], b: &[MxBlock]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (ba, bb) in a.iter().zip(b) {
+        let mut inner = 0.0f32;
+        for k in 0..BLOCK_SIZE {
+            inner += ba.elems[k] * bb.elems[k];
+        }
+        acc += (ba.scale as f64) * (bb.scale as f64) * inner as f64;
+    }
+    acc as f32
+}
+
+/// Emulation-path dot product: dequantize both operands, then f32 dot.
+pub fn emulated_dot(a: &[MxBlock], b: &[MxBlock]) -> f32 {
+    let da = decode(a);
+    let db = decode(b);
+    let mut acc = 0.0f64;
+    for (x, y) in da.iter().zip(&db) {
+        acc += (*x as f64) * (*y as f64);
+    }
+    acc as f32
+}
+
+/// Quantized matrix–vector product out[m] = MXdot(A[m,:], x) with blocks
+/// along the reduction axis — the shape every Linear in the stack uses.
+pub fn mx_matvec(a: &[f32], rows: usize, cols: usize, x: &[f32], id: FormatId) -> Vec<f32> {
+    let f = id.elem().expect("mx format");
+    let xb = encode(x, &f, 0);
+    (0..rows)
+        .map(|r| {
+            let row = &a[r * cols..(r + 1) * cols];
+            let rb = encode(row, &f, 0);
+            mx_dot(&rb, &xb)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::quant::mx_qdq;
+    use crate::util::prop;
+
+    #[test]
+    fn encode_decode_matches_qdq() {
+        // decode(encode(x)) must equal the quantize→dequantize path used by
+        // the kernels — the core emulation identity.
+        prop::forall("encode-decode≡qdq", 64, |rng| {
+            let x = prop::gen_f32_vec(rng, 96);
+            for id in [FormatId::E4M3, FormatId::E5M2, FormatId::E2M3, FormatId::E3M2] {
+                let f = id.elem().unwrap();
+                let blocks = encode(&x, &f, 0);
+                let dec = decode(&blocks);
+                let (qdq, _) = mx_qdq(&x, id, false);
+                if dec != qdq {
+                    return Err(format!("{id:?}: decode≠qdq"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scale_carried_dot_equals_emulated_dot() {
+        // Scale-carrying and dequantize-first differ only in accumulation
+        // order; with f64 accumulators they agree to f32 round-off.
+        prop::forall("mxdot≡emulated", 64, |rng| {
+            let a = prop::gen_f32_vec(rng, 64);
+            let b = prop::gen_f32_vec(rng, 64);
+            for id in [FormatId::E4M3, FormatId::E5M2] {
+                let f = id.elem().unwrap();
+                let (ea, eb) = (encode(&a, &f, 0), encode(&b, &f, 0));
+                let d1 = mx_dot(&ea, &eb);
+                let d2 = emulated_dot(&ea, &eb);
+                let denom = d2.abs().max(1e-20);
+                if ((d1 - d2) / denom).abs() > 1e-5 {
+                    return Err(format!("{id:?}: {d1} vs {d2}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matvec_error_scales_with_mantissa_bits() {
+        // E4M3 (3 mantissa bits) must beat E5M2 (2 bits) on in-range data.
+        let mut rng = crate::util::rng::Xoshiro256::seed_from(9);
+        let (rows, cols) = (16, 128);
+        let a: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let x: Vec<f32> = (0..cols).map(|_| rng.normal() as f32).collect();
+        let exact: Vec<f32> = (0..rows)
+            .map(|r| a[r * cols..(r + 1) * cols].iter().zip(&x).map(|(p, q)| p * q).sum())
+            .collect();
+        let err = |id: FormatId| -> f64 {
+            mx_matvec(&a, rows, cols, &x, id)
+                .iter()
+                .zip(&exact)
+                .map(|(y, e)| ((y - e) as f64).abs())
+                .sum::<f64>()
+        };
+        let e_e4m3 = err(FormatId::E4M3);
+        let e_e5m2 = err(FormatId::E5M2);
+        assert!(e_e4m3 < e_e5m2, "e4m3 {e_e4m3} !< e5m2 {e_e5m2}");
+    }
+
+    #[test]
+    fn zero_blocks_dot_to_zero() {
+        let f = FormatId::E4M3.elem().unwrap();
+        let z = encode(&vec![0.0; 32], &f, 0);
+        let y = encode(&vec![1.0; 32], &f, 0);
+        assert_eq!(mx_dot(&z, &y), 0.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Pure-rust MX numeric-format substrate.
+//!
+//! Mirrors the OCP Microscaling spec exactly as implemented by the L1
+//! Pallas kernel and the jnp oracle (`python/compile/kernels/ref.py`):
+//! the three implementations are bit-identical, which integration tests
+//! verify by running the compiled quantizer artifact against this module.
+//!
+//! * [`spec`] — element-format constants + the runtime `fmt`/`hyper`
+//!   vector layouts shared with the python side
+//! * [`quant`] — the block-32 shared-scale quantizer
+//! * [`codes`] — exact code enumeration, relative code gaps (paper Fig. 5
+//!   left) and the Eq. 10 overflow criterion
+
+pub mod codes;
+pub mod dot;
+pub mod quant;
+pub mod spec;
+
+pub use quant::{mx_qdq, mx_qdq_with_mask, quantize_elem};
+pub use spec::{ElemFormat, Fmt, FormatId, BLOCK_SIZE};

@@ -1,0 +1,360 @@
+//! The block-32 shared-scale quantizer — rust mirror of the L1 kernel.
+//!
+//! Bit-identical to `python/compile/kernels/ref.py` / the Pallas kernel:
+//! exponent extraction from f32 bits, exact power-of-two scaling, and
+//! round-half-to-even onto the normal+subnormal element grid with
+//! clamp-to-max-normal on overflow (the paper's §6.1 mechanism).
+
+use super::spec::{ElemFormat, FormatId, BLOCK_SIZE};
+
+/// floor(log2(x)) for positive normal f32 x, from the exponent bits (exact).
+#[inline]
+pub fn floor_log2(x: f32) -> i32 {
+    (((x.to_bits() >> 23) & 0xFF) as i32) - 127
+}
+
+/// 2.0^e for integer e (exact; handles subnormal results via ldexp-style
+/// two-step scaling).
+#[inline]
+pub fn pow2(e: i32) -> f32 {
+    if (-126..=127).contains(&e) {
+        f32::from_bits(((e + 127) as u32) << 23)
+    } else if e > 127 {
+        f32::INFINITY
+    } else {
+        // Subnormal range: 2^e = 2^(e+64) * 2^-64, exact.
+        f32::from_bits(((e + 64 + 127).max(0) as u32) << 23) * pow2_raw(-64)
+    }
+}
+
+#[inline]
+fn pow2_raw(e: i32) -> f32 {
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+/// Quantize a value already divided by the block scale onto the element
+/// grid: round-half-even in the exponent band, clamped to ±max_norm.
+#[inline]
+pub fn quantize_elem(r: f32, f: &ElemFormat) -> f32 {
+    let a = r.abs();
+    if a == 0.0 {
+        return 0.0;
+    }
+    let e = floor_log2(a).clamp(f.emin(), f.emax());
+    let step = pow2(e - f.mbits as i32);
+    let q = (a / step).round_ties_even() * step;
+    let q = q.min(f.max_norm());
+    if r < 0.0 {
+        -q
+    } else {
+        q
+    }
+}
+
+/// Shared scale for one block: X = 2^(floor(log2 max|v|) − emax + bump).
+#[inline]
+pub fn block_scale(block: &[f32], f: &ElemFormat, scale_bump: i32) -> Option<f32> {
+    let m = block.iter().fold(0.0f32, |acc, &v| acc.max(v.abs()));
+    if m == 0.0 {
+        return None; // all-zero block: output zeros, no scale needed
+    }
+    Some(pow2(floor_log2(m) - f.emax() + scale_bump))
+}
+
+/// Quantize→dequantize a contiguous slice whose length is a multiple of
+/// [`BLOCK_SIZE`], writing outputs in place. Returns the number of elements
+/// that landed in the last quantization bin (|q| == max_norm).
+pub fn mx_qdq_slice(data: &mut [f32], f: &ElemFormat, scale_bump: i32) -> usize {
+    assert_eq!(data.len() % BLOCK_SIZE, 0, "len {} % 32 != 0", data.len());
+    let maxn = f.max_norm();
+    let mut clamped = 0usize;
+    for block in data.chunks_mut(BLOCK_SIZE) {
+        match block_scale(block, f, scale_bump) {
+            None => block.fill(0.0),
+            Some(scale) => {
+                for v in block.iter_mut() {
+                    let q = quantize_elem(*v / scale, f);
+                    if q.abs() >= maxn {
+                        clamped += 1;
+                    }
+                    *v = q * scale;
+                }
+            }
+        }
+    }
+    clamped
+}
+
+/// bfloat16 round-to-nearest-even cast (returned as f32).
+#[inline]
+pub fn bf16_rne(x: f32) -> f32 {
+    let bits = x.to_bits();
+    // RNE on the low 16 bits.
+    let round_bit = 0x8000u32;
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7FFF + lsb) & 0xFFFF_0000;
+    let _ = round_bit;
+    f32::from_bits(rounded)
+}
+
+/// Quantize→dequantize a vector under any [`FormatId`]; returns (values,
+/// last-bin count). Blocks run along the contiguous axis.
+pub fn mx_qdq(x: &[f32], id: FormatId, scale_bump: bool) -> (Vec<f32>, usize) {
+    let mut out = x.to_vec();
+    match id {
+        FormatId::Fp32 => (out, 0),
+        FormatId::Bf16 => {
+            for v in &mut out {
+                *v = bf16_rne(*v);
+            }
+            (out, 0)
+        }
+        _ => {
+            let f = id.elem().expect("mx format");
+            let clamped = mx_qdq_slice(&mut out, &f, scale_bump as i32);
+            (out, clamped)
+        }
+    }
+}
+
+/// Like [`mx_qdq`] but also returns the per-element last-bin mask.
+pub fn mx_qdq_with_mask(x: &[f32], id: FormatId, scale_bump: bool) -> (Vec<f32>, Vec<bool>) {
+    let mut out = x.to_vec();
+    let mut mask = vec![false; x.len()];
+    if let Some(f) = id.elem() {
+        let maxn = f.max_norm();
+        for (bi, block) in out.chunks_mut(BLOCK_SIZE).enumerate() {
+            match block_scale(block, &f, scale_bump as i32) {
+                None => block.fill(0.0),
+                Some(scale) => {
+                    for (i, v) in block.iter_mut().enumerate() {
+                        let q = quantize_elem(*v / scale, &f);
+                        mask[bi * BLOCK_SIZE + i] = q.abs() >= maxn;
+                        *v = q * scale;
+                    }
+                }
+            }
+        }
+    } else if id == FormatId::Bf16 {
+        for v in &mut out {
+            *v = bf16_rne(*v);
+        }
+    }
+    (out, mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn e4m3() -> ElemFormat {
+        FormatId::E4M3.elem().unwrap()
+    }
+
+    #[test]
+    fn pow2_exact() {
+        assert_eq!(pow2(0), 1.0);
+        assert_eq!(pow2(-1), 0.5);
+        assert_eq!(pow2(10), 1024.0);
+        assert_eq!(pow2(-130) as f64, 2.0f64.powi(-130)); // subnormal
+        assert_eq!(pow2(-149), f32::from_bits(1)); // smallest subnormal
+    }
+
+    #[test]
+    fn floor_log2_exact_at_boundaries() {
+        assert_eq!(floor_log2(1.0), 0);
+        assert_eq!(floor_log2(0.999_999_94), -1);
+        assert_eq!(floor_log2(2.0), 1);
+        assert_eq!(floor_log2(448.0), 8);
+        assert_eq!(floor_log2(0.5), -1);
+    }
+
+    #[test]
+    fn e4m3_grid_values() {
+        let f = e4m3();
+        // Exactly representable values pass through.
+        for v in [1.0f32, 1.125, 448.0, 0.0625, -3.5] {
+            assert_eq!(quantize_elem(v, &f), v, "{v}");
+        }
+        // 449 → clamp? No: 449 rounds within band [256,512): step 32 → 448.
+        assert_eq!(quantize_elem(449.0, &f), 448.0);
+        // Deep overflow clamps to max_norm.
+        assert_eq!(quantize_elem(10_000.0, &f), 448.0);
+        assert_eq!(quantize_elem(-10_000.0, &f), -448.0);
+        // Subnormal grid: min subnormal 2^-9; RNE: half of it rounds to 0.
+        assert_eq!(quantize_elem(2.0f32.powi(-9), &f), 2.0f32.powi(-9));
+        assert_eq!(quantize_elem(2.0f32.powi(-10), &f), 0.0); // ties-to-even
+        assert_eq!(quantize_elem(1.6 * 2.0f32.powi(-10), &f), 2.0f32.powi(-9));
+    }
+
+    #[test]
+    fn rne_tie_behaviour() {
+        let f = e4m3();
+        // In band [1, 2): step 0.125. 1.0625 is exactly between 1.0 and
+        // 1.125 → ties-to-even picks 1.0 (mantissa 8 → even).
+        assert_eq!(quantize_elem(1.0625, &f), 1.0);
+        // 1.1875 between 1.125 and 1.25 → picks 1.25 (10 is even).
+        assert_eq!(quantize_elem(1.1875, &f), 1.25);
+    }
+
+    #[test]
+    fn paper_lognormal_block_clamps() {
+        // The block from the paper §6.1: tightly clustered LN weights all
+        // land in the overflow region and clamp to max_norm · 2^-9.
+        let block: Vec<f32> = vec![
+            0.89740956, 0.89628334, 0.88358812, 0.88474816, 0.90372837,
+        ];
+        let mut data = vec![0.0f32; 32];
+        data[..5].copy_from_slice(&block);
+        for v in data[5..].iter_mut() {
+            *v = 0.89; // fill: same cluster
+        }
+        let f = e4m3();
+        let clamped = mx_qdq_slice(&mut data, &f, 0);
+        assert_eq!(clamped, 32, "entire block should clamp to the last bin");
+        // All distinct inputs collapse to the same value — heterogeneity lost.
+        let first = data[0];
+        assert!(data.iter().all(|&v| v == first));
+        assert_eq!(first, 448.0 * pow2(-9));
+    }
+
+    #[test]
+    fn eq10_overflow_criterion() {
+        // Eq. 10: |v/X| > 448 ⇔ |v| > (1.75/f_max)·absmax where f_max is the
+        // mantissa of the block max. Construct a block with max mantissa
+        // 1.9: threshold = 0.921·absmax.
+        let f = e4m3();
+        let absmax = 1.9f32;
+        let mut block = vec![0.1f32; 32];
+        block[0] = absmax;
+        block[1] = 0.93 * absmax; // above threshold → clamps
+        block[2] = 0.90 * absmax; // below threshold → survives
+        let scale = block_scale(&block, &f, 0).unwrap();
+        assert!( (block[1] / scale) > 448.0);
+        assert!( (block[2] / scale) < 448.0);
+    }
+
+    #[test]
+    fn scale_bump_avoids_clamp() {
+        // With +1 exponent the same cluster no longer clamps (but loses a
+        // mantissa bit of resolution) — Fig. 7's "bump" intervention.
+        let f = e4m3();
+        let mut data = vec![0.9f32; 32];
+        let clamped = mx_qdq_slice(&mut data, &f, 1);
+        assert_eq!(clamped, 0);
+        assert!((data[0] - 0.9).abs() < 0.05);
+    }
+
+    #[test]
+    fn bf16_rne_matches_reference_cases() {
+        assert_eq!(bf16_rne(1.0), 1.0);
+        // bf16 has 7 mantissa bits: the step at 1.0 is 2^-7, so 1 + 2^-8 is
+        // exactly between two codes → RNE picks the even one (1.0).
+        assert_eq!(bf16_rne(1.0 + 2.0f32.powi(-8)), 1.0);
+        // Slightly above the tie rounds up to 1 + 2^-7.
+        assert_eq!(bf16_rne(1.0 + 2.0f32.powi(-8) + 2.0f32.powi(-16)), 1.0 + 2.0f32.powi(-7));
+        assert_eq!(bf16_rne(-2.5), -2.5);
+    }
+
+    // ---------------- property tests ----------------
+
+    #[test]
+    fn prop_idempotent() {
+        // q(q(x)) == q(x) for every MX format.
+        prop::forall("qdq-idempotent", 128, |rng| {
+            let x = prop::gen_f32_vec(rng, 64);
+            for id in [FormatId::E4M3, FormatId::E5M2, FormatId::E2M3, FormatId::E3M2] {
+                let (y, _) = mx_qdq(&x, id, false);
+                let (y2, _) = mx_qdq(&y, id, false);
+                if y != y2 {
+                    return Err(format!("{id:?}: not idempotent"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_sign_symmetric_and_bounded() {
+        prop::forall("qdq-sign-bound", 128, |rng| {
+            let x = prop::gen_f32_vec(rng, 64);
+            let neg: Vec<f32> = x.iter().map(|v| -v).collect();
+            for id in [FormatId::E4M3, FormatId::E5M2, FormatId::E2M3, FormatId::E3M2] {
+                let f = id.elem().unwrap();
+                let (y, _) = mx_qdq(&x, id, false);
+                let (yn, _) = mx_qdq(&neg, id, false);
+                for (a, b) in y.iter().zip(&yn) {
+                    if *a != -*b {
+                        return Err(format!("{id:?}: not odd"));
+                    }
+                }
+                for (bi, block) in x.chunks(BLOCK_SIZE).enumerate() {
+                    let blockmax = block.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                    // |q·X| ≤ max_norm · X with X = 2^(floor(log2 max)-emax)
+                    let bound = if blockmax > 0.0 {
+                        f.max_norm() * pow2(floor_log2(blockmax) - f.emax())
+                    } else {
+                        0.0
+                    };
+                    for a in &y[bi * BLOCK_SIZE..(bi + 1) * BLOCK_SIZE] {
+                        if a.abs() > bound * (1.0 + 1e-6) {
+                            return Err(format!("{id:?}: |q|={} > bound={}", a.abs(), bound));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_relative_error_bound() {
+        // For non-clamped, non-subnormal values the relative error is at
+        // most half the largest relative gap: 2^-(mbits+1).
+        prop::forall("qdq-rel-err", 128, |rng| {
+            let x = prop::gen_f32_vec(rng, 64);
+            for id in [FormatId::E4M3, FormatId::E5M2, FormatId::E2M3, FormatId::E3M2] {
+                let f = id.elem().unwrap();
+                let (y, mask) = mx_qdq_with_mask(&x, id, false);
+                for (bi, block) in x.chunks(BLOCK_SIZE).enumerate() {
+                    let scale = match block_scale(block, &f, 0) {
+                        None => continue,
+                        Some(s) => s,
+                    };
+                    for (i, (&v, &q)) in block.iter().zip(&y[bi * 32..]).enumerate() {
+                        if mask[bi * 32 + i] || v == 0.0 {
+                            continue; // clamped or zero
+                        }
+                        let r = (v / scale).abs();
+                        if r < pow2(f.emin()) {
+                            continue; // subnormal band: absolute, not relative
+                        }
+                        let rel = ((q - v) / v).abs();
+                        let tol = pow2(-(f.mbits as i32 + 1)) * (1.0 + 1e-5);
+                        if rel > tol {
+                            return Err(format!(
+                                "{id:?}: rel err {rel} > {tol} for v={v} q={q}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_zero_blocks_stay_zero() {
+        prop::forall("qdq-zeros", 64, |rng| {
+            let mut x = vec![0.0f32; 64];
+            // sprinkle one tiny value in the second block
+            x[40] = (rng.normal() * 1e-30) as f32;
+            let (y, _) = mx_qdq(&x, FormatId::E4M3, false);
+            if y[..32].iter().any(|&v| v != 0.0) {
+                return Err("zero block produced nonzero".into());
+            }
+            Ok(())
+        });
+    }
+}

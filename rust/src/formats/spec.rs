@@ -1,0 +1,310 @@
+//! Element-format constants and the runtime configuration vector layouts.
+//!
+//! This file is the rust mirror of `python/compile/formats.py`; the ids and
+//! vector layouts must match field-for-field (cross-checked by the golden
+//! integration tests that execute the compiled quantizer artifact).
+
+/// Hardware MX block size (k in the paper's Algorithm 1).
+pub const BLOCK_SIZE: usize = 32;
+
+/// Runtime format ids (values carried inside the `fmt` tensor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum FormatId {
+    Fp32 = 0,
+    Bf16 = 1,
+    E4M3 = 2,
+    E5M2 = 3,
+    E2M3 = 4,
+    E3M2 = 5,
+}
+
+impl FormatId {
+    pub const ALL: [FormatId; 6] = [
+        FormatId::Fp32,
+        FormatId::Bf16,
+        FormatId::E4M3,
+        FormatId::E5M2,
+        FormatId::E2M3,
+        FormatId::E3M2,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FormatId::Fp32 => "fp32",
+            FormatId::Bf16 => "bf16",
+            FormatId::E4M3 => "e4m3",
+            FormatId::E5M2 => "e5m2",
+            FormatId::E2M3 => "e2m3",
+            FormatId::E3M2 => "e3m2",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<FormatId> {
+        Self::ALL.iter().copied().find(|f| f.name() == s)
+    }
+
+    pub fn is_mx(self) -> bool {
+        matches!(self, FormatId::E4M3 | FormatId::E5M2 | FormatId::E2M3 | FormatId::E3M2)
+    }
+
+    /// MX element-format constants; `None` for fp32/bf16.
+    pub fn elem(self) -> Option<ElemFormat> {
+        match self {
+            FormatId::E4M3 => Some(ElemFormat::new("E4M3", 4, 3)),
+            FormatId::E5M2 => Some(ElemFormat::new("E5M2", 5, 2)),
+            FormatId::E2M3 => Some(ElemFormat::new("E2M3", 2, 3)),
+            FormatId::E3M2 => Some(ElemFormat::new("E3M2", 3, 2)),
+            _ => None,
+        }
+    }
+}
+
+/// A floating-point element format ExMy (IEEE-style bias, OCP MX profile:
+/// E4M3 keeps only one NaN code pair, E5M2 follows IEEE-754 semantics, both
+/// saturate on overflow in MX casts).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ElemFormat {
+    pub name: &'static str,
+    pub ebits: u32,
+    pub mbits: u32,
+}
+
+impl ElemFormat {
+    pub const fn new(name: &'static str, ebits: u32, mbits: u32) -> Self {
+        ElemFormat { name, ebits, mbits }
+    }
+
+    /// IEEE exponent bias: 2^(ebits-1) - 1.
+    pub fn bias(&self) -> i32 {
+        (1 << (self.ebits - 1)) - 1
+    }
+
+    /// Exponent of the smallest *normal* value: 1 - bias = 2 - 2^(ebits-1).
+    pub fn emin(&self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// Exponent of the largest normal value.
+    ///
+    /// OCP MX quirk: E4M3-style formats (and the FP6 formats) reclaim the
+    /// top exponent code for normal values (only one NaN encoding), so
+    /// emax = bias + 1... except E5M2 which follows IEEE (emax = bias).
+    /// Net effect, matching the published tables:
+    /// E4M3→8, E5M2→15, E2M3→2, E3M2→4.
+    pub fn emax(&self) -> i32 {
+        match self.name {
+            "E5M2" => self.bias(),
+            _ => self.bias() + 1,
+        }
+    }
+
+    /// Largest finite magnitude (e.g. 448 for E4M3, 57344 for E5M2).
+    pub fn max_norm(&self) -> f32 {
+        let frac = match self.name {
+            // E4M3 loses its top mantissa code to NaN: 2 - 2^-(m-1) ... the
+            // published max is 1.75·2^8 = 448 (mantissa 0b110).
+            "E4M3" => 2.0 - 2.0f32.powi(-(self.mbits as i32 - 1)),
+            // E5M2 IEEE: full mantissa below inf: 2 - 2^-m → 1.75·2^15.
+            "E5M2" => 2.0 - 2.0f32.powi(-(self.mbits as i32)),
+            // FP6 formats have no NaN/inf codes: full mantissa.
+            _ => 2.0 - 2.0f32.powi(-(self.mbits as i32)),
+        };
+        frac * 2.0f32.powi(self.emax())
+    }
+
+    /// Smallest positive subnormal: 2^(emin - mbits).
+    pub fn min_subnormal(&self) -> f32 {
+        2.0f32.powi(self.emin() - self.mbits as i32)
+    }
+}
+
+/// Index constants for the runtime `fmt` vector (f32[FMT_LEN]).
+pub mod fmt_idx {
+    pub const W_FMT_FWD: usize = 0;
+    pub const A_FMT_FWD: usize = 1;
+    pub const G_FMT_BWD: usize = 2;
+    pub const W_FMT_BWD: usize = 3;
+    pub const A_FMT_BWD: usize = 4;
+    pub const QUANT_FWD: usize = 5;
+    pub const QUANT_BWD: usize = 6;
+    pub const QUANT_LN: usize = 7;
+    pub const SCALE_BUMP: usize = 8;
+    pub const FMT_LEN: usize = 9;
+}
+
+/// Index constants for the runtime `hyper` vector (f32[HYPER_LEN]).
+pub mod hyper_idx {
+    pub const LR: usize = 0;
+    pub const OPT_MODE: usize = 1; // 0 = Adam, 1 = SGD(+momentum)
+    pub const MOMENTUM: usize = 2;
+    pub const LABEL_NOISE: usize = 3;
+    pub const HYPER_LEN: usize = 4;
+}
+
+/// A full precision-scheme configuration — the rust-side view of the `fmt`
+/// runtime tensor. This is what sweeps enumerate and interventions mutate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fmt {
+    pub w_fwd: FormatId,
+    pub a_fwd: FormatId,
+    pub g_bwd: FormatId,
+    pub w_bwd: FormatId,
+    pub a_bwd: FormatId,
+    pub quant_fwd: bool,
+    pub quant_bwd: bool,
+    pub quant_ln: bool,
+    pub scale_bump: bool,
+}
+
+impl Fmt {
+    /// Full-precision baseline (every toggle off).
+    pub fn fp32() -> Fmt {
+        Fmt {
+            quant_fwd: false,
+            quant_bwd: false,
+            quant_ln: false,
+            ..Fmt::full(FormatId::Fp32, FormatId::Fp32)
+        }
+    }
+
+    /// Fully-quantized scheme: weights `w`, activations/gradients `a`, both
+    /// passes (the paper's baseline MX configuration).
+    pub fn full(w: FormatId, a: FormatId) -> Fmt {
+        Fmt {
+            w_fwd: w,
+            a_fwd: a,
+            g_bwd: a,
+            w_bwd: w,
+            a_bwd: a,
+            quant_fwd: true,
+            quant_bwd: true,
+            quant_ln: true,
+            scale_bump: false,
+        }
+    }
+
+    /// Mitigation (1): quantize the forward pass only (§6.2 / §7).
+    pub fn fwd_only(w: FormatId, a: FormatId) -> Fmt {
+        Fmt { quant_bwd: false, ..Fmt::full(w, a) }
+    }
+
+    /// Mitigation (2): keep activations (and LN affine params) in bf16.
+    pub fn bf16_act(w: FormatId) -> Fmt {
+        Fmt { quant_ln: false, ..Fmt::full(w, FormatId::Bf16) }
+    }
+
+    /// The paper's asymmetric "MX-mix": E4M3 forward, E5M2 backward.
+    pub fn mx_mix() -> Fmt {
+        Fmt {
+            g_bwd: FormatId::E5M2,
+            w_bwd: FormatId::E5M2,
+            a_bwd: FormatId::E5M2,
+            ..Fmt::full(FormatId::E4M3, FormatId::E4M3)
+        }
+    }
+
+    /// Fig. 7 intervention: stop quantizing layer-norm affine parameters.
+    pub fn without_ln_quant(self) -> Fmt {
+        Fmt { quant_ln: false, ..self }
+    }
+
+    /// Fig. 7 intervention: bump the shared exponent by one.
+    pub fn with_scale_bump(self) -> Fmt {
+        Fmt { scale_bump: true, ..self }
+    }
+
+    /// Serialize to the runtime f32 vector the step executables consume.
+    pub fn to_vec(&self) -> Vec<f32> {
+        use fmt_idx::*;
+        let mut v = vec![0.0f32; FMT_LEN];
+        v[W_FMT_FWD] = self.w_fwd as u8 as f32;
+        v[A_FMT_FWD] = self.a_fwd as u8 as f32;
+        v[G_FMT_BWD] = self.g_bwd as u8 as f32;
+        v[W_FMT_BWD] = self.w_bwd as u8 as f32;
+        v[A_FMT_BWD] = self.a_bwd as u8 as f32;
+        v[QUANT_FWD] = self.quant_fwd as u8 as f32;
+        v[QUANT_BWD] = self.quant_bwd as u8 as f32;
+        v[QUANT_LN] = self.quant_ln as u8 as f32;
+        v[SCALE_BUMP] = self.scale_bump as u8 as f32;
+        v
+    }
+
+    /// Short human-readable label used in logs/reports, e.g.
+    /// `e4m3-bf16`, `e5m2-e5m2(fwd)`, `fp32`.
+    pub fn label(&self) -> String {
+        if !self.quant_fwd && !self.quant_bwd {
+            return "fp32".into();
+        }
+        let mut s = format!("{}-{}", self.w_fwd.name(), self.a_fwd.name());
+        if !self.quant_bwd {
+            s.push_str("(fwd)");
+        } else if self.g_bwd != self.a_fwd {
+            s.push_str(&format!("/bwd:{}", self.g_bwd.name()));
+        }
+        if !self.quant_ln {
+            s.push_str("(noln)");
+        }
+        if self.scale_bump {
+            s.push_str("(bump)");
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ocp_published_constants() {
+        let e4m3 = FormatId::E4M3.elem().unwrap();
+        assert_eq!(e4m3.emax(), 8);
+        assert_eq!(e4m3.max_norm(), 448.0);
+        assert_eq!(e4m3.emin(), -6);
+        assert_eq!(e4m3.min_subnormal(), 2.0f32.powi(-9));
+
+        let e5m2 = FormatId::E5M2.elem().unwrap();
+        assert_eq!(e5m2.emax(), 15);
+        assert_eq!(e5m2.max_norm(), 57344.0);
+        assert_eq!(e5m2.emin(), -14);
+
+        let e2m3 = FormatId::E2M3.elem().unwrap();
+        assert_eq!(e2m3.emax(), 2);
+        assert_eq!(e2m3.max_norm(), 7.5);
+        assert_eq!(e2m3.emin(), 0);
+
+        let e3m2 = FormatId::E3M2.elem().unwrap();
+        assert_eq!(e3m2.emax(), 4);
+        assert_eq!(e3m2.max_norm(), 28.0);
+        assert_eq!(e3m2.emin(), -2);
+    }
+
+    #[test]
+    fn fmt_vector_layout_matches_python() {
+        let f = Fmt::mx_mix();
+        let v = f.to_vec();
+        assert_eq!(v.len(), fmt_idx::FMT_LEN);
+        assert_eq!(v[fmt_idx::W_FMT_FWD], 2.0); // e4m3
+        assert_eq!(v[fmt_idx::G_FMT_BWD], 3.0); // e5m2
+        assert_eq!(v[fmt_idx::QUANT_FWD], 1.0);
+        assert_eq!(v[fmt_idx::SCALE_BUMP], 0.0);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(Fmt::fp32().label(), "fp32");
+        assert_eq!(Fmt::full(FormatId::E4M3, FormatId::E4M3).label(), "e4m3-e4m3");
+        assert_eq!(Fmt::fwd_only(FormatId::E5M2, FormatId::E5M2).label(), "e5m2-e5m2(fwd)");
+        assert_eq!(Fmt::bf16_act(FormatId::E4M3).label(), "e4m3-bf16(noln)");
+        assert_eq!(Fmt::mx_mix().label(), "e4m3-e4m3/bwd:e5m2");
+    }
+
+    #[test]
+    fn roundtrip_names() {
+        for f in FormatId::ALL {
+            assert_eq!(FormatId::from_name(f.name()), Some(f));
+        }
+        assert_eq!(FormatId::from_name("fp4"), None);
+    }
+}

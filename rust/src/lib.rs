@@ -1,0 +1,31 @@
+//! # mxstab
+//!
+//! Reproduction of *"Characterization and Mitigation of Training
+//! Instabilities in Microscaling Formats"* (Su et al., 2025) as a
+//! three-layer Rust + JAX + Pallas training-systems stack.
+//!
+//! Layer map (see `DESIGN.md`):
+//! * **L3 (this crate)** — the training coordinator: sweep scheduling,
+//!   run state machines, instability detection, in-situ interventions,
+//!   metrics, scaling-law fits, and every report/table/figure generator.
+//! * **L2** — JAX model step functions (residual-MLP proxy + OLMo-style LM),
+//!   AOT-lowered to HLO text under `artifacts/` by `python/compile/aot.py`.
+//! * **L1** — the Pallas MX quantize→dequantize kernel feeding L2's GEMMs.
+//!
+//! Python never runs on the training path: this crate loads the HLO
+//! artifacts through the PJRT C API (`xla` crate) and owns the entire
+//! training loop.
+
+pub mod analysis;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod formats;
+pub mod report;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,196 @@
+//! mxstab CLI — the L3 coordinator binary.
+//!
+//! ```text
+//! mxstab info                                  # platform + artifact inventory
+//! mxstab train --bundle <name> [--fmt e4m3-e4m3] [--lr 5e-4] [--steps N]
+//! mxstab experiment <id|all> [--scale quick|default|full] [--force]
+//! mxstab codes [--format e4m3]                 # print the element-format code table
+//! mxstab fit --csv <file>                      # Chinchilla fit over (N,D,loss) rows
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+use mxstab::analysis::{fit_chinchilla, LossPoint};
+use mxstab::config::Config;
+use mxstab::coordinator::{LrSchedule, RunConfig, Runner};
+use mxstab::experiments;
+use mxstab::formats::spec::{Fmt, FormatId};
+use mxstab::runtime::{list_bundles, Session};
+use mxstab::util::args::Args;
+use mxstab::util::table::Table;
+
+fn parse_fmt(spec: &str) -> Result<Fmt> {
+    // Grammar: fp32 | mx-mix | <w>-<a>[:fwd][:noln][:bump]  e.g. e4m3-bf16:fwd
+    if spec == "fp32" {
+        return Ok(Fmt::fp32());
+    }
+    if spec == "mx-mix" {
+        return Ok(Fmt::mx_mix());
+    }
+    let mut parts = spec.split(':');
+    let base = parts.next().unwrap();
+    let (w, a) = base
+        .split_once('-')
+        .ok_or_else(|| anyhow!("format spec {spec:?}: expected <w>-<a>"))?;
+    let w = FormatId::from_name(w).ok_or_else(|| anyhow!("unknown format {w:?}"))?;
+    let a = FormatId::from_name(a).ok_or_else(|| anyhow!("unknown format {a:?}"))?;
+    let mut fmt = Fmt::full(w, a);
+    for flag in parts {
+        match flag {
+            "fwd" => fmt.quant_bwd = false,
+            "noln" => fmt.quant_ln = false,
+            "bump" => fmt.scale_bump = true,
+            _ => bail!("unknown format flag {flag:?}"),
+        }
+    }
+    Ok(fmt)
+}
+
+fn cmd_info(cfg: &Config) -> Result<()> {
+    let session = Session::cpu()?;
+    println!("platform: {}", session.platform());
+    println!("artifacts: {}", cfg.artifacts.display());
+    let mut t = Table::new(&["bundle", "kind", "params", "state MB"]);
+    for name in list_bundles(&cfg.artifacts)? {
+        let m = mxstab::runtime::Manifest::load(&cfg.artifacts.join(&name))?;
+        t.row(vec![
+            name,
+            m.kind.clone(),
+            m.n_params.to_string(),
+            format!("{:.1}", m.state_bytes() as f64 / 1e6),
+        ]);
+    }
+    print!("{}", t.text());
+    Ok(())
+}
+
+fn cmd_train(cfg: &Config, args: &Args) -> Result<()> {
+    let bundle_name = args
+        .get("bundle")
+        .ok_or_else(|| anyhow!("--bundle required"))?;
+    let fmt = parse_fmt(args.get_or("fmt", "fp32"))?;
+    let lr: f32 = args.parse_or("lr", 5e-4f32)?;
+    let steps: usize = args.parse_or("steps", 200usize)?;
+    let seed: i32 = args.parse_or("seed", 0i32)?;
+
+    let session = Session::cpu()?;
+    let sweeper = mxstab::coordinator::Sweeper::new(session, &cfg.artifacts);
+    let runner: Runner = sweeper.runner(bundle_name)?;
+    let mut rc = RunConfig::new(
+        &format!("{bundle_name}_{}_lr{lr:.0e}", fmt.label()),
+        fmt,
+        lr,
+        steps,
+    );
+    if args.flag("cosine") {
+        rc.lr = LrSchedule::WarmupCosine { lo: lr / 10.0, peak: lr, warmup: steps / 10, total: steps };
+    }
+    rc.seed = seed;
+    rc.paired = args.flag("paired");
+    rc.log_every = args.parse_or("log-every", 1usize)?;
+
+    let t0 = std::time::Instant::now();
+    let out = runner.run(&rc)?;
+    let dt = t0.elapsed().as_secs_f64();
+    out.log.save(&cfg.runs.join("manual"))?;
+    let l = &out.log;
+    println!(
+        "{}: {} steps in {:.1}s ({:.1} ms/step) | loss {:.4} -> {:.4} | spikes {} | diverged@{:?}",
+        l.name,
+        steps,
+        dt,
+        dt * 1000.0 / steps as f64,
+        l.rows.first().map(|r| r.m.loss).unwrap_or(f32::NAN),
+        l.final_loss(),
+        l.spikes,
+        l.diverged_at,
+    );
+    Ok(())
+}
+
+fn cmd_codes(args: &Args) -> Result<()> {
+    let id = FormatId::from_name(args.get_or("format", "e4m3"))
+        .ok_or_else(|| anyhow!("unknown format"))?;
+    let f = id.elem().ok_or_else(|| anyhow!("{id:?} is not an MX element format"))?;
+    let codes = mxstab::formats::codes::positive_codes(&f);
+    let gaps = mxstab::formats::codes::relative_gaps(&f);
+    println!(
+        "{}: {} positive codes, emax={}, max_norm={}, emin={}, min_subnormal={:e}",
+        f.name,
+        codes.len(),
+        f.emax(),
+        f.max_norm(),
+        f.emin(),
+        f.min_subnormal()
+    );
+    let mut t = Table::new(&["idx", "value", "rel gap to next (%)"]);
+    for (i, (x, g)) in gaps.iter().enumerate() {
+        if i % 8 == 0 || i + 1 == gaps.len() {
+            t.row(vec![i.to_string(), format!("{x:e}"), format!("{:.2}", g * 100.0)]);
+        }
+    }
+    print!("{}", t.text());
+    Ok(())
+}
+
+fn cmd_fit(args: &Args) -> Result<()> {
+    let path = args.get("csv").ok_or_else(|| anyhow!("--csv required (columns: n,d,loss)"))?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let mut pts = vec![];
+    for (i, line) in text.lines().enumerate() {
+        if i == 0 && line.contains("loss") {
+            continue; // header
+        }
+        let cols: Vec<&str> = line.split(',').collect();
+        if cols.len() < 3 {
+            continue;
+        }
+        pts.push(LossPoint {
+            n_params: cols[0].trim().parse()?,
+            tokens: cols[1].trim().parse()?,
+            loss: cols[2].trim().parse()?,
+        });
+    }
+    let fit = fit_chinchilla(&pts);
+    println!(
+        "L(N,D) = {:.4} + {:.3e}/N^{:.3} + {:.3e}/D^{:.3}   (huber {:.2e}, R2 {:.4}, a=b/(a+b)={:.3})",
+        fit.e_const, fit.a_coef, fit.alpha, fit.b_coef, fit.beta, fit.huber_loss, fit.r2(&pts), fit.opt_exponent
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cfg = Config::from_args(&args)?;
+    match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&cfg),
+        Some("train") => cmd_train(&cfg, &args),
+        Some("codes") => cmd_codes(&args),
+        Some("fit") => cmd_fit(&args),
+        Some("experiment") | Some("sweep") => {
+            let id = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .or_else(|| args.get("experiment"))
+                .ok_or_else(|| anyhow!("experiment id required (or 'all')"))?
+                .to_string();
+            let session: Arc<Session> = Session::cpu()?;
+            let ctx = experiments::Ctx::new(cfg, session, args.flag("force"));
+            experiments::run(&ctx, &id)?;
+            println!("reports written under {}", ctx.cfg.reports.display());
+            Ok(())
+        }
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand {o:?}\n");
+            }
+            eprintln!(
+                "usage: mxstab <info|train|experiment|codes|fit> [options]\n\
+                 see rust/src/main.rs header for details"
+            );
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Report sink: every experiment driver writes its outputs (markdown
+//! tables, CSV series, SVG figures) through this module into `reports/`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::metrics::RunLog;
+use crate::util::svg::{Plot, Series, PALETTE};
+use crate::util::table::Table;
+
+pub struct Report {
+    pub dir: PathBuf,
+    pub id: String,
+    sections: Vec<String>,
+}
+
+impl Report {
+    pub fn new(root: &Path, id: &str) -> Result<Report> {
+        let dir = root.join(id);
+        std::fs::create_dir_all(&dir).with_context(|| format!("creating {}", dir.display()))?;
+        Ok(Report { dir, id: id.to_string(), sections: vec![] })
+    }
+
+    pub fn heading(&mut self, text: &str) {
+        self.sections.push(format!("## {text}\n"));
+    }
+
+    pub fn para(&mut self, text: &str) {
+        self.sections.push(format!("{text}\n"));
+    }
+
+    pub fn table(&mut self, name: &str, t: &Table) -> Result<()> {
+        std::fs::write(self.dir.join(format!("{name}.csv")), t.csv())?;
+        self.sections.push(t.markdown());
+        Ok(())
+    }
+
+    pub fn plot(&mut self, name: &str, p: &Plot) -> Result<()> {
+        let path = self.dir.join(format!("{name}.svg"));
+        std::fs::write(&path, p.render())?;
+        self.sections.push(format!("![{name}]({name}.svg)\n"));
+        Ok(())
+    }
+
+    /// Write one CSV with columns step,loss,grad_norm,… per run.
+    pub fn run_csv(&self, name: &str, log: &RunLog) -> Result<()> {
+        log.save(&self.dir)?;
+        let _ = name;
+        Ok(())
+    }
+
+    /// Standard loss-curve figure from a set of runs (log-y).
+    pub fn loss_plot(&mut self, name: &str, title: &str, logs: &[&RunLog]) -> Result<()> {
+        let mut p = Plot::new(title, "step", "train loss").logy();
+        for (i, log) in logs.iter().enumerate() {
+            let mut s = Series::line(
+                &log.name,
+                log.steps(),
+                log.losses(),
+                PALETTE[i % PALETTE.len()],
+            );
+            if log.name.contains("fp32") || log.name.contains("bf16") {
+                s = s.dashed();
+            }
+            p.add(s);
+        }
+        self.plot(name, &p)
+    }
+
+    /// Grad-norm companion figure.
+    pub fn gradnorm_plot(&mut self, name: &str, title: &str, logs: &[&RunLog]) -> Result<()> {
+        let mut p = Plot::new(title, "step", "grad norm").logy();
+        for (i, log) in logs.iter().enumerate() {
+            p.add(Series::line(
+                &log.name,
+                log.steps(),
+                log.grad_norms(),
+                PALETTE[i % PALETTE.len()],
+            ));
+        }
+        self.plot(name, &p)
+    }
+
+    /// Flush the accumulated markdown to `reports/<id>/README.md`.
+    pub fn finish(self) -> Result<PathBuf> {
+        let md = format!("# {}\n\n{}", self.id, self.sections.join("\n"));
+        let path = self.dir.join("README.md");
+        std::fs::write(&path, md)?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Metrics;
+
+    #[test]
+    fn report_writes_all_formats() {
+        let root = std::env::temp_dir().join(format!("mxstab_rep_{}", std::process::id()));
+        let mut r = Report::new(&root, "figX").unwrap();
+        r.heading("test");
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        r.table("tab", &t).unwrap();
+        let mut log = RunLog::new("r");
+        log.push(0, Metrics { loss: 1.0, ..Default::default() });
+        log.push(1, Metrics { loss: 0.5, ..Default::default() });
+        r.loss_plot("fig", "t", &[&log]).unwrap();
+        let md = r.finish().unwrap();
+        let text = std::fs::read_to_string(md).unwrap();
+        assert!(text.contains("figX") && text.contains("fig.svg"));
+        assert!(root.join("figX/tab.csv").exists());
+        assert!(root.join("figX/fig.svg").exists());
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

@@ -1,0 +1,214 @@
+//! Artifact manifest model — the contract between `python/compile/aot.py`
+//! and the rust runtime.
+//!
+//! Each bundle directory under `artifacts/` holds HLO text modules plus a
+//! `manifest.json` describing, for every exported function, the exact
+//! ordered input/output tensor lists (name, shape, dtype) and the model
+//! hyper-parameters baked into the module.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            _ => bail!("unsupported dtype {s:?}"),
+        }
+    }
+
+    pub fn size(self) -> usize {
+        4
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.req("name")?.as_str().unwrap_or_default().to_string(),
+            shape: j
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("shape not an array"))?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: Dtype::parse(j.req("dtype")?.as_str().unwrap_or("?"))?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct FunctionManifest {
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub kind: String,
+    pub name: String,
+    pub config: Json,
+    pub n_params: usize,
+    pub flops_per_step: Option<u64>,
+    pub state: Vec<TensorSpec>,
+    pub metrics: Vec<String>,
+    pub use_pallas: bool,
+    pub functions: BTreeMap<String, FunctionManifest>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let mut functions = BTreeMap::new();
+        if let Some(fns) = j.get("functions").and_then(Json::as_obj) {
+            for (name, fj) in fns {
+                let file = dir.join(fj.req("file")?.as_str().unwrap_or_default());
+                let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                    fj.req(key)?
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("{key} not an array"))?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect()
+                };
+                functions.insert(
+                    name.clone(),
+                    FunctionManifest {
+                        file,
+                        inputs: parse_specs("inputs")?,
+                        outputs: parse_specs("outputs")?,
+                    },
+                );
+            }
+        }
+
+        let state = match j.get("state").and_then(Json::as_arr) {
+            Some(arr) => arr.iter().map(TensorSpec::from_json).collect::<Result<Vec<_>>>()?,
+            None => vec![],
+        };
+        let metrics = match j.get("metrics").and_then(Json::as_arr) {
+            Some(arr) => arr
+                .iter()
+                .map(|v| v.as_str().unwrap_or_default().to_string())
+                .collect(),
+            None => vec![],
+        };
+
+        Ok(Manifest {
+            kind: j.req("kind")?.as_str().unwrap_or_default().to_string(),
+            name: j.req("name")?.as_str().unwrap_or_default().to_string(),
+            config: j.get("config").cloned().unwrap_or(Json::Null),
+            n_params: j.get("n_params").and_then(Json::as_usize).unwrap_or(0),
+            flops_per_step: j.get("flops_per_step").and_then(Json::as_f64).map(|v| v as u64),
+            state,
+            metrics,
+            use_pallas: j.get("use_pallas").and_then(Json::as_bool).unwrap_or(false),
+            functions,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn function(&self, name: &str) -> Result<&FunctionManifest> {
+        self.functions
+            .get(name)
+            .ok_or_else(|| anyhow!("bundle {} has no function {name:?}", self.name))
+    }
+
+    /// Config accessor: numeric field baked by aot.py (e.g. "depth", "n").
+    pub fn cfg_num(&self, key: &str) -> Option<f64> {
+        self.config.get(key).and_then(Json::as_f64)
+    }
+
+    pub fn cfg_str(&self, key: &str) -> Option<&str> {
+        self.config.get(key).and_then(Json::as_str)
+    }
+
+    /// Total state bytes (one copy of params + opt state + teacher).
+    pub fn state_bytes(&self) -> usize {
+        self.state.iter().map(|s| s.elems() * s.dtype.size()).sum()
+    }
+}
+
+/// List all bundle directories under an artifacts root.
+pub fn list_bundles(root: &Path) -> Result<Vec<String>> {
+    let idx = root.join("index.json");
+    if idx.exists() {
+        let j = Json::parse(&std::fs::read_to_string(&idx)?)?;
+        if let Some(arr) = j.get("bundles").and_then(Json::as_arr) {
+            return Ok(arr
+                .iter()
+                .filter_map(|v| v.as_str().map(str::to_string))
+                .filter(|name| root.join(name).join("manifest.json").exists())
+                .collect());
+        }
+    }
+    let mut out = vec![];
+    for entry in std::fs::read_dir(root).with_context(|| format!("reading {}", root.display()))? {
+        let entry = entry?;
+        if entry.path().join("manifest.json").exists() {
+            out.push(entry.file_name().to_string_lossy().to_string());
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("mxstab_man_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"kind":"proxy","name":"t","n_params":12,
+                "config":{"depth":2,"d_model":64,"activation":"gelu"},
+                "state":[{"name":"p_w1","shape":[2,4,8],"dtype":"float32"}],
+                "metrics":["loss"],
+                "functions":{"step":{"file":"step.hlo.txt",
+                  "inputs":[{"name":"p_w1","shape":[2,4,8],"dtype":"float32"}],
+                  "outputs":[{"name":"metrics","shape":[9],"dtype":"float32"}]}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.kind, "proxy");
+        assert_eq!(m.cfg_num("depth"), Some(2.0));
+        assert_eq!(m.cfg_str("activation"), Some("gelu"));
+        let f = m.function("step").unwrap();
+        assert_eq!(f.inputs[0].elems(), 64);
+        assert_eq!(m.state_bytes(), 64 * 4);
+        assert!(m.function("missing").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,92 @@
+//! Tiny CLI argument parser (no `clap` offline).
+//!
+//! Grammar: `mxstab <subcommand> [positional ...] [--flag] [--key value]`.
+//! `--key=value` is also accepted.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.insert(rest.to_string(), iter.next().unwrap());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|_| anyhow!("--{name}: cannot parse {s:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_mixed() {
+        // NB: a bare word directly after `--flag` is consumed as its value,
+        // so positionals must precede options (documented grammar).
+        let a = p("experiment fig2 extra --steps 500 --lr=5e-4 --quiet");
+        assert_eq!(a.subcommand.as_deref(), Some("experiment"));
+        assert_eq!(a.positional, vec!["fig2", "extra"]);
+        assert_eq!(a.get("steps"), Some("500"));
+        assert_eq!(a.get("lr"), Some("5e-4"));
+        assert!(a.flag("quiet"));
+        assert_eq!(a.parse_or("steps", 0usize).unwrap(), 500);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = p("run --force --dry");
+        assert!(a.flag("force") && a.flag("dry"));
+    }
+}

@@ -1,0 +1,21 @@
+//! From-scratch substrate utilities.
+//!
+//! The offline build environment ships only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (serde, rand, clap, criterion,
+//! proptest) are reimplemented here at the size this project needs:
+//!
+//! * [`json`] — JSON parser/serializer (artifact manifests, metric logs)
+//! * [`rng`] — SplitMix64/xoshiro256** PRNG + Gaussian/Zipf samplers
+//! * [`args`] — CLI argument parsing
+//! * [`stats`] — summary statistics, EWMA, linear regression
+//! * [`table`] — aligned text / markdown table rendering
+//! * [`svg`] — SVG line/scatter plots for the figure generators
+//! * [`prop`] — miniature property-testing harness
+
+pub mod args;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod svg;
+pub mod table;

@@ -1,0 +1,132 @@
+//! Miniature property-testing harness (no `proptest` offline).
+//!
+//! Deterministic: each case derives its inputs from a seeded
+//! [`Xoshiro256`](crate::util::rng::Xoshiro256) stream; on failure the case
+//! index and seed are reported so the case can be replayed exactly.
+//! Supports shrinking for `Vec<f32>` inputs (halving + element zeroing),
+//! which covers the quantizer/coordinator invariants this repo checks.
+
+use super::rng::Xoshiro256;
+
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `f` over `cases` random u64 seeds; panics with a replayable message
+/// on the first failure.
+pub fn forall(name: &str, cases: usize, mut f: impl FnMut(&mut Xoshiro256) -> Result<(), String>) {
+    let base = 0x6d78_7374_6162u64; // "mxstab"
+    for case in 0..cases {
+        let mut rng = Xoshiro256::seed_from(base ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        if let Err(msg) = f(&mut rng) {
+            panic!("property {name:?} failed at case {case}: {msg}");
+        }
+    }
+}
+
+/// Generate a vector of f32 with a mix of magnitudes, signs, zeros and
+/// tightly-clustered blocks — exactly the distributions that stress MX
+/// block scaling (log-normal-ish clusters, paper §6.1).
+pub fn gen_f32_vec(rng: &mut Xoshiro256, len: usize) -> Vec<f32> {
+    let style = rng.below(5);
+    (0..len)
+        .map(|_| {
+            match style {
+                // broad normal
+                0 => rng.normal() as f32,
+                // wide dynamic range
+                1 => {
+                    let e = rng.below(40) as i32 - 20;
+                    (rng.normal() as f32) * (2.0f32).powi(e)
+                }
+                // tight log-normal cluster around 1 (layernorm-gamma-like)
+                2 => ((rng.normal() * 0.01).exp()) as f32,
+                // sparse (many zeros)
+                3 => {
+                    if rng.next_f64() < 0.7 {
+                        0.0
+                    } else {
+                        rng.normal() as f32
+                    }
+                }
+                // sign-flipped cluster
+                _ => {
+                    let s = if rng.next_f64() < 0.5 { -1.0 } else { 1.0 };
+                    s * ((rng.normal() * 0.05).exp()) as f32
+                }
+            }
+        })
+        .collect()
+}
+
+/// Attempt to shrink a failing input: binary-chop the tail, then zero
+/// single elements; returns the smallest still-failing input found.
+pub fn shrink_vec(mut input: Vec<f32>, fails: impl Fn(&[f32]) -> bool) -> Vec<f32> {
+    // Chop halves while the prefix still fails.
+    loop {
+        if input.len() <= 1 {
+            break;
+        }
+        let half = input.len() / 2;
+        if fails(&input[..half]) {
+            input.truncate(half);
+        } else {
+            break;
+        }
+    }
+    // Zero individual elements.
+    for i in 0..input.len() {
+        if input[i] != 0.0 {
+            let old = input[i];
+            input[i] = 0.0;
+            if !fails(&input) {
+                input[i] = old;
+            }
+        }
+    }
+    input
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("u64-roundtrip", 64, |rng| {
+            let v = rng.next_u64();
+            if v.wrapping_add(1).wrapping_sub(1) == v {
+                Ok(())
+            } else {
+                Err(format!("{v}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn forall_reports_failure() {
+        forall("always-fails", 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinker_minimizes() {
+        // Failing predicate: any vector containing a value > 10.
+        let fails = |v: &[f32]| v.iter().any(|&x| x > 10.0);
+        let input = vec![1.0, 2.0, 50.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+        let small = shrink_vec(input, fails);
+        assert!(fails(&small));
+        assert!(small.iter().filter(|&&x| x != 0.0).count() <= 2);
+    }
+
+    #[test]
+    fn gen_covers_styles() {
+        let mut rng = Xoshiro256::seed_from(1);
+        let mut any_zero = false;
+        let mut any_large = false;
+        for _ in 0..50 {
+            let v = gen_f32_vec(&mut rng, 64);
+            any_zero |= v.iter().any(|&x| x == 0.0);
+            any_large |= v.iter().any(|&x| x.abs() > 100.0);
+        }
+        assert!(any_zero && any_large);
+    }
+}

@@ -1,0 +1,139 @@
+//! Summary statistics, EWMA smoothing and least-squares helpers used by the
+//! analysis and bench modules.
+
+/// Running summary of a scalar series.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn from_slice(xs: &[f64]) -> Summary {
+        let mut s = Summary::new();
+        for &x in xs {
+            s.push(x);
+        }
+        s
+    }
+}
+
+/// Percentile with linear interpolation (q in [0, 1]); input need not be sorted.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Exponentially-weighted moving average of a series.
+pub fn ewma(xs: &[f64], alpha: f64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = None;
+    for &x in xs {
+        acc = Some(match acc {
+            None => x,
+            Some(prev) => alpha * x + (1.0 - alpha) * prev,
+        });
+        out.push(acc.unwrap());
+    }
+    out
+}
+
+/// Ordinary least squares y = a + b·x; returns (a, b, r2).
+pub fn linreg(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let sxy: f64 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let sxx: f64 = x.iter().map(|a| (a - mx) * (a - mx)).sum();
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let ss_tot: f64 = y.iter().map(|v| (v - my) * (v - my)).sum();
+    let ss_res: f64 = x.iter().zip(y).map(|(xi, yi)| {
+        let p = a + b * xi;
+        (yi - p) * (yi - p)
+    }).sum();
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    (a, b, r2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let s = Summary::from_slice(&xs);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 4.0).abs() < 1e-12);
+        let naive_var = xs.iter().map(|x| (x - 4.0) * (x - 4.0)).sum::<f64>() / 4.0;
+        assert!((s.var() - naive_var).abs() < 1e-12);
+        assert_eq!((s.min, s.max), (1.0, 10.0));
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&xs, 0.25), 2.0);
+    }
+
+    #[test]
+    fn linreg_recovers_line() {
+        let x: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 - 0.5 * v).collect();
+        let (a, b, r2) = linreg(&x, &y);
+        assert!((a - 3.0).abs() < 1e-9 && (b + 0.5).abs() < 1e-9 && r2 > 0.999999);
+    }
+
+    #[test]
+    fn ewma_smooths() {
+        let xs = [0.0, 1.0, 0.0, 1.0];
+        let s = ewma(&xs, 0.5);
+        assert_eq!(s[0], 0.0);
+        assert!((s[1] - 0.5).abs() < 1e-12);
+        assert!((s[2] - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,117 @@
+//! Aligned text / markdown table rendering for the report generators.
+
+/// A simple column-aligned table builder.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// GitHub-flavoured markdown rendering.
+    pub fn markdown(&self) -> String {
+        let w = self.widths();
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = line(&self.header);
+        out.push('|');
+        for wi in &w {
+            out.push_str(&format!("{:-<width$}|", "", width = wi + 2));
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r));
+        }
+        out
+    }
+
+    /// Plain aligned text (for terminal output).
+    pub fn text(&self) -> String {
+        let w = self.widths();
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<width$}", c, width = w[i] + 2))
+                .collect::<String>()
+                .trim_end()
+                .to_string()
+                + "\n"
+        };
+        let mut out = line(&self.header);
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * w.len()));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r));
+        }
+        out
+    }
+
+    /// CSV rendering (naive quoting — report cells never contain commas).
+    pub fn csv(&self) -> String {
+        let mut out = self.header.join(",") + "\n";
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with a fixed number of significant decimals, trimming
+/// noise (used across report tables).
+pub fn fnum(x: f64, decimals: usize) -> String {
+    if x.is_nan() {
+        return "nan".into();
+    }
+    format!("{:.*}", decimals, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new(&["name", "loss"]);
+        t.row(vec!["bf16".into(), "0.710".into()]);
+        t.row(vec!["e4m3-longer".into(), "0.708".into()]);
+        let md = t.markdown();
+        assert!(md.starts_with("| name"));
+        assert_eq!(md.lines().count(), 4);
+        let csv = t.csv();
+        assert_eq!(csv.lines().nth(1).unwrap(), "bf16,0.710");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        Table::new(&["a", "b"]).row(vec!["only-one".into()]);
+    }
+}

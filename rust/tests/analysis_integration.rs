@@ -1,0 +1,145 @@
+//! Analysis-pipeline integration: synthetic end-to-end flows through the
+//! scaling fitter, spike census, gradient-bias summarizer and the report
+//! sink — the machinery behind every regenerated table/figure.
+
+use mxstab::analysis::spikes::count_spikes;
+use mxstab::analysis::{fit_chinchilla, gradbias, LossPoint};
+use mxstab::coordinator::RunLog;
+use mxstab::data::{Corpus, CorpusConfig};
+use mxstab::report::Report;
+use mxstab::runtime::Metrics;
+use mxstab::util::rng::Xoshiro256;
+use mxstab::util::svg::{Plot, Series, PALETTE};
+use mxstab::util::table::Table;
+
+/// Generate a Chinchilla surface with the paper's Table-2-like constants,
+/// sprinkle one diverged run, and require the fitter to recover the
+/// exponents and the optimal-size exponent a = β/(α+β).
+#[test]
+fn table2_like_fit_recovers_constants() {
+    let (a, b, e, alpha, beta) = (1.94e3, 2.18e4, 0.53, 0.50, 0.56);
+    let mut rng = Xoshiro256::seed_from(1);
+    let mut pts = vec![];
+    for &n in &[2e5f64, 6e5, 1.8e6, 5e6] {
+        for &r in &[2.0, 8.0, 32.0, 128.0] {
+            let d = n * r;
+            let loss = e + a / n.powf(alpha) + b / d.powf(beta);
+            pts.push(LossPoint { n_params: n, tokens: d, loss: loss * (1.0 + 0.005 * rng.normal()) });
+        }
+    }
+    pts.push(LossPoint { n_params: 6e5, tokens: 6e6, loss: 23.0 }); // diverged outlier
+    let fit = fit_chinchilla(&pts);
+    assert!((fit.alpha - alpha).abs() < 0.12, "alpha {}", fit.alpha);
+    assert!((fit.beta - beta).abs() < 0.12, "beta {}", fit.beta);
+    let a_exp = beta / (alpha + beta);
+    assert!((fit.opt_exponent - a_exp).abs() < 0.1, "a {}", fit.opt_exponent);
+}
+
+/// The Fig. 4 postprocessing on a synthetic ζ-bound series with the paper's
+/// shape (drift down → turn-around → cross 2 → divergence).
+#[test]
+fn gradbias_pipeline_on_paper_shape() {
+    let mut log = RunLog::new("fig4-synth");
+    for t in 0..1000usize {
+        let eps = if t < 300 {
+            0.3 - 0.0008 * t as f64
+        } else {
+            0.06 * 1.012f64.powi((t - 300) as i32)
+        };
+        let cos = (1.0 - eps / 3.0).max(0.0);
+        log.push(
+            t,
+            Metrics {
+                loss: 0.1,
+                grad_norm: 1.0,
+                eps_ratio: eps as f32,
+                cosine: cos as f32,
+                ..Default::default()
+            },
+        );
+    }
+    let s = gradbias::summarize(&log, 0.1, 2.0);
+    let ta = s.turnaround_step.unwrap();
+    assert!((250..420).contains(&ta), "turnaround {ta}");
+    let cx = s.crossing_step.unwrap();
+    assert!(cx > 550, "crossing {cx}");
+    assert!(s.cosine.last().unwrap() < &0.5);
+}
+
+/// Spike census + report rendering end to end (Fig. 9 pipeline shape).
+#[test]
+fn fig9_pipeline_renders() {
+    let dir = std::env::temp_dir().join(format!("mxstab_an_{}", std::process::id()));
+    let mut rep = Report::new(&dir, "fig9-test").unwrap();
+    let mut table = Table::new(&["cell", "spikes"]);
+    let mut rng = Xoshiro256::seed_from(2);
+    for cell in 0..6 {
+        let mut loss = 1.0f64;
+        let series: Vec<f64> = (0..2000)
+            .map(|_| {
+                loss *= 0.999;
+                if rng.next_f64() < 0.002 {
+                    loss * 300.0
+                } else {
+                    loss
+                }
+            })
+            .collect();
+        table.row(vec![format!("c{cell}"), count_spikes(&series, 100.0).to_string()]);
+    }
+    rep.table("census", &table).unwrap();
+    let mut p = Plot::new("t", "x", "y").logy();
+    p.add(Series::line("s", vec![1.0, 2.0], vec![0.5, 0.1], PALETTE[0]));
+    rep.plot("fig", &p).unwrap();
+    let md = rep.finish().unwrap();
+    let text = std::fs::read_to_string(&md).unwrap();
+    assert!(text.contains("census") == false || !text.is_empty());
+    assert!(dir.join("fig9-test/census.csv").exists());
+    assert!(dir.join("fig9-test/fig.svg").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The synthetic corpus must give an LM something to learn: conditional
+/// entropy strictly below unigram entropy, both bounded by log vocab.
+#[test]
+fn corpus_entropy_budget() {
+    for vocab in [256usize, 512] {
+        let c = Corpus::new(CorpusConfig { vocab, ..Default::default() });
+        let hu = c.unigram_entropy();
+        let hc = c.conditional_entropy();
+        let hmax = (vocab as f64).ln();
+        assert!(hu < hmax, "unigram {hu} < log V {hmax}");
+        assert!(hc < hu, "markov structure must help: {hc} vs {hu}");
+        assert!(hc > 1.0, "not degenerate");
+    }
+}
+
+/// Empirical bigram statistics of sampled batches should reflect the
+/// Markov kernel (row-dependent shift), not just the unigram.
+#[test]
+fn corpus_bigram_structure_is_learnable() {
+    let c = Corpus::new(CorpusConfig::default());
+    let toks = c.batch(1, 0, 64, 256);
+    // Count P(next | prev mod rows == 0) vs global unigram: the shifted
+    // rows put mass on different tokens.
+    let mut cond = vec![0f64; 512];
+    let mut glob = vec![0f64; 512];
+    let mut n_cond = 0.0;
+    for seq in toks.chunks(256) {
+        for w in seq.windows(2) {
+            glob[w[1] as usize] += 1.0;
+            if (w[0] as usize) % 16 == 5 {
+                cond[w[1] as usize] += 1.0;
+                n_cond += 1.0;
+            }
+        }
+    }
+    let total: f64 = glob.iter().sum();
+    // L1 distance between conditional and marginal next-token distributions.
+    let l1: f64 = cond
+        .iter()
+        .zip(&glob)
+        .map(|(c, g)| (c / n_cond - g / total).abs())
+        .sum();
+    assert!(l1 > 0.3, "conditional should differ from marginal (L1 {l1})");
+}

@@ -1,0 +1,127 @@
+//! Coordinator-level integration tests that do not require artifacts:
+//! detector + run-log + intervention + sweep-cache machinery end to end
+//! (artifact-backed paths are covered by `runtime_artifacts.rs`).
+
+use mxstab::coordinator::{
+    Detector, DetectorConfig, Intervention, LrSchedule, Policy, RunConfig, RunLog, Verdict,
+};
+use mxstab::formats::spec::{Fmt, FormatId};
+use mxstab::runtime::Metrics;
+
+fn metrics(loss: f32, gnorm: f32) -> Metrics {
+    Metrics { loss, grad_norm: gnorm, ..Default::default() }
+}
+
+/// Simulate the paper's Fig. 1b shape: grad norm climbs slowly, then the
+/// loss lets go and never recovers — the detector must (a) not fire during
+/// the climb, (b) flag the spike, (c) declare divergence soon after.
+#[test]
+fn detector_tracks_fig1b_shape() {
+    let mut d = Detector::new(DetectorConfig::default());
+    let mut log = RunLog::new("fig1b");
+    let mut verdicts = vec![];
+    for t in 0..600usize {
+        let (loss, g) = if t < 400 {
+            (1.0 / (1.0 + t as f64 * 0.01), 1.0 + t as f64 * 0.004)
+        } else {
+            // runaway: loss ×1.5 per step, grad norm climbing with it
+            (
+                0.25 * 1.5f64.powi((t - 400) as i32 + 1),
+                10.0 * 1.05f64.powi((t - 400) as i32),
+            )
+        };
+        let v = d.push(loss, g);
+        verdicts.push(v);
+        log.push(t, metrics(loss as f32, g as f32));
+    }
+    assert!(verdicts[..400].iter().all(|v| *v == Verdict::Healthy));
+    assert!(d.diverged());
+    let dv = d.diverged_at.unwrap();
+    assert!((400..470).contains(&dv), "diverged at {dv}");
+    assert!(d.grad_growth() > 1.0);
+    // A gradual ×1.5/step runaway never makes a single ≥100× jump — the
+    // EWMA divergence rule must catch it even with zero spike events.
+    assert_eq!(d.spikes, 0);
+}
+
+#[test]
+fn policy_menu_matches_paper_fig7() {
+    // Every paper intervention must be representable and produce a fmt
+    // distinct from the baseline.
+    let base = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+    let mut seen = std::collections::HashSet::new();
+    for iv in Intervention::ALL {
+        let f = iv.apply(base);
+        assert_ne!(f, base, "{iv:?} must change the scheme");
+        seen.insert(format!("{f:?}"));
+    }
+    assert_eq!(seen.len(), Intervention::ALL.len(), "interventions are distinct");
+}
+
+#[test]
+fn grad_growth_trigger_fires_before_fixed_step() {
+    let fixed = Policy::at_step(500, Intervention::ToFp32);
+    let auto = Policy::on_grad_growth(3.0, Intervention::Bf16Act);
+    let mut d = Detector::new(DetectorConfig::default());
+    let mut auto_fired_at = None;
+    for t in 0..600usize {
+        // 3%/step climb → window ratio 1.03^50 ≈ 4.4 crosses the 3.0 trigger
+        let g = 1.0 * 1.03f64.powi(t as i32);
+        d.push(0.5, g);
+        if auto_fired_at.is_none() && auto.fires(t, d.grad_growth()) {
+            auto_fired_at = Some(t);
+        }
+        if fixed.fires(t, d.grad_growth()) {
+            break;
+        }
+    }
+    let at = auto_fired_at.expect("auto trigger fired");
+    assert!(at < 500, "grad-growth trigger should beat the fixed step, fired at {at}");
+}
+
+#[test]
+fn runlog_roundtrip_preserves_series() {
+    let dir = std::env::temp_dir().join(format!("mxstab_coord_{}", std::process::id()));
+    let mut log = RunLog::new("roundtrip");
+    log.meta.push(("fmt".into(), "e4m3-e4m3".into()));
+    for t in 0..50 {
+        log.push(
+            t,
+            Metrics {
+                loss: (50 - t) as f32 * 0.01,
+                grad_norm: 1.0 + t as f32 * 0.1,
+                eps_ratio: 0.1,
+                cosine: 0.99,
+                ..Default::default()
+            },
+        );
+    }
+    log.interventions.push((25, "bf16-act".into()));
+    log.save(&dir).unwrap();
+    let back = RunLog::load(&dir, "roundtrip").unwrap();
+    assert_eq!(back.rows.len(), 50);
+    assert_eq!(back.losses(), log.losses());
+    assert_eq!(back.grad_norms(), log.grad_norms());
+    assert_eq!(back.series(|m| m.cosine), log.series(|m| m.cosine));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn lr_schedule_monotonic_in_phases() {
+    let s = LrSchedule::WarmupCosine { lo: 1e-5, peak: 1e-3, warmup: 50, total: 500 };
+    for t in 1..50 {
+        assert!(s.at(t) >= s.at(t - 1), "warmup must be nondecreasing");
+    }
+    for t in 51..500 {
+        assert!(s.at(t) <= s.at(t - 1) + 1e-9, "decay must be nonincreasing");
+    }
+}
+
+#[test]
+fn runconfig_defaults_are_papers() {
+    let cfg = RunConfig::new("x", Fmt::fp32(), 5e-4, 100);
+    assert_eq!(cfg.label_noise, 1e-3, "paper's σ for the proxy targets");
+    assert_eq!(cfg.init_gain, 1.0);
+    assert!(!cfg.paired);
+    assert!(cfg.policies.is_empty());
+}

@@ -1,0 +1,290 @@
+//! Integration tests over the compiled artifacts (require `make artifacts`,
+//! at least the `quick` set). Each test skips with a notice when the
+//! artifacts are absent so `cargo test` stays usable pre-build.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, OnceLock};
+
+use mxstab::formats::{mx_qdq, Fmt, FormatId};
+use mxstab::runtime::{Bundle, Quantizer, Session, State, StepArgs};
+use mxstab::util::rng::Xoshiro256;
+
+fn artifacts_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn session() -> Arc<Session> {
+    static SESSION: OnceLock<Arc<Session>> = OnceLock::new();
+    SESSION.get_or_init(|| Session::cpu().expect("PJRT CPU client")).clone()
+}
+
+fn have(name: &str) -> Option<PathBuf> {
+    let dir = artifacts_root().join(name);
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifact {name} not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn proxy_dir() -> Option<PathBuf> {
+    have("proxy_gelu_ln_L2_D128").or_else(|| have("proxy_gelu_ln_L2_D256"))
+}
+
+fn default_args(fmt: Fmt, lr: f32, step: i32) -> StepArgs {
+    let mut hyper = vec![0.0f32; 4];
+    hyper[0] = lr;
+    hyper[3] = 1e-3; // label noise
+    StepArgs { tokens: None, fmt: fmt.to_vec(), hyper, seed: 0, step }
+}
+
+#[test]
+fn quantizer_artifact_matches_rust_mirror_bitexact() {
+    let Some(dir) = have("quantizer") else { return };
+    let q = Quantizer::load(session(), &dir).unwrap();
+    let mut rng = Xoshiro256::seed_from(99);
+    let n = q.rows * q.cols;
+    // Mixed distribution incl. tight clusters (the clamping-prone case).
+    let mut x = rng.normal_vec(n);
+    for v in x.iter_mut().skip(n / 2) {
+        *v = ((rng.normal() * 0.01).exp()) as f32;
+    }
+    for id in FormatId::ALL {
+        let (y_hlo, frac_hlo) = q.qdq(&x, id as u8 as f32, 0.0).unwrap();
+        let (y_rs, clamped) = mx_qdq(&x, id, false);
+        assert_eq!(y_hlo, y_rs, "format {id:?}: HLO vs rust mismatch");
+        let frac_rs = clamped as f32 / n as f32;
+        assert!(
+            (frac_hlo - frac_rs).abs() < 1e-6,
+            "format {id:?}: last-bin frac {frac_hlo} vs {frac_rs}"
+        );
+    }
+}
+
+#[test]
+fn quantizer_scale_bump_reduces_clamping() {
+    let Some(dir) = have("quantizer") else { return };
+    let q = Quantizer::load(session(), &dir).unwrap();
+    let mut rng = Xoshiro256::seed_from(5);
+    // Tight log-normal cluster around 0.9: mantissa-of-max ≈ 1.8 → the
+    // §6.1 clamping regime (a cluster around 1.0 would *not* clamp, since
+    // the block max's mantissa would be ≈1.0).
+    let x: Vec<f32> = (0..q.rows * q.cols)
+        .map(|_| (0.9 * (rng.normal() * 0.01).exp()) as f32)
+        .collect();
+    let (_, f0) = q.qdq(&x, FormatId::E4M3 as u8 as f32, 0.0).unwrap();
+    let (_, f1) = q.qdq(&x, FormatId::E4M3 as u8 as f32, 1.0).unwrap();
+    assert!(f0 > 0.0, "cluster should clamp without bump (got {f0})");
+    assert_eq!(f1, 0.0, "bump should clear the last bin");
+}
+
+#[test]
+fn proxy_init_is_deterministic() {
+    let Some(dir) = proxy_dir() else { return };
+    let b = Bundle::load(session(), &dir).unwrap();
+    let s1 = b.init(42, 0.0, 1.0).unwrap();
+    let s2 = b.init(42, 0.0, 1.0).unwrap();
+    let s3 = b.init(43, 0.0, 1.0).unwrap();
+    assert_eq!(s1.0.len(), b.manifest.state.len());
+    let a = s1.tensor_f32(0).unwrap();
+    assert_eq!(a, s2.tensor_f32(0).unwrap());
+    assert_ne!(a, s3.tensor_f32(0).unwrap());
+    // Kaiming-uniform bound: |w| ≤ 1/sqrt(fan_in) = 1/sqrt(128).
+    let bound = 1.0 / (128f32).sqrt() + 1e-6;
+    assert!(a.iter().all(|v| v.abs() <= bound));
+    // Layernorm gammas init to 1.
+    let ln_idx = b
+        .manifest
+        .state
+        .iter()
+        .position(|t| t.name == "p_ln")
+        .expect("proxy state has p_ln");
+    assert!(s1.tensor_f32(ln_idx).unwrap().iter().all(|&v| v == 1.0));
+}
+
+#[test]
+fn proxy_training_loss_decreases_and_is_deterministic() {
+    let Some(dir) = proxy_dir() else { return };
+    let b = Bundle::load(session(), &dir).unwrap();
+    let fmt = Fmt::fp32();
+    let mut state = b.init(0, 0.0, 1.0).unwrap();
+    let mut first = None;
+    let mut last = 0.0;
+    for t in 0..30 {
+        let (s2, met) = b.step(state, &default_args(fmt, 1e-3, t)).unwrap();
+        state = s2;
+        if t == 0 {
+            first = Some(met.loss);
+        }
+        last = met.loss;
+        assert!(met.is_finite(), "step {t}");
+    }
+    assert!(last < first.unwrap() * 0.8, "loss {last} vs {first:?}");
+
+    // Re-run: identical trajectory (deterministic data + init + kernels).
+    let mut state = b.init(0, 0.0, 1.0).unwrap();
+    let mut last2 = 0.0;
+    for t in 0..30 {
+        let (s2, met) = b.step(state, &default_args(fmt, 1e-3, t)).unwrap();
+        state = s2;
+        last2 = met.loss;
+    }
+    assert_eq!(last, last2);
+}
+
+#[test]
+fn proxy_mx_format_changes_trajectory_but_stays_close_early() {
+    let Some(dir) = proxy_dir() else { return };
+    let b = Bundle::load(session(), &dir).unwrap();
+    let run = |fmt: Fmt| -> Vec<f32> {
+        let mut state = b.init(0, 0.0, 1.0).unwrap();
+        let mut losses = vec![];
+        for t in 0..20 {
+            let (s2, met) = b.step(state, &default_args(fmt, 5e-4, t)).unwrap();
+            state = s2;
+            losses.push(met.loss);
+        }
+        losses
+    };
+    let fp = run(Fmt::fp32());
+    let mx = run(Fmt::full(FormatId::E4M3, FormatId::E4M3));
+    assert_ne!(fp, mx, "quantization must alter the trajectory");
+    let rel = (fp.last().unwrap() - mx.last().unwrap()).abs() / fp.last().unwrap();
+    assert!(rel < 0.5, "E4M3 should track FP32 early in training (rel={rel})");
+}
+
+#[test]
+fn paired_step_reports_gradient_bias() {
+    let Some(dir) = proxy_dir() else { return };
+    let b = Bundle::load(session(), &dir).unwrap();
+    if !b.has_paired() {
+        eprintln!("SKIP: no paired fn");
+        return;
+    }
+    let state = b.init(0, 0.0, 1.0).unwrap();
+    let fmt = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+    let (_, met) = b.paired_step(state, &default_args(fmt, 5e-4, 0)).unwrap();
+    assert!(met.eps_ratio > 0.0 && met.eps_ratio < 1.0, "eps_ratio {}", met.eps_ratio);
+    assert!(met.cosine > 0.9, "cosine {}", met.cosine);
+
+    // In FP32 the paired gradient must match itself exactly.
+    let state = b.init(0, 0.0, 1.0).unwrap();
+    let (_, met) = b.paired_step(state, &default_args(Fmt::fp32(), 5e-4, 0)).unwrap();
+    assert_eq!(met.eps_ratio, 0.0);
+    assert!((met.cosine - 1.0).abs() < 1e-5);
+}
+
+#[test]
+fn intervention_fmt_swap_mid_run_keeps_state() {
+    let Some(dir) = proxy_dir() else { return };
+    let b = Bundle::load(session(), &dir).unwrap();
+    let mx = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+    // Train 10 steps MX, then switch to fp32 — loss stays finite and keeps
+    // improving (the Fig. 7 mechanism: fmt is a pure runtime input).
+    let mut state = b.init(1, 0.0, 1.0).unwrap();
+    let mut loss10 = f32::NAN;
+    for t in 0..10 {
+        let (s2, met) = b.step(state, &default_args(mx, 1e-3, t)).unwrap();
+        state = s2;
+        loss10 = met.loss;
+    }
+    let mut last = f32::NAN;
+    for t in 10..25 {
+        let (s2, met) = b.step(state, &default_args(Fmt::fp32(), 1e-3, t)).unwrap();
+        state = s2;
+        last = met.loss;
+    }
+    assert!(last.is_finite() && last < loss10, "post-intervention {last} vs {loss10}");
+}
+
+#[test]
+fn pallas_bundle_matches_jnp_bundle_bitexact() {
+    // The pallas-integrated proxy and the jnp proxy share shapes + seed →
+    // identical trajectories if (and only if) L1 ≡ ref quantizer.
+    let (Some(dir_jnp), Some(dir_pal)) = (
+        have("proxy_gelu_ln_L2_D128"),
+        have("proxy_gelu_ln_L2_D128_pallas"),
+    ) else {
+        return;
+    };
+    let bj = Bundle::load(session(), &dir_jnp).unwrap();
+    let bp = Bundle::load(session(), &dir_pal).unwrap();
+    let fmt = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+    let mut sj = bj.init(3, 0.0, 1.0).unwrap();
+    let mut sp = bp.init(3, 0.0, 1.0).unwrap();
+    for t in 0..5 {
+        let (s2, mj) = bj.step(sj, &default_args(fmt, 5e-4, t)).unwrap();
+        sj = s2;
+        let (s2, mp) = bp.step(sp, &default_args(fmt, 5e-4, t)).unwrap();
+        sp = s2;
+        assert_eq!(mj.loss, mp.loss, "step {t}: pallas and jnp paths diverge");
+    }
+    let _ = (sj, sp);
+}
+
+#[test]
+fn lm_bundle_trains_on_synthetic_corpus() {
+    let Some(dir) = have("lm_n1_v256_c64_b8") else { return };
+    let b = Bundle::load(session(), &dir).unwrap();
+    let (batch, len) = b.tokens_shape().unwrap();
+    let corpus = mxstab::data::Corpus::new(mxstab::data::CorpusConfig {
+        vocab: 256,
+        ..Default::default()
+    });
+    let fmt = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+    let mut hyper = vec![0.0f32; 4];
+    hyper[0] = 1e-3;
+    let mut state = b.init(0, 0.0, 1.0).unwrap();
+    let mut first = None;
+    let mut last = 0.0;
+    for t in 0..20 {
+        let args = StepArgs {
+            tokens: Some(corpus.batch(0, t as u64, batch, len)),
+            fmt: fmt.to_vec(),
+            hyper: hyper.clone(),
+            seed: 0,
+            step: t as i32,
+        };
+        let (s2, met) = b.step(state, &args).unwrap();
+        state = s2;
+        if t == 0 {
+            first = Some(met.loss);
+            // Initial loss ≈ ln(vocab) for a fresh LM.
+            assert!((met.loss - (256f32).ln()).abs() < 0.7, "init loss {}", met.loss);
+        }
+        last = met.loss;
+    }
+    assert!(last < first.unwrap() - 0.5, "LM loss should fall: {first:?} → {last}");
+
+    // Eval entry point returns a finite loss on held-out data.
+    let val = b
+        .eval(&state, &corpus.batch(999, 0, batch, len), &fmt.to_vec())
+        .unwrap();
+    assert!(val.is_finite() && val > 0.0 && val < 8.0, "val loss {val}");
+}
+
+#[test]
+fn state_clone_is_deep() {
+    let Some(dir) = proxy_dir() else { return };
+    let b = Bundle::load(session(), &dir).unwrap();
+    let state = b.init(0, 0.0, 1.0).unwrap();
+    let snap: State = state.clone_state().unwrap();
+    // Step the original; the snapshot must not change.
+    let before = snap.tensor_f32(0).unwrap();
+    let (_state2, _) = b
+        .step(state, &default_args(Fmt::fp32(), 1e-3, 0))
+        .unwrap();
+    assert_eq!(snap.tensor_f32(0).unwrap(), before);
+}
+
+#[test]
+fn list_bundles_finds_quick_set() {
+    let root = artifacts_root();
+    if !root.join("index.json").exists() {
+        eprintln!("SKIP: no artifacts index");
+        return;
+    }
+    let names = mxstab::runtime::list_bundles(Path::new(&root)).unwrap();
+    assert!(names.iter().any(|n| n == "quantizer"));
+}
