@@ -1,55 +1,151 @@
-//! L1 bench: MX quantize→dequantize throughput.
+//! L1 bench: MX quantize→dequantize and matvec throughput.
 //!
-//! Compares the pure-rust mirror against the compiled Pallas/HLO kernel
-//! (PJRT CPU) across element formats and input distributions, reporting
-//! per-iteration latency and effective GB/s. (interpret=True Pallas on CPU
-//! measures the *emulation* path — TPU projections live in DESIGN.md §Perf.)
+//! Compares three implementations of the same bit-exact semantics:
+//!   1. `mx_qdq`        — the scalar reference oracle (allocates, single
+//!                        thread, per-element band math),
+//!   2. packed codec    — `QdqScratch::qdq_into` (LUT codes + shared-scale
+//!                        exponents, thread-parallel, allocation-free),
+//!   3. (with `--features xla` + artifacts) the compiled Pallas/HLO kernel
+//!       via PJRT CPU — the *emulation* path; TPU projections live in
+//!       DESIGN.md §Perf.
+//!
+//! The packed/scalar ratio printed at n = 2^20 is the headline number the
+//! repo's acceptance bar tracks (≥5× on a multicore host); bitwise
+//! equality of the two paths is asserted here before timing and
+//! property-tested in `tests/packed_roundtrip.rs`.
 
 use mxstab::bench::Bencher;
 use mxstab::formats::spec::FormatId;
-use mxstab::formats::{mx_qdq, quant};
-use mxstab::runtime::{Quantizer, Session};
+use mxstab::formats::{dot, gemm, mx_qdq, packed_qdq, PackedMatrix, PackedVec, QdqScratch};
 use mxstab::util::rng::Xoshiro256;
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let b = Bencher::default();
     println!("== quantizer benchmarks ==\n");
 
     let mut rng = Xoshiro256::seed_from(0);
+    let formats = [FormatId::E4M3, FormatId::E5M2, FormatId::E2M3, FormatId::E3M2];
+
     for &n in &[4096usize, 65536, 1 << 20] {
         let x = rng.normal_vec(n);
         let bytes = (n * 4) as f64;
-        for id in [FormatId::E4M3, FormatId::E5M2, FormatId::E2M3, FormatId::E3M2, FormatId::Bf16] {
-            let r = b.run(&format!("rust/{}/{}", id.name(), n), || {
+        let mut out = vec![0.0f32; n];
+        let mut scratch = QdqScratch::new();
+        for id in formats {
+            // Cross-check before timing: the packed path must be bitwise
+            // identical to the scalar oracle on this exact input.
+            let (want, cw) = mx_qdq(&x, id, false);
+            let (got, cg) = packed_qdq(&x, id, false);
+            assert_eq!(cw, cg, "{id:?}: clamp count diverged");
+            assert!(
+                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{id:?}: packed path diverged from mx_qdq at n={n}"
+            );
+
+            let rs = b.run(&format!("scalar/{}/{}", id.name(), n), || {
                 std::hint::black_box(mx_qdq(std::hint::black_box(&x), id, false));
             });
-            println!("{}", r.report_line(&format!("{:.2} GB/s", bytes / r.mean_s / 1e9)));
+            println!("{}", rs.report_line(&format!("{:.2} GB/s", bytes / rs.mean_s / 1e9)));
+            let rp = b.run(&format!("packed/{}/{}", id.name(), n), || {
+                scratch.qdq_into(std::hint::black_box(&x), &mut out, id, false);
+                std::hint::black_box(&out);
+            });
+            println!(
+                "{}",
+                rp.report_line(&format!(
+                    "{:.2} GB/s  [{:.1}x vs scalar]",
+                    bytes / rp.mean_s / 1e9,
+                    rs.mean_s / rp.mean_s
+                ))
+            );
         }
+        // bf16 has no packed form; keep the scalar number for context.
+        let r = b.run(&format!("scalar/bf16/{}", n), || {
+            std::hint::black_box(mx_qdq(std::hint::black_box(&x), FormatId::Bf16, false));
+        });
+        println!("{}", r.report_line(&format!("{:.2} GB/s", bytes / r.mean_s / 1e9)));
+        println!();
     }
 
-    // In-place variant (the hot path used by analytics).
-    let mut buf = rng.normal_vec(1 << 20);
-    let f = FormatId::E4M3.elem().unwrap();
-    let r = b.run("rust/e4m3/inplace/1M", || {
-        quant::mx_qdq_slice(std::hint::black_box(&mut buf), &f, 0);
-    });
-    println!("{}", r.report_line(&format!("{:.2} GB/s", (buf.len() * 4) as f64 / r.mean_s / 1e9)));
+    // Headline number: packed codec vs scalar mx_qdq at n = 2^20, e4m3.
+    {
+        let n = 1 << 20;
+        let x = rng.normal_vec(n);
+        let mut out = vec![0.0f32; n];
+        let mut scratch = QdqScratch::new();
+        let rs = b.run("headline/scalar/e4m3/1M", || {
+            std::hint::black_box(mx_qdq(std::hint::black_box(&x), FormatId::E4M3, false));
+        });
+        let rp = b.run("headline/packed/e4m3/1M", || {
+            scratch.qdq_into(std::hint::black_box(&x), &mut out, FormatId::E4M3, false);
+            std::hint::black_box(&out);
+        });
+        println!(
+            "headline: packed codec is {:.1}x the scalar mx_qdq at n=2^20 \
+             (scalar {:.3} ms, packed {:.3} ms)\n",
+            rs.mean_s / rp.mean_s,
+            rs.mean_s * 1e3,
+            rp.mean_s * 1e3
+        );
+    }
 
-    if artifacts.join("quantizer/manifest.json").exists() {
-        let session = Session::cpu()?;
-        let q = Quantizer::load(session, &artifacts.join("quantizer"))?;
-        let x = rng.normal_vec(q.rows * q.cols);
-        let bytes = (x.len() * 4) as f64;
+    // Matvec: allocation-per-row scalar reference vs the packed engine.
+    {
+        let (rows, cols) = (256, 4096);
+        let a = rng.normal_vec(rows * cols);
+        let x = rng.normal_vec(cols);
+        let flops = (2 * rows * cols) as f64;
+        let rr = b.run("matvec/scalar-ref/256x4096", || {
+            std::hint::black_box(dot::mx_matvec_ref(&a, rows, cols, &x, FormatId::E4M3));
+        });
+        println!("{}", rr.report_line(&format!("{:.2} GFLOP/s(emu)", flops / rr.mean_s / 1e9)));
+        let rp = b.run("matvec/packed/256x4096", || {
+            std::hint::black_box(dot::mx_matvec(&a, rows, cols, &x, FormatId::E4M3));
+        });
+        println!(
+            "{}",
+            rp.report_line(&format!(
+                "{:.2} GFLOP/s(emu)  [{:.1}x vs scalar-ref]",
+                flops / rp.mean_s / 1e9,
+                rr.mean_s / rp.mean_s
+            ))
+        );
+        // Steady-state: operands pre-encoded once (the sweep-loop shape).
+        let am = PackedMatrix::encode(&a, rows, cols, FormatId::E4M3, false);
+        let xv = PackedVec::encode(&x, FormatId::E4M3, false);
+        let re = b.run("matvec/packed-preenc/256x4096", || {
+            std::hint::black_box(gemm::matvec(&am, &xv));
+        });
+        println!("{}", re.report_line(&format!("{:.2} GFLOP/s(emu)", flops / re.mean_s / 1e9)));
         println!();
-        for id in [FormatId::E4M3, FormatId::E5M2, FormatId::Bf16] {
-            let r = b.run(&format!("hlo-pallas/{}/{}", id.name(), x.len()), || {
-                std::hint::black_box(q.qdq(&x, id as u8 as f32, 0.0).unwrap());
-            });
-            println!("{}", r.report_line(&format!("{:.2} GB/s", bytes / r.mean_s / 1e9)));
-        }
-    } else {
-        println!("\n(artifacts missing — skipping HLO kernel benches; run `make artifacts`)");
+    }
+
+    #[cfg(feature = "xla")]
+    bench_hlo_kernel(&b, &mut rng)?;
+    #[cfg(not(feature = "xla"))]
+    println!("(built without `xla` — skipping HLO/PJRT kernel benches)");
+    Ok(())
+}
+
+/// The compiled Pallas/HLO quantizer through PJRT (needs `make artifacts`).
+#[cfg(feature = "xla")]
+fn bench_hlo_kernel(b: &Bencher, rng: &mut Xoshiro256) -> anyhow::Result<()> {
+    use mxstab::runtime::{Quantizer, Session};
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("quantizer/manifest.json").exists() {
+        println!("(artifacts missing — skipping HLO kernel benches; run `make artifacts`)");
+        return Ok(());
+    }
+    let session = Session::cpu()?;
+    let q = Quantizer::load(session, &artifacts.join("quantizer"))?;
+    let x = rng.normal_vec(q.rows * q.cols);
+    let bytes = (x.len() * 4) as f64;
+    println!();
+    for id in [FormatId::E4M3, FormatId::E5M2, FormatId::Bf16] {
+        let r = b.run(&format!("hlo-pallas/{}/{}", id.name(), x.len()), || {
+            std::hint::black_box(q.qdq(&x, id as u8 as f32, 0.0).unwrap());
+        });
+        println!("{}", r.report_line(&format!("{:.2} GB/s", bytes / r.mean_s / 1e9)));
     }
     Ok(())
 }

@@ -1,13 +1,62 @@
-//! L3 bench: end-to-end training-step throughput per bundle × precision
-//! scheme — the quantity behind every sweep's wallclock. One section per
-//! paper workload family (proxy grid, LM ladder).
+//! L3 bench: end-to-end training-step throughput.
+//!
+//! Two faces:
+//! * Always available — the pure-rust emulated forward pass over the
+//!   packed MX engine: per-layer `C = A·Bᵀ` block GEMMs at the paper's
+//!   proxy/LM shapes. This is the quantity the packed codec exists to
+//!   accelerate and runs on a bare machine.
+//! * With `--features xla` + artifacts — real compiled-bundle step
+//!   throughput per precision scheme (the quantity behind every sweep's
+//!   wallclock). One section per paper workload family (proxy grid, LM
+//!   ladder).
 
 use mxstab::bench::Bencher;
-use mxstab::coordinator::Sweeper;
-use mxstab::formats::spec::{Fmt, FormatId};
-use mxstab::runtime::{list_bundles, Session, StepArgs};
+use mxstab::formats::gemm::{gemm, PackedMatrix};
+use mxstab::formats::spec::FormatId;
+use mxstab::util::rng::Xoshiro256;
 
 fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::default();
+    b.warmup = 2;
+
+    println!("== packed MX GEMM throughput (pure rust, no artifacts) ==\n");
+    let mut rng = Xoshiro256::seed_from(0);
+    // (m, n, k): proxy-MLP layer, LM attention-ish block, LM FFN.
+    for &(m, n, k) in &[(128usize, 128usize, 512usize), (256, 256, 1024), (512, 2048, 512)] {
+        let a = rng.normal_vec(m * k);
+        let w = rng.normal_vec(n * k);
+        let flops = (2 * m * n * k) as f64;
+        for id in [FormatId::E4M3, FormatId::E5M2] {
+            // Steady-state shape: weights stay packed across steps,
+            // activations are re-encoded every call (as a step would).
+            let wm = PackedMatrix::encode(&w, n, k, id, false);
+            let mut c = vec![0.0f32; m * n];
+            let r = b.run(&format!("gemm/{}/{}x{}x{}", id.name(), m, n, k), || {
+                let am = PackedMatrix::encode(std::hint::black_box(&a), m, k, id, false);
+                gemm(&am, &wm, &mut c);
+                std::hint::black_box(&c);
+            });
+            println!(
+                "{}",
+                r.report_line(&format!("{:.2} GFLOP/s(emu)", flops / r.mean_s / 1e9))
+            );
+        }
+    }
+    println!();
+
+    #[cfg(feature = "xla")]
+    bench_bundles(&b)?;
+    #[cfg(not(feature = "xla"))]
+    println!("(built without `xla` — skipping compiled-bundle step benches)");
+    Ok(())
+}
+
+#[cfg(feature = "xla")]
+fn bench_bundles(b: &Bencher) -> anyhow::Result<()> {
+    use mxstab::coordinator::Sweeper;
+    use mxstab::formats::spec::Fmt;
+    use mxstab::runtime::{list_bundles, Session, StepArgs};
+
     let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("index.json").exists() {
         println!("artifacts missing — run `make artifacts` first");
@@ -15,8 +64,6 @@ fn main() -> anyhow::Result<()> {
     }
     let session = Session::cpu()?;
     let sweeper = Sweeper::new(session, &artifacts);
-    let mut b = Bencher::default();
-    b.warmup = 2;
 
     let schemes = [
         ("fp32", Fmt::fp32()),

@@ -2,15 +2,16 @@
 //! pipeline (sweep → detect → analyze → render), one bench per
 //! table/figure family. This is the `cargo bench` face of the experiment
 //! harness — the full-scale regeneration lives in `mxstab experiment <id>`.
+//!
+//! The analytics slices are pure rust and always run; the training-backed
+//! slices need `--features xla` plus compiled artifacts.
 
 use std::time::Instant;
 
-use mxstab::analysis::{fit_chinchilla, LossPoint};
 use mxstab::analysis::spikes::count_spikes;
-use mxstab::coordinator::{Intervention, Job, RunConfig, Sweeper};
+use mxstab::analysis::{fit_chinchilla, LossPoint};
 use mxstab::formats::codes;
-use mxstab::formats::spec::{Fmt, FormatId};
-use mxstab::runtime::{list_bundles, Session};
+use mxstab::formats::spec::FormatId;
 use mxstab::util::rng::Xoshiro256;
 
 fn timed(name: &str, f: impl FnOnce() -> anyhow::Result<String>) {
@@ -22,7 +23,6 @@ fn timed(name: &str, f: impl FnOnce() -> anyhow::Result<String>) {
 }
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     println!("== per-figure pipeline benches (miniature slices) ==\n");
 
     // Fig. 5 left / format tables — pure rust, no artifacts needed.
@@ -73,6 +73,20 @@ fn main() -> anyhow::Result<()> {
         Ok(format!("{total} spikes"))
     });
 
+    #[cfg(feature = "xla")]
+    training_benches()?;
+    #[cfg(not(feature = "xla"))]
+    println!("\n(built without `xla` — skipping training-pipeline benches)");
+    Ok(())
+}
+
+#[cfg(feature = "xla")]
+fn training_benches() -> anyhow::Result<()> {
+    use mxstab::coordinator::{Intervention, Job, RunConfig, Sweeper};
+    use mxstab::formats::spec::Fmt;
+    use mxstab::runtime::{list_bundles, Session};
+
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("index.json").exists() {
         println!("\n(artifacts missing — skipping training-pipeline benches)");
         return Ok(());
@@ -86,15 +100,16 @@ fn main() -> anyhow::Result<()> {
 
     // Fig. 1/2/3-style mini-sweep: 2 formats × 20 steps.
     timed("fig1/2/3: mini sweep (2×20 steps)", || {
-        let jobs: Vec<Job> = [("fp32", Fmt::fp32()), ("e4m3", Fmt::full(FormatId::E4M3, FormatId::E4M3))]
-            .into_iter()
-            .map(|(l, f)| Job {
-                bundle: proxy.clone(),
-                cfg: RunConfig::new(l, f, 5e-4, 20),
-            })
-            .collect();
+        let jobs: Vec<Job> =
+            [("fp32", Fmt::fp32()), ("e4m3", Fmt::full(FormatId::E4M3, FormatId::E4M3))]
+                .into_iter()
+                .map(|(l, f)| Job { bundle: proxy.clone(), cfg: RunConfig::new(l, f, 5e-4, 20) })
+                .collect();
         let logs = sweeper.run_all(&jobs, true);
-        Ok(format!("final losses: {:?}", logs.iter().map(|l| l.final_loss()).collect::<Vec<_>>()))
+        Ok(format!(
+            "final losses: {:?}",
+            logs.iter().map(|l| l.final_loss()).collect::<Vec<_>>()
+        ))
     });
 
     // Fig. 7-style: snapshot + one intervention branch.

@@ -62,6 +62,10 @@ impl RunLog {
         self.rows.last().map(|r| r.m.loss as f64).unwrap_or(f64::NAN)
     }
 
+    pub fn diverged(&self) -> bool {
+        self.diverged_at.is_some()
+    }
+
     /// Mean loss over the last `k` logged rows (robust final-loss estimate).
     pub fn tail_loss(&self, k: usize) -> f64 {
         if self.rows.is_empty() {

@@ -1,14 +1,23 @@
 //! L3 coordinator — the paper's training-systems layer in rust.
 //!
-//! * [`run`] — single-run state machine (LR schedule, data feeding,
-//!   checkpoints, divergence handling)
-//! * [`sweep`] — multi-run scheduler over a thread pool
+//! * [`run`] — run configuration (LR schedule, optimizer, detector and
+//!   intervention wiring) plus, with the `xla` feature, the single-run
+//!   state machine that executes it over a PJRT bundle
+//! * [`sweep`] — sweep [`Job`] descriptions and (with `xla`) the
+//!   multi-run scheduler over a thread pool
 //! * [`detect`] — streaming instability detector (paper's spike rule +
 //!   divergence and grad-norm-growth tracking)
 //! * [`intervene`] — the Fig. 7 in-situ intervention engine (fmt rewrites
 //!   between steps; no recompilation)
 //! * [`metrics`] — metric capture, JSONL persistence
+//! * `checkpoint` — state persistence (`xla` only: snapshots device
+//!   buffers)
+//!
+//! Everything except actual PJRT execution is always compiled, so the
+//! detector/intervention/metrics machinery stays testable on a bare
+//! machine (DESIGN.md §4, §6).
 
+#[cfg(feature = "xla")]
 pub mod checkpoint;
 pub mod detect;
 pub mod intervene;
@@ -16,9 +25,14 @@ pub mod metrics;
 pub mod run;
 pub mod sweep;
 
+#[cfg(feature = "xla")]
 pub use checkpoint::CheckpointStore;
 pub use detect::{Detector, DetectorConfig, Verdict};
 pub use intervene::{Intervention, Policy, Trigger};
 pub use metrics::RunLog;
-pub use run::{LrSchedule, Optimizer, RunConfig, RunOutcome, Runner};
-pub use sweep::{Job, Sweeper};
+#[cfg(feature = "xla")]
+pub use run::{RunOutcome, Runner};
+pub use run::{LrSchedule, Optimizer, RunConfig};
+pub use sweep::Job;
+#[cfg(feature = "xla")]
+pub use sweep::Sweeper;

@@ -6,16 +6,26 @@
 //! Gaussian batches for the proxy), the instability detector, checkpoint
 //! snapshots, and the intervention engine.
 
+#[cfg(feature = "xla")]
 use std::sync::Arc;
+#[cfg(feature = "xla")]
 use std::time::Instant;
 
+#[cfg(feature = "xla")]
 use anyhow::Result;
 
-use super::detect::{Detector, DetectorConfig, Verdict};
+#[cfg(feature = "xla")]
+use super::detect::Detector;
+use super::detect::DetectorConfig;
+#[cfg(feature = "xla")]
+use super::detect::Verdict;
 use super::intervene::Policy;
+#[cfg(feature = "xla")]
 use super::metrics::RunLog;
+#[cfg(feature = "xla")]
 use crate::data::Corpus;
 use crate::formats::spec::{hyper_idx, Fmt};
+#[cfg(feature = "xla")]
 use crate::runtime::{Bundle, State, StepArgs};
 
 /// Learning-rate schedule (paper Appendix D: linear warmup + cosine decay).
@@ -97,7 +107,10 @@ impl RunConfig {
         }
     }
 
-    fn hyper(&self, step: usize) -> Vec<f32> {
+    /// Encode the per-step `hyper` runtime vector (LR, optimizer, noise).
+    /// (Only the xla Runner consumes it outside tests.)
+    #[cfg_attr(not(feature = "xla"), allow(dead_code))]
+    pub(crate) fn hyper(&self, step: usize) -> Vec<f32> {
         let mut h = vec![0.0f32; hyper_idx::HYPER_LEN];
         h[hyper_idx::LR] = self.lr.at(step);
         match self.optimizer {
@@ -114,17 +127,20 @@ impl RunConfig {
 
 /// Outcome of [`Runner::run`]: the metric log plus the final model state
 /// (kept so callers can eval / continue / snapshot).
+#[cfg(feature = "xla")]
 pub struct RunOutcome {
     pub log: RunLog,
     pub final_state: Option<State>,
 }
 
 /// Executes one training run over a loaded bundle.
+#[cfg(feature = "xla")]
 pub struct Runner {
     pub bundle: Arc<Bundle>,
     pub corpus: Option<Arc<Corpus>>,
 }
 
+#[cfg(feature = "xla")]
 impl Runner {
     pub fn new(bundle: Arc<Bundle>, corpus: Option<Arc<Corpus>>) -> Runner {
         Runner { bundle, corpus }

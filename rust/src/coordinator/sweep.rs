@@ -8,14 +8,22 @@
 //! states are per-run. Results stream into a `Vec<RunLog>` in submission
 //! order regardless of completion order.
 
+#[cfg(feature = "xla")]
 use std::collections::BTreeMap;
+#[cfg(feature = "xla")]
 use std::sync::{mpsc, Arc, Mutex};
 
+#[cfg(feature = "xla")]
 use anyhow::{anyhow, Context, Result};
 
+#[cfg(feature = "xla")]
 use super::metrics::RunLog;
-use super::run::{RunConfig, Runner};
+use super::run::RunConfig;
+#[cfg(feature = "xla")]
+use super::run::Runner;
+#[cfg(feature = "xla")]
 use crate::data::{Corpus, CorpusConfig};
+#[cfg(feature = "xla")]
 use crate::runtime::{Bundle, Session};
 
 /// One sweep item: which bundle to train and how.
@@ -26,6 +34,7 @@ pub struct Job {
 }
 
 /// Shared bundle/corpus registry + scheduler.
+#[cfg(feature = "xla")]
 pub struct Sweeper {
     session: Arc<Session>,
     artifacts: std::path::PathBuf,
@@ -34,6 +43,7 @@ pub struct Sweeper {
     pub jobs_parallel: usize,
 }
 
+#[cfg(feature = "xla")]
 impl Sweeper {
     pub fn new(session: Arc<Session>, artifacts: &std::path::Path) -> Sweeper {
         let jobs = std::env::var("MXSTAB_JOBS")
@@ -144,11 +154,5 @@ impl Sweeper {
             }
             out.into_iter().map(|o| o.unwrap()).collect()
         })
-    }
-}
-
-impl RunLog {
-    pub fn diverged(&self) -> bool {
-        self.diverged_at.is_some()
     }
 }

@@ -7,6 +7,13 @@
 //! with the inner accumulation in f32 (as hardware MX GEMMs accumulate in
 //! ≥fp32). It is used to cross-check the emulation identity the whole
 //! stack relies on: quantize→dequantize→f32-GEMM ≡ scale-carried MX GEMM.
+//!
+//! This module is the **scalar oracle** (DESIGN.md §2): `Vec<MxBlock>`
+//! based, one allocation per row, obviously correct. The production hot
+//! path lives in [`super::packed`] / [`super::gemm`] and is property-tested
+//! bitwise against these functions; [`mx_matvec`] below delegates to it,
+//! while [`mx_matvec_ref`] keeps the original allocation-per-row shape for
+//! cross-checks and benchmarks.
 
 use super::quant::{block_scale, quantize_elem};
 use super::spec::{ElemFormat, FormatId, BLOCK_SIZE};
@@ -76,7 +83,21 @@ pub fn emulated_dot(a: &[MxBlock], b: &[MxBlock]) -> f32 {
 
 /// Quantized matrix–vector product out[m] = MXdot(A[m,:], x) with blocks
 /// along the reduction axis — the shape every Linear in the stack uses.
+///
+/// Runs on the packed engine ([`super::gemm::matvec`]): the matrix is
+/// encoded once into a single codes+scales buffer and rows are fanned out
+/// over scoped threads. Bitwise identical to [`mx_matvec_ref`].
 pub fn mx_matvec(a: &[f32], rows: usize, cols: usize, x: &[f32], id: FormatId) -> Vec<f32> {
+    assert!(id.is_mx(), "mx format required, got {id:?}");
+    let am = super::gemm::PackedMatrix::encode(a, rows, cols, id, false);
+    let xv = super::packed::PackedVec::encode(x, id, false);
+    super::gemm::matvec(&am, &xv)
+}
+
+/// The original scalar matvec: re-encodes every row into `Vec<MxBlock>`
+/// and runs [`mx_dot`]. Kept as the oracle the packed path is checked
+/// against (and as the baseline in `benches/quantizer.rs`).
+pub fn mx_matvec_ref(a: &[f32], rows: usize, cols: usize, x: &[f32], id: FormatId) -> Vec<f32> {
     let f = id.elem().expect("mx format");
     let xb = encode(x, &f, 0);
     (0..rows)
@@ -162,5 +183,20 @@ mod tests {
         let z = encode(&vec![0.0; 32], &f, 0);
         let y = encode(&vec![1.0; 32], &f, 0);
         assert_eq!(mx_dot(&z, &y), 0.0);
+    }
+
+    #[test]
+    fn packed_matvec_bitwise_equals_scalar_ref() {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from(17);
+        let (rows, cols) = (23, 96);
+        let a: Vec<f32> = rng.normal_vec(rows * cols);
+        let x: Vec<f32> = rng.normal_vec(cols);
+        for id in [FormatId::E4M3, FormatId::E5M2, FormatId::E2M3, FormatId::E3M2] {
+            let fast = mx_matvec(&a, rows, cols, &x, id);
+            let oracle = mx_matvec_ref(&a, rows, cols, &x, id);
+            for (r, (f, o)) in fast.iter().zip(&oracle).enumerate() {
+                assert_eq!(f.to_bits(), o.to_bits(), "{id:?} row {r}: {f} vs {o}");
+            }
+        }
     }
 }

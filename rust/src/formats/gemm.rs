@@ -1,0 +1,383 @@
+//! Cache-tiled, scale-carried MX block GEMM over packed operands
+//! (DESIGN.md §2).
+//!
+//! Implements the paper's Appendix-A dot-product contract directly on the
+//! packed representation ([`PackedVec`]/[`PackedMatrix`]): element codes
+//! are expanded through the format's decode table and multiplied in f32,
+//! per-block partial sums are carried with the *product of the two shared
+//! scales* in f64 — never materialising a dequantized matrix. The
+//! accumulation order (f32 inner sum over the 32-element block, f64 across
+//! blocks, `(X_a · X_b) · Σ P_a P_b`) is exactly
+//! [`mx_dot`](super::dot::mx_dot)'s, so results are bitwise identical to
+//! the scalar oracle and agree with
+//! [`emulated_dot`](super::dot::emulated_dot) to f32 round-off.
+//!
+//! Parallelism: output rows are fanned out over `std::thread::scope`;
+//! within a worker the kernel tiles B's rows ([`TILE_N`]) so the packed B
+//! panel stays cache-resident while each A block is decoded once into a
+//! stack buffer and reused across the whole tile.
+
+use super::packed::{PackedFormat, PackedVec, ZERO_BLOCK};
+use super::quant::pow2;
+use super::spec::{FormatId, BLOCK_SIZE};
+
+/// B-row (output-column) tile width: 32 packed rows ≈ 32·(k + k/16) bytes
+/// of codes+scales per k-panel, sized to stay L1/L2-resident for the
+/// model shapes the stack sweeps.
+const TILE_N: usize = 32;
+
+/// Minimum output elements per worker before fan-out pays for itself.
+const PAR_MIN_OUT: usize = 1 << 12;
+
+/// A packed MX matrix, row-major, with quantization blocks along the
+/// contiguous (reduction) axis — the layout every Linear in the stack uses.
+#[derive(Debug, Clone)]
+pub struct PackedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: PackedVec,
+}
+
+impl PackedMatrix {
+    /// Encode a row-major `rows × cols` f32 matrix (`cols` must be a
+    /// multiple of [`BLOCK_SIZE`]). One allocation for the whole matrix —
+    /// this replaces the old `Vec<MxBlock>`-per-row encode.
+    pub fn encode(a: &[f32], rows: usize, cols: usize, id: FormatId, scale_bump: bool) -> Self {
+        assert_eq!(a.len(), rows * cols, "matrix shape mismatch");
+        assert_eq!(cols % BLOCK_SIZE, 0, "cols {cols} % 32 != 0");
+        PackedMatrix { rows, cols, data: PackedVec::encode(a, id, scale_bump) }
+    }
+
+    pub fn id(&self) -> FormatId {
+        self.data.id
+    }
+
+    fn blocks_per_row(&self) -> usize {
+        self.cols / BLOCK_SIZE
+    }
+
+    pub fn row_codes(&self, r: usize) -> &[u8] {
+        &self.data.codes[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_scales(&self, r: usize) -> &[i16] {
+        let bpr = self.blocks_per_row();
+        &self.data.scales[r * bpr..(r + 1) * bpr]
+    }
+
+    /// Dequantize the full matrix (diagnostics / oracle cross-checks).
+    pub fn decode(&self) -> Vec<f32> {
+        self.data.decode()
+    }
+}
+
+/// f64 scale per block, with zero blocks contributing exactly 0.0 (their
+/// codes are all zero, so the f32 inner sum is +0.0 and the product
+/// vanishes just like the scalar path's zero-scale block).
+#[inline]
+fn scale_f64(e: i16) -> f64 {
+    if e == ZERO_BLOCK {
+        0.0
+    } else {
+        pow2(e as i32) as f64
+    }
+}
+
+/// Scale-carried dot product of two packed rows (same contract and
+/// accumulation order as [`mx_dot`](super::dot::mx_dot)).
+pub fn packed_dot(
+    pf: &PackedFormat,
+    a_codes: &[u8],
+    a_scales: &[i16],
+    b_codes: &[u8],
+    b_scales: &[i16],
+) -> f32 {
+    assert_eq!(a_codes.len(), b_codes.len());
+    assert_eq!(a_codes.len() / BLOCK_SIZE, a_scales.len());
+    assert_eq!(b_codes.len() / BLOCK_SIZE, b_scales.len());
+    let lut = pf.decode_table();
+    let mut acc = 0.0f64;
+    for (kb, (ab, bb)) in
+        a_codes.chunks_exact(BLOCK_SIZE).zip(b_codes.chunks_exact(BLOCK_SIZE)).enumerate()
+    {
+        let (sa, sb) = (a_scales[kb], b_scales[kb]);
+        if sa == ZERO_BLOCK || sb == ZERO_BLOCK {
+            continue;
+        }
+        let mut inner = 0.0f32;
+        for k in 0..BLOCK_SIZE {
+            inner += lut[ab[k] as usize] * lut[bb[k] as usize];
+        }
+        acc += scale_f64(sa) * scale_f64(sb) * inner as f64;
+    }
+    acc as f32
+}
+
+/// Matvec worker: fill `out[i] = MXdot(A[r0+i,:], x)` for one row strip.
+fn matvec_strip(
+    a: &PackedMatrix,
+    lut: &[f32; 256],
+    xdec: &[f32],
+    xscale: &[f64],
+    r0: usize,
+    out: &mut [f32],
+) {
+    let bpr = a.blocks_per_row();
+    for (i, o) in out.iter_mut().enumerate() {
+        let r = r0 + i;
+        let codes = a.row_codes(r);
+        let scales = a.row_scales(r);
+        let mut acc = 0.0f64;
+        for kb in 0..bpr {
+            let sa = scales[kb];
+            if sa == ZERO_BLOCK || xscale[kb] == 0.0 {
+                continue;
+            }
+            let ab = &codes[kb * BLOCK_SIZE..(kb + 1) * BLOCK_SIZE];
+            let xb = &xdec[kb * BLOCK_SIZE..(kb + 1) * BLOCK_SIZE];
+            let mut inner = 0.0f32;
+            for k in 0..BLOCK_SIZE {
+                inner += lut[ab[k] as usize] * xb[k];
+            }
+            acc += scale_f64(sa) * xscale[kb] * inner as f64;
+        }
+        *o = acc as f32;
+    }
+}
+
+/// Quantized matrix–vector product `out[r] = MXdot(A[r,:], x)` on packed
+/// operands. Zero allocations beyond the output; parallel over rows.
+pub fn matvec(a: &PackedMatrix, x: &PackedVec) -> Vec<f32> {
+    assert_eq!(x.len(), a.cols, "matvec shape mismatch");
+    assert_eq!(x.id, a.id(), "operand formats differ");
+    let pf = PackedFormat::of(a.id());
+    let lut = pf.decode_table();
+
+    // Expand x once: relative element values + f64 block scales.
+    let mut xdec = vec![0.0f32; x.len()];
+    for (o, &c) in xdec.iter_mut().zip(&x.codes) {
+        *o = lut[c as usize];
+    }
+    let xscale: Vec<f64> = x.scales.iter().map(|&e| scale_f64(e)).collect();
+
+    let mut out = vec![0.0f32; a.rows];
+    let threads = worker_count(a.rows * a.cols, a.rows);
+    if threads <= 1 {
+        matvec_strip(a, lut, &xdec, &xscale, 0, &mut out);
+    } else {
+        let chunk = (a.rows + threads - 1) / threads;
+        let (xdec, xscale) = (&xdec, &xscale);
+        std::thread::scope(|s| {
+            for (ci, oc) in out.chunks_mut(chunk).enumerate() {
+                s.spawn(move || matvec_strip(a, lut, xdec, xscale, ci * chunk, oc));
+            }
+        });
+    }
+    out
+}
+
+/// GEMM worker: fill the `out_strip` rows starting at A row `r0`.
+fn gemm_strip(
+    a: &PackedMatrix,
+    b: &PackedMatrix,
+    lut: &[f32; 256],
+    bscale: &[f64],
+    r0: usize,
+    out_strip: &mut [f32],
+) {
+    let (n, bpr) = (b.rows, a.blocks_per_row());
+    let rows_here = out_strip.len() / n;
+    let mut acc = [0.0f64; TILE_N];
+    let mut adec = [0.0f32; BLOCK_SIZE];
+    for jt in (0..n).step_by(TILE_N) {
+        let jw = TILE_N.min(n - jt);
+        for i in 0..rows_here {
+            let r = r0 + i;
+            let a_codes = a.row_codes(r);
+            let a_scales = a.row_scales(r);
+            acc[..jw].fill(0.0);
+            for kb in 0..bpr {
+                let sa = a_scales[kb];
+                if sa == ZERO_BLOCK {
+                    continue;
+                }
+                let sa_f = scale_f64(sa);
+                let ab = &a_codes[kb * BLOCK_SIZE..(kb + 1) * BLOCK_SIZE];
+                for (d, &c) in adec.iter_mut().zip(ab) {
+                    *d = lut[c as usize];
+                }
+                for (jo, av) in acc[..jw].iter_mut().enumerate() {
+                    let j = jt + jo;
+                    let sb = bscale[j * bpr + kb];
+                    if sb == 0.0 {
+                        continue;
+                    }
+                    let bb = &b.data.codes[j * b.cols + kb * BLOCK_SIZE..][..BLOCK_SIZE];
+                    let mut inner = 0.0f32;
+                    for k in 0..BLOCK_SIZE {
+                        inner += adec[k] * lut[bb[k] as usize];
+                    }
+                    *av += sa_f * sb * inner as f64;
+                }
+            }
+            for (jo, &av) in acc[..jw].iter().enumerate() {
+                out_strip[i * n + jt + jo] = av as f32;
+            }
+        }
+    }
+}
+
+/// Packed block GEMM: `C[m×n] = A[m×k] · B[n×k]ᵀ`, blocks along k for both
+/// operands (B is stored with its reduction axis contiguous, i.e. as the
+/// transposed right-hand side — the layout `w·xᵀ` style Linears produce).
+///
+/// Tiling: each worker owns a horizontal strip of C; for every
+/// [`TILE_N`]-wide panel of B rows, each A block is decoded once into a
+/// stack buffer and swept across the panel, carrying `X_a·X_b` per block.
+pub fn gemm(a: &PackedMatrix, b: &PackedMatrix, out: &mut [f32]) {
+    assert_eq!(a.cols, b.cols, "reduction dims differ: {} vs {}", a.cols, b.cols);
+    assert_eq!(a.id(), b.id(), "operand formats differ");
+    assert_eq!(out.len(), a.rows * b.rows, "output shape mismatch");
+    let pf = PackedFormat::of(a.id());
+    let lut = pf.decode_table();
+    let n = b.rows;
+
+    // Per-block f64 scales for B, computed once.
+    let bscale: Vec<f64> = b.data.scales.iter().map(|&e| scale_f64(e)).collect();
+
+    let threads = worker_count(a.rows * n, a.rows);
+    if threads <= 1 {
+        gemm_strip(a, b, lut, &bscale, 0, out);
+    } else {
+        let rows_per = (a.rows + threads - 1) / threads;
+        let bscale = &bscale;
+        std::thread::scope(|s| {
+            for (ci, oc) in out.chunks_mut(rows_per * n).enumerate() {
+                s.spawn(move || gemm_strip(a, b, lut, bscale, ci * rows_per, oc));
+            }
+        });
+    }
+}
+
+/// Number of workers for `out_elems` outputs over `rows` splittable rows.
+fn worker_count(out_elems: usize, rows: usize) -> usize {
+    if out_elems < PAR_MIN_OUT || rows < 2 {
+        return 1;
+    }
+    let avail = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    avail.min(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::dot::{emulated_dot, encode, mx_dot};
+    use crate::util::prop;
+    use crate::util::rng::Xoshiro256;
+
+    const MX: [FormatId; 4] = [FormatId::E4M3, FormatId::E5M2, FormatId::E2M3, FormatId::E3M2];
+
+    #[test]
+    fn packed_dot_bitwise_equals_mx_dot() {
+        prop::forall("packed-dot≡mx-dot", 64, |rng| {
+            let a = prop::gen_f32_vec(rng, 96);
+            let b = prop::gen_f32_vec(rng, 96);
+            for id in MX {
+                let f = id.elem().unwrap();
+                let (sa, sb) = (encode(&a, &f, 0), encode(&b, &f, 0));
+                let reference = mx_dot(&sa, &sb);
+                let pf = PackedFormat::of(id);
+                let (pa, pb) =
+                    (PackedVec::encode(&a, id, false), PackedVec::encode(&b, id, false));
+                let got = packed_dot(pf, &pa.codes, &pa.scales, &pb.codes, &pb.scales);
+                if got.to_bits() != reference.to_bits() {
+                    return Err(format!("{id:?}: packed {got} vs scalar {reference}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matvec_bitwise_equals_scalar_block_path() {
+        let mut rng = Xoshiro256::seed_from(21);
+        let (rows, cols) = (37, 160); // odd row count exercises strip tails
+        let a: Vec<f32> = rng.normal_vec(rows * cols);
+        let x: Vec<f32> = rng.normal_vec(cols);
+        for id in MX {
+            let f = id.elem().unwrap();
+            let xb = encode(&x, &f, 0);
+            let expect: Vec<f32> = (0..rows)
+                .map(|r| mx_dot(&encode(&a[r * cols..(r + 1) * cols], &f, 0), &xb))
+                .collect();
+            let am = PackedMatrix::encode(&a, rows, cols, id, false);
+            let xv = PackedVec::encode(&x, id, false);
+            let got = matvec(&am, &xv);
+            for (r, (g, e)) in got.iter().zip(&expect).enumerate() {
+                assert_eq!(g.to_bits(), e.to_bits(), "{id:?} row {r}: {g} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_matches_emulated_dot_to_roundoff() {
+        let mut rng = Xoshiro256::seed_from(33);
+        let (m, n, k) = (13, 41, 96);
+        let a: Vec<f32> = rng.normal_vec(m * k);
+        let b: Vec<f32> = rng.normal_vec(n * k);
+        for id in [FormatId::E4M3, FormatId::E5M2] {
+            let f = id.elem().unwrap();
+            let am = PackedMatrix::encode(&a, m, k, id, false);
+            let bm = PackedMatrix::encode(&b, n, k, id, false);
+            let mut c = vec![0.0f32; m * n];
+            gemm(&am, &bm, &mut c);
+            for r in 0..m {
+                let ea = encode(&a[r * k..(r + 1) * k], &f, 0);
+                for j in 0..n {
+                    let eb = encode(&b[j * k..(j + 1) * k], &f, 0);
+                    let want = emulated_dot(&ea, &eb);
+                    let got = c[r * n + j];
+                    let denom = want.abs().max(1e-20);
+                    assert!(
+                        ((got - want) / denom).abs() < 1e-5,
+                        "{id:?} C[{r},{j}] = {got}, emulated {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_zero_blocks_and_sparse_rows() {
+        let (m, n, k) = (4, 5, 64);
+        let mut a = vec![0.0f32; m * k];
+        let mut b = vec![0.0f32; n * k];
+        // Row 1 of A non-zero only in block 0; row 2 of B only in block 1.
+        for i in 0..BLOCK_SIZE {
+            a[k + i] = 1.0 + i as f32 * 0.01;
+            b[2 * k + BLOCK_SIZE + i] = 0.5;
+        }
+        let am = PackedMatrix::encode(&a, m, k, FormatId::E4M3, false);
+        let bm = PackedMatrix::encode(&b, n, k, FormatId::E4M3, false);
+        let mut c = vec![1.0f32; m * n]; // poison: gemm must overwrite
+        gemm(&am, &bm, &mut c);
+        // Disjoint support → every product is exactly zero.
+        assert!(c.iter().all(|&v| v == 0.0), "disjoint blocks must dot to 0: {c:?}");
+    }
+
+    #[test]
+    fn packed_matrix_roundtrip_matches_qdq() {
+        let mut rng = Xoshiro256::seed_from(8);
+        let (rows, cols) = (6, 64);
+        let a = rng.normal_vec(rows * cols);
+        let am = PackedMatrix::encode(&a, rows, cols, FormatId::E2M3, false);
+        let (want, _) = crate::formats::quant::mx_qdq(&a, FormatId::E2M3, false);
+        let got = am.decode();
+        assert_eq!(
+            got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(am.row_codes(3).len(), cols);
+        assert_eq!(am.row_scales(3).len(), cols / BLOCK_SIZE);
+    }
+}

@@ -1,20 +1,38 @@
-//! Pure-rust MX numeric-format substrate.
+//! Pure-rust MX numeric-format substrate (DESIGN.md §2).
 //!
 //! Mirrors the OCP Microscaling spec exactly as implemented by the L1
 //! Pallas kernel and the jnp oracle (`python/compile/kernels/ref.py`):
-//! the three implementations are bit-identical, which integration tests
-//! verify by running the compiled quantizer artifact against this module.
+//! the implementations are bit-identical, which integration tests verify
+//! by running the compiled quantizer artifact against this module.
+//!
+//! Two implementations of the same semantics live here:
+//!
+//! * [`quant`] + [`dot`] — the scalar **reference oracle**: the block-32
+//!   shared-scale quantizer and the `Vec<MxBlock>` scale-carried dot. Slow,
+//!   obvious, and the ground truth every fast path is property-tested
+//!   against.
+//! * [`packed`] + [`gemm`] — the **hot path**: a packed bit-true codec
+//!   (u8 element codes + power-of-two block scales) and a cache-tiled,
+//!   thread-parallel block GEMM that carries scales instead of
+//!   dequantizing. Bitwise identical to the oracle; several times faster
+//!   and allocation-free in steady state.
+//!
+//! Plus the shared vocabulary:
 //!
 //! * [`spec`] — element-format constants + the runtime `fmt`/`hyper`
 //!   vector layouts shared with the python side
-//! * [`quant`] — the block-32 shared-scale quantizer
 //! * [`codes`] — exact code enumeration, relative code gaps (paper Fig. 5
-//!   left) and the Eq. 10 overflow criterion
+//!   left) and the Eq. 10 overflow criterion; the packed decode tables are
+//!   derived from [`codes::positive_codes`].
 
 pub mod codes;
 pub mod dot;
+pub mod gemm;
+pub mod packed;
 pub mod quant;
 pub mod spec;
 
+pub use gemm::{gemm, matvec, PackedMatrix};
+pub use packed::{packed_qdq, PackedFormat, PackedVec, QdqScratch};
 pub use quant::{mx_qdq, mx_qdq_with_mask, quantize_elem};
 pub use spec::{ElemFormat, Fmt, FormatId, BLOCK_SIZE};

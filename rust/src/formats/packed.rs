@@ -1,0 +1,602 @@
+//! Packed bit-true MX codec — the fast emulation hot path (DESIGN.md §2).
+//!
+//! The scalar reference ([`crate::formats::quant`]) re-derives band steps
+//! per element and materialises dequantized `f32`s; this module stores MX
+//! tensors the way hardware does — one element *code* byte per value plus
+//! one power-of-two shared scale per 32-element block — and moves between
+//! the two representations through lookup tables derived from
+//! [`super::codes::positive_codes`].
+//!
+//! Layout per encoded vector:
+//! * `codes: Vec<u8>` — `sign << 7 | payload`, where payload is the
+//!   ordinal of the positive code (0 = zero, 1 = smallest subnormal, ...,
+//!   `n_codes` = max normal). For the FP8 formats this is exactly the OCP
+//!   `s eeee mmm` / `s eeeee mm` bit layout; FP6 codes occupy the low 6
+//!   bits of the byte.
+//! * `scales: Vec<i16>` — per-block power-of-two exponents (E8M0 in the
+//!   OCP sense, widened to i16 so blocks whose absmax is an f32 subnormal
+//!   keep the exact scalar-path scale; [`PackedVec::scale_e8m0`] exposes
+//!   the clamped 8-bit biased form). [`ZERO_BLOCK`] marks all-zero blocks.
+//!
+//! Bit-exactness contract (property-tested in `tests/packed_roundtrip.rs`
+//! and re-checked here): `decode(encode(x))` is **bitwise identical** to
+//! [`mx_qdq`](crate::formats::quant::mx_qdq) for every [`FormatId`] and
+//! every input, including subnormals, all-zero blocks, clamp-region
+//! values, ±0, and inf/NaN. Encode performs the *same* float operations
+//! as `quantize_elem` (divide by a power-of-two band step, then
+//! `round_ties_even`), so the two paths cannot diverge by rounding.
+//!
+//! Large inputs are processed block-parallel with `std::thread::scope`;
+//! results are independent of the thread count because blocks are
+//! independent.
+
+use std::sync::OnceLock;
+
+use super::codes::positive_codes;
+use super::quant::{bf16_rne, pow2};
+use super::spec::{ElemFormat, FormatId, BLOCK_SIZE};
+
+/// Scale-exponent sentinel for an all-zero (or all-NaN) block: the block
+/// decodes to +0.0 regardless of codes, matching the scalar path's
+/// `block.fill(0.0)`.
+pub const ZERO_BLOCK: i16 = i16::MIN;
+
+/// Per-element work (in f32s) below which encode/decode stay single
+/// threaded; above, blocks are fanned out over `std::thread::scope`.
+const PAR_THRESHOLD: usize = 1 << 14;
+
+/// Precomputed encode/decode tables for one MX element format.
+pub struct PackedFormat {
+    pub id: FormatId,
+    pub elem: ElemFormat,
+    emin: i32,
+    emax: i32,
+    mbits: i32,
+    /// 2^mbits: first-normal mantissa integer.
+    m1: u64,
+    /// Mantissa integer of `max_norm` in the top band (clamp target).
+    kmax_top: u64,
+    /// Code payload of `+max_norm` (= number of positive codes).
+    max_payload: u8,
+    /// Band step `2^(e - mbits)` indexed by `e - emin`.
+    step: Vec<f32>,
+    /// code byte → value relative to the block scale (sign applied).
+    decode: [f32; 256],
+}
+
+impl PackedFormat {
+    fn new(id: FormatId) -> PackedFormat {
+        let elem = id.elem().expect("PackedFormat requires an MX element format");
+        let (emin, emax, mbits) = (elem.emin(), elem.emax(), elem.mbits as i32);
+        let m1 = 1u64 << mbits;
+        let codes = positive_codes(&elem);
+        assert!(codes.len() < 128, "{}: payload must fit 7 bits", elem.name);
+        let max_payload = codes.len() as u8;
+        // kmax_top from the top payload's mantissa field: payload layout is
+        // exp_field << mbits | (k - 2^mbits).
+        let kmax_top = m1 + (codes.len() as u64 & (m1 - 1));
+
+        let mut decode = [0.0f32; 256];
+        for p in 1..128usize {
+            // Payloads above max_payload are never produced by encode;
+            // clamp them to max_norm so foreign bytes stay finite.
+            let mag = codes[p.min(codes.len()) - 1] as f32;
+            decode[p] = mag;
+            decode[p | 0x80] = -mag;
+        }
+        // Code 0x80 is -0.0 (negative values that round to zero keep their
+        // sign, exactly like `quantize_elem`'s `-q` branch).
+        decode[0x80] = -0.0;
+
+        let step = (emin..=emax).map(|e| pow2(e - mbits)).collect();
+        PackedFormat { id, elem, emin, emax, mbits, m1, kmax_top, max_payload, step, decode }
+    }
+
+    /// The interned table set for an MX format (panics for fp32/bf16).
+    pub fn of(id: FormatId) -> &'static PackedFormat {
+        static TABLES: OnceLock<[PackedFormat; 4]> = OnceLock::new();
+        let tables = TABLES.get_or_init(|| {
+            [
+                PackedFormat::new(FormatId::E4M3),
+                PackedFormat::new(FormatId::E5M2),
+                PackedFormat::new(FormatId::E2M3),
+                PackedFormat::new(FormatId::E3M2),
+            ]
+        });
+        match id {
+            FormatId::E4M3 => &tables[0],
+            FormatId::E5M2 => &tables[1],
+            FormatId::E2M3 => &tables[2],
+            FormatId::E3M2 => &tables[3],
+            _ => panic!("{id:?} is not an MX element format"),
+        }
+    }
+
+    /// The 256-entry code → relative-value table (used by the GEMM kernel).
+    #[inline]
+    pub fn decode_table(&self) -> &[f32; 256] {
+        &self.decode
+    }
+
+    /// Payload (sign-stripped code) of ±max_norm — the "last bin".
+    #[inline]
+    pub fn max_payload(&self) -> u8 {
+        self.max_payload
+    }
+
+    /// Encode one element already divided by the block scale. Bit-exact
+    /// image of `quantize_elem`: same band selection, same RNE division.
+    #[inline]
+    pub fn encode_elem(&self, r: f32) -> u8 {
+        let u = r.to_bits();
+        let sign = ((u >> 31) as u8) << 7;
+        let a_bits = u & 0x7FFF_FFFF;
+        if a_bits == 0 {
+            // quantize_elem returns +0.0 for ±0 inputs (the `a == 0` early
+            // return precedes the sign branch).
+            return 0;
+        }
+        if a_bits >= 0x7F80_0000 {
+            // Inf clamps to ±max_norm; NaN becomes +max_norm (f32::min
+            // discards the NaN and `r < 0.0` is false for NaN).
+            return if a_bits > 0x7F80_0000 { self.max_payload } else { sign | self.max_payload };
+        }
+        let mut e = (((a_bits >> 23) as i32) - 127).clamp(self.emin, self.emax);
+        // Same float ops as the scalar path: a / 2^(e-m), then RNE. The
+        // `as u64` cast saturates, which the clamp below absorbs.
+        let q = f32::from_bits(a_bits) / self.step[(e - self.emin) as usize];
+        let mut k = q.round_ties_even() as u64;
+        if e == self.emax {
+            if k > self.kmax_top {
+                k = self.kmax_top; // clamp-to-max-normal (paper §6.1)
+            }
+        } else if k == 2 * self.m1 {
+            e += 1; // rounded up into the next band
+            k = self.m1;
+        }
+        if k == 0 {
+            return sign; // underflow keeps the sign: decode gives ±0.0
+        }
+        let payload = if k < self.m1 {
+            k as u32 // subnormal: exp_field 0
+        } else {
+            (((e - self.emin + 1) as u32) << self.mbits) | (k - self.m1) as u32
+        };
+        sign | payload as u8
+    }
+
+    /// Shared-scale exponent for one block (mirror of `block_scale`).
+    #[inline]
+    pub fn scale_exp(&self, block: &[f32], scale_bump: i32) -> i16 {
+        let m = block.iter().fold(0.0f32, |acc, &v| acc.max(v.abs()));
+        if m == 0.0 {
+            return ZERO_BLOCK;
+        }
+        // floor_log2 from the exponent bits, exactly like the scalar path
+        // (f32 subnormal absmax yields -127; inf yields 128).
+        let fl = (((m.to_bits() >> 23) & 0xFF) as i32) - 127;
+        (fl - self.emax + scale_bump) as i16
+    }
+
+    /// Encode a block-aligned slice into `codes`/`scales`. Returns the
+    /// number of elements that landed in the last quantization bin.
+    pub fn encode_slice(
+        &self,
+        x: &[f32],
+        codes: &mut [u8],
+        scales: &mut [i16],
+        scale_bump: i32,
+    ) -> usize {
+        assert_eq!(x.len() % BLOCK_SIZE, 0);
+        assert_eq!(x.len(), codes.len());
+        assert_eq!(x.len() / BLOCK_SIZE, scales.len());
+        let mut clamped = 0usize;
+        for ((xb, cb), s) in
+            x.chunks_exact(BLOCK_SIZE).zip(codes.chunks_exact_mut(BLOCK_SIZE)).zip(scales.iter_mut())
+        {
+            let se = self.scale_exp(xb, scale_bump);
+            *s = se;
+            if se == ZERO_BLOCK {
+                cb.fill(0);
+                continue;
+            }
+            let scale = pow2(se as i32);
+            for (c, &v) in cb.iter_mut().zip(xb) {
+                let code = self.encode_elem(v / scale);
+                clamped += ((code & 0x7F) == self.max_payload) as usize;
+                *c = code;
+            }
+        }
+        clamped
+    }
+
+    /// Decode `codes`/`scales` into `out` (bitwise equal to the scalar
+    /// quantize→dequantize output for data produced by `encode_slice`).
+    pub fn decode_slice(&self, codes: &[u8], scales: &[i16], out: &mut [f32]) {
+        assert_eq!(codes.len(), out.len());
+        assert_eq!(codes.len() % BLOCK_SIZE, 0);
+        assert_eq!(codes.len() / BLOCK_SIZE, scales.len());
+        for ((cb, s), ob) in
+            codes.chunks_exact(BLOCK_SIZE).zip(scales.iter()).zip(out.chunks_exact_mut(BLOCK_SIZE))
+        {
+            if *s == ZERO_BLOCK {
+                ob.fill(0.0);
+                continue;
+            }
+            let scale = pow2(*s as i32);
+            for (o, &c) in ob.iter_mut().zip(cb) {
+                *o = self.decode[c as usize] * scale;
+            }
+        }
+    }
+}
+
+/// Worker count for `len` elements of block-parallel work.
+fn n_threads(len: usize) -> usize {
+    if len < PAR_THRESHOLD {
+        return 1;
+    }
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    avail.min(len / (PAR_THRESHOLD / 2)).max(1)
+}
+
+/// Block-aligned chunk length splitting `len` across `threads` workers.
+fn chunk_len(len: usize, threads: usize) -> usize {
+    let blocks = len / BLOCK_SIZE;
+    let per = (blocks + threads - 1) / threads;
+    per.max(1) * BLOCK_SIZE
+}
+
+/// A packed MX vector: element codes + per-block shared-scale exponents.
+#[derive(Debug, Clone)]
+pub struct PackedVec {
+    pub id: FormatId,
+    pub codes: Vec<u8>,
+    pub scales: Vec<i16>,
+    /// Elements that hit the last quantization bin during encode.
+    pub clamped: usize,
+}
+
+impl PackedVec {
+    /// Encode a block-aligned f32 slice (parallel for large inputs).
+    pub fn encode(x: &[f32], id: FormatId, scale_bump: bool) -> PackedVec {
+        assert_eq!(x.len() % BLOCK_SIZE, 0, "len {} % 32 != 0", x.len());
+        let pf = PackedFormat::of(id);
+        let mut codes = vec![0u8; x.len()];
+        let mut scales = vec![0i16; x.len() / BLOCK_SIZE];
+        let bump = scale_bump as i32;
+        let threads = n_threads(x.len());
+        let clamped = if threads <= 1 {
+            pf.encode_slice(x, &mut codes, &mut scales, bump)
+        } else {
+            let chunk = chunk_len(x.len(), threads);
+            std::thread::scope(|s| {
+                let handles: Vec<_> = x
+                    .chunks(chunk)
+                    .zip(codes.chunks_mut(chunk))
+                    .zip(scales.chunks_mut(chunk / BLOCK_SIZE))
+                    .map(|((xs, cs), ss)| s.spawn(move || pf.encode_slice(xs, cs, ss, bump)))
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("encode worker")).sum()
+            })
+        };
+        PackedVec { id, codes, scales, clamped }
+    }
+
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.scales.len()
+    }
+
+    /// Packed memory footprint in bytes (codes + scales).
+    pub fn bytes(&self) -> usize {
+        self.codes.len() + 2 * self.scales.len()
+    }
+
+    /// Decode into a caller-provided buffer (parallel for large inputs).
+    pub fn decode_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.codes.len());
+        let pf = PackedFormat::of(self.id);
+        let threads = n_threads(out.len());
+        if threads <= 1 {
+            pf.decode_slice(&self.codes, &self.scales, out);
+        } else {
+            let chunk = chunk_len(out.len(), threads);
+            std::thread::scope(|s| {
+                for ((cs, ss), os) in self
+                    .codes
+                    .chunks(chunk)
+                    .zip(self.scales.chunks(chunk / BLOCK_SIZE))
+                    .zip(out.chunks_mut(chunk))
+                {
+                    s.spawn(move || pf.decode_slice(cs, ss, os));
+                }
+            });
+        }
+    }
+
+    pub fn decode(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.codes.len()];
+        self.decode_into(&mut out);
+        out
+    }
+
+    /// Block scale in OCP E8M0 form (biased u8), when representable.
+    /// `None` for zero blocks and for exponents outside `[-127, 127]`
+    /// (f32-subnormal absmax corner — kept exact via the i16 widening).
+    pub fn scale_e8m0(&self, block: usize) -> Option<u8> {
+        let e = self.scales[block];
+        if e == ZERO_BLOCK || !(-127..=127).contains(&(e as i32)) {
+            return None;
+        }
+        Some((e as i32 + 127) as u8)
+    }
+}
+
+/// Drop-in replacement for [`mx_qdq`](crate::formats::quant::mx_qdq):
+/// quantize→dequantize through the packed codec. Returns (values,
+/// last-bin count); bitwise identical to the scalar path for every
+/// [`FormatId`].
+pub fn packed_qdq(x: &[f32], id: FormatId, scale_bump: bool) -> (Vec<f32>, usize) {
+    match id {
+        FormatId::Fp32 => (x.to_vec(), 0),
+        FormatId::Bf16 => {
+            let mut out = x.to_vec();
+            let threads = n_threads(out.len());
+            if threads <= 1 {
+                for v in &mut out {
+                    *v = bf16_rne(*v);
+                }
+            } else {
+                let chunk = (out.len() + threads - 1) / threads;
+                std::thread::scope(|s| {
+                    for os in out.chunks_mut(chunk) {
+                        s.spawn(move || {
+                            for v in os {
+                                *v = bf16_rne(*v);
+                            }
+                        });
+                    }
+                });
+            }
+            (out, 0)
+        }
+        _ => {
+            let p = PackedVec::encode(x, id, scale_bump);
+            let mut out = vec![0.0f32; x.len()];
+            p.decode_into(&mut out);
+            (out, p.clamped)
+        }
+    }
+}
+
+/// Reusable-buffer roundtrip for hot loops: encode `x` into the scratch
+/// buffers and decode into `out`, with zero heap allocation after the
+/// first call. Returns the last-bin count.
+pub struct QdqScratch {
+    codes: Vec<u8>,
+    scales: Vec<i16>,
+}
+
+impl QdqScratch {
+    pub fn new() -> QdqScratch {
+        QdqScratch { codes: Vec::new(), scales: Vec::new() }
+    }
+
+    pub fn qdq_into(
+        &mut self,
+        x: &[f32],
+        out: &mut [f32],
+        id: FormatId,
+        scale_bump: bool,
+    ) -> usize {
+        assert_eq!(x.len() % BLOCK_SIZE, 0);
+        assert_eq!(x.len(), out.len());
+        self.codes.resize(x.len(), 0);
+        self.scales.resize(x.len() / BLOCK_SIZE, 0);
+        let pf = PackedFormat::of(id);
+        let bump = scale_bump as i32;
+        let threads = n_threads(x.len());
+        if threads <= 1 {
+            let c = pf.encode_slice(x, &mut self.codes, &mut self.scales, bump);
+            pf.decode_slice(&self.codes, &self.scales, out);
+            c
+        } else {
+            let chunk = chunk_len(x.len(), threads);
+            std::thread::scope(|s| {
+                let handles: Vec<_> = x
+                    .chunks(chunk)
+                    .zip(self.codes.chunks_mut(chunk))
+                    .zip(self.scales.chunks_mut(chunk / BLOCK_SIZE))
+                    .zip(out.chunks_mut(chunk))
+                    .map(|(((xs, cs), ss), os)| {
+                        s.spawn(move || {
+                            let c = pf.encode_slice(xs, cs, ss, bump);
+                            pf.decode_slice(cs, ss, os);
+                            c
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("qdq worker")).sum()
+            })
+        }
+    }
+}
+
+impl Default for QdqScratch {
+    fn default() -> Self {
+        QdqScratch::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::quant::{mx_qdq, quantize_elem};
+    use crate::util::prop;
+
+    const MX: [FormatId; 4] = [FormatId::E4M3, FormatId::E5M2, FormatId::E2M3, FormatId::E3M2];
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn decode_table_matches_positive_codes() {
+        for id in MX {
+            let pf = PackedFormat::of(id);
+            let codes = positive_codes(&pf.elem);
+            assert_eq!(pf.max_payload() as usize, codes.len());
+            for (i, &c) in codes.iter().enumerate() {
+                let p = i + 1;
+                assert_eq!(pf.decode[p], c as f32, "{id:?} payload {p}");
+                assert_eq!(pf.decode[p | 0x80], -(c as f32));
+            }
+            assert_eq!(pf.decode[0].to_bits(), 0.0f32.to_bits());
+            assert_eq!(pf.decode[0x80].to_bits(), (-0.0f32).to_bits());
+        }
+    }
+
+    #[test]
+    fn encode_elem_matches_quantize_elem_on_a_sweep() {
+        // Dense sweep of the interesting range: every band, the subnormal
+        // ramp, tie points, the clamp region, and sign.
+        for id in MX {
+            let pf = PackedFormat::of(id);
+            let f = pf.elem;
+            let mut r = -600.0f32;
+            while r < 600.0 {
+                let q_ref = quantize_elem(r, &f);
+                let q_packed = pf.decode[pf.encode_elem(r) as usize];
+                assert_eq!(
+                    q_packed.to_bits(),
+                    q_ref.to_bits(),
+                    "{id:?}: r={r} packed={q_packed} ref={q_ref}"
+                );
+                r += 0.013; // irrational-ish step: hits ties via drift
+            }
+            for exp in -160..=140 {
+                for &frac in &[1.0f32, 1.25, 1.5, 1.5000001, 1.75, 1.9999999] {
+                    let r = frac * 2.0f64.powi(exp) as f32;
+                    for r in [r, -r] {
+                        let q_ref = quantize_elem(r, &f);
+                        let q_packed = pf.decode[pf.encode_elem(r) as usize];
+                        assert_eq!(q_packed.to_bits(), q_ref.to_bits(), "{id:?}: r={r:e}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn special_values_match_scalar_path() {
+        for id in MX {
+            let pf = PackedFormat::of(id);
+            let f = pf.elem;
+            for r in [0.0f32, -0.0, f32::INFINITY, f32::NEG_INFINITY, f32::NAN, -f32::NAN] {
+                let q_ref = quantize_elem(r, &f);
+                let q_packed = pf.decode[pf.encode_elem(r) as usize];
+                assert_eq!(q_packed.to_bits(), q_ref.to_bits(), "{id:?}: r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_qdq_bitwise_equals_mx_qdq() {
+        prop::forall("packed≡qdq", 96, |rng| {
+            let x = prop::gen_f32_vec(rng, 128);
+            for id in FormatId::ALL {
+                let (a, ca) = mx_qdq(&x, id, false);
+                let (b, cb) = packed_qdq(&x, id, false);
+                if bits(&a) != bits(&b) {
+                    return Err(format!("{id:?}: value mismatch"));
+                }
+                if ca != cb {
+                    return Err(format!("{id:?}: clamp count {ca} vs {cb}"));
+                }
+                let (a, _) = mx_qdq(&x, id, true);
+                let (b, _) = packed_qdq(&x, id, true);
+                if bits(&a) != bits(&b) {
+                    return Err(format!("{id:?}: bump mismatch"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn adversarial_blocks_roundtrip() {
+        // Subnormal-only block, all-zero block, clamp cluster, mixed signs
+        // with f32 subnormals, inf/NaN contamination.
+        let tiny = f32::from_bits(1); // smallest f32 subnormal
+        let mut x = vec![0.0f32; 6 * BLOCK_SIZE];
+        for (i, v) in x[..BLOCK_SIZE].iter_mut().enumerate() {
+            *v = tiny * (i as f32 + 1.0);
+        }
+        // block 1: zeros (left as-is)
+        for v in x[2 * BLOCK_SIZE..3 * BLOCK_SIZE].iter_mut() {
+            *v = 0.897; // paper §6.1 cluster: whole block clamps
+        }
+        for (i, v) in x[3 * BLOCK_SIZE..4 * BLOCK_SIZE].iter_mut().enumerate() {
+            *v = if i % 2 == 0 { 1e-39 } else { -3.4e38 };
+        }
+        x[4 * BLOCK_SIZE] = f32::INFINITY;
+        x[4 * BLOCK_SIZE + 1] = -1.0;
+        x[5 * BLOCK_SIZE] = f32::NAN;
+        x[5 * BLOCK_SIZE + 1] = 2.5;
+        for id in MX {
+            let (a, ca) = mx_qdq(&x, id, false);
+            let (b, cb) = packed_qdq(&x, id, false);
+            assert_eq!(ca, cb, "{id:?} clamp count");
+            for (i, (p, q)) in a.iter().zip(&b).enumerate() {
+                let same = p.to_bits() == q.to_bits() || (p.is_nan() && q.is_nan());
+                assert!(same, "{id:?}[{i}]: scalar {p} packed {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_qdq_matches_and_reuses() {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from(11);
+        let x = rng.normal_vec(4096);
+        let mut scratch = QdqScratch::new();
+        let mut out = vec![0.0f32; x.len()];
+        for id in MX {
+            let c = scratch.qdq_into(&x, &mut out, id, false);
+            let (r, cr) = mx_qdq(&x, id, false);
+            assert_eq!(bits(&out), bits(&r), "{id:?}");
+            assert_eq!(c, cr);
+        }
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        // Large enough to engage the thread fan-out; must be bitwise
+        // identical to the single-threaded scalar result.
+        let mut rng = crate::util::rng::Xoshiro256::seed_from(5);
+        let x = rng.normal_vec(PAR_THRESHOLD * 4);
+        let (a, ca) = mx_qdq(&x, FormatId::E4M3, false);
+        let (b, cb) = packed_qdq(&x, FormatId::E4M3, false);
+        assert_eq!(bits(&a), bits(&b));
+        assert_eq!(ca, cb);
+    }
+
+    #[test]
+    fn e8m0_view_and_footprint() {
+        let x = vec![1.0f32; 64];
+        let p = PackedVec::encode(&x, FormatId::E4M3, false);
+        // absmax 1.0 → scale 2^(0-8): biased 119.
+        assert_eq!(p.scale_e8m0(0), Some(119));
+        assert_eq!(p.bytes(), 64 + 2 * 2);
+        let z = PackedVec::encode(&vec![0.0f32; 32], FormatId::E4M3, false);
+        assert_eq!(z.scale_e8m0(0), None);
+        assert_eq!(z.decode(), vec![0.0f32; 32]);
+    }
+}

@@ -86,14 +86,21 @@ pub fn mx_qdq_slice(data: &mut [f32], f: &ElemFormat, scale_bump: i32) -> usize 
 }
 
 /// bfloat16 round-to-nearest-even cast (returned as f32).
+///
+/// NaNs are preserved: the carry in the RNE add would otherwise walk a
+/// low-mantissa NaN (e.g. bits `0x7F80_0001`) into `0x7F80_0000` = +Inf.
+/// The result is quietened and truncated so it is a valid *bf16* NaN
+/// (sign and high mantissa bits kept), matching an IEEE convert-and-widen.
 #[inline]
 pub fn bf16_rne(x: f32) -> f32 {
     let bits = x.to_bits();
-    // RNE on the low 16 bits.
-    let round_bit = 0x8000u32;
+    if x.is_nan() {
+        return f32::from_bits((bits | 0x0040_0000) & 0xFFFF_0000);
+    }
+    // RNE on the low 16 bits (carry into the exponent handles band
+    // promotion and the overflow-to-inf of values above bf16's max).
     let lsb = (bits >> 16) & 1;
     let rounded = bits.wrapping_add(0x7FFF + lsb) & 0xFFFF_0000;
-    let _ = round_bit;
     f32::from_bits(rounded)
 }
 
@@ -255,6 +262,26 @@ mod tests {
         // Slightly above the tie rounds up to 1 + 2^-7.
         assert_eq!(bf16_rne(1.0 + 2.0f32.powi(-8) + 2.0f32.powi(-16)), 1.0 + 2.0f32.powi(-7));
         assert_eq!(bf16_rne(-2.5), -2.5);
+    }
+
+    #[test]
+    fn bf16_rne_preserves_nan_and_inf() {
+        // Regression: low-mantissa NaNs used to pick up the rounding carry
+        // and come back as +Inf.
+        let sneaky = f32::from_bits(0x7F80_0001);
+        assert!(sneaky.is_nan());
+        assert!(bf16_rne(sneaky).is_nan(), "low-mantissa NaN must stay NaN");
+        let neg = f32::from_bits(0xFF80_0001);
+        let out = bf16_rne(neg);
+        assert!(out.is_nan() && out.to_bits() >> 31 == 1, "sign preserved");
+        // The emulated value must itself be representable in bf16.
+        assert_eq!(bf16_rne(f32::NAN).to_bits() & 0xFFFF, 0);
+        // Infinities and overflow-to-inf are unchanged behaviour.
+        assert_eq!(bf16_rne(f32::INFINITY), f32::INFINITY);
+        assert_eq!(bf16_rne(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert_eq!(bf16_rne(f32::MAX), f32::INFINITY); // rounds up past bf16 max
+        assert_eq!(bf16_rne(0.0f32).to_bits(), 0);
+        assert_eq!(bf16_rne(-0.0f32).to_bits(), 0x8000_0000);
     }
 
     // ---------------- property tests ----------------

@@ -15,12 +15,20 @@
 //! Python never runs on the training path: this crate loads the HLO
 //! artifacts through the PJRT C API (`xla` crate) and owns the entire
 //! training loop.
+//!
+//! Build surface: the default feature set is **PJRT-free** — the formats
+//! substrate (scalar oracle + packed codec/GEMM engine), analysis, report
+//! and detector/intervention machinery all build and test on a bare
+//! machine. `--features xla` additionally compiles the PJRT runtime, the
+//! execution side of the coordinator, and the experiment drivers
+//! (DESIGN.md §6).
 
 pub mod analysis;
 pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+#[cfg(feature = "xla")]
 pub mod experiments;
 pub mod formats;
 pub mod report;

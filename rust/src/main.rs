@@ -8,18 +8,24 @@
 //! mxstab fit --csv <file>                      # Chinchilla fit over (N,D,loss) rows
 //! ```
 
-use std::sync::Arc;
-
 use anyhow::{anyhow, bail, Context, Result};
 use mxstab::analysis::{fit_chinchilla, LossPoint};
 use mxstab::config::Config;
-use mxstab::coordinator::{LrSchedule, RunConfig, Runner};
-use mxstab::experiments;
-use mxstab::formats::spec::{Fmt, FormatId};
-use mxstab::runtime::{list_bundles, Session};
+use mxstab::formats::spec::FormatId;
 use mxstab::util::args::Args;
 use mxstab::util::table::Table;
 
+#[cfg(feature = "xla")]
+use mxstab::formats::spec::Fmt;
+
+#[cfg(feature = "xla")]
+use mxstab::coordinator::{LrSchedule, RunConfig, Runner};
+#[cfg(feature = "xla")]
+use mxstab::experiments;
+#[cfg(feature = "xla")]
+use mxstab::runtime::{list_bundles, Session};
+
+#[cfg(feature = "xla")]
 fn parse_fmt(spec: &str) -> Result<Fmt> {
     // Grammar: fp32 | mx-mix | <w>-<a>[:fwd][:noln][:bump]  e.g. e4m3-bf16:fwd
     if spec == "fp32" {
@@ -47,6 +53,7 @@ fn parse_fmt(spec: &str) -> Result<Fmt> {
     Ok(fmt)
 }
 
+#[cfg(feature = "xla")]
 fn cmd_info(cfg: &Config) -> Result<()> {
     let session = Session::cpu()?;
     println!("platform: {}", session.platform());
@@ -65,6 +72,7 @@ fn cmd_info(cfg: &Config) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_train(cfg: &Config, args: &Args) -> Result<()> {
     let bundle_name = args
         .get("bundle")
@@ -163,11 +171,15 @@ fn cmd_fit(args: &Args) -> Result<()> {
 fn main() -> Result<()> {
     let args = Args::from_env();
     let cfg = Config::from_args(&args)?;
+    let _ = &cfg; // only the xla-gated subcommands consume it in minimal builds
     match args.subcommand.as_deref() {
+        #[cfg(feature = "xla")]
         Some("info") => cmd_info(&cfg),
+        #[cfg(feature = "xla")]
         Some("train") => cmd_train(&cfg, &args),
         Some("codes") => cmd_codes(&args),
         Some("fit") => cmd_fit(&args),
+        #[cfg(feature = "xla")]
         Some("experiment") | Some("sweep") => {
             let id = args
                 .positional
@@ -176,11 +188,19 @@ fn main() -> Result<()> {
                 .or_else(|| args.get("experiment"))
                 .ok_or_else(|| anyhow!("experiment id required (or 'all')"))?
                 .to_string();
-            let session: Arc<Session> = Session::cpu()?;
+            let session = Session::cpu()?;
             let ctx = experiments::Ctx::new(cfg, session, args.flag("force"));
             experiments::run(&ctx, &id)?;
             println!("reports written under {}", ctx.cfg.reports.display());
             Ok(())
+        }
+        #[cfg(not(feature = "xla"))]
+        Some(sub @ ("info" | "train" | "experiment" | "sweep")) => {
+            bail!(
+                "`mxstab {sub}` needs the PJRT runtime: rebuild with \
+                 `cargo build --release --features xla` (and a real xla \
+                 backend in place of rust/vendor/xla — see DESIGN.md §6)"
+            )
         }
         other => {
             if let Some(o) = other {

@@ -1,0 +1,343 @@
+//! PJRT execution backend — loads AOT artifacts and executes them on the
+//! hot path. Compiled only with the `xla` feature (DESIGN.md §6).
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format
+//! (jax ≥0.5 protos are rejected by xla_extension 0.5.1 — see DESIGN.md).
+//!
+//! A [`Session`] owns the PJRT client and a compile cache; a [`Bundle`]
+//! wraps one artifact directory (init/step/paired/eval executables + the
+//! manifest) and exposes typed `init` / `step` / `eval` entry points over
+//! a [`State`] (the flat tensor list whose layout the manifest defines).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::Manifest;
+use super::{Metrics, StepArgs};
+
+/// Model state: the flat, manifest-ordered tensor list (params ‖ adam-m ‖
+/// adam-v ‖ teacher), kept as *device* buffers between steps so the hot
+/// path never round-trips the state through host literals — step outputs
+/// (untupled by the patched PJRT wrapper) feed straight back as inputs.
+pub struct State(pub Vec<xla::PjRtBuffer>);
+
+// PJRT CPU buffers are internally synchronized; moving a State between
+// coordinator threads is safe.
+unsafe impl Send for State {}
+
+impl State {
+    /// Deep-copy via a host snapshot (used by checkpoint rings and the
+    /// Fig. 7 branch-from-snapshot experiments).
+    pub fn clone_state(&self) -> Result<State> {
+        let mut out = Vec::with_capacity(self.0.len());
+        let mut lits = Vec::with_capacity(self.0.len());
+        for b in &self.0 {
+            let lit = b.to_literal_sync()?;
+            out.push(b.client().buffer_from_host_literal(None, &lit)?);
+            lits.push(lit); // async copy: keep the literal alive
+        }
+        // Await every copy before releasing the source literals.
+        for b in &out {
+            let _ = b.to_literal_sync()?;
+        }
+        drop(lits);
+        Ok(State(out))
+    }
+
+    /// Fetch one tensor by state index as f32 host data.
+    pub fn tensor_f32(&self, idx: usize) -> Result<Vec<f32>> {
+        Ok(self.0[idx].to_literal_sync()?.to_vec::<f32>()?)
+    }
+}
+
+/// Build an f32 literal with a shape.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let l = xla::Literal::vec1(data);
+    if dims.len() == 1 && dims[0] == data.len() {
+        return Ok(l);
+    }
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(l.reshape(&dims)?)
+}
+
+/// Build an i32 literal with a shape.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let l = xla::Literal::vec1(data);
+    if dims.len() == 1 && dims[0] == data.len() {
+        return Ok(l);
+    }
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(l.reshape(&dims)?)
+}
+
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Process-wide PJRT session: client + executable cache.
+///
+/// Compilation of a step module takes O(100ms–1s); the cache makes sweeps
+/// that revisit the same bundle free. The cache key is the HLO file path.
+pub struct Session {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// The PJRT CPU client is thread-safe (TFRT CPU client); executions from
+// multiple rust threads are serialized internally per device queue.
+unsafe impl Send for Session {}
+unsafe impl Sync for Session {}
+
+impl Session {
+    pub fn cpu() -> Result<Arc<Session>> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Arc::new(Session { client, cache: Mutex::new(HashMap::new()) }))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached).
+    pub fn load(&self, path: &Path) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?,
+        );
+        self.cache.lock().unwrap().insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute with literal inputs; returns the (untupled) output buffers.
+    pub fn call_buffers(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut out = exe.execute::<xla::Literal>(inputs)?;
+        Ok(out.remove(0))
+    }
+
+    /// Execute and download the results as host literals.
+    pub fn call(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        self.call_buffers(exe, inputs)?
+            .iter()
+            .map(|b| Ok(b.to_literal_sync()?))
+            .collect()
+    }
+
+    /// Upload a host literal to the device.
+    pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+}
+
+/// One artifact directory: manifest + compiled executables.
+pub struct Bundle {
+    pub manifest: Manifest,
+    session: Arc<Session>,
+    init_exe: Arc<xla::PjRtLoadedExecutable>,
+    step_exe: Arc<xla::PjRtLoadedExecutable>,
+    paired_exe: Option<Arc<xla::PjRtLoadedExecutable>>,
+    eval_exe: Option<Arc<xla::PjRtLoadedExecutable>>,
+    tokens_dims: Option<Vec<usize>>,
+}
+
+// Executables are immutable after compilation and the TFRT CPU client is
+// thread-safe; bundles are shared read-only across sweep worker threads.
+unsafe impl Send for Bundle {}
+unsafe impl Sync for Bundle {}
+
+impl Bundle {
+    pub fn load(session: Arc<Session>, dir: &Path) -> Result<Bundle> {
+        let manifest = Manifest::load(dir)?;
+        if manifest.kind == "quantizer" {
+            bail!("quantizer bundles are loaded via Quantizer::load");
+        }
+        let init_exe = session.load(&manifest.function("init")?.file)?;
+        let step_exe = session.load(&manifest.function("step")?.file)?;
+        let paired_exe = match manifest.functions.get("paired") {
+            Some(f) => Some(session.load(&f.file)?),
+            None => None,
+        };
+        let eval_exe = match manifest.functions.get("eval") {
+            Some(f) => Some(session.load(&f.file)?),
+            None => None,
+        };
+        let tokens_dims = manifest
+            .function("step")?
+            .inputs
+            .iter()
+            .find(|t| t.name == "tokens")
+            .map(|t| t.shape.clone());
+        Ok(Bundle { manifest, session, init_exe, step_exe, paired_exe, eval_exe, tokens_dims })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.manifest.name
+    }
+
+    pub fn has_paired(&self) -> bool {
+        self.paired_exe.is_some()
+    }
+
+    /// Expected token batch shape for LM bundles.
+    pub fn tokens_shape(&self) -> Option<(usize, usize)> {
+        self.tokens_dims.as_ref().map(|d| (d[0], d[1]))
+    }
+
+    /// Initialize model + optimizer state from a seed (device-resident).
+    pub fn init(&self, seed: i32, init_mode: f32, gain: f32) -> Result<State> {
+        let outs = self.session.call_buffers(
+            &self.init_exe,
+            &[lit_scalar_i32(seed), lit_scalar_f32(init_mode), lit_scalar_f32(gain)],
+        )?;
+        if outs.len() != self.manifest.state.len() {
+            bail!(
+                "init returned {} tensors, manifest expects {}",
+                outs.len(),
+                self.manifest.state.len()
+            );
+        }
+        Ok(State(outs))
+    }
+
+    /// Build the non-state (owned) tail inputs for a step call.
+    fn extra_inputs(&self, args: &StepArgs) -> Result<Vec<xla::Literal>> {
+        let mut extras: Vec<xla::Literal> = Vec::with_capacity(5);
+        if let Some(tok) = &args.tokens {
+            let dims = self.tokens_dims.clone().ok_or_else(|| anyhow!("bundle takes no tokens"))?;
+            extras.push(lit_i32(tok, &dims)?);
+        } else if self.tokens_dims.is_some() {
+            bail!("LM bundle requires tokens");
+        }
+        extras.push(lit_f32(&args.fmt, &[args.fmt.len()])?);
+        extras.push(lit_f32(&args.hyper, &[args.hyper.len()])?);
+        extras.push(lit_scalar_i32(args.seed));
+        extras.push(lit_scalar_i32(args.step));
+        Ok(extras)
+    }
+
+    fn run_step(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        state: State,
+        args: &StepArgs,
+    ) -> Result<(State, Metrics)> {
+        // Only the small extras (tokens/fmt/hyper/scalars) cross the host
+        // boundary; the model state stays device-resident end to end.
+        // NB: host→device literal copies are asynchronous — the literals
+        // must outlive the execution (awaited via the metrics download).
+        let extra_lits = self.extra_inputs(args)?;
+        let extra_bufs: Vec<xla::PjRtBuffer> = extra_lits
+            .iter()
+            .map(|l| self.session.upload(l))
+            .collect::<Result<_>>()?;
+        let inputs: Vec<&xla::PjRtBuffer> = state.0.iter().chain(extra_bufs.iter()).collect();
+        let mut out = exe.execute_b::<&xla::PjRtBuffer>(&inputs)?;
+        drop(inputs);
+        drop(state);
+        let mut outs = out.remove(0);
+        let met_buf = outs.pop().ok_or_else(|| anyhow!("empty step output"))?;
+        // Downloading the metrics awaits step completion, after which the
+        // extras (and their source literals) are safe to drop.
+        let met = Metrics::from_vec(&met_buf.to_literal_sync()?.to_vec::<f32>()?);
+        drop(extra_bufs);
+        drop(extra_lits);
+        Ok((State(outs), met))
+    }
+
+    /// One training step.
+    pub fn step(&self, state: State, args: &StepArgs) -> Result<(State, Metrics)> {
+        self.run_step(&self.step_exe, state, args)
+    }
+
+    /// One training step that additionally measures gradient bias against
+    /// an FP32 backward pass at the same parameter point (Fig. 4).
+    pub fn paired_step(&self, state: State, args: &StepArgs) -> Result<(State, Metrics)> {
+        let exe = self
+            .paired_exe
+            .as_ref()
+            .ok_or_else(|| anyhow!("bundle {} has no paired fn", self.name()))?;
+        self.run_step(exe, state, args)
+    }
+
+    /// LM validation loss over one token batch (params from `state`).
+    pub fn eval(&self, state: &State, tokens: &[i32], fmt: &[f32]) -> Result<f32> {
+        let exe = self
+            .eval_exe
+            .as_ref()
+            .ok_or_else(|| anyhow!("bundle {} has no eval fn", self.name()))?;
+        let k = self.manifest.state.len() / 3;
+        let dims = self.tokens_dims.clone().ok_or_else(|| anyhow!("no tokens shape"))?;
+        // Keep the host literals alive until the execution is awaited (the
+        // host→device copies are asynchronous).
+        let extra_lits = [lit_i32(tokens, &dims)?, lit_f32(fmt, &[fmt.len()])?];
+        let extra: Vec<xla::PjRtBuffer> =
+            extra_lits.iter().map(|l| self.session.upload(l)).collect::<Result<_>>()?;
+        let inputs: Vec<&xla::PjRtBuffer> = state.0[..k].iter().chain(extra.iter()).collect();
+        let mut out = exe.execute_b::<&xla::PjRtBuffer>(&inputs)?;
+        let outs = out.remove(0);
+        let loss = outs[0].to_literal_sync()?.to_vec::<f32>()?[0];
+        drop(extra);
+        drop(extra_lits);
+        Ok(loss)
+    }
+}
+
+/// The standalone L1 quantizer artifact (golden tests + benches).
+pub struct Quantizer {
+    pub manifest: Manifest,
+    session: Arc<Session>,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Quantizer {
+    pub fn load(session: Arc<Session>, dir: &Path) -> Result<Quantizer> {
+        let manifest = Manifest::load(dir)?;
+        let f = manifest.function("step")?;
+        let exe = session.load(&f.file)?;
+        let (rows, cols) = (f.inputs[0].shape[0], f.inputs[0].shape[1]);
+        Ok(Quantizer { manifest, session, exe, rows, cols })
+    }
+
+    /// Quantize→dequantize a [rows, cols] f32 matrix; returns (y, last-bin
+    /// fraction).
+    pub fn qdq(&self, x: &[f32], fmt_id: f32, scale_bump: f32) -> Result<(Vec<f32>, f32)> {
+        if x.len() != self.rows * self.cols {
+            bail!("expected {} elements, got {}", self.rows * self.cols, x.len());
+        }
+        let inputs = vec![
+            lit_f32(x, &[self.rows, self.cols])?,
+            lit_scalar_f32(fmt_id),
+            lit_scalar_f32(scale_bump),
+        ];
+        let outs = self.session.call(&self.exe, &inputs)?;
+        let y = outs[0].to_vec::<f32>()?;
+        let frac = outs[1].to_vec::<f32>()?[0];
+        Ok((y, frac))
+    }
+}

@@ -5,7 +5,7 @@
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, OnceLock};
 
-use mxstab::formats::{mx_qdq, Fmt, FormatId};
+use mxstab::formats::{mx_qdq, packed_qdq, Fmt, FormatId};
 use mxstab::runtime::{Bundle, Quantizer, Session, State, StepArgs};
 use mxstab::util::rng::Xoshiro256;
 
@@ -52,7 +52,12 @@ fn quantizer_artifact_matches_rust_mirror_bitexact() {
     }
     for id in FormatId::ALL {
         let (y_hlo, frac_hlo) = q.qdq(&x, id as u8 as f32, 0.0).unwrap();
-        let (y_rs, clamped) = mx_qdq(&x, id, false);
+        // The packed engine is the production emulation path; hold it to
+        // the golden artifact directly, and to the scalar oracle bitwise.
+        let (y_rs, clamped) = packed_qdq(&x, id, false);
+        let (y_scalar, clamped_scalar) = mx_qdq(&x, id, false);
+        assert_eq!(y_rs, y_scalar, "format {id:?}: packed vs scalar mismatch");
+        assert_eq!(clamped, clamped_scalar, "format {id:?}: clamp count");
         assert_eq!(y_hlo, y_rs, "format {id:?}: HLO vs rust mismatch");
         let frac_rs = clamped as f32 / n as f32;
         assert!(

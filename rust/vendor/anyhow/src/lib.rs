@@ -1,0 +1,196 @@
+//! Offline vendored shim of the `anyhow` error API.
+//!
+//! The build environment has no crates.io access, so this workspace member
+//! provides the (small) subset of `anyhow` that mxstab uses, under the same
+//! crate name and paths: [`Error`], [`Result`], the [`Context`] extension
+//! trait, and the `anyhow!` / `bail!` / `ensure!` macros. Swapping this
+//! path dependency for the real `anyhow = "1"` is a one-line change in
+//! `rust/Cargo.toml`; no source edits are required.
+//!
+//! Semantics intentionally mirrored from upstream:
+//! * `?` converts any `E: std::error::Error + Send + Sync + 'static` into
+//!   [`Error`], capturing the `source()` chain.
+//! * `Display` prints the outermost message; alternate `{:#}` prints the
+//!   whole chain joined by `": "`.
+//! * `Debug` (what `fn main() -> Result<()>` prints) shows the message plus
+//!   a `Caused by:` list.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Error type: an outermost message plus an optional cause chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message (the `anyhow!` macro).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap `self` with an additional layer of context.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The error chain, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = vec![self.msg.as_str()];
+        let mut cur = &self.source;
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = &e.source;
+        }
+        out
+    }
+
+    /// The innermost error message.
+    pub fn root_cause(&self) -> &str {
+        *self.chain().last().unwrap()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain().join(": "))
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let chain = self.chain();
+        if chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`, exactly like
+// upstream anyhow: that keeps this blanket `From` coherent and makes `?`
+// work on any std-error result.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for m in msgs.into_iter().rev() {
+            err = Some(Error { msg: m, source: err.map(Box::new) });
+        }
+        err.unwrap()
+    }
+}
+
+/// `anyhow::Result<T>` — alias with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        Err(e).context("reading config")
+    }
+
+    #[test]
+    fn chain_and_alternate_display() {
+        let e = fails_io().unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: gone");
+        assert_eq!(e.root_cause(), "gone");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"));
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x == 0 {
+                bail!("zero not allowed");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero not allowed");
+        assert_eq!(f(-2).unwrap_err().to_string(), "negative: -2");
+        let e = anyhow!("plain {}", 7);
+        assert_eq!(e.to_string(), "plain 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("41").unwrap(), 41);
+        assert!(parse("nope").is_err());
+    }
+}

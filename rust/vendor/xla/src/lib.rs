@@ -1,0 +1,247 @@
+//! Offline stub of the PJRT/XLA binding used by mxstab's `runtime` layer.
+//!
+//! The real backend is an `xla-rs`-style binding over `libxla_extension`
+//! (PJRT C API). That shared library is multi-GB and unavailable in the
+//! offline build image, so this workspace member mirrors the *exact* API
+//! surface `mxstab::runtime` consumes:
+//!
+//! * [`Literal`] — a fully functional host-side tensor container
+//!   (f32/i32, shape, reshape, typed extraction).
+//! * [`PjRtClient`] / [`PjRtBuffer`] / [`PjRtLoadedExecutable`] /
+//!   [`HloModuleProto`] / [`XlaComputation`] — type- and
+//!   signature-compatible stubs whose device entry points return
+//!   [`Error::Unavailable`] at runtime.
+//!
+//! `PjRtClient::cpu()` fails first, so the device-side methods are
+//! unreachable in practice; they exist so `cargo build --features xla`
+//! type-checks everywhere (benches, examples, integration tests) without
+//! the native library. Deploying for real means replacing this path
+//! dependency in `rust/Cargo.toml` with the actual binding — no source
+//! changes in mxstab (see DESIGN.md §6).
+
+use std::fmt;
+
+/// Stub error: every device operation reports the backend as unavailable.
+#[derive(Debug, Clone)]
+pub enum Error {
+    Unavailable(&'static str),
+    Shape(String),
+    Type(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: PJRT backend unavailable (built against the offline `xla` stub; \
+                 swap rust/vendor/xla for a real binding to run compiled bundles)"
+            ),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Type(m) => write!(f, "type error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can hold.
+#[derive(Debug, Clone)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Types storable in a [`Literal`] (mirror of the binding's `NativeType`).
+pub trait NativeType: Copy {
+    fn wrap(v: Vec<Self>) -> Data;
+    fn extract(d: &Data) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn extract(d: &Data) -> Result<Vec<Self>> {
+        match d {
+            Data::F32(v) => Ok(v.clone()),
+            Data::I32(_) => Err(Error::Type("literal holds i32, requested f32".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn extract(d: &Data) -> Result<Vec<Self>> {
+        match d {
+            Data::I32(v) => Ok(v.clone()),
+            Data::F32(_) => Err(Error::Type("literal holds f32, requested i32".into())),
+        }
+    }
+}
+
+/// Host-side tensor value. Fully functional in the stub.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data.to_vec()) }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: vec![], data: T::wrap(vec![v]) }
+    }
+
+    /// Reshape without moving data; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Extract as a typed host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(&self.data)
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Parsed HLO module (stub: construction always fails).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation wrapper (stub).
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client handle (stub: `cpu()` always fails, so downstream device
+/// methods are unreachable but type-check).
+#[derive(Debug, Clone)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::Unavailable("buffer_from_host_literal"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Device buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+
+    pub fn client(&self) -> PjRtClient {
+        PjRtClient(())
+    }
+}
+
+/// Compiled executable handle (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with owned literal inputs.
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _inputs: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    /// Execute with device-buffer inputs.
+    pub fn execute_b<T: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _inputs: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims(), &[4]);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.dims(), &[2, 2]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(m.to_vec::<i32>().is_err());
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.element_count(), 1);
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn device_paths_report_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("unavailable"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
