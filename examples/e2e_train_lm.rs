@@ -18,7 +18,7 @@ use std::sync::Arc;
 
 use mxstab::coordinator::{LrSchedule, RunConfig, Sweeper};
 use mxstab::formats::spec::{Fmt, FormatId};
-use mxstab::runtime::{list_bundles, Session};
+use mxstab::runtime::{list_bundles, Backend, PjrtEngine, Session};
 use mxstab::util::table::Table;
 
 fn main() -> anyhow::Result<()> {
@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     let artifacts = root.join("artifacts");
 
     let session = Session::cpu()?;
-    let sweeper = Sweeper::new(session.clone(), &artifacts);
+    let sweeper = Sweeper::new(PjrtEngine::new(session, &artifacts));
 
     // Pick the largest LM rung that exists.
     let mut lms: Vec<String> = list_bundles(&artifacts)?
@@ -37,8 +37,8 @@ fn main() -> anyhow::Result<()> {
     lms.sort();
     let bundle_name = lms.last().cloned().expect("no lm_* bundles — run `make artifacts`");
     let runner = sweeper.runner(&bundle_name)?;
-    let n_params = runner.bundle.manifest.n_params;
-    let (batch, len) = runner.bundle.tokens_shape().unwrap();
+    let n_params = runner.backend.n_params();
+    let (batch, len) = runner.backend.tokens_shape().unwrap();
     println!(
         "end-to-end: {bundle_name} ({:.2}M params), batch {batch} × ctx {}, {steps} steps\n",
         n_params as f64 / 1e6,
@@ -69,7 +69,7 @@ fn main() -> anyhow::Result<()> {
         let mut val = 0.0;
         for b in 0..8 {
             let toks = corpus.batch(u64::MAX - 7, b, batch, len);
-            val += runner.bundle.eval(state, &toks, &fmt.to_vec())? as f64 / 8.0;
+            val += runner.backend.eval(state, &toks, &fmt.to_vec())? as f64 / 8.0;
         }
         if baseline_val.is_nan() {
             baseline_val = val;

@@ -3,32 +3,24 @@
 //! mid-run, then branch the *same* training state under different
 //! precision interventions — a pure runtime `fmt`-vector rewrite.
 //!
-//! ```bash
-//! make artifacts
-//! cargo run --release --example intervention_demo
-//! ```
+//! Runs on the **native backend**: no artifacts, no PJRT, no Python —
+//! `cargo run --release --example intervention_demo` works on a bare
+//! machine.
 
 use mxstab::coordinator::{Intervention, RunConfig, Sweeper};
 use mxstab::formats::spec::{Fmt, FormatId};
-use mxstab::runtime::Session;
+use mxstab::runtime::{Backend, NativeEngine};
 use mxstab::util::table::Table;
 
 fn main() -> anyhow::Result<()> {
-    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
-    let session = Session::cpu()?;
-    let sweeper = Sweeper::new(session, &root.join("artifacts"));
-
-    // Any mid-size proxy bundle works; prefer the paired anchor.
-    let bundle = ["proxy_gelu_ln_L4_D384", "proxy_gelu_ln_L2_D128"]
-        .iter()
-        .find(|b| root.join("artifacts").join(b).join("manifest.json").exists())
-        .expect("no proxy bundle — run `make artifacts`")
-        .to_string();
-    let runner = sweeper.runner(&bundle)?;
+    let engine = NativeEngine::with_batch(64)?;
+    let sweeper = Sweeper::new(engine);
+    let bundle = "proxy_gelu_ln_L2_D128";
+    let runner = sweeper.runner(bundle)?;
 
     let base = Fmt::full(FormatId::E4M3, FormatId::E4M3);
-    let (steps, snap, lr) = (400usize, 200usize, 2e-3f32);
-    println!("bundle {bundle}: {steps} steps of fully-quantized E4M3 at η={lr:e}, branch at {snap}\n");
+    let (steps, snap, lr) = (200usize, 100usize, 2e-3f32);
+    println!("model {bundle}: {steps} fully-quantized E4M3 steps at η={lr:e}, branch at {snap}\n");
 
     let mut cfg = RunConfig::new("baseline", base, lr, steps);
     cfg.log_every = 1;
@@ -51,7 +43,8 @@ fn main() -> anyhow::Result<()> {
     ] {
         let mut cfg = RunConfig::new(iv.name(), iv.apply(base), lr, steps);
         cfg.log_every = 1;
-        let out = runner.run_from(&cfg, snapshot.clone_state()?, snap)?;
+        let state = runner.backend.clone_state(&snapshot)?;
+        let out = runner.run_from(&cfg, state, snap)?;
         t.row(vec![
             format!("→ {}", iv.name()),
             format!("{:.5}", out.log.tail_loss(5)),

@@ -1,14 +1,16 @@
 //! L3 bench: end-to-end training-step throughput.
 //!
-//! Two faces:
-//! * Always available — the pure-rust emulated forward pass over the
+//! Three faces:
+//! * Always available — the pure-rust emulated **forward** GEMM over the
 //!   packed MX engine: per-layer `C = A·Bᵀ` block GEMMs at the paper's
-//!   proxy/LM shapes. This is the quantity the packed codec exists to
-//!   accelerate and runs on a bare machine.
-//! * With `--features xla` + artifacts — real compiled-bundle step
-//!   throughput per precision scheme (the quantity behind every sweep's
-//!   wallclock). One section per paper workload family (proxy grid, LM
-//!   ladder).
+//!   proxy/LM shapes.
+//! * Always available — the **backward** hot path: the transposed/backward
+//!   GEMM variants (`dW = Xᵀ·G` re-blocked along the batch axis, mixed
+//!   E4M3×E5M2 operands) and the **full native training step** (fwd +
+//!   bwd + Adam + metrics) at the proxy shape — steps/s and emulated
+//!   GFLOP/s for the path every native sweep rides.
+//! * With `--features xla` + artifacts — compiled-bundle step throughput
+//!   per precision scheme.
 
 use mxstab::bench::Bencher;
 use mxstab::formats::gemm::{gemm, PackedMatrix};
@@ -44,6 +46,9 @@ fn main() -> anyhow::Result<()> {
     }
     println!();
 
+    bench_backward_gemm(&b)?;
+    bench_native_step(&b)?;
+
     #[cfg(feature = "xla")]
     bench_bundles(&b)?;
     #[cfg(not(feature = "xla"))]
@@ -51,11 +56,89 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The backward-GEMM hot path: weight gradients re-block both operands
+/// along the batch axis (transposed encode), and the paper's MX-mix runs
+/// E4M3 activations against E5M2 gradients in one GEMM.
+fn bench_backward_gemm(b: &Bencher) -> anyhow::Result<()> {
+    println!("== backward GEMM (transposed re-encode + mixed formats) ==\n");
+    let mut rng = Xoshiro256::seed_from(1);
+    // dW = Xᵀ·G at the proxy shape: batch 256, D 256, H 1024.
+    let (batch, d, h) = (256usize, 256usize, 1024usize);
+    let x = rng.normal_vec(batch * d);
+    let g = rng.normal_vec(batch * h);
+    let flops = (2 * d * h * batch) as f64;
+    for (label, xa_id, g_id) in [
+        ("e4m3xe4m3", FormatId::E4M3, FormatId::E4M3),
+        ("e4m3xe5m2", FormatId::E4M3, FormatId::E5M2),
+    ] {
+        let mut dw = vec![0.0f32; d * h];
+        let r = b.run(&format!("dw-gemm/{label}/{d}x{h}x{batch}"), || {
+            // Both operands re-encode per call with blocks along the batch
+            // axis — exactly what the native backward does every step.
+            let xt = PackedMatrix::encode_t(std::hint::black_box(&x), batch, d, xa_id, false);
+            let gt = PackedMatrix::encode_t(std::hint::black_box(&g), batch, h, g_id, false);
+            gemm(&xt, &gt, &mut dw);
+            std::hint::black_box(&dw);
+        });
+        println!("{}", r.report_line(&format!("{:.2} GFLOP/s(emu)", flops / r.mean_s / 1e9)));
+    }
+    println!();
+    Ok(())
+}
+
+/// Full native training step (teacher fwd + student fwd + bwd + Adam +
+/// metrics) at the proxy anchor shape, per precision scheme.
+fn bench_native_step(b: &Bencher) -> anyhow::Result<()> {
+    use mxstab::formats::spec::Fmt;
+    use mxstab::runtime::native::NativeEngine;
+    use mxstab::runtime::{Backend, Engine, StepArgs};
+
+    println!("== native training-step throughput (pure rust) ==\n");
+    let engine = NativeEngine::with_batch(256)?;
+    let model = engine.load("proxy_gelu_ln_L4_D256")?;
+    let n_params = model.n_params() as f64;
+    let schemes = [
+        ("fp32", Fmt::fp32()),
+        ("e4m3-full", Fmt::full(FormatId::E4M3, FormatId::E4M3)),
+        ("e4m3-bf16act", Fmt::bf16_act(FormatId::E4M3)),
+        ("e4m3-fwdonly", Fmt::fwd_only(FormatId::E4M3, FormatId::E4M3)),
+    ];
+    for (label, fmt) in &schemes {
+        let mut state = Some(model.init(0, 0.0, 1.0)?);
+        let mut step = 0i32;
+        let r = b.run(&format!("native/{}/{label}", model.name()), || {
+            let args = StepArgs {
+                tokens: None,
+                fmt: fmt.to_vec(),
+                hyper: vec![5e-4, 0.0, 0.0, 1e-3],
+                seed: 0,
+                step,
+            };
+            let (s2, m) = model.step(state.take().unwrap(), &args).unwrap();
+            std::hint::black_box(m);
+            state = Some(s2);
+            step += 1;
+        });
+        // 6·N·batch FLOPs per step (fwd + bwd over N params, batch rows).
+        let flops = 6.0 * n_params * 256.0;
+        println!(
+            "{}",
+            r.report_line(&format!(
+                "{:.1} steps/s  {:.2} GFLOP/s(emu)",
+                1.0 / r.mean_s,
+                flops / r.mean_s / 1e9
+            ))
+        );
+    }
+    println!();
+    Ok(())
+}
+
 #[cfg(feature = "xla")]
 fn bench_bundles(b: &Bencher) -> anyhow::Result<()> {
     use mxstab::coordinator::Sweeper;
     use mxstab::formats::spec::Fmt;
-    use mxstab::runtime::{list_bundles, Session, StepArgs};
+    use mxstab::runtime::{list_bundles, PjrtEngine, Session, StepArgs};
 
     let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("index.json").exists() {
@@ -63,7 +146,7 @@ fn bench_bundles(b: &Bencher) -> anyhow::Result<()> {
         return Ok(());
     }
     let session = Session::cpu()?;
-    let sweeper = Sweeper::new(session, &artifacts);
+    let sweeper = Sweeper::new(PjrtEngine::new(session, &artifacts));
 
     let schemes = [
         ("fp32", Fmt::fp32()),
@@ -72,7 +155,7 @@ fn bench_bundles(b: &Bencher) -> anyhow::Result<()> {
         ("e4m3-fwdonly", Fmt::fwd_only(FormatId::E4M3, FormatId::E4M3)),
     ];
 
-    println!("== training-step throughput ==\n");
+    println!("== training-step throughput (PJRT bundles) ==\n");
     let mut names = list_bundles(&artifacts)?;
     names.retain(|n| n != "quantizer" && !n.contains("pallas"));
     names.sort();
@@ -84,7 +167,7 @@ fn bench_bundles(b: &Bencher) -> anyhow::Result<()> {
                 continue;
             }
         };
-        let bundle = &runner.bundle;
+        let bundle = &runner.backend;
         let n_params = bundle.manifest.n_params as f64;
         let tokens = bundle.tokens_shape();
         for (label, fmt) in &schemes {

@@ -84,7 +84,7 @@ fn main() -> anyhow::Result<()> {
 fn training_benches() -> anyhow::Result<()> {
     use mxstab::coordinator::{Intervention, Job, RunConfig, Sweeper};
     use mxstab::formats::spec::Fmt;
-    use mxstab::runtime::{list_bundles, Session};
+    use mxstab::runtime::{list_bundles, PjrtEngine, Session};
 
     let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("index.json").exists() {
@@ -92,7 +92,7 @@ fn training_benches() -> anyhow::Result<()> {
         return Ok(());
     }
     let session = Session::cpu()?;
-    let sweeper = Sweeper::new(session, &artifacts);
+    let sweeper = Sweeper::new(PjrtEngine::new(session, &artifacts));
     let proxy = list_bundles(&artifacts)?
         .into_iter()
         .find(|n| n.starts_with("proxy_gelu_ln"))

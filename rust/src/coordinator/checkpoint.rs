@@ -3,16 +3,20 @@
 //! snapshots per run — what lets long sweeps resume after a crash and the
 //! intervention experiments branch without replay.
 //!
-//! Format: one directory per checkpoint with `meta.json` (manifest name,
+//! Generic over [`Backend`]: states cross the host boundary as flat f32
+//! tensors via [`Backend::snapshot`] / [`Backend::restore`], so the same
+//! ring serves native host states and PJRT device buffers.
+//!
+//! Format: one directory per checkpoint with `meta.json` (backend name,
 //! step, tensor table) and `state.bin` (little-endian raw tensors,
-//! concatenated in manifest order — all state tensors are f32).
+//! concatenated in state-spec order — all state tensors are f32).
 
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::{lit_f32, Bundle, Session, State};
+use crate::runtime::Backend;
 use crate::util::json::Json;
 
 pub struct CheckpointStore {
@@ -31,17 +35,23 @@ impl CheckpointStore {
     }
 
     /// Save `state` for (run, step); evicts the oldest beyond `keep`.
-    pub fn save(&self, bundle: &Bundle, run: &str, step: usize, state: &State) -> Result<PathBuf> {
+    pub fn save<B: Backend>(
+        &self,
+        backend: &B,
+        run: &str,
+        step: usize,
+        state: &B::State,
+    ) -> Result<PathBuf> {
         let dir = self.dir(run, step);
         std::fs::create_dir_all(&dir)?;
-        let spec = &bundle.manifest.state;
-        if spec.len() != state.0.len() {
-            bail!("state arity {} != manifest {}", state.0.len(), spec.len());
+        let spec = backend.state_spec();
+        let tensors = backend.snapshot(state)?;
+        if spec.len() != tensors.len() {
+            bail!("state arity {} != spec {}", tensors.len(), spec.len());
         }
-        let mut blob: Vec<u8> = Vec::with_capacity(bundle.manifest.state_bytes());
+        let mut blob: Vec<u8> = Vec::with_capacity(backend.state_bytes());
         let mut table = Vec::new();
-        for (ts, buf) in spec.iter().zip(&state.0) {
-            let data = buf.to_literal_sync()?.to_vec::<f32>()?;
+        for (ts, data) in spec.iter().zip(&tensors) {
             if data.len() != ts.elems() {
                 bail!("tensor {}: {} elems, expected {}", ts.name, data.len(), ts.elems());
             }
@@ -56,7 +66,7 @@ impl CheckpointStore {
         }
         std::fs::write(dir.join("state.bin"), &blob)?;
         let meta = Json::obj(vec![
-            ("bundle", Json::from(bundle.name().to_string())),
+            ("bundle", Json::from(backend.name().to_string())),
             ("step", Json::from(step)),
             ("bytes", Json::from(blob.len())),
             ("tensors", Json::Arr(table)),
@@ -66,48 +76,39 @@ impl CheckpointStore {
         Ok(dir)
     }
 
-    /// Restore the state saved at (run, step), uploading to the device.
-    pub fn load(
-        &self,
-        session: &Session,
-        bundle: &Bundle,
-        run: &str,
-        step: usize,
-    ) -> Result<State> {
+    /// Restore the state saved at (run, step) onto `backend`.
+    pub fn load<B: Backend>(&self, backend: &B, run: &str, step: usize) -> Result<B::State> {
         let dir = self.dir(run, step);
         let meta = Json::parse(
             &std::fs::read_to_string(dir.join("meta.json"))
                 .with_context(|| format!("no checkpoint at {}", dir.display()))?,
         )?;
         let saved_bundle = meta.req("bundle")?.as_str().unwrap_or_default();
-        if saved_bundle != bundle.name() {
-            bail!("checkpoint is for bundle {saved_bundle:?}, not {:?}", bundle.name());
+        if saved_bundle != backend.name() {
+            bail!("checkpoint is for bundle {saved_bundle:?}, not {:?}", backend.name());
         }
         let mut blob = Vec::new();
         std::fs::File::open(dir.join("state.bin"))?.read_to_end(&mut blob)?;
-        let mut out = Vec::with_capacity(bundle.manifest.state.len());
-        let mut lits = Vec::with_capacity(bundle.manifest.state.len());
+        let spec = backend.state_spec();
+        let mut tensors = Vec::with_capacity(spec.len());
         let mut off = 0usize;
-        for ts in &bundle.manifest.state {
+        for ts in spec {
             let n = ts.elems();
+            if off + 4 * n > blob.len() {
+                bail!("checkpoint truncated at tensor {}", ts.name);
+            }
             let bytes = &blob[off..off + 4 * n];
             let data: Vec<f32> = bytes
                 .chunks_exact(4)
                 .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                 .collect();
-            let lit = lit_f32(&data, &ts.shape)?;
-            out.push(session.upload(&lit)?);
-            lits.push(lit); // host→device copies are async; keep alive
+            tensors.push(data);
             off += 4 * n;
         }
-        for b in &out {
-            let _ = b.to_literal_sync()?; // await the uploads
-        }
-        drop(lits);
         if off != blob.len() {
             bail!("checkpoint size mismatch: consumed {off}, file {}", blob.len());
         }
-        Ok(State(out))
+        backend.restore(tensors)
     }
 
     /// List available checkpoint steps for a run (ascending).
@@ -143,7 +144,3 @@ impl CheckpointStore {
         Ok(())
     }
 }
-
-// `Write` is used via extend_from_slice on Vec<u8>; keep the import scoped.
-#[allow(unused)]
-fn _write_sink(mut w: impl Write) {}

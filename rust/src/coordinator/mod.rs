@@ -10,14 +10,13 @@
 //! * [`intervene`] — the Fig. 7 in-situ intervention engine (fmt rewrites
 //!   between steps; no recompilation)
 //! * [`metrics`] — metric capture, JSONL persistence
-//! * `checkpoint` — state persistence (`xla` only: snapshots device
-//!   buffers)
+//! * [`checkpoint`] — state persistence to a bounded per-run ring
 //!
-//! Everything except actual PJRT execution is always compiled, so the
-//! detector/intervention/metrics machinery stays testable on a bare
-//! machine (DESIGN.md §4, §6).
+//! The whole layer is generic over [`crate::runtime::Backend`] /
+//! [`crate::runtime::Engine`] and always compiled: the native pure-rust
+//! backend executes it on a bare machine, and `--features xla` plugs the
+//! same machinery into PJRT bundles (DESIGN.md §4, §6).
 
-#[cfg(feature = "xla")]
 pub mod checkpoint;
 pub mod detect;
 pub mod intervene;
@@ -25,14 +24,9 @@ pub mod metrics;
 pub mod run;
 pub mod sweep;
 
-#[cfg(feature = "xla")]
 pub use checkpoint::CheckpointStore;
 pub use detect::{Detector, DetectorConfig, Verdict};
 pub use intervene::{Intervention, Policy, Trigger};
 pub use metrics::RunLog;
-#[cfg(feature = "xla")]
-pub use run::{RunOutcome, Runner};
-pub use run::{LrSchedule, Optimizer, RunConfig};
-pub use sweep::Job;
-#[cfg(feature = "xla")]
-pub use sweep::Sweeper;
+pub use run::{LrSchedule, Optimizer, RunConfig, RunOutcome, Runner};
+pub use sweep::{Job, Sweeper};

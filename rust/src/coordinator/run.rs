@@ -5,28 +5,21 @@
 //! LR schedule), data feeding (synthetic corpus for LM bundles, in-graph
 //! Gaussian batches for the proxy), the instability detector, checkpoint
 //! snapshots, and the intervention engine.
+//!
+//! Generic over [`Backend`], so the same loop drives the native pure-rust
+//! backend (default) and PJRT bundles (`--features xla`).
 
-#[cfg(feature = "xla")]
 use std::sync::Arc;
-#[cfg(feature = "xla")]
 use std::time::Instant;
 
-#[cfg(feature = "xla")]
 use anyhow::Result;
 
-#[cfg(feature = "xla")]
-use super::detect::Detector;
-use super::detect::DetectorConfig;
-#[cfg(feature = "xla")]
-use super::detect::Verdict;
+use super::detect::{Detector, DetectorConfig, Verdict};
 use super::intervene::Policy;
-#[cfg(feature = "xla")]
 use super::metrics::RunLog;
-#[cfg(feature = "xla")]
 use crate::data::Corpus;
 use crate::formats::spec::{hyper_idx, Fmt};
-#[cfg(feature = "xla")]
-use crate::runtime::{Bundle, State, StepArgs};
+use crate::runtime::{Backend, StepArgs};
 
 /// Learning-rate schedule (paper Appendix D: linear warmup + cosine decay).
 #[derive(Debug, Clone, Copy)]
@@ -108,8 +101,6 @@ impl RunConfig {
     }
 
     /// Encode the per-step `hyper` runtime vector (LR, optimizer, noise).
-    /// (Only the xla Runner consumes it outside tests.)
-    #[cfg_attr(not(feature = "xla"), allow(dead_code))]
     pub(crate) fn hyper(&self, step: usize) -> Vec<f32> {
         let mut h = vec![0.0f32; hyper_idx::HYPER_LEN];
         h[hyper_idx::LR] = self.lr.at(step);
@@ -127,28 +118,25 @@ impl RunConfig {
 
 /// Outcome of [`Runner::run`]: the metric log plus the final model state
 /// (kept so callers can eval / continue / snapshot).
-#[cfg(feature = "xla")]
-pub struct RunOutcome {
+pub struct RunOutcome<B: Backend> {
     pub log: RunLog,
-    pub final_state: Option<State>,
+    pub final_state: Option<B::State>,
 }
 
-/// Executes one training run over a loaded bundle.
-#[cfg(feature = "xla")]
-pub struct Runner {
-    pub bundle: Arc<Bundle>,
+/// Executes one training run over a loaded backend.
+pub struct Runner<B: Backend> {
+    pub backend: Arc<B>,
     pub corpus: Option<Arc<Corpus>>,
 }
 
-#[cfg(feature = "xla")]
-impl Runner {
-    pub fn new(bundle: Arc<Bundle>, corpus: Option<Arc<Corpus>>) -> Runner {
-        Runner { bundle, corpus }
+impl<B: Backend> Runner<B> {
+    pub fn new(backend: Arc<B>, corpus: Option<Arc<Corpus>>) -> Runner<B> {
+        Runner { backend, corpus }
     }
 
     /// Train from scratch according to `cfg`.
-    pub fn run(&self, cfg: &RunConfig) -> Result<RunOutcome> {
-        let state = self.bundle.init(cfg.seed, cfg.init_mode, cfg.init_gain)?;
+    pub fn run(&self, cfg: &RunConfig) -> Result<RunOutcome<B>> {
+        let state = self.backend.init(cfg.seed, cfg.init_mode, cfg.init_gain)?;
         self.run_from(cfg, state, 0)
     }
 
@@ -157,12 +145,12 @@ impl Runner {
     pub fn run_from(
         &self,
         cfg: &RunConfig,
-        mut state: State,
+        mut state: B::State,
         start_step: usize,
-    ) -> Result<RunOutcome> {
+    ) -> Result<RunOutcome<B>> {
         let mut log = RunLog::new(&cfg.name);
         log.meta = vec![
-            ("bundle".into(), self.bundle.name().to_string()),
+            ("bundle".into(), self.backend.name().to_string()),
             ("fmt".into(), cfg.fmt.label()),
             ("steps".into(), cfg.steps.to_string()),
             ("seed".into(), cfg.seed.to_string()),
@@ -172,7 +160,7 @@ impl Runner {
         let mut pending: Vec<Policy> = cfg.policies.clone();
         let t0 = Instant::now();
 
-        let tokens_shape = self.bundle.tokens_shape();
+        let tokens_shape = self.backend.tokens_shape();
         for step in start_step..cfg.steps {
             // Interventions fire *before* the step, matching the paper's
             // "intervene at step s" semantics.
@@ -199,10 +187,10 @@ impl Runner {
                 seed: cfg.seed,
                 step: step as i32,
             };
-            let (next, met) = if cfg.paired && self.bundle.has_paired() {
-                self.bundle.paired_step(state, &args)?
+            let (next, met) = if cfg.paired && self.backend.has_paired() {
+                self.backend.paired_step(state, &args)?
             } else {
-                self.bundle.step(state, &args)?
+                self.backend.step(state, &args)?
             };
             state = next;
 
@@ -232,15 +220,15 @@ impl Runner {
         &self,
         cfg: &RunConfig,
         snapshot_step: usize,
-    ) -> Result<(RunOutcome, State)> {
-        let mut state = self.bundle.init(cfg.seed, cfg.init_mode, cfg.init_gain)?;
+    ) -> Result<(RunOutcome<B>, B::State)> {
+        let mut state = self.backend.init(cfg.seed, cfg.init_mode, cfg.init_gain)?;
         // Advance to the snapshot point.
         let mut pre = cfg.clone();
         pre.steps = snapshot_step;
         pre.name = format!("{}@pre", cfg.name);
         let out = self.run_from(&pre, state, 0)?;
         state = out.final_state.unwrap();
-        let snapshot = state.clone_state()?;
+        let snapshot = self.backend.clone_state(&state)?;
         // Continue the baseline to the end.
         let mut post = cfg.clone();
         post.name = cfg.name.clone();

@@ -1,76 +1,55 @@
 //! Sweep scheduler: runs many training configurations across a thread pool.
 //!
-//! The PJRT CPU client parallelizes *within* a step (intra-op thread pool),
-//! so the scheduler defaults to a small number of concurrent runs and
-//! relies on XLA for core saturation; `MXSTAB_JOBS` overrides.
+//! Generic over the execution [`Engine`]: the native backend parallelizes
+//! *within* a step (the packed GEMM fans rows out over scoped threads) and
+//! the PJRT CPU client has its own intra-op pool, so the scheduler defaults
+//! to a small number of concurrent runs and relies on the backend for core
+//! saturation; `MXSTAB_JOBS` overrides.
 //!
-//! Executables are compiled once per bundle and shared (`Arc<Bundle>`);
-//! states are per-run. Results stream into a `Vec<RunLog>` in submission
-//! order regardless of completion order.
+//! Backends are loaded once per name and shared (`Arc`); states are
+//! per-run. Results stream into a `Vec<RunLog>` in submission order
+//! regardless of completion order.
 
-#[cfg(feature = "xla")]
 use std::collections::BTreeMap;
-#[cfg(feature = "xla")]
 use std::sync::{mpsc, Arc, Mutex};
 
-#[cfg(feature = "xla")]
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
-#[cfg(feature = "xla")]
 use super::metrics::RunLog;
-use super::run::RunConfig;
-#[cfg(feature = "xla")]
-use super::run::Runner;
-#[cfg(feature = "xla")]
+use super::run::{RunConfig, Runner};
 use crate::data::{Corpus, CorpusConfig};
-#[cfg(feature = "xla")]
-use crate::runtime::{Bundle, Session};
+use crate::runtime::{Backend, Engine};
 
-/// One sweep item: which bundle to train and how.
+/// One sweep item: which bundle/model to train and how.
 #[derive(Debug, Clone)]
 pub struct Job {
     pub bundle: String,
     pub cfg: RunConfig,
 }
 
-/// Shared bundle/corpus registry + scheduler.
-#[cfg(feature = "xla")]
-pub struct Sweeper {
-    session: Arc<Session>,
-    artifacts: std::path::PathBuf,
-    bundles: Mutex<BTreeMap<String, Arc<Bundle>>>,
+/// Shared backend/corpus registry + scheduler.
+pub struct Sweeper<E: Engine> {
+    engine: Arc<E>,
     corpus: Mutex<BTreeMap<usize, Arc<Corpus>>>,
     pub jobs_parallel: usize,
 }
 
-#[cfg(feature = "xla")]
-impl Sweeper {
-    pub fn new(session: Arc<Session>, artifacts: &std::path::Path) -> Sweeper {
+impl<E: Engine> Sweeper<E> {
+    pub fn new(engine: Arc<E>) -> Sweeper<E> {
         let jobs = std::env::var("MXSTAB_JOBS")
             .ok()
             .and_then(|s| s.parse::<usize>().ok())
             .unwrap_or(2)
             .max(1);
-        Sweeper {
-            session,
-            artifacts: artifacts.to_path_buf(),
-            bundles: Mutex::new(BTreeMap::new()),
-            corpus: Mutex::new(BTreeMap::new()),
-            jobs_parallel: jobs,
-        }
+        Sweeper { engine, corpus: Mutex::new(BTreeMap::new()), jobs_parallel: jobs }
     }
 
-    pub fn bundle(&self, name: &str) -> Result<Arc<Bundle>> {
-        if let Some(b) = self.bundles.lock().unwrap().get(name) {
-            return Ok(b.clone());
-        }
-        let dir = self.artifacts.join(name);
-        let b = Arc::new(
-            Bundle::load(self.session.clone(), &dir)
-                .with_context(|| format!("loading bundle {name}"))?,
-        );
-        self.bundles.lock().unwrap().insert(name.to_string(), b.clone());
-        Ok(b)
+    pub fn engine(&self) -> &Arc<E> {
+        &self.engine
+    }
+
+    pub fn backend(&self, name: &str) -> Result<Arc<E::Backend>> {
+        self.engine.load(name)
     }
 
     /// Corpus keyed by vocab size (deterministic; shared across runs).
@@ -85,20 +64,18 @@ impl Sweeper {
             .clone()
     }
 
-    pub fn runner(&self, bundle_name: &str) -> Result<Runner> {
-        let bundle = self.bundle(bundle_name)?;
-        let corpus = match bundle.tokens_shape() {
+    pub fn runner(&self, bundle_name: &str) -> Result<Runner<E::Backend>> {
+        let backend = self.backend(bundle_name)?;
+        let corpus = match backend.tokens_shape() {
             Some(_) => {
-                let vocab = bundle
-                    .manifest
-                    .cfg_num("vocab")
-                    .ok_or_else(|| anyhow!("LM bundle without vocab in manifest"))?
-                    as usize;
+                let vocab = backend
+                    .vocab()
+                    .ok_or_else(|| anyhow!("LM bundle without vocab in manifest"))?;
                 Some(self.corpus(vocab))
             }
             None => None,
         };
-        Ok(Runner::new(bundle, corpus))
+        Ok(Runner::new(backend, corpus))
     }
 
     /// Run all jobs; returns logs in submission order. Failures become

@@ -8,21 +8,25 @@
 use anyhow::Result;
 
 use super::Ctx;
+use crate::runtime::Engine;
 use crate::coordinator::{Job, LrSchedule, RunConfig};
 use crate::formats::spec::{Fmt, FormatId};
 use crate::util::table::Table;
 
-pub fn ladder(ctx: &Ctx) -> Vec<String> {
-    let all = crate::runtime::list_bundles(&ctx.cfg.artifacts).unwrap_or_default();
+pub fn ladder<E: Engine>(ctx: &Ctx<E>) -> Vec<String> {
+    let all = ctx.sweeper.engine().list().unwrap_or_default();
     let mut rungs: Vec<String> = all.into_iter().filter(|n| n.starts_with("lm_")).collect();
     rungs.sort();
     rungs
 }
 
-pub fn run(ctx: &Ctx) -> Result<()> {
+pub fn run<E: Engine>(ctx: &Ctx<E>) -> Result<()> {
     let steps = ctx.cfg.steps(200);
     let rungs = ladder(ctx);
-    anyhow::ensure!(!rungs.is_empty(), "no lm_* bundles in {}", ctx.cfg.artifacts.display());
+    anyhow::ensure!(
+        !rungs.is_empty(),
+        "engine has no lm_* models (LM experiments need `--backend pjrt` + compiled bundles)"
+    );
 
     let formats = [
         ("bf16", Fmt::full(FormatId::Bf16, FormatId::Bf16)),

@@ -4,10 +4,11 @@
 use anyhow::Result;
 
 use super::Ctx;
+use crate::runtime::Engine;
 use crate::coordinator::{Job, Optimizer, RunConfig};
 use crate::util::table::Table;
 
-pub fn run(ctx: &Ctx) -> Result<()> {
+pub fn run<E: Engine>(ctx: &Ctx<E>) -> Result<()> {
     let steps = ctx.cfg.steps(200);
     let opts = [
         ("sgd", Optimizer::Sgd { momentum: 0.0 }),

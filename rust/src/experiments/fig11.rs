@@ -4,10 +4,11 @@
 use anyhow::Result;
 
 use super::Ctx;
+use crate::runtime::Engine;
 use crate::coordinator::{Job, RunConfig};
 use crate::util::table::Table;
 
-pub fn run(ctx: &Ctx) -> Result<()> {
+pub fn run<E: Engine>(ctx: &Ctx<E>) -> Result<()> {
     let steps = ctx.cfg.steps(200);
     let inits = [("kaiming", 0.0f32, 1.0f32), ("xavier-g0.5", 1.0, 0.5)];
     let formats = [

@@ -4,6 +4,7 @@
 use anyhow::Result;
 
 use super::Ctx;
+use crate::runtime::Engine;
 use crate::coordinator::{Job, LrSchedule, RunConfig};
 use crate::formats::spec::{Fmt, FormatId};
 use crate::util::table::Table;
@@ -22,13 +23,16 @@ pub fn combos() -> Vec<(&'static str, Fmt)> {
     ]
 }
 
-pub fn run(ctx: &Ctx) -> Result<()> {
+pub fn run<E: Engine>(ctx: &Ctx<E>) -> Result<()> {
     let steps = ctx.cfg.steps(120);
     let rungs = super::fig1::ladder(ctx);
     // Two largest rungs — the paper sees instabilities mainly in larger,
     // longer-trained models.
     let rungs: Vec<_> = rungs.into_iter().rev().take(1).collect();
-    anyhow::ensure!(!rungs.is_empty(), "no lm bundles");
+    anyhow::ensure!(
+        !rungs.is_empty(),
+        "engine has no lm_* models (LM experiments need `--backend pjrt` + compiled bundles)"
+    );
 
     let mut jobs = vec![];
     for bundle in &rungs {

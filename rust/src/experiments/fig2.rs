@@ -4,6 +4,7 @@
 use anyhow::Result;
 
 use super::Ctx;
+use crate::runtime::Engine;
 use crate::coordinator::{Job, RunConfig};
 use crate::formats::spec::{Fmt, FormatId};
 use crate::util::table::Table;
@@ -27,7 +28,7 @@ pub fn bundle_name(depth: usize, width: usize) -> String {
     format!("proxy_gelu_ln_L{depth}_D{width}")
 }
 
-pub fn run(ctx: &Ctx) -> Result<()> {
+pub fn run<E: Engine>(ctx: &Ctx<E>) -> Result<()> {
     let steps = ctx.cfg.steps(150);
     let mut jobs = vec![];
     for &lr in &LRS {

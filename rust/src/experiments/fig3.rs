@@ -4,11 +4,12 @@
 use anyhow::Result;
 
 use super::Ctx;
+use crate::runtime::Engine;
 use crate::coordinator::{Job, RunConfig};
 use crate::formats::spec::Fmt;
 use crate::util::table::Table;
 
-pub fn run(ctx: &Ctx) -> Result<()> {
+pub fn run<E: Engine>(ctx: &Ctx<E>) -> Result<()> {
     let steps = ctx.cfg.steps(200);
     let acts = ["relu", "gelu", "swiglu"];
     let formats = [("fp32", Fmt::fp32()), ("mx", Fmt::mx_mix())];

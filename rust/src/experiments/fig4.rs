@@ -6,6 +6,7 @@
 use anyhow::Result;
 
 use super::Ctx;
+use crate::runtime::Engine;
 use crate::analysis::gradbias;
 use crate::coordinator::RunConfig;
 use crate::formats::spec::{Fmt, FormatId};
@@ -13,7 +14,7 @@ use crate::util::svg::{Plot, Series, PALETTE};
 
 pub const PAIRED_BUNDLE: &str = "proxy_gelu_ln_L4_D256";
 
-pub fn run(ctx: &Ctx) -> Result<()> {
+pub fn run<E: Engine>(ctx: &Ctx<E>) -> Result<()> {
     let steps = ctx.cfg.steps(600);
     // Paper's anchor: d=512, L=4, η=6e-4 (just above the stable band).
     let mut cfg = RunConfig::new(

@@ -6,13 +6,14 @@
 use anyhow::Result;
 
 use super::{fig4, Ctx};
+use crate::runtime::Engine;
 use crate::coordinator::{LrSchedule, RunConfig};
 use crate::formats::codes;
 use crate::formats::spec::{Fmt, FormatId};
 use crate::util::svg::{Plot, Series, PALETTE};
 use crate::util::table::Table;
 
-pub fn run(ctx: &Ctx) -> Result<()> {
+pub fn run<E: Engine>(ctx: &Ctx<E>) -> Result<()> {
     let mut rep = ctx.report("fig5")?;
 
     // ---- left panel: code-gap structure (pure rust formats substrate) ----

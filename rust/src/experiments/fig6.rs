@@ -5,11 +5,12 @@
 use anyhow::Result;
 
 use super::Ctx;
+use crate::runtime::Engine;
 use crate::coordinator::{Job, RunConfig};
 use crate::formats::spec::{Fmt, FormatId};
 use crate::util::table::Table;
 
-pub fn run(ctx: &Ctx) -> Result<()> {
+pub fn run<E: Engine>(ctx: &Ctx<E>) -> Result<()> {
     let steps = ctx.cfg.steps(250);
     let sizes = super::fig2::SIZES;
     let schemes = [

@@ -13,12 +13,13 @@ use anyhow::Result;
 
 use super::Ctx;
 use crate::coordinator::{Intervention, RunConfig, RunLog};
+use crate::runtime::{Backend, Engine};
 use crate::formats::spec::{Fmt, FormatId};
 use crate::util::table::Table;
 
 const BUNDLE: &str = "proxy_gelu_ln_L4_D256";
 
-pub fn run(ctx: &Ctx) -> Result<()> {
+pub fn run<E: Engine>(ctx: &Ctx<E>) -> Result<()> {
     let budget = ctx.cfg.steps(700);
     let base_fmt = Fmt::full(FormatId::E4M3, FormatId::E4M3);
 
@@ -80,7 +81,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
                 horizon,
             );
             cfg.log_every = 1;
-            let out = runner.run_from(&cfg, snapshot.clone_state()?, snap_step)?;
+            let out = runner.run_from(&cfg, runner.backend.clone_state(&snapshot)?, snap_step)?;
             let delay = match (out.log.diverged_at, base_out.log.diverged_at) {
                 (None, Some(_)) => "averted".to_string(),
                 (Some(d), Some(b)) => format!("{:+}", d as i64 - b as i64),

@@ -4,6 +4,7 @@
 use anyhow::Result;
 
 use super::Ctx;
+use crate::runtime::Engine;
 use crate::analysis::spikes::count_spikes;
 use crate::coordinator::{Job, RunConfig};
 use crate::util::table::Table;
@@ -11,7 +12,7 @@ use crate::util::table::Table;
 pub const DEPTHS: [usize; 3] = [2, 3, 4];
 pub const WIDTHS: [usize; 3] = [128, 256, 384];
 
-pub fn run(ctx: &Ctx) -> Result<()> {
+pub fn run<E: Engine>(ctx: &Ctx<E>) -> Result<()> {
     let steps = ctx.cfg.steps(120);
     let formats = super::fig2::formats();
 

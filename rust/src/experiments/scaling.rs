@@ -11,6 +11,7 @@
 use anyhow::{Context, Result};
 
 use super::Ctx;
+use crate::runtime::{Backend, Engine};
 use crate::analysis::{fit_chinchilla, ChinchillaFit, LossPoint};
 use crate::coordinator::{LrSchedule, RunConfig, RunLog};
 use crate::formats::spec::{Fmt, FormatId};
@@ -40,8 +41,8 @@ pub struct ValPoint {
 }
 
 /// Train one (bundle, scheme) run, eval at checkpoints. Cached as JSON.
-fn run_with_evals(
-    ctx: &Ctx,
+fn run_with_evals<E: Engine>(
+    ctx: &Ctx<E>,
     bundle_name: &str,
     scheme: &str,
     fmt: Fmt,
@@ -75,9 +76,9 @@ fn run_with_evals(
     }
 
     let runner = ctx.sweeper.runner(bundle_name)?;
-    let bundle = &runner.bundle;
-    let n_params = bundle.manifest.n_params as f64;
-    let (batch, len) = bundle.tokens_shape().context("LM bundle expected")?;
+    let backend = &runner.backend;
+    let n_params = backend.n_params() as f64;
+    let (batch, len) = backend.tokens_shape().context("LM bundle expected")?;
     let tokens_per_step = (batch * (len - 1)) as f64;
     let corpus = runner.corpus.clone().context("corpus")?;
 
@@ -86,7 +87,7 @@ fn run_with_evals(
     cfg.log_every = 4;
 
     // Train in segments, eval at each checkpoint on held-out batches.
-    let mut state = bundle.init(cfg.seed, cfg.init_mode, cfg.init_gain)?;
+    let mut state = backend.init(cfg.seed, cfg.init_mode, cfg.init_gain)?;
     let mut log = RunLog::new(&run_name);
     let mut points = vec![];
     let mut at = 0usize;
@@ -105,7 +106,7 @@ fn run_with_evals(
         const EVAL_BATCHES: usize = 8;
         for b in 0..EVAL_BATCHES {
             let toks = corpus.batch(u64::MAX - 7, b as u64, batch, len);
-            acc += bundle.eval(&state, &toks, &eval_fmt)? as f64;
+            acc += backend.eval(&state, &toks, &eval_fmt)? as f64;
         }
         points.push(ValPoint {
             n_params,
@@ -133,9 +134,12 @@ fn run_with_evals(
     Ok((points, log))
 }
 
-pub fn run(ctx: &Ctx) -> Result<()> {
+pub fn run<E: Engine>(ctx: &Ctx<E>) -> Result<()> {
     let rungs = super::fig1::ladder(ctx);
-    anyhow::ensure!(!rungs.is_empty(), "no lm_* bundles");
+    anyhow::ensure!(
+        !rungs.is_empty(),
+        "engine has no lm_* models (LM experiments need `--backend pjrt` + compiled bundles)"
+    );
     let steps = ctx.cfg.steps(320);
     // Geometric checkpoints: D varies 8× within one run.
     let checkpoints: Vec<usize> =

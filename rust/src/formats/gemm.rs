@@ -48,6 +48,21 @@ impl PackedMatrix {
         PackedMatrix { rows, cols, data: PackedVec::encode(a, id, scale_bump) }
     }
 
+    /// Encode the *transpose* of a row-major `rows × cols` matrix, i.e. a
+    /// `cols × rows` packed matrix with quantization blocks along the
+    /// original row axis (`rows` must be a multiple of [`BLOCK_SIZE`]).
+    ///
+    /// This is the backward-GEMM entry point: `dW = Xᵀ·G` and `dX = G·Wᵀ`
+    /// reduce over the batch / output axes, so the operands must be
+    /// re-blocked (and therefore re-quantized — exactly as the paper's
+    /// backward pass does) along those axes before the packed [`gemm`].
+    pub fn encode_t(a: &[f32], rows: usize, cols: usize, id: FormatId, scale_bump: bool) -> Self {
+        assert_eq!(a.len(), rows * cols, "matrix shape mismatch");
+        assert_eq!(rows % BLOCK_SIZE, 0, "rows {rows} % 32 != 0");
+        let t = transpose(a, rows, cols);
+        PackedMatrix { rows: cols, cols: rows, data: PackedVec::encode(&t, id, scale_bump) }
+    }
+
     pub fn id(&self) -> FormatId {
         self.data.id
     }
@@ -146,17 +161,17 @@ fn matvec_strip(
 }
 
 /// Quantized matrix–vector product `out[r] = MXdot(A[r,:], x)` on packed
-/// operands. Zero allocations beyond the output; parallel over rows.
+/// operands (the element formats of `a` and `x` may differ). Zero
+/// allocations beyond the output; parallel over rows.
 pub fn matvec(a: &PackedMatrix, x: &PackedVec) -> Vec<f32> {
     assert_eq!(x.len(), a.cols, "matvec shape mismatch");
-    assert_eq!(x.id, a.id(), "operand formats differ");
-    let pf = PackedFormat::of(a.id());
-    let lut = pf.decode_table();
+    let lut = PackedFormat::of(a.id()).decode_table();
+    let lut_x = PackedFormat::of(x.id).decode_table();
 
     // Expand x once: relative element values + f64 block scales.
     let mut xdec = vec![0.0f32; x.len()];
     for (o, &c) in xdec.iter_mut().zip(&x.codes) {
-        *o = lut[c as usize];
+        *o = lut_x[c as usize];
     }
     let xscale: Vec<f64> = x.scales.iter().map(|&e| scale_f64(e)).collect();
 
@@ -177,10 +192,12 @@ pub fn matvec(a: &PackedMatrix, x: &PackedVec) -> Vec<f32> {
 }
 
 /// GEMM worker: fill the `out_strip` rows starting at A row `r0`.
+#[allow(clippy::too_many_arguments)]
 fn gemm_strip(
     a: &PackedMatrix,
     b: &PackedMatrix,
     lut: &[f32; 256],
+    lut_b: &[f32; 256],
     bscale: &[f64],
     r0: usize,
     out_strip: &mut [f32],
@@ -215,7 +232,7 @@ fn gemm_strip(
                     let bb = &b.data.codes[j * b.cols + kb * BLOCK_SIZE..][..BLOCK_SIZE];
                     let mut inner = 0.0f32;
                     for k in 0..BLOCK_SIZE {
-                        inner += adec[k] * lut[bb[k] as usize];
+                        inner += adec[k] * lut_b[bb[k] as usize];
                     }
                     *av += sa_f * sb * inner as f64;
                 }
@@ -230,16 +247,17 @@ fn gemm_strip(
 /// Packed block GEMM: `C[m×n] = A[m×k] · B[n×k]ᵀ`, blocks along k for both
 /// operands (B is stored with its reduction axis contiguous, i.e. as the
 /// transposed right-hand side — the layout `w·xᵀ` style Linears produce).
+/// The two operands may use *different* MX element formats (the paper's
+/// per-tensor-class format selection: e.g. E4M3 weights × E5M2 gradients).
 ///
 /// Tiling: each worker owns a horizontal strip of C; for every
 /// [`TILE_N`]-wide panel of B rows, each A block is decoded once into a
 /// stack buffer and swept across the panel, carrying `X_a·X_b` per block.
 pub fn gemm(a: &PackedMatrix, b: &PackedMatrix, out: &mut [f32]) {
     assert_eq!(a.cols, b.cols, "reduction dims differ: {} vs {}", a.cols, b.cols);
-    assert_eq!(a.id(), b.id(), "operand formats differ");
     assert_eq!(out.len(), a.rows * b.rows, "output shape mismatch");
-    let pf = PackedFormat::of(a.id());
-    let lut = pf.decode_table();
+    let lut = PackedFormat::of(a.id()).decode_table();
+    let lut_b = PackedFormat::of(b.id()).decode_table();
     let n = b.rows;
 
     // Per-block f64 scales for B, computed once.
@@ -247,13 +265,73 @@ pub fn gemm(a: &PackedMatrix, b: &PackedMatrix, out: &mut [f32]) {
 
     let threads = worker_count(a.rows * n, a.rows);
     if threads <= 1 {
-        gemm_strip(a, b, lut, &bscale, 0, out);
+        gemm_strip(a, b, lut, lut_b, &bscale, 0, out);
     } else {
         let rows_per = (a.rows + threads - 1) / threads;
         let bscale = &bscale;
         std::thread::scope(|s| {
             for (ci, oc) in out.chunks_mut(rows_per * n).enumerate() {
-                s.spawn(move || gemm_strip(a, b, lut, bscale, ci * rows_per, oc));
+                s.spawn(move || gemm_strip(a, b, lut, lut_b, bscale, ci * rows_per, oc));
+            }
+        });
+    }
+}
+
+/// Row-major transpose: `a` is `rows × cols`, the result is `cols × rows`.
+/// The backward GEMMs re-block along the batch/output axes; transposing
+/// first keeps the reduction axis contiguous for [`PackedMatrix::encode`]
+/// and [`gemm_f32`].
+pub fn transpose(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(a.len(), rows * cols, "transpose shape mismatch");
+    let mut out = vec![0.0f32; a.len()];
+    // Tile to keep both access streams cache-resident.
+    const T: usize = 32;
+    for r0 in (0..rows).step_by(T) {
+        for c0 in (0..cols).step_by(T) {
+            for r in r0..(r0 + T).min(rows) {
+                for c in c0..(c0 + T).min(cols) {
+                    out[c * rows + r] = a[r * cols + c];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Dense f32 GEMM with the same operand convention as [`gemm`]:
+/// `C[m×n] = A[m×k] · B[n×k]ᵀ`, f64 accumulation per output element.
+///
+/// This is the full-precision / bf16 execution path of the native backend
+/// (operands that skip MX quantization never materialize a packed form).
+/// Each output element is reduced sequentially over k by exactly one
+/// worker, so results are independent of the thread count.
+pub fn gemm_f32(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), n * k, "B shape mismatch");
+    assert_eq!(out.len(), m * n, "output shape mismatch");
+    let strip = |r0: usize, out_strip: &mut [f32]| {
+        let rows_here = out_strip.len() / n;
+        for i in 0..rows_here {
+            let ar = &a[(r0 + i) * k..(r0 + i + 1) * k];
+            for (j, o) in out_strip[i * n..(i + 1) * n].iter_mut().enumerate() {
+                let br = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f64;
+                for (x, y) in ar.iter().zip(br) {
+                    acc += (*x as f64) * (*y as f64);
+                }
+                *o = acc as f32;
+            }
+        }
+    };
+    let threads = worker_count(m * n, m);
+    if threads <= 1 {
+        strip(0, out);
+    } else {
+        let rows_per = (m + threads - 1) / threads;
+        let strip = &strip;
+        std::thread::scope(|s| {
+            for (ci, oc) in out.chunks_mut(rows_per * n).enumerate() {
+                s.spawn(move || strip(ci * rows_per, oc));
             }
         });
     }
@@ -345,6 +423,94 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn mixed_format_gemm_matches_scalar_oracle() {
+        // E4M3 weights × E5M2 gradients (the paper's MX-mix backward):
+        // each operand quantizes under its own format; the scale-carried
+        // accumulation must still match the MxBlock oracle bitwise.
+        let mut rng = Xoshiro256::seed_from(77);
+        let (m, n, k) = (9, 21, 128);
+        let a: Vec<f32> = rng.normal_vec(m * k);
+        let b: Vec<f32> = rng.normal_vec(n * k);
+        for (ida, idb) in [
+            (FormatId::E4M3, FormatId::E5M2),
+            (FormatId::E5M2, FormatId::E2M3),
+            (FormatId::E3M2, FormatId::E4M3),
+        ] {
+            let (fa, fb) = (ida.elem().unwrap(), idb.elem().unwrap());
+            let am = PackedMatrix::encode(&a, m, k, ida, false);
+            let bm = PackedMatrix::encode(&b, n, k, idb, false);
+            let mut c = vec![0.0f32; m * n];
+            gemm(&am, &bm, &mut c);
+            for r in 0..m {
+                let ea = encode(&a[r * k..(r + 1) * k], &fa, 0);
+                for j in 0..n {
+                    let eb = encode(&b[j * k..(j + 1) * k], &fb, 0);
+                    let want = mx_dot(&ea, &eb);
+                    let got = c[r * n + j];
+                    assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "{ida:?}×{idb:?} C[{r},{j}] = {got}, oracle {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_and_encode_t() {
+        let mut rng = Xoshiro256::seed_from(3);
+        let (rows, cols) = (64, 96);
+        let a = rng.normal_vec(rows * cols);
+        let t = transpose(&a, rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(t[c * rows + r], a[r * cols + c]);
+            }
+        }
+        assert_eq!(transpose(&t, cols, rows), a, "transpose is an involution");
+        // encode_t blocks along the original row axis — identical to
+        // encoding the materialized transpose.
+        let et = PackedMatrix::encode_t(&a, rows, cols, FormatId::E4M3, false);
+        let em = PackedMatrix::encode(&t, cols, rows, FormatId::E4M3, false);
+        assert_eq!(et.rows, cols);
+        assert_eq!(et.cols, rows);
+        assert_eq!(et.data.codes, em.data.codes);
+        assert_eq!(et.data.scales, em.data.scales);
+    }
+
+    #[test]
+    fn gemm_f32_matches_naive_and_threading_is_invisible() {
+        let mut rng = Xoshiro256::seed_from(13);
+        let (m, n, k) = (33, 17, 70); // odd shapes: strip tails + non-32 k
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(n * k);
+        let mut c = vec![0.0f32; m * n];
+        gemm_f32(&a, &b, m, n, k, &mut c);
+        for r in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for t in 0..k {
+                    acc += (a[r * k + t] as f64) * (b[j * k + t] as f64);
+                }
+                assert_eq!(c[r * n + j].to_bits(), (acc as f32).to_bits(), "C[{r},{j}]");
+            }
+        }
+        // Large enough to engage the thread fan-out; must stay bitwise
+        // identical to the single-strip result.
+        let (m2, k2) = (256, 64);
+        let a2 = rng.normal_vec(m2 * k2);
+        let b2 = rng.normal_vec(m2 * k2);
+        let mut big = vec![0.0f32; m2 * m2];
+        gemm_f32(&a2, &b2, m2, m2, k2, &mut big);
+        let mut row0 = 0.0f64;
+        for t in 0..k2 {
+            row0 += (a2[t] as f64) * (b2[t] as f64);
+        }
+        assert_eq!(big[0].to_bits(), (row0 as f32).to_bits());
     }
 
     #[test]

@@ -32,7 +32,7 @@ pub mod packed;
 pub mod quant;
 pub mod spec;
 
-pub use gemm::{gemm, matvec, PackedMatrix};
-pub use packed::{packed_qdq, PackedFormat, PackedVec, QdqScratch};
+pub use gemm::{gemm, gemm_f32, matvec, transpose, PackedMatrix};
+pub use packed::{packed_qdq, PackError, PackedFormat, PackedVec, QdqScratch};
 pub use quant::{mx_qdq, mx_qdq_with_mask, quantize_elem};
 pub use spec::{ElemFormat, Fmt, FormatId, BLOCK_SIZE};

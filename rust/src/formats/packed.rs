@@ -41,6 +41,32 @@ use super::spec::{ElemFormat, FormatId, BLOCK_SIZE};
 /// `block.fill(0.0)`.
 pub const ZERO_BLOCK: i16 = i16::MIN;
 
+/// Typed error for the fallible packed-codec constructors. The in-repo MX
+/// call sites validate their formats/shapes up front and keep using the
+/// infallible [`PackedFormat::of`] / [`PackedVec::encode`]; the `try_`
+/// variants exist for consumers that feed runtime-selected formats or
+/// unvalidated lengths and want an error value instead of a panic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PackError {
+    /// fp32/bf16 carry no MX block layout — there is nothing to pack.
+    NotMx(FormatId),
+    /// Input length is not a multiple of [`BLOCK_SIZE`].
+    Unaligned { len: usize },
+}
+
+impl std::fmt::Display for PackError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PackError::NotMx(id) => write!(f, "{id:?} is not an MX element format"),
+            PackError::Unaligned { len } => {
+                write!(f, "input length {len} is not a multiple of {BLOCK_SIZE}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PackError {}
+
 /// Per-element work (in f32s) below which encode/decode stay single
 /// threaded; above, blocks are fanned out over `std::thread::scope`.
 const PAR_THRESHOLD: usize = 1 << 14;
@@ -92,8 +118,15 @@ impl PackedFormat {
         PackedFormat { id, elem, emin, emax, mbits, m1, kmax_top, max_payload, step, decode }
     }
 
-    /// The interned table set for an MX format (panics for fp32/bf16).
+    /// The interned table set for an MX format (panics for fp32/bf16 —
+    /// use [`PackedFormat::try_of`] when the format id is runtime data).
     pub fn of(id: FormatId) -> &'static PackedFormat {
+        Self::try_of(id).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible variant of [`PackedFormat::of`]: a typed error instead of
+    /// a panic for non-MX element formats.
+    pub fn try_of(id: FormatId) -> Result<&'static PackedFormat, PackError> {
         static TABLES: OnceLock<[PackedFormat; 4]> = OnceLock::new();
         let tables = TABLES.get_or_init(|| {
             [
@@ -104,11 +137,11 @@ impl PackedFormat {
             ]
         });
         match id {
-            FormatId::E4M3 => &tables[0],
-            FormatId::E5M2 => &tables[1],
-            FormatId::E2M3 => &tables[2],
-            FormatId::E3M2 => &tables[3],
-            _ => panic!("{id:?} is not an MX element format"),
+            FormatId::E4M3 => Ok(&tables[0]),
+            FormatId::E5M2 => Ok(&tables[1]),
+            FormatId::E2M3 => Ok(&tables[2]),
+            FormatId::E3M2 => Ok(&tables[3]),
+            _ => Err(PackError::NotMx(id)),
         }
     }
 
@@ -259,9 +292,19 @@ pub struct PackedVec {
 
 impl PackedVec {
     /// Encode a block-aligned f32 slice (parallel for large inputs).
+    /// Panics on non-MX formats or unaligned lengths — use
+    /// [`PackedVec::try_encode`] for runtime-selected formats.
     pub fn encode(x: &[f32], id: FormatId, scale_bump: bool) -> PackedVec {
-        assert_eq!(x.len() % BLOCK_SIZE, 0, "len {} % 32 != 0", x.len());
-        let pf = PackedFormat::of(id);
+        Self::try_encode(x, id, scale_bump).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible variant of [`PackedVec::encode`]: returns a typed
+    /// [`PackError`] for non-MX element formats and unaligned inputs.
+    pub fn try_encode(x: &[f32], id: FormatId, scale_bump: bool) -> Result<PackedVec, PackError> {
+        let pf = PackedFormat::try_of(id)?;
+        if x.len() % BLOCK_SIZE != 0 {
+            return Err(PackError::Unaligned { len: x.len() });
+        }
         let mut codes = vec![0u8; x.len()];
         let mut scales = vec![0i16; x.len() / BLOCK_SIZE];
         let bump = scale_bump as i32;
@@ -280,7 +323,7 @@ impl PackedVec {
                 handles.into_iter().map(|h| h.join().expect("encode worker")).sum()
             })
         };
-        PackedVec { id, codes, scales, clamped }
+        Ok(PackedVec { id, codes, scales, clamped })
     }
 
     pub fn len(&self) -> usize {
@@ -586,6 +629,32 @@ mod tests {
         let (b, cb) = packed_qdq(&x, FormatId::E4M3, false);
         assert_eq!(bits(&a), bits(&b));
         assert_eq!(ca, cb);
+    }
+
+    #[test]
+    fn try_constructors_return_typed_errors() {
+        // Non-MX element formats: typed error, no panic.
+        let not_mx = |id: FormatId| PackedFormat::try_of(id).unwrap_err();
+        assert_eq!(not_mx(FormatId::Fp32), PackError::NotMx(FormatId::Fp32));
+        assert_eq!(not_mx(FormatId::Bf16), PackError::NotMx(FormatId::Bf16));
+        let x = vec![1.0f32; BLOCK_SIZE];
+        assert_eq!(
+            PackedVec::try_encode(&x, FormatId::Bf16, false).unwrap_err(),
+            PackError::NotMx(FormatId::Bf16)
+        );
+        // Unaligned input: typed error too.
+        assert_eq!(
+            PackedVec::try_encode(&x[..7], FormatId::E4M3, false).unwrap_err(),
+            PackError::Unaligned { len: 7 }
+        );
+        // Errors render a human-readable message.
+        assert!(PackError::NotMx(FormatId::Fp32).to_string().contains("Fp32"));
+        assert!(PackError::Unaligned { len: 7 }.to_string().contains('7'));
+        // The fallible path agrees with the infallible one on success.
+        let a = PackedVec::try_encode(&x, FormatId::E4M3, false).unwrap();
+        let b = PackedVec::encode(&x, FormatId::E4M3, false);
+        assert_eq!(a.codes, b.codes);
+        assert_eq!(a.scales, b.scales);
     }
 
     #[test]

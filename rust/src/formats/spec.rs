@@ -44,6 +44,12 @@ impl FormatId {
         Self::ALL.iter().copied().find(|f| f.name() == s)
     }
 
+    /// Inverse of `self as u8` — decodes the ids carried in the runtime
+    /// `fmt` tensor.
+    pub fn from_id(id: u8) -> Option<FormatId> {
+        Self::ALL.iter().copied().find(|f| *f as u8 == id)
+    }
+
     pub fn is_mx(self) -> bool {
         matches!(self, FormatId::E4M3 | FormatId::E5M2 | FormatId::E2M3 | FormatId::E3M2)
     }
@@ -230,6 +236,36 @@ impl Fmt {
         v
     }
 
+    /// Decode the runtime f32 vector back into a scheme (inverse of
+    /// [`Fmt::to_vec`]) — what a native backend does with `StepArgs::fmt`.
+    /// Returns `None` for short vectors or unknown format ids (including
+    /// negative or non-integral values, which a bare `as u8` cast would
+    /// silently saturate onto a valid id).
+    pub fn from_vec(v: &[f32]) -> Option<Fmt> {
+        use fmt_idx::*;
+        if v.len() < FMT_LEN {
+            return None;
+        }
+        let id = |i: usize| {
+            let x = v[i];
+            if !(0.0..=255.0).contains(&x) || x.fract() != 0.0 {
+                return None;
+            }
+            FormatId::from_id(x as u8)
+        };
+        Some(Fmt {
+            w_fwd: id(W_FMT_FWD)?,
+            a_fwd: id(A_FMT_FWD)?,
+            g_bwd: id(G_FMT_BWD)?,
+            w_bwd: id(W_FMT_BWD)?,
+            a_bwd: id(A_FMT_BWD)?,
+            quant_fwd: v[QUANT_FWD] > 0.5,
+            quant_bwd: v[QUANT_BWD] > 0.5,
+            quant_ln: v[QUANT_LN] > 0.5,
+            scale_bump: v[SCALE_BUMP] > 0.5,
+        })
+    }
+
     /// Short human-readable label used in logs/reports, e.g.
     /// `e4m3-bf16`, `e5m2-e5m2(fwd)`, `fp32`.
     pub fn label(&self) -> String {
@@ -298,6 +334,27 @@ mod tests {
         assert_eq!(Fmt::fwd_only(FormatId::E5M2, FormatId::E5M2).label(), "e5m2-e5m2(fwd)");
         assert_eq!(Fmt::bf16_act(FormatId::E4M3).label(), "e4m3-bf16(noln)");
         assert_eq!(Fmt::mx_mix().label(), "e4m3-e4m3/bwd:e5m2");
+    }
+
+    #[test]
+    fn fmt_vector_roundtrips() {
+        for f in [
+            Fmt::fp32(),
+            Fmt::full(FormatId::E4M3, FormatId::E4M3),
+            Fmt::mx_mix(),
+            Fmt::bf16_act(FormatId::E2M3),
+            Fmt::fwd_only(FormatId::E5M2, FormatId::E5M2).with_scale_bump(),
+        ] {
+            assert_eq!(Fmt::from_vec(&f.to_vec()), Some(f));
+        }
+        assert_eq!(Fmt::from_vec(&[0.0; 4]), None, "short vector");
+        let mut bad = Fmt::fp32().to_vec();
+        bad[fmt_idx::W_FMT_FWD] = 99.0;
+        assert_eq!(Fmt::from_vec(&bad), None, "unknown format id");
+        bad[fmt_idx::W_FMT_FWD] = -1.0;
+        assert_eq!(Fmt::from_vec(&bad), None, "negative id must not saturate to fp32");
+        bad[fmt_idx::W_FMT_FWD] = 2.9;
+        assert_eq!(Fmt::from_vec(&bad), None, "fractional id must not truncate to e4m3");
     }
 
     #[test]

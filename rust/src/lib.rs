@@ -12,23 +12,24 @@
 //!   AOT-lowered to HLO text under `artifacts/` by `python/compile/aot.py`.
 //! * **L1** — the Pallas MX quantize→dequantize kernel feeding L2's GEMMs.
 //!
-//! Python never runs on the training path: this crate loads the HLO
-//! artifacts through the PJRT C API (`xla` crate) and owns the entire
-//! training loop.
+//! Python never runs on the training path. Execution is pluggable behind
+//! `runtime::Backend` / `runtime::Engine`: the **native backend**
+//! (default) trains the paper's residual-MLP proxy entirely in rust on
+//! the packed MX engine, while `--features xla` adds the PJRT backend
+//! that loads compiled HLO artifacts through the PJRT C API.
 //!
 //! Build surface: the default feature set is **PJRT-free** — the formats
-//! substrate (scalar oracle + packed codec/GEMM engine), analysis, report
-//! and detector/intervention machinery all build and test on a bare
-//! machine. `--features xla` additionally compiles the PJRT runtime, the
-//! execution side of the coordinator, and the experiment drivers
-//! (DESIGN.md §6).
+//! substrate (scalar oracle + packed codec/GEMM engine), the native
+//! backend, the full coordinator (Runner/Sweeper/CheckpointStore,
+//! detector, interventions), the experiment drivers, analysis and report
+//! all build, test and *run* on a bare machine. Only actual PJRT
+//! execution sits behind `xla` (DESIGN.md §6).
 
 pub mod analysis;
 pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;
-#[cfg(feature = "xla")]
 pub mod experiments;
 pub mod formats;
 pub mod report;

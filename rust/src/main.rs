@@ -1,31 +1,32 @@
 //! mxstab CLI — the L3 coordinator binary.
 //!
 //! ```text
-//! mxstab info                                  # platform + artifact inventory
-//! mxstab train --bundle <name> [--fmt e4m3-e4m3] [--lr 5e-4] [--steps N]
-//! mxstab experiment <id|all> [--scale quick|default|full] [--force]
-//! mxstab codes [--format e4m3]                 # print the element-format code table
-//! mxstab fit --csv <file>                      # Chinchilla fit over (N,D,loss) rows
+//! mxstab info    [--backend native|pjrt]        # platform + model inventory
+//! mxstab train   [--backend native|pjrt] [--bundle <name>] [--fmt e4m3-e4m3]
+//!                [--lr 5e-4] [--steps N] [--batch B] [--paired]
+//!                [--intervene <name>@<step>[,...]] [--require-finite]
+//! mxstab experiment <id|all> [--backend native|pjrt] [--scale quick|default|full] [--force]
+//! mxstab codes [--format e4m3]                  # print the element-format code table
+//! mxstab fit --csv <file>                       # Chinchilla fit over (N,D,loss) rows
 //! ```
+//!
+//! The default backend is **native**: the pure-rust packed-MX proxy
+//! trainer that runs on a bare machine. `--backend pjrt` executes
+//! compiled HLO bundles instead and needs `--features xla` plus a real
+//! PJRT binding (DESIGN.md §6).
+
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 use mxstab::analysis::{fit_chinchilla, LossPoint};
 use mxstab::config::Config;
-use mxstab::formats::spec::FormatId;
+use mxstab::coordinator::{Intervention, LrSchedule, Policy, RunConfig, Sweeper};
+use mxstab::experiments;
+use mxstab::formats::spec::{Fmt, FormatId};
+use mxstab::runtime::{Backend, Engine, NativeEngine};
 use mxstab::util::args::Args;
 use mxstab::util::table::Table;
 
-#[cfg(feature = "xla")]
-use mxstab::formats::spec::Fmt;
-
-#[cfg(feature = "xla")]
-use mxstab::coordinator::{LrSchedule, RunConfig, Runner};
-#[cfg(feature = "xla")]
-use mxstab::experiments;
-#[cfg(feature = "xla")]
-use mxstab::runtime::{list_bundles, Session};
-
-#[cfg(feature = "xla")]
 fn parse_fmt(spec: &str) -> Result<Fmt> {
     // Grammar: fp32 | mx-mix | <w>-<a>[:fwd][:noln][:bump]  e.g. e4m3-bf16:fwd
     if spec == "fp32" {
@@ -53,38 +54,60 @@ fn parse_fmt(spec: &str) -> Result<Fmt> {
     Ok(fmt)
 }
 
-#[cfg(feature = "xla")]
-fn cmd_info(cfg: &Config) -> Result<()> {
-    let session = Session::cpu()?;
-    println!("platform: {}", session.platform());
+/// Parse `--intervene <name>@<step>[,<name>@<step>...]` into policies.
+fn parse_policies(spec: &str) -> Result<Vec<Policy>> {
+    spec.split(',')
+        .filter(|s| !s.is_empty())
+        .map(|p| {
+            let (name, at) = p
+                .split_once('@')
+                .ok_or_else(|| anyhow!("intervention spec {p:?}: expected <name>@<step>"))?;
+            let iv = Intervention::ALL
+                .iter()
+                .copied()
+                .find(|i| i.name() == name)
+                .ok_or_else(|| {
+                    let known: Vec<&str> = Intervention::ALL.iter().map(|i| i.name()).collect();
+                    anyhow!("unknown intervention {name:?} (known: {known:?})")
+                })?;
+            let step: usize =
+                at.parse().map_err(|_| anyhow!("bad intervention step {at:?}"))?;
+            Ok(Policy::at_step(step, iv))
+        })
+        .collect()
+}
+
+fn cmd_info<E: Engine>(engine: Arc<E>, cfg: &Config) -> Result<()> {
+    println!("platform: {}", engine.platform());
     println!("artifacts: {}", cfg.artifacts.display());
-    let mut t = Table::new(&["bundle", "kind", "params", "state MB"]);
-    for name in list_bundles(&cfg.artifacts)? {
-        let m = mxstab::runtime::Manifest::load(&cfg.artifacts.join(&name))?;
-        t.row(vec![
-            name,
-            m.kind.clone(),
-            m.n_params.to_string(),
-            format!("{:.1}", m.state_bytes() as f64 / 1e6),
-        ]);
+    let mut t = Table::new(&["model", "params", "state MB"]);
+    for name in engine.list()? {
+        match engine.load(&name) {
+            Ok(b) => {
+                t.row(vec![
+                    name,
+                    b.n_params().to_string(),
+                    format!("{:.1}", b.state_bytes() as f64 / 1e6),
+                ]);
+            }
+            Err(e) => t.row(vec![name, format!("load failed: {e:#}"), String::new()]),
+        }
     }
     print!("{}", t.text());
     Ok(())
 }
 
-#[cfg(feature = "xla")]
-fn cmd_train(cfg: &Config, args: &Args) -> Result<()> {
-    let bundle_name = args
-        .get("bundle")
-        .ok_or_else(|| anyhow!("--bundle required"))?;
+fn cmd_train<E: Engine>(engine: Arc<E>, cfg: &Config, args: &Args) -> Result<()> {
+    // The native engine parses any proxy_<act>_<ln|noln>_L<d>_D<w> name;
+    // the default is small enough to train in seconds on a laptop.
+    let bundle_name = args.get_or("bundle", "proxy_gelu_ln_L2_D64").to_string();
     let fmt = parse_fmt(args.get_or("fmt", "fp32"))?;
     let lr: f32 = args.parse_or("lr", 5e-4f32)?;
     let steps: usize = args.parse_or("steps", 200usize)?;
     let seed: i32 = args.parse_or("seed", 0i32)?;
 
-    let session = Session::cpu()?;
-    let sweeper = mxstab::coordinator::Sweeper::new(session, &cfg.artifacts);
-    let runner: Runner = sweeper.runner(bundle_name)?;
+    let sweeper = Sweeper::new(engine);
+    let runner = sweeper.runner(&bundle_name)?;
     let mut rc = RunConfig::new(
         &format!("{bundle_name}_{}_lr{lr:.0e}", fmt.label()),
         fmt,
@@ -97,6 +120,9 @@ fn cmd_train(cfg: &Config, args: &Args) -> Result<()> {
     rc.seed = seed;
     rc.paired = args.flag("paired");
     rc.log_every = args.parse_or("log-every", 1usize)?;
+    if let Some(spec) = args.get("intervene") {
+        rc.policies = parse_policies(spec)?;
+    }
 
     let t0 = std::time::Instant::now();
     let out = runner.run(&rc)?;
@@ -108,12 +134,51 @@ fn cmd_train(cfg: &Config, args: &Args) -> Result<()> {
         l.name,
         steps,
         dt,
-        dt * 1000.0 / steps as f64,
+        dt * 1000.0 / steps.max(1) as f64,
         l.rows.first().map(|r| r.m.loss).unwrap_or(f32::NAN),
         l.final_loss(),
         l.spikes,
         l.diverged_at,
     );
+    for (step, name) in &l.interventions {
+        println!("intervention@{step}: {name}");
+    }
+    println!("log: {}", cfg.runs.join("manual").join(format!("{}.jsonl", l.name)).display());
+
+    // CI hook: fail loudly when any logged metric went non-finite.
+    let all_finite = l.rows.iter().all(|r| {
+        [
+            r.m.loss,
+            r.m.grad_norm,
+            r.m.ln_frac_first,
+            r.m.ln_frac_mean,
+            r.m.act_frac_mean,
+            r.m.update_norm,
+            r.m.param_norm,
+            r.m.eps_ratio,
+            r.m.cosine,
+        ]
+        .iter()
+        .all(|v| v.is_finite())
+    });
+    println!("all metrics finite: {all_finite}");
+    if args.flag("require-finite") && !(all_finite && !l.rows.is_empty()) {
+        bail!("run produced non-finite metrics (or no rows)");
+    }
+    Ok(())
+}
+
+fn cmd_experiment<E: Engine>(engine: Arc<E>, cfg: Config, args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("experiment"))
+        .ok_or_else(|| anyhow!("experiment id required (or 'all')"))?
+        .to_string();
+    let ctx = experiments::Ctx::new(cfg, engine, args.flag("force"));
+    experiments::run(&ctx, &id)?;
+    println!("reports written under {}", ctx.cfg.reports.display());
     Ok(())
 }
 
@@ -168,46 +233,80 @@ fn cmd_fit(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn native_engine(args: &Args) -> Result<Arc<NativeEngine>> {
+    NativeEngine::with_batch(args.parse_or("batch", mxstab::runtime::native::DEFAULT_BATCH)?)
+}
+
+#[cfg(feature = "xla")]
+fn pjrt_engine(cfg: &Config) -> Result<Arc<mxstab::runtime::PjrtEngine>> {
+    mxstab::runtime::PjrtEngine::cpu(&cfg.artifacts)
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     let cfg = Config::from_args(&args)?;
-    let _ = &cfg; // only the xla-gated subcommands consume it in minimal builds
+    let backend = args.get_or("backend", "native").to_string();
+    let unknown_backend = || {
+        anyhow!(
+            "unknown backend {backend:?}: use `native` (default, pure-rust) or `pjrt` \
+             (requires --features xla and a real PJRT binding — see DESIGN.md §6)"
+        )
+    };
+    #[cfg(not(feature = "xla"))]
+    let no_xla = || {
+        anyhow!(
+            "`--backend pjrt` needs the PJRT runtime: rebuild with \
+             `cargo build --release --features xla` (and a real xla backend in \
+             place of rust/vendor/xla — see DESIGN.md §6). The default \
+             `--backend native` runs on a bare machine."
+        )
+    };
     match args.subcommand.as_deref() {
-        #[cfg(feature = "xla")]
-        Some("info") => cmd_info(&cfg),
-        #[cfg(feature = "xla")]
-        Some("train") => cmd_train(&cfg, &args),
+        Some("info") => match backend.as_str() {
+            "native" => cmd_info(native_engine(&args)?, &cfg),
+            "pjrt" | "xla" => {
+                #[cfg(feature = "xla")]
+                let r = cmd_info(pjrt_engine(&cfg)?, &cfg);
+                #[cfg(not(feature = "xla"))]
+                let r = Err(no_xla());
+                r
+            }
+            _ => Err(unknown_backend()),
+        },
+        Some("train") => match backend.as_str() {
+            "native" => cmd_train(native_engine(&args)?, &cfg, &args),
+            "pjrt" | "xla" => {
+                #[cfg(feature = "xla")]
+                let r = cmd_train(pjrt_engine(&cfg)?, &cfg, &args);
+                #[cfg(not(feature = "xla"))]
+                let r = Err(no_xla());
+                r
+            }
+            _ => Err(unknown_backend()),
+        },
+        Some("experiment") | Some("sweep") => match backend.as_str() {
+            "native" => cmd_experiment(native_engine(&args)?, cfg, &args),
+            "pjrt" | "xla" => {
+                #[cfg(feature = "xla")]
+                let r = {
+                    let engine = pjrt_engine(&cfg)?;
+                    cmd_experiment(engine, cfg, &args)
+                };
+                #[cfg(not(feature = "xla"))]
+                let r = Err(no_xla());
+                r
+            }
+            _ => Err(unknown_backend()),
+        },
         Some("codes") => cmd_codes(&args),
         Some("fit") => cmd_fit(&args),
-        #[cfg(feature = "xla")]
-        Some("experiment") | Some("sweep") => {
-            let id = args
-                .positional
-                .first()
-                .map(String::as_str)
-                .or_else(|| args.get("experiment"))
-                .ok_or_else(|| anyhow!("experiment id required (or 'all')"))?
-                .to_string();
-            let session = Session::cpu()?;
-            let ctx = experiments::Ctx::new(cfg, session, args.flag("force"));
-            experiments::run(&ctx, &id)?;
-            println!("reports written under {}", ctx.cfg.reports.display());
-            Ok(())
-        }
-        #[cfg(not(feature = "xla"))]
-        Some(sub @ ("info" | "train" | "experiment" | "sweep")) => {
-            bail!(
-                "`mxstab {sub}` needs the PJRT runtime: rebuild with \
-                 `cargo build --release --features xla` (and a real xla \
-                 backend in place of rust/vendor/xla — see DESIGN.md §6)"
-            )
-        }
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}\n");
             }
             eprintln!(
-                "usage: mxstab <info|train|experiment|codes|fit> [options]\n\
+                "usage: mxstab <info|train|experiment|codes|fit> \
+                 [--backend native|pjrt] [options]\n\
                  see rust/src/main.rs header for details"
             );
             Ok(())

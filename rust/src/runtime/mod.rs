@@ -1,22 +1,115 @@
-//! Runtime layer: artifact manifests, step metrics, and (behind the `xla`
-//! feature) the PJRT execution backend.
+//! Runtime layer: the [`Backend`]/[`Engine`] execution abstraction, the
+//! native pure-rust backend, artifact manifests, step metrics, and
+//! (behind the `xla` feature) the PJRT execution backend.
 //!
 //! The split matters for buildability (DESIGN.md §6): everything the
-//! analysis/report stack needs — [`Manifest`], [`Metrics`], [`StepArgs`]
-//! — is dependency-free and always compiled, while `pjrt` (Session /
-//! Bundle / State / Quantizer over the PJRT C API) only exists with
-//! `--features xla`. HLO *text* is the interchange format (jax ≥0.5
+//! coordinator needs — the traits, [`native`], [`Manifest`], [`Metrics`],
+//! [`StepArgs`] — is dependency-free and always compiled, while `pjrt`
+//! (Session / Bundle / State / Quantizer over the PJRT C API) only exists
+//! with `--features xla`. HLO *text* is the interchange format (jax ≥0.5
 //! protos are rejected by xla_extension 0.5.1 — see DESIGN.md).
 
+use std::sync::Arc;
+
+use anyhow::Result;
+
 pub mod manifest;
+pub mod native;
 #[cfg(feature = "xla")]
 pub mod pjrt;
 
 pub use manifest::{list_bundles, Dtype, Manifest, TensorSpec};
+pub use native::{NativeEngine, NativeModel};
 #[cfg(feature = "xla")]
 pub use pjrt::{
-    lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, Bundle, Quantizer, Session, State,
+    lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, Bundle, PjrtEngine, Quantizer, Session,
+    State,
 };
+
+/// One executable model: opaque training state + a step function driven by
+/// the runtime `fmt`/`hyper` vectors. The coordinator (`Runner`, `Sweeper`,
+/// `CheckpointStore`, every `experiments/*` driver) is generic over this
+/// trait, so the same training loop runs against the native pure-rust
+/// backend (default) or a compiled PJRT bundle (`--features xla`).
+pub trait Backend: Send + Sync + 'static {
+    /// Model + optimizer (+ teacher) state between steps. Host tensors for
+    /// the native backend; device buffers for PJRT.
+    type State: Send + 'static;
+
+    /// Bundle/model name (what sweeps and checkpoints key on).
+    fn name(&self) -> &str;
+
+    /// Total trainable parameter count.
+    fn n_params(&self) -> usize;
+
+    /// Expected token batch shape for LM models; `None` for the proxy.
+    fn tokens_shape(&self) -> Option<(usize, usize)> {
+        None
+    }
+
+    /// Vocabulary size for LM models (drives corpus construction).
+    fn vocab(&self) -> Option<usize> {
+        None
+    }
+
+    /// Whether [`Backend::paired_step`] is available (Fig. 4 diagnostics).
+    fn has_paired(&self) -> bool {
+        false
+    }
+
+    /// Initialize model + optimizer state from a seed.
+    fn init(&self, seed: i32, init_mode: f32, gain: f32) -> Result<Self::State>;
+
+    /// One training step: consumes the state, returns the next state and
+    /// the decoded metrics vector.
+    fn step(&self, state: Self::State, args: &StepArgs) -> Result<(Self::State, Metrics)>;
+
+    /// One training step that additionally measures gradient bias against
+    /// an FP32 backward pass at the same parameter point (Fig. 4).
+    fn paired_step(&self, state: Self::State, args: &StepArgs) -> Result<(Self::State, Metrics)> {
+        let _ = &args;
+        anyhow::bail!("backend {} has no paired step", self.name())
+    }
+
+    /// Validation loss over one token batch (LM models only).
+    fn eval(&self, _state: &Self::State, _tokens: &[i32], _fmt: &[f32]) -> Result<f32> {
+        anyhow::bail!("backend {} has no eval fn", self.name())
+    }
+
+    /// Deep-copy a state (checkpoint rings, Fig. 7 branch-from-snapshot).
+    fn clone_state(&self, state: &Self::State) -> Result<Self::State>;
+
+    /// Ordered (name, shape) description of the flat state tensor list —
+    /// the checkpoint serialization contract.
+    fn state_spec(&self) -> &[TensorSpec];
+
+    /// Total state footprint in bytes (all state tensors are f32).
+    fn state_bytes(&self) -> usize {
+        self.state_spec().iter().map(|ts| 4 * ts.elems()).sum()
+    }
+
+    /// Download the state as host f32 tensors in [`Backend::state_spec`]
+    /// order.
+    fn snapshot(&self, state: &Self::State) -> Result<Vec<Vec<f32>>>;
+
+    /// Rebuild a state from host tensors in [`Backend::state_spec`] order.
+    fn restore(&self, tensors: Vec<Vec<f32>>) -> Result<Self::State>;
+}
+
+/// A backend factory + registry: resolves model/bundle names to loaded
+/// [`Backend`]s (caching as appropriate) and enumerates what is available.
+pub trait Engine: Send + Sync + 'static {
+    type Backend: Backend;
+
+    /// Human-readable platform tag (e.g. `native-cpu`, PJRT platform).
+    fn platform(&self) -> String;
+
+    /// Known model/bundle names.
+    fn list(&self) -> Result<Vec<String>>;
+
+    /// Resolve a name to a loaded backend.
+    fn load(&self, name: &str) -> Result<Arc<Self::Backend>>;
+}
 
 /// Runtime metrics vector layout — matches `python/compile/model.py`.
 pub mod met {

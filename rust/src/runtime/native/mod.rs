@@ -1,0 +1,123 @@
+//! Native pure-rust execution backend (the default).
+//!
+//! Runs the paper's residual-MLP proxy workload end-to-end on the packed
+//! MX codec + block GEMM engine — every coordinator feature (sweeps,
+//! detector, Fig. 7 fmt-vector interventions, checkpoints, paired
+//! gradient diagnostics) works on a bare machine with no PJRT, no
+//! artifacts and no Python.
+//!
+//! * [`model`] — the residual-MLP student–teacher proxy ([`NativeModel`]),
+//!   quantized forward/backward on the packed engine, AdamW-family
+//!   optimizer, the nine-element metrics vector
+//! * [`ops`] — quantization sites, the quantized-GEMM dispatcher,
+//!   layer norm, activations
+//! * [`NativeEngine`] — the name→model registry: any
+//!   `proxy_<act>_<ln|noln>_L<depth>_D<width>` name loads (the same
+//!   grammar the bundle grid uses), so the experiment drivers run
+//!   unchanged against it.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+pub mod model;
+pub mod ops;
+
+pub use model::{NativeModel, NativeState, ProxyConfig};
+pub use ops::Activation;
+
+use super::Engine;
+
+/// Default proxy batch size (python `ProxyConfig.batch`).
+pub const DEFAULT_BATCH: usize = 256;
+
+/// Resolves proxy-model names to [`NativeModel`]s; the native counterpart
+/// of the PJRT artifact directory.
+pub struct NativeEngine {
+    batch: usize,
+    cache: Mutex<BTreeMap<String, Arc<NativeModel>>>,
+}
+
+impl NativeEngine {
+    pub fn new() -> Arc<NativeEngine> {
+        Arc::new(NativeEngine { batch: DEFAULT_BATCH, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    /// Engine whose models all use the given batch size (must be a
+    /// multiple of the MX block size — backward GEMMs reduce over it).
+    pub fn with_batch(batch: usize) -> Result<Arc<NativeEngine>> {
+        // Validate eagerly via a canonical config so the error surfaces at
+        // construction, not at first load.
+        ProxyConfig { depth: 1, d_model: 32, batch, activation: Activation::Gelu, layernorm: true }
+            .validate()?;
+        Ok(Arc::new(NativeEngine { batch, cache: Mutex::new(BTreeMap::new()) }))
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+}
+
+impl Engine for NativeEngine {
+    type Backend = NativeModel;
+
+    fn platform(&self) -> String {
+        "native-cpu (pure-rust packed MX engine)".to_string()
+    }
+
+    /// The canonical grid the experiment drivers sweep (any parseable
+    /// `proxy_*` name loads, listed or not).
+    fn list(&self) -> Result<Vec<String>> {
+        let mut names = vec![];
+        for depth in [2usize, 3, 4] {
+            for width in [128usize, 256, 384] {
+                names.push(format!("proxy_gelu_ln_L{depth}_D{width}"));
+            }
+        }
+        for act in ["relu", "gelu", "swiglu"] {
+            for ln in ["ln", "noln"] {
+                names.push(format!("proxy_{act}_{ln}_L4_D256"));
+            }
+        }
+        names.sort();
+        names.dedup();
+        Ok(names)
+    }
+
+    fn load(&self, name: &str) -> Result<Arc<NativeModel>> {
+        if let Some(m) = self.cache.lock().unwrap().get(name) {
+            return Ok(m.clone());
+        }
+        let cfg = ProxyConfig::parse(name, self.batch)?;
+        let m = Arc::new(NativeModel::new(cfg)?);
+        self.cache.lock().unwrap().insert(name.to_string(), m.clone());
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Backend;
+
+    #[test]
+    fn engine_loads_and_caches() {
+        let e = NativeEngine::new();
+        let a = e.load("proxy_gelu_ln_L2_D64").unwrap();
+        let b = e.load("proxy_gelu_ln_L2_D64").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second load must hit the cache");
+        assert_eq!(a.name(), "proxy_gelu_ln_L2_D64");
+        assert_eq!(a.n_params(), 2 * (2 * 64 * 256) + 2 * 64);
+        assert!(e.load("lm_olmo_12m").is_err(), "non-proxy names are rejected");
+        assert!(e.list().unwrap().iter().all(|n| e.load(n).is_ok()), "every listed name loads");
+    }
+
+    #[test]
+    fn batch_validation() {
+        assert!(NativeEngine::with_batch(48).is_err(), "batch must be a multiple of 32");
+        let e = NativeEngine::with_batch(64).unwrap();
+        assert_eq!(e.batch(), 64);
+        assert_eq!(e.load("proxy_relu_ln_L2_D32").unwrap().config().batch, 64);
+    }
+}

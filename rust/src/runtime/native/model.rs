@@ -1,0 +1,857 @@
+//! The native proxy model: the paper's residual-MLP student–teacher
+//! workload (Eq. 1) executed end-to-end in pure rust on the packed MX
+//! engine — no PJRT, no artifacts.
+//!
+//! Architecture (mirror of `python/compile/proxy.py`):
+//!
+//! ```text
+//! student:  A_0 = x;  h_k = W1_k · LN_k(A_{k-1});  A_k = A_{k-1} + W2_k · φ(h_k)
+//! teacher:  identical, no layer norm, always fp32
+//! targets:  y = teacher(x) + σ·ε          loss: 0.5 · mean((A_L − y)²)
+//! ```
+//!
+//! Quantization sites, the straight-through LN-gamma quantizer, the
+//! backward-pass re-quantization (each gradient GEMM re-blocks along its
+//! own reduction axis) and the nine-element metrics vector all follow
+//! `python/compile/model.py`; the per-tensor-class element formats come
+//! from the runtime `fmt` vector ([`Fmt::from_vec`]) and the optimizer /
+//! LR / label noise from the `hyper` vector — so `detect.rs` /
+//! `intervene.rs` and every sweep driver work unchanged.
+//!
+//! Batches are a pure function of `(seed, step)` (deterministic Gaussian
+//! streams), so FP32 and MX trajectories — and every Fig. 7 intervention
+//! branch — see identical data, and a run is bitwise reproducible.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use super::ops::{
+    act_bwd, act_fwd, layernorm_bwd, layernorm_fwd, qgemm, quantize_site, Activation,
+};
+use crate::formats::gemm::transpose;
+use crate::formats::packed::packed_qdq;
+use crate::formats::spec::{hyper_idx, Fmt, FormatId, BLOCK_SIZE};
+use crate::runtime::{Backend, Metrics, StepArgs, TensorSpec};
+use crate::util::rng::Xoshiro256;
+
+/// Adam constants (python/compile/formats.py).
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.95;
+const ADAM_EPS: f32 = 1e-8;
+
+/// Proxy-model hyper-shape — the rust mirror of `proxy.ProxyConfig`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProxyConfig {
+    pub depth: usize,
+    pub d_model: usize,
+    pub batch: usize,
+    pub activation: Activation,
+    pub layernorm: bool,
+}
+
+impl ProxyConfig {
+    /// Hidden width: 4·D, or ~8/3·D rounded to the MX block size for
+    /// SwiGLU (parameter parity with 4·D, Shazeer 2020).
+    pub fn hidden(&self) -> usize {
+        if self.activation == Activation::Swiglu {
+            let h = ((self.d_model as f64 * 8.0 / 3.0 / 32.0).round() as usize) * 32;
+            h.max(32)
+        } else {
+            4 * self.d_model
+        }
+    }
+
+    /// Canonical bundle name, e.g. `proxy_gelu_ln_L4_D256`.
+    pub fn name(&self) -> String {
+        format!(
+            "proxy_{}_{}_L{}_D{}",
+            self.activation.name(),
+            if self.layernorm { "ln" } else { "noln" },
+            self.depth,
+            self.d_model
+        )
+    }
+
+    /// Parse a bundle name of the form `proxy_<act>_<ln|noln>_L<d>_D<w>`.
+    pub fn parse(name: &str, batch: usize) -> Result<ProxyConfig> {
+        let err = || {
+            anyhow!("unparseable proxy model name {name:?} (want proxy_<act>_<ln|noln>_L<d>_D<w>)")
+        };
+        let rest = name.strip_prefix("proxy_").ok_or_else(err)?;
+        let mut parts = rest.split('_');
+        let act = Activation::from_name(parts.next().ok_or_else(err)?).ok_or_else(err)?;
+        let layernorm = match parts.next().ok_or_else(err)? {
+            "ln" => true,
+            "noln" => false,
+            _ => return Err(err()),
+        };
+        let num = |p: Option<&str>, tag: char| -> Result<usize> {
+            p.and_then(|s| s.strip_prefix(tag)).ok_or_else(err)?.parse().map_err(|_| err())
+        };
+        let depth = num(parts.next(), 'L')?;
+        let d_model = num(parts.next(), 'D')?;
+        if parts.next().is_some() {
+            return Err(err());
+        }
+        let cfg = ProxyConfig { depth, d_model, batch, activation: act, layernorm };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// MX-packability constraints: every GEMM reduction axis (D, H and the
+    /// batch axis for the backward weight gradients) must be a multiple of
+    /// the 32-element block size.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.depth >= 1, "depth must be >= 1");
+        ensure!(
+            self.d_model >= BLOCK_SIZE && self.d_model % BLOCK_SIZE == 0,
+            "d_model {} must be a positive multiple of {BLOCK_SIZE}",
+            self.d_model
+        );
+        ensure!(
+            self.batch >= BLOCK_SIZE && self.batch % BLOCK_SIZE == 0,
+            "batch {} must be a positive multiple of {BLOCK_SIZE} (backward GEMMs reduce over it)",
+            self.batch
+        );
+        Ok(())
+    }
+
+    /// Trainable parameter count (student).
+    pub fn n_params(&self) -> usize {
+        let per = self.d_model
+            * self.hidden()
+            * (if self.activation == Activation::Swiglu { 3 } else { 2 })
+            + if self.layernorm { self.d_model } else { 0 };
+        per * self.depth
+    }
+
+    fn param_names(&self) -> Vec<&'static str> {
+        let mut n = vec!["w1", "w2"];
+        if self.activation == Activation::Swiglu {
+            n.push("wg");
+        }
+        if self.layernorm {
+            n.push("ln");
+        }
+        n
+    }
+
+    fn teacher_names(&self) -> Vec<&'static str> {
+        let mut n = vec!["w1", "w2"];
+        if self.activation == Activation::Swiglu {
+            n.push("wg");
+        }
+        n
+    }
+
+    fn shape_of(&self, name: &str) -> Vec<usize> {
+        let (l, d, h) = (self.depth, self.d_model, self.hidden());
+        match name {
+            "w1" | "wg" => vec![l, d, h],
+            "w2" => vec![l, h, d],
+            "ln" => vec![l, d],
+            _ => unreachable!("unknown tensor {name}"),
+        }
+    }
+}
+
+/// Host-resident training state: flat f32 tensors in state-spec order
+/// (student params ‖ adam-m ‖ adam-v ‖ teacher params).
+#[derive(Debug, Clone)]
+pub struct NativeState {
+    pub tensors: Vec<Vec<f32>>,
+}
+
+/// Per-layer forward intermediates kept for the backward pass.
+struct LayerCache {
+    /// Normalized input (empty when the model has no LN).
+    xhat: Vec<f32>,
+    inv_std: Vec<f32>,
+    /// Quantize→dequantized gamma (empty when no LN).
+    gamma_q: Vec<f32>,
+    /// Post-LN activations (== a_in when no LN).
+    z: Vec<f32>,
+    /// Pre-activation h = z·W1.
+    h: Vec<f32>,
+    /// SwiGLU gate projection.
+    gate: Option<Vec<f32>>,
+    /// φ(h[, gate]).
+    phi: Vec<f32>,
+}
+
+struct ForwardPass {
+    out: Vec<f32>,
+    caches: Vec<LayerCache>,
+    ln_fracs: Vec<f32>,
+    act_fracs: Vec<f32>,
+}
+
+/// Immutable view of one parameter set inside a [`NativeState`].
+struct ParamsView<'a> {
+    w1: &'a [f32],
+    w2: &'a [f32],
+    wg: Option<&'a [f32]>,
+    ln: Option<&'a [f32]>,
+}
+
+/// The native [`Backend`]: one proxy model, executable on a bare machine.
+pub struct NativeModel {
+    cfg: ProxyConfig,
+    name: String,
+    spec: Vec<TensorSpec>,
+}
+
+impl NativeModel {
+    pub fn new(cfg: ProxyConfig) -> Result<NativeModel> {
+        cfg.validate()?;
+        let mut spec = Vec::new();
+        for prefix in ["p", "m", "v"] {
+            for n in cfg.param_names() {
+                spec.push(TensorSpec {
+                    name: format!("{prefix}_{n}"),
+                    shape: cfg.shape_of(n),
+                    dtype: crate::runtime::Dtype::F32,
+                });
+            }
+        }
+        for n in cfg.teacher_names() {
+            spec.push(TensorSpec {
+                name: format!("t_{n}"),
+                shape: cfg.shape_of(n),
+                dtype: crate::runtime::Dtype::F32,
+            });
+        }
+        Ok(NativeModel { name: cfg.name(), cfg, spec })
+    }
+
+    pub fn config(&self) -> &ProxyConfig {
+        &self.cfg
+    }
+
+    /// Number of per-set parameter tensors (w1, w2[, wg][, ln]).
+    fn k(&self) -> usize {
+        self.cfg.param_names().len()
+    }
+
+    fn student<'a>(&self, s: &'a NativeState) -> ParamsView<'a> {
+        let swiglu = self.cfg.activation == Activation::Swiglu;
+        ParamsView {
+            w1: &s.tensors[0],
+            w2: &s.tensors[1],
+            wg: swiglu.then(|| s.tensors[2].as_slice()),
+            ln: self.cfg.layernorm.then(|| s.tensors[2 + swiglu as usize].as_slice()),
+        }
+    }
+
+    fn teacher<'a>(&self, s: &'a NativeState) -> ParamsView<'a> {
+        let swiglu = self.cfg.activation == Activation::Swiglu;
+        let t0 = 3 * self.k();
+        ParamsView {
+            w1: &s.tensors[t0],
+            w2: &s.tensors[t0 + 1],
+            wg: swiglu.then(|| s.tensors[t0 + 2].as_slice()),
+            ln: None,
+        }
+    }
+
+    /// Deterministic Gaussian batch + label noise for (seed, step) —
+    /// identical across precision schemes and intervention branches.
+    ///
+    /// The data stream lives in its own domain (`root.fold_in(2)`) so it
+    /// never collides with the init streams (`root.fold_in(0)` = student,
+    /// `root.fold_in(1)` = teacher) — otherwise the step-0 batch would be
+    /// bit-identical to the w1 init stream.
+    fn batch_inputs(&self, seed: i32, step: i32, label_noise: f32) -> (Vec<f32>, Vec<f32>) {
+        let n = self.cfg.batch * self.cfg.d_model;
+        let base =
+            Xoshiro256::seed_from(seed as i64 as u64).fold_in(2).fold_in(step as i64 as u64);
+        let x = base.fold_in(0).normal_vec(n);
+        let mut noise = base.fold_in(1).normal_vec(n);
+        for v in &mut noise {
+            *v *= label_noise;
+        }
+        (x, noise)
+    }
+
+    /// Forward pass over one parameter view. `keep` retains per-layer
+    /// intermediates for the backward pass (the teacher skips them).
+    fn forward(&self, p: &ParamsView, x: &[f32], fmt: &Fmt, keep: bool) -> ForwardPass {
+        let (l, d, hd, b) = (self.cfg.depth, self.cfg.d_model, self.cfg.hidden(), self.cfg.batch);
+        let bump = fmt.scale_bump;
+        let mut a = x.to_vec();
+        let mut caches = Vec::with_capacity(if keep { l } else { 0 });
+        let mut ln_fracs = Vec::with_capacity(l);
+        let mut act_fracs = Vec::with_capacity(l);
+        for k in 0..l {
+            let w1k = &p.w1[k * d * hd..(k + 1) * d * hd]; // [D,H]
+            let w2k = &p.w2[k * hd * d..(k + 1) * hd * d]; // [H,D]
+
+            // -- layer norm with quantizable affine weight (§6.1) --
+            let (z, xhat, inv_std, gamma_q, ln_frac) = match p.ln {
+                Some(ln) => {
+                    let g = &ln[k * d..(k + 1) * d];
+                    let on = fmt.quant_ln && fmt.quant_fwd;
+                    let eff = if on { fmt.w_fwd } else { FormatId::Fp32 };
+                    let (gq, clamped) = packed_qdq(g, eff, bump);
+                    let frac = clamped as f32 / d as f32;
+                    let (z, xhat, inv_std) = layernorm_fwd(&a, b, d, &gq);
+                    (z, xhat, inv_std, gq, frac)
+                }
+                None => (a.clone(), Vec::new(), Vec::new(), Vec::new(), 0.0),
+            };
+
+            // -- h = Q(z) · Q(W1), gate = Q(z) · Q(Wg) --
+            let mut h = vec![0.0f32; b * hd];
+            let mut gate: Option<Vec<f32>> = None;
+            let fz;
+            {
+                let (qz, f) = quantize_site(&z, b, d, fmt.a_fwd, fmt.quant_fwd, bump);
+                fz = f;
+                let w1t = transpose(w1k, d, hd); // [H,D]
+                let (qw1, _) = quantize_site(&w1t, hd, d, fmt.w_fwd, fmt.quant_fwd, bump);
+                qgemm(&qz, &qw1, b, hd, d, &mut h);
+                if let Some(wg) = p.wg {
+                    let wgk = &wg[k * d * hd..(k + 1) * d * hd];
+                    let wgt = transpose(wgk, d, hd);
+                    let (qwg, _) = quantize_site(&wgt, hd, d, fmt.w_fwd, fmt.quant_fwd, bump);
+                    let mut g = vec![0.0f32; b * hd];
+                    qgemm(&qz, &qwg, b, hd, d, &mut g);
+                    gate = Some(g);
+                }
+            }
+            let phi = act_fwd(self.cfg.activation, &h, gate.as_deref());
+
+            // -- out = Q(φ) · Q(W2); A_k = A_{k-1} + out --
+            let mut outk = vec![0.0f32; b * d];
+            let fphi;
+            {
+                let (qphi, f) = quantize_site(&phi, b, hd, fmt.a_fwd, fmt.quant_fwd, bump);
+                fphi = f;
+                let w2t = transpose(w2k, hd, d); // [D,H]
+                let (qw2, _) = quantize_site(&w2t, d, hd, fmt.w_fwd, fmt.quant_fwd, bump);
+                qgemm(&qphi, &qw2, b, d, hd, &mut outk);
+            }
+            let a_next: Vec<f32> = a.iter().zip(&outk).map(|(&x0, &y)| x0 + y).collect();
+
+            ln_fracs.push(ln_frac);
+            act_fracs.push(0.5 * (fz + fphi));
+            if keep {
+                caches.push(LayerCache { xhat, inv_std, gamma_q, z, h, gate, phi });
+            }
+            a = a_next;
+        }
+        ForwardPass { out: a, caches, ln_fracs, act_fracs }
+    }
+
+    /// Backward pass: gradients for every student tensor, in
+    /// `param_names` order. Every gradient GEMM re-quantizes its operands
+    /// along its own reduction axis (blocks re-form exactly as in the
+    /// python custom VJP) and runs on the packed engine when both sides
+    /// are MX.
+    fn backward(
+        &self,
+        p: &ParamsView,
+        fwd: &ForwardPass,
+        dout: Vec<f32>,
+        fmt: &Fmt,
+    ) -> Vec<Vec<f32>> {
+        let (l, d, hd, b) = (self.cfg.depth, self.cfg.d_model, self.cfg.hidden(), self.cfg.batch);
+        let bump = fmt.scale_bump;
+        let (en, gf, wf, af) = (fmt.quant_bwd, fmt.g_bwd, fmt.w_bwd, fmt.a_bwd);
+        let mut g_w1 = vec![0.0f32; l * d * hd];
+        let mut g_w2 = vec![0.0f32; l * hd * d];
+        let mut g_wg = p.wg.map(|_| vec![0.0f32; l * d * hd]);
+        let mut g_ln = p.ln.map(|_| vec![0.0f32; l * d]);
+
+        let mut da = dout; // ∂L/∂A_k, flowing backwards
+        for k in (0..l).rev() {
+            let c = &fwd.caches[k];
+            let w1k = &p.w1[k * d * hd..(k + 1) * d * hd]; // [D,H]
+            let w2k = &p.w2[k * hd * d..(k + 1) * hd * d]; // [H,D]
+
+            // -- through out = φ·W2:  dφ = Q(G)·Q(W2)ᵀ, dW2 = Q(φ)ᵀ·Q(G) --
+            let mut dphi = vec![0.0f32; b * hd];
+            {
+                let (qg, _) = quantize_site(&da, b, d, gf, en, bump);
+                let (qw2, _) = quantize_site(w2k, hd, d, wf, en, bump); // blocks along D
+                qgemm(&qg, &qw2, b, hd, d, &mut dphi);
+
+                let phit = transpose(&c.phi, b, hd); // [H,B]
+                let gt = transpose(&da, b, d); // [D,B]
+                let (qphi, _) = quantize_site(&phit, hd, b, af, en, bump);
+                let (qgt, _) = quantize_site(&gt, d, b, gf, en, bump);
+                qgemm(&qphi, &qgt, hd, d, b, &mut g_w2[k * hd * d..(k + 1) * hd * d]);
+            }
+
+            // -- through φ --
+            let (dh, dgate) = act_bwd(self.cfg.activation, &c.h, c.gate.as_deref(), &dphi);
+
+            // -- through h = z·W1:  dz = Q(dh)·Q(W1)ᵀ, dW1 = Q(z)ᵀ·Q(dh) --
+            let mut dz = vec![0.0f32; b * d];
+            {
+                let (qdh, _) = quantize_site(&dh, b, hd, gf, en, bump);
+                let (qw1, _) = quantize_site(w1k, d, hd, wf, en, bump); // blocks along H
+                qgemm(&qdh, &qw1, b, d, hd, &mut dz);
+
+                let zt = transpose(&c.z, b, d); // [D,B]
+                let dht = transpose(&dh, b, hd); // [H,B]
+                let (qz, _) = quantize_site(&zt, d, b, af, en, bump);
+                let (qdht, _) = quantize_site(&dht, hd, b, gf, en, bump);
+                qgemm(&qz, &qdht, d, hd, b, &mut g_w1[k * d * hd..(k + 1) * d * hd]);
+            }
+
+            // -- SwiGLU gate projection --
+            if let (Some(dgate), Some(wg)) = (dgate, p.wg) {
+                let wgk = &wg[k * d * hd..(k + 1) * d * hd];
+                let mut dz_gate = vec![0.0f32; b * d];
+                let (qdg, _) = quantize_site(&dgate, b, hd, gf, en, bump);
+                let (qwg, _) = quantize_site(wgk, d, hd, wf, en, bump);
+                qgemm(&qdg, &qwg, b, d, hd, &mut dz_gate);
+                for (a0, v) in dz.iter_mut().zip(&dz_gate) {
+                    *a0 += v;
+                }
+                let zt = transpose(&c.z, b, d);
+                let dgt = transpose(&dgate, b, hd);
+                let (qz, _) = quantize_site(&zt, d, b, af, en, bump);
+                let (qdgt, _) = quantize_site(&dgt, hd, b, gf, en, bump);
+                let g_wg_buf = g_wg.as_mut().expect("swiglu grads");
+                qgemm(&qz, &qdgt, d, hd, b, &mut g_wg_buf[k * d * hd..(k + 1) * d * hd]);
+            }
+
+            // -- through LN (straight-through gamma) + the residual skip --
+            let da_prev: Vec<f32> = if p.ln.is_some() {
+                let (dx_ln, dgamma) = layernorm_bwd(&dz, &c.xhat, &c.inv_std, &c.gamma_q, b, d);
+                let g_ln_buf = g_ln.as_mut().expect("ln grads");
+                g_ln_buf[k * d..(k + 1) * d].copy_from_slice(&dgamma);
+                da.iter().zip(&dx_ln).map(|(&g0, &g1)| g0 + g1).collect()
+            } else {
+                da.iter().zip(&dz).map(|(&g0, &g1)| g0 + g1).collect()
+            };
+            da = da_prev;
+        }
+
+        let mut grads = vec![g_w1, g_w2];
+        if let Some(g) = g_wg {
+            grads.push(g);
+        }
+        if let Some(g) = g_ln {
+            grads.push(g);
+        }
+        grads
+    }
+
+    /// MSE loss + ∂L/∂out against the teacher-plus-noise targets.
+    fn loss_and_dout(out: &[f32], target: &[f32]) -> (f32, Vec<f32>) {
+        let n = out.len() as f64;
+        let mut acc = 0.0f64;
+        let mut dout = vec![0.0f32; out.len()];
+        for i in 0..out.len() {
+            let diff = (out[i] - target[i]) as f64;
+            acc += diff * diff;
+            dout[i] = (diff / n) as f32;
+        }
+        ((0.5 * acc / n) as f32, dout)
+    }
+
+    /// Decode `StepArgs` into (fmt, x, target) and run the student forward.
+    fn prepare(&self, state: &NativeState, args: &StepArgs) -> Result<(Fmt, Vec<f32>, Vec<f32>)> {
+        ensure!(args.tokens.is_none(), "proxy backend takes no tokens");
+        let fmt = Fmt::from_vec(&args.fmt)
+            .ok_or_else(|| anyhow!("undecodable fmt vector {:?}", args.fmt))?;
+        ensure!(args.hyper.len() >= hyper_idx::HYPER_LEN, "hyper vector too short");
+        let label_noise = args.hyper[hyper_idx::LABEL_NOISE];
+        let (x, noise) = self.batch_inputs(args.seed, args.step, label_noise);
+        let t = self.forward(&self.teacher(state), &x, &Fmt::fp32(), false);
+        let target: Vec<f32> = t.out.iter().zip(&noise).map(|(&o, &e)| o + e).collect();
+        Ok((fmt, x, target))
+    }
+
+    /// Training loss at the current parameters for (seed, step) — the
+    /// forward half of [`Backend::step`], exposed for gradient checks.
+    pub fn loss(&self, state: &NativeState, args: &StepArgs) -> Result<f32> {
+        let (fmt, x, target) = self.prepare(state, args)?;
+        let fwd = self.forward(&self.student(state), &x, &fmt, false);
+        Ok(Self::loss_and_dout(&fwd.out, &target).0)
+    }
+
+    /// Analytic parameter gradients (in `w1, w2[, wg][, ln]` order) at the
+    /// current parameters — exposed for finite-difference gradient checks.
+    pub fn grads(&self, state: &NativeState, args: &StepArgs) -> Result<Vec<Vec<f32>>> {
+        let (fmt, x, target) = self.prepare(state, args)?;
+        let p = self.student(state);
+        let fwd = self.forward(&p, &x, &fmt, true);
+        let (_, dout) = Self::loss_and_dout(&fwd.out, &target);
+        Ok(self.backward(&p, &fwd, dout, &fmt))
+    }
+
+    /// Fused Adam / SGD(momentum) update for one tensor; returns Σ(Δp)².
+    fn update_tensor(
+        p: &mut [f32],
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        t: f32,
+        lr: f32,
+        sgd: bool,
+        momentum: f32,
+    ) -> f64 {
+        let mut upd_sq = 0.0f64;
+        if sgd {
+            for i in 0..p.len() {
+                m[i] = momentum * m[i] + g[i];
+                let step = lr * m[i];
+                upd_sq += (step as f64) * (step as f64);
+                p[i] -= step;
+            }
+        } else {
+            let bias1 = 1.0 - ADAM_B1.powf(t);
+            let bias2 = 1.0 - ADAM_B2.powf(t);
+            for i in 0..p.len() {
+                m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
+                v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
+                let mhat = m[i] / bias1;
+                let vhat = v[i] / bias2;
+                let step = lr * (mhat / (vhat.sqrt() + ADAM_EPS));
+                upd_sq += (step as f64) * (step as f64);
+                p[i] -= step;
+            }
+        }
+        upd_sq
+    }
+
+    fn global_norm(tensors: &[Vec<f32>]) -> f32 {
+        let mut acc = 0.0f64;
+        for t in tensors {
+            for &v in t {
+                acc += (v as f64) * (v as f64);
+            }
+        }
+        (acc.sqrt()) as f32
+    }
+
+    fn do_step(
+        &self,
+        mut state: NativeState,
+        args: &StepArgs,
+        paired: bool,
+    ) -> Result<(NativeState, Metrics)> {
+        let (fmt, x, target) = self.prepare(&state, args)?;
+        let lr = args.hyper[hyper_idx::LR];
+        let sgd = args.hyper[hyper_idx::OPT_MODE] > 0.5;
+        let momentum = args.hyper[hyper_idx::MOMENTUM];
+
+        // Forward + backward under the active precision scheme.
+        let (loss, fwd, grads) = {
+            let p = self.student(&state);
+            let fwd = self.forward(&p, &x, &fmt, true);
+            let (loss, dout) = Self::loss_and_dout(&fwd.out, &target);
+            let grads = self.backward(&p, &fwd, dout, &fmt);
+            (loss, fwd, grads)
+        };
+        let grad_norm = Self::global_norm(&grads);
+
+        // Paired mode: FP32 gradient at the same parameter point (Fig. 4).
+        let (eps_ratio, cosine) = if paired {
+            let fp32 = Fmt::fp32();
+            let p = self.student(&state);
+            let fwd0 = self.forward(&p, &x, &fp32, true);
+            let (_, dout0) = Self::loss_and_dout(&fwd0.out, &target);
+            let g_ref = self.backward(&p, &fwd0, dout0, &fp32);
+            let mut diff_sq = 0.0f64;
+            let mut dot = 0.0f64;
+            for (gq, gr) in grads.iter().zip(&g_ref) {
+                for (&a0, &b0) in gq.iter().zip(gr) {
+                    let (a0, b0) = (a0 as f64, b0 as f64);
+                    diff_sq += (a0 - b0) * (a0 - b0);
+                    dot += a0 * b0;
+                }
+            }
+            let ref_norm = Self::global_norm(&g_ref) as f64;
+            let q_norm = grad_norm as f64;
+            (
+                (diff_sq.sqrt() / (ref_norm + 1e-30)) as f32,
+                (dot / (q_norm * ref_norm + 1e-30)) as f32,
+            )
+        } else {
+            (0.0, 0.0)
+        };
+
+        // Optimizer update (master weights and moments stay f32).
+        let k = self.k();
+        let t = args.step as f32 + 1.0;
+        let mut upd_sq = 0.0f64;
+        for (i, g) in grads.iter().enumerate() {
+            let (head, tail) = state.tensors.split_at_mut(k + i);
+            let (mid, tail2) = tail.split_at_mut(k);
+            let p = &mut head[i];
+            let m = &mut mid[0];
+            let v = &mut tail2[0];
+            upd_sq += Self::update_tensor(p, g, m, v, t, lr, sgd, momentum);
+        }
+        let param_norm = Self::global_norm(&state.tensors[..k]);
+
+        let l = self.cfg.depth as f32;
+        let met = Metrics {
+            loss,
+            grad_norm,
+            ln_frac_first: fwd.ln_fracs.first().copied().unwrap_or(0.0),
+            ln_frac_mean: fwd.ln_fracs.iter().sum::<f32>() / l,
+            act_frac_mean: fwd.act_fracs.iter().sum::<f32>() / l,
+            update_norm: (upd_sq.sqrt()) as f32,
+            param_norm,
+            eps_ratio,
+            cosine,
+        };
+        Ok((state, met))
+    }
+}
+
+impl Backend for NativeModel {
+    type State = NativeState;
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn n_params(&self) -> usize {
+        self.cfg.n_params()
+    }
+
+    fn has_paired(&self) -> bool {
+        true
+    }
+
+    fn init(&self, seed: i32, init_mode: f32, gain: f32) -> Result<NativeState> {
+        let root = Xoshiro256::seed_from(seed as i64 as u64);
+        let mut tensors: Vec<Vec<f32>> = Vec::with_capacity(self.spec.len());
+        // Student params: Kaiming-uniform (mode 0) / Xavier-normal (mode 1),
+        // matching proxy.init_params tensor-for-tensor.
+        let weight_init = |sub: &Xoshiro256, name: &str, i: u64| -> Vec<f32> {
+            let (d, h) = (self.cfg.d_model, self.cfg.hidden());
+            let n = self.cfg.depth * d * h;
+            let fan_in = match name {
+                "w2" => h,
+                _ => d,
+            };
+            let mut rng = sub.fold_in(i);
+            if init_mode > 0.5 {
+                let xstd = gain * (2.0 / (d + h) as f32).sqrt();
+                let mut v = rng.normal_vec(n);
+                for x in &mut v {
+                    *x *= xstd;
+                }
+                v
+            } else {
+                let bound = gain / (fan_in as f32).sqrt();
+                (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * bound).collect()
+            }
+        };
+        let student = root.fold_in(0);
+        for (i, n) in self.cfg.param_names().iter().enumerate() {
+            if *n == "ln" {
+                tensors.push(vec![1.0f32; self.cfg.depth * self.cfg.d_model]);
+            } else {
+                tensors.push(weight_init(&student, n, i as u64));
+            }
+        }
+        // Adam moments: zeros.
+        for _ in 0..2 {
+            for n in self.cfg.param_names() {
+                let len: usize = self.cfg.shape_of(n).iter().product();
+                tensors.push(vec![0.0f32; len]);
+            }
+        }
+        // Teacher: independent stream, no LN.
+        let teacher = root.fold_in(1);
+        for (i, n) in self.cfg.teacher_names().iter().enumerate() {
+            tensors.push(weight_init(&teacher, n, i as u64));
+        }
+        Ok(NativeState { tensors })
+    }
+
+    fn step(&self, state: NativeState, args: &StepArgs) -> Result<(NativeState, Metrics)> {
+        self.do_step(state, args, false)
+    }
+
+    fn paired_step(&self, state: NativeState, args: &StepArgs) -> Result<(NativeState, Metrics)> {
+        self.do_step(state, args, true)
+    }
+
+    fn clone_state(&self, state: &NativeState) -> Result<NativeState> {
+        Ok(state.clone())
+    }
+
+    fn state_spec(&self) -> &[TensorSpec] {
+        &self.spec
+    }
+
+    fn snapshot(&self, state: &NativeState) -> Result<Vec<Vec<f32>>> {
+        Ok(state.tensors.clone())
+    }
+
+    fn restore(&self, tensors: Vec<Vec<f32>>) -> Result<NativeState> {
+        ensure!(
+            tensors.len() == self.spec.len(),
+            "state arity {} != spec {}",
+            tensors.len(),
+            self.spec.len()
+        );
+        for (t, ts) in tensors.iter().zip(&self.spec) {
+            if t.len() != ts.elems() {
+                bail!("tensor {}: {} elems, expected {}", ts.name, t.len(), ts.elems());
+            }
+        }
+        Ok(NativeState { tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::spec::Fmt;
+
+    fn tiny() -> NativeModel {
+        NativeModel::new(ProxyConfig {
+            depth: 2,
+            d_model: 32,
+            batch: 32,
+            activation: Activation::Gelu,
+            layernorm: true,
+        })
+        .unwrap()
+    }
+
+    fn args(fmt: Fmt, step: i32) -> StepArgs {
+        let mut hyper = vec![0.0f32; hyper_idx::HYPER_LEN];
+        hyper[hyper_idx::LR] = 1e-3;
+        hyper[hyper_idx::LABEL_NOISE] = 1e-3;
+        StepArgs { tokens: None, fmt: fmt.to_vec(), hyper, seed: 7, step }
+    }
+
+    #[test]
+    fn name_parse_roundtrip() {
+        for name in ["proxy_gelu_ln_L4_D256", "proxy_relu_noln_L2_D128", "proxy_swiglu_ln_L3_D384"]
+        {
+            let cfg = ProxyConfig::parse(name, 64).unwrap();
+            assert_eq!(cfg.name(), name);
+        }
+        assert!(ProxyConfig::parse("lm_olmo_12m", 64).is_err());
+        assert!(ProxyConfig::parse("proxy_gelu_ln_L2_D100", 64).is_err(), "D%32 enforced");
+        assert!(ProxyConfig::parse("proxy_gelu_ln_L2_D128", 50).is_err(), "batch%32 enforced");
+    }
+
+    #[test]
+    fn swiglu_hidden_is_block_aligned_param_parity() {
+        let cfg = ProxyConfig {
+            depth: 1,
+            d_model: 256,
+            batch: 32,
+            activation: Activation::Swiglu,
+            layernorm: true,
+        };
+        assert_eq!(cfg.hidden() % BLOCK_SIZE, 0);
+        // 8/3·256 = 682.67 → 672 or 704; parameter parity with 4·D ±10%.
+        let dense = 2 * 256 * 4 * 256;
+        let swi = 3 * 256 * cfg.hidden();
+        assert!((swi as f64 / dense as f64 - 1.0).abs() < 0.1, "hidden {}", cfg.hidden());
+    }
+
+    #[test]
+    fn init_is_deterministic_and_spec_shaped() {
+        let m = tiny();
+        let a = m.init(3, 0.0, 1.0).unwrap();
+        let b = m.init(3, 0.0, 1.0).unwrap();
+        assert_eq!(a.tensors.len(), m.state_spec().len());
+        for (x, y) in a.tensors.iter().zip(&b.tensors) {
+            assert_eq!(x, y, "same seed → identical init");
+        }
+        let c = m.init(4, 0.0, 1.0).unwrap();
+        assert_ne!(a.tensors[0], c.tensors[0], "different seed → different init");
+        for (t, ts) in a.tensors.iter().zip(m.state_spec()) {
+            assert_eq!(t.len(), ts.elems(), "{}", ts.name);
+        }
+        // Moments start at zero; LN gammas at one.
+        assert!(a.tensors[m.k()].iter().all(|&v| v == 0.0));
+        let ln_idx = m.k() - 1;
+        assert!(a.tensors[ln_idx].iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn fp32_steps_reduce_loss() {
+        let m = tiny();
+        let mut state = m.init(0, 0.0, 1.0).unwrap();
+        let mut losses = vec![];
+        for step in 0..40 {
+            let (s2, met) = m.step(state, &args(Fmt::fp32(), step)).unwrap();
+            state = s2;
+            assert!(met.loss.is_finite(), "step {step}");
+            assert!(met.grad_norm.is_finite());
+            losses.push(met.loss as f64);
+        }
+        let head: f64 = losses[..5].iter().sum::<f64>() / 5.0;
+        let tail: f64 = losses[losses.len() - 5..].iter().sum::<f64>() / 5.0;
+        assert!(tail < head, "training must reduce loss: head {head} -> tail {tail}");
+    }
+
+    #[test]
+    fn quantized_step_emits_all_nine_metrics() {
+        let m = tiny();
+        let state = m.init(1, 0.0, 1.0).unwrap();
+        let fmt = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+        let (_, met) = m.paired_step(state, &args(fmt, 0)).unwrap();
+        for (name, v) in [
+            ("loss", met.loss),
+            ("grad_norm", met.grad_norm),
+            ("ln_frac_first", met.ln_frac_first),
+            ("ln_frac_mean", met.ln_frac_mean),
+            ("act_frac_mean", met.act_frac_mean),
+            ("update_norm", met.update_norm),
+            ("param_norm", met.param_norm),
+            ("eps_ratio", met.eps_ratio),
+            ("cosine", met.cosine),
+        ] {
+            assert!(v.is_finite(), "{name} must be finite, got {v}");
+        }
+        assert!(met.update_norm > 0.0);
+        assert!(met.param_norm > 0.0);
+        // Quantized vs fp32 gradients differ but correlate strongly.
+        assert!(met.eps_ratio > 0.0);
+        assert!(met.cosine > 0.5 && met.cosine <= 1.0 + 1e-6);
+    }
+
+    #[test]
+    fn paired_fp32_control_has_zero_bias() {
+        let m = tiny();
+        let state = m.init(2, 0.0, 1.0).unwrap();
+        let (_, met) = m.paired_step(state, &args(Fmt::fp32(), 0)).unwrap();
+        assert_eq!(met.eps_ratio, 0.0, "fp32 vs fp32: no gradient bias");
+        assert!((met.cosine - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn ln_quant_toggle_moves_ln_fraction() {
+        // A tightly clustered gamma clamps whole blocks under E4M3 (§6.1);
+        // flipping quant_ln off must zero the diagnostic.
+        let m = tiny();
+        let mut state = m.init(0, 0.0, 1.0).unwrap();
+        let ln_idx = m.k() - 1;
+        for v in &mut state.tensors[ln_idx] {
+            *v = 0.9; // the paper's pathological cluster
+        }
+        let fmt = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+        let (state, met) = m.step(state, &args(fmt, 0)).unwrap();
+        assert!(met.ln_frac_mean > 0.9, "clustered gammas must clamp, got {}", met.ln_frac_mean);
+        let (_, met2) = m.step(state, &args(fmt.without_ln_quant(), 1)).unwrap();
+        assert_eq!(met2.ln_frac_mean, 0.0, "quant_ln off → no clamping diagnostic");
+    }
+
+    #[test]
+    fn teacher_is_fixed_target() {
+        // Teacher params must not move across steps.
+        let m = tiny();
+        let state = m.init(5, 0.0, 1.0).unwrap();
+        let t0 = state.tensors[3 * m.k()].clone();
+        let (state, _) = m.step(state, &args(Fmt::fp32(), 0)).unwrap();
+        let (state, _) = m.step(state, &args(Fmt::fp32(), 1)).unwrap();
+        assert_eq!(state.tensors[3 * m.k()], t0);
+    }
+}

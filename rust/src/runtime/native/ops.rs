@@ -1,0 +1,373 @@
+//! Numeric building blocks of the native backend: quantization sites,
+//! the quantized-GEMM dispatcher, layer normalization and activations.
+//!
+//! Semantics mirror `python/compile/model.py` site-for-site: every GEMM
+//! operand passes through its own MX quantization site (format id + enable
+//! flag from the runtime `fmt` vector, blocks along the reduction axis),
+//! layer-norm affine parameters quantize with the forward *weight* format
+//! under `QUANT_LN` (straight-through backward), and the last-bin fraction
+//! of each site feeds the Fig. 5 diagnostics.
+//!
+//! Quantized × quantized GEMMs run on the packed engine
+//! ([`crate::formats::gemm::gemm`] — never the scalar oracle); operands
+//! that skip MX quantization (fp32 passthrough / bf16 rounding) take the
+//! dense [`gemm_f32`] path instead, with any packed partner decoded
+//! through its bit-true LUT first.
+
+use std::borrow::Cow;
+
+use crate::formats::gemm::{gemm, gemm_f32, PackedMatrix};
+use crate::formats::quant::bf16_rne;
+use crate::formats::spec::{FormatId, BLOCK_SIZE};
+
+/// One GEMM operand after its quantization site. Layout contract: row-major
+/// with the reduction axis contiguous (the `A[m×k]` / `B[n×k]ᵀ` convention
+/// of [`gemm`]).
+pub enum QMat<'a> {
+    /// MX-quantized: element codes + block scales, ready for the packed GEMM.
+    Mx(PackedMatrix),
+    /// fp32 passthrough (borrowed) or bf16-rounded copy (owned).
+    Dense(Cow<'a, [f32]>),
+}
+
+impl QMat<'_> {
+    /// Dequantized dense view (bitwise equal to quantize→dequantize).
+    fn dense(&self) -> Cow<'_, [f32]> {
+        match self {
+            QMat::Mx(m) => Cow::Owned(m.decode()),
+            QMat::Dense(v) => Cow::Borrowed(v.as_ref()),
+        }
+    }
+}
+
+/// Run one quantization site over a `rows × cols` operand (reduction axis
+/// contiguous). Returns the operand representation plus the last-bin
+/// fraction of its elements (0 for fp32/bf16 — they have no shared-scale
+/// clamping).
+///
+/// Matches `model._maybe`: a disabled site folds to fp32 passthrough.
+pub fn quantize_site(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    id: FormatId,
+    enabled: bool,
+    bump: bool,
+) -> (QMat<'_>, f32) {
+    debug_assert_eq!(x.len(), rows * cols);
+    let eff = if enabled { id } else { FormatId::Fp32 };
+    match eff {
+        FormatId::Fp32 => (QMat::Dense(Cow::Borrowed(x)), 0.0),
+        FormatId::Bf16 => {
+            let v: Vec<f32> = x.iter().map(|&v| bf16_rne(v)).collect();
+            (QMat::Dense(Cow::Owned(v)), 0.0)
+        }
+        _ => {
+            debug_assert_eq!(cols % BLOCK_SIZE, 0, "reduction axis must be block-aligned");
+            let m = PackedMatrix::encode(x, rows, cols, eff, bump);
+            let frac = m.data.clamped as f32 / x.len().max(1) as f32;
+            (QMat::Mx(m), frac)
+        }
+    }
+}
+
+/// `C[m×n] = A[m×k] · B[n×k]ᵀ` over quantized operands.
+///
+/// Both packed → the scale-carried packed block GEMM (mixed element
+/// formats allowed). Any dense operand → the dense f64-accumulating
+/// kernel over dequantized values.
+pub fn qgemm(a: &QMat, b: &QMat, m: usize, n: usize, k: usize, out: &mut [f32]) {
+    match (a, b) {
+        (QMat::Mx(pa), QMat::Mx(pb)) => {
+            debug_assert_eq!((pa.rows, pa.cols), (m, k));
+            debug_assert_eq!((pb.rows, pb.cols), (n, k));
+            gemm(pa, pb, out);
+        }
+        _ => gemm_f32(&a.dense(), &b.dense(), m, n, k, out),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Layer normalization with quantizable affine weight (paper §6.1).
+// ---------------------------------------------------------------------------
+
+pub const LN_EPS: f64 = 1e-5;
+
+/// Forward LN over rows of `x` (`batch × d`): `z = γ_q ⊙ (x − μ)/√(σ² + ε)`.
+/// Returns `(z, xhat, inv_std)`; `gamma_q` is supplied by the caller (it is
+/// a quantization site of its own, so the last-bin diagnostic stays with
+/// the caller).
+pub fn layernorm_fwd(
+    x: &[f32],
+    batch: usize,
+    d: usize,
+    gamma_q: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut z = vec![0.0f32; x.len()];
+    let mut xhat = vec![0.0f32; x.len()];
+    let mut inv_std = vec![0.0f32; batch];
+    for b in 0..batch {
+        let row = &x[b * d..(b + 1) * d];
+        let mu = row.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
+        let var = row.iter().map(|&v| (v as f64 - mu) * (v as f64 - mu)).sum::<f64>() / d as f64;
+        let is = 1.0 / (var + LN_EPS).sqrt();
+        inv_std[b] = is as f32;
+        for j in 0..d {
+            let xh = ((row[j] as f64 - mu) * is) as f32;
+            xhat[b * d + j] = xh;
+            z[b * d + j] = xh * gamma_q[j];
+        }
+    }
+    (z, xhat, inv_std)
+}
+
+/// Backward LN: given `dz = ∂L/∂z`, returns `(dx, dgamma)`. The gamma
+/// quantization is straight-through (`qdq_ste` in the python mirror), so
+/// `dgamma = Σ_b dz ⊙ x̂` and the input path uses the *quantized* gamma.
+pub fn layernorm_bwd(
+    dz: &[f32],
+    xhat: &[f32],
+    inv_std: &[f32],
+    gamma_q: &[f32],
+    batch: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut dx = vec![0.0f32; dz.len()];
+    let mut dgamma = vec![0.0f64; d];
+    for b in 0..batch {
+        let o = b * d;
+        let mut m1 = 0.0f64; // mean of dxhat
+        let mut m2 = 0.0f64; // mean of dxhat ⊙ xhat
+        for j in 0..d {
+            let dxh = (dz[o + j] * gamma_q[j]) as f64;
+            dgamma[j] += dz[o + j] as f64 * xhat[o + j] as f64;
+            m1 += dxh;
+            m2 += dxh * xhat[o + j] as f64;
+        }
+        m1 /= d as f64;
+        m2 /= d as f64;
+        let is = inv_std[b] as f64;
+        for j in 0..d {
+            let dxh = (dz[o + j] * gamma_q[j]) as f64;
+            dx[o + j] = (is * (dxh - m1 - xhat[o + j] as f64 * m2)) as f32;
+        }
+    }
+    (dx, dgamma.into_iter().map(|v| v as f32).collect())
+}
+
+// ---------------------------------------------------------------------------
+// Activations (forward + backward), matching jax.nn semantics.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    /// tanh-approximate GELU (jax.nn.gelu's default).
+    Gelu,
+    /// `silu(h) ⊙ g` with a second gating projection.
+    Swiglu,
+}
+
+impl Activation {
+    pub fn name(self) -> &'static str {
+        match self {
+            Activation::Relu => "relu",
+            Activation::Gelu => "gelu",
+            Activation::Swiglu => "swiglu",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Activation> {
+        match s {
+            "relu" => Some(Activation::Relu),
+            "gelu" => Some(Activation::Gelu),
+            "swiglu" => Some(Activation::Swiglu),
+            _ => None,
+        }
+    }
+}
+
+const GELU_C: f64 = 0.797_884_560_802_865_4; // sqrt(2/π)
+const GELU_A: f64 = 0.044715;
+
+fn gelu(h: f64) -> f64 {
+    0.5 * h * (1.0 + (GELU_C * (h + GELU_A * h * h * h)).tanh())
+}
+
+fn gelu_grad(h: f64) -> f64 {
+    let u = GELU_C * (h + GELU_A * h * h * h);
+    let t = u.tanh();
+    0.5 * (1.0 + t) + 0.5 * h * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * h * h)
+}
+
+fn sigmoid(h: f64) -> f64 {
+    1.0 / (1.0 + (-h).exp())
+}
+
+/// φ(h[, g]) elementwise.
+pub fn act_fwd(kind: Activation, h: &[f32], gate: Option<&[f32]>) -> Vec<f32> {
+    match kind {
+        Activation::Relu => h.iter().map(|&v| v.max(0.0)).collect(),
+        Activation::Gelu => h.iter().map(|&v| gelu(v as f64) as f32).collect(),
+        Activation::Swiglu => {
+            let g = gate.expect("swiglu needs a gate");
+            h.iter()
+                .zip(g)
+                .map(|(&v, &gv)| {
+                    let v = v as f64;
+                    (v * sigmoid(v) * gv as f64) as f32
+                })
+                .collect()
+        }
+    }
+}
+
+/// Backward through φ: given `dphi = ∂L/∂φ`, returns `(dh, dgate)`.
+pub fn act_bwd(
+    kind: Activation,
+    h: &[f32],
+    gate: Option<&[f32]>,
+    dphi: &[f32],
+) -> (Vec<f32>, Option<Vec<f32>>) {
+    match kind {
+        Activation::Relu => (
+            h.iter().zip(dphi).map(|(&v, &d)| if v > 0.0 { d } else { 0.0 }).collect(),
+            None,
+        ),
+        Activation::Gelu => (
+            h.iter().zip(dphi).map(|(&v, &d)| (gelu_grad(v as f64) * d as f64) as f32).collect(),
+            None,
+        ),
+        Activation::Swiglu => {
+            let g = gate.expect("swiglu needs a gate");
+            let mut dh = vec![0.0f32; h.len()];
+            let mut dg = vec![0.0f32; h.len()];
+            for i in 0..h.len() {
+                let hv = h[i] as f64;
+                let s = sigmoid(hv);
+                let silu = hv * s;
+                let dsilu = s * (1.0 + hv * (1.0 - s));
+                dh[i] = (dphi[i] as f64 * g[i] as f64 * dsilu) as f32;
+                dg[i] = (dphi[i] as f64 * silu) as f32;
+            }
+            (dh, Some(dg))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn quantize_site_dispatch() {
+        let x: Vec<f32> = (0..64).map(|i| i as f32 * 0.1 - 3.0).collect();
+        let (q, f) = quantize_site(&x, 2, 32, FormatId::Fp32, true, false);
+        assert!(matches!(q, QMat::Dense(Cow::Borrowed(_))));
+        assert_eq!(f, 0.0);
+        // Disabled site folds to fp32 even for an MX id.
+        let (q, _) = quantize_site(&x, 2, 32, FormatId::E4M3, false, false);
+        assert!(matches!(q, QMat::Dense(Cow::Borrowed(_))));
+        let (q, _) = quantize_site(&x, 2, 32, FormatId::Bf16, true, false);
+        match q {
+            QMat::Dense(v) => assert!(v.iter().zip(&x).all(|(a, b)| *a == bf16_rne(*b))),
+            _ => panic!("bf16 site must be dense"),
+        }
+        let (q, frac) = quantize_site(&x, 2, 32, FormatId::E4M3, true, false);
+        match q {
+            QMat::Mx(m) => {
+                let (want, clamped) =
+                    crate::formats::packed::packed_qdq(&x, FormatId::E4M3, false);
+                assert_eq!(m.decode(), want);
+                assert_eq!(frac, clamped as f32 / 64.0);
+            }
+            _ => panic!("mx site must pack"),
+        }
+    }
+
+    #[test]
+    fn qgemm_packed_equals_dense_fallback_to_roundoff() {
+        // Same quantized values through both execution paths: the packed
+        // scale-carried GEMM and the dense GEMM over dequantized values
+        // agree to f32 round-off (they differ only in accumulation grouping).
+        let mut rng = Xoshiro256::seed_from(4);
+        let (m, n, k) = (5, 7, 64);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(n * k);
+        let (qa, _) = quantize_site(&a, m, k, FormatId::E4M3, true, false);
+        let (qb, _) = quantize_site(&b, n, k, FormatId::E4M3, true, false);
+        let mut c_packed = vec![0.0f32; m * n];
+        qgemm(&qa, &qb, m, n, k, &mut c_packed);
+        let da = match &qa {
+            QMat::Mx(p) => p.decode(),
+            _ => unreachable!(),
+        };
+        let db = match &qb {
+            QMat::Mx(p) => p.decode(),
+            _ => unreachable!(),
+        };
+        let (qa_d, qb_d) = (QMat::Dense(Cow::Owned(da)), QMat::Dense(Cow::Owned(db)));
+        let mut c_dense = vec![0.0f32; m * n];
+        qgemm(&qa_d, &qb_d, m, n, k, &mut c_dense);
+        for (p, d) in c_packed.iter().zip(&c_dense) {
+            let denom = d.abs().max(1e-6);
+            assert!(((p - d) / denom).abs() < 1e-5, "packed {p} vs dense {d}");
+        }
+    }
+
+    #[test]
+    fn layernorm_normalizes_rows() {
+        let mut rng = Xoshiro256::seed_from(9);
+        let (batch, d) = (4, 64);
+        let x = rng.normal_vec(batch * d);
+        let gamma = vec![1.0f32; d];
+        let (z, xhat, inv_std) = layernorm_fwd(&x, batch, d, &gamma);
+        assert_eq!(z, xhat, "unit gamma: z == xhat");
+        for b in 0..batch {
+            let row = &xhat[b * d..(b + 1) * d];
+            let mu: f64 = row.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
+            let var: f64 = row.iter().map(|&v| (v as f64 - mu).powi(2)).sum::<f64>() / d as f64;
+            assert!(mu.abs() < 1e-6, "row {b} mean {mu}");
+            assert!((var - 1.0).abs() < 1e-3, "row {b} var {var}");
+            assert!(inv_std[b] > 0.0);
+        }
+    }
+
+    #[test]
+    fn activations_match_finite_differences() {
+        let hs: Vec<f32> = vec![-2.5, -1.0, -0.1, 0.0, 0.1, 1.0, 2.5];
+        let gs: Vec<f32> = vec![0.7, -0.3, 1.2, 0.5, -1.0, 0.2, 0.9];
+        let d_ones = vec![1.0f32; hs.len()];
+        let eps = 1e-4f64;
+        for kind in [Activation::Relu, Activation::Gelu, Activation::Swiglu] {
+            let gate = (kind == Activation::Swiglu).then_some(gs.as_slice());
+            let (dh, dg) = act_bwd(kind, &hs, gate, &d_ones);
+            for i in 0..hs.len() {
+                if kind == Activation::Relu && hs[i] == 0.0 {
+                    continue; // kink
+                }
+                let mut hp = hs.clone();
+                let mut hm = hs.clone();
+                hp[i] = (hp[i] as f64 + eps) as f32;
+                hm[i] = (hm[i] as f64 - eps) as f32;
+                let fp = act_fwd(kind, &hp, gate)[i] as f64;
+                let fm = act_fwd(kind, &hm, gate)[i] as f64;
+                let fd = (fp - fm) / (2.0 * eps);
+                assert!(
+                    (fd - dh[i] as f64).abs() < 1e-2,
+                    "{kind:?} dh[{i}]: fd {fd} vs analytic {}",
+                    dh[i]
+                );
+            }
+            if let Some(dg) = dg {
+                // d/dg of silu(h)·g is silu(h) exactly.
+                for i in 0..hs.len() {
+                    let hv = hs[i] as f64;
+                    let silu = hv * sigmoid(hv);
+                    assert!((dg[i] as f64 - silu).abs() < 1e-6);
+                }
+            }
+        }
+    }
+}

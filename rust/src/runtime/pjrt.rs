@@ -16,8 +16,8 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::manifest::Manifest;
-use super::{Metrics, StepArgs};
+use super::manifest::{list_bundles, Manifest, TensorSpec};
+use super::{Backend, Engine, Metrics, StepArgs};
 
 /// Model state: the flat, manifest-ordered tensor list (params ‖ adam-m ‖
 /// adam-v ‖ teacher), kept as *device* buffers between steps so the hot
@@ -303,6 +303,134 @@ impl Bundle {
         drop(extra);
         drop(extra_lits);
         Ok(loss)
+    }
+}
+
+impl Backend for Bundle {
+    type State = State;
+
+    fn name(&self) -> &str {
+        Bundle::name(self)
+    }
+
+    fn n_params(&self) -> usize {
+        self.manifest.n_params
+    }
+
+    fn tokens_shape(&self) -> Option<(usize, usize)> {
+        Bundle::tokens_shape(self)
+    }
+
+    fn vocab(&self) -> Option<usize> {
+        self.manifest.cfg_num("vocab").map(|v| v as usize)
+    }
+
+    fn has_paired(&self) -> bool {
+        Bundle::has_paired(self)
+    }
+
+    fn init(&self, seed: i32, init_mode: f32, gain: f32) -> Result<State> {
+        Bundle::init(self, seed, init_mode, gain)
+    }
+
+    fn step(&self, state: State, args: &StepArgs) -> Result<(State, Metrics)> {
+        Bundle::step(self, state, args)
+    }
+
+    fn paired_step(&self, state: State, args: &StepArgs) -> Result<(State, Metrics)> {
+        Bundle::paired_step(self, state, args)
+    }
+
+    fn eval(&self, state: &State, tokens: &[i32], fmt: &[f32]) -> Result<f32> {
+        Bundle::eval(self, state, tokens, fmt)
+    }
+
+    fn clone_state(&self, state: &State) -> Result<State> {
+        state.clone_state()
+    }
+
+    fn state_spec(&self) -> &[TensorSpec] {
+        &self.manifest.state
+    }
+
+    fn snapshot(&self, state: &State) -> Result<Vec<Vec<f32>>> {
+        if state.0.len() != self.manifest.state.len() {
+            bail!("state arity {} != manifest {}", state.0.len(), self.manifest.state.len());
+        }
+        state.0.iter().map(|b| Ok(b.to_literal_sync()?.to_vec::<f32>()?)).collect()
+    }
+
+    fn restore(&self, tensors: Vec<Vec<f32>>) -> Result<State> {
+        if tensors.len() != self.manifest.state.len() {
+            bail!("tensor count {} != manifest {}", tensors.len(), self.manifest.state.len());
+        }
+        let mut out = Vec::with_capacity(tensors.len());
+        let mut lits = Vec::with_capacity(tensors.len());
+        for (data, ts) in tensors.iter().zip(&self.manifest.state) {
+            if data.len() != ts.elems() {
+                bail!("tensor {}: {} elems, expected {}", ts.name, data.len(), ts.elems());
+            }
+            let lit = lit_f32(data, &ts.shape)?;
+            out.push(self.session.upload(&lit)?);
+            lits.push(lit); // host→device copies are async; keep alive
+        }
+        for b in &out {
+            let _ = b.to_literal_sync()?; // await the uploads
+        }
+        drop(lits);
+        Ok(State(out))
+    }
+}
+
+/// PJRT [`Engine`]: a process-wide [`Session`] plus an artifact directory,
+/// resolving bundle names to compiled [`Bundle`]s (cached).
+pub struct PjrtEngine {
+    session: Arc<Session>,
+    artifacts: PathBuf,
+    bundles: Mutex<HashMap<String, Arc<Bundle>>>,
+}
+
+impl PjrtEngine {
+    pub fn new(session: Arc<Session>, artifacts: &Path) -> Arc<PjrtEngine> {
+        Arc::new(PjrtEngine {
+            session,
+            artifacts: artifacts.to_path_buf(),
+            bundles: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Convenience: CPU client + artifact root in one call.
+    pub fn cpu(artifacts: &Path) -> Result<Arc<PjrtEngine>> {
+        Ok(Self::new(Session::cpu()?, artifacts))
+    }
+
+    pub fn session(&self) -> &Arc<Session> {
+        &self.session
+    }
+}
+
+impl Engine for PjrtEngine {
+    type Backend = Bundle;
+
+    fn platform(&self) -> String {
+        self.session.platform()
+    }
+
+    fn list(&self) -> Result<Vec<String>> {
+        list_bundles(&self.artifacts)
+    }
+
+    fn load(&self, name: &str) -> Result<Arc<Bundle>> {
+        if let Some(b) = self.bundles.lock().unwrap().get(name) {
+            return Ok(b.clone());
+        }
+        let dir = self.artifacts.join(name);
+        let b = Arc::new(
+            Bundle::load(self.session.clone(), &dir)
+                .with_context(|| format!("loading bundle {name}"))?,
+        );
+        self.bundles.lock().unwrap().insert(name.to_string(), b.clone());
+        Ok(b)
     }
 }
 

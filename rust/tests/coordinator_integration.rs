@@ -1,12 +1,16 @@
 //! Coordinator-level integration tests that do not require artifacts:
-//! detector + run-log + intervention + sweep-cache machinery end to end
-//! (artifact-backed paths are covered by `runtime_artifacts.rs`).
+//! detector + run-log + intervention + sweep machinery end to end, plus
+//! the full coordinator stack over the **native backend** — training
+//! loops, mid-run fmt-vector interventions, checkpoint rings and sweeps
+//! all run on a bare machine (artifact-backed PJRT paths are covered by
+//! `runtime_artifacts.rs`).
 
 use mxstab::coordinator::{
-    Detector, DetectorConfig, Intervention, LrSchedule, Policy, RunConfig, RunLog, Verdict,
+    CheckpointStore, Detector, DetectorConfig, Intervention, Job, LrSchedule, Policy, RunConfig,
+    RunLog, Sweeper, Verdict,
 };
 use mxstab::formats::spec::{Fmt, FormatId};
-use mxstab::runtime::Metrics;
+use mxstab::runtime::{Backend, Metrics, NativeEngine};
 
 fn metrics(loss: f32, gnorm: f32) -> Metrics {
     Metrics { loss, grad_norm: gnorm, ..Default::default() }
@@ -124,4 +128,118 @@ fn runconfig_defaults_are_papers() {
     assert_eq!(cfg.init_gain, 1.0);
     assert!(!cfg.paired);
     assert!(cfg.policies.is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// Native-backend end-to-end: the full coordinator without PJRT.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn native_runner_trains_end_to_end() {
+    let sweeper = Sweeper::new(NativeEngine::with_batch(32).unwrap());
+    let runner = sweeper.runner("proxy_gelu_ln_L2_D32").unwrap();
+    let mut cfg = RunConfig::new("native_e2e", Fmt::full(FormatId::E4M3, FormatId::E4M3), 1e-3, 25);
+    cfg.paired = true; // native backend supports the Fig. 4 diagnostics
+    let out = runner.run(&cfg).unwrap();
+    assert_eq!(out.log.rows.len(), 25);
+    for r in &out.log.rows {
+        assert!(r.m.loss.is_finite() && r.m.grad_norm.is_finite(), "step {}", r.step);
+        assert!(r.m.param_norm > 0.0 && r.m.update_norm > 0.0);
+    }
+    assert!(out.final_state.is_some());
+}
+
+#[test]
+fn native_intervention_flips_fmt_mid_run() {
+    // The paper's Fig. 7 protocol on the native backend: an AtStep policy
+    // rewrites the fmt vector between steps; the run log records it and
+    // the LN-clamping diagnostic must react on the very next step.
+    let sweeper = Sweeper::new(NativeEngine::with_batch(32).unwrap());
+    let runner = sweeper.runner("proxy_gelu_ln_L2_D32").unwrap();
+
+    // Force the §6.1 pathology so ln_frac is a crisp on/off signal.
+    let backend = runner.backend.clone();
+    let mut state = backend.init(0, 0.0, 1.0).unwrap();
+    let ln_idx = 2usize; // [w1, w2, ln]
+    for v in &mut state.tensors[ln_idx] {
+        *v = 0.9;
+    }
+
+    let mut cfg = RunConfig::new("native_iv", Fmt::full(FormatId::E4M3, FormatId::E4M3), 1e-4, 10);
+    cfg.policies = vec![Policy::at_step(5, Intervention::SkipLnQuant)];
+    let out = runner.run_from(&cfg, state, 0).unwrap();
+    assert_eq!(out.log.interventions, vec![(5usize, "skip-ln-quant".to_string())]);
+    let frac = |step: usize| {
+        out.log.rows.iter().find(|r| r.step == step).map(|r| r.m.ln_frac_mean).unwrap()
+    };
+    assert!(frac(4) > 0.5, "pre-intervention: clustered gammas clamp ({})", frac(4));
+    assert_eq!(frac(5), 0.0, "post-intervention: LN quantization off");
+    assert_eq!(frac(9), 0.0, "stays off for the rest of the run");
+}
+
+#[test]
+fn native_checkpoint_roundtrip_and_ring() {
+    let engine = NativeEngine::with_batch(32).unwrap();
+    let sweeper = Sweeper::new(engine);
+    let runner = sweeper.runner("proxy_relu_ln_L2_D32").unwrap();
+    let backend = runner.backend.clone();
+
+    let dir = std::env::temp_dir().join(format!("mxstab_ckpt_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let store = CheckpointStore::new(&dir, 2);
+
+    let cfg = RunConfig::new("ckpt", Fmt::fp32(), 1e-3, 5);
+    let out = runner.run(&cfg).unwrap();
+    let state = out.final_state.unwrap();
+    store.save(backend.as_ref(), "run0", 5, &state).unwrap();
+    store.save(backend.as_ref(), "run0", 10, &state).unwrap();
+    store.save(backend.as_ref(), "run0", 15, &state).unwrap();
+    assert_eq!(store.list("run0"), vec![10, 15], "ring keeps the newest 2");
+    assert_eq!(store.latest("run0"), Some(15));
+
+    let restored = store.load(backend.as_ref(), "run0", 15).unwrap();
+    assert_eq!(restored.tensors, state.tensors, "bitwise state roundtrip");
+
+    // Restored state must continue training identically to the original.
+    let mut cont = RunConfig::new("cont", Fmt::fp32(), 1e-3, 8);
+    cont.seed = cfg.seed;
+    let a = runner.run_from(&cont, state, 5).unwrap();
+    let b = runner.run_from(&cont, restored, 5).unwrap();
+    let bits = |l: &RunLog| l.rows.iter().map(|r| r.m.loss.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&a.log), bits(&b.log));
+
+    // Cross-model restores are rejected.
+    let other = sweeper.backend("proxy_relu_ln_L2_D64").unwrap();
+    assert!(store.load(other.as_ref(), "run0", 15).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn native_sweeper_runs_jobs_in_order() {
+    let sweeper = Sweeper::new(NativeEngine::with_batch(32).unwrap());
+    let jobs: Vec<Job> = [
+        ("fp32", Fmt::fp32()),
+        ("e4m3", Fmt::full(FormatId::E4M3, FormatId::E4M3)),
+        ("mix", Fmt::mx_mix()),
+    ]
+    .into_iter()
+    .map(|(label, fmt)| Job {
+        bundle: "proxy_gelu_ln_L2_D32".into(),
+        cfg: RunConfig::new(label, fmt, 1e-3, 6),
+    })
+    .collect();
+    let logs = sweeper.run_all(&jobs, true);
+    assert_eq!(logs.len(), 3);
+    for (log, job) in logs.iter().zip(&jobs) {
+        assert_eq!(log.name, job.cfg.name, "submission order preserved");
+        assert_eq!(log.rows.len(), 6);
+        assert!(log.final_loss().is_finite());
+    }
+    // Unknown bundle names degrade to error-marked logs, not a panic.
+    let bad_cfg = RunConfig::new("bad", Fmt::fp32(), 1e-3, 2);
+    let bad = vec![Job { bundle: "lm_nope".into(), cfg: bad_cfg }];
+    let logs = sweeper.run_all(&bad, true);
+    assert_eq!(logs.len(), 1);
+    assert!(logs[0].rows.is_empty());
+    assert!(logs[0].meta.iter().any(|(k, _)| k == "error"));
 }
