@@ -65,10 +65,10 @@ fn main() -> anyhow::Result<()> {
         let dt = t0.elapsed().as_secs_f64();
         let state = out.final_state.as_ref().unwrap();
 
-        // Held-out validation over 8 batches.
+        // Held-out validation over 8 batches (reserved seed stream).
         let mut val = 0.0;
         for b in 0..8 {
-            let toks = corpus.batch(u64::MAX - 7, b, batch, len);
+            let toks = corpus.batch(mxstab::data::HELD_OUT_SEED, b, batch, len);
             val += runner.backend.eval(state, &toks, &fmt.to_vec())? as f64 / 8.0;
         }
         if baseline_val.is_nan() {

@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
 
     bench_backward_gemm(&b)?;
     bench_native_step(&b)?;
+    bench_native_lm_step(&b)?;
 
     #[cfg(feature = "xla")]
     bench_bundles(&b)?;
@@ -126,6 +127,59 @@ fn bench_native_step(b: &Bencher) -> anyhow::Result<()> {
             r.report_line(&format!(
                 "{:.1} steps/s  {:.2} GFLOP/s(emu)",
                 1.0 / r.mean_s,
+                flops / r.mean_s / 1e9
+            ))
+        );
+    }
+    println!();
+    Ok(())
+}
+
+/// Full native transformer-LM training step (corpus batch + fwd + bwd +
+/// Adam + metrics) at the smallest ladder rung, per precision scheme.
+fn bench_native_lm_step(b: &Bencher) -> anyhow::Result<()> {
+    use mxstab::coordinator::Sweeper;
+    use mxstab::formats::spec::Fmt;
+    use mxstab::runtime::native::NativeEngine;
+    use mxstab::runtime::{Backend, StepArgs};
+
+    println!("== native LM training-step throughput (pure rust) ==\n");
+    let sweeper = Sweeper::new(NativeEngine::new());
+    let runner = sweeper.runner("lm_olmo_1m")?;
+    let model = runner.backend.clone();
+    let corpus = runner.corpus.clone().expect("LM corpus");
+    let n_params = model.n_params() as f64;
+    let (batch, len) = model.tokens_shape().expect("LM tokens shape");
+    let tokens_per_step = (batch * (len - 1)) as f64;
+    let schemes = [
+        ("fp32", Fmt::fp32()),
+        ("e4m3-full", Fmt::full(FormatId::E4M3, FormatId::E4M3)),
+        ("e4m3-bf16act", Fmt::bf16_act(FormatId::E4M3)),
+    ];
+    for (label, fmt) in &schemes {
+        let mut state = Some(model.init(0, 0.0, 1.0)?);
+        let mut step = 0i32;
+        let r = b.run(&format!("native/{}/{label}", model.name()), || {
+            let args = StepArgs {
+                tokens: Some(corpus.batch(0, step as u64, batch, len)),
+                fmt: fmt.to_vec(),
+                hyper: vec![5e-4, 0.0, 0.0, 0.0],
+                seed: 0,
+                step,
+            };
+            let (s2, m) = model.step(state.take().unwrap(), &args).unwrap();
+            std::hint::black_box(m);
+            state = Some(s2);
+            step += 1;
+        });
+        // 6·N FLOPs per token (fwd + bwd over N params).
+        let flops = 6.0 * n_params * tokens_per_step;
+        println!(
+            "{}",
+            r.report_line(&format!(
+                "{:.2} steps/s  {:.0} tok/s  {:.2} GFLOP/s(emu)",
+                1.0 / r.mean_s,
+                tokens_per_step / r.mean_s,
                 flops / r.mean_s / 1e9
             ))
         );

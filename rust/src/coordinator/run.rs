@@ -176,7 +176,12 @@ impl<B: Backend> Runner<B> {
             });
 
             let tokens = match (&self.corpus, tokens_shape) {
-                (Some(c), Some((b, l))) => Some(c.batch(cfg.seed as u64, step as u64, b, l)),
+                // `as u32 as u64` (no sign extension): negative seeds must
+                // not alias the reserved held-out stream near u64::MAX
+                // (`data::HELD_OUT_SEED`).
+                (Some(c), Some((b, l))) => {
+                    Some(c.batch(cfg.seed as u32 as u64, step as u64, b, l))
+                }
                 (None, Some(_)) => anyhow::bail!("LM bundle requires a corpus"),
                 _ => None,
             };

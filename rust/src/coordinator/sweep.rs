@@ -95,10 +95,22 @@ impl<E: Engine> Sweeper<E> {
                         break;
                     }
                     let job = &jobs[i];
-                    let res = self
-                        .runner(&job.bundle)
-                        .and_then(|r| r.run(&job.cfg))
-                        .map(|o| o.log);
+                    // A panic inside a job (e.g. a block-alignment assert
+                    // deep in `PackedMatrix::encode`) must degrade to an
+                    // error-marked log like any other failure instead of
+                    // unwinding through the scope and killing every
+                    // sibling job.
+                    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        self.runner(&job.bundle).and_then(|r| r.run(&job.cfg)).map(|o| o.log)
+                    }))
+                    .unwrap_or_else(|payload| {
+                        let msg = payload
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| payload.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "non-string panic payload".into());
+                        Err(anyhow!("job panicked: {msg}"))
+                    });
                     let _ = tx.send((i, res));
                 });
             }
@@ -131,5 +143,103 @@ impl<E: Engine> Sweeper<E> {
             }
             out.into_iter().map(|o| o.unwrap()).collect()
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::spec::{Fmt, FormatId};
+    use crate::runtime::{Metrics, StepArgs, TensorSpec};
+
+    /// Minimal backend whose "boom" variant panics inside `step` through
+    /// the realistic path: a block-misaligned `PackedMatrix::encode`.
+    struct TestBackend {
+        name: String,
+    }
+
+    impl Backend for TestBackend {
+        type State = ();
+
+        fn name(&self) -> &str {
+            &self.name
+        }
+
+        fn n_params(&self) -> usize {
+            1
+        }
+
+        fn init(&self, _seed: i32, _mode: f32, _gain: f32) -> Result<()> {
+            Ok(())
+        }
+
+        fn step(&self, _state: (), _args: &StepArgs) -> Result<((), Metrics)> {
+            if self.name == "boom" {
+                let misaligned = vec![0.0f32; 33];
+                crate::formats::gemm::PackedMatrix::encode(
+                    &misaligned,
+                    1,
+                    33,
+                    FormatId::E4M3,
+                    false,
+                );
+            }
+            Ok(((), Metrics { loss: 1.0, grad_norm: 1.0, ..Default::default() }))
+        }
+
+        fn clone_state(&self, _state: &()) -> Result<()> {
+            Ok(())
+        }
+
+        fn state_spec(&self) -> &[TensorSpec] {
+            &[]
+        }
+
+        fn snapshot(&self, _state: &()) -> Result<Vec<Vec<f32>>> {
+            Ok(vec![])
+        }
+
+        fn restore(&self, _tensors: Vec<Vec<f32>>) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    struct TestEngine;
+
+    impl Engine for TestEngine {
+        type Backend = TestBackend;
+
+        fn platform(&self) -> String {
+            "test".into()
+        }
+
+        fn list(&self) -> Result<Vec<String>> {
+            Ok(vec!["ok".into(), "boom".into()])
+        }
+
+        fn load(&self, name: &str) -> Result<Arc<TestBackend>> {
+            Ok(Arc::new(TestBackend { name: name.to_string() }))
+        }
+    }
+
+    #[test]
+    fn panicking_job_becomes_error_log_and_siblings_complete() {
+        let sweeper = Sweeper::new(Arc::new(TestEngine));
+        let jobs: Vec<Job> = ["ok", "boom", "ok"]
+            .iter()
+            .enumerate()
+            .map(|(i, b)| Job {
+                bundle: b.to_string(),
+                cfg: RunConfig::new(&format!("job{i}"), Fmt::fp32(), 1e-3, 3),
+            })
+            .collect();
+        let logs = sweeper.run_all(&jobs, true);
+        assert_eq!(logs.len(), 3, "every job yields a log");
+        assert_eq!(logs[0].rows.len(), 3, "sibling before the panic completes");
+        assert_eq!(logs[2].rows.len(), 3, "sibling after the panic completes");
+        assert!(logs[1].rows.is_empty(), "panicked job has no metric rows");
+        let err =
+            logs[1].meta.iter().find(|(k, _)| k == "error").expect("error-marked log");
+        assert!(err.1.contains("panicked"), "error records the panic: {:?}", err.1);
     }
 }

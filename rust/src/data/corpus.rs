@@ -19,6 +19,11 @@
 
 use crate::util::rng::{Xoshiro256, Zipf};
 
+/// Reserved run-seed for held-out validation batches. Training runs fold
+/// `RunConfig::seed` in as `i32 as u32 as u64` (no sign extension), so no
+/// training seed — negative ones included — can reach this stream.
+pub const HELD_OUT_SEED: u64 = u64::MAX - 7;
+
 #[derive(Debug, Clone)]
 pub struct CorpusConfig {
     pub vocab: usize,
@@ -45,6 +50,9 @@ pub struct Corpus {
 
 impl Corpus {
     pub fn new(cfg: CorpusConfig) -> Self {
+        // One Zipf table for the whole corpus: `Zipf::new` is O(V), so
+        // building it per element (as a naive closure would) makes corpus
+        // construction O(rows·V²).
         let unigram = Zipf::new(cfg.vocab, cfg.zipf_s);
         let mut row_cdf = Vec::with_capacity(cfg.rows);
         for r in 0..cfg.rows {
@@ -54,7 +62,7 @@ impl Corpus {
             let mut pmf: Vec<f64> = (0..cfg.vocab)
                 .map(|k| {
                     let src = (k + cfg.vocab - shift) % cfg.vocab;
-                    Zipf::new(cfg.vocab, cfg.zipf_s).pmf(src).powf(1.35)
+                    unigram.pmf(src).powf(1.35)
                 })
                 .collect();
             let z: f64 = pmf.iter().sum();
@@ -166,6 +174,32 @@ mod tests {
         let hc = c.conditional_entropy();
         assert!(hu > 4.0, "unigram entropy {hu}");
         assert!(hc < hu - 0.2, "conditional {hc} should sit below unigram {hu}");
+    }
+
+    #[test]
+    fn row_cdfs_unchanged_by_hoisted_zipf() {
+        // The hoisted single-Zipf construction must produce bitwise the
+        // same row CDFs as the old per-element `Zipf::new` formulation.
+        let cfg = CorpusConfig { vocab: 64, rows: 4, ..Default::default() };
+        let c = Corpus::new(cfg.clone());
+        for r in 0..cfg.rows {
+            let shift = (r * cfg.vocab) / cfg.rows;
+            let mut pmf: Vec<f64> = (0..cfg.vocab)
+                .map(|k| {
+                    let src = (k + cfg.vocab - shift) % cfg.vocab;
+                    Zipf::new(cfg.vocab, cfg.zipf_s).pmf(src).powf(1.35)
+                })
+                .collect();
+            let z: f64 = pmf.iter().sum();
+            let mut acc = 0.0;
+            for p in &mut pmf {
+                acc += *p / z;
+                *p = acc;
+            }
+            for (got, want) in c.row_cdf[r].iter().zip(&pmf) {
+                assert_eq!(got.to_bits(), want.to_bits(), "row {r} CDF changed");
+            }
+        }
     }
 
     #[test]

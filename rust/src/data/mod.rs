@@ -7,4 +7,4 @@
 
 pub mod corpus;
 
-pub use corpus::{Corpus, CorpusConfig};
+pub use corpus::{Corpus, CorpusConfig, HELD_OUT_SEED};

@@ -8,16 +8,25 @@
 use anyhow::Result;
 
 use super::Ctx;
-use crate::runtime::Engine;
+use crate::runtime::{Backend, Engine};
 use crate::coordinator::{Job, LrSchedule, RunConfig};
 use crate::formats::spec::{Fmt, FormatId};
 use crate::util::table::Table;
 
 pub fn ladder<E: Engine>(ctx: &Ctx<E>) -> Vec<String> {
-    let all = ctx.sweeper.engine().list().unwrap_or_default();
-    let mut rungs: Vec<String> = all.into_iter().filter(|n| n.starts_with("lm_")).collect();
+    let engine = ctx.sweeper.engine();
+    let all = engine.list().unwrap_or_default();
+    // Size order (drivers rely on it: fig5 trains the first = smallest
+    // rung, fig16 the last = largest). Loads are cached by both engines,
+    // so asking for n_params here costs nothing extra; names that fail
+    // to load sort last and fail later with a per-run error.
+    let mut rungs: Vec<(usize, String)> = all
+        .into_iter()
+        .filter(|n| n.starts_with("lm_"))
+        .map(|n| (engine.load(&n).map(|b| b.n_params()).unwrap_or(usize::MAX), n))
+        .collect();
     rungs.sort();
-    rungs
+    rungs.into_iter().map(|(_, n)| n).collect()
 }
 
 pub fn run<E: Engine>(ctx: &Ctx<E>) -> Result<()> {
@@ -25,7 +34,8 @@ pub fn run<E: Engine>(ctx: &Ctx<E>) -> Result<()> {
     let rungs = ladder(ctx);
     anyhow::ensure!(
         !rungs.is_empty(),
-        "engine has no lm_* models (LM experiments need `--backend pjrt` + compiled bundles)"
+        "engine has no lm_* models (the native backend ships a built-in lm ladder; \
+         PJRT needs compiled lm bundles)"
     );
 
     let formats = [

@@ -31,7 +31,8 @@ pub fn run<E: Engine>(ctx: &Ctx<E>) -> Result<()> {
     let rungs: Vec<_> = rungs.into_iter().rev().take(1).collect();
     anyhow::ensure!(
         !rungs.is_empty(),
-        "engine has no lm_* models (LM experiments need `--backend pjrt` + compiled bundles)"
+        "engine has no lm_* models (the native backend ships a built-in lm ladder; \
+         PJRT needs compiled lm bundles)"
     );
 
     let mut jobs = vec![];

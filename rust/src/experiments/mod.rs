@@ -5,10 +5,12 @@
 //! are cached as JSONL under `runs/<id>/` and reloaded on re-invocation
 //! (`--force` reruns).
 //!
-//! Drivers are generic over the execution [`Engine`]: the proxy-model
-//! experiments run on the native backend out of the box; LM-ladder
-//! experiments need `lm_*` bundles and degrade with a clear message when
-//! the engine has none.
+//! Drivers are generic over the execution [`Engine`]: both the
+//! proxy-model experiments and the LM-ladder experiments (fig1, fig16,
+//! scaling) run on the native backend out of the box — the native engine
+//! ships a built-in `lm_*` ladder. On engines without `lm_*` models
+//! (PJRT without compiled bundles) the LM drivers degrade with a clear
+//! message.
 
 pub mod fig1;
 pub mod fig2;

@@ -101,11 +101,11 @@ fn run_with_evals<E: Engine>(
         log.spikes += out.log.spikes;
         log.diverged_at = log.diverged_at.or(out.log.diverged_at.map(|_| at + 1));
         at = ck;
-        // Held-out eval: 8 batches from a disjoint seed stream.
+        // Held-out eval: 8 batches from the reserved disjoint seed stream.
         let mut acc = 0.0;
         const EVAL_BATCHES: usize = 8;
         for b in 0..EVAL_BATCHES {
-            let toks = corpus.batch(u64::MAX - 7, b as u64, batch, len);
+            let toks = corpus.batch(crate::data::HELD_OUT_SEED, b as u64, batch, len);
             acc += backend.eval(&state, &toks, &eval_fmt)? as f64;
         }
         points.push(ValPoint {
@@ -138,7 +138,8 @@ pub fn run<E: Engine>(ctx: &Ctx<E>) -> Result<()> {
     let rungs = super::fig1::ladder(ctx);
     anyhow::ensure!(
         !rungs.is_empty(),
-        "engine has no lm_* models (LM experiments need `--backend pjrt` + compiled bundles)"
+        "engine has no lm_* models (the native backend ships a built-in lm ladder; \
+         PJRT needs compiled lm bundles)"
     );
     let steps = ctx.cfg.steps(320);
     // Geometric checkpoints: D varies 8× within one run.
@@ -207,7 +208,7 @@ pub fn run<E: Engine>(ctx: &Ctx<E>) -> Result<()> {
         .logx()
         .logy();
         let mut ns: Vec<f64> = pts.iter().map(|p| p.n_params).collect();
-        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ns.sort_by(f64::total_cmp);
         ns.dedup();
         for (i, &n) in ns.iter().enumerate() {
             let mut obs: Vec<(f64, f64)> = pts
@@ -215,7 +216,7 @@ pub fn run<E: Engine>(ctx: &Ctx<E>) -> Result<()> {
                 .filter(|p| p.n_params == n)
                 .map(|p| (p.tokens, p.loss))
                 .collect();
-            obs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            obs.sort_by(|a, b| a.0.total_cmp(&b.0));
             let (xs, ys): (Vec<f64>, Vec<f64>) = obs.into_iter().unzip();
             let fitted: Vec<f64> = xs.iter().map(|&d| fit.predict(n, d)).collect();
             let c = PALETTE[i % PALETTE.len()];

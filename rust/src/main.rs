@@ -10,10 +10,14 @@
 //! mxstab fit --csv <file>                       # Chinchilla fit over (N,D,loss) rows
 //! ```
 //!
-//! The default backend is **native**: the pure-rust packed-MX proxy
-//! trainer that runs on a bare machine. `--backend pjrt` executes
-//! compiled HLO bundles instead and needs `--features xla` plus a real
-//! PJRT binding (DESIGN.md §6).
+//! The default backend is **native**: the pure-rust packed-MX trainer
+//! that runs on a bare machine. It serves both workloads — the
+//! residual-MLP proxy (`--bundle proxy_gelu_ln_L2_D64`) and the
+//! transformer LM ladder (`--bundle lm_olmo_12m`, or any
+//! `lm_L<l>_D<d>[_H<h>][_T<ctx>][_V<vocab>]` name); LM runs report a
+//! held-out validation loss against the corpus unigram entropy.
+//! `--backend pjrt` executes compiled HLO bundles instead and needs
+//! `--features xla` plus a real PJRT binding (DESIGN.md §6).
 
 use std::sync::Arc;
 
@@ -98,7 +102,8 @@ fn cmd_info<E: Engine>(engine: Arc<E>, cfg: &Config) -> Result<()> {
 }
 
 fn cmd_train<E: Engine>(engine: Arc<E>, cfg: &Config, args: &Args) -> Result<()> {
-    // The native engine parses any proxy_<act>_<ln|noln>_L<d>_D<w> name;
+    // The native engine parses any proxy_<act>_<ln|noln>_L<d>_D<w> or
+    // lm_* name (ladder preset or lm_L<l>_D<d>[_H<h>][_T<ctx>][_V<v>]);
     // the default is small enough to train in seconds on a laptop.
     let bundle_name = args.get_or("bundle", "proxy_gelu_ln_L2_D64").to_string();
     let fmt = parse_fmt(args.get_or("fmt", "fp32"))?;
@@ -145,6 +150,28 @@ fn cmd_train<E: Engine>(engine: Arc<E>, cfg: &Config, args: &Args) -> Result<()>
     }
     println!("log: {}", cfg.runs.join("manual").join(format!("{}.jsonl", l.name)).display());
 
+    // LM bundles: held-out validation eval + the corpus-entropy yardstick
+    // (a model that learned nothing beyond unigram stats sits above it).
+    let mut val_loss: Option<f64> = None;
+    if let (Some((b, len)), Some(corpus), Some(state)) =
+        (runner.backend.tokens_shape(), runner.corpus.as_ref(), out.final_state.as_ref())
+    {
+        const EVAL_BATCHES: usize = 4;
+        let mut acc = 0.0f64;
+        for i in 0..EVAL_BATCHES {
+            let toks = corpus.batch(mxstab::data::HELD_OUT_SEED, i as u64, b, len);
+            acc += runner.backend.eval(state, &toks, &fmt.to_vec())? as f64;
+        }
+        let val = acc / EVAL_BATCHES as f64;
+        let hu = corpus.unigram_entropy();
+        println!(
+            "val loss {val:.4} ({EVAL_BATCHES} held-out batches) | corpus unigram entropy \
+             {hu:.4} | below unigram entropy: {}",
+            val < hu
+        );
+        val_loss = Some(val);
+    }
+
     // CI hook: fail loudly when any logged metric went non-finite.
     let all_finite = l.rows.iter().all(|r| {
         [
@@ -161,8 +188,9 @@ fn cmd_train<E: Engine>(engine: Arc<E>, cfg: &Config, args: &Args) -> Result<()>
         .iter()
         .all(|v| v.is_finite())
     });
-    println!("all metrics finite: {all_finite}");
-    if args.flag("require-finite") && !(all_finite && !l.rows.is_empty()) {
+    let val_finite = val_loss.map(|v| v.is_finite()).unwrap_or(true);
+    println!("all metrics finite: {}", all_finite && val_finite);
+    if args.flag("require-finite") && !(all_finite && val_finite && !l.rows.is_empty()) {
         bail!("run produced non-finite metrics (or no rows)");
     }
     Ok(())
@@ -234,7 +262,12 @@ fn cmd_fit(args: &Args) -> Result<()> {
 }
 
 fn native_engine(args: &Args) -> Result<Arc<NativeEngine>> {
-    NativeEngine::with_batch(args.parse_or("batch", mxstab::runtime::native::DEFAULT_BATCH)?)
+    // Only an explicit --batch overrides; otherwise each workload keeps
+    // its own default (256 proxy rows / 16 LM token rows).
+    match args.get("batch") {
+        Some(_) => NativeEngine::with_batch(args.parse_or("batch", 0usize)?),
+        None => Ok(NativeEngine::new()),
+    }
 }
 
 #[cfg(feature = "xla")]

@@ -1,0 +1,328 @@
+//! Shared numeric core of the native backends: the flat host-tensor
+//! training state, the fused Adam/SGD update, gradient-bias diagnostics,
+//! and the quantized linear layer both the proxy and the transformer LM
+//! route every projection through.
+//!
+//! The quantization-site semantics live here exactly once: a forward
+//! linear quantizes its input at the activation site and its weight at the
+//! weight site (blocks along the shared reduction axis); the backward pass
+//! re-quantizes every operand along *its own* reduction axis (gradients at
+//! the gradient site, saved activations at the backward-activation site),
+//! exactly as the paper's custom VJP does.
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::ops::{qgemm, quantize_site, QMat};
+use crate::formats::gemm::transpose;
+use crate::formats::packed::packed_qdq;
+use crate::formats::spec::{hyper_idx, Fmt, FormatId};
+use crate::runtime::StepArgs;
+
+/// Adam constants (python/compile/formats.py).
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.95;
+pub const ADAM_EPS: f32 = 1e-8;
+
+/// Host-resident training state: flat f32 tensors in state-spec order
+/// (params ‖ adam-m ‖ adam-v [‖ backend extras, e.g. the proxy teacher]).
+#[derive(Debug, Clone)]
+pub struct NativeState {
+    pub tensors: Vec<Vec<f32>>,
+}
+
+/// Decoded per-step hyper vector (LR, optimizer, noise) plus the Adam
+/// bias-correction time.
+#[derive(Debug, Clone, Copy)]
+pub struct Hyper {
+    pub lr: f32,
+    pub sgd: bool,
+    pub momentum: f32,
+    pub label_noise: f32,
+    /// Adam bias-correction t (step + 1).
+    pub t: f32,
+}
+
+/// Decode the runtime `fmt`/`hyper` vectors out of one [`StepArgs`].
+pub fn decode_args(args: &StepArgs) -> Result<(Fmt, Hyper)> {
+    let fmt = Fmt::from_vec(&args.fmt)
+        .ok_or_else(|| anyhow!("undecodable fmt vector {:?}", args.fmt))?;
+    ensure!(args.hyper.len() >= hyper_idx::HYPER_LEN, "hyper vector too short");
+    let h = Hyper {
+        lr: args.hyper[hyper_idx::LR],
+        sgd: args.hyper[hyper_idx::OPT_MODE] > 0.5,
+        momentum: args.hyper[hyper_idx::MOMENTUM],
+        label_noise: args.hyper[hyper_idx::LABEL_NOISE],
+        t: args.step as f32 + 1.0,
+    };
+    Ok((fmt, h))
+}
+
+/// Quantize a `rows × cols` activation at the forward activation site
+/// (blocks along `cols`). Returns the operand plus its last-bin fraction;
+/// share the result across every projection fed by the same activation
+/// (q/k/v, the SwiGLU pair) instead of re-encoding per GEMM.
+pub fn quantize_fwd_act<'a>(x: &'a [f32], rows: usize, cols: usize, fmt: &Fmt) -> (QMat<'a>, f32) {
+    quantize_site(x, rows, cols, fmt.a_fwd, fmt.quant_fwd, fmt.scale_bump)
+}
+
+/// `y[m×n] = qx · Q_w(w[k×n])` over a pre-quantized input (blocks along
+/// `k` on both operands).
+pub fn qlinear_fwd_pre(qx: &QMat, w: &[f32], m: usize, k: usize, n: usize, fmt: &Fmt) -> Vec<f32> {
+    debug_assert_eq!(w.len(), k * n);
+    let wt = transpose(w, k, n); // [n,k]
+    let (qw, _) = quantize_site(&wt, n, k, fmt.w_fwd, fmt.quant_fwd, fmt.scale_bump);
+    let mut y = vec![0.0f32; m * n];
+    qgemm(qx, &qw, m, n, k, &mut y);
+    y
+}
+
+/// `y[m×n] = x[m×k] · w[k×n]` with `x` at the forward activation site and
+/// `w` at the forward weight site (both with blocks along `k`). Returns
+/// `(y, x-site last-bin fraction)`.
+pub fn qlinear_fwd(
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    fmt: &Fmt,
+) -> (Vec<f32>, f32) {
+    debug_assert_eq!(x.len(), m * k);
+    let (qx, fx) = quantize_fwd_act(x, m, k, fmt);
+    (qlinear_fwd_pre(&qx, w, m, k, n, fmt), fx)
+}
+
+/// Quantize an already-transposed saved input `xt[k×m]` at the backward
+/// activation site (blocks along `m`, the weight-gradient reduction
+/// axis). Share the result across every weight gradient taken against
+/// the same activation (q/k/v, the SwiGLU pair) via [`qlinear_bwd_pre`].
+pub fn quantize_bwd_act<'a>(xt: &'a [f32], k: usize, m: usize, fmt: &Fmt) -> QMat<'a> {
+    quantize_site(xt, k, m, fmt.a_bwd, fmt.quant_bwd, fmt.scale_bump).0
+}
+
+/// Backward linear over a pre-quantized transposed input `qxt = Q_a(xᵀ)`:
+///
+/// ```text
+/// dx = Q_g(dy) · Q_w(w)      (both re-blocked along n)
+/// dw = qxt · Q_g(dyᵀ)        (both re-blocked along m)
+/// ```
+#[allow(clippy::too_many_arguments)]
+pub fn qlinear_bwd_pre(
+    dy: &[f32],
+    qxt: &QMat,
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    fmt: &Fmt,
+    dw: &mut [f32],
+) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(dw.len(), k * n);
+    let (en, bump) = (fmt.quant_bwd, fmt.scale_bump);
+
+    let (qdy, _) = quantize_site(dy, m, n, fmt.g_bwd, en, bump);
+    let (qw, _) = quantize_site(w, k, n, fmt.w_bwd, en, bump); // blocks along n
+    let mut dx = vec![0.0f32; m * k];
+    qgemm(&qdy, &qw, m, k, n, &mut dx);
+
+    let dyt = transpose(dy, m, n); // [n,m]
+    let (qdyt, _) = quantize_site(&dyt, n, m, fmt.g_bwd, en, bump);
+    qgemm(qxt, &qdyt, k, n, m, dw);
+    dx
+}
+
+/// Backward of [`qlinear_fwd`]: given `dy[m×n]`, the saved input `x[m×k]`
+/// and the weight `w[k×n]`,
+///
+/// ```text
+/// dx = Q_g(dy) · Q_w(w)      (both re-blocked along n)
+/// dw = Q_a(xᵀ) · Q_g(dyᵀ)    (both re-blocked along m)
+/// ```
+///
+/// `dw` accumulates nothing — it is overwritten (callers pass per-layer
+/// slices of the flat gradient buffer).
+#[allow(clippy::too_many_arguments)]
+pub fn qlinear_bwd(
+    dy: &[f32],
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    fmt: &Fmt,
+    dw: &mut [f32],
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), m * k);
+    let xt = transpose(x, m, k); // [k,m]
+    let qxt = quantize_bwd_act(&xt, k, m, fmt);
+    qlinear_bwd_pre(dy, &qxt, w, m, k, n, fmt, dw)
+}
+
+/// The §6.1 layer-norm affine-parameter quantization site: quantizes with
+/// the forward *weight* format when both `quant_ln` and `quant_fwd` are
+/// on, and returns the last-bin (clamped) fraction diagnostic.
+pub fn ln_gamma_site(gamma: &[f32], fmt: &Fmt) -> (Vec<f32>, f32) {
+    let on = fmt.quant_ln && fmt.quant_fwd;
+    let eff = if on { fmt.w_fwd } else { FormatId::Fp32 };
+    let (gq, clamped) = packed_qdq(gamma, eff, fmt.scale_bump);
+    (gq, clamped as f32 / gamma.len().max(1) as f32)
+}
+
+/// Fused Adam / SGD(momentum) update for one tensor; returns Σ(Δp)².
+#[allow(clippy::too_many_arguments)]
+pub fn adam_sgd_update(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    t: f32,
+    lr: f32,
+    sgd: bool,
+    momentum: f32,
+) -> f64 {
+    let mut upd_sq = 0.0f64;
+    if sgd {
+        for i in 0..p.len() {
+            m[i] = momentum * m[i] + g[i];
+            let step = lr * m[i];
+            upd_sq += (step as f64) * (step as f64);
+            p[i] -= step;
+        }
+    } else {
+        let bias1 = 1.0 - ADAM_B1.powf(t);
+        let bias2 = 1.0 - ADAM_B2.powf(t);
+        for i in 0..p.len() {
+            m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
+            v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
+            let mhat = m[i] / bias1;
+            let vhat = v[i] / bias2;
+            let step = lr * (mhat / (vhat.sqrt() + ADAM_EPS));
+            upd_sq += (step as f64) * (step as f64);
+            p[i] -= step;
+        }
+    }
+    upd_sq
+}
+
+/// Apply the fused optimizer to params `[0, k)` with moments at `[k, 2k)`
+/// / `[2k, 3k)` of the state (the shared layout of both native backends;
+/// tensors past `3k` — e.g. the proxy teacher — are untouched). Returns
+/// `(update_norm, param_norm)`.
+pub fn optimizer_step(
+    state: &mut NativeState,
+    grads: &[Vec<f32>],
+    k: usize,
+    hyper: &Hyper,
+) -> (f32, f32) {
+    let mut upd_sq = 0.0f64;
+    for (i, g) in grads.iter().enumerate() {
+        let (head, tail) = state.tensors.split_at_mut(k + i);
+        let (mid, tail2) = tail.split_at_mut(k);
+        let p = &mut head[i];
+        let m = &mut mid[0];
+        let v = &mut tail2[0];
+        upd_sq += adam_sgd_update(p, g, m, v, hyper.t, hyper.lr, hyper.sgd, hyper.momentum);
+    }
+    let param_norm = global_norm(&state.tensors[..k]);
+    ((upd_sq.sqrt()) as f32, param_norm)
+}
+
+/// Global L2 norm over a list of flat tensors (f64 accumulation).
+pub fn global_norm(tensors: &[Vec<f32>]) -> f32 {
+    let mut acc = 0.0f64;
+    for t in tensors {
+        for &v in t {
+            acc += (v as f64) * (v as f64);
+        }
+    }
+    (acc.sqrt()) as f32
+}
+
+/// Fig. 4 gradient-bias diagnostics of quantized gradients against an
+/// FP32 reference at the same parameter point: `(eps_ratio, cosine)`.
+pub fn grad_bias(grads: &[Vec<f32>], g_ref: &[Vec<f32>]) -> (f32, f32) {
+    let mut diff_sq = 0.0f64;
+    let mut dot = 0.0f64;
+    for (gq, gr) in grads.iter().zip(g_ref) {
+        for (&a, &b) in gq.iter().zip(gr) {
+            let (a, b) = (a as f64, b as f64);
+            diff_sq += (a - b) * (a - b);
+            dot += a * b;
+        }
+    }
+    let ref_norm = global_norm(g_ref) as f64;
+    let q_norm = global_norm(grads) as f64;
+    (
+        (diff_sq.sqrt() / (ref_norm + 1e-30)) as f32,
+        (dot / (q_norm * ref_norm + 1e-30)) as f32,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn qlinear_roundtrip_matches_dense_math_in_fp32() {
+        let mut rng = Xoshiro256::seed_from(2);
+        let (m, k, n) = (4, 32, 64);
+        let x = rng.normal_vec(m * k);
+        let w = rng.normal_vec(k * n);
+        let fmt = Fmt::fp32();
+        let (y, frac) = qlinear_fwd(&x, &w, m, k, n, &fmt);
+        assert_eq!(frac, 0.0);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for t in 0..k {
+                    acc += x[i * k + t] as f64 * w[t * n + j] as f64;
+                }
+                assert_eq!(y[i * n + j].to_bits(), (acc as f32).to_bits());
+            }
+        }
+        // Backward shapes + fp32 correctness: dx = dy·wᵀ, dw = xᵀ·dy.
+        let dy = rng.normal_vec(m * n);
+        let mut dw = vec![0.0f32; k * n];
+        let dx = qlinear_bwd(&dy, &x, &w, m, k, n, &fmt, &mut dw);
+        let mut acc = 0.0f64;
+        for j in 0..n {
+            acc += dy[j] as f64 * w[j] as f64; // dx[0,0] reduces over n
+        }
+        assert_eq!(dx[0].to_bits(), (acc as f32).to_bits());
+        let mut acc = 0.0f64;
+        for i in 0..m {
+            acc += x[i * k] as f64 * dy[i * n] as f64; // dw[0,0] reduces over m
+        }
+        assert_eq!(dw[0].to_bits(), (acc as f32).to_bits());
+    }
+
+    #[test]
+    fn optimizer_step_moves_params_and_moments() {
+        let mut state = NativeState {
+            tensors: vec![vec![1.0f32; 8], vec![0.0f32; 8], vec![0.0f32; 8]],
+        };
+        let grads = vec![vec![0.5f32; 8]];
+        let hyper =
+            Hyper { lr: 1e-2, sgd: false, momentum: 0.0, label_noise: 0.0, t: 1.0 };
+        let (upd, pnorm) = optimizer_step(&mut state, &grads, 1, &hyper);
+        assert!(upd > 0.0 && pnorm > 0.0);
+        assert!(state.tensors[0].iter().all(|&v| v < 1.0), "Adam must step downhill");
+        assert!(state.tensors[1].iter().all(|&v| v != 0.0), "m updated");
+        assert!(state.tensors[2].iter().all(|&v| v != 0.0), "v updated");
+    }
+
+    #[test]
+    fn grad_bias_identity_and_scale() {
+        let g = vec![vec![1.0f32, -2.0, 3.0]];
+        let (eps, cos) = grad_bias(&g, &g);
+        assert_eq!(eps, 0.0);
+        assert!((cos - 1.0).abs() < 1e-6);
+        let half: Vec<Vec<f32>> = vec![g[0].iter().map(|v| 0.5 * v).collect()];
+        let (eps, cos) = grad_bias(&half, &g);
+        assert!((eps - 0.5).abs() < 1e-6, "eps {eps}");
+        assert!((cos - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,1115 @@
+//! The native transformer LM — the paper's headline workload, executed
+//! end-to-end in pure rust on the packed MX engine.
+//!
+//! A small decoder-only language model over the synthetic Zipf–Markov
+//! corpus: token embedding → `layers` pre-LN blocks (causal multi-head
+//! attention + SwiGLU MLP) → final LN → LM head, trained with
+//! cross-entropy. Forward *and* backward run through the shared
+//! quantization-site core ([`super::common`]): every projection is a
+//! [`qlinear_fwd`]/[`qlinear_bwd`] pair, the attention score (`Q·Kᵀ`) and
+//! value (`P·V`) GEMMs get their own activation-format sites with blocks
+//! along their reduction axes (head dim and key positions respectively),
+//! and every backward GEMM re-blocks along *its* reduction axis — the
+//! per-operand MX recipe of Mishra et al. / Rouhani et al. Layer norms
+//! carry quantizable affine parameters (§6.1, straight-through), so the
+//! paper's LN-clamping instability mechanism is live in the LM too.
+//!
+//! Softmaxes (attention and output) and residual adds stay in f32 with
+//! f64 accumulation, matching the paper's protocol of quantizing GEMMs
+//! only. Embedding gather/scatter is not a GEMM and stays fp32.
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::common::{
+    decode_args, global_norm, grad_bias, ln_gamma_site, optimizer_step, qlinear_bwd,
+    qlinear_bwd_pre, qlinear_fwd, qlinear_fwd_pre, quantize_bwd_act, quantize_fwd_act,
+    NativeState,
+};
+use super::model::swiglu_hidden;
+use super::ops::{act_bwd, act_fwd, layernorm_bwd, layernorm_fwd, qgemm, quantize_site, Activation};
+use crate::formats::gemm::transpose;
+use crate::formats::spec::{Fmt, BLOCK_SIZE};
+use crate::runtime::{Backend, Metrics, StepArgs, TensorSpec};
+use crate::util::rng::Xoshiro256;
+
+/// The built-in LM ladder (OLMo-style naming by rough parameter count);
+/// any `lm_L<l>_D<d>[_H<h>][_T<ctx>][_V<vocab>]` name also loads.
+pub const LM_LADDER: [&str; 3] = ["lm_olmo_1m", "lm_olmo_4m", "lm_olmo_12m"];
+
+/// Default token batch rows for LM models (tokens/step = batch · ctx).
+pub const DEFAULT_LM_BATCH: usize = 16;
+
+/// Transformer-LM hyper-shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LmConfig {
+    pub layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    /// Sequence length per row (a token batch row carries `ctx + 1`
+    /// tokens: inputs `[..ctx]`, shifted targets `[1..]`).
+    pub ctx: usize,
+    pub batch: usize,
+}
+
+impl LmConfig {
+    /// SwiGLU MLP hidden width (block-rounded 8/3·D, shared with the proxy).
+    pub fn mlp_hidden(&self) -> usize {
+        swiglu_hidden(self.d_model)
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Canonical parametric name (presets keep their ladder name instead).
+    pub fn name(&self) -> String {
+        format!(
+            "lm_L{}_D{}_H{}_T{}_V{}",
+            self.layers, self.d_model, self.n_heads, self.ctx, self.vocab
+        )
+    }
+
+    fn preset(name: &str) -> Option<LmConfig> {
+        let base = |layers, d_model, n_heads| LmConfig {
+            layers,
+            d_model,
+            n_heads,
+            vocab: 512,
+            ctx: 64,
+            batch: DEFAULT_LM_BATCH,
+        };
+        match name {
+            "lm_olmo_1m" => Some(base(3, 160, 5)),
+            "lm_olmo_4m" => Some(base(5, 256, 8)),
+            "lm_olmo_12m" => Some(base(6, 384, 12)),
+            _ => None,
+        }
+    }
+
+    /// Parse a ladder preset or `lm_L<l>_D<d>[_H<h>][_T<ctx>][_V<vocab>]`.
+    /// `batch_override` replaces the default token-batch rows when given.
+    pub fn parse(name: &str, batch_override: Option<usize>) -> Result<LmConfig> {
+        let err = || {
+            anyhow!(
+                "unparseable LM model name {name:?} \
+                 (want one of {LM_LADDER:?} or lm_L<l>_D<d>[_H<h>][_T<ctx>][_V<vocab>])"
+            )
+        };
+        let mut cfg = match Self::preset(name) {
+            Some(c) => c,
+            None => {
+                let rest = name.strip_prefix("lm_").ok_or_else(err)?;
+                let mut parts = rest.split('_');
+                let num = |p: Option<&str>, tag: char| -> Result<usize> {
+                    p.and_then(|s| s.strip_prefix(tag)).ok_or_else(err)?.parse().map_err(|_| err())
+                };
+                let layers = num(parts.next(), 'L')?;
+                let d_model = num(parts.next(), 'D')?;
+                let mut c = LmConfig {
+                    layers,
+                    d_model,
+                    // Default head dim 64 when it divides, else 32.
+                    n_heads: if d_model % 64 == 0 { d_model / 64 } else { d_model / 32 },
+                    vocab: 512,
+                    ctx: 64,
+                    batch: DEFAULT_LM_BATCH,
+                };
+                for p in parts {
+                    // char-based split: a multi-byte first character must
+                    // yield the parse error, not a byte-boundary panic.
+                    let mut it = p.chars();
+                    let tag = it.next().ok_or_else(err)?;
+                    let v: usize = it.as_str().parse().map_err(|_| err())?;
+                    match tag {
+                        'H' => c.n_heads = v,
+                        'T' => c.ctx = v,
+                        'V' => c.vocab = v,
+                        _ => return Err(err()),
+                    }
+                }
+                c
+            }
+        };
+        if let Some(b) = batch_override {
+            cfg.batch = b;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// MX-packability constraints: every GEMM reduction axis — D (all
+    /// projections), the head dim (score GEMM), the key positions (value
+    /// GEMM), vocab (head input-gradient GEMM) and batch·ctx (all weight
+    /// gradients) — must be a multiple of the 32-element block size.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.layers >= 1, "layers must be >= 1");
+        ensure!(
+            self.d_model >= BLOCK_SIZE && self.d_model % BLOCK_SIZE == 0,
+            "d_model {} must be a positive multiple of {BLOCK_SIZE}",
+            self.d_model
+        );
+        ensure!(
+            self.n_heads >= 1 && self.d_model % self.n_heads == 0,
+            "n_heads {} must divide d_model {}",
+            self.n_heads,
+            self.d_model
+        );
+        ensure!(
+            self.head_dim() % BLOCK_SIZE == 0,
+            "head dim {} must be a multiple of {BLOCK_SIZE} (score GEMMs reduce over it)",
+            self.head_dim()
+        );
+        ensure!(
+            self.ctx >= BLOCK_SIZE && self.ctx % BLOCK_SIZE == 0,
+            "ctx {} must be a positive multiple of {BLOCK_SIZE} (value GEMMs reduce over it)",
+            self.ctx
+        );
+        ensure!(
+            self.vocab >= BLOCK_SIZE && self.vocab % BLOCK_SIZE == 0,
+            "vocab {} must be a positive multiple of {BLOCK_SIZE} (head backward reduces over it)",
+            self.vocab
+        );
+        ensure!(self.batch >= 1, "batch must be >= 1");
+        Ok(())
+    }
+
+    /// Trainable parameter count.
+    pub fn n_params(&self) -> usize {
+        let (l, d, h, v) = (self.layers, self.d_model, self.mlp_hidden(), self.vocab);
+        v * d                      // embedding
+            + l * (4 * d * d)      // wq, wk, wv, wo
+            + l * (3 * d * h)      // w1, wg, w2
+            + l * 2 * d            // ln1, ln2
+            + d                    // lnf
+            + d * v                // head
+    }
+}
+
+/// Tensor order inside one parameter set (and its m/v moments).
+const PNAMES: [&str; 12] =
+    ["emb", "wq", "wk", "wv", "wo", "w1", "wg", "w2", "head", "ln1", "ln2", "lnf"];
+const EMB: usize = 0;
+const WQ: usize = 1;
+const WK: usize = 2;
+const WV: usize = 3;
+const WO: usize = 4;
+const W1: usize = 5;
+const WG: usize = 6;
+const W2: usize = 7;
+const HEAD: usize = 8;
+const LN1: usize = 9;
+const LN2: usize = 10;
+const LNF: usize = 11;
+const K_TENSORS: usize = PNAMES.len();
+
+/// Immutable view of the parameter set inside a [`NativeState`].
+struct LmParams<'a> {
+    t: [&'a [f32]; K_TENSORS],
+}
+
+impl<'a> LmParams<'a> {
+    fn layer(&self, idx: usize, k: usize, per: usize) -> &'a [f32] {
+        &self.t[idx][k * per..(k + 1) * per]
+    }
+}
+
+/// Per-layer forward intermediates kept for the backward pass.
+struct LmLayerCache {
+    xhat1: Vec<f32>,
+    inv_std1: Vec<f32>,
+    g1q: Vec<f32>,
+    z1: Vec<f32>,
+    /// Head-split projections: `[B·Hh]` slabs of `[T × dh]`.
+    qh: Vec<f32>,
+    kh: Vec<f32>,
+    vh: Vec<f32>,
+    /// Causal attention probabilities: `[B·Hh]` slabs of `[T × T]`.
+    probs: Vec<f32>,
+    /// Merged attention output (input to the `wo` projection).
+    attnout: Vec<f32>,
+    xhat2: Vec<f32>,
+    inv_std2: Vec<f32>,
+    g2q: Vec<f32>,
+    z2: Vec<f32>,
+    h: Vec<f32>,
+    gate: Vec<f32>,
+    phi: Vec<f32>,
+}
+
+struct LmForward {
+    logits: Vec<f32>,
+    caches: Vec<LmLayerCache>,
+    /// Final-LN intermediates: (xhatf, inv_stdf, gfq, zf).
+    fin: Option<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)>,
+    /// LN-site fracs in order [l0.ln1, l0.ln2, l1.ln1, .., lnf].
+    ln_fracs: Vec<f32>,
+    act_frac_sum: f32,
+    act_frac_n: usize,
+}
+
+/// The native transformer-LM [`Backend`].
+pub struct LmModel {
+    cfg: LmConfig,
+    name: String,
+    spec: Vec<TensorSpec>,
+}
+
+impl LmModel {
+    pub fn new(cfg: LmConfig) -> Result<LmModel> {
+        Self::named(cfg, &cfg.name())
+    }
+
+    /// Build with an explicit bundle name (ladder presets keep theirs).
+    pub fn named(cfg: LmConfig, name: &str) -> Result<LmModel> {
+        cfg.validate()?;
+        let mut spec = Vec::new();
+        for prefix in ["p", "m", "v"] {
+            for (i, n) in PNAMES.iter().enumerate() {
+                spec.push(TensorSpec {
+                    name: format!("{prefix}_{n}"),
+                    shape: cfg.shape_of(i),
+                    dtype: crate::runtime::Dtype::F32,
+                });
+            }
+        }
+        Ok(LmModel { cfg, name: name.to_string(), spec })
+    }
+
+    pub fn config(&self) -> &LmConfig {
+        &self.cfg
+    }
+
+    fn params<'a>(&self, s: &'a NativeState) -> LmParams<'a> {
+        LmParams { t: std::array::from_fn(|i| s.tensors[i].as_slice()) }
+    }
+
+    /// Split `tokens` ([batch, ctx+1] row-major) into input / shifted
+    /// target position streams of length batch·ctx.
+    fn decode_tokens(&self, args: &StepArgs) -> Result<(Vec<usize>, Vec<usize>)> {
+        let toks =
+            args.tokens.as_ref().ok_or_else(|| anyhow!("LM backend requires a token batch"))?;
+        self.decode_token_slice(toks)
+    }
+
+    fn decode_token_slice(&self, toks: &[i32]) -> Result<(Vec<usize>, Vec<usize>)> {
+        let (b, t, v) = (self.cfg.batch, self.cfg.ctx, self.cfg.vocab);
+        ensure!(
+            toks.len() == b * (t + 1),
+            "token batch has {} elems, want {}×{}",
+            toks.len(),
+            b,
+            t + 1
+        );
+        let mut ins = Vec::with_capacity(b * t);
+        let mut tgt = Vec::with_capacity(b * t);
+        for bi in 0..b {
+            let row = &toks[bi * (t + 1)..(bi + 1) * (t + 1)];
+            for ti in 0..t {
+                let (a, y) = (row[ti], row[ti + 1]);
+                ensure!(
+                    a >= 0 && (a as usize) < v && y >= 0 && (y as usize) < v,
+                    "token out of range for vocab {v}"
+                );
+                ins.push(a as usize);
+                tgt.push(y as usize);
+            }
+        }
+        Ok((ins, tgt))
+    }
+
+    /// Gather `[N, dh]` head slabs out of a `[N, D]` projection:
+    /// slab `s = bi·Hh + h` holds rows `[T × dh]` for that (batch, head).
+    fn split_heads(&self, x: &[f32]) -> Vec<f32> {
+        let (b, t, hh, dh) = (self.cfg.batch, self.cfg.ctx, self.cfg.n_heads, self.cfg.head_dim());
+        let d = self.cfg.d_model;
+        let mut out = vec![0.0f32; x.len()];
+        for bi in 0..b {
+            for h in 0..hh {
+                for ti in 0..t {
+                    let src = (bi * t + ti) * d + h * dh;
+                    let dst = ((bi * hh + h) * t + ti) * dh;
+                    out[dst..dst + dh].copy_from_slice(&x[src..src + dh]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`Self::split_heads`].
+    fn merge_heads(&self, x: &[f32]) -> Vec<f32> {
+        let (b, t, hh, dh) = (self.cfg.batch, self.cfg.ctx, self.cfg.n_heads, self.cfg.head_dim());
+        let d = self.cfg.d_model;
+        let mut out = vec![0.0f32; x.len()];
+        for bi in 0..b {
+            for h in 0..hh {
+                for ti in 0..t {
+                    let src = ((bi * hh + h) * t + ti) * dh;
+                    let dst = (bi * t + ti) * d + h * dh;
+                    out[dst..dst + dh].copy_from_slice(&x[src..src + dh]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Forward pass. `keep` retains the per-layer caches for the backward
+    /// pass (eval skips them).
+    fn forward(&self, p: &LmParams, inputs: &[usize], fmt: &Fmt, keep: bool) -> LmForward {
+        let cfg = &self.cfg;
+        let (d, hm, v) = (cfg.d_model, cfg.mlp_hidden(), cfg.vocab);
+        let (t, hh, dh) = (cfg.ctx, cfg.n_heads, cfg.head_dim());
+        let n = cfg.batch * t;
+        let slabs = cfg.batch * hh;
+        let inv_sqrt_dh = 1.0f32 / (dh as f32).sqrt();
+        let bump = fmt.scale_bump;
+
+        let mut ln_fracs = Vec::with_capacity(2 * cfg.layers + 1);
+        let mut act_frac_sum = 0.0f32;
+        let mut act_frac_n = 0usize;
+        let mut site = |f: f32| {
+            act_frac_sum += f;
+            act_frac_n += 1;
+        };
+
+        // Token embedding gather (fp32; not a GEMM).
+        let emb = p.t[EMB];
+        let mut x = vec![0.0f32; n * d];
+        for (row, &tok) in inputs.iter().enumerate() {
+            x[row * d..(row + 1) * d].copy_from_slice(&emb[tok * d..(tok + 1) * d]);
+        }
+
+        let mut caches = Vec::with_capacity(if keep { cfg.layers } else { 0 });
+        for k in 0..cfg.layers {
+            // -- LN1 (quantizable gamma, §6.1) --
+            let (g1q, f1) = ln_gamma_site(p.layer(LN1, k, d), fmt);
+            ln_fracs.push(f1);
+            let (z1, xhat1, inv_std1) = layernorm_fwd(&x, n, d, &g1q);
+
+            // -- q/k/v projections: one shared input site, one weight
+            // site each (z1 is encoded once, not per projection) --
+            let (qh, kh, vh) = {
+                let (qz1, fz) = quantize_fwd_act(&z1, n, d, fmt);
+                site(fz);
+                let q = qlinear_fwd_pre(&qz1, p.layer(WQ, k, d * d), n, d, d, fmt);
+                let kk = qlinear_fwd_pre(&qz1, p.layer(WK, k, d * d), n, d, d, fmt);
+                let vv = qlinear_fwd_pre(&qz1, p.layer(WV, k, d * d), n, d, d, fmt);
+                (self.split_heads(&q), self.split_heads(&kk), self.split_heads(&vv))
+            };
+
+            // -- causal attention per (batch, head) slab --
+            let mut probs = vec![0.0f32; slabs * t * t];
+            let mut ctx_h = vec![0.0f32; slabs * t * dh];
+            let mut fq_sum = 0.0f32;
+            let mut fp_sum = 0.0f32;
+            for s in 0..slabs {
+                let qs = &qh[s * t * dh..(s + 1) * t * dh];
+                let ks = &kh[s * t * dh..(s + 1) * t * dh];
+                let vs = &vh[s * t * dh..(s + 1) * t * dh];
+                // scores = Q·Kᵀ / √dh — blocks along the head dim.
+                let (qq, fq) = quantize_site(qs, t, dh, fmt.a_fwd, fmt.quant_fwd, bump);
+                let (qk, _) = quantize_site(ks, t, dh, fmt.a_fwd, fmt.quant_fwd, bump);
+                let ps = &mut probs[s * t * t..(s + 1) * t * t];
+                qgemm(&qq, &qk, t, t, dh, ps);
+                for sc in ps.iter_mut() {
+                    *sc *= inv_sqrt_dh;
+                }
+                causal_softmax(ps, t);
+                // ctx = P·V — blocks along the key positions.
+                let (qp, fp) = quantize_site(ps, t, t, fmt.a_fwd, fmt.quant_fwd, bump);
+                let vt = transpose(vs, t, dh); // [dh, T]
+                let (qv, _) = quantize_site(&vt, dh, t, fmt.a_fwd, fmt.quant_fwd, bump);
+                qgemm(&qp, &qv, t, dh, t, &mut ctx_h[s * t * dh..(s + 1) * t * dh]);
+                fq_sum += fq;
+                fp_sum += fp;
+            }
+            site(fq_sum / slabs as f32);
+            site(fp_sum / slabs as f32);
+
+            // -- output projection + residual --
+            let attnout = self.merge_heads(&ctx_h);
+            let (o, fa) = qlinear_fwd(&attnout, p.layer(WO, k, d * d), n, d, d, fmt);
+            site(fa);
+            let x_mid: Vec<f32> = x.iter().zip(&o).map(|(&a, &b)| a + b).collect();
+
+            // -- LN2 + SwiGLU MLP + residual --
+            let (g2q, f2) = ln_gamma_site(p.layer(LN2, k, d), fmt);
+            ln_fracs.push(f2);
+            let (z2, xhat2, inv_std2) = layernorm_fwd(&x_mid, n, d, &g2q);
+            let (h, gate) = {
+                let (qz2, fz2) = quantize_fwd_act(&z2, n, d, fmt);
+                site(fz2);
+                let h = qlinear_fwd_pre(&qz2, p.layer(W1, k, d * hm), n, d, hm, fmt);
+                let gate = qlinear_fwd_pre(&qz2, p.layer(WG, k, d * hm), n, d, hm, fmt);
+                (h, gate)
+            };
+            let phi = act_fwd(Activation::Swiglu, &h, Some(gate.as_slice()));
+            let (mlp, fphi) = qlinear_fwd(&phi, p.layer(W2, k, hm * d), n, hm, d, fmt);
+            site(fphi);
+            let x_next: Vec<f32> = x_mid.iter().zip(&mlp).map(|(&a, &b)| a + b).collect();
+
+            if keep {
+                caches.push(LmLayerCache {
+                    xhat1,
+                    inv_std1,
+                    g1q,
+                    z1,
+                    qh,
+                    kh,
+                    vh,
+                    probs,
+                    attnout,
+                    xhat2,
+                    inv_std2,
+                    g2q,
+                    z2,
+                    h,
+                    gate,
+                    phi,
+                });
+            }
+            x = x_next;
+        }
+
+        // -- final LN + LM head --
+        let (gfq, ff) = ln_gamma_site(p.t[LNF], fmt);
+        ln_fracs.push(ff);
+        let (zf, xhatf, inv_stdf) = layernorm_fwd(&x, n, d, &gfq);
+        let (logits, fzf) = qlinear_fwd(&zf, p.t[HEAD], n, d, v, fmt);
+        site(fzf);
+
+        LmForward {
+            logits,
+            caches,
+            fin: keep.then_some((xhatf, inv_stdf, gfq, zf)),
+            ln_fracs,
+            act_frac_sum,
+            act_frac_n,
+        }
+    }
+
+    /// Mean cross-entropy over all positions, plus ∂L/∂logits.
+    fn loss_and_dlogits(logits: &[f32], targets: &[usize], v: usize) -> (f32, Vec<f32>) {
+        let n = targets.len();
+        debug_assert_eq!(logits.len(), n * v);
+        let mut acc = 0.0f64;
+        let mut dl = vec![0.0f32; logits.len()];
+        let invn = 1.0 / n as f64;
+        for r in 0..n {
+            let row = &logits[r * v..(r + 1) * v];
+            let lz = row_logsumexp(row);
+            acc += lz - row[targets[r]] as f64;
+            for j in 0..v {
+                let p = ((row[j] as f64) - lz).exp();
+                let ind = if j == targets[r] { 1.0 } else { 0.0 };
+                dl[r * v + j] = ((p - ind) * invn) as f32;
+            }
+        }
+        ((acc * invn) as f32, dl)
+    }
+
+    /// Mean cross-entropy only (validation path; no gradient buffer).
+    fn ce_loss(logits: &[f32], targets: &[usize], v: usize) -> f32 {
+        let mut acc = 0.0f64;
+        for (r, &tgt) in targets.iter().enumerate() {
+            let row = &logits[r * v..(r + 1) * v];
+            acc += row_logsumexp(row) - row[tgt] as f64;
+        }
+        (acc / targets.len() as f64) as f32
+    }
+
+    /// Backward pass: gradients for every tensor in [`PNAMES`] order.
+    fn backward(
+        &self,
+        p: &LmParams,
+        fwd: &LmForward,
+        inputs: &[usize],
+        dlogits: Vec<f32>,
+        fmt: &Fmt,
+    ) -> Vec<Vec<f32>> {
+        let cfg = &self.cfg;
+        let (d, hm, v) = (cfg.d_model, cfg.mlp_hidden(), cfg.vocab);
+        let (t, hh, dh) = (cfg.ctx, cfg.n_heads, cfg.head_dim());
+        let n = cfg.batch * t;
+        let slabs = cfg.batch * hh;
+        let inv_sqrt_dh = 1.0f32 / (dh as f32).sqrt();
+        let (en, bump) = (fmt.quant_bwd, fmt.scale_bump);
+        let (gf, af) = (fmt.g_bwd, fmt.a_bwd);
+
+        let mut grads: Vec<Vec<f32>> =
+            (0..K_TENSORS).map(|i| vec![0.0f32; self.cfg.shape_of(i).iter().product()]).collect();
+
+        // -- LM head + final LN --
+        let (xhatf, inv_stdf, gfq, zf) = fwd.fin.as_ref().expect("backward needs caches");
+        let dzf = qlinear_bwd(&dlogits, zf, p.t[HEAD], n, d, v, fmt, &mut grads[HEAD]);
+        let (dxf, dgf) = layernorm_bwd(&dzf, xhatf, inv_stdf, gfq, n, d);
+        grads[LNF].copy_from_slice(&dgf);
+
+        let mut da = dxf; // ∂L/∂x_out of the last layer
+        for k in (0..cfg.layers).rev() {
+            let c = &fwd.caches[k];
+
+            // -- MLP backward (residual: ∂L/∂mlp = da) --
+            let dphi = qlinear_bwd(
+                &da,
+                &c.phi,
+                p.layer(W2, k, hm * d),
+                n,
+                hm,
+                d,
+                fmt,
+                &mut grads[W2][k * hm * d..(k + 1) * hm * d],
+            );
+            let (dh_, dgate) = act_bwd(Activation::Swiglu, &c.h, Some(c.gate.as_slice()), &dphi);
+            let dgate = dgate.expect("swiglu gate grad");
+            // z2ᵀ is re-blocked (along the token axis) and encoded once,
+            // shared by both MLP weight gradients.
+            let z2t = transpose(&c.z2, n, d);
+            let qz2t = quantize_bwd_act(&z2t, d, n, fmt);
+            let mut dz2 = qlinear_bwd_pre(
+                &dh_,
+                &qz2t,
+                p.layer(W1, k, d * hm),
+                n,
+                d,
+                hm,
+                fmt,
+                &mut grads[W1][k * d * hm..(k + 1) * d * hm],
+            );
+            let dz_gate = qlinear_bwd_pre(
+                &dgate,
+                &qz2t,
+                p.layer(WG, k, d * hm),
+                n,
+                d,
+                hm,
+                fmt,
+                &mut grads[WG][k * d * hm..(k + 1) * d * hm],
+            );
+            for (a, b) in dz2.iter_mut().zip(&dz_gate) {
+                *a += b;
+            }
+            let (dx_ln2, dg2) = layernorm_bwd(&dz2, &c.xhat2, &c.inv_std2, &c.g2q, n, d);
+            grads[LN2][k * d..(k + 1) * d].copy_from_slice(&dg2);
+            // ∂L/∂x_mid: residual skip + LN2 path.
+            let da_mid: Vec<f32> = da.iter().zip(&dx_ln2).map(|(&a, &b)| a + b).collect();
+
+            // -- attention output projection --
+            let dattnout = qlinear_bwd(
+                &da_mid,
+                &c.attnout,
+                p.layer(WO, k, d * d),
+                n,
+                d,
+                d,
+                fmt,
+                &mut grads[WO][k * d * d..(k + 1) * d * d],
+            );
+            let do_h = self.split_heads(&dattnout);
+
+            // -- attention core backward, per (batch, head) slab --
+            let mut dqh = vec![0.0f32; slabs * t * dh];
+            let mut dkh = vec![0.0f32; slabs * t * dh];
+            let mut dvh = vec![0.0f32; slabs * t * dh];
+            for s in 0..slabs {
+                let ps = &c.probs[s * t * t..(s + 1) * t * t];
+                let qs = &c.qh[s * t * dh..(s + 1) * t * dh];
+                let ks = &c.kh[s * t * dh..(s + 1) * t * dh];
+                let vs = &c.vh[s * t * dh..(s + 1) * t * dh];
+                let dos = &do_h[s * t * dh..(s + 1) * t * dh];
+
+                // dP = Q_g(dO)·Q_a(V)ᵀ — both re-blocked along the head dim.
+                let (qdo, _) = quantize_site(dos, t, dh, gf, en, bump);
+                let (qv, _) = quantize_site(vs, t, dh, af, en, bump);
+                let mut dp = vec![0.0f32; t * t];
+                qgemm(&qdo, &qv, t, t, dh, &mut dp);
+
+                // dV = Q_a(Pᵀ)·Q_g(dO) — both re-blocked along the queries.
+                let pt = transpose(ps, t, t);
+                let dot_ = transpose(dos, t, dh);
+                let (qpt, _) = quantize_site(&pt, t, t, af, en, bump);
+                let (qdot, _) = quantize_site(&dot_, dh, t, gf, en, bump);
+                qgemm(&qpt, &qdot, t, dh, t, &mut dvh[s * t * dh..(s + 1) * t * dh]);
+
+                // Softmax backward (fp32) + the 1/√dh score scale.
+                let ds = causal_softmax_bwd(ps, &dp, t, inv_sqrt_dh);
+
+                // dQ = Q_g(dS)·Q_a(K) — blocks along the key positions.
+                let kt = transpose(ks, t, dh);
+                let (qds, _) = quantize_site(&ds, t, t, gf, en, bump);
+                let (qkt, _) = quantize_site(&kt, dh, t, af, en, bump);
+                qgemm(&qds, &qkt, t, dh, t, &mut dqh[s * t * dh..(s + 1) * t * dh]);
+
+                // dK = Q_g(dSᵀ)·Q_a(Q) — blocks along the query positions.
+                let dst = transpose(&ds, t, t);
+                let qt = transpose(qs, t, dh);
+                let (qdst, _) = quantize_site(&dst, t, t, gf, en, bump);
+                let (qqt, _) = quantize_site(&qt, dh, t, af, en, bump);
+                qgemm(&qdst, &qqt, t, dh, t, &mut dkh[s * t * dh..(s + 1) * t * dh]);
+            }
+            let dq = self.merge_heads(&dqh);
+            let dk = self.merge_heads(&dkh);
+            let dv = self.merge_heads(&dvh);
+
+            // -- q/k/v projection backward; input grads accumulate on z1,
+            // z1ᵀ is encoded once and shared by all three weight grads --
+            let z1t = transpose(&c.z1, n, d);
+            let qz1t = quantize_bwd_act(&z1t, d, n, fmt);
+            let mut dz1 = qlinear_bwd_pre(
+                &dq,
+                &qz1t,
+                p.layer(WQ, k, d * d),
+                n,
+                d,
+                d,
+                fmt,
+                &mut grads[WQ][k * d * d..(k + 1) * d * d],
+            );
+            for (idx, dy) in [(WK, &dk), (WV, &dv)] {
+                let dzi = qlinear_bwd_pre(
+                    dy,
+                    &qz1t,
+                    p.layer(idx, k, d * d),
+                    n,
+                    d,
+                    d,
+                    fmt,
+                    &mut grads[idx][k * d * d..(k + 1) * d * d],
+                );
+                for (a, b) in dz1.iter_mut().zip(&dzi) {
+                    *a += b;
+                }
+            }
+            let (dx_ln1, dg1) = layernorm_bwd(&dz1, &c.xhat1, &c.inv_std1, &c.g1q, n, d);
+            grads[LN1][k * d..(k + 1) * d].copy_from_slice(&dg1);
+            da = da_mid.iter().zip(&dx_ln1).map(|(&a, &b)| a + b).collect();
+        }
+
+        // -- embedding scatter-add (fp32) --
+        for (row, &tok) in inputs.iter().enumerate() {
+            let g = &mut grads[EMB][tok * d..(tok + 1) * d];
+            for (gi, &di) in g.iter_mut().zip(&da[row * d..(row + 1) * d]) {
+                *gi += di;
+            }
+        }
+        grads
+    }
+
+    /// Training loss at the current parameters for the given token batch —
+    /// exposed for finite-difference gradient checks.
+    pub fn loss(&self, state: &NativeState, args: &StepArgs) -> Result<f32> {
+        let (fmt, _) = decode_args(args)?;
+        let (ins, tgt) = self.decode_tokens(args)?;
+        let fwd = self.forward(&self.params(state), &ins, &fmt, false);
+        Ok(Self::ce_loss(&fwd.logits, &tgt, self.cfg.vocab))
+    }
+
+    /// Analytic parameter gradients (in `PNAMES` order) — exposed for
+    /// finite-difference gradient checks.
+    pub fn grads(&self, state: &NativeState, args: &StepArgs) -> Result<Vec<Vec<f32>>> {
+        let (fmt, _) = decode_args(args)?;
+        let (ins, tgt) = self.decode_tokens(args)?;
+        let p = self.params(state);
+        let fwd = self.forward(&p, &ins, &fmt, true);
+        let (_, dl) = Self::loss_and_dlogits(&fwd.logits, &tgt, self.cfg.vocab);
+        Ok(self.backward(&p, &fwd, &ins, dl, &fmt))
+    }
+
+    fn do_step(
+        &self,
+        mut state: NativeState,
+        args: &StepArgs,
+        paired: bool,
+    ) -> Result<(NativeState, Metrics)> {
+        let (fmt, hyper) = decode_args(args)?;
+        let (ins, tgt) = self.decode_tokens(args)?;
+
+        let (loss, fwd, grads) = {
+            let p = self.params(&state);
+            let fwd = self.forward(&p, &ins, &fmt, true);
+            let (loss, dl) = Self::loss_and_dlogits(&fwd.logits, &tgt, self.cfg.vocab);
+            let grads = self.backward(&p, &fwd, &ins, dl, &fmt);
+            (loss, fwd, grads)
+        };
+        let grad_norm = global_norm(&grads);
+
+        let (eps_ratio, cosine) = if paired {
+            let fp32 = Fmt::fp32();
+            let p = self.params(&state);
+            let fwd0 = self.forward(&p, &ins, &fp32, true);
+            let (_, dl0) = Self::loss_and_dlogits(&fwd0.logits, &tgt, self.cfg.vocab);
+            let g_ref = self.backward(&p, &fwd0, &ins, dl0, &fp32);
+            grad_bias(&grads, &g_ref)
+        } else {
+            (0.0, 0.0)
+        };
+
+        let (update_norm, param_norm) = optimizer_step(&mut state, &grads, K_TENSORS, &hyper);
+
+        let n_ln = fwd.ln_fracs.len() as f32;
+        let met = Metrics {
+            loss,
+            grad_norm,
+            ln_frac_first: fwd.ln_fracs.first().copied().unwrap_or(0.0),
+            ln_frac_mean: fwd.ln_fracs.iter().sum::<f32>() / n_ln,
+            act_frac_mean: fwd.act_frac_sum / fwd.act_frac_n.max(1) as f32,
+            update_norm,
+            param_norm,
+            eps_ratio,
+            cosine,
+        };
+        Ok((state, met))
+    }
+}
+
+impl LmConfig {
+    fn shape_of(&self, idx: usize) -> Vec<usize> {
+        let (l, d, hm, v) = (self.layers, self.d_model, self.mlp_hidden(), self.vocab);
+        match idx {
+            EMB => vec![v, d],
+            WQ | WK | WV | WO => vec![l, d, d],
+            W1 | WG => vec![l, d, hm],
+            W2 => vec![l, hm, d],
+            HEAD => vec![d, v],
+            LN1 | LN2 => vec![l, d],
+            LNF => vec![d],
+            _ => unreachable!("unknown LM tensor index {idx}"),
+        }
+    }
+}
+
+impl Backend for LmModel {
+    type State = NativeState;
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn n_params(&self) -> usize {
+        self.cfg.n_params()
+    }
+
+    fn tokens_shape(&self) -> Option<(usize, usize)> {
+        Some((self.cfg.batch, self.cfg.ctx + 1))
+    }
+
+    fn vocab(&self) -> Option<usize> {
+        Some(self.cfg.vocab)
+    }
+
+    fn has_paired(&self) -> bool {
+        true
+    }
+
+    fn init(&self, seed: i32, init_mode: f32, gain: f32) -> Result<NativeState> {
+        let cfg = &self.cfg;
+        let root = Xoshiro256::seed_from(seed as i64 as u64).fold_in(0);
+        // Matrix init mirrors the proxy: Kaiming-uniform (mode 0) /
+        // Xavier-normal (mode 1); the residual-output projections (wo, w2)
+        // are scaled by 1/√(2L) so the stream variance stays O(1) at depth.
+        let weight_init = |i: usize, n: usize, fan_in: usize, fan_out: usize, res: bool| {
+            let mut rng = root.fold_in(i as u64);
+            let scale = if res { 1.0 / (2.0 * cfg.layers as f32).sqrt() } else { 1.0 };
+            let mut w: Vec<f32> = if init_mode > 0.5 {
+                let xstd = gain * (2.0 / (fan_in + fan_out) as f32).sqrt();
+                let mut v = rng.normal_vec(n);
+                for x in &mut v {
+                    *x *= xstd;
+                }
+                v
+            } else {
+                let bound = gain / (fan_in as f32).sqrt();
+                (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * bound).collect()
+            };
+            for x in &mut w {
+                *x *= scale;
+            }
+            w
+        };
+        let (d, hm, v) = (cfg.d_model, cfg.mlp_hidden(), cfg.vocab);
+        let mut tensors: Vec<Vec<f32>> = Vec::with_capacity(3 * K_TENSORS);
+        for i in 0..K_TENSORS {
+            let n: usize = cfg.shape_of(i).iter().product();
+            tensors.push(match i {
+                // Embedding: small Gaussian; LN1 right after normalizes scale.
+                EMB => {
+                    let mut e = root.fold_in(i as u64).normal_vec(n);
+                    for x in &mut e {
+                        *x *= 0.02 * gain;
+                    }
+                    e
+                }
+                WQ | WK | WV => weight_init(i, n, d, d, false),
+                WO => weight_init(i, n, d, d, true),
+                W1 | WG => weight_init(i, n, d, hm, false),
+                W2 => weight_init(i, n, hm, d, true),
+                HEAD => weight_init(i, n, d, v, false),
+                LN1 | LN2 | LNF => vec![1.0f32; n],
+                _ => unreachable!(),
+            });
+        }
+        for _ in 0..2 {
+            for i in 0..K_TENSORS {
+                let n: usize = cfg.shape_of(i).iter().product();
+                tensors.push(vec![0.0f32; n]);
+            }
+        }
+        Ok(NativeState { tensors })
+    }
+
+    fn step(&self, state: NativeState, args: &StepArgs) -> Result<(NativeState, Metrics)> {
+        self.do_step(state, args, false)
+    }
+
+    fn paired_step(&self, state: NativeState, args: &StepArgs) -> Result<(NativeState, Metrics)> {
+        self.do_step(state, args, true)
+    }
+
+    fn eval(&self, state: &NativeState, tokens: &[i32], fmt: &[f32]) -> Result<f32> {
+        let fmt = Fmt::from_vec(fmt).ok_or_else(|| anyhow!("undecodable fmt vector"))?;
+        let (ins, tgt) = self.decode_token_slice(tokens)?;
+        let fwd = self.forward(&self.params(state), &ins, &fmt, false);
+        Ok(Self::ce_loss(&fwd.logits, &tgt, self.cfg.vocab))
+    }
+
+    fn clone_state(&self, state: &NativeState) -> Result<NativeState> {
+        Ok(state.clone())
+    }
+
+    fn state_spec(&self) -> &[TensorSpec] {
+        &self.spec
+    }
+
+    fn snapshot(&self, state: &NativeState) -> Result<Vec<Vec<f32>>> {
+        Ok(state.tensors.clone())
+    }
+
+    fn restore(&self, tensors: Vec<Vec<f32>>) -> Result<NativeState> {
+        ensure!(
+            tensors.len() == self.spec.len(),
+            "state arity {} != spec {}",
+            tensors.len(),
+            self.spec.len()
+        );
+        for (t, ts) in tensors.iter().zip(&self.spec) {
+            ensure!(
+                t.len() == ts.elems(),
+                "tensor {}: {} elems, expected {}",
+                ts.name,
+                t.len(),
+                ts.elems()
+            );
+        }
+        Ok(NativeState { tensors })
+    }
+}
+
+/// Max-shifted log-sum-exp of one logits row (f64 accumulation) — the
+/// shared numerics of the training loss and the validation loss.
+fn row_logsumexp(row: &[f32]) -> f64 {
+    let mut mx = f64::NEG_INFINITY;
+    for &x in row {
+        mx = mx.max(x as f64);
+    }
+    let mut z = 0.0f64;
+    for &x in row {
+        z += ((x as f64) - mx).exp();
+    }
+    z.ln() + mx
+}
+
+/// In-place causal softmax over `[T × T]` scores: row `i` normalizes over
+/// keys `0..=i` (f64 accumulation); masked entries become exactly 0.
+fn causal_softmax(s: &mut [f32], t: usize) {
+    for i in 0..t {
+        let row = &mut s[i * t..(i + 1) * t];
+        let mut mx = f64::NEG_INFINITY;
+        for &x in row[..=i].iter() {
+            mx = mx.max(x as f64);
+        }
+        let mut z = 0.0f64;
+        for x in row[..=i].iter_mut() {
+            let e = ((*x as f64) - mx).exp();
+            *x = e as f32;
+            z += e;
+        }
+        let inv = 1.0 / z;
+        for x in row[..=i].iter_mut() {
+            *x = (*x as f64 * inv) as f32;
+        }
+        for x in row[i + 1..].iter_mut() {
+            *x = 0.0;
+        }
+    }
+}
+
+/// Backward through the causal softmax and the 1/√dh score scale:
+/// `dS[i,j] = scale · P[i,j] · (dP[i,j] − Σ_j' P[i,j']·dP[i,j'])`.
+/// Masked entries (P = 0) stay exactly 0.
+fn causal_softmax_bwd(p: &[f32], dp: &[f32], t: usize, scale: f32) -> Vec<f32> {
+    let mut ds = vec![0.0f32; t * t];
+    for i in 0..t {
+        let pr = &p[i * t..(i + 1) * t];
+        let dpr = &dp[i * t..(i + 1) * t];
+        let mut dot = 0.0f64;
+        for j in 0..=i {
+            dot += pr[j] as f64 * dpr[j] as f64;
+        }
+        for j in 0..=i {
+            ds[i * t + j] = ((pr[j] as f64) * (dpr[j] as f64 - dot)) as f32 * scale;
+        }
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Corpus, CorpusConfig};
+    use crate::formats::spec::{hyper_idx, FormatId};
+
+    fn tiny() -> LmModel {
+        LmModel::new(LmConfig {
+            layers: 1,
+            d_model: 32,
+            n_heads: 1,
+            vocab: 64,
+            ctx: 32,
+            batch: 2,
+        })
+        .unwrap()
+    }
+
+    fn args_for(m: &LmModel, fmt: Fmt, seed: i32, step: i32) -> StepArgs {
+        let corpus = Corpus::new(CorpusConfig {
+            vocab: m.config().vocab,
+            ..Default::default()
+        });
+        let (b, l) = m.tokens_shape().unwrap();
+        let mut hyper = vec![0.0f32; hyper_idx::HYPER_LEN];
+        hyper[hyper_idx::LR] = 1e-2;
+        StepArgs {
+            tokens: Some(corpus.batch(seed as u64, step as u64, b, l)),
+            fmt: fmt.to_vec(),
+            hyper,
+            seed,
+            step,
+        }
+    }
+
+    #[test]
+    fn names_parse_and_validate() {
+        for preset in LM_LADDER {
+            let cfg = LmConfig::parse(preset, None).unwrap();
+            assert!(cfg.validate().is_ok(), "{preset}");
+        }
+        let cfg = LmConfig::parse("lm_L2_D64_H2_T32_V256", None).unwrap();
+        assert_eq!((cfg.layers, cfg.d_model, cfg.n_heads, cfg.ctx, cfg.vocab), (2, 64, 2, 32, 256));
+        assert_eq!(cfg.name(), "lm_L2_D64_H2_T32_V256");
+        let cfg = LmConfig::parse("lm_L2_D128", Some(4)).unwrap();
+        assert_eq!((cfg.n_heads, cfg.batch), (2, 4), "default head dim 64, batch override");
+        assert!(LmConfig::parse("lm_nope", None).is_err());
+        assert!(LmConfig::parse("proxy_gelu_ln_L2_D64", None).is_err());
+        assert!(LmConfig::parse("lm_L2_D64_Ω3", None).is_err(), "multi-byte tag: error, no panic");
+        assert!(LmConfig::parse("lm_L2_D64__H2", None).is_err(), "empty segment: error");
+        assert!(LmConfig::parse("lm_L2_D100", None).is_err(), "D%32 enforced");
+        assert!(LmConfig::parse("lm_L2_D64_T33", None).is_err(), "ctx%32 enforced");
+        assert!(LmConfig::parse("lm_L2_D64_H3", None).is_err(), "head dim %32 enforced");
+    }
+
+    #[test]
+    fn param_count_matches_spec() {
+        let cfg = LmConfig::parse("lm_olmo_12m", None).unwrap();
+        let m = LmModel::named(cfg, "lm_olmo_12m").unwrap();
+        let spec_params: usize =
+            m.state_spec().iter().take(K_TENSORS).map(|ts| ts.elems()).sum();
+        assert_eq!(m.n_params(), spec_params);
+        assert!(
+            (9_000_000..14_000_000).contains(&m.n_params()),
+            "lm_olmo_12m ≈ 12M params, got {}",
+            m.n_params()
+        );
+        assert_eq!(m.state_spec().len(), 3 * K_TENSORS, "p/m/v, no teacher");
+    }
+
+    #[test]
+    fn causal_softmax_rows_are_masked_distributions() {
+        let t = 4;
+        let mut s: Vec<f32> = (0..t * t).map(|i| (i as f32) * 0.3 - 1.0).collect();
+        causal_softmax(&mut s, t);
+        for i in 0..t {
+            let row = &s[i * t..(i + 1) * t];
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row {i} sums to {sum}");
+            assert!(row[i + 1..].iter().all(|&v| v == 0.0), "future masked in row {i}");
+            assert!(row[..=i].iter().all(|&v| v > 0.0));
+        }
+    }
+
+    #[test]
+    fn lm_steps_reduce_loss_and_emit_metrics() {
+        let m = tiny();
+        let mut state = m.init(0, 0.0, 1.0).unwrap();
+        let mut losses = vec![];
+        for step in 0..30 {
+            let (s2, met) = m.step(state, &args_for(&m, Fmt::fp32(), 3, step)).unwrap();
+            state = s2;
+            assert!(met.loss.is_finite() && met.grad_norm.is_finite(), "step {step}");
+            assert!(met.param_norm > 0.0 && met.update_norm > 0.0);
+            losses.push(met.loss as f64);
+        }
+        let head: f64 = losses[..5].iter().sum::<f64>() / 5.0;
+        let tail: f64 = losses[losses.len() - 5..].iter().sum::<f64>() / 5.0;
+        assert!(tail < head, "LM training must reduce loss: {head} -> {tail}");
+        // Initial loss ≈ uniform ln V.
+        assert!((losses[0] - (64f64).ln()).abs() < 1.0, "step-0 loss {}", losses[0]);
+    }
+
+    #[test]
+    fn quantized_lm_paired_step_reports_bias() {
+        let m = tiny();
+        let state = m.init(1, 0.0, 1.0).unwrap();
+        let fmt = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+        let (_, met) = m.paired_step(state, &args_for(&m, fmt, 1, 0)).unwrap();
+        assert!(met.loss.is_finite());
+        assert!(met.eps_ratio > 0.0, "quantized grads differ from fp32");
+        assert!(met.cosine > 0.5 && met.cosine <= 1.0 + 1e-6, "cosine {}", met.cosine);
+        assert!(met.act_frac_mean >= 0.0);
+    }
+
+    #[test]
+    fn eval_is_deterministic_and_finite() {
+        let m = tiny();
+        let state = m.init(2, 0.0, 1.0).unwrap();
+        let corpus = Corpus::new(CorpusConfig { vocab: 64, ..Default::default() });
+        let (b, l) = m.tokens_shape().unwrap();
+        let toks = corpus.batch(crate::data::HELD_OUT_SEED, 0, b, l);
+        let fmt = Fmt::full(FormatId::E4M3, FormatId::E4M3).to_vec();
+        let a = m.eval(&state, &toks, &fmt).unwrap();
+        let b2 = m.eval(&state, &toks, &fmt).unwrap();
+        assert!(a.is_finite());
+        assert_eq!(a.to_bits(), b2.to_bits());
+        // Token batches of the wrong arity are rejected.
+        assert!(m.eval(&state, &toks[1..], &fmt).is_err());
+    }
+
+    #[test]
+    fn ln_quant_toggle_moves_ln_fraction() {
+        // Clustered gammas clamp whole blocks under E4M3 (§6.1) in the LM
+        // too; flipping quant_ln off zeroes the diagnostic.
+        let m = tiny();
+        let mut state = m.init(0, 0.0, 1.0).unwrap();
+        for idx in [LN1, LN2, LNF] {
+            for v in &mut state.tensors[idx] {
+                *v = 0.9;
+            }
+        }
+        let fmt = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+        let (state, met) = m.step(state, &args_for(&m, fmt, 0, 0)).unwrap();
+        assert!(met.ln_frac_mean > 0.9, "clustered gammas must clamp, got {}", met.ln_frac_mean);
+        assert!(met.ln_frac_first > 0.9);
+        let (_, met2) =
+            m.step(state, &args_for(&m, fmt.without_ln_quant(), 0, 1)).unwrap();
+        assert_eq!(met2.ln_frac_mean, 0.0);
+    }
+}

@@ -1,61 +1,181 @@
 //! Native pure-rust execution backend (the default).
 //!
-//! Runs the paper's residual-MLP proxy workload end-to-end on the packed
-//! MX codec + block GEMM engine — every coordinator feature (sweeps,
-//! detector, Fig. 7 fmt-vector interventions, checkpoints, paired
-//! gradient diagnostics) works on a bare machine with no PJRT, no
-//! artifacts and no Python.
+//! Runs both of the paper's workloads end-to-end on the packed MX codec +
+//! block GEMM engine — every coordinator feature (sweeps, detector,
+//! Fig. 7 fmt-vector interventions, checkpoints, paired gradient
+//! diagnostics) works on a bare machine with no PJRT, no artifacts and no
+//! Python:
 //!
-//! * [`model`] — the residual-MLP student–teacher proxy ([`NativeModel`]),
-//!   quantized forward/backward on the packed engine, AdamW-family
-//!   optimizer, the nine-element metrics vector
-//! * [`ops`] — quantization sites, the quantized-GEMM dispatcher,
-//!   layer norm, activations
+//! * [`model`] — the residual-MLP student–teacher proxy ([`ProxyModel`])
+//! * [`lm`] — the decoder-only transformer LM ([`LmModel`]), the paper's
+//!   headline workload, trained on the Zipf–Markov corpus
+//! * [`common`] — the shared core: flat state, fused Adam/SGD, metrics
+//!   diagnostics, and the quantized-linear site pair both models use
+//! * [`ops`] — quantization sites, the quantized-GEMM dispatcher, layer
+//!   norm, activations
 //! * [`NativeEngine`] — the name→model registry: any
-//!   `proxy_<act>_<ln|noln>_L<depth>_D<width>` name loads (the same
-//!   grammar the bundle grid uses), so the experiment drivers run
-//!   unchanged against it.
+//!   `proxy_<act>_<ln|noln>_L<depth>_D<width>` name loads, the built-in
+//!   `lm_*` ladder ([`LM_LADDER`]) plus any
+//!   `lm_L<l>_D<d>[_H<h>][_T<ctx>][_V<vocab>]` name loads, so the
+//!   experiment drivers (including the LM scaling ladder) run unchanged
+//!   against it.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
+pub mod common;
+pub mod lm;
 pub mod model;
 pub mod ops;
 
-pub use model::{NativeModel, NativeState, ProxyConfig};
+pub use common::NativeState;
+pub use lm::{LmConfig, LmModel, DEFAULT_LM_BATCH, LM_LADDER};
+pub use model::{ProxyConfig, ProxyModel};
 pub use ops::Activation;
 
-use super::Engine;
+use super::{Backend, Engine, Metrics, StepArgs, TensorSpec};
 
 /// Default proxy batch size (python `ProxyConfig.batch`).
 pub const DEFAULT_BATCH: usize = 256;
 
-/// Resolves proxy-model names to [`NativeModel`]s; the native counterpart
-/// of the PJRT artifact directory.
+/// One native model — either workload — behind a single [`Backend`] so the
+/// engine can hand out both from one registry. Both variants share the
+/// flat host-tensor [`NativeState`], so checkpoints, sweeps and
+/// interventions are workload-agnostic.
+pub enum NativeModel {
+    Proxy(ProxyModel),
+    Lm(LmModel),
+}
+
+impl NativeModel {
+    /// Training loss at the current parameters (forward only) — exposed
+    /// for finite-difference gradient checks.
+    pub fn loss(&self, state: &NativeState, args: &StepArgs) -> Result<f32> {
+        match self {
+            NativeModel::Proxy(m) => m.loss(state, args),
+            NativeModel::Lm(m) => m.loss(state, args),
+        }
+    }
+
+    /// Analytic parameter gradients — exposed for finite-difference
+    /// gradient checks.
+    pub fn grads(&self, state: &NativeState, args: &StepArgs) -> Result<Vec<Vec<f32>>> {
+        match self {
+            NativeModel::Proxy(m) => m.grads(state, args),
+            NativeModel::Lm(m) => m.grads(state, args),
+        }
+    }
+
+    pub fn as_proxy(&self) -> Option<&ProxyModel> {
+        match self {
+            NativeModel::Proxy(m) => Some(m),
+            NativeModel::Lm(_) => None,
+        }
+    }
+
+    pub fn as_lm(&self) -> Option<&LmModel> {
+        match self {
+            NativeModel::Lm(m) => Some(m),
+            NativeModel::Proxy(_) => None,
+        }
+    }
+}
+
+macro_rules! dispatch {
+    ($self:expr, $m:ident => $body:expr) => {
+        match $self {
+            NativeModel::Proxy($m) => $body,
+            NativeModel::Lm($m) => $body,
+        }
+    };
+}
+
+impl Backend for NativeModel {
+    type State = NativeState;
+
+    fn name(&self) -> &str {
+        dispatch!(self, m => m.name())
+    }
+
+    fn n_params(&self) -> usize {
+        dispatch!(self, m => m.n_params())
+    }
+
+    fn tokens_shape(&self) -> Option<(usize, usize)> {
+        dispatch!(self, m => m.tokens_shape())
+    }
+
+    fn vocab(&self) -> Option<usize> {
+        dispatch!(self, m => m.vocab())
+    }
+
+    fn has_paired(&self) -> bool {
+        dispatch!(self, m => m.has_paired())
+    }
+
+    fn init(&self, seed: i32, init_mode: f32, gain: f32) -> Result<NativeState> {
+        dispatch!(self, m => m.init(seed, init_mode, gain))
+    }
+
+    fn step(&self, state: NativeState, args: &StepArgs) -> Result<(NativeState, Metrics)> {
+        dispatch!(self, m => m.step(state, args))
+    }
+
+    fn paired_step(&self, state: NativeState, args: &StepArgs) -> Result<(NativeState, Metrics)> {
+        dispatch!(self, m => m.paired_step(state, args))
+    }
+
+    fn eval(&self, state: &NativeState, tokens: &[i32], fmt: &[f32]) -> Result<f32> {
+        dispatch!(self, m => m.eval(state, tokens, fmt))
+    }
+
+    fn clone_state(&self, state: &NativeState) -> Result<NativeState> {
+        dispatch!(self, m => m.clone_state(state))
+    }
+
+    fn state_spec(&self) -> &[TensorSpec] {
+        dispatch!(self, m => m.state_spec())
+    }
+
+    fn snapshot(&self, state: &NativeState) -> Result<Vec<Vec<f32>>> {
+        dispatch!(self, m => m.snapshot(state))
+    }
+
+    fn restore(&self, tensors: Vec<Vec<f32>>) -> Result<NativeState> {
+        dispatch!(self, m => m.restore(tensors))
+    }
+}
+
+/// Resolves proxy- and LM-model names to [`NativeModel`]s; the native
+/// counterpart of the PJRT artifact directory.
 pub struct NativeEngine {
-    batch: usize,
+    /// `--batch` override; `None` keeps each workload's default
+    /// ([`DEFAULT_BATCH`] rows for the proxy, [`DEFAULT_LM_BATCH`] token
+    /// rows for LMs).
+    batch: Option<usize>,
     cache: Mutex<BTreeMap<String, Arc<NativeModel>>>,
 }
 
 impl NativeEngine {
     pub fn new() -> Arc<NativeEngine> {
-        Arc::new(NativeEngine { batch: DEFAULT_BATCH, cache: Mutex::new(BTreeMap::new()) })
+        Arc::new(NativeEngine { batch: None, cache: Mutex::new(BTreeMap::new()) })
     }
 
-    /// Engine whose models all use the given batch size (must be a
-    /// multiple of the MX block size — backward GEMMs reduce over it).
+    /// Engine whose models all use the given batch size. Workload
+    /// constraints apply at load: proxy batches must be a multiple of the
+    /// MX block size (backward GEMMs reduce over them); LM batches only
+    /// need to be positive (their weight gradients reduce over
+    /// batch·ctx, which the ctx constraint already aligns).
     pub fn with_batch(batch: usize) -> Result<Arc<NativeEngine>> {
-        // Validate eagerly via a canonical config so the error surfaces at
-        // construction, not at first load.
-        ProxyConfig { depth: 1, d_model: 32, batch, activation: Activation::Gelu, layernorm: true }
-            .validate()?;
-        Ok(Arc::new(NativeEngine { batch, cache: Mutex::new(BTreeMap::new()) }))
+        ensure!(batch >= 1, "batch must be >= 1");
+        Ok(Arc::new(NativeEngine { batch: Some(batch), cache: Mutex::new(BTreeMap::new()) }))
     }
 
+    /// Effective proxy batch size.
     pub fn batch(&self) -> usize {
-        self.batch
+        self.batch.unwrap_or(DEFAULT_BATCH)
     }
 }
 
@@ -66,8 +186,9 @@ impl Engine for NativeEngine {
         "native-cpu (pure-rust packed MX engine)".to_string()
     }
 
-    /// The canonical grid the experiment drivers sweep (any parseable
-    /// `proxy_*` name loads, listed or not).
+    /// The canonical grid the experiment drivers sweep: the proxy
+    /// name-grammar anchors plus the LM ladder (any parseable `proxy_*` /
+    /// `lm_*` name loads, listed or not).
     fn list(&self) -> Result<Vec<String>> {
         let mut names = vec![];
         for depth in [2usize, 3, 4] {
@@ -80,6 +201,7 @@ impl Engine for NativeEngine {
                 names.push(format!("proxy_{act}_{ln}_L4_D256"));
             }
         }
+        names.extend(LM_LADDER.iter().map(|s| s.to_string()));
         names.sort();
         names.dedup();
         Ok(names)
@@ -89,8 +211,13 @@ impl Engine for NativeEngine {
         if let Some(m) = self.cache.lock().unwrap().get(name) {
             return Ok(m.clone());
         }
-        let cfg = ProxyConfig::parse(name, self.batch)?;
-        let m = Arc::new(NativeModel::new(cfg)?);
+        let m = if name.starts_with("lm_") {
+            let cfg = LmConfig::parse(name, self.batch)?;
+            Arc::new(NativeModel::Lm(LmModel::named(cfg, name)?))
+        } else {
+            let cfg = ProxyConfig::parse(name, self.batch())?;
+            Arc::new(NativeModel::Proxy(ProxyModel::new(cfg)?))
+        };
         self.cache.lock().unwrap().insert(name.to_string(), m.clone());
         Ok(m)
     }
@@ -109,15 +236,37 @@ mod tests {
         assert!(Arc::ptr_eq(&a, &b), "second load must hit the cache");
         assert_eq!(a.name(), "proxy_gelu_ln_L2_D64");
         assert_eq!(a.n_params(), 2 * (2 * 64 * 256) + 2 * 64);
-        assert!(e.load("lm_olmo_12m").is_err(), "non-proxy names are rejected");
+        assert!(e.load("lm_nope").is_err(), "unparseable lm names are rejected");
+        assert!(e.load("bogus").is_err(), "non-proxy, non-lm names are rejected");
         assert!(e.list().unwrap().iter().all(|n| e.load(n).is_ok()), "every listed name loads");
     }
 
     #[test]
-    fn batch_validation() {
-        assert!(NativeEngine::with_batch(48).is_err(), "batch must be a multiple of 32");
+    fn engine_serves_the_lm_ladder() {
+        let e = NativeEngine::new();
+        let listed = e.list().unwrap();
+        for rung in LM_LADDER {
+            assert!(listed.contains(&rung.to_string()), "{rung} must be listed");
+            let m = e.load(rung).unwrap();
+            assert_eq!(m.name(), rung);
+            assert!(m.tokens_shape().is_some(), "LMs take token batches");
+            assert_eq!(m.vocab(), Some(512));
+        }
+        // Parametric LM names load without being listed.
+        let m = e.load("lm_L1_D32_H1_T32_V64").unwrap();
+        assert_eq!(m.tokens_shape(), Some((DEFAULT_LM_BATCH, 33)));
+    }
+
+    #[test]
+    fn batch_override_applies_per_workload() {
+        assert!(NativeEngine::with_batch(0).is_err(), "batch must be positive");
         let e = NativeEngine::with_batch(64).unwrap();
         assert_eq!(e.batch(), 64);
-        assert_eq!(e.load("proxy_relu_ln_L2_D32").unwrap().config().batch, 64);
+        assert_eq!(e.load("proxy_relu_ln_L2_D32").unwrap().as_proxy().unwrap().config().batch, 64);
+        assert_eq!(e.load("lm_L1_D32_H1_T32_V64").unwrap().tokens_shape(), Some((64, 33)));
+        // Proxy constraint (batch % 32) is enforced at load, not construction.
+        let e = NativeEngine::with_batch(8).unwrap();
+        assert!(e.load("proxy_relu_ln_L2_D32").is_err(), "proxy needs batch % 32 == 0");
+        assert!(e.load("lm_L1_D32_H1_T32_V64").is_ok(), "LM batches need not be block-aligned");
     }
 }

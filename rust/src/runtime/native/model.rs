@@ -10,13 +10,15 @@
 //! targets:  y = teacher(x) + σ·ε          loss: 0.5 · mean((A_L − y)²)
 //! ```
 //!
-//! Quantization sites, the straight-through LN-gamma quantizer, the
-//! backward-pass re-quantization (each gradient GEMM re-blocks along its
-//! own reduction axis) and the nine-element metrics vector all follow
-//! `python/compile/model.py`; the per-tensor-class element formats come
-//! from the runtime `fmt` vector ([`Fmt::from_vec`]) and the optimizer /
-//! LR / label noise from the `hyper` vector — so `detect.rs` /
-//! `intervene.rs` and every sweep driver work unchanged.
+//! The quantization sites, optimizer, metrics and gradient-bias
+//! diagnostics are the shared [`common`](super::common) core (one
+//! implementation for the proxy and the transformer LM): every projection
+//! runs through [`qlinear_fwd`]/[`qlinear_bwd`], the LN affine parameters
+//! through [`ln_gamma_site`] (§6.1, straight-through backward), and the
+//! per-tensor-class element formats come from the runtime `fmt` vector
+//! ([`Fmt::from_vec`]) with the optimizer / LR / label noise from `hyper`
+//! — so `detect.rs` / `intervene.rs` and every sweep driver work
+//! unchanged.
 //!
 //! Batches are a pure function of `(seed, step)` (deterministic Gaussian
 //! streams), so FP32 and MX trajectories — and every Fig. 7 intervention
@@ -24,19 +26,16 @@
 
 use anyhow::{anyhow, bail, ensure, Result};
 
-use super::ops::{
-    act_bwd, act_fwd, layernorm_bwd, layernorm_fwd, qgemm, quantize_site, Activation,
+use super::common::{
+    decode_args, global_norm, grad_bias, ln_gamma_site, optimizer_step, qlinear_bwd,
+    qlinear_bwd_pre, qlinear_fwd, qlinear_fwd_pre, quantize_bwd_act, quantize_fwd_act, Hyper,
+    NativeState,
 };
+use super::ops::{act_bwd, act_fwd, layernorm_bwd, layernorm_fwd, Activation};
 use crate::formats::gemm::transpose;
-use crate::formats::packed::packed_qdq;
-use crate::formats::spec::{hyper_idx, Fmt, FormatId, BLOCK_SIZE};
+use crate::formats::spec::{Fmt, BLOCK_SIZE};
 use crate::runtime::{Backend, Metrics, StepArgs, TensorSpec};
 use crate::util::rng::Xoshiro256;
-
-/// Adam constants (python/compile/formats.py).
-const ADAM_B1: f32 = 0.9;
-const ADAM_B2: f32 = 0.95;
-const ADAM_EPS: f32 = 1e-8;
 
 /// Proxy-model hyper-shape — the rust mirror of `proxy.ProxyConfig`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -53,8 +52,7 @@ impl ProxyConfig {
     /// SwiGLU (parameter parity with 4·D, Shazeer 2020).
     pub fn hidden(&self) -> usize {
         if self.activation == Activation::Swiglu {
-            let h = ((self.d_model as f64 * 8.0 / 3.0 / 32.0).round() as usize) * 32;
-            h.max(32)
+            swiglu_hidden(self.d_model)
         } else {
             4 * self.d_model
         }
@@ -154,11 +152,11 @@ impl ProxyConfig {
     }
 }
 
-/// Host-resident training state: flat f32 tensors in state-spec order
-/// (student params ‖ adam-m ‖ adam-v ‖ teacher params).
-#[derive(Debug, Clone)]
-pub struct NativeState {
-    pub tensors: Vec<Vec<f32>>,
+/// SwiGLU hidden width at parameter parity with a 4·D dense MLP:
+/// ~8/3·D rounded to the MX block size (Shazeer 2020).
+pub fn swiglu_hidden(d_model: usize) -> usize {
+    let h = ((d_model as f64 * 8.0 / 3.0 / 32.0).round() as usize) * 32;
+    h.max(32)
 }
 
 /// Per-layer forward intermediates kept for the backward pass.
@@ -193,15 +191,16 @@ struct ParamsView<'a> {
     ln: Option<&'a [f32]>,
 }
 
-/// The native [`Backend`]: one proxy model, executable on a bare machine.
-pub struct NativeModel {
+/// The native proxy [`Backend`]: one residual-MLP student–teacher model,
+/// executable on a bare machine.
+pub struct ProxyModel {
     cfg: ProxyConfig,
     name: String,
     spec: Vec<TensorSpec>,
 }
 
-impl NativeModel {
-    pub fn new(cfg: ProxyConfig) -> Result<NativeModel> {
+impl ProxyModel {
+    pub fn new(cfg: ProxyConfig) -> Result<ProxyModel> {
         cfg.validate()?;
         let mut spec = Vec::new();
         for prefix in ["p", "m", "v"] {
@@ -220,7 +219,7 @@ impl NativeModel {
                 dtype: crate::runtime::Dtype::F32,
             });
         }
-        Ok(NativeModel { name: cfg.name(), cfg, spec })
+        Ok(ProxyModel { name: cfg.name(), cfg, spec })
     }
 
     pub fn config(&self) -> &ProxyConfig {
@@ -228,7 +227,7 @@ impl NativeModel {
     }
 
     /// Number of per-set parameter tensors (w1, w2[, wg][, ln]).
-    fn k(&self) -> usize {
+    pub(super) fn k(&self) -> usize {
         self.cfg.param_names().len()
     }
 
@@ -276,7 +275,6 @@ impl NativeModel {
     /// intermediates for the backward pass (the teacher skips them).
     fn forward(&self, p: &ParamsView, x: &[f32], fmt: &Fmt, keep: bool) -> ForwardPass {
         let (l, d, hd, b) = (self.cfg.depth, self.cfg.d_model, self.cfg.hidden(), self.cfg.batch);
-        let bump = fmt.scale_bump;
         let mut a = x.to_vec();
         let mut caches = Vec::with_capacity(if keep { l } else { 0 });
         let mut ln_fracs = Vec::with_capacity(l);
@@ -289,47 +287,28 @@ impl NativeModel {
             let (z, xhat, inv_std, gamma_q, ln_frac) = match p.ln {
                 Some(ln) => {
                     let g = &ln[k * d..(k + 1) * d];
-                    let on = fmt.quant_ln && fmt.quant_fwd;
-                    let eff = if on { fmt.w_fwd } else { FormatId::Fp32 };
-                    let (gq, clamped) = packed_qdq(g, eff, bump);
-                    let frac = clamped as f32 / d as f32;
+                    let (gq, frac) = ln_gamma_site(g, fmt);
                     let (z, xhat, inv_std) = layernorm_fwd(&a, b, d, &gq);
                     (z, xhat, inv_std, gq, frac)
                 }
                 None => (a.clone(), Vec::new(), Vec::new(), Vec::new(), 0.0),
             };
 
-            // -- h = Q(z) · Q(W1), gate = Q(z) · Q(Wg) --
-            let mut h = vec![0.0f32; b * hd];
-            let mut gate: Option<Vec<f32>> = None;
-            let fz;
-            {
-                let (qz, f) = quantize_site(&z, b, d, fmt.a_fwd, fmt.quant_fwd, bump);
-                fz = f;
-                let w1t = transpose(w1k, d, hd); // [H,D]
-                let (qw1, _) = quantize_site(&w1t, hd, d, fmt.w_fwd, fmt.quant_fwd, bump);
-                qgemm(&qz, &qw1, b, hd, d, &mut h);
-                if let Some(wg) = p.wg {
+            // -- h = Q(z) · Q(W1), gate = Q(z) · Q(Wg): z is encoded once
+            // and shared by both projections --
+            let (h, gate, fz) = {
+                let (qz, fz) = quantize_fwd_act(&z, b, d, fmt);
+                let h = qlinear_fwd_pre(&qz, w1k, b, d, hd, fmt);
+                let gate = p.wg.map(|wg| {
                     let wgk = &wg[k * d * hd..(k + 1) * d * hd];
-                    let wgt = transpose(wgk, d, hd);
-                    let (qwg, _) = quantize_site(&wgt, hd, d, fmt.w_fwd, fmt.quant_fwd, bump);
-                    let mut g = vec![0.0f32; b * hd];
-                    qgemm(&qz, &qwg, b, hd, d, &mut g);
-                    gate = Some(g);
-                }
-            }
+                    qlinear_fwd_pre(&qz, wgk, b, d, hd, fmt)
+                });
+                (h, gate, fz)
+            };
             let phi = act_fwd(self.cfg.activation, &h, gate.as_deref());
 
             // -- out = Q(φ) · Q(W2); A_k = A_{k-1} + out --
-            let mut outk = vec![0.0f32; b * d];
-            let fphi;
-            {
-                let (qphi, f) = quantize_site(&phi, b, hd, fmt.a_fwd, fmt.quant_fwd, bump);
-                fphi = f;
-                let w2t = transpose(w2k, hd, d); // [D,H]
-                let (qw2, _) = quantize_site(&w2t, d, hd, fmt.w_fwd, fmt.quant_fwd, bump);
-                qgemm(&qphi, &qw2, b, d, hd, &mut outk);
-            }
+            let (outk, fphi) = qlinear_fwd(&phi, w2k, b, hd, d, fmt);
             let a_next: Vec<f32> = a.iter().zip(&outk).map(|(&x0, &y)| x0 + y).collect();
 
             ln_fracs.push(ln_frac);
@@ -355,8 +334,6 @@ impl NativeModel {
         fmt: &Fmt,
     ) -> Vec<Vec<f32>> {
         let (l, d, hd, b) = (self.cfg.depth, self.cfg.d_model, self.cfg.hidden(), self.cfg.batch);
-        let bump = fmt.scale_bump;
-        let (en, gf, wf, af) = (fmt.quant_bwd, fmt.g_bwd, fmt.w_bwd, fmt.a_bwd);
         let mut g_w1 = vec![0.0f32; l * d * hd];
         let mut g_w2 = vec![0.0f32; l * hd * d];
         let mut g_wg = p.wg.map(|_| vec![0.0f32; l * d * hd]);
@@ -369,52 +346,45 @@ impl NativeModel {
             let w2k = &p.w2[k * hd * d..(k + 1) * hd * d]; // [H,D]
 
             // -- through out = φ·W2:  dφ = Q(G)·Q(W2)ᵀ, dW2 = Q(φ)ᵀ·Q(G) --
-            let mut dphi = vec![0.0f32; b * hd];
-            {
-                let (qg, _) = quantize_site(&da, b, d, gf, en, bump);
-                let (qw2, _) = quantize_site(w2k, hd, d, wf, en, bump); // blocks along D
-                qgemm(&qg, &qw2, b, hd, d, &mut dphi);
-
-                let phit = transpose(&c.phi, b, hd); // [H,B]
-                let gt = transpose(&da, b, d); // [D,B]
-                let (qphi, _) = quantize_site(&phit, hd, b, af, en, bump);
-                let (qgt, _) = quantize_site(&gt, d, b, gf, en, bump);
-                qgemm(&qphi, &qgt, hd, d, b, &mut g_w2[k * hd * d..(k + 1) * hd * d]);
-            }
+            let g_w2k = &mut g_w2[k * hd * d..(k + 1) * hd * d];
+            let dphi = qlinear_bwd(&da, &c.phi, w2k, b, hd, d, fmt, g_w2k);
 
             // -- through φ --
             let (dh, dgate) = act_bwd(self.cfg.activation, &c.h, c.gate.as_deref(), &dphi);
 
-            // -- through h = z·W1:  dz = Q(dh)·Q(W1)ᵀ, dW1 = Q(z)ᵀ·Q(dh) --
-            let mut dz = vec![0.0f32; b * d];
-            {
-                let (qdh, _) = quantize_site(&dh, b, hd, gf, en, bump);
-                let (qw1, _) = quantize_site(w1k, d, hd, wf, en, bump); // blocks along H
-                qgemm(&qdh, &qw1, b, d, hd, &mut dz);
-
-                let zt = transpose(&c.z, b, d); // [D,B]
-                let dht = transpose(&dh, b, hd); // [H,B]
-                let (qz, _) = quantize_site(&zt, d, b, af, en, bump);
-                let (qdht, _) = quantize_site(&dht, hd, b, gf, en, bump);
-                qgemm(&qz, &qdht, d, hd, b, &mut g_w1[k * d * hd..(k + 1) * d * hd]);
-            }
+            // -- through h = z·W1:  dz = Q(dh)·Q(W1)ᵀ, dW1 = Q(z)ᵀ·Q(dh);
+            // zᵀ is re-blocked along the batch axis and encoded once,
+            // shared with the gate-projection gradient --
+            let zt = transpose(&c.z, b, d);
+            let qzt = quantize_bwd_act(&zt, d, b, fmt);
+            let mut dz = qlinear_bwd_pre(
+                &dh,
+                &qzt,
+                w1k,
+                b,
+                d,
+                hd,
+                fmt,
+                &mut g_w1[k * d * hd..(k + 1) * d * hd],
+            );
 
             // -- SwiGLU gate projection --
             if let (Some(dgate), Some(wg)) = (dgate, p.wg) {
                 let wgk = &wg[k * d * hd..(k + 1) * d * hd];
-                let mut dz_gate = vec![0.0f32; b * d];
-                let (qdg, _) = quantize_site(&dgate, b, hd, gf, en, bump);
-                let (qwg, _) = quantize_site(wgk, d, hd, wf, en, bump);
-                qgemm(&qdg, &qwg, b, d, hd, &mut dz_gate);
+                let g_wg_buf = g_wg.as_mut().expect("swiglu grads");
+                let dz_gate = qlinear_bwd_pre(
+                    &dgate,
+                    &qzt,
+                    wgk,
+                    b,
+                    d,
+                    hd,
+                    fmt,
+                    &mut g_wg_buf[k * d * hd..(k + 1) * d * hd],
+                );
                 for (a0, v) in dz.iter_mut().zip(&dz_gate) {
                     *a0 += v;
                 }
-                let zt = transpose(&c.z, b, d);
-                let dgt = transpose(&dgate, b, hd);
-                let (qz, _) = quantize_site(&zt, d, b, af, en, bump);
-                let (qdgt, _) = quantize_site(&dgt, hd, b, gf, en, bump);
-                let g_wg_buf = g_wg.as_mut().expect("swiglu grads");
-                qgemm(&qz, &qdgt, d, hd, b, &mut g_wg_buf[k * d * hd..(k + 1) * d * hd]);
             }
 
             // -- through LN (straight-through gamma) + the residual skip --
@@ -452,23 +422,24 @@ impl NativeModel {
         ((0.5 * acc / n) as f32, dout)
     }
 
-    /// Decode `StepArgs` into (fmt, x, target) and run the student forward.
-    fn prepare(&self, state: &NativeState, args: &StepArgs) -> Result<(Fmt, Vec<f32>, Vec<f32>)> {
+    /// Decode `StepArgs` into (fmt, hyper, x, target) and run the teacher.
+    fn prepare(
+        &self,
+        state: &NativeState,
+        args: &StepArgs,
+    ) -> Result<(Fmt, Hyper, Vec<f32>, Vec<f32>)> {
         ensure!(args.tokens.is_none(), "proxy backend takes no tokens");
-        let fmt = Fmt::from_vec(&args.fmt)
-            .ok_or_else(|| anyhow!("undecodable fmt vector {:?}", args.fmt))?;
-        ensure!(args.hyper.len() >= hyper_idx::HYPER_LEN, "hyper vector too short");
-        let label_noise = args.hyper[hyper_idx::LABEL_NOISE];
-        let (x, noise) = self.batch_inputs(args.seed, args.step, label_noise);
+        let (fmt, hyper) = decode_args(args)?;
+        let (x, noise) = self.batch_inputs(args.seed, args.step, hyper.label_noise);
         let t = self.forward(&self.teacher(state), &x, &Fmt::fp32(), false);
         let target: Vec<f32> = t.out.iter().zip(&noise).map(|(&o, &e)| o + e).collect();
-        Ok((fmt, x, target))
+        Ok((fmt, hyper, x, target))
     }
 
     /// Training loss at the current parameters for (seed, step) — the
     /// forward half of [`Backend::step`], exposed for gradient checks.
     pub fn loss(&self, state: &NativeState, args: &StepArgs) -> Result<f32> {
-        let (fmt, x, target) = self.prepare(state, args)?;
+        let (fmt, _, x, target) = self.prepare(state, args)?;
         let fwd = self.forward(&self.student(state), &x, &fmt, false);
         Ok(Self::loss_and_dout(&fwd.out, &target).0)
     }
@@ -476,56 +447,11 @@ impl NativeModel {
     /// Analytic parameter gradients (in `w1, w2[, wg][, ln]` order) at the
     /// current parameters — exposed for finite-difference gradient checks.
     pub fn grads(&self, state: &NativeState, args: &StepArgs) -> Result<Vec<Vec<f32>>> {
-        let (fmt, x, target) = self.prepare(state, args)?;
+        let (fmt, _, x, target) = self.prepare(state, args)?;
         let p = self.student(state);
         let fwd = self.forward(&p, &x, &fmt, true);
         let (_, dout) = Self::loss_and_dout(&fwd.out, &target);
         Ok(self.backward(&p, &fwd, dout, &fmt))
-    }
-
-    /// Fused Adam / SGD(momentum) update for one tensor; returns Σ(Δp)².
-    fn update_tensor(
-        p: &mut [f32],
-        g: &[f32],
-        m: &mut [f32],
-        v: &mut [f32],
-        t: f32,
-        lr: f32,
-        sgd: bool,
-        momentum: f32,
-    ) -> f64 {
-        let mut upd_sq = 0.0f64;
-        if sgd {
-            for i in 0..p.len() {
-                m[i] = momentum * m[i] + g[i];
-                let step = lr * m[i];
-                upd_sq += (step as f64) * (step as f64);
-                p[i] -= step;
-            }
-        } else {
-            let bias1 = 1.0 - ADAM_B1.powf(t);
-            let bias2 = 1.0 - ADAM_B2.powf(t);
-            for i in 0..p.len() {
-                m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
-                v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
-                let mhat = m[i] / bias1;
-                let vhat = v[i] / bias2;
-                let step = lr * (mhat / (vhat.sqrt() + ADAM_EPS));
-                upd_sq += (step as f64) * (step as f64);
-                p[i] -= step;
-            }
-        }
-        upd_sq
-    }
-
-    fn global_norm(tensors: &[Vec<f32>]) -> f32 {
-        let mut acc = 0.0f64;
-        for t in tensors {
-            for &v in t {
-                acc += (v as f64) * (v as f64);
-            }
-        }
-        (acc.sqrt()) as f32
     }
 
     fn do_step(
@@ -534,10 +460,7 @@ impl NativeModel {
         args: &StepArgs,
         paired: bool,
     ) -> Result<(NativeState, Metrics)> {
-        let (fmt, x, target) = self.prepare(&state, args)?;
-        let lr = args.hyper[hyper_idx::LR];
-        let sgd = args.hyper[hyper_idx::OPT_MODE] > 0.5;
-        let momentum = args.hyper[hyper_idx::MOMENTUM];
+        let (fmt, hyper, x, target) = self.prepare(&state, args)?;
 
         // Forward + backward under the active precision scheme.
         let (loss, fwd, grads) = {
@@ -547,7 +470,7 @@ impl NativeModel {
             let grads = self.backward(&p, &fwd, dout, &fmt);
             (loss, fwd, grads)
         };
-        let grad_norm = Self::global_norm(&grads);
+        let grad_norm = global_norm(&grads);
 
         // Paired mode: FP32 gradient at the same parameter point (Fig. 4).
         let (eps_ratio, cosine) = if paired {
@@ -556,38 +479,13 @@ impl NativeModel {
             let fwd0 = self.forward(&p, &x, &fp32, true);
             let (_, dout0) = Self::loss_and_dout(&fwd0.out, &target);
             let g_ref = self.backward(&p, &fwd0, dout0, &fp32);
-            let mut diff_sq = 0.0f64;
-            let mut dot = 0.0f64;
-            for (gq, gr) in grads.iter().zip(&g_ref) {
-                for (&a0, &b0) in gq.iter().zip(gr) {
-                    let (a0, b0) = (a0 as f64, b0 as f64);
-                    diff_sq += (a0 - b0) * (a0 - b0);
-                    dot += a0 * b0;
-                }
-            }
-            let ref_norm = Self::global_norm(&g_ref) as f64;
-            let q_norm = grad_norm as f64;
-            (
-                (diff_sq.sqrt() / (ref_norm + 1e-30)) as f32,
-                (dot / (q_norm * ref_norm + 1e-30)) as f32,
-            )
+            grad_bias(&grads, &g_ref)
         } else {
             (0.0, 0.0)
         };
 
         // Optimizer update (master weights and moments stay f32).
-        let k = self.k();
-        let t = args.step as f32 + 1.0;
-        let mut upd_sq = 0.0f64;
-        for (i, g) in grads.iter().enumerate() {
-            let (head, tail) = state.tensors.split_at_mut(k + i);
-            let (mid, tail2) = tail.split_at_mut(k);
-            let p = &mut head[i];
-            let m = &mut mid[0];
-            let v = &mut tail2[0];
-            upd_sq += Self::update_tensor(p, g, m, v, t, lr, sgd, momentum);
-        }
-        let param_norm = Self::global_norm(&state.tensors[..k]);
+        let (update_norm, param_norm) = optimizer_step(&mut state, &grads, self.k(), &hyper);
 
         let l = self.cfg.depth as f32;
         let met = Metrics {
@@ -596,7 +494,7 @@ impl NativeModel {
             ln_frac_first: fwd.ln_fracs.first().copied().unwrap_or(0.0),
             ln_frac_mean: fwd.ln_fracs.iter().sum::<f32>() / l,
             act_frac_mean: fwd.act_fracs.iter().sum::<f32>() / l,
-            update_norm: (upd_sq.sqrt()) as f32,
+            update_norm,
             param_norm,
             eps_ratio,
             cosine,
@@ -605,7 +503,7 @@ impl NativeModel {
     }
 }
 
-impl Backend for NativeModel {
+impl Backend for ProxyModel {
     type State = NativeState;
 
     fn name(&self) -> &str {
@@ -707,10 +605,10 @@ impl Backend for NativeModel {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::formats::spec::Fmt;
+    use crate::formats::spec::{hyper_idx, Fmt, FormatId};
 
-    fn tiny() -> NativeModel {
-        NativeModel::new(ProxyConfig {
+    fn tiny() -> ProxyModel {
+        ProxyModel::new(ProxyConfig {
             depth: 2,
             d_model: 32,
             batch: 32,

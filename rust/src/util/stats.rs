@@ -46,13 +46,22 @@ impl Summary {
     }
 }
 
-/// Percentile with linear interpolation (q in [0, 1]); input need not be sorted.
+/// Percentile with linear interpolation (q in [0, 1]); input need not be
+/// sorted. NaNs (diverged-run losses) sort above every number — via
+/// `f64::total_cmp`, with both NaN sign-bit variants canonicalized to the
+/// top — instead of panicking the comparator, so low/mid quantiles over
+/// an unstable sweep stay finite and meaningful.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| match (a.is_nan(), b.is_nan()) {
+        (true, true) => std::cmp::Ordering::Equal,
+        (true, false) => std::cmp::Ordering::Greater,
+        (false, true) => std::cmp::Ordering::Less,
+        (false, false) => a.total_cmp(b),
+    });
     let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -118,6 +127,19 @@ mod tests {
         assert_eq!(percentile(&xs, 1.0), 5.0);
         assert_eq!(percentile(&xs, 0.5), 3.0);
         assert_eq!(percentile(&xs, 0.25), 2.0);
+    }
+
+    #[test]
+    fn percentile_survives_nan_losses() {
+        // Diverged runs emit NaN losses; analysis over such a sweep must
+        // not panic, and finite quantiles must come from the finite part.
+        let xs = [2.0, f64::NAN, 1.0, -f64::NAN, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.25), 2.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert!(percentile(&xs, 1.0).is_nan(), "top quantile lands on the NaN tail");
+        let all_nan = [f64::NAN, f64::NAN];
+        assert!(percentile(&all_nan, 0.5).is_nan());
     }
 
     #[test]

@@ -215,6 +215,58 @@ fn native_checkpoint_roundtrip_and_ring() {
 }
 
 #[test]
+fn native_lm_runner_trains_and_evals_end_to_end() {
+    // The transformer-LM workload through the full coordinator: Sweeper
+    // builds the Zipf–Markov corpus from the model's vocab, Runner feeds
+    // (seed, step) token batches, and the Backend eval returns a finite
+    // held-out validation loss — all fully quantized, no PJRT.
+    let sweeper = Sweeper::new(NativeEngine::with_batch(4).unwrap());
+    let runner = sweeper.runner("lm_L2_D64_H2_T32_V256").unwrap();
+    assert!(runner.corpus.is_some(), "LM runner must build a corpus");
+    let mut cfg =
+        RunConfig::new("native_lm_e2e", Fmt::full(FormatId::E4M3, FormatId::E4M3), 2e-3, 10);
+    cfg.seed = 1;
+    let out = runner.run(&cfg).unwrap();
+    assert_eq!(out.log.rows.len(), 10);
+    for r in &out.log.rows {
+        assert!(r.m.loss.is_finite() && r.m.grad_norm.is_finite(), "step {}", r.step);
+        assert!(r.m.param_norm > 0.0 && r.m.update_norm > 0.0);
+    }
+    let state = out.final_state.unwrap();
+    let corpus = runner.corpus.clone().unwrap();
+    let (b, l) = runner.backend.tokens_shape().unwrap();
+    let toks = corpus.batch(mxstab::data::HELD_OUT_SEED, 0, b, l);
+    let val = runner.backend.eval(&state, &toks, &cfg.fmt.to_vec()).unwrap();
+    assert!(val.is_finite(), "validation loss {val}");
+}
+
+#[test]
+fn native_lm_checkpoint_restores_bitwise() {
+    let sweeper = Sweeper::new(NativeEngine::with_batch(2).unwrap());
+    let runner = sweeper.runner("lm_L1_D32_H1_T32_V64").unwrap();
+    let backend = runner.backend.clone();
+    let dir = std::env::temp_dir().join(format!("mxstab_lmckpt_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let store = CheckpointStore::new(&dir, 1);
+
+    let cfg = RunConfig::new("lmckpt", Fmt::fp32(), 1e-3, 4);
+    let out = runner.run(&cfg).unwrap();
+    let state = out.final_state.unwrap();
+    store.save(backend.as_ref(), "lm0", 4, &state).unwrap();
+    let restored = store.load(backend.as_ref(), "lm0", 4).unwrap();
+    assert_eq!(restored.tensors, state.tensors, "bitwise LM state roundtrip");
+
+    // Restored state must continue training identically to the original.
+    let mut cont = RunConfig::new("lmcont", Fmt::fp32(), 1e-3, 7);
+    cont.seed = cfg.seed;
+    let a = runner.run_from(&cont, state, 4).unwrap();
+    let b = runner.run_from(&cont, restored, 4).unwrap();
+    let bits = |l: &RunLog| l.rows.iter().map(|r| r.m.loss.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&a.log), bits(&b.log));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn native_sweeper_runs_jobs_in_order() {
     let sweeper = Sweeper::new(NativeEngine::with_batch(32).unwrap());
     let jobs: Vec<Job> = [
