@@ -1,22 +1,29 @@
-//! L1 bench: MX quantize→dequantize and matvec throughput.
+//! L1 bench: MX quantize→dequantize and matvec throughput, with
+//! machine-readable output.
 //!
 //! Compares three implementations of the same bit-exact semantics:
 //!   1. `mx_qdq`        — the scalar reference oracle (allocates, single
 //!                        thread, per-element band math),
 //!   2. packed codec    — `QdqScratch::qdq_into` (LUT codes + shared-scale
-//!                        exponents, thread-parallel, allocation-free),
+//!                        exponents, pool-parallel, allocation-free), plus
+//!                        the split encode (`PackedVec::encode`) / decode
+//!                        (`decode_into`) halves,
 //!   3. (with `--features xla` + artifacts) the compiled Pallas/HLO kernel
 //!       via PJRT CPU — the *emulation* path; TPU projections live in
 //!       DESIGN.md §Perf.
 //!
-//! The packed/scalar ratio printed at n = 2^20 is the headline number the
-//! repo's acceptance bar tracks (≥5× on a multicore host); bitwise
-//! equality of the two paths is asserted here before timing and
-//! property-tested in `tests/packed_roundtrip.rs`.
+//! The packed/scalar ratio at n = 2^20 is the headline number the repo's
+//! acceptance bar tracks (≥5× on a multicore host); bitwise equality of
+//! the two paths is asserted here before timing and property-tested in
+//! `tests/packed_roundtrip.rs`. Results are serialized to
+//! `BENCH_quantizer.json` at the repo root (per-format encode/decode/qdq
+//! MB/s + the headline before/after ratio vs the scalar reference).
+//! `MXSTAB_BENCH_SMOKE=1` shrinks the sizes for CI.
 
-use mxstab::bench::Bencher;
+use mxstab::bench::{jnum, smoke_mode, write_json, Bencher};
 use mxstab::formats::spec::FormatId;
 use mxstab::formats::{dot, gemm, mx_qdq, packed_qdq, PackedMatrix, PackedVec, QdqScratch};
+use mxstab::util::json::Json;
 use mxstab::util::rng::Xoshiro256;
 
 fn main() -> anyhow::Result<()> {
@@ -25,8 +32,10 @@ fn main() -> anyhow::Result<()> {
 
     let mut rng = Xoshiro256::seed_from(0);
     let formats = [FormatId::E4M3, FormatId::E5M2, FormatId::E2M3, FormatId::E3M2];
+    let sizes: &[usize] = if smoke_mode() { &[4096] } else { &[4096, 65536, 1 << 20] };
 
-    for &n in &[4096usize, 65536, 1 << 20] {
+    let mut qdq_rows = Vec::new();
+    for &n in sizes {
         let x = rng.normal_vec(n);
         let bytes = (n * 4) as f64;
         let mut out = vec![0.0f32; n];
@@ -58,6 +67,24 @@ fn main() -> anyhow::Result<()> {
                     rs.mean_s / rp.mean_s
                 ))
             );
+            // Split halves: encode-only and decode-only throughput.
+            let re = b.run(&format!("encode/{}/{}", id.name(), n), || {
+                std::hint::black_box(PackedVec::encode(std::hint::black_box(&x), id, false));
+            });
+            let pv = PackedVec::encode(&x, id, false);
+            let rd = b.run(&format!("decode/{}/{}", id.name(), n), || {
+                pv.decode_into(&mut out);
+                std::hint::black_box(&out);
+            });
+            qdq_rows.push(Json::obj(vec![
+                ("format", Json::from(id.name())),
+                ("n", Json::Num(n as f64)),
+                ("qdq_mb_per_s", jnum(bytes / rp.mean_s / 1e6)),
+                ("encode_mb_per_s", jnum(bytes / re.mean_s / 1e6)),
+                ("decode_mb_per_s", jnum(bytes / rd.mean_s / 1e6)),
+                ("scalar_mb_per_s", jnum(bytes / rs.mean_s / 1e6)),
+                ("speedup_vs_scalar", jnum(rs.mean_s / rp.mean_s)),
+            ]));
         }
         // bf16 has no packed form; keep the scalar number for context.
         let r = b.run(&format!("scalar/bf16/{}", n), || {
@@ -67,39 +94,46 @@ fn main() -> anyhow::Result<()> {
         println!();
     }
 
-    // Headline number: packed codec vs scalar mx_qdq at n = 2^20, e4m3.
-    {
-        let n = 1 << 20;
+    // Headline number: packed codec vs scalar mx_qdq at the largest size,
+    // e4m3 (n = 2^20 in full mode).
+    let headline = {
+        let n = *sizes.last().unwrap();
         let x = rng.normal_vec(n);
         let mut out = vec![0.0f32; n];
         let mut scratch = QdqScratch::new();
-        let rs = b.run("headline/scalar/e4m3/1M", || {
+        let rs = b.run("headline/scalar/e4m3", || {
             std::hint::black_box(mx_qdq(std::hint::black_box(&x), FormatId::E4M3, false));
         });
-        let rp = b.run("headline/packed/e4m3/1M", || {
+        let rp = b.run("headline/packed/e4m3", || {
             scratch.qdq_into(std::hint::black_box(&x), &mut out, FormatId::E4M3, false);
             std::hint::black_box(&out);
         });
         println!(
-            "headline: packed codec is {:.1}x the scalar mx_qdq at n=2^20 \
+            "headline: packed codec is {:.1}x the scalar mx_qdq at n={n} \
              (scalar {:.3} ms, packed {:.3} ms)\n",
             rs.mean_s / rp.mean_s,
             rs.mean_s * 1e3,
             rp.mean_s * 1e3
         );
-    }
+        Json::obj(vec![
+            ("n", Json::Num(n as f64)),
+            ("scalar_ms", jnum(rs.mean_s * 1e3)),
+            ("packed_ms", jnum(rp.mean_s * 1e3)),
+            ("speedup_vs_scalar", jnum(rs.mean_s / rp.mean_s)),
+        ])
+    };
 
     // Matvec: allocation-per-row scalar reference vs the packed engine.
-    {
-        let (rows, cols) = (256, 4096);
+    let matvec_rows = {
+        let (rows, cols) = if smoke_mode() { (64, 512) } else { (256, 4096) };
         let a = rng.normal_vec(rows * cols);
         let x = rng.normal_vec(cols);
         let flops = (2 * rows * cols) as f64;
-        let rr = b.run("matvec/scalar-ref/256x4096", || {
+        let rr = b.run(&format!("matvec/scalar-ref/{rows}x{cols}"), || {
             std::hint::black_box(dot::mx_matvec_ref(&a, rows, cols, &x, FormatId::E4M3));
         });
         println!("{}", rr.report_line(&format!("{:.2} GFLOP/s(emu)", flops / rr.mean_s / 1e9)));
-        let rp = b.run("matvec/packed/256x4096", || {
+        let rp = b.run(&format!("matvec/packed/{rows}x{cols}"), || {
             std::hint::black_box(dot::mx_matvec(&a, rows, cols, &x, FormatId::E4M3));
         });
         println!(
@@ -113,12 +147,34 @@ fn main() -> anyhow::Result<()> {
         // Steady-state: operands pre-encoded once (the sweep-loop shape).
         let am = PackedMatrix::encode(&a, rows, cols, FormatId::E4M3, false);
         let xv = PackedVec::encode(&x, FormatId::E4M3, false);
-        let re = b.run("matvec/packed-preenc/256x4096", || {
+        let re = b.run(&format!("matvec/packed-preenc/{rows}x{cols}"), || {
             std::hint::black_box(gemm::matvec(&am, &xv));
         });
         println!("{}", re.report_line(&format!("{:.2} GFLOP/s(emu)", flops / re.mean_s / 1e9)));
         println!();
-    }
+        Json::Arr(vec![
+            Json::obj(vec![
+                ("name", Json::from(format!("matvec/{rows}x{cols}"))),
+                ("gflops", jnum(flops / rp.mean_s / 1e9)),
+                ("preencoded_gflops", jnum(flops / re.mean_s / 1e9)),
+                ("scalar_ref_gflops", jnum(flops / rr.mean_s / 1e9)),
+                ("speedup_vs_scalar", jnum(rr.mean_s / rp.mean_s)),
+            ]),
+        ])
+    };
+
+    let report = Json::obj(vec![
+        ("bench", Json::from("quantizer")),
+        ("schema", Json::Num(1.0)),
+        ("measured", Json::Bool(true)),
+        ("smoke_mode", Json::Bool(smoke_mode())),
+        ("pool_parallelism", Json::Num(mxstab::util::pool::parallelism() as f64)),
+        ("headline", headline),
+        ("qdq", Json::Arr(qdq_rows)),
+        ("matvec", matvec_rows),
+    ]);
+    let path = write_json("BENCH_quantizer.json", &report)?;
+    println!("wrote {}", path.display());
 
     #[cfg(feature = "xla")]
     bench_hlo_kernel(&b, &mut rng)?;

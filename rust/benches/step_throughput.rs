@@ -1,54 +1,73 @@
-//! L3 bench: end-to-end training-step throughput.
+//! L3 bench: end-to-end training-step throughput, with machine-readable
+//! output.
 //!
-//! Three faces:
-//! * Always available — the pure-rust emulated **forward** GEMM over the
-//!   packed MX engine: per-layer `C = A·Bᵀ` block GEMMs at the paper's
-//!   proxy/LM shapes.
-//! * Always available — the **backward** hot path: the transposed/backward
-//!   GEMM variants (`dW = Xᵀ·G` re-blocked along the batch axis, mixed
-//!   E4M3×E5M2 operands) and the **full native training step** (fwd +
-//!   bwd + Adam + metrics) at the proxy shape — steps/s and emulated
-//!   GFLOP/s for the path every native sweep rides.
-//! * With `--features xla` + artifacts — compiled-bundle step throughput
-//!   per precision scheme.
+//! Every section measures the current execution layer (panel-decoded GEMM
+//! kernels, persistent worker pool, step-scoped operand cache) *and* the
+//! pre-PR baseline path in the same run — the row-wise LUT kernel
+//! ([`gemm_ref`]) with per-call thread spawns and the operand cache
+//! disabled — so the before/after speedup is measured on the same
+//! machine, same build, same inputs. Bitwise parity between the two GEMM
+//! paths is asserted before any timing.
+//!
+//! Results are printed human-readably and serialized to
+//! `BENCH_step_throughput.json` at the repo root (headline GEMM GFLOP/s +
+//! speedup, backward-GEMM rows, per-workload native step ms for the proxy
+//! and the transformer LM). `MXSTAB_BENCH_SMOKE=1` shrinks every shape
+//! for CI; `MXSTAB_BENCH_BUDGET_MS` bounds per-row time.
+//!
+//! With `--features xla` + artifacts, compiled-bundle step throughput is
+//! also reported (not part of the JSON — PJRT numbers depend on external
+//! artifacts).
 
-use mxstab::bench::Bencher;
-use mxstab::formats::gemm::{gemm, PackedMatrix};
-use mxstab::formats::spec::FormatId;
+use mxstab::bench::{jnum, smoke_mode, write_json, Bencher};
+use mxstab::formats::gemm::{gemm, gemm_ref, set_reference_kernel, PackedMatrix};
+use mxstab::formats::spec::{Fmt, FormatId};
+use mxstab::runtime::native::NativeEngine;
+use mxstab::runtime::{Backend, Engine, StepArgs};
+use mxstab::util::json::Json;
 use mxstab::util::rng::Xoshiro256;
 
 fn main() -> anyhow::Result<()> {
     let mut b = Bencher::default();
     b.warmup = 2;
 
-    println!("== packed MX GEMM throughput (pure rust, no artifacts) ==\n");
-    let mut rng = Xoshiro256::seed_from(0);
-    // (m, n, k): proxy-MLP layer, LM attention-ish block, LM FFN.
-    for &(m, n, k) in &[(128usize, 128usize, 512usize), (256, 256, 1024), (512, 2048, 512)] {
-        let a = rng.normal_vec(m * k);
-        let w = rng.normal_vec(n * k);
-        let flops = (2 * m * n * k) as f64;
-        for id in [FormatId::E4M3, FormatId::E5M2] {
-            // Steady-state shape: weights stay packed across steps,
-            // activations are re-encoded every call (as a step would).
-            let wm = PackedMatrix::encode(&w, n, k, id, false);
-            let mut c = vec![0.0f32; m * n];
-            let r = b.run(&format!("gemm/{}/{}x{}x{}", id.name(), m, n, k), || {
-                let am = PackedMatrix::encode(std::hint::black_box(&a), m, k, id, false);
-                gemm(&am, &wm, &mut c);
-                std::hint::black_box(&c);
-            });
-            println!(
-                "{}",
-                r.report_line(&format!("{:.2} GFLOP/s(emu)", flops / r.mean_s / 1e9))
-            );
-        }
-    }
-    println!();
+    let (gemm_rows, gemm_headline) = bench_gemm(&b);
+    let bwd_rows = bench_backward_gemm(&b);
+    let proxy_rows = bench_native_step(&b)?;
+    let (lm_rows, lm_headline) = bench_native_lm_step(&b)?;
 
-    bench_backward_gemm(&b)?;
-    bench_native_step(&b)?;
-    bench_native_lm_step(&b)?;
+    let report = Json::obj(vec![
+        ("bench", Json::from("step_throughput")),
+        ("schema", Json::Num(1.0)),
+        ("measured", Json::Bool(true)),
+        ("smoke_mode", Json::Bool(smoke_mode())),
+        ("pool_parallelism", Json::Num(mxstab::util::pool::parallelism() as f64)),
+        (
+            "baseline_note",
+            Json::from(
+                "baseline_* fields are the pre-PR execution path (row-wise LUT GEMM kernel, \
+                 per-call std::thread::scope fan-out, operand cache disabled), measured in \
+                 this same run on this same machine",
+            ),
+        ),
+        (
+            "headline",
+            Json::obj(vec![
+                ("gemm_speedup_vs_baseline", jnum(gemm_headline)),
+                ("lm_step_speedup_vs_baseline", jnum(lm_headline)),
+            ]),
+        ),
+        ("gemm", gemm_rows),
+        ("backward_gemm", bwd_rows),
+        ("native_step", proxy_rows),
+        ("native_lm_step", lm_rows),
+    ]);
+    let path = write_json("BENCH_step_throughput.json", &report)?;
+    println!("wrote {}", path.display());
+    println!(
+        "headline: packed GEMM {gemm_headline:.2}x, native LM step {lm_headline:.2}x \
+         vs the pre-PR baseline path"
+    );
 
     #[cfg(feature = "xla")]
     bench_bundles(&b)?;
@@ -57,46 +76,173 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Forward-GEMM throughput: panel-decoded kernel vs the row-wise baseline
+/// at the paper's proxy/LM layer shapes. Returns (rows, headline speedup
+/// at the largest e4m3 shape).
+fn bench_gemm(b: &Bencher) -> (Json, f64) {
+    println!("== packed MX GEMM throughput (panel kernel vs row-wise baseline) ==\n");
+    let mut rng = Xoshiro256::seed_from(0);
+    // (m, n, k): proxy-MLP layer, LM attention-ish block, LM FFN.
+    let shapes: &[(usize, usize, usize)] = if smoke_mode() {
+        &[(64, 64, 128)]
+    } else {
+        &[(128, 128, 512), (256, 256, 1024), (512, 2048, 512)]
+    };
+    let mut rows = Vec::new();
+    let mut headline = 0.0f64;
+    for &(m, n, k) in shapes {
+        let a = rng.normal_vec(m * k);
+        let w = rng.normal_vec(n * k);
+        let flops = (2 * m * n * k) as f64;
+        for id in [FormatId::E4M3, FormatId::E5M2] {
+            // Steady-state shape: weights stay packed across steps,
+            // activations are re-encoded every call (as a step would).
+            let wm = PackedMatrix::encode(&w, n, k, id, false);
+            let am = PackedMatrix::encode(&a, m, k, id, false);
+            let mut c_new = vec![0.0f32; m * n];
+            let mut c_ref = vec![0.0f32; m * n];
+            gemm(&am, &wm, &mut c_new);
+            gemm_ref(&am, &wm, &mut c_ref);
+            assert!(
+                c_new.iter().zip(&c_ref).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "panel kernel diverged from the reference at {m}x{n}x{k} {id:?}"
+            );
+            let name = format!("gemm/{}/{}x{}x{}", id.name(), m, n, k);
+            let r_new = b.run(&name, || {
+                let am = PackedMatrix::encode(std::hint::black_box(&a), m, k, id, false);
+                gemm(&am, &wm, &mut c_new);
+                std::hint::black_box(&c_new);
+            });
+            let r_ref = b.run(&format!("{name}/baseline"), || {
+                let am = PackedMatrix::encode(std::hint::black_box(&a), m, k, id, false);
+                gemm_ref(&am, &wm, &mut c_ref);
+                std::hint::black_box(&c_ref);
+            });
+            let speedup = r_ref.mean_s / r_new.mean_s;
+            let gflops = flops / r_new.mean_s / 1e9;
+            println!(
+                "{}",
+                r_new.report_line(&format!(
+                    "{gflops:.2} GFLOP/s(emu)  [{speedup:.2}x vs row-wise]"
+                ))
+            );
+            rows.push(Json::obj(vec![
+                ("name", Json::from(name)),
+                ("shape", Json::from(format!("{m}x{n}x{k}"))),
+                ("format", Json::from(id.name())),
+                ("mean_ms", jnum(r_new.mean_s * 1e3)),
+                ("gflops", jnum(gflops)),
+                ("baseline_mean_ms", jnum(r_ref.mean_s * 1e3)),
+                ("baseline_gflops", jnum(flops / r_ref.mean_s / 1e9)),
+                ("speedup_vs_baseline", jnum(speedup)),
+            ]));
+            if id == FormatId::E4M3 {
+                headline = speedup; // largest e4m3 shape wins (shapes ascend)
+            }
+        }
+    }
+    println!();
+    (Json::Arr(rows), headline)
+}
+
 /// The backward-GEMM hot path: weight gradients re-block both operands
 /// along the batch axis (transposed encode), and the paper's MX-mix runs
 /// E4M3 activations against E5M2 gradients in one GEMM.
-fn bench_backward_gemm(b: &Bencher) -> anyhow::Result<()> {
+fn bench_backward_gemm(b: &Bencher) -> Json {
     println!("== backward GEMM (transposed re-encode + mixed formats) ==\n");
     let mut rng = Xoshiro256::seed_from(1);
     // dW = Xᵀ·G at the proxy shape: batch 256, D 256, H 1024.
-    let (batch, d, h) = (256usize, 256usize, 1024usize);
+    let (batch, d, h) =
+        if smoke_mode() { (64usize, 64usize, 128usize) } else { (256, 256, 1024) };
     let x = rng.normal_vec(batch * d);
     let g = rng.normal_vec(batch * h);
     let flops = (2 * d * h * batch) as f64;
+    let mut rows = Vec::new();
     for (label, xa_id, g_id) in [
         ("e4m3xe4m3", FormatId::E4M3, FormatId::E4M3),
         ("e4m3xe5m2", FormatId::E4M3, FormatId::E5M2),
     ] {
         let mut dw = vec![0.0f32; d * h];
-        let r = b.run(&format!("dw-gemm/{label}/{d}x{h}x{batch}"), || {
-            // Both operands re-encode per call with blocks along the batch
-            // axis — exactly what the native backward does every step.
+        let name = format!("dw-gemm/{label}/{d}x{h}x{batch}");
+        // Both operands re-encode per call with blocks along the batch
+        // axis — exactly what the native backward does every step.
+        let r_new = b.run(&name, || {
             let xt = PackedMatrix::encode_t(std::hint::black_box(&x), batch, d, xa_id, false);
             let gt = PackedMatrix::encode_t(std::hint::black_box(&g), batch, h, g_id, false);
             gemm(&xt, &gt, &mut dw);
             std::hint::black_box(&dw);
         });
-        println!("{}", r.report_line(&format!("{:.2} GFLOP/s(emu)", flops / r.mean_s / 1e9)));
+        let r_ref = b.run(&format!("{name}/baseline"), || {
+            let xt = PackedMatrix::encode_t(std::hint::black_box(&x), batch, d, xa_id, false);
+            let gt = PackedMatrix::encode_t(std::hint::black_box(&g), batch, h, g_id, false);
+            gemm_ref(&xt, &gt, &mut dw);
+            std::hint::black_box(&dw);
+        });
+        let speedup = r_ref.mean_s / r_new.mean_s;
+        println!(
+            "{}",
+            r_new.report_line(&format!(
+                "{:.2} GFLOP/s(emu)  [{speedup:.2}x vs row-wise]",
+                flops / r_new.mean_s / 1e9
+            ))
+        );
+        rows.push(Json::obj(vec![
+            ("name", Json::from(name)),
+            ("mean_ms", jnum(r_new.mean_s * 1e3)),
+            ("gflops", jnum(flops / r_new.mean_s / 1e9)),
+            ("baseline_mean_ms", jnum(r_ref.mean_s * 1e3)),
+            ("speedup_vs_baseline", jnum(speedup)),
+        ]));
     }
     println!();
-    Ok(())
+    Json::Arr(rows)
+}
+
+/// One timed native-step loop; `baseline` routes GEMMs through the
+/// row-wise reference kernel and disables the operand cache (the pre-PR
+/// execution path).
+fn time_steps(
+    b: &Bencher,
+    model: &mxstab::runtime::native::NativeModel,
+    label: &str,
+    fmt: &Fmt,
+    tokens: Option<&dyn Fn(i32) -> Vec<i32>>,
+    baseline: bool,
+) -> anyhow::Result<mxstab::bench::BenchResult> {
+    let state0 = model.init(0, 0.0, 1.0)?;
+    state0.exec.set_enabled(!baseline);
+    set_reference_kernel(baseline);
+    let mut state = Some(state0);
+    let mut step = 0i32;
+    let r = b.run(label, || {
+        let args = StepArgs {
+            tokens: tokens.map(|f| f(step)),
+            fmt: fmt.to_vec(),
+            hyper: vec![5e-4, 0.0, 0.0, 1e-3],
+            seed: 0,
+            step,
+        };
+        let (s2, m) = model.step(state.take().unwrap(), &args).unwrap();
+        std::hint::black_box(m);
+        state = Some(s2);
+        step += 1;
+    });
+    set_reference_kernel(false);
+    Ok(r)
 }
 
 /// Full native training step (teacher fwd + student fwd + bwd + Adam +
-/// metrics) at the proxy anchor shape, per precision scheme.
-fn bench_native_step(b: &Bencher) -> anyhow::Result<()> {
-    use mxstab::formats::spec::Fmt;
-    use mxstab::runtime::native::NativeEngine;
-    use mxstab::runtime::{Backend, Engine, StepArgs};
-
+/// metrics) at the proxy anchor shape, per precision scheme, new vs
+/// baseline execution path.
+fn bench_native_step(b: &Bencher) -> anyhow::Result<Json> {
     println!("== native training-step throughput (pure rust) ==\n");
-    let engine = NativeEngine::with_batch(256)?;
-    let model = engine.load("proxy_gelu_ln_L4_D256")?;
+    let (batch, bundle) = if smoke_mode() {
+        (64usize, "proxy_gelu_ln_L2_D64")
+    } else {
+        (256, "proxy_gelu_ln_L4_D256")
+    };
+    let engine = NativeEngine::with_batch(batch)?;
+    let model = engine.load(bundle)?;
     let n_params = model.n_params() as f64;
     let schemes = [
         ("fp32", Fmt::fp32()),
@@ -104,48 +250,49 @@ fn bench_native_step(b: &Bencher) -> anyhow::Result<()> {
         ("e4m3-bf16act", Fmt::bf16_act(FormatId::E4M3)),
         ("e4m3-fwdonly", Fmt::fwd_only(FormatId::E4M3, FormatId::E4M3)),
     ];
+    let mut rows = Vec::new();
     for (label, fmt) in &schemes {
-        let mut state = Some(model.init(0, 0.0, 1.0)?);
-        let mut step = 0i32;
-        let r = b.run(&format!("native/{}/{label}", model.name()), || {
-            let args = StepArgs {
-                tokens: None,
-                fmt: fmt.to_vec(),
-                hyper: vec![5e-4, 0.0, 0.0, 1e-3],
-                seed: 0,
-                step,
-            };
-            let (s2, m) = model.step(state.take().unwrap(), &args).unwrap();
-            std::hint::black_box(m);
-            state = Some(s2);
-            step += 1;
-        });
+        let name = format!("native/{}/{label}", model.name());
+        let r_new = time_steps(b, model.as_ref(), &name, fmt, None, false)?;
+        let r_ref = time_steps(b, model.as_ref(), &format!("{name}/baseline"), fmt, None, true)?;
         // 6·N·batch FLOPs per step (fwd + bwd over N params, batch rows).
-        let flops = 6.0 * n_params * 256.0;
+        let flops = 6.0 * n_params * batch as f64;
+        let speedup = r_ref.mean_s / r_new.mean_s;
         println!(
             "{}",
-            r.report_line(&format!(
-                "{:.1} steps/s  {:.2} GFLOP/s(emu)",
-                1.0 / r.mean_s,
-                flops / r.mean_s / 1e9
+            r_new.report_line(&format!(
+                "{:.1} steps/s  {:.2} GFLOP/s(emu)  [{speedup:.2}x vs baseline]",
+                1.0 / r_new.mean_s,
+                flops / r_new.mean_s / 1e9
             ))
         );
+        rows.push(Json::obj(vec![
+            ("name", Json::from(name)),
+            ("scheme", Json::from(*label)),
+            ("step_ms", jnum(r_new.mean_s * 1e3)),
+            ("steps_per_s", jnum(1.0 / r_new.mean_s)),
+            ("baseline_step_ms", jnum(r_ref.mean_s * 1e3)),
+            ("speedup_vs_baseline", jnum(speedup)),
+        ]));
     }
     println!();
-    Ok(())
+    Ok(Json::Arr(rows))
 }
 
 /// Full native transformer-LM training step (corpus batch + fwd + bwd +
-/// Adam + metrics) at the smallest ladder rung, per precision scheme.
-fn bench_native_lm_step(b: &Bencher) -> anyhow::Result<()> {
+/// Adam + metrics), per precision scheme, new vs baseline execution path.
+/// Returns (rows, headline speedup under the fully-quantized scheme).
+fn bench_native_lm_step(b: &Bencher) -> anyhow::Result<(Json, f64)> {
     use mxstab::coordinator::Sweeper;
-    use mxstab::formats::spec::Fmt;
-    use mxstab::runtime::native::NativeEngine;
-    use mxstab::runtime::{Backend, StepArgs};
 
     println!("== native LM training-step throughput (pure rust) ==\n");
-    let sweeper = Sweeper::new(NativeEngine::new());
-    let runner = sweeper.runner("lm_olmo_1m")?;
+    let (engine, bundle) = if smoke_mode() {
+        (NativeEngine::with_batch(4)?, "lm_L1_D32_H1_T32_V64")
+    } else {
+        (NativeEngine::new(), "lm_olmo_1m")
+    };
+    let sweeper = Sweeper::new(engine);
+    let runner = sweeper.runner(bundle)?;
     let model = runner.backend.clone();
     let corpus = runner.corpus.clone().expect("LM corpus");
     let n_params = model.n_params() as f64;
@@ -156,43 +303,47 @@ fn bench_native_lm_step(b: &Bencher) -> anyhow::Result<()> {
         ("e4m3-full", Fmt::full(FormatId::E4M3, FormatId::E4M3)),
         ("e4m3-bf16act", Fmt::bf16_act(FormatId::E4M3)),
     ];
+    let mut rows = Vec::new();
+    let mut headline = 0.0f64;
     for (label, fmt) in &schemes {
-        let mut state = Some(model.init(0, 0.0, 1.0)?);
-        let mut step = 0i32;
-        let r = b.run(&format!("native/{}/{label}", model.name()), || {
-            let args = StepArgs {
-                tokens: Some(corpus.batch(0, step as u64, batch, len)),
-                fmt: fmt.to_vec(),
-                hyper: vec![5e-4, 0.0, 0.0, 0.0],
-                seed: 0,
-                step,
-            };
-            let (s2, m) = model.step(state.take().unwrap(), &args).unwrap();
-            std::hint::black_box(m);
-            state = Some(s2);
-            step += 1;
-        });
+        let name = format!("native/{}/{label}", model.name());
+        let toks = |step: i32| corpus.batch(0, step as u64, batch, len);
+        let r_new = time_steps(b, model.as_ref(), &name, fmt, Some(&toks), false)?;
+        let r_ref =
+            time_steps(b, model.as_ref(), &format!("{name}/baseline"), fmt, Some(&toks), true)?;
         // 6·N FLOPs per token (fwd + bwd over N params).
         let flops = 6.0 * n_params * tokens_per_step;
+        let speedup = r_ref.mean_s / r_new.mean_s;
         println!(
             "{}",
-            r.report_line(&format!(
-                "{:.2} steps/s  {:.0} tok/s  {:.2} GFLOP/s(emu)",
-                1.0 / r.mean_s,
-                tokens_per_step / r.mean_s,
-                flops / r.mean_s / 1e9
+            r_new.report_line(&format!(
+                "{:.2} steps/s  {:.0} tok/s  {:.2} GFLOP/s(emu)  [{speedup:.2}x vs baseline]",
+                1.0 / r_new.mean_s,
+                tokens_per_step / r_new.mean_s,
+                flops / r_new.mean_s / 1e9
             ))
         );
+        rows.push(Json::obj(vec![
+            ("name", Json::from(name)),
+            ("scheme", Json::from(*label)),
+            ("step_ms", jnum(r_new.mean_s * 1e3)),
+            ("steps_per_s", jnum(1.0 / r_new.mean_s)),
+            ("tokens_per_s", jnum(tokens_per_step / r_new.mean_s)),
+            ("baseline_step_ms", jnum(r_ref.mean_s * 1e3)),
+            ("speedup_vs_baseline", jnum(speedup)),
+        ]));
+        if *label == "e4m3-full" {
+            headline = speedup;
+        }
     }
     println!();
-    Ok(())
+    Ok((Json::Arr(rows), headline))
 }
 
 #[cfg(feature = "xla")]
 fn bench_bundles(b: &Bencher) -> anyhow::Result<()> {
     use mxstab::coordinator::Sweeper;
-    use mxstab::formats::spec::Fmt;
-    use mxstab::runtime::{list_bundles, PjrtEngine, Session, StepArgs};
+    use mxstab::runtime::{list_bundles, PjrtEngine, Session};
 
     let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("index.json").exists() {

@@ -4,10 +4,51 @@
 //! Protocol per benchmark: warmup iterations, then timed batches until the
 //! time budget is spent; reports mean / p50 / p95 per-iteration latency and
 //! derived throughput.
+//!
+//! Machine-readable output: the bench binaries serialize their results to
+//! `BENCH_<name>.json` at the repo root through [`write_json`], so the
+//! perf trajectory is tracked across PRs (the CI `bench-smoke` job runs
+//! them in reduced-size mode — [`smoke_mode`] — and uploads the files).
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats::percentile;
+
+/// Reduced-size mode for CI smoke runs: `MXSTAB_BENCH_SMOKE=1` shrinks
+/// problem sizes so both bench binaries finish in seconds while still
+/// exercising every code path and emitting well-formed JSON.
+pub fn smoke_mode() -> bool {
+    std::env::var("MXSTAB_BENCH_SMOKE").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
+
+/// The repository root (parent of the crate dir) — where `BENCH_*.json`
+/// files land.
+pub fn repo_root() -> PathBuf {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().map(|p| p.to_path_buf()).unwrap_or(manifest)
+}
+
+/// Serialize a bench report to `<repo root>/<file_name>`; returns the
+/// path written.
+pub fn write_json(file_name: &str, value: &Json) -> std::io::Result<PathBuf> {
+    let path = repo_root().join(file_name);
+    let mut s = String::new();
+    value.write(&mut s);
+    s.push('\n');
+    std::fs::write(&path, s)?;
+    Ok(path)
+}
+
+/// `Json::Num` that never emits invalid JSON (non-finite → null).
+pub fn jnum(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {

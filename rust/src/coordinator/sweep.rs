@@ -1,17 +1,22 @@
-//! Sweep scheduler: runs many training configurations across a thread pool.
+//! Sweep scheduler: runs many training configurations across the shared
+//! worker pool.
 //!
-//! Generic over the execution [`Engine`]: the native backend parallelizes
-//! *within* a step (the packed GEMM fans rows out over scoped threads) and
-//! the PJRT CPU client has its own intra-op pool, so the scheduler defaults
-//! to a small number of concurrent runs and relies on the backend for core
-//! saturation; `MXSTAB_JOBS` overrides.
+//! Generic over the execution [`Engine`]. Job runners are tasks on the
+//! process-wide pool ([`crate::util::pool`]) — the *same* pool the native
+//! backend's packed GEMM and codec fan out over — so a sweep's total
+//! thread count is bounded by the pool size no matter how many jobs run
+//! concurrently (`MXSTAB_JOBS` caps both the pool and, via
+//! `jobs_parallel`, the number of simultaneously-running jobs; it
+//! defaults to 2 concurrent jobs with the backends saturating the
+//! remaining pool slots from inside each step).
 //!
 //! Backends are loaded once per name and shared (`Arc`); states are
-//! per-run. Results stream into a `Vec<RunLog>` in submission order
+//! per-run. Results land in a `Vec<RunLog>` in submission order
 //! regardless of completion order.
 
 use std::collections::BTreeMap;
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
@@ -19,6 +24,7 @@ use super::metrics::RunLog;
 use super::run::{RunConfig, Runner};
 use crate::data::{Corpus, CorpusConfig};
 use crate::runtime::{Backend, Engine};
+use crate::util::pool;
 
 /// One sweep item: which bundle/model to train and how.
 #[derive(Debug, Clone)]
@@ -79,18 +85,21 @@ impl<E: Engine> Sweeper<E> {
     }
 
     /// Run all jobs; returns logs in submission order. Failures become
-    /// error-marked logs rather than poisoning the sweep.
+    /// error-marked logs rather than poisoning the sweep. Runner tasks
+    /// execute on the shared worker pool (the scoping thread runs one
+    /// itself), so sweep-level and step-level parallelism share one
+    /// bounded thread set.
     pub fn run_all(&self, jobs: &[Job], quiet: bool) -> Vec<RunLog> {
         let n = jobs.len();
-        let (tx, rx) = mpsc::channel::<(usize, Result<RunLog>)>();
-        let next = std::sync::atomic::AtomicUsize::new(0);
+        let next = AtomicUsize::new(0);
+        let done = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<RunLog>>> = (0..n).map(|_| Mutex::new(None)).collect();
 
-        std::thread::scope(|scope| {
+        pool::scope(|scope| {
             for _ in 0..self.jobs_parallel.min(n.max(1)) {
-                let tx = tx.clone();
-                let next = &next;
+                let (next, done, slots) = (&next, &done, &slots);
                 scope.spawn(move || loop {
-                    let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                    let i = next.fetch_add(1, Ordering::SeqCst);
                     if i >= n {
                         break;
                     }
@@ -111,38 +120,40 @@ impl<E: Engine> Sweeper<E> {
                             .unwrap_or_else(|| "non-string panic payload".into());
                         Err(anyhow!("job panicked: {msg}"))
                     });
-                    let _ = tx.send((i, res));
+                    let finished = done.fetch_add(1, Ordering::SeqCst) + 1;
+                    let log = match res {
+                        Ok(log) => {
+                            if !quiet {
+                                eprintln!(
+                                    "[sweep {}/{}] {}: final={:.4} spikes={} {}",
+                                    finished,
+                                    n,
+                                    log.name,
+                                    log.final_loss(),
+                                    log.spikes,
+                                    if log.diverged() { "DIVERGED" } else { "" }
+                                );
+                            }
+                            log
+                        }
+                        Err(e) => {
+                            eprintln!(
+                                "[sweep {}/{}] {} FAILED: {e:#}",
+                                finished, n, jobs[i].cfg.name
+                            );
+                            let mut l = RunLog::new(&jobs[i].cfg.name);
+                            l.meta.push(("error".into(), format!("{e:#}")));
+                            l
+                        }
+                    };
+                    *slots[i].lock().unwrap() = Some(log);
                 });
             }
-            drop(tx);
-            let mut out: Vec<Option<RunLog>> = (0..n).map(|_| None).collect();
-            for (i, res) in rx {
-                let log = match res {
-                    Ok(log) => {
-                        if !quiet {
-                            eprintln!(
-                                "[sweep {}/{}] {}: final={:.4} spikes={} {}",
-                                i + 1,
-                                n,
-                                log.name,
-                                log.final_loss(),
-                                log.spikes,
-                                if log.diverged() { "DIVERGED" } else { "" }
-                            );
-                        }
-                        log
-                    }
-                    Err(e) => {
-                        eprintln!("[sweep {}/{}] {} FAILED: {e:#}", i + 1, n, jobs[i].cfg.name);
-                        let mut l = RunLog::new(&jobs[i].cfg.name);
-                        l.meta.push(("error".into(), format!("{e:#}")));
-                        l
-                    }
-                };
-                out[i] = Some(log);
-            }
-            out.into_iter().map(|o| o.unwrap()).collect()
-        })
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("every job yields a log"))
+            .collect()
     }
 }
 

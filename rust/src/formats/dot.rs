@@ -86,7 +86,7 @@ pub fn emulated_dot(a: &[MxBlock], b: &[MxBlock]) -> f32 {
 ///
 /// Runs on the packed engine ([`super::gemm::matvec`]): the matrix is
 /// encoded once into a single codes+scales buffer and rows are fanned out
-/// over scoped threads. Bitwise identical to [`mx_matvec_ref`].
+/// over the shared worker pool. Bitwise identical to [`mx_matvec_ref`].
 pub fn mx_matvec(a: &[f32], rows: usize, cols: usize, x: &[f32], id: FormatId) -> Vec<f32> {
     assert!(id.is_mx(), "mx format required, got {id:?}");
     let am = super::gemm::PackedMatrix::encode(a, rows, cols, id, false);

@@ -12,14 +12,32 @@
 //! the scalar oracle and agree with
 //! [`emulated_dot`](super::dot::emulated_dot) to f32 round-off.
 //!
-//! Parallelism: output rows are fanned out over `std::thread::scope`;
-//! within a worker the kernel tiles B's rows ([`TILE_N`]) so the packed B
-//! panel stays cache-resident while each A block is decoded once into a
-//! stack buffer and reused across the whole tile.
+//! Two kernels implement that contract (DESIGN.md §Exec):
+//!
+//! * [`gemm`] — the **panel-decoded** production kernel: per [`TILE_N`]-row
+//!   B tile, the packed B panel is decoded *once* into an f32 scratch panel
+//!   (interleaved j-innermost) and the A strip is decoded once per strip,
+//!   so the innermost loop is a pure f32 multiply-add sweep with no LUT
+//!   gathers — `n·k + m·k` table lookups per strip where the row-wise
+//!   kernel performed `m·n·k`. Per-output-lane accumulation order is
+//!   unchanged, so it stays bitwise identical to the oracle.
+//! * [`gemm_ref`] — the original row-wise kernel (LUT lookups in the inner
+//!   loop, `std::thread::scope` fan-out), kept verbatim as the in-repo
+//!   baseline for the parity suite and the before/after numbers in
+//!   `BENCH_step_throughput.json`. [`set_reference_kernel`] routes [`gemm`]
+//!   through it so whole-step baselines can be measured in-process.
+//!
+//! Parallelism: output-row strips fan out over the persistent worker pool
+//! ([`crate::util::pool`]); per-strip decode scratch comes from the
+//! thread-local arena ([`crate::util::arena`]), so steady-state calls
+//! allocate nothing beyond the output buffer.
+
+use std::sync::atomic::{AtomicBool, Ordering};
 
 use super::packed::{PackedFormat, PackedVec, ZERO_BLOCK};
 use super::quant::pow2;
 use super::spec::{FormatId, BLOCK_SIZE};
+use crate::util::{arena, pool};
 
 /// B-row (output-column) tile width: 32 packed rows ≈ 32·(k + k/16) bytes
 /// of codes+scales per k-panel, sized to stay L1/L2-resident for the
@@ -59,7 +77,8 @@ impl PackedMatrix {
     pub fn encode_t(a: &[f32], rows: usize, cols: usize, id: FormatId, scale_bump: bool) -> Self {
         assert_eq!(a.len(), rows * cols, "matrix shape mismatch");
         assert_eq!(rows % BLOCK_SIZE, 0, "rows {rows} % 32 != 0");
-        let t = transpose(a, rows, cols);
+        let mut t = arena::local().take_f32(a.len());
+        transpose_into(a, rows, cols, &mut t);
         PackedMatrix { rows: cols, cols: rows, data: PackedVec::encode(&t, id, scale_bump) }
     }
 
@@ -161,19 +180,24 @@ fn matvec_strip(
 }
 
 /// Quantized matrix–vector product `out[r] = MXdot(A[r,:], x)` on packed
-/// operands (the element formats of `a` and `x` may differ). Zero
-/// allocations beyond the output; parallel over rows.
+/// operands (the element formats of `a` and `x` may differ). The expanded
+/// input (`xdec`/`xscale`) lives in arena scratch — zero steady-state
+/// allocation beyond the output; rows fan out over the worker pool.
 pub fn matvec(a: &PackedMatrix, x: &PackedVec) -> Vec<f32> {
     assert_eq!(x.len(), a.cols, "matvec shape mismatch");
     let lut = PackedFormat::of(a.id()).decode_table();
     let lut_x = PackedFormat::of(x.id).decode_table();
 
     // Expand x once: relative element values + f64 block scales.
-    let mut xdec = vec![0.0f32; x.len()];
+    let scratch = arena::local();
+    let mut xdec = scratch.take_f32(x.len());
     for (o, &c) in xdec.iter_mut().zip(&x.codes) {
         *o = lut_x[c as usize];
     }
-    let xscale: Vec<f64> = x.scales.iter().map(|&e| scale_f64(e)).collect();
+    let mut xscale = scratch.take_f64(x.n_blocks());
+    for (o, &e) in xscale.iter_mut().zip(&x.scales) {
+        *o = scale_f64(e);
+    }
 
     let mut out = vec![0.0f32; a.rows];
     let threads = worker_count(a.rows * a.cols, a.rows);
@@ -181,8 +205,8 @@ pub fn matvec(a: &PackedMatrix, x: &PackedVec) -> Vec<f32> {
         matvec_strip(a, lut, &xdec, &xscale, 0, &mut out);
     } else {
         let chunk = (a.rows + threads - 1) / threads;
-        let (xdec, xscale) = (&xdec, &xscale);
-        std::thread::scope(|s| {
+        let (xdec, xscale) = (&*xdec, &*xscale);
+        pool::scope(|s| {
             for (ci, oc) in out.chunks_mut(chunk).enumerate() {
                 s.spawn(move || matvec_strip(a, lut, xdec, xscale, ci * chunk, oc));
             }
@@ -191,9 +215,145 @@ pub fn matvec(a: &PackedMatrix, x: &PackedVec) -> Vec<f32> {
     out
 }
 
-/// GEMM worker: fill the `out_strip` rows starting at A row `r0`.
+/// Routes [`gemm`] through [`gemm_ref`] when set — the in-process switch
+/// benches use to time whole training steps on the pre-panel baseline.
+static REFERENCE_KERNEL: AtomicBool = AtomicBool::new(false);
+
+/// Toggle the row-wise reference kernel for every subsequent [`gemm`]
+/// call (benchmarking aid; the default is the panel-decoded kernel).
+pub fn set_reference_kernel(on: bool) {
+    REFERENCE_KERNEL.store(on, Ordering::SeqCst);
+}
+
+/// Whether [`gemm`] currently routes through [`gemm_ref`].
+pub fn reference_kernel() -> bool {
+    REFERENCE_KERNEL.load(Ordering::SeqCst)
+}
+
+/// Panel-decoded GEMM worker: fill the `out_strip` rows starting at A row
+/// `r0`.
+///
+/// Per strip, the A rows are decoded once (`m·k/threads` LUT lookups) and
+/// each [`TILE_N`]-row B panel once (`n·k` lookups), into arena scratch;
+/// the innermost loop is then a pure f32 multiply-add over contiguous
+/// panels. The panel is stored j-innermost (`[k][TILE_N]` interleave) so
+/// one decoded A element broadcasts across [`TILE_N`] independent
+/// accumulator lanes — each output lane still accumulates its 32-element
+/// block sum in exactly the oracle's element order, keeping the result
+/// bitwise identical to [`gemm_ref`] and [`mx_dot`](super::dot::mx_dot).
 #[allow(clippy::too_many_arguments)]
 fn gemm_strip(
+    a: &PackedMatrix,
+    b: &PackedMatrix,
+    lut: &[f32; 256],
+    lut_b: &[f32; 256],
+    bscale: &[f64],
+    r0: usize,
+    out_strip: &mut [f32],
+) {
+    let (n, k, bpr) = (b.rows, a.cols, a.blocks_per_row());
+    let rows_here = out_strip.len() / n;
+    let scratch = arena::local();
+
+    // Decode this strip's A rows once: relative element values.
+    let mut adec = scratch.take_f32(rows_here * k);
+    for (d, &c) in adec.iter_mut().zip(&a.data.codes[r0 * k..(r0 + rows_here) * k]) {
+        *d = lut[c as usize];
+    }
+
+    let mut panel = scratch.take_f32(TILE_N * k);
+    let mut acc = [0.0f64; TILE_N];
+    let mut inner = [0.0f32; TILE_N];
+    for jt in (0..n).step_by(TILE_N) {
+        let jw = TILE_N.min(n - jt);
+        // Decode the B panel once per tile, j-innermost:
+        // panel[(kb·32 + t)·TILE_N + jo] = lut_b[B[jt+jo, kb·32 + t]].
+        for jo in 0..jw {
+            let codes = &b.data.codes[(jt + jo) * k..(jt + jo + 1) * k];
+            for (idx, &c) in codes.iter().enumerate() {
+                panel[idx * TILE_N + jo] = lut_b[c as usize];
+            }
+        }
+        for i in 0..rows_here {
+            let a_scales = a.row_scales(r0 + i);
+            let arow = &adec[i * k..(i + 1) * k];
+            acc[..jw].fill(0.0);
+            for kb in 0..bpr {
+                let sa = a_scales[kb];
+                if sa == ZERO_BLOCK {
+                    continue;
+                }
+                let sa_f = scale_f64(sa);
+                let ab = &arow[kb * BLOCK_SIZE..(kb + 1) * BLOCK_SIZE];
+                let prows = &panel[kb * BLOCK_SIZE * TILE_N..(kb + 1) * BLOCK_SIZE * TILE_N];
+                inner.fill(0.0);
+                // Lane jo accumulates its block inner product in element
+                // order t = 0..32 — the oracle's order, vectorized across
+                // the TILE_N output lanes.
+                for (&av, prow) in ab.iter().zip(prows.chunks_exact(TILE_N)) {
+                    for (l, &bv) in inner.iter_mut().zip(prow) {
+                        *l += av * bv;
+                    }
+                }
+                for (jo, av) in acc[..jw].iter_mut().enumerate() {
+                    let sb = bscale[(jt + jo) * bpr + kb];
+                    if sb == 0.0 {
+                        continue;
+                    }
+                    *av += sa_f * sb * inner[jo] as f64;
+                }
+            }
+            for (jo, &av) in acc[..jw].iter().enumerate() {
+                out_strip[i * n + jt + jo] = av as f32;
+            }
+        }
+    }
+}
+
+/// Packed block GEMM: `C[m×n] = A[m×k] · B[n×k]ᵀ`, blocks along k for both
+/// operands (B is stored with its reduction axis contiguous, i.e. as the
+/// transposed right-hand side — the layout `w·xᵀ` style Linears produce).
+/// The two operands may use *different* MX element formats (the paper's
+/// per-tensor-class format selection: e.g. E4M3 weights × E5M2 gradients).
+///
+/// Tiling: each pool task owns a horizontal strip of C; every
+/// [`TILE_N`]-row panel of B (and the strip's A rows) is decoded once into
+/// arena scratch and swept by the register-tiled microkernel, carrying
+/// `X_a·X_b` per block. Bitwise identical to [`gemm_ref`].
+pub fn gemm(a: &PackedMatrix, b: &PackedMatrix, out: &mut [f32]) {
+    assert_eq!(a.cols, b.cols, "reduction dims differ: {} vs {}", a.cols, b.cols);
+    assert_eq!(out.len(), a.rows * b.rows, "output shape mismatch");
+    if reference_kernel() {
+        return gemm_ref(a, b, out);
+    }
+    let lut = PackedFormat::of(a.id()).decode_table();
+    let lut_b = PackedFormat::of(b.id()).decode_table();
+    let n = b.rows;
+
+    // Per-block f64 scales for B, computed once into arena scratch.
+    let mut bscale_buf = arena::local().take_f64(b.data.scales.len());
+    for (o, &e) in bscale_buf.iter_mut().zip(&b.data.scales) {
+        *o = scale_f64(e);
+    }
+    let bscale: &[f64] = &bscale_buf;
+
+    let threads = worker_count(a.rows * n, a.rows);
+    if threads <= 1 {
+        gemm_strip(a, b, lut, lut_b, bscale, 0, out);
+    } else {
+        let rows_per = (a.rows + threads - 1) / threads;
+        pool::scope(|s| {
+            for (ci, oc) in out.chunks_mut(rows_per * n).enumerate() {
+                s.spawn(move || gemm_strip(a, b, lut, lut_b, bscale, ci * rows_per, oc));
+            }
+        });
+    }
+}
+
+/// The original row-wise GEMM worker (LUT lookups in the innermost loop),
+/// kept verbatim as the baseline/oracle for the panel-decoded kernel.
+#[allow(clippy::too_many_arguments)]
+fn gemm_strip_ref(
     a: &PackedMatrix,
     b: &PackedMatrix,
     lut: &[f32; 256],
@@ -244,46 +404,41 @@ fn gemm_strip(
     }
 }
 
-/// Packed block GEMM: `C[m×n] = A[m×k] · B[n×k]ᵀ`, blocks along k for both
-/// operands (B is stored with its reduction axis contiguous, i.e. as the
-/// transposed right-hand side — the layout `w·xᵀ` style Linears produce).
-/// The two operands may use *different* MX element formats (the paper's
-/// per-tensor-class format selection: e.g. E4M3 weights × E5M2 gradients).
-///
-/// Tiling: each worker owns a horizontal strip of C; for every
-/// [`TILE_N`]-wide panel of B rows, each A block is decoded once into a
-/// stack buffer and swept across the panel, carrying `X_a·X_b` per block.
-pub fn gemm(a: &PackedMatrix, b: &PackedMatrix, out: &mut [f32]) {
+/// The pre-panel GEMM entry point, preserved bit-for-bit (row-wise kernel,
+/// `std::thread::scope` fan-out, per-call thread counts). The parity suite
+/// asserts [`gemm`] ≡ `gemm_ref` bitwise; `benches/step_throughput.rs`
+/// times it as the before/after baseline.
+pub fn gemm_ref(a: &PackedMatrix, b: &PackedMatrix, out: &mut [f32]) {
     assert_eq!(a.cols, b.cols, "reduction dims differ: {} vs {}", a.cols, b.cols);
     assert_eq!(out.len(), a.rows * b.rows, "output shape mismatch");
     let lut = PackedFormat::of(a.id()).decode_table();
     let lut_b = PackedFormat::of(b.id()).decode_table();
     let n = b.rows;
 
-    // Per-block f64 scales for B, computed once.
     let bscale: Vec<f64> = b.data.scales.iter().map(|&e| scale_f64(e)).collect();
 
-    let threads = worker_count(a.rows * n, a.rows);
+    let threads = ref_worker_count(a.rows * n, a.rows);
     if threads <= 1 {
-        gemm_strip(a, b, lut, lut_b, &bscale, 0, out);
+        gemm_strip_ref(a, b, lut, lut_b, &bscale, 0, out);
     } else {
         let rows_per = (a.rows + threads - 1) / threads;
         let bscale = &bscale;
         std::thread::scope(|s| {
             for (ci, oc) in out.chunks_mut(rows_per * n).enumerate() {
-                s.spawn(move || gemm_strip(a, b, lut, lut_b, bscale, ci * rows_per, oc));
+                s.spawn(move || gemm_strip_ref(a, b, lut, lut_b, bscale, ci * rows_per, oc));
             }
         });
     }
 }
 
-/// Row-major transpose: `a` is `rows × cols`, the result is `cols × rows`.
-/// The backward GEMMs re-block along the batch/output axes; transposing
-/// first keeps the reduction axis contiguous for [`PackedMatrix::encode`]
-/// and [`gemm_f32`].
-pub fn transpose(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+/// Row-major transpose into a caller-provided buffer: `a` is
+/// `rows × cols`, `out` receives the `cols × rows` transpose. The
+/// backward GEMMs re-block along the batch/output axes; transposing first
+/// keeps the reduction axis contiguous for [`PackedMatrix::encode`] and
+/// [`gemm_f32`]. Hot paths pass arena scratch here instead of allocating.
+pub fn transpose_into(a: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
     assert_eq!(a.len(), rows * cols, "transpose shape mismatch");
-    let mut out = vec![0.0f32; a.len()];
+    assert_eq!(out.len(), a.len(), "transpose output length mismatch");
     // Tile to keep both access streams cache-resident.
     const T: usize = 32;
     for r0 in (0..rows).step_by(T) {
@@ -295,6 +450,12 @@ pub fn transpose(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
             }
         }
     }
+}
+
+/// Allocating convenience wrapper around [`transpose_into`].
+pub fn transpose(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; a.len()];
+    transpose_into(a, rows, cols, &mut out);
     out
 }
 
@@ -329,7 +490,7 @@ pub fn gemm_f32(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f
     } else {
         let rows_per = (m + threads - 1) / threads;
         let strip = &strip;
-        std::thread::scope(|s| {
+        pool::scope(|s| {
             for (ci, oc) in out.chunks_mut(rows_per * n).enumerate() {
                 s.spawn(move || strip(ci * rows_per, oc));
             }
@@ -337,8 +498,19 @@ pub fn gemm_f32(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f
     }
 }
 
-/// Number of workers for `out_elems` outputs over `rows` splittable rows.
+/// Number of pool tasks for `out_elems` outputs over `rows` splittable
+/// rows. Bounded by the shared pool's parallelism, so concurrent sweep
+/// jobs cannot multiply thread counts ([`crate::util::pool`]).
 fn worker_count(out_elems: usize, rows: usize) -> usize {
+    if out_elems < PAR_MIN_OUT || rows < 2 {
+        return 1;
+    }
+    pool::parallelism().min(rows)
+}
+
+/// The pre-pool worker count (per-call `available_parallelism`), kept for
+/// [`gemm_ref`]'s faithful baseline behaviour.
+fn ref_worker_count(out_elems: usize, rows: usize) -> usize {
     if out_elems < PAR_MIN_OUT || rows < 2 {
         return 1;
     }
@@ -354,6 +526,12 @@ mod tests {
     use crate::util::rng::Xoshiro256;
 
     const MX: [FormatId; 4] = [FormatId::E4M3, FormatId::E5M2, FormatId::E2M3, FormatId::E3M2];
+
+    /// Serializes the tests that flip or depend on the process-global
+    /// [`set_reference_kernel`] toggle: without this, the toggle test
+    /// could race a concurrently scheduled parity test into vacuously
+    /// comparing `gemm_ref` against itself.
+    static TOGGLE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
     #[test]
     fn packed_dot_bitwise_equals_mx_dot() {
@@ -529,6 +707,72 @@ mod tests {
         gemm(&am, &bm, &mut c);
         // Disjoint support → every product is exactly zero.
         assert!(c.iter().all(|&v| v == 0.0), "disjoint blocks must dot to 0: {c:?}");
+    }
+
+    #[test]
+    fn panel_gemm_bitwise_equals_reference_kernel() {
+        // Shapes crossing every tiling edge: single row, tile tails
+        // (n % TILE_N ≠ 0), sub-tile n, odd m, and a multi-strip fan-out
+        // (m·n > PAR_MIN_OUT engages the pool).
+        let _guard = TOGGLE_LOCK.lock().unwrap();
+        let mut rng = Xoshiro256::seed_from(101);
+        for &(m, n, k) in
+            &[(1usize, 1usize, 32usize), (2, 7, 64), (37, 33, 96), (5, 32, 32), (96, 64, 128)]
+        {
+            let a: Vec<f32> = rng.normal_vec(m * k);
+            let b: Vec<f32> = rng.normal_vec(n * k);
+            for (ida, idb) in [
+                (FormatId::E4M3, FormatId::E4M3),
+                (FormatId::E4M3, FormatId::E5M2),
+                (FormatId::E2M3, FormatId::E3M2),
+            ] {
+                let am = PackedMatrix::encode(&a, m, k, ida, false);
+                let bm = PackedMatrix::encode(&b, n, k, idb, false);
+                let mut fast = vec![0.0f32; m * n];
+                let mut reference = vec![0.0f32; m * n];
+                gemm(&am, &bm, &mut fast);
+                gemm_ref(&am, &bm, &mut reference);
+                for (i, (f, r)) in fast.iter().zip(&reference).enumerate() {
+                    assert_eq!(
+                        f.to_bits(),
+                        r.to_bits(),
+                        "{ida:?}×{idb:?} {m}x{n}x{k} elem {i}: {f} vs {r}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reference_toggle_routes_gemm() {
+        let _guard = TOGGLE_LOCK.lock().unwrap();
+        let mut rng = Xoshiro256::seed_from(55);
+        let (m, n, k) = (4, 5, 64);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(n * k);
+        let am = PackedMatrix::encode(&a, m, k, FormatId::E4M3, false);
+        let bm = PackedMatrix::encode(&b, n, k, FormatId::E4M3, false);
+        let mut c1 = vec![0.0f32; m * n];
+        let mut c2 = vec![0.0f32; m * n];
+        gemm(&am, &bm, &mut c1);
+        set_reference_kernel(true);
+        assert!(reference_kernel());
+        gemm(&am, &bm, &mut c2);
+        set_reference_kernel(false);
+        assert_eq!(
+            c1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            c2.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn transpose_into_matches_transpose() {
+        let mut rng = Xoshiro256::seed_from(91);
+        let (rows, cols) = (48, 33);
+        let a = rng.normal_vec(rows * cols);
+        let mut out = vec![0.0f32; a.len()];
+        transpose_into(&a, rows, cols, &mut out);
+        assert_eq!(out, transpose(&a, rows, cols));
     }
 
     #[test]

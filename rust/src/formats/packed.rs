@@ -26,15 +26,17 @@
 //! as `quantize_elem` (divide by a power-of-two band step, then
 //! `round_ties_even`), so the two paths cannot diverge by rounding.
 //!
-//! Large inputs are processed block-parallel with `std::thread::scope`;
-//! results are independent of the thread count because blocks are
-//! independent.
+//! Large inputs are processed block-parallel over the persistent worker
+//! pool ([`crate::util::pool`] — shared with the GEMM engine and the sweep
+//! scheduler, so nested parallelism cannot oversubscribe cores); results
+//! are independent of the task count because blocks are independent.
 
 use std::sync::OnceLock;
 
 use super::codes::positive_codes;
 use super::quant::{bf16_rne, pow2};
 use super::spec::{ElemFormat, FormatId, BLOCK_SIZE};
+use crate::util::pool;
 
 /// Scale-exponent sentinel for an all-zero (or all-NaN) block: the block
 /// decodes to +0.0 regardless of codes, matching the scalar path's
@@ -68,7 +70,7 @@ impl std::fmt::Display for PackError {
 impl std::error::Error for PackError {}
 
 /// Per-element work (in f32s) below which encode/decode stay single
-/// threaded; above, blocks are fanned out over `std::thread::scope`.
+/// threaded; above, blocks are fanned out over the worker pool.
 const PAR_THRESHOLD: usize = 1 << 14;
 
 /// Precomputed encode/decode tables for one MX element format.
@@ -264,13 +266,13 @@ impl PackedFormat {
     }
 }
 
-/// Worker count for `len` elements of block-parallel work.
+/// Pool-task count for `len` elements of block-parallel work (bounded by
+/// the shared pool so concurrent callers cannot multiply thread counts).
 fn n_threads(len: usize) -> usize {
     if len < PAR_THRESHOLD {
         return 1;
     }
-    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    avail.min(len / (PAR_THRESHOLD / 2)).max(1)
+    pool::parallelism().min(len / (PAR_THRESHOLD / 2)).max(1)
 }
 
 /// Block-aligned chunk length splitting `len` across `threads` workers.
@@ -313,15 +315,18 @@ impl PackedVec {
             pf.encode_slice(x, &mut codes, &mut scales, bump)
         } else {
             let chunk = chunk_len(x.len(), threads);
-            std::thread::scope(|s| {
-                let handles: Vec<_> = x
+            let mut counts = vec![0usize; x.len().div_ceil(chunk)];
+            pool::scope(|s| {
+                for (((xs, cs), ss), count) in x
                     .chunks(chunk)
                     .zip(codes.chunks_mut(chunk))
                     .zip(scales.chunks_mut(chunk / BLOCK_SIZE))
-                    .map(|((xs, cs), ss)| s.spawn(move || pf.encode_slice(xs, cs, ss, bump)))
-                    .collect();
-                handles.into_iter().map(|h| h.join().expect("encode worker")).sum()
-            })
+                    .zip(counts.iter_mut())
+                {
+                    s.spawn(move || *count = pf.encode_slice(xs, cs, ss, bump));
+                }
+            });
+            counts.iter().sum()
         };
         Ok(PackedVec { id, codes, scales, clamped })
     }
@@ -352,7 +357,7 @@ impl PackedVec {
             pf.decode_slice(&self.codes, &self.scales, out);
         } else {
             let chunk = chunk_len(out.len(), threads);
-            std::thread::scope(|s| {
+            pool::scope(|s| {
                 for ((cs, ss), os) in self
                     .codes
                     .chunks(chunk)
@@ -399,7 +404,7 @@ pub fn packed_qdq(x: &[f32], id: FormatId, scale_bump: bool) -> (Vec<f32>, usize
                 }
             } else {
                 let chunk = (out.len() + threads - 1) / threads;
-                std::thread::scope(|s| {
+                pool::scope(|s| {
                     for os in out.chunks_mut(chunk) {
                         s.spawn(move || {
                             for v in os {
@@ -453,22 +458,23 @@ impl QdqScratch {
             c
         } else {
             let chunk = chunk_len(x.len(), threads);
-            std::thread::scope(|s| {
-                let handles: Vec<_> = x
+            let mut counts = vec![0usize; x.len().div_ceil(chunk)];
+            pool::scope(|s| {
+                for ((((xs, cs), ss), os), count) in x
                     .chunks(chunk)
                     .zip(self.codes.chunks_mut(chunk))
                     .zip(self.scales.chunks_mut(chunk / BLOCK_SIZE))
                     .zip(out.chunks_mut(chunk))
-                    .map(|(((xs, cs), ss), os)| {
-                        s.spawn(move || {
-                            let c = pf.encode_slice(xs, cs, ss, bump);
-                            pf.decode_slice(cs, ss, os);
-                            c
-                        })
-                    })
-                    .collect();
-                handles.into_iter().map(|h| h.join().expect("qdq worker")).sum()
-            })
+                    .zip(counts.iter_mut())
+                {
+                    s.spawn(move || {
+                        let c = pf.encode_slice(xs, cs, ss, bump);
+                        pf.decode_slice(cs, ss, os);
+                        *count = c;
+                    });
+                }
+            });
+            counts.iter().sum()
         }
     }
 }

@@ -1,0 +1,282 @@
+//! Step-scoped quantized-operand cache + per-run scratch arena
+//! (DESIGN.md §Exec).
+//!
+//! Weights only change when the optimizer commits an update, yet the
+//! quantized linear layer used to transpose and re-encode them on every
+//! forward and backward of every layer — once per paired pass, once per
+//! eval, every step for the proxy's frozen teacher. [`ExecCache`] memoizes
+//! those operands per `(site, stage, format, bump)` key:
+//!
+//! * **Param entries** are invalidated as a set by
+//!   [`ExecCache::invalidate_params`], which
+//!   [`optimizer_step`](super::common::optimizer_step) calls after every
+//!   committed update (the "state version bump" — [`ExecCache::version`]
+//!   counts them). Within one version, repeated passes (paired fp32
+//!   reference, evals, gradient checks) hit the cache.
+//! * **Static entries** ([`Class::Static`]) belong to tensors the
+//!   optimizer never touches (the proxy's teacher) and survive
+//!   invalidation for the life of the run.
+//!
+//! The cache lives *inside* [`NativeState`](super::NativeState) — per
+//! run, not per model — because one `Arc`'d backend serves many
+//! concurrent sweep runs with different parameter values. Cloning a state
+//! (run branching, checkpoint restore) deliberately resets the cache:
+//! correctness never depends on an entry being present, only on stale
+//! entries being absent. Code that mutates `state.tensors` directly
+//! (outside `optimizer_step`) must call `invalidate_params` — in-repo
+//! call sites only mutate freshly initialized or cloned states, whose
+//! caches are empty.
+//!
+//! The embedded [`ScratchArena`] is the per-run buffer pool the training
+//! step draws transpose/decode scratch from (satellite of the same
+//! subsystem; the format kernels use the thread-local arena instead).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::formats::gemm::PackedMatrix;
+use crate::util::arena::ScratchArena;
+
+/// One weight-tensor quantization site: which state tensor, which layer
+/// slab. (The stage/format parts of the key are per-use.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Site {
+    pub tensor: u16,
+    pub layer: u16,
+}
+
+impl Site {
+    pub fn new(tensor: usize, layer: usize) -> Site {
+        debug_assert!(tensor <= u16::MAX as usize && layer <= u16::MAX as usize);
+        Site { tensor: tensor as u16, layer: layer as u16 }
+    }
+}
+
+/// Which derived operand of the weight a cache entry holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    /// The transposed `[n × k]` fp32 weight (shared by every forward
+    /// format — fp32 runs use it directly, MX/bf16 encode from it).
+    FwdT,
+    /// The forward-site operand: transposed weight under the forward
+    /// weight format (packed for MX, rounded for bf16).
+    FwdW,
+    /// The backward-site operand: the un-transposed weight re-blocked
+    /// along its output axis under the backward weight format.
+    BwdW,
+}
+
+/// Invalidation class of an entry's owning tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Class {
+    /// Optimizer-updated parameter: cleared by every version bump.
+    Param,
+    /// Frozen tensor (e.g. the proxy teacher): survives version bumps.
+    Static,
+}
+
+/// Full cache key: site, stage, effective element format (`FormatId as
+/// u8`), scale-bump flag.
+pub type Key = (Site, Stage, u8, bool);
+
+/// A memoized operand. Entries are `Arc`-shared so lookups are O(1)
+/// pointer clones regardless of tensor size.
+#[derive(Debug, Clone)]
+pub enum CachedOp {
+    Packed(Arc<PackedMatrix>),
+    Dense(Arc<Vec<f32>>),
+}
+
+impl CachedOp {
+    /// Unwrap a dense entry (keys are type-stable: a given `(stage, fmt)`
+    /// always maps to the same variant).
+    pub fn into_dense(self) -> Arc<Vec<f32>> {
+        match self {
+            CachedOp::Dense(v) => v,
+            CachedOp::Packed(_) => unreachable!("dense cache entry expected"),
+        }
+    }
+
+    /// Unwrap a packed entry.
+    pub fn into_packed(self) -> Arc<PackedMatrix> {
+        match self {
+            CachedOp::Packed(m) => m,
+            CachedOp::Dense(_) => unreachable!("packed cache entry expected"),
+        }
+    }
+}
+
+#[derive(Default)]
+struct Maps {
+    version: u64,
+    param: BTreeMap<Key, CachedOp>,
+    statics: BTreeMap<Key, CachedOp>,
+}
+
+/// The per-run operand cache + scratch arena (see module docs).
+pub struct ExecCache {
+    inner: Mutex<Maps>,
+    arena: Arc<ScratchArena>,
+    enabled: AtomicBool,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ExecCache {
+    pub fn new() -> ExecCache {
+        ExecCache {
+            inner: Mutex::new(Maps::default()),
+            arena: Arc::new(ScratchArena::new()),
+            enabled: AtomicBool::new(true),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Enable/disable memoization (disabled, every lookup recomputes —
+    /// the pre-cache behaviour benches use as their baseline). The arena
+    /// keeps working either way.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::SeqCst);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::SeqCst)
+    }
+
+    /// The per-run scratch arena.
+    pub fn arena(&self) -> &Arc<ScratchArena> {
+        &self.arena
+    }
+
+    /// How many parameter-set invalidations have happened (the state
+    /// version the param entries are implicitly keyed on).
+    pub fn version(&self) -> u64 {
+        self.inner.lock().unwrap().version
+    }
+
+    /// Bump the state version and drop every [`Class::Param`] entry.
+    /// Called by the optimizer after each committed update; must also be
+    /// called by anything else that mutates parameter tensors in place.
+    pub fn invalidate_params(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.version += 1;
+        m.param.clear();
+    }
+
+    /// `(hits, misses)` since construction (tests/diagnostics).
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::SeqCst), self.misses.load(Ordering::SeqCst))
+    }
+
+    /// Fetch the entry for `key`, computing and memoizing it on a miss.
+    /// `make` must not re-enter the cache (the entry lock is held while
+    /// it runs so concurrent lookups of the same key encode only once).
+    pub fn get_or_insert(
+        &self,
+        class: Class,
+        key: Key,
+        make: impl FnOnce() -> CachedOp,
+    ) -> CachedOp {
+        if !self.enabled() {
+            self.misses.fetch_add(1, Ordering::SeqCst);
+            return make();
+        }
+        let mut m = self.inner.lock().unwrap();
+        let map = match class {
+            Class::Param => &mut m.param,
+            Class::Static => &mut m.statics,
+        };
+        if let Some(hit) = map.get(&key).cloned() {
+            self.hits.fetch_add(1, Ordering::SeqCst);
+            return hit;
+        }
+        let made = make();
+        map.insert(key, made.clone());
+        self.misses.fetch_add(1, Ordering::SeqCst);
+        made
+    }
+}
+
+impl Default for ExecCache {
+    fn default() -> Self {
+        ExecCache::new()
+    }
+}
+
+impl std::fmt::Debug for ExecCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let m = self.inner.lock().unwrap();
+        write!(
+            f,
+            "ExecCache {{ version: {}, param entries: {}, static entries: {}, enabled: {} }}",
+            m.version,
+            m.param.len(),
+            m.statics.len(),
+            self.enabled()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense(v: f32) -> CachedOp {
+        CachedOp::Dense(Arc::new(vec![v; 4]))
+    }
+
+    fn key(tensor: usize, stage: Stage) -> Key {
+        (Site::new(tensor, 0), stage, 0, false)
+    }
+
+    #[test]
+    fn memoizes_until_invalidation_and_keeps_statics() {
+        let c = ExecCache::new();
+        let a = c.get_or_insert(Class::Param, key(0, Stage::FwdW), || dense(1.0));
+        let b = c.get_or_insert(Class::Param, key(0, Stage::FwdW), || dense(2.0));
+        // Second lookup hits: the make closure's 2.0 is never computed.
+        assert_eq!(b.clone().into_dense()[0], 1.0);
+        assert!(Arc::ptr_eq(&a.into_dense(), &b.into_dense()));
+        let s = c.get_or_insert(Class::Static, key(9, Stage::FwdT), || dense(7.0));
+        assert_eq!(c.stats(), (1, 2));
+        assert_eq!(c.version(), 0);
+
+        c.invalidate_params();
+        assert_eq!(c.version(), 1);
+        let after = c.get_or_insert(Class::Param, key(0, Stage::FwdW), || dense(3.0));
+        assert_eq!(after.into_dense()[0], 3.0, "param entry dropped by the bump");
+        let s2 = c.get_or_insert(Class::Static, key(9, Stage::FwdT), || dense(8.0));
+        assert!(
+            Arc::ptr_eq(&s.into_dense(), &s2.into_dense()),
+            "static entries survive invalidation"
+        );
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let c = ExecCache::new();
+        c.get_or_insert(Class::Param, key(0, Stage::FwdW), || dense(1.0));
+        let other_stage = c.get_or_insert(Class::Param, key(0, Stage::BwdW), || dense(2.0));
+        assert_eq!(other_stage.into_dense()[0], 2.0);
+        let other_fmt =
+            c.get_or_insert(Class::Param, (Site::new(0, 0), Stage::FwdW, 3, false), || dense(4.0));
+        assert_eq!(other_fmt.into_dense()[0], 4.0);
+        let other_layer =
+            c.get_or_insert(Class::Param, (Site::new(0, 1), Stage::FwdW, 0, false), || dense(5.0));
+        assert_eq!(other_layer.into_dense()[0], 5.0);
+    }
+
+    #[test]
+    fn disabled_cache_always_recomputes() {
+        let c = ExecCache::new();
+        c.set_enabled(false);
+        assert!(!c.enabled());
+        c.get_or_insert(Class::Param, key(0, Stage::FwdW), || dense(1.0));
+        let b = c.get_or_insert(Class::Param, key(0, Stage::FwdW), || dense(2.0));
+        assert_eq!(b.into_dense()[0], 2.0, "no memoization while disabled");
+        assert_eq!(c.stats().0, 0);
+        assert_eq!(c.arena().take_f32(8).len(), 8, "arena works regardless");
+    }
+}

@@ -10,11 +10,16 @@
 //! the gradient site, saved activations at the backward-activation site),
 //! exactly as the paper's custom VJP does.
 
+use std::borrow::Cow;
+use std::sync::Arc;
+
 use anyhow::{anyhow, ensure, Result};
 
+use super::cache::{CachedOp, Class, ExecCache, Site, Stage};
 use super::ops::{qgemm, quantize_site, QMat};
-use crate::formats::gemm::transpose;
+use crate::formats::gemm::{transpose, transpose_into, PackedMatrix};
 use crate::formats::packed::packed_qdq;
+use crate::formats::quant::bf16_rne;
 use crate::formats::spec::{hyper_idx, Fmt, FormatId};
 use crate::runtime::StepArgs;
 
@@ -24,10 +29,124 @@ pub const ADAM_B2: f32 = 0.95;
 pub const ADAM_EPS: f32 = 1e-8;
 
 /// Host-resident training state: flat f32 tensors in state-spec order
-/// (params ‖ adam-m ‖ adam-v [‖ backend extras, e.g. the proxy teacher]).
-#[derive(Debug, Clone)]
+/// (params ‖ adam-m ‖ adam-v [‖ backend extras, e.g. the proxy teacher]),
+/// plus the run's execution cache/arena ([`ExecCache`] — not part of the
+/// checkpointable state; see its docs for the invalidation contract).
+#[derive(Debug)]
 pub struct NativeState {
     pub tensors: Vec<Vec<f32>>,
+    pub exec: ExecCache,
+}
+
+impl NativeState {
+    pub fn new(tensors: Vec<Vec<f32>>) -> NativeState {
+        NativeState { tensors, exec: ExecCache::new() }
+    }
+}
+
+impl Clone for NativeState {
+    /// Cloning (run branching, paired snapshots) copies the tensors and
+    /// starts a *fresh* cache: entries memoized against the source's
+    /// parameter values must not survive into a state whose tensors may
+    /// be mutated independently. The enabled/disabled flag *is*
+    /// propagated, so a cache-off baseline state stays cache-off across
+    /// clone-based paths (paired runs, checkpoint branching).
+    fn clone(&self) -> NativeState {
+        let cloned = NativeState::new(self.tensors.clone());
+        cloned.exec.set_enabled(self.exec.enabled());
+        cloned
+    }
+}
+
+/// The cache context one quantized linear call runs under: which run
+/// cache, which weight-tensor site, and its invalidation class.
+#[derive(Clone, Copy)]
+pub struct WeightCtx<'c> {
+    pub ex: &'c ExecCache,
+    pub site: Site,
+    pub class: Class,
+}
+
+impl<'c> WeightCtx<'c> {
+    pub fn new(ex: &'c ExecCache, site: Site, class: Class) -> WeightCtx<'c> {
+        WeightCtx { ex, site, class }
+    }
+
+    /// A parameter-class context (the common case).
+    pub fn param(ex: &'c ExecCache, tensor: usize, layer: usize) -> WeightCtx<'c> {
+        WeightCtx::new(ex, Site::new(tensor, layer), Class::Param)
+    }
+}
+
+/// The forward weight-site operand `Q_w(wᵀ)` (`[n × k]`, blocks along k),
+/// memoized in the run cache until the optimizer bumps the version. The
+/// fp32 transpose is cached once per site ([`Stage::FwdT`]) and shared by
+/// every element format keyed on top of it.
+pub fn weight_fwd_site<'a>(w: &[f32], k: usize, n: usize, fmt: &Fmt, cx: WeightCtx) -> QMat<'a> {
+    debug_assert_eq!(w.len(), k * n);
+    let eff = if fmt.quant_fwd { fmt.w_fwd } else { FormatId::Fp32 };
+    let wt = cx
+        .ex
+        .get_or_insert(cx.class, (cx.site, Stage::FwdT, FormatId::Fp32 as u8, false), || {
+            CachedOp::Dense(Arc::new(transpose(w, k, n)))
+        })
+        .into_dense();
+    match eff {
+        FormatId::Fp32 => QMat::DenseShared(wt),
+        FormatId::Bf16 => {
+            let rounded = cx
+                .ex
+                .get_or_insert(cx.class, (cx.site, Stage::FwdW, eff as u8, false), || {
+                    CachedOp::Dense(Arc::new(wt.iter().map(|&v| bf16_rne(v)).collect()))
+                })
+                .into_dense();
+            QMat::DenseShared(rounded)
+        }
+        _ => {
+            let packed = cx
+                .ex
+                .get_or_insert(cx.class, (cx.site, Stage::FwdW, eff as u8, fmt.scale_bump), || {
+                    CachedOp::Packed(Arc::new(PackedMatrix::encode(&wt, n, k, eff, fmt.scale_bump)))
+                })
+                .into_packed();
+            QMat::MxShared(packed)
+        }
+    }
+}
+
+/// The backward weight-site operand `Q_w(w)` (`[k × n]`, re-blocked along
+/// n — the `dx` GEMM's reduction axis), memoized like
+/// [`weight_fwd_site`]. fp32 needs no derived operand and borrows `w`.
+pub fn weight_bwd_site<'a>(
+    w: &'a [f32],
+    k: usize,
+    n: usize,
+    fmt: &Fmt,
+    cx: WeightCtx,
+) -> QMat<'a> {
+    debug_assert_eq!(w.len(), k * n);
+    let eff = if fmt.quant_bwd { fmt.w_bwd } else { FormatId::Fp32 };
+    match eff {
+        FormatId::Fp32 => QMat::Dense(Cow::Borrowed(w)),
+        FormatId::Bf16 => {
+            let rounded = cx
+                .ex
+                .get_or_insert(cx.class, (cx.site, Stage::BwdW, eff as u8, false), || {
+                    CachedOp::Dense(Arc::new(w.iter().map(|&v| bf16_rne(v)).collect()))
+                })
+                .into_dense();
+            QMat::DenseShared(rounded)
+        }
+        _ => {
+            let packed = cx
+                .ex
+                .get_or_insert(cx.class, (cx.site, Stage::BwdW, eff as u8, fmt.scale_bump), || {
+                    CachedOp::Packed(Arc::new(PackedMatrix::encode(w, k, n, eff, fmt.scale_bump)))
+                })
+                .into_packed();
+            QMat::MxShared(packed)
+        }
+    }
 }
 
 /// Decoded per-step hyper vector (LR, optimizer, noise) plus the Adam
@@ -66,11 +185,19 @@ pub fn quantize_fwd_act<'a>(x: &'a [f32], rows: usize, cols: usize, fmt: &Fmt) -
 }
 
 /// `y[m×n] = qx · Q_w(w[k×n])` over a pre-quantized input (blocks along
-/// `k` on both operands).
-pub fn qlinear_fwd_pre(qx: &QMat, w: &[f32], m: usize, k: usize, n: usize, fmt: &Fmt) -> Vec<f32> {
-    debug_assert_eq!(w.len(), k * n);
-    let wt = transpose(w, k, n); // [n,k]
-    let (qw, _) = quantize_site(&wt, n, k, fmt.w_fwd, fmt.quant_fwd, fmt.scale_bump);
+/// `k` on both operands). The weight operand (transpose + encode) comes
+/// from the run cache (`cx`), so repeated passes at one optimizer version
+/// pay for it once.
+pub fn qlinear_fwd_pre(
+    qx: &QMat,
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    fmt: &Fmt,
+    cx: WeightCtx,
+) -> Vec<f32> {
+    let qw = weight_fwd_site(w, k, n, fmt, cx);
     let mut y = vec![0.0f32; m * n];
     qgemm(qx, &qw, m, n, k, &mut y);
     y
@@ -79,6 +206,7 @@ pub fn qlinear_fwd_pre(qx: &QMat, w: &[f32], m: usize, k: usize, n: usize, fmt: 
 /// `y[m×n] = x[m×k] · w[k×n]` with `x` at the forward activation site and
 /// `w` at the forward weight site (both with blocks along `k`). Returns
 /// `(y, x-site last-bin fraction)`.
+#[allow(clippy::too_many_arguments)]
 pub fn qlinear_fwd(
     x: &[f32],
     w: &[f32],
@@ -86,10 +214,11 @@ pub fn qlinear_fwd(
     k: usize,
     n: usize,
     fmt: &Fmt,
+    cx: WeightCtx,
 ) -> (Vec<f32>, f32) {
     debug_assert_eq!(x.len(), m * k);
     let (qx, fx) = quantize_fwd_act(x, m, k, fmt);
-    (qlinear_fwd_pre(&qx, w, m, k, n, fmt), fx)
+    (qlinear_fwd_pre(&qx, w, m, k, n, fmt, cx), fx)
 }
 
 /// Quantize an already-transposed saved input `xt[k×m]` at the backward
@@ -106,6 +235,9 @@ pub fn quantize_bwd_act<'a>(xt: &'a [f32], k: usize, m: usize, fmt: &Fmt) -> QMa
 /// dx = Q_g(dy) · Q_w(w)      (both re-blocked along n)
 /// dw = qxt · Q_g(dyᵀ)        (both re-blocked along m)
 /// ```
+///
+/// The weight operand comes from the run cache (`cx`); the `dyᵀ`
+/// transpose draws from the run's scratch arena.
 #[allow(clippy::too_many_arguments)]
 pub fn qlinear_bwd_pre(
     dy: &[f32],
@@ -115,6 +247,7 @@ pub fn qlinear_bwd_pre(
     k: usize,
     n: usize,
     fmt: &Fmt,
+    cx: WeightCtx,
     dw: &mut [f32],
 ) -> Vec<f32> {
     debug_assert_eq!(dy.len(), m * n);
@@ -123,11 +256,12 @@ pub fn qlinear_bwd_pre(
     let (en, bump) = (fmt.quant_bwd, fmt.scale_bump);
 
     let (qdy, _) = quantize_site(dy, m, n, fmt.g_bwd, en, bump);
-    let (qw, _) = quantize_site(w, k, n, fmt.w_bwd, en, bump); // blocks along n
+    let qw = weight_bwd_site(w, k, n, fmt, cx); // blocks along n
     let mut dx = vec![0.0f32; m * k];
     qgemm(&qdy, &qw, m, k, n, &mut dx);
 
-    let dyt = transpose(dy, m, n); // [n,m]
+    let mut dyt = cx.ex.arena().take_f32(dy.len()); // [n,m]
+    transpose_into(dy, m, n, &mut dyt);
     let (qdyt, _) = quantize_site(&dyt, n, m, fmt.g_bwd, en, bump);
     qgemm(qxt, &qdyt, k, n, m, dw);
     dx
@@ -152,12 +286,14 @@ pub fn qlinear_bwd(
     k: usize,
     n: usize,
     fmt: &Fmt,
+    cx: WeightCtx,
     dw: &mut [f32],
 ) -> Vec<f32> {
     debug_assert_eq!(x.len(), m * k);
-    let xt = transpose(x, m, k); // [k,m]
+    let mut xt = cx.ex.arena().take_f32(x.len()); // [k,m]
+    transpose_into(x, m, k, &mut xt);
     let qxt = quantize_bwd_act(&xt, k, m, fmt);
-    qlinear_bwd_pre(dy, &qxt, w, m, k, n, fmt, dw)
+    qlinear_bwd_pre(dy, &qxt, w, m, k, n, fmt, cx, dw)
 }
 
 /// The §6.1 layer-norm affine-parameter quantization site: quantizes with
@@ -208,7 +344,9 @@ pub fn adam_sgd_update(
 
 /// Apply the fused optimizer to params `[0, k)` with moments at `[k, 2k)`
 /// / `[2k, 3k)` of the state (the shared layout of both native backends;
-/// tensors past `3k` — e.g. the proxy teacher — are untouched). Returns
+/// tensors past `3k` — e.g. the proxy teacher — are untouched). Commits
+/// the update by bumping the execution-cache version, so every memoized
+/// parameter operand is re-encoded from the new values. Returns
 /// `(update_norm, param_norm)`.
 pub fn optimizer_step(
     state: &mut NativeState,
@@ -225,6 +363,7 @@ pub fn optimizer_step(
         let v = &mut tail2[0];
         upd_sq += adam_sgd_update(p, g, m, v, hyper.t, hyper.lr, hyper.sgd, hyper.momentum);
     }
+    state.exec.invalidate_params();
     let param_norm = global_norm(&state.tensors[..k]);
     ((upd_sq.sqrt()) as f32, param_norm)
 }
@@ -265,6 +404,10 @@ mod tests {
     use super::*;
     use crate::util::rng::Xoshiro256;
 
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
     #[test]
     fn qlinear_roundtrip_matches_dense_math_in_fp32() {
         let mut rng = Xoshiro256::seed_from(2);
@@ -272,7 +415,9 @@ mod tests {
         let x = rng.normal_vec(m * k);
         let w = rng.normal_vec(k * n);
         let fmt = Fmt::fp32();
-        let (y, frac) = qlinear_fwd(&x, &w, m, k, n, &fmt);
+        let ex = ExecCache::new();
+        let cx = WeightCtx::param(&ex, 0, 0);
+        let (y, frac) = qlinear_fwd(&x, &w, m, k, n, &fmt, cx);
         assert_eq!(frac, 0.0);
         for i in 0..m {
             for j in 0..n {
@@ -286,7 +431,7 @@ mod tests {
         // Backward shapes + fp32 correctness: dx = dy·wᵀ, dw = xᵀ·dy.
         let dy = rng.normal_vec(m * n);
         let mut dw = vec![0.0f32; k * n];
-        let dx = qlinear_bwd(&dy, &x, &w, m, k, n, &fmt, &mut dw);
+        let dx = qlinear_bwd(&dy, &x, &w, m, k, n, &fmt, cx, &mut dw);
         let mut acc = 0.0f64;
         for j in 0..n {
             acc += dy[j] as f64 * w[j] as f64; // dx[0,0] reduces over n
@@ -300,18 +445,55 @@ mod tests {
     }
 
     #[test]
+    fn cached_qlinear_is_bitwise_equal_to_uncached() {
+        // The cache must be an invisible optimization: a warm second pass
+        // (hits) and a cache-disabled pass produce bit-identical outputs.
+        let mut rng = Xoshiro256::seed_from(6);
+        let (m, k, n) = (8, 32, 64);
+        let x = rng.normal_vec(m * k);
+        let w = rng.normal_vec(k * n);
+        let dy = rng.normal_vec(m * n);
+        for fmt in [
+            Fmt::full(FormatId::E4M3, FormatId::E4M3),
+            Fmt::mx_mix(),
+            Fmt::bf16_act(FormatId::E4M3),
+        ] {
+            let cached = ExecCache::new();
+            let uncached = ExecCache::new();
+            uncached.set_enabled(false);
+            let run = |ex: &ExecCache| {
+                let cx = WeightCtx::param(ex, 0, 0);
+                let (y, _) = qlinear_fwd(&x, &w, m, k, n, &fmt, cx);
+                let mut dw = vec![0.0f32; k * n];
+                let dx = qlinear_bwd(&dy, &x, &w, m, k, n, &fmt, cx, &mut dw);
+                (y, dx, dw)
+            };
+            let cold = run(&cached);
+            let warm = run(&cached); // second pass: weight ops are hits
+            let plain = run(&uncached);
+            assert!(cached.stats().0 > 0, "warm pass must hit the cache");
+            for (a, b) in [(&cold, &warm), (&cold, &plain)] {
+                assert_eq!(bits(&a.0), bits(&b.0), "y diverged");
+                assert_eq!(bits(&a.1), bits(&b.1), "dx diverged");
+                assert_eq!(bits(&a.2), bits(&b.2), "dw diverged");
+            }
+        }
+    }
+
+    #[test]
     fn optimizer_step_moves_params_and_moments() {
-        let mut state = NativeState {
-            tensors: vec![vec![1.0f32; 8], vec![0.0f32; 8], vec![0.0f32; 8]],
-        };
+        let mut state =
+            NativeState::new(vec![vec![1.0f32; 8], vec![0.0f32; 8], vec![0.0f32; 8]]);
         let grads = vec![vec![0.5f32; 8]];
         let hyper =
             Hyper { lr: 1e-2, sgd: false, momentum: 0.0, label_noise: 0.0, t: 1.0 };
+        let v0 = state.exec.version();
         let (upd, pnorm) = optimizer_step(&mut state, &grads, 1, &hyper);
         assert!(upd > 0.0 && pnorm > 0.0);
         assert!(state.tensors[0].iter().all(|&v| v < 1.0), "Adam must step downhill");
         assert!(state.tensors[1].iter().all(|&v| v != 0.0), "m updated");
         assert!(state.tensors[2].iter().all(|&v| v != 0.0), "v updated");
+        assert_eq!(state.exec.version(), v0 + 1, "update commits a version bump");
     }
 
     #[test]

@@ -20,14 +20,15 @@
 
 use anyhow::{anyhow, ensure, Result};
 
+use super::cache::ExecCache;
 use super::common::{
     decode_args, global_norm, grad_bias, ln_gamma_site, optimizer_step, qlinear_bwd,
     qlinear_bwd_pre, qlinear_fwd, qlinear_fwd_pre, quantize_bwd_act, quantize_fwd_act,
-    NativeState,
+    NativeState, WeightCtx,
 };
 use super::model::swiglu_hidden;
 use super::ops::{act_bwd, act_fwd, layernorm_bwd, layernorm_fwd, qgemm, quantize_site, Activation};
-use crate::formats::gemm::transpose;
+use crate::formats::gemm::{transpose, transpose_into};
 use crate::formats::spec::{Fmt, BLOCK_SIZE};
 use crate::runtime::{Backend, Metrics, StepArgs, TensorSpec};
 use crate::util::rng::Xoshiro256;
@@ -354,8 +355,17 @@ impl LmModel {
     }
 
     /// Forward pass. `keep` retains the per-layer caches for the backward
-    /// pass (eval skips them).
-    fn forward(&self, p: &LmParams, inputs: &[usize], fmt: &Fmt, keep: bool) -> LmForward {
+    /// pass (eval skips them). Weight operands come from the run cache
+    /// `ex`; activation sites (q/k/v inputs, attention scores/probs)
+    /// re-encode per call as the data changes every step.
+    fn forward(
+        &self,
+        p: &LmParams,
+        inputs: &[usize],
+        fmt: &Fmt,
+        keep: bool,
+        ex: &ExecCache,
+    ) -> LmForward {
         let cfg = &self.cfg;
         let (d, hm, v) = (cfg.d_model, cfg.mlp_hidden(), cfg.vocab);
         let (t, hh, dh) = (cfg.ctx, cfg.n_heads, cfg.head_dim());
@@ -391,9 +401,12 @@ impl LmModel {
             let (qh, kh, vh) = {
                 let (qz1, fz) = quantize_fwd_act(&z1, n, d, fmt);
                 site(fz);
-                let q = qlinear_fwd_pre(&qz1, p.layer(WQ, k, d * d), n, d, d, fmt);
-                let kk = qlinear_fwd_pre(&qz1, p.layer(WK, k, d * d), n, d, d, fmt);
-                let vv = qlinear_fwd_pre(&qz1, p.layer(WV, k, d * d), n, d, d, fmt);
+                let wq = WeightCtx::param(ex, WQ, k);
+                let wk = WeightCtx::param(ex, WK, k);
+                let wv = WeightCtx::param(ex, WV, k);
+                let q = qlinear_fwd_pre(&qz1, p.layer(WQ, k, d * d), n, d, d, fmt, wq);
+                let kk = qlinear_fwd_pre(&qz1, p.layer(WK, k, d * d), n, d, d, fmt, wk);
+                let vv = qlinear_fwd_pre(&qz1, p.layer(WV, k, d * d), n, d, d, fmt, wv);
                 (self.split_heads(&q), self.split_heads(&kk), self.split_heads(&vv))
             };
 
@@ -428,7 +441,8 @@ impl LmModel {
 
             // -- output projection + residual --
             let attnout = self.merge_heads(&ctx_h);
-            let (o, fa) = qlinear_fwd(&attnout, p.layer(WO, k, d * d), n, d, d, fmt);
+            let cxo = WeightCtx::param(ex, WO, k);
+            let (o, fa) = qlinear_fwd(&attnout, p.layer(WO, k, d * d), n, d, d, fmt, cxo);
             site(fa);
             let x_mid: Vec<f32> = x.iter().zip(&o).map(|(&a, &b)| a + b).collect();
 
@@ -439,12 +453,15 @@ impl LmModel {
             let (h, gate) = {
                 let (qz2, fz2) = quantize_fwd_act(&z2, n, d, fmt);
                 site(fz2);
-                let h = qlinear_fwd_pre(&qz2, p.layer(W1, k, d * hm), n, d, hm, fmt);
-                let gate = qlinear_fwd_pre(&qz2, p.layer(WG, k, d * hm), n, d, hm, fmt);
+                let w1 = WeightCtx::param(ex, W1, k);
+                let wg = WeightCtx::param(ex, WG, k);
+                let h = qlinear_fwd_pre(&qz2, p.layer(W1, k, d * hm), n, d, hm, fmt, w1);
+                let gate = qlinear_fwd_pre(&qz2, p.layer(WG, k, d * hm), n, d, hm, fmt, wg);
                 (h, gate)
             };
             let phi = act_fwd(Activation::Swiglu, &h, Some(gate.as_slice()));
-            let (mlp, fphi) = qlinear_fwd(&phi, p.layer(W2, k, hm * d), n, hm, d, fmt);
+            let cx2 = WeightCtx::param(ex, W2, k);
+            let (mlp, fphi) = qlinear_fwd(&phi, p.layer(W2, k, hm * d), n, hm, d, fmt, cx2);
             site(fphi);
             let x_next: Vec<f32> = x_mid.iter().zip(&mlp).map(|(&a, &b)| a + b).collect();
 
@@ -475,7 +492,8 @@ impl LmModel {
         let (gfq, ff) = ln_gamma_site(p.t[LNF], fmt);
         ln_fracs.push(ff);
         let (zf, xhatf, inv_stdf) = layernorm_fwd(&x, n, d, &gfq);
-        let (logits, fzf) = qlinear_fwd(&zf, p.t[HEAD], n, d, v, fmt);
+        let cxh = WeightCtx::param(ex, HEAD, 0);
+        let (logits, fzf) = qlinear_fwd(&zf, p.t[HEAD], n, d, v, fmt, cxh);
         site(fzf);
 
         LmForward {
@@ -519,6 +537,7 @@ impl LmModel {
     }
 
     /// Backward pass: gradients for every tensor in [`PNAMES`] order.
+    #[allow(clippy::too_many_arguments)]
     fn backward(
         &self,
         p: &LmParams,
@@ -526,6 +545,7 @@ impl LmModel {
         inputs: &[usize],
         dlogits: Vec<f32>,
         fmt: &Fmt,
+        ex: &ExecCache,
     ) -> Vec<Vec<f32>> {
         let cfg = &self.cfg;
         let (d, hm, v) = (cfg.d_model, cfg.mlp_hidden(), cfg.vocab);
@@ -541,7 +561,8 @@ impl LmModel {
 
         // -- LM head + final LN --
         let (xhatf, inv_stdf, gfq, zf) = fwd.fin.as_ref().expect("backward needs caches");
-        let dzf = qlinear_bwd(&dlogits, zf, p.t[HEAD], n, d, v, fmt, &mut grads[HEAD]);
+        let cxh = WeightCtx::param(ex, HEAD, 0);
+        let dzf = qlinear_bwd(&dlogits, zf, p.t[HEAD], n, d, v, fmt, cxh, &mut grads[HEAD]);
         let (dxf, dgf) = layernorm_bwd(&dzf, xhatf, inv_stdf, gfq, n, d);
         grads[LNF].copy_from_slice(&dgf);
 
@@ -558,13 +579,15 @@ impl LmModel {
                 hm,
                 d,
                 fmt,
+                WeightCtx::param(ex, W2, k),
                 &mut grads[W2][k * hm * d..(k + 1) * hm * d],
             );
             let (dh_, dgate) = act_bwd(Activation::Swiglu, &c.h, Some(c.gate.as_slice()), &dphi);
             let dgate = dgate.expect("swiglu gate grad");
             // z2ᵀ is re-blocked (along the token axis) and encoded once,
             // shared by both MLP weight gradients.
-            let z2t = transpose(&c.z2, n, d);
+            let mut z2t = ex.arena().take_f32(c.z2.len());
+            transpose_into(&c.z2, n, d, &mut z2t);
             let qz2t = quantize_bwd_act(&z2t, d, n, fmt);
             let mut dz2 = qlinear_bwd_pre(
                 &dh_,
@@ -574,6 +597,7 @@ impl LmModel {
                 d,
                 hm,
                 fmt,
+                WeightCtx::param(ex, W1, k),
                 &mut grads[W1][k * d * hm..(k + 1) * d * hm],
             );
             let dz_gate = qlinear_bwd_pre(
@@ -584,6 +608,7 @@ impl LmModel {
                 d,
                 hm,
                 fmt,
+                WeightCtx::param(ex, WG, k),
                 &mut grads[WG][k * d * hm..(k + 1) * d * hm],
             );
             for (a, b) in dz2.iter_mut().zip(&dz_gate) {
@@ -603,6 +628,7 @@ impl LmModel {
                 d,
                 d,
                 fmt,
+                WeightCtx::param(ex, WO, k),
                 &mut grads[WO][k * d * d..(k + 1) * d * d],
             );
             let do_h = self.split_heads(&dattnout);
@@ -653,7 +679,8 @@ impl LmModel {
 
             // -- q/k/v projection backward; input grads accumulate on z1,
             // z1ᵀ is encoded once and shared by all three weight grads --
-            let z1t = transpose(&c.z1, n, d);
+            let mut z1t = ex.arena().take_f32(c.z1.len());
+            transpose_into(&c.z1, n, d, &mut z1t);
             let qz1t = quantize_bwd_act(&z1t, d, n, fmt);
             let mut dz1 = qlinear_bwd_pre(
                 &dq,
@@ -663,6 +690,7 @@ impl LmModel {
                 d,
                 d,
                 fmt,
+                WeightCtx::param(ex, WQ, k),
                 &mut grads[WQ][k * d * d..(k + 1) * d * d],
             );
             for (idx, dy) in [(WK, &dk), (WV, &dv)] {
@@ -674,6 +702,7 @@ impl LmModel {
                     d,
                     d,
                     fmt,
+                    WeightCtx::param(ex, idx, k),
                     &mut grads[idx][k * d * d..(k + 1) * d * d],
                 );
                 for (a, b) in dz1.iter_mut().zip(&dzi) {
@@ -700,7 +729,7 @@ impl LmModel {
     pub fn loss(&self, state: &NativeState, args: &StepArgs) -> Result<f32> {
         let (fmt, _) = decode_args(args)?;
         let (ins, tgt) = self.decode_tokens(args)?;
-        let fwd = self.forward(&self.params(state), &ins, &fmt, false);
+        let fwd = self.forward(&self.params(state), &ins, &fmt, false, &state.exec);
         Ok(Self::ce_loss(&fwd.logits, &tgt, self.cfg.vocab))
     }
 
@@ -710,9 +739,9 @@ impl LmModel {
         let (fmt, _) = decode_args(args)?;
         let (ins, tgt) = self.decode_tokens(args)?;
         let p = self.params(state);
-        let fwd = self.forward(&p, &ins, &fmt, true);
+        let fwd = self.forward(&p, &ins, &fmt, true, &state.exec);
         let (_, dl) = Self::loss_and_dlogits(&fwd.logits, &tgt, self.cfg.vocab);
-        Ok(self.backward(&p, &fwd, &ins, dl, &fmt))
+        Ok(self.backward(&p, &fwd, &ins, dl, &fmt, &state.exec))
     }
 
     fn do_step(
@@ -726,9 +755,9 @@ impl LmModel {
 
         let (loss, fwd, grads) = {
             let p = self.params(&state);
-            let fwd = self.forward(&p, &ins, &fmt, true);
+            let fwd = self.forward(&p, &ins, &fmt, true, &state.exec);
             let (loss, dl) = Self::loss_and_dlogits(&fwd.logits, &tgt, self.cfg.vocab);
-            let grads = self.backward(&p, &fwd, &ins, dl, &fmt);
+            let grads = self.backward(&p, &fwd, &ins, dl, &fmt, &state.exec);
             (loss, fwd, grads)
         };
         let grad_norm = global_norm(&grads);
@@ -736,9 +765,9 @@ impl LmModel {
         let (eps_ratio, cosine) = if paired {
             let fp32 = Fmt::fp32();
             let p = self.params(&state);
-            let fwd0 = self.forward(&p, &ins, &fp32, true);
+            let fwd0 = self.forward(&p, &ins, &fp32, true, &state.exec);
             let (_, dl0) = Self::loss_and_dlogits(&fwd0.logits, &tgt, self.cfg.vocab);
-            let g_ref = self.backward(&p, &fwd0, &ins, dl0, &fp32);
+            let g_ref = self.backward(&p, &fwd0, &ins, dl0, &fp32, &state.exec);
             grad_bias(&grads, &g_ref)
         } else {
             (0.0, 0.0)
@@ -854,7 +883,7 @@ impl Backend for LmModel {
                 tensors.push(vec![0.0f32; n]);
             }
         }
-        Ok(NativeState { tensors })
+        Ok(NativeState::new(tensors))
     }
 
     fn step(&self, state: NativeState, args: &StepArgs) -> Result<(NativeState, Metrics)> {
@@ -868,7 +897,7 @@ impl Backend for LmModel {
     fn eval(&self, state: &NativeState, tokens: &[i32], fmt: &[f32]) -> Result<f32> {
         let fmt = Fmt::from_vec(fmt).ok_or_else(|| anyhow!("undecodable fmt vector"))?;
         let (ins, tgt) = self.decode_token_slice(tokens)?;
-        let fwd = self.forward(&self.params(state), &ins, &fmt, false);
+        let fwd = self.forward(&self.params(state), &ins, &fmt, false, &state.exec);
         Ok(Self::ce_loss(&fwd.logits, &tgt, self.cfg.vocab))
     }
 
@@ -900,7 +929,7 @@ impl Backend for LmModel {
                 ts.elems()
             );
         }
-        Ok(NativeState { tensors })
+        Ok(NativeState::new(tensors))
     }
 }
 

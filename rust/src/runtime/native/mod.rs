@@ -13,6 +13,8 @@
 //!   diagnostics, and the quantized-linear site pair both models use
 //! * [`ops`] — quantization sites, the quantized-GEMM dispatcher, layer
 //!   norm, activations
+//! * [`cache`] — the step-scoped quantized-operand cache + per-run
+//!   scratch arena every weight site routes through (DESIGN.md §Exec)
 //! * [`NativeEngine`] — the name→model registry: any
 //!   `proxy_<act>_<ln|noln>_L<depth>_D<width>` name loads, the built-in
 //!   `lm_*` ladder ([`LM_LADDER`]) plus any
@@ -25,11 +27,13 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Result};
 
+pub mod cache;
 pub mod common;
 pub mod lm;
 pub mod model;
 pub mod ops;
 
+pub use cache::ExecCache;
 pub use common::NativeState;
 pub use lm::{LmConfig, LmModel, DEFAULT_LM_BATCH, LM_LADDER};
 pub use model::{ProxyConfig, ProxyModel};

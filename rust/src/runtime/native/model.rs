@@ -26,13 +26,14 @@
 
 use anyhow::{anyhow, bail, ensure, Result};
 
+use super::cache::{Class, ExecCache, Site};
 use super::common::{
     decode_args, global_norm, grad_bias, ln_gamma_site, optimizer_step, qlinear_bwd,
     qlinear_bwd_pre, qlinear_fwd, qlinear_fwd_pre, quantize_bwd_act, quantize_fwd_act, Hyper,
-    NativeState,
+    NativeState, WeightCtx,
 };
 use super::ops::{act_bwd, act_fwd, layernorm_bwd, layernorm_fwd, Activation};
-use crate::formats::gemm::transpose;
+use crate::formats::gemm::transpose_into;
 use crate::formats::spec::{Fmt, BLOCK_SIZE};
 use crate::runtime::{Backend, Metrics, StepArgs, TensorSpec};
 use crate::util::rng::Xoshiro256;
@@ -183,12 +184,31 @@ struct ForwardPass {
     act_fracs: Vec<f32>,
 }
 
-/// Immutable view of one parameter set inside a [`NativeState`].
+/// Immutable view of one parameter set inside a [`NativeState`], plus its
+/// operand-cache identity (state-tensor base index + invalidation class).
 struct ParamsView<'a> {
     w1: &'a [f32],
     w2: &'a [f32],
     wg: Option<&'a [f32]>,
     ln: Option<&'a [f32]>,
+    /// State-tensor index of `w1` (0 for the student, `3k` for the
+    /// teacher) — cache keys derive from it so the two sets never alias.
+    base: usize,
+    /// `Param` for the student (invalidated per optimizer step), `Static`
+    /// for the frozen teacher (its encodes live for the whole run).
+    class: Class,
+}
+
+/// Per-set tensor offsets within a [`ParamsView`] (cache-site ids).
+const T_W1: usize = 0;
+const T_W2: usize = 1;
+const T_WG: usize = 2;
+
+impl ParamsView<'_> {
+    /// The weight-cache context for tensor offset `t`, layer `layer`.
+    fn cx<'c>(&self, ex: &'c ExecCache, t: usize, layer: usize) -> WeightCtx<'c> {
+        WeightCtx::new(ex, Site::new(self.base + t, layer), self.class)
+    }
 }
 
 /// The native proxy [`Backend`]: one residual-MLP student–teacher model,
@@ -238,6 +258,8 @@ impl ProxyModel {
             w2: &s.tensors[1],
             wg: swiglu.then(|| s.tensors[2].as_slice()),
             ln: self.cfg.layernorm.then(|| s.tensors[2 + swiglu as usize].as_slice()),
+            base: 0,
+            class: Class::Param,
         }
     }
 
@@ -249,6 +271,8 @@ impl ProxyModel {
             w2: &s.tensors[t0 + 1],
             wg: swiglu.then(|| s.tensors[t0 + 2].as_slice()),
             ln: None,
+            base: t0,
+            class: Class::Static,
         }
     }
 
@@ -273,7 +297,15 @@ impl ProxyModel {
 
     /// Forward pass over one parameter view. `keep` retains per-layer
     /// intermediates for the backward pass (the teacher skips them).
-    fn forward(&self, p: &ParamsView, x: &[f32], fmt: &Fmt, keep: bool) -> ForwardPass {
+    /// Weight operands (transpose + encode) come from the run cache `ex`.
+    fn forward(
+        &self,
+        p: &ParamsView,
+        x: &[f32],
+        fmt: &Fmt,
+        keep: bool,
+        ex: &ExecCache,
+    ) -> ForwardPass {
         let (l, d, hd, b) = (self.cfg.depth, self.cfg.d_model, self.cfg.hidden(), self.cfg.batch);
         let mut a = x.to_vec();
         let mut caches = Vec::with_capacity(if keep { l } else { 0 });
@@ -298,17 +330,17 @@ impl ProxyModel {
             // and shared by both projections --
             let (h, gate, fz) = {
                 let (qz, fz) = quantize_fwd_act(&z, b, d, fmt);
-                let h = qlinear_fwd_pre(&qz, w1k, b, d, hd, fmt);
+                let h = qlinear_fwd_pre(&qz, w1k, b, d, hd, fmt, p.cx(ex, T_W1, k));
                 let gate = p.wg.map(|wg| {
                     let wgk = &wg[k * d * hd..(k + 1) * d * hd];
-                    qlinear_fwd_pre(&qz, wgk, b, d, hd, fmt)
+                    qlinear_fwd_pre(&qz, wgk, b, d, hd, fmt, p.cx(ex, T_WG, k))
                 });
                 (h, gate, fz)
             };
             let phi = act_fwd(self.cfg.activation, &h, gate.as_deref());
 
             // -- out = Q(φ) · Q(W2); A_k = A_{k-1} + out --
-            let (outk, fphi) = qlinear_fwd(&phi, w2k, b, hd, d, fmt);
+            let (outk, fphi) = qlinear_fwd(&phi, w2k, b, hd, d, fmt, p.cx(ex, T_W2, k));
             let a_next: Vec<f32> = a.iter().zip(&outk).map(|(&x0, &y)| x0 + y).collect();
 
             ln_fracs.push(ln_frac);
@@ -332,6 +364,7 @@ impl ProxyModel {
         fwd: &ForwardPass,
         dout: Vec<f32>,
         fmt: &Fmt,
+        ex: &ExecCache,
     ) -> Vec<Vec<f32>> {
         let (l, d, hd, b) = (self.cfg.depth, self.cfg.d_model, self.cfg.hidden(), self.cfg.batch);
         let mut g_w1 = vec![0.0f32; l * d * hd];
@@ -347,7 +380,7 @@ impl ProxyModel {
 
             // -- through out = φ·W2:  dφ = Q(G)·Q(W2)ᵀ, dW2 = Q(φ)ᵀ·Q(G) --
             let g_w2k = &mut g_w2[k * hd * d..(k + 1) * hd * d];
-            let dphi = qlinear_bwd(&da, &c.phi, w2k, b, hd, d, fmt, g_w2k);
+            let dphi = qlinear_bwd(&da, &c.phi, w2k, b, hd, d, fmt, p.cx(ex, T_W2, k), g_w2k);
 
             // -- through φ --
             let (dh, dgate) = act_bwd(self.cfg.activation, &c.h, c.gate.as_deref(), &dphi);
@@ -355,7 +388,8 @@ impl ProxyModel {
             // -- through h = z·W1:  dz = Q(dh)·Q(W1)ᵀ, dW1 = Q(z)ᵀ·Q(dh);
             // zᵀ is re-blocked along the batch axis and encoded once,
             // shared with the gate-projection gradient --
-            let zt = transpose(&c.z, b, d);
+            let mut zt = ex.arena().take_f32(c.z.len());
+            transpose_into(&c.z, b, d, &mut zt);
             let qzt = quantize_bwd_act(&zt, d, b, fmt);
             let mut dz = qlinear_bwd_pre(
                 &dh,
@@ -365,6 +399,7 @@ impl ProxyModel {
                 d,
                 hd,
                 fmt,
+                p.cx(ex, T_W1, k),
                 &mut g_w1[k * d * hd..(k + 1) * d * hd],
             );
 
@@ -380,6 +415,7 @@ impl ProxyModel {
                     d,
                     hd,
                     fmt,
+                    p.cx(ex, T_WG, k),
                     &mut g_wg_buf[k * d * hd..(k + 1) * d * hd],
                 );
                 for (a0, v) in dz.iter_mut().zip(&dz_gate) {
@@ -431,7 +467,9 @@ impl ProxyModel {
         ensure!(args.tokens.is_none(), "proxy backend takes no tokens");
         let (fmt, hyper) = decode_args(args)?;
         let (x, noise) = self.batch_inputs(args.seed, args.step, hyper.label_noise);
-        let t = self.forward(&self.teacher(state), &x, &Fmt::fp32(), false);
+        // Teacher weights are frozen: their transposes cache as Static
+        // entries and survive every optimizer version bump.
+        let t = self.forward(&self.teacher(state), &x, &Fmt::fp32(), false, &state.exec);
         let target: Vec<f32> = t.out.iter().zip(&noise).map(|(&o, &e)| o + e).collect();
         Ok((fmt, hyper, x, target))
     }
@@ -440,7 +478,7 @@ impl ProxyModel {
     /// forward half of [`Backend::step`], exposed for gradient checks.
     pub fn loss(&self, state: &NativeState, args: &StepArgs) -> Result<f32> {
         let (fmt, _, x, target) = self.prepare(state, args)?;
-        let fwd = self.forward(&self.student(state), &x, &fmt, false);
+        let fwd = self.forward(&self.student(state), &x, &fmt, false, &state.exec);
         Ok(Self::loss_and_dout(&fwd.out, &target).0)
     }
 
@@ -449,9 +487,9 @@ impl ProxyModel {
     pub fn grads(&self, state: &NativeState, args: &StepArgs) -> Result<Vec<Vec<f32>>> {
         let (fmt, _, x, target) = self.prepare(state, args)?;
         let p = self.student(state);
-        let fwd = self.forward(&p, &x, &fmt, true);
+        let fwd = self.forward(&p, &x, &fmt, true, &state.exec);
         let (_, dout) = Self::loss_and_dout(&fwd.out, &target);
-        Ok(self.backward(&p, &fwd, dout, &fmt))
+        Ok(self.backward(&p, &fwd, dout, &fmt, &state.exec))
     }
 
     fn do_step(
@@ -465,20 +503,21 @@ impl ProxyModel {
         // Forward + backward under the active precision scheme.
         let (loss, fwd, grads) = {
             let p = self.student(&state);
-            let fwd = self.forward(&p, &x, &fmt, true);
+            let fwd = self.forward(&p, &x, &fmt, true, &state.exec);
             let (loss, dout) = Self::loss_and_dout(&fwd.out, &target);
-            let grads = self.backward(&p, &fwd, dout, &fmt);
+            let grads = self.backward(&p, &fwd, dout, &fmt, &state.exec);
             (loss, fwd, grads)
         };
         let grad_norm = global_norm(&grads);
 
-        // Paired mode: FP32 gradient at the same parameter point (Fig. 4).
+        // Paired mode: FP32 gradient at the same parameter point (Fig. 4)
+        // — the weight transposes cached by the quantized pass are reused.
         let (eps_ratio, cosine) = if paired {
             let fp32 = Fmt::fp32();
             let p = self.student(&state);
-            let fwd0 = self.forward(&p, &x, &fp32, true);
+            let fwd0 = self.forward(&p, &x, &fp32, true, &state.exec);
             let (_, dout0) = Self::loss_and_dout(&fwd0.out, &target);
-            let g_ref = self.backward(&p, &fwd0, dout0, &fp32);
+            let g_ref = self.backward(&p, &fwd0, dout0, &fp32, &state.exec);
             grad_bias(&grads, &g_ref)
         } else {
             (0.0, 0.0)
@@ -563,7 +602,7 @@ impl Backend for ProxyModel {
         for (i, n) in self.cfg.teacher_names().iter().enumerate() {
             tensors.push(weight_init(&teacher, n, i as u64));
         }
-        Ok(NativeState { tensors })
+        Ok(NativeState::new(tensors))
     }
 
     fn step(&self, state: NativeState, args: &StepArgs) -> Result<(NativeState, Metrics)> {
@@ -598,7 +637,7 @@ impl Backend for ProxyModel {
                 bail!("tensor {}: {} elems, expected {}", ts.name, t.len(), ts.elems());
             }
         }
-        Ok(NativeState { tensors })
+        Ok(NativeState::new(tensors))
     }
 }
 

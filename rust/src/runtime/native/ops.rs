@@ -15,6 +15,7 @@
 //! through its bit-true LUT first.
 
 use std::borrow::Cow;
+use std::sync::Arc;
 
 use crate::formats::gemm::{gemm, gemm_f32, PackedMatrix};
 use crate::formats::quant::bf16_rne;
@@ -23,19 +24,38 @@ use crate::formats::spec::{FormatId, BLOCK_SIZE};
 /// One GEMM operand after its quantization site. Layout contract: row-major
 /// with the reduction axis contiguous (the `A[m×k]` / `B[n×k]ᵀ` convention
 /// of [`gemm`]).
+///
+/// The `*Shared` variants hold `Arc`'d operands on loan from the
+/// step-scoped [`ExecCache`](super::cache::ExecCache) — numerically
+/// identical to their owned counterparts, just not re-encoded per use.
 pub enum QMat<'a> {
     /// MX-quantized: element codes + block scales, ready for the packed GEMM.
     Mx(PackedMatrix),
+    /// A cached packed operand (weights between optimizer versions).
+    MxShared(Arc<PackedMatrix>),
     /// fp32 passthrough (borrowed) or bf16-rounded copy (owned).
     Dense(Cow<'a, [f32]>),
+    /// A cached dense operand (transposed fp32 / bf16-rounded weights).
+    DenseShared(Arc<Vec<f32>>),
 }
 
 impl QMat<'_> {
+    /// The packed form, when this operand is MX-quantized.
+    fn as_packed(&self) -> Option<&PackedMatrix> {
+        match self {
+            QMat::Mx(m) => Some(m),
+            QMat::MxShared(m) => Some(m.as_ref()),
+            QMat::Dense(_) | QMat::DenseShared(_) => None,
+        }
+    }
+
     /// Dequantized dense view (bitwise equal to quantize→dequantize).
     fn dense(&self) -> Cow<'_, [f32]> {
         match self {
             QMat::Mx(m) => Cow::Owned(m.decode()),
+            QMat::MxShared(m) => Cow::Owned(m.decode()),
             QMat::Dense(v) => Cow::Borrowed(v.as_ref()),
+            QMat::DenseShared(v) => Cow::Borrowed(v.as_slice()),
         }
     }
 }
@@ -77,8 +97,8 @@ pub fn quantize_site(
 /// formats allowed). Any dense operand → the dense f64-accumulating
 /// kernel over dequantized values.
 pub fn qgemm(a: &QMat, b: &QMat, m: usize, n: usize, k: usize, out: &mut [f32]) {
-    match (a, b) {
-        (QMat::Mx(pa), QMat::Mx(pb)) => {
+    match (a.as_packed(), b.as_packed()) {
+        (Some(pa), Some(pb)) => {
             debug_assert_eq!((pa.rows, pa.cols), (m, k));
             debug_assert_eq!((pb.rows, pb.cols), (n, k));
             gemm(pa, pb, out);

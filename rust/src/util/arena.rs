@@ -1,0 +1,191 @@
+//! Recycling scratch-buffer arena (DESIGN.md §Exec).
+//!
+//! The execution layer's hot loops need short-lived f32/f64 buffers —
+//! decoded GEMM panels, transposed operands, expanded matvec inputs. A
+//! [`ScratchArena`] hands out [`F32Buf`]/[`F64Buf`] guards that return
+//! their allocation to the arena on drop, so steady-state loops allocate
+//! nothing after warm-up.
+//!
+//! Two instantiation patterns:
+//! * [`local`] — a per-thread arena for the format kernels (each pool
+//!   worker reuses its own buffers across calls, lock-free in practice).
+//! * One arena per [`ExecCache`](crate::runtime::native::ExecCache) —
+//!   the per-run arena the native training step draws transpose scratch
+//!   from.
+//!
+//! Buffers come back zero-filled (`take_*` is `resize`-style), so callers
+//! never observe stale data.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{Arc, Mutex};
+
+/// Maximum buffers kept per element type; excess allocations are dropped
+/// on return so a one-off huge temporary cannot pin memory forever.
+const MAX_POOLED: usize = 32;
+
+/// A pool of reusable `Vec<f32>` / `Vec<f64>` scratch allocations.
+pub struct ScratchArena {
+    f32s: Mutex<Vec<Vec<f32>>>,
+    f64s: Mutex<Vec<Vec<f64>>>,
+}
+
+impl ScratchArena {
+    pub fn new() -> ScratchArena {
+        ScratchArena { f32s: Mutex::new(Vec::new()), f64s: Mutex::new(Vec::new()) }
+    }
+
+    /// Take a zero-filled f32 buffer of exactly `len` elements.
+    pub fn take_f32(self: &Arc<Self>, len: usize) -> F32Buf {
+        let mut vec = take_from(&self.f32s, len);
+        vec.clear();
+        vec.resize(len, 0.0);
+        F32Buf { vec, home: self.clone() }
+    }
+
+    /// Take a zero-filled f64 buffer of exactly `len` elements.
+    pub fn take_f64(self: &Arc<Self>, len: usize) -> F64Buf {
+        let mut vec = take_from(&self.f64s, len);
+        vec.clear();
+        vec.resize(len, 0.0);
+        F64Buf { vec, home: self.clone() }
+    }
+
+    /// Buffers currently parked in the arena (diagnostics/tests).
+    pub fn pooled(&self) -> (usize, usize) {
+        (self.f32s.lock().unwrap().len(), self.f64s.lock().unwrap().len())
+    }
+}
+
+impl Default for ScratchArena {
+    fn default() -> Self {
+        ScratchArena::new()
+    }
+}
+
+impl std::fmt::Debug for ScratchArena {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (n32, n64) = self.pooled();
+        write!(f, "ScratchArena {{ f32 bufs: {n32}, f64 bufs: {n64} }}")
+    }
+}
+
+/// Pop the first pooled buffer whose capacity already covers `len`
+/// (avoiding a realloc), else any buffer, else a fresh empty one.
+fn take_from<T>(store: &Mutex<Vec<Vec<T>>>, len: usize) -> Vec<T> {
+    let mut s = store.lock().unwrap();
+    match s.iter().position(|b| b.capacity() >= len) {
+        Some(pos) => s.swap_remove(pos),
+        None => s.pop().unwrap_or_default(),
+    }
+}
+
+fn give_back<T>(store: &Mutex<Vec<Vec<T>>>, vec: Vec<T>) {
+    if vec.capacity() == 0 {
+        return;
+    }
+    let mut s = store.lock().unwrap();
+    if s.len() < MAX_POOLED {
+        s.push(vec);
+    }
+}
+
+/// An f32 scratch buffer on loan from a [`ScratchArena`]; derefs to
+/// `[f32]` and returns its allocation on drop.
+pub struct F32Buf {
+    vec: Vec<f32>,
+    home: Arc<ScratchArena>,
+}
+
+impl Deref for F32Buf {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.vec
+    }
+}
+
+impl DerefMut for F32Buf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.vec
+    }
+}
+
+impl Drop for F32Buf {
+    fn drop(&mut self) {
+        give_back(&self.home.f32s, std::mem::take(&mut self.vec));
+    }
+}
+
+/// An f64 scratch buffer on loan from a [`ScratchArena`].
+pub struct F64Buf {
+    vec: Vec<f64>,
+    home: Arc<ScratchArena>,
+}
+
+impl Deref for F64Buf {
+    type Target = [f64];
+
+    fn deref(&self) -> &[f64] {
+        &self.vec
+    }
+}
+
+impl DerefMut for F64Buf {
+    fn deref_mut(&mut self) -> &mut [f64] {
+        &mut self.vec
+    }
+}
+
+impl Drop for F64Buf {
+    fn drop(&mut self) {
+        give_back(&self.home.f64s, std::mem::take(&mut self.vec));
+    }
+}
+
+thread_local! {
+    static LOCAL: Arc<ScratchArena> = Arc::new(ScratchArena::new());
+}
+
+/// The calling thread's arena (each pool worker reuses its own buffers
+/// across kernel calls with no cross-thread contention).
+pub fn local() -> Arc<ScratchArena> {
+    LOCAL.with(|a| a.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_are_zeroed_sized_and_recycled() {
+        let arena = Arc::new(ScratchArena::new());
+        let cap = {
+            let mut b = arena.take_f32(1000);
+            assert_eq!(b.len(), 1000);
+            assert!(b.iter().all(|&v| v == 0.0));
+            b[7] = 3.5;
+            b.vec.capacity()
+        };
+        assert_eq!(arena.pooled().0, 1, "dropped buffer returns to the arena");
+        let b2 = arena.take_f32(500);
+        assert_eq!(b2.len(), 500);
+        assert!(b2.iter().all(|&v| v == 0.0), "recycled buffer is re-zeroed");
+        assert!(b2.vec.capacity() >= cap.min(500), "allocation reused");
+        let d = arena.take_f64(64);
+        assert_eq!(d.len(), 64);
+    }
+
+    #[test]
+    fn thread_local_arena_is_per_thread() {
+        let a = local();
+        let b = local();
+        assert!(Arc::ptr_eq(&a, &b), "same thread, same arena");
+        drop(a.take_f32(16));
+        std::thread::spawn(|| {
+            let c = local();
+            assert_eq!(c.pooled().0, 0, "fresh thread starts empty");
+        })
+        .join()
+        .unwrap();
+    }
+}

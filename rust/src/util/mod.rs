@@ -11,9 +11,13 @@
 //! * [`table`] — aligned text / markdown table rendering
 //! * [`svg`] — SVG line/scatter plots for the figure generators
 //! * [`prop`] — miniature property-testing harness
+//! * [`pool`] — persistent worker pool with scoped fork-join (rayon-shaped)
+//! * [`arena`] — recycling scratch-buffer arena for the execution layer
 
+pub mod arena;
 pub mod args;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

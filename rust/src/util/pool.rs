@@ -1,0 +1,332 @@
+//! Persistent process-wide worker pool with a scoped fork-join API
+//! (DESIGN.md §Exec).
+//!
+//! Every parallel kernel in the stack — packed encode/decode
+//! ([`crate::formats::packed`]), the block GEMMs
+//! ([`crate::formats::gemm`]) and the sweep scheduler
+//! ([`crate::coordinator::Sweeper`]) — fans work out through this one
+//! pool instead of spawning fresh OS threads per call. That fixes two
+//! problems of the old `std::thread::scope` fan-out:
+//!
+//! * **Spawn latency**: a thread spawn is O(10–100 µs); a pool push is
+//!   O(µs). Small GEMMs at the paper's model shapes were paying more for
+//!   thread creation than for arithmetic.
+//! * **Oversubscription**: every concurrent sweep job used to spawn its
+//!   *own* `available_parallelism()` workers, so `MXSTAB_JOBS` runs
+//!   multiplied into `jobs × cores` threads. Now all nested parallelism
+//!   shares one fixed worker set, so the total number of compute threads
+//!   is bounded by the pool size regardless of how many sweep jobs, GEMM
+//!   calls or codec calls are in flight.
+//!
+//! Sizing: `MXSTAB_POOL` (when set) fixes the pool size on its own;
+//! else `MXSTAB_JOBS` (when set) is the bound on total pool
+//! parallelism; otherwise `available_parallelism()`. The pool spawns
+//! `size − 1` OS workers because the scoping thread itself participates
+//! (see below), so [`parallelism`]` == size`.
+//!
+//! # Fork-join semantics
+//!
+//! [`scope`] mirrors `std::thread::scope`: tasks may borrow from the
+//! enclosing stack frame, and every task is guaranteed to finish before
+//! `scope` returns (including when the closure or a task panics — the
+//! first task panic is resumed on the scoping thread after the join, like
+//! a scoped `JoinHandle::join` unwrap).
+//!
+//! **The scoping thread helps.** While joining, the caller pops *its own
+//! scope's* queued tasks and runs them inline. This makes nesting
+//! deadlock-free by construction: a pool worker that opens a scope of its
+//! own (e.g. a sweep job whose GEMM fans out) drains that scope itself
+//! even when every other worker is busy, so progress never depends on a
+//! free worker existing. Idle workers pop tasks from any scope, oldest
+//! first.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A queued unit of work. The closure is lifetime-erased ([`Scope::spawn`]
+/// transmutes `'scope` to `'static`); soundness comes from [`scope`]
+/// joining every task before it returns.
+type ErasedTask = Box<dyn FnOnce() + Send + 'static>;
+
+struct QueuedTask {
+    scope_id: u64,
+    join: Arc<ScopeJoin>,
+    run: ErasedTask,
+}
+
+/// Per-scope join state. `remaining` is only mutated while holding the
+/// pool queue lock, so a joiner that observes "no queued tasks of mine
+/// and remaining > 0" under that lock cannot miss the completion notify.
+struct ScopeJoin {
+    remaining: AtomicUsize,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+}
+
+struct PoolInner {
+    queue: Mutex<VecDeque<QueuedTask>>,
+    /// Woken on every push and every task completion; shared by idle
+    /// workers and joining scope owners.
+    cv: Condvar,
+}
+
+/// The persistent pool: a fixed worker set plus a task queue.
+pub struct WorkerPool {
+    inner: Arc<PoolInner>,
+    workers: usize,
+}
+
+static POOL: OnceLock<WorkerPool> = OnceLock::new();
+static NEXT_SCOPE_ID: AtomicU64 = AtomicU64::new(0);
+
+/// Total pool parallelism: `MXSTAB_POOL` when set (pool-only override,
+/// for installs that use `MXSTAB_JOBS` purely as the sweep-concurrency
+/// knob), else `MXSTAB_JOBS`, else `available_parallelism()`.
+fn configured_size() -> usize {
+    let env_size = |name: &str| {
+        std::env::var(name).ok().and_then(|s| s.parse::<usize>().ok()).filter(|&n| n >= 1)
+    };
+    env_size("MXSTAB_POOL")
+        .or_else(|| env_size("MXSTAB_JOBS"))
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// The process-wide pool (workers start lazily on first use).
+pub fn global() -> &'static WorkerPool {
+    POOL.get_or_init(WorkerPool::start)
+}
+
+/// Total concurrent task slots: spawned workers plus the scoping thread
+/// itself. Kernel fan-outs size their chunk counts with this.
+pub fn parallelism() -> usize {
+    global().parallelism()
+}
+
+impl WorkerPool {
+    fn start() -> WorkerPool {
+        let size = configured_size();
+        let inner = Arc::new(PoolInner { queue: Mutex::new(VecDeque::new()), cv: Condvar::new() });
+        let workers = size.saturating_sub(1);
+        for i in 0..workers {
+            let inner = inner.clone();
+            std::thread::Builder::new()
+                .name(format!("mxstab-pool-{i}"))
+                .spawn(move || worker_loop(&inner))
+                .expect("spawn pool worker");
+        }
+        WorkerPool { inner, workers }
+    }
+
+    pub fn parallelism(&self) -> usize {
+        self.workers + 1
+    }
+
+    fn push(&self, task: QueuedTask) {
+        let mut q = self.inner.queue.lock().unwrap();
+        task.join.remaining.fetch_add(1, Ordering::SeqCst);
+        q.push_back(task);
+        drop(q);
+        self.inner.cv.notify_all();
+    }
+
+    /// Join one scope: run its queued tasks inline until none are queued
+    /// and none are in flight on workers.
+    fn join_scope(&self, scope_id: u64, join: &ScopeJoin) {
+        let mut q = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(pos) = q.iter().position(|t| t.scope_id == scope_id) {
+                let task = q.remove(pos).expect("position is in bounds");
+                drop(q);
+                run_task(&self.inner, task);
+                q = self.inner.queue.lock().unwrap();
+                continue;
+            }
+            if join.remaining.load(Ordering::SeqCst) == 0 {
+                return;
+            }
+            q = self.inner.cv.wait(q).unwrap();
+        }
+    }
+}
+
+fn worker_loop(inner: &PoolInner) {
+    loop {
+        let task = {
+            let mut q = inner.queue.lock().unwrap();
+            loop {
+                match q.pop_front() {
+                    Some(t) => break t,
+                    None => q = inner.cv.wait(q).unwrap(),
+                }
+            }
+        };
+        run_task(inner, task);
+    }
+}
+
+/// Run one task, record the first panic on its scope, then publish the
+/// completion (decrement under the queue lock, then notify).
+fn run_task(inner: &PoolInner, task: QueuedTask) {
+    let QueuedTask { join, run, .. } = task;
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(run));
+    if let Err(payload) = result {
+        let mut slot = join.panic.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+    let q = inner.queue.lock().unwrap();
+    join.remaining.fetch_sub(1, Ordering::SeqCst);
+    drop(q);
+    inner.cv.notify_all();
+}
+
+/// A fork-join scope over the global pool (same shape as
+/// `std::thread::Scope`): spawned closures may borrow `'env` data and are
+/// all joined before [`scope`] returns.
+pub struct Scope<'scope, 'env: 'scope> {
+    pool: &'static WorkerPool,
+    id: u64,
+    join: Arc<ScopeJoin>,
+    scope_marker: PhantomData<&'scope mut &'scope ()>,
+    env_marker: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'scope, 'env> Scope<'scope, 'env> {
+    /// Queue a task on the pool. No handle: results travel through
+    /// `&mut` captures (spawn over disjoint output chunks). A panicking
+    /// task does not kill pool workers; the payload is re-raised by
+    /// [`scope`] after every sibling has finished.
+    pub fn spawn<F>(&'scope self, f: F)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        let task: Box<dyn FnOnce() + Send + 'scope> = Box::new(f);
+        // SAFETY: `scope` joins every spawned task before returning, even
+        // when the scope closure or a task panics, so the closure (and
+        // everything it borrows from 'scope/'env) outlives its execution.
+        // The transmute only erases the lifetime bound; the vtable and
+        // layout are unchanged.
+        let task: ErasedTask = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, ErasedTask>(task)
+        };
+        self.pool.push(QueuedTask { scope_id: self.id, join: self.join.clone(), run: task });
+    }
+}
+
+/// Run `f` with a fork-join [`Scope`] on the global pool, join every
+/// spawned task (helping to run them inline), then return `f`'s value or
+/// resume the first panic (the closure's own panic takes precedence).
+pub fn scope<'env, F, T>(f: F) -> T
+where
+    F: for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> T,
+{
+    let pool = global();
+    let s = Scope {
+        pool,
+        id: NEXT_SCOPE_ID.fetch_add(1, Ordering::Relaxed),
+        join: Arc::new(ScopeJoin { remaining: AtomicUsize::new(0), panic: Mutex::new(None) }),
+        scope_marker: PhantomData,
+        env_marker: PhantomData,
+    };
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&s)));
+    pool.join_scope(s.id, &s.join);
+    let task_panic = s.join.panic.lock().unwrap().take();
+    match result {
+        Err(payload) => std::panic::resume_unwind(payload),
+        Ok(value) => {
+            if let Some(payload) = task_panic {
+                std::panic::resume_unwind(payload);
+            }
+            value
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_runs_borrowing_tasks_and_joins() {
+        let mut out = vec![0usize; 64];
+        scope(|s| {
+            for (i, chunk) in out.chunks_mut(8).enumerate() {
+                s.spawn(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = i * 8 + j;
+                    }
+                });
+            }
+        });
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_returns_closure_value() {
+        let v = scope(|s| {
+            s.spawn(|| {});
+            41 + 1
+        });
+        assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn nested_scopes_complete() {
+        // A spawned task opens its own scope: the inner scope must drain
+        // even when every worker is busy (the task helps itself).
+        let mut sums = vec![0u64; 4];
+        scope(|s| {
+            for (i, slot) in sums.iter_mut().enumerate() {
+                s.spawn(move || {
+                    let mut inner = vec![0u64; 8];
+                    scope(|s2| {
+                        for (j, v) in inner.iter_mut().enumerate() {
+                            s2.spawn(move || *v = (i * 8 + j) as u64);
+                        }
+                    });
+                    *slot = inner.iter().sum();
+                });
+            }
+        });
+        let want: Vec<u64> = (0..4).map(|i| (0..8).map(|j| (i * 8 + j) as u64).sum()).collect();
+        assert_eq!(sums, want);
+    }
+
+    #[test]
+    fn panicking_task_propagates_and_pool_survives() {
+        let caught = std::panic::catch_unwind(|| {
+            scope(|s| {
+                s.spawn(|| panic!("task exploded"));
+                s.spawn(|| {}); // sibling still joins
+            });
+        });
+        let payload = caught.expect_err("scope must re-raise the task panic");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .map(|m| m.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("task exploded"), "payload preserved: {msg:?}");
+        // The pool is intact: a fresh scope still works.
+        let mut ok = false;
+        scope(|s| s.spawn(|| ok = true));
+        assert!(ok);
+        assert!(parallelism() >= 1);
+    }
+
+    #[test]
+    fn many_more_tasks_than_workers() {
+        let n = 256;
+        let counter = AtomicUsize::new(0);
+        scope(|s| {
+            for _ in 0..n {
+                s.spawn(|| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), n);
+    }
+}

@@ -1,0 +1,273 @@
+//! Execution-layer integration suite (DESIGN.md §Exec): bitwise parity of
+//! the panel-decoded GEMM against the scalar oracles across adversarial
+//! inputs, operand-cache invalidation across optimizer steps, and worker
+//! pool behaviour under nesting and panics.
+
+use mxstab::formats::dot::{encode, mx_dot};
+use mxstab::formats::gemm::{gemm, gemm_ref, PackedMatrix};
+use mxstab::formats::spec::{hyper_idx, Fmt, FormatId, BLOCK_SIZE};
+use mxstab::runtime::native::{NativeEngine, NativeModel, NativeState};
+use mxstab::runtime::{Backend, Engine, StepArgs};
+use mxstab::util::pool;
+use mxstab::util::rng::Xoshiro256;
+
+const MX: [FormatId; 4] = [FormatId::E4M3, FormatId::E5M2, FormatId::E2M3, FormatId::E3M2];
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// An adversarial `rows × cols` matrix: Gaussian background with zero
+/// blocks, f32-subnormal blocks, the paper's §6.1 clamp cluster, and
+/// inf/NaN contamination sprinkled per row.
+fn adversarial(rng: &mut Xoshiro256, rows: usize, cols: usize) -> Vec<f32> {
+    let mut a = rng.normal_vec(rows * cols);
+    let tiny = f32::from_bits(1); // smallest f32 subnormal
+    for r in 0..rows {
+        let row = &mut a[r * cols..(r + 1) * cols];
+        match r % 5 {
+            0 => row[..BLOCK_SIZE].fill(0.0), // all-zero block
+            1 => {
+                for (i, v) in row[..BLOCK_SIZE].iter_mut().enumerate() {
+                    *v = tiny * (i as f32 + 1.0); // subnormal-only block
+                }
+            }
+            2 => row[..BLOCK_SIZE].fill(0.897), // whole block clamps
+            3 => row[0] = f32::INFINITY,
+            _ => row[0] = f32::NAN,
+        }
+    }
+    a
+}
+
+#[test]
+fn panel_gemm_bitwise_equals_mx_dot_oracle_on_adversarial_inputs() {
+    // The fast path must match the scalar MxBlock oracle element-for-
+    // element on zero blocks, subnormals, clamp clusters and NaN/Inf
+    // contamination, across same-format and mixed-format operand pairs.
+    let mut rng = Xoshiro256::seed_from(17);
+    let (m, n, k) = (10, 35, 96); // odd n: panel tail; m > 5: all row kinds
+    let a = adversarial(&mut rng, m, k);
+    let b = adversarial(&mut rng, n, k);
+    let pairs = [
+        (FormatId::E4M3, FormatId::E4M3),
+        (FormatId::E5M2, FormatId::E5M2),
+        (FormatId::E2M3, FormatId::E2M3),
+        (FormatId::E3M2, FormatId::E3M2),
+        (FormatId::E4M3, FormatId::E5M2),
+        (FormatId::E5M2, FormatId::E2M3),
+        (FormatId::E3M2, FormatId::E4M3),
+    ];
+    for (ida, idb) in pairs {
+        let (fa, fb) = (ida.elem().unwrap(), idb.elem().unwrap());
+        let am = PackedMatrix::encode(&a, m, k, ida, false);
+        let bm = PackedMatrix::encode(&b, n, k, idb, false);
+        let mut c = vec![0.0f32; m * n];
+        gemm(&am, &bm, &mut c);
+        let mut c_ref = vec![0.0f32; m * n];
+        gemm_ref(&am, &bm, &mut c_ref);
+        assert_eq!(bits(&c), bits(&c_ref), "{ida:?}×{idb:?}: fast vs reference kernel");
+        for r in 0..m {
+            let ea = encode(&a[r * k..(r + 1) * k], &fa, 0);
+            for j in 0..n {
+                let eb = encode(&b[j * k..(j + 1) * k], &fb, 0);
+                let want = mx_dot(&ea, &eb);
+                let got = c[r * n + j];
+                let same = got.to_bits() == want.to_bits() || (got.is_nan() && want.is_nan());
+                assert!(same, "{ida:?}×{idb:?} C[{r},{j}] = {got}, oracle {want}");
+            }
+        }
+    }
+}
+
+#[test]
+fn panel_gemm_parity_across_strip_and_tile_tails() {
+    // Pool fan-out + panel tails: every (multi-strip, tail) combination
+    // must stay bitwise identical to the reference kernel.
+    let mut rng = Xoshiro256::seed_from(23);
+    for &(m, n, k) in &[(1usize, 1usize, 32usize), (3, 64, 32), (65, 31, 64), (128, 97, 160)] {
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(n * k);
+        let am = PackedMatrix::encode(&a, m, k, FormatId::E4M3, false);
+        let bm = PackedMatrix::encode(&b, n, k, FormatId::E5M2, false);
+        let mut c = vec![0.0f32; m * n];
+        let mut c_ref = vec![0.0f32; m * n];
+        gemm(&am, &bm, &mut c);
+        gemm_ref(&am, &bm, &mut c_ref);
+        assert_eq!(bits(&c), bits(&c_ref), "{m}x{n}x{k}");
+    }
+}
+
+fn proxy_args(fmt: Fmt, step: i32) -> StepArgs {
+    let mut hyper = vec![0.0f32; hyper_idx::HYPER_LEN];
+    hyper[hyper_idx::LR] = 1e-2;
+    hyper[hyper_idx::LABEL_NOISE] = 1e-3;
+    StepArgs { tokens: None, fmt: fmt.to_vec(), hyper, seed: 5, step }
+}
+
+/// Gradients must be identical whether weight operands come warm from the
+/// cache, cold from a fresh cache, or from a cache-disabled state — and a
+/// post-`optimizer_step` forward must use freshly encoded weights.
+#[test]
+fn operand_cache_is_invisible_and_invalidated_by_optimizer_step() {
+    let engine = NativeEngine::with_batch(32).unwrap();
+    let model = engine.load("proxy_gelu_ln_L2_D32").unwrap();
+    let fmt = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+    let args0 = proxy_args(fmt, 0);
+
+    let state = model.init(7, 0.0, 1.0).unwrap();
+    let g_cold = model.grads(&state, &args0).unwrap();
+    let (hits_cold, _) = state.exec.stats();
+    let g_warm = model.grads(&state, &args0).unwrap();
+    let (hits_warm, _) = state.exec.stats();
+    assert!(hits_warm > hits_cold, "second pass must hit the cache");
+    for (a, b) in g_cold.iter().zip(&g_warm) {
+        assert_eq!(bits(a), bits(b), "warm cache changed the gradients");
+    }
+
+    // One training step: weights move, version bumps, param entries drop.
+    let v0 = state.exec.version();
+    let (state, met) = model.step(state, &args0).unwrap();
+    assert!(met.loss.is_finite());
+    assert_eq!(state.exec.version(), v0 + 1, "optimizer step must bump the version");
+
+    // Post-step gradients through the (previously warm) cache must equal
+    // gradients from an identical state with caching disabled — i.e. the
+    // forward used freshly encoded weights, not stale entries.
+    let args1 = proxy_args(fmt, 1);
+    let g_cached = model.grads(&state, &args1).unwrap();
+    let fresh = NativeState::new(state.tensors.clone());
+    fresh.exec.set_enabled(false);
+    let g_fresh = model.grads(&fresh, &args1).unwrap();
+    assert_eq!(fresh.exec.stats().0, 0, "disabled cache never hits");
+    for (a, b) in g_cached.iter().zip(&g_fresh) {
+        assert_eq!(bits(a), bits(b), "post-step forward must re-encode updated weights");
+    }
+}
+
+#[test]
+fn lm_training_is_bitwise_identical_with_and_without_cache() {
+    // Three full LM steps (every projection + both attention sites, fwd
+    // and bwd) under the fully-quantized scheme: the cached and the
+    // cache-disabled trajectories must agree bitwise, step by step.
+    let engine = NativeEngine::with_batch(2).unwrap();
+    let model = engine.load("lm_L1_D32_H1_T32_V64").unwrap();
+    let m = model.as_lm().unwrap();
+    let corpus = mxstab::data::Corpus::new(mxstab::data::CorpusConfig {
+        vocab: 64,
+        ..Default::default()
+    });
+    let (bt, len) = model.tokens_shape().unwrap();
+    let fmt = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+
+    let mut cached = model.init(3, 0.0, 1.0).unwrap();
+    let mut plain = model.init(3, 0.0, 1.0).unwrap();
+    plain.exec.set_enabled(false);
+    for step in 0..3i32 {
+        let mut hyper = vec![0.0f32; hyper_idx::HYPER_LEN];
+        hyper[hyper_idx::LR] = 1e-2;
+        let args = StepArgs {
+            tokens: Some(corpus.batch(1, step as u64, bt, len)),
+            fmt: fmt.to_vec(),
+            hyper,
+            seed: 1,
+            step,
+        };
+        let (s1, m1) = m.step(cached, &args).unwrap();
+        let (s2, m2) = m.step(plain, &args).unwrap();
+        assert_eq!(m1.loss.to_bits(), m2.loss.to_bits(), "step {step} loss");
+        assert_eq!(m1.grad_norm.to_bits(), m2.grad_norm.to_bits(), "step {step} grad norm");
+        for (a, b) in s1.tensors.iter().zip(&s2.tensors) {
+            assert_eq!(bits(a), bits(b), "step {step}: state diverged");
+        }
+        cached = s1;
+        plain = s2;
+    }
+    assert!(cached.exec.stats().0 > 0, "the cached trajectory must actually hit");
+}
+
+#[test]
+fn pool_nests_under_parallel_gemm_calls() {
+    // GEMMs large enough to fan out, issued from inside pool tasks — the
+    // sweep-scheduler shape. Results must match the serial reference.
+    let mut rng = Xoshiro256::seed_from(42);
+    let (m, n, k) = (96, 64, 128); // m·n > PAR_MIN_OUT → inner fan-out
+    let a = rng.normal_vec(m * k);
+    let b = rng.normal_vec(n * k);
+    let am = PackedMatrix::encode(&a, m, k, FormatId::E4M3, false);
+    let bm = PackedMatrix::encode(&b, n, k, FormatId::E4M3, false);
+    let mut want = vec![0.0f32; m * n];
+    gemm_ref(&am, &bm, &mut want);
+
+    let mut outs: Vec<Vec<f32>> = (0..4).map(|_| vec![0.0f32; m * n]).collect();
+    pool::scope(|s| {
+        for out in outs.iter_mut() {
+            let (am, bm) = (&am, &bm);
+            s.spawn(move || gemm(am, bm, out));
+        }
+    });
+    for (i, out) in outs.iter().enumerate() {
+        assert_eq!(bits(out), bits(&want), "nested gemm {i}");
+    }
+}
+
+#[test]
+fn pool_survives_a_panicking_training_job() {
+    // A panicking task inside a pool scope must not take down the pool:
+    // the panic propagates to the scope caller, siblings finish, and the
+    // native backend keeps training on the same pool afterwards.
+    let caught = std::panic::catch_unwind(|| {
+        pool::scope(|s| {
+            s.spawn(|| {
+                // The realistic failure: a block-misaligned encode assert.
+                let misaligned = vec![0.0f32; 33];
+                PackedMatrix::encode(&misaligned, 1, 33, FormatId::E4M3, false);
+            });
+        });
+    });
+    assert!(caught.is_err(), "the alignment assert must propagate");
+
+    let engine = NativeEngine::with_batch(32).unwrap();
+    let model = engine.load("proxy_gelu_ln_L1_D32").unwrap();
+    let state = model.init(0, 0.0, 1.0).unwrap();
+    let (_, met) =
+        model.step(state, &proxy_args(Fmt::full(FormatId::E4M3, FormatId::E4M3), 0)).unwrap();
+    assert!(met.loss.is_finite(), "pool still serves training after the panic");
+}
+
+#[test]
+fn clone_and_restore_reset_the_cache() {
+    let engine = NativeEngine::with_batch(32).unwrap();
+    let model = engine.load("proxy_gelu_ln_L1_D32").unwrap();
+    let fmt = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+    let state = model.init(2, 0.0, 1.0).unwrap();
+    model.grads(&state, &proxy_args(fmt, 0)).unwrap(); // warm the cache
+
+    // clone_state: fresh cache — mutating the clone's tensors afterwards
+    // (finite-difference probes do this) can never see stale entries.
+    let cloned = model.clone_state(&state).unwrap();
+    assert_eq!(cloned.exec.stats(), (0, 0), "clone starts with an empty cache");
+
+    // The cache-off flag propagates through clone (baseline runs stay off).
+    let off = NativeState::new(state.tensors.clone());
+    off.exec.set_enabled(false);
+    assert!(!off.clone().exec.enabled(), "disabled flag survives clone");
+
+    // snapshot → restore: also a fresh cache.
+    let restored = model.restore(model.snapshot(&state).unwrap()).unwrap();
+    assert_eq!(restored.exec.stats(), (0, 0), "restore starts with an empty cache");
+    for (a, b) in restored.tensors.iter().zip(&state.tensors) {
+        assert_eq!(bits(a), bits(b), "tensors roundtrip bitwise");
+    }
+}
+
+#[test]
+fn native_model_enum_exposes_lm_accessor() {
+    // Regression guard for the test-suite plumbing above.
+    let engine = NativeEngine::new();
+    let lm = engine.load("lm_olmo_1m").unwrap();
+    assert!(lm.as_lm().is_some());
+    assert!(lm.as_proxy().is_none());
+    let proxy = engine.load("proxy_gelu_ln_L2_D64").unwrap();
+    assert!(matches!(proxy.as_ref(), NativeModel::Proxy(_)));
+}
