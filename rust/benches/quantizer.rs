@@ -21,6 +21,7 @@
 //! `MXSTAB_BENCH_SMOKE=1` shrinks the sizes for CI.
 
 use mxstab::bench::{jnum, smoke_mode, write_json, Bencher};
+use mxstab::formats::kernel::{self, Tier};
 use mxstab::formats::spec::FormatId;
 use mxstab::formats::{dot, gemm, mx_qdq, packed_qdq, PackedMatrix, PackedVec, QdqScratch};
 use mxstab::util::json::Json;
@@ -29,6 +30,7 @@ use mxstab::util::rng::Xoshiro256;
 fn main() -> anyhow::Result<()> {
     let b = Bencher::default();
     println!("== quantizer benchmarks ==\n");
+    println!("kernel: {} (isa: {})\n", kernel::describe(), kernel::isa_name());
 
     let mut rng = Xoshiro256::seed_from(0);
     let formats = [FormatId::E4M3, FormatId::E5M2, FormatId::E2M3, FormatId::E3M2];
@@ -95,7 +97,8 @@ fn main() -> anyhow::Result<()> {
     }
 
     // Headline number: packed codec vs scalar mx_qdq at the largest size,
-    // e4m3 (n = 2^20 in full mode).
+    // e4m3 (n = 2^20 in full mode), plus the SIMD codec vs the panel
+    // tier's scalar codec on the same input.
     let headline = {
         let n = *sizes.last().unwrap();
         let x = rng.normal_vec(n);
@@ -108,18 +111,27 @@ fn main() -> anyhow::Result<()> {
             scratch.qdq_into(std::hint::black_box(&x), &mut out, FormatId::E4M3, false);
             std::hint::black_box(&out);
         });
+        kernel::force_tier(Some(Tier::Panel));
+        let rpanel = b.run("headline/packed-scalar-codec/e4m3", || {
+            scratch.qdq_into(std::hint::black_box(&x), &mut out, FormatId::E4M3, false);
+            std::hint::black_box(&out);
+        });
+        kernel::force_tier(None);
         println!(
             "headline: packed codec is {:.1}x the scalar mx_qdq at n={n} \
-             (scalar {:.3} ms, packed {:.3} ms)\n",
+             (scalar {:.3} ms, packed {:.3} ms; simd codec {:.2}x the scalar-codec tier)\n",
             rs.mean_s / rp.mean_s,
             rs.mean_s * 1e3,
-            rp.mean_s * 1e3
+            rp.mean_s * 1e3,
+            rpanel.mean_s / rp.mean_s
         );
         Json::obj(vec![
             ("n", Json::Num(n as f64)),
             ("scalar_ms", jnum(rs.mean_s * 1e3)),
             ("packed_ms", jnum(rp.mean_s * 1e3)),
             ("speedup_vs_scalar", jnum(rs.mean_s / rp.mean_s)),
+            ("scalar_codec_tier_ms", jnum(rpanel.mean_s * 1e3)),
+            ("simd_codec_speedup_vs_scalar_tier", jnum(rpanel.mean_s / rp.mean_s)),
         ])
     };
 
@@ -165,10 +177,12 @@ fn main() -> anyhow::Result<()> {
 
     let report = Json::obj(vec![
         ("bench", Json::from("quantizer")),
-        ("schema", Json::Num(1.0)),
+        ("schema", Json::Num(2.0)),
         ("measured", Json::Bool(true)),
         ("smoke_mode", Json::Bool(smoke_mode())),
         ("pool_parallelism", Json::Num(mxstab::util::pool::parallelism() as f64)),
+        ("kernel", Json::from(kernel::describe())),
+        ("kernel_isa", Json::from(kernel::isa_name())),
         ("headline", headline),
         ("qdq", Json::Arr(qdq_rows)),
         ("matvec", matvec_rows),

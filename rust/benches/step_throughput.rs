@@ -21,6 +21,7 @@
 
 use mxstab::bench::{jnum, smoke_mode, write_json, Bencher};
 use mxstab::formats::gemm::{gemm, gemm_ref, set_reference_kernel, PackedMatrix};
+use mxstab::formats::kernel::{self, Tier};
 use mxstab::formats::spec::{Fmt, FormatId};
 use mxstab::runtime::native::NativeEngine;
 use mxstab::runtime::{Backend, Engine, StepArgs};
@@ -30,31 +31,38 @@ use mxstab::util::rng::Xoshiro256;
 fn main() -> anyhow::Result<()> {
     let mut b = Bencher::default();
     b.warmup = 2;
+    println!("kernel: {} (isa: {})\n", kernel::describe(), kernel::isa_name());
 
-    let (gemm_rows, gemm_headline) = bench_gemm(&b);
+    let (gemm_rows, gemm_headline, gemm_vs_panel) = bench_gemm(&b);
     let bwd_rows = bench_backward_gemm(&b);
     let proxy_rows = bench_native_step(&b)?;
-    let (lm_rows, lm_headline) = bench_native_lm_step(&b)?;
+    let (lm_rows, lm_headline, lm_vs_panel) = bench_native_lm_step(&b)?;
 
     let report = Json::obj(vec![
         ("bench", Json::from("step_throughput")),
-        ("schema", Json::Num(1.0)),
+        ("schema", Json::Num(2.0)),
         ("measured", Json::Bool(true)),
         ("smoke_mode", Json::Bool(smoke_mode())),
         ("pool_parallelism", Json::Num(mxstab::util::pool::parallelism() as f64)),
+        ("kernel", Json::from(kernel::describe())),
+        ("kernel_isa", Json::from(kernel::isa_name())),
         (
             "baseline_note",
             Json::from(
-                "baseline_* fields are the pre-PR execution path (row-wise LUT GEMM kernel, \
-                 per-call std::thread::scope fan-out, operand cache disabled), measured in \
-                 this same run on this same machine",
+                "baseline_* fields are the pre-panel execution path (row-wise LUT GEMM kernel, \
+                 per-call std::thread::scope fan-out, operand cache disabled) and panel_* \
+                 fields the PR-4 panel tier (scalar inner loops, cache on), both measured in \
+                 this same run on this same machine; the default rows run the SIMD tier where \
+                 the machine has one",
             ),
         ),
         (
             "headline",
             Json::obj(vec![
                 ("gemm_speedup_vs_baseline", jnum(gemm_headline)),
+                ("gemm_simd_speedup_vs_panel", jnum(gemm_vs_panel)),
                 ("lm_step_speedup_vs_baseline", jnum(lm_headline)),
+                ("lm_step_simd_speedup_vs_panel", jnum(lm_vs_panel)),
             ]),
         ),
         ("gemm", gemm_rows),
@@ -65,8 +73,8 @@ fn main() -> anyhow::Result<()> {
     let path = write_json("BENCH_step_throughput.json", &report)?;
     println!("wrote {}", path.display());
     println!(
-        "headline: packed GEMM {gemm_headline:.2}x, native LM step {lm_headline:.2}x \
-         vs the pre-PR baseline path"
+        "headline: packed GEMM {gemm_headline:.2}x vs baseline ({gemm_vs_panel:.2}x vs panel \
+         tier), native LM step {lm_headline:.2}x vs baseline ({lm_vs_panel:.2}x vs panel tier)"
     );
 
     #[cfg(feature = "xla")]
@@ -76,11 +84,12 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Forward-GEMM throughput: panel-decoded kernel vs the row-wise baseline
-/// at the paper's proxy/LM layer shapes. Returns (rows, headline speedup
-/// at the largest e4m3 shape).
-fn bench_gemm(b: &Bencher) -> (Json, f64) {
-    println!("== packed MX GEMM throughput (panel kernel vs row-wise baseline) ==\n");
+/// Forward-GEMM throughput: the active (SIMD) kernel vs the PR-4 panel
+/// tier vs the row-wise baseline at the paper's proxy/LM layer shapes.
+/// Returns (rows, headline speedup vs baseline, headline speedup vs the
+/// panel tier — both at the largest e4m3 shape).
+fn bench_gemm(b: &Bencher) -> (Json, f64, f64) {
+    println!("== packed MX GEMM throughput (simd vs panel tier vs row-wise baseline) ==\n");
     let mut rng = Xoshiro256::seed_from(0);
     // (m, n, k): proxy-MLP layer, LM attention-ish block, LM FFN.
     let shapes: &[(usize, usize, usize)] = if smoke_mode() {
@@ -90,6 +99,7 @@ fn bench_gemm(b: &Bencher) -> (Json, f64) {
     };
     let mut rows = Vec::new();
     let mut headline = 0.0f64;
+    let mut headline_panel = 0.0f64;
     for &(m, n, k) in shapes {
         let a = rng.normal_vec(m * k);
         let w = rng.normal_vec(n * k);
@@ -105,7 +115,7 @@ fn bench_gemm(b: &Bencher) -> (Json, f64) {
             gemm_ref(&am, &wm, &mut c_ref);
             assert!(
                 c_new.iter().zip(&c_ref).all(|(x, y)| x.to_bits() == y.to_bits()),
-                "panel kernel diverged from the reference at {m}x{n}x{k} {id:?}"
+                "active kernel tier diverged from the reference at {m}x{n}x{k} {id:?}"
             );
             let name = format!("gemm/{}/{}x{}x{}", id.name(), m, n, k);
             let r_new = b.run(&name, || {
@@ -113,17 +123,29 @@ fn bench_gemm(b: &Bencher) -> (Json, f64) {
                 gemm(&am, &wm, &mut c_new);
                 std::hint::black_box(&c_new);
             });
+            kernel::force_tier(Some(Tier::Panel));
+            let r_panel = b.run(&format!("{name}/panel"), || {
+                let am = PackedMatrix::encode(std::hint::black_box(&a), m, k, id, false);
+                gemm(&am, &wm, &mut c_new);
+                std::hint::black_box(&c_new);
+            });
+            // Baseline = the pre-panel path end to end: scalar tier so
+            // the timed activation encode uses the scalar codec too.
+            kernel::force_tier(Some(Tier::Scalar));
             let r_ref = b.run(&format!("{name}/baseline"), || {
                 let am = PackedMatrix::encode(std::hint::black_box(&a), m, k, id, false);
                 gemm_ref(&am, &wm, &mut c_ref);
                 std::hint::black_box(&c_ref);
             });
+            kernel::force_tier(None);
             let speedup = r_ref.mean_s / r_new.mean_s;
+            let vs_panel = r_panel.mean_s / r_new.mean_s;
             let gflops = flops / r_new.mean_s / 1e9;
             println!(
                 "{}",
                 r_new.report_line(&format!(
-                    "{gflops:.2} GFLOP/s(emu)  [{speedup:.2}x vs row-wise]"
+                    "{gflops:.2} GFLOP/s(emu)  [{speedup:.2}x vs row-wise, \
+                     {vs_panel:.2}x vs panel tier]"
                 ))
             );
             rows.push(Json::obj(vec![
@@ -132,17 +154,20 @@ fn bench_gemm(b: &Bencher) -> (Json, f64) {
                 ("format", Json::from(id.name())),
                 ("mean_ms", jnum(r_new.mean_s * 1e3)),
                 ("gflops", jnum(gflops)),
+                ("panel_mean_ms", jnum(r_panel.mean_s * 1e3)),
+                ("simd_speedup_vs_panel", jnum(vs_panel)),
                 ("baseline_mean_ms", jnum(r_ref.mean_s * 1e3)),
                 ("baseline_gflops", jnum(flops / r_ref.mean_s / 1e9)),
                 ("speedup_vs_baseline", jnum(speedup)),
             ]));
             if id == FormatId::E4M3 {
                 headline = speedup; // largest e4m3 shape wins (shapes ascend)
+                headline_panel = vs_panel;
             }
         }
     }
     println!();
-    (Json::Arr(rows), headline)
+    (Json::Arr(rows), headline, headline_panel)
 }
 
 /// The backward-GEMM hot path: weight gradients re-block both operands
@@ -172,12 +197,16 @@ fn bench_backward_gemm(b: &Bencher) -> Json {
             gemm(&xt, &gt, &mut dw);
             std::hint::black_box(&dw);
         });
+        // Scalar tier: the baseline's transposed re-encodes must use the
+        // pre-panel scalar codec, not the SIMD one.
+        kernel::force_tier(Some(Tier::Scalar));
         let r_ref = b.run(&format!("{name}/baseline"), || {
             let xt = PackedMatrix::encode_t(std::hint::black_box(&x), batch, d, xa_id, false);
             let gt = PackedMatrix::encode_t(std::hint::black_box(&g), batch, h, g_id, false);
             gemm_ref(&xt, &gt, &mut dw);
             std::hint::black_box(&dw);
         });
+        kernel::force_tier(None);
         let speedup = r_ref.mean_s / r_new.mean_s;
         println!(
             "{}",
@@ -199,8 +228,9 @@ fn bench_backward_gemm(b: &Bencher) -> Json {
 }
 
 /// One timed native-step loop; `baseline` routes GEMMs through the
-/// row-wise reference kernel and disables the operand cache (the pre-PR
-/// execution path).
+/// row-wise reference kernel and disables the operand cache (the
+/// pre-panel execution path); `tier` forces a kernel tier for the loop
+/// (e.g. `Tier::Panel` = the PR-4 execution layer, cache on).
 fn time_steps(
     b: &Bencher,
     model: &mxstab::runtime::native::NativeModel,
@@ -208,10 +238,12 @@ fn time_steps(
     fmt: &Fmt,
     tokens: Option<&dyn Fn(i32) -> Vec<i32>>,
     baseline: bool,
+    tier: Option<Tier>,
 ) -> anyhow::Result<mxstab::bench::BenchResult> {
     let state0 = model.init(0, 0.0, 1.0)?;
     state0.exec.set_enabled(!baseline);
     set_reference_kernel(baseline);
+    kernel::force_tier(tier);
     let mut state = Some(state0);
     let mut step = 0i32;
     let r = b.run(label, || {
@@ -227,6 +259,7 @@ fn time_steps(
         state = Some(s2);
         step += 1;
     });
+    kernel::force_tier(None);
     set_reference_kernel(false);
     Ok(r)
 }
@@ -253,8 +286,18 @@ fn bench_native_step(b: &Bencher) -> anyhow::Result<Json> {
     let mut rows = Vec::new();
     for (label, fmt) in &schemes {
         let name = format!("native/{}/{label}", model.name());
-        let r_new = time_steps(b, model.as_ref(), &name, fmt, None, false)?;
-        let r_ref = time_steps(b, model.as_ref(), &format!("{name}/baseline"), fmt, None, true)?;
+        let r_new = time_steps(b, model.as_ref(), &name, fmt, None, false, None)?;
+        // Baseline = pre-panel path end to end: scalar tier (row-wise
+        // GEMM + scalar codec/optimizer/LN) with the cache off.
+        let r_ref = time_steps(
+            b,
+            model.as_ref(),
+            &format!("{name}/baseline"),
+            fmt,
+            None,
+            true,
+            Some(Tier::Scalar),
+        )?;
         // 6·N·batch FLOPs per step (fwd + bwd over N params, batch rows).
         let flops = 6.0 * n_params * batch as f64;
         let speedup = r_ref.mean_s / r_new.mean_s;
@@ -280,9 +323,11 @@ fn bench_native_step(b: &Bencher) -> anyhow::Result<Json> {
 }
 
 /// Full native transformer-LM training step (corpus batch + fwd + bwd +
-/// Adam + metrics), per precision scheme, new vs baseline execution path.
-/// Returns (rows, headline speedup under the fully-quantized scheme).
-fn bench_native_lm_step(b: &Bencher) -> anyhow::Result<(Json, f64)> {
+/// Adam + metrics), per precision scheme: active (SIMD) tier vs the
+/// PR-4 panel tier vs the pre-panel baseline path. Returns (rows,
+/// headline speedups vs baseline and vs panel under the fully-quantized
+/// scheme).
+fn bench_native_lm_step(b: &Bencher) -> anyhow::Result<(Json, f64, f64)> {
     use mxstab::coordinator::Sweeper;
 
     println!("== native LM training-step throughput (pure rust) ==\n");
@@ -305,19 +350,39 @@ fn bench_native_lm_step(b: &Bencher) -> anyhow::Result<(Json, f64)> {
     ];
     let mut rows = Vec::new();
     let mut headline = 0.0f64;
+    let mut headline_panel = 0.0f64;
     for (label, fmt) in &schemes {
         let name = format!("native/{}/{label}", model.name());
         let toks = |step: i32| corpus.batch(0, step as u64, batch, len);
-        let r_new = time_steps(b, model.as_ref(), &name, fmt, Some(&toks), false)?;
-        let r_ref =
-            time_steps(b, model.as_ref(), &format!("{name}/baseline"), fmt, Some(&toks), true)?;
+        let r_new = time_steps(b, model.as_ref(), &name, fmt, Some(&toks), false, None)?;
+        let r_panel = time_steps(
+            b,
+            model.as_ref(),
+            &format!("{name}/panel"),
+            fmt,
+            Some(&toks),
+            false,
+            Some(Tier::Panel),
+        )?;
+        // Baseline = pre-panel path end to end (scalar tier, cache off).
+        let r_ref = time_steps(
+            b,
+            model.as_ref(),
+            &format!("{name}/baseline"),
+            fmt,
+            Some(&toks),
+            true,
+            Some(Tier::Scalar),
+        )?;
         // 6·N FLOPs per token (fwd + bwd over N params).
         let flops = 6.0 * n_params * tokens_per_step;
         let speedup = r_ref.mean_s / r_new.mean_s;
+        let vs_panel = r_panel.mean_s / r_new.mean_s;
         println!(
             "{}",
             r_new.report_line(&format!(
-                "{:.2} steps/s  {:.0} tok/s  {:.2} GFLOP/s(emu)  [{speedup:.2}x vs baseline]",
+                "{:.2} steps/s  {:.0} tok/s  {:.2} GFLOP/s(emu)  \
+                 [{speedup:.2}x vs baseline, {vs_panel:.2}x vs panel tier]",
                 1.0 / r_new.mean_s,
                 tokens_per_step / r_new.mean_s,
                 flops / r_new.mean_s / 1e9
@@ -329,15 +394,18 @@ fn bench_native_lm_step(b: &Bencher) -> anyhow::Result<(Json, f64)> {
             ("step_ms", jnum(r_new.mean_s * 1e3)),
             ("steps_per_s", jnum(1.0 / r_new.mean_s)),
             ("tokens_per_s", jnum(tokens_per_step / r_new.mean_s)),
+            ("panel_step_ms", jnum(r_panel.mean_s * 1e3)),
+            ("simd_speedup_vs_panel", jnum(vs_panel)),
             ("baseline_step_ms", jnum(r_ref.mean_s * 1e3)),
             ("speedup_vs_baseline", jnum(speedup)),
         ]));
         if *label == "e4m3-full" {
             headline = speedup;
+            headline_panel = vs_panel;
         }
     }
     println!();
-    Ok((Json::Arr(rows), headline))
+    Ok((Json::Arr(rows), headline, headline_panel))
 }
 
 #[cfg(feature = "xla")]

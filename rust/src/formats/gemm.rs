@@ -19,13 +19,17 @@
 //!   (interleaved j-innermost) and the A strip is decoded once per strip,
 //!   so the innermost loop is a pure f32 multiply-add sweep with no LUT
 //!   gathers — `n·k + m·k` table lookups per strip where the row-wise
-//!   kernel performed `m·n·k`. Per-output-lane accumulation order is
-//!   unchanged, so it stays bitwise identical to the oracle.
+//!   kernel performed `m·n·k`. The sweep itself runs on the active
+//!   microkernel tier ([`crate::formats::kernel`]): one decoded A element
+//!   broadcast across [`TILE_N`] accumulator lanes with unfused
+//!   mul-then-add, so per-output-lane accumulation order is unchanged and
+//!   every tier stays bitwise identical to the oracle.
 //! * [`gemm_ref`] — the original row-wise kernel (LUT lookups in the inner
 //!   loop, `std::thread::scope` fan-out), kept verbatim as the in-repo
 //!   baseline for the parity suite and the before/after numbers in
 //!   `BENCH_step_throughput.json`. [`set_reference_kernel`] routes [`gemm`]
-//!   through it so whole-step baselines can be measured in-process.
+//!   through it so whole-step baselines can be measured in-process, and
+//!   `MXSTAB_KERNEL=scalar` (the scalar tier) routes the same way.
 //!
 //! Parallelism: output-row strips fan out over the persistent worker pool
 //! ([`crate::util::pool`]); per-strip decode scratch comes from the
@@ -34,15 +38,11 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 
+use super::kernel::{self, KernelOps, Tier, TILE_N};
 use super::packed::{PackedFormat, PackedVec, ZERO_BLOCK};
 use super::quant::pow2;
 use super::spec::{FormatId, BLOCK_SIZE};
 use crate::util::{arena, pool};
-
-/// B-row (output-column) tile width: 32 packed rows ≈ 32·(k + k/16) bytes
-/// of codes+scales per k-panel, sized to stay L1/L2-resident for the
-/// model shapes the stack sweeps.
-const TILE_N: usize = 32;
 
 /// Minimum output elements per worker before fan-out pays for itself.
 const PAR_MIN_OUT: usize = 1 << 12;
@@ -253,6 +253,7 @@ fn gemm_strip(
 ) {
     let (n, k, bpr) = (b.rows, a.cols, a.blocks_per_row());
     let rows_here = out_strip.len() / n;
+    let ops = kernel::ops();
     let scratch = arena::local();
 
     // Decode this strip's A rows once: relative element values.
@@ -286,15 +287,11 @@ fn gemm_strip(
                 let sa_f = scale_f64(sa);
                 let ab = &arow[kb * BLOCK_SIZE..(kb + 1) * BLOCK_SIZE];
                 let prows = &panel[kb * BLOCK_SIZE * TILE_N..(kb + 1) * BLOCK_SIZE * TILE_N];
-                inner.fill(0.0);
                 // Lane jo accumulates its block inner product in element
                 // order t = 0..32 — the oracle's order, vectorized across
-                // the TILE_N output lanes.
-                for (&av, prow) in ab.iter().zip(prows.chunks_exact(TILE_N)) {
-                    for (l, &bv) in inner.iter_mut().zip(prow) {
-                        *l += av * bv;
-                    }
-                }
+                // the TILE_N output lanes by the active microkernel tier
+                // (unfused mul-then-add, so every tier is bitwise equal).
+                (ops.panel_madd)(ab, prows, &mut inner);
                 for (jo, av) in acc[..jw].iter_mut().enumerate() {
                     let sb = bscale[(jt + jo) * bpr + kb];
                     if sb == 0.0 {
@@ -323,7 +320,9 @@ fn gemm_strip(
 pub fn gemm(a: &PackedMatrix, b: &PackedMatrix, out: &mut [f32]) {
     assert_eq!(a.cols, b.cols, "reduction dims differ: {} vs {}", a.cols, b.cols);
     assert_eq!(out.len(), a.rows * b.rows, "output shape mismatch");
-    if reference_kernel() {
+    // The scalar kernel tier *is* the row-wise reference kernel
+    // (MXSTAB_KERNEL=scalar); the bench toggle takes priority.
+    if reference_kernel() || kernel::tier() == Tier::Scalar {
         return gemm_ref(a, b, out);
     }
     let lut = PackedFormat::of(a.id()).decode_table();
@@ -470,8 +469,32 @@ pub fn gemm_f32(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f
     assert_eq!(a.len(), m * k, "A shape mismatch");
     assert_eq!(b.len(), n * k, "B shape mismatch");
     assert_eq!(out.len(), m * n, "output shape mismatch");
+    let ops = kernel::ops();
+    let w = ops.dense_w;
+    // SIMD tiers sweep a [k][dense_w]-interleaved B panel, each output
+    // lane keeping its own serial f64 chain — bitwise equal to the
+    // scalar loop below. The interleave depends only on B, so it is
+    // packed once here (arena scratch) and shared read-only by every
+    // strip; panelizing only pays once a few rows reuse it.
+    let use_panel = w > 1 && m >= 4 && n >= w && k > 0;
+    let mut packed_b = arena::local().take_f32(if use_panel { (n / w) * k * w } else { 0 });
+    if use_panel {
+        for jt in 0..n / w {
+            let base = jt * k * w;
+            for j in 0..w {
+                let br = &b[(jt * w + j) * k..(jt * w + j + 1) * k];
+                for (t, &v) in br.iter().enumerate() {
+                    packed_b[base + t * w + j] = v;
+                }
+            }
+        }
+    }
+    let packed_b: &[f32] = &packed_b;
     let strip = |r0: usize, out_strip: &mut [f32]| {
         let rows_here = out_strip.len() / n;
+        if use_panel {
+            return gemm_f32_strip_panel(a, b, packed_b, n, k, r0, out_strip, ops);
+        }
         for i in 0..rows_here {
             let ar = &a[(r0 + i) * k..(r0 + i + 1) * k];
             for (j, o) in out_strip[i * n..(i + 1) * n].iter_mut().enumerate() {
@@ -495,6 +518,47 @@ pub fn gemm_f32(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f
                 s.spawn(move || strip(ci * rows_per, oc));
             }
         });
+    }
+}
+
+/// SIMD strip worker for [`gemm_f32`]: sweep the shared pre-packed
+/// `[k][dense_w]`-interleaved B panels with the ISA microkernel; tail
+/// columns (`n % dense_w`) fall back to the scalar per-output loop.
+/// Every output element still reduces over k in one serial f64 chain,
+/// so results are bitwise identical to the scalar strip (and
+/// independent of the thread count).
+#[allow(clippy::too_many_arguments)]
+fn gemm_f32_strip_panel(
+    a: &[f32],
+    b: &[f32],
+    packed_b: &[f32],
+    n: usize,
+    k: usize,
+    r0: usize,
+    out_strip: &mut [f32],
+    ops: &KernelOps,
+) {
+    let w = ops.dense_w;
+    let rows_here = out_strip.len() / n;
+    let tiles = n / w;
+    for jt in 0..tiles {
+        let panel = &packed_b[jt * k * w..(jt + 1) * k * w];
+        for i in 0..rows_here {
+            let arow = &a[(r0 + i) * k..(r0 + i + 1) * k];
+            let jo = i * n + jt * w;
+            (ops.dense_madd)(arow, panel, &mut out_strip[jo..jo + w]);
+        }
+    }
+    for j in tiles * w..n {
+        let br = &b[j * k..(j + 1) * k];
+        for i in 0..rows_here {
+            let ar = &a[(r0 + i) * k..(r0 + i + 1) * k];
+            let mut acc = 0.0f64;
+            for (x, y) in ar.iter().zip(br) {
+                acc += (*x as f64) * (*y as f64);
+            }
+            out_strip[i * n + j] = acc as f32;
+        }
     }
 }
 

@@ -1,0 +1,424 @@
+//! aarch64 NEON microkernels (4-lane). NEON (ASIMD) is part of the
+//! aarch64 baseline, so no runtime detection is needed.
+//!
+//! Parity notes (bitwise identity with [`super::scalar`]):
+//!
+//! * GEMM lanes use `vmulq`/`vaddq` — never `vfmaq` — so each lane is
+//!   the scalar kernel's two rounded ops (no contraction without
+//!   fast-math).
+//! * `vdivq_f32`, `vsqrtq_f32` and the f32↔f64 converts are IEEE
+//!   correctly-rounded, matching the scalar chains bit-for-bit.
+//! * Round-ties-even uses `vcvtnq_s32_f32` (FCVTNS: direct RNE
+//!   float→int). +Inf saturates to `i32::MAX` and NaN converts to 0 —
+//!   both only occur in the top exponent band, where the integer clamp
+//!   / the final NaN override produce exactly the scalar result.
+//! * NEON `FMAX` propagates NaN (unlike x86), so NaN lanes are replaced
+//!   with the reduction's neutral element *before* the max — the same
+//!   skip-NaN result as `f32::max` / `f64::max`.
+
+use std::arch::aarch64::*;
+
+use super::{scalar, KernelOps, ADAM_B1, ADAM_B2, ADAM_EPS, TILE_N};
+use crate::formats::packed::PackedFormat;
+
+pub(super) static NEON_OPS: KernelOps = KernelOps {
+    name: "neon",
+    dense_w: 4,
+    panel_madd: panel_madd_neon,
+    dense_madd: dense_madd_neon,
+    amax: amax_neon,
+    encode_block: encode_block_neon,
+    // 256-entry LUT decode has no NEON gather; the scalar loop is the
+    // honest baseline here.
+    decode_block: scalar::decode_block,
+    adam_update: adam_update_neon,
+    sgd_update: sgd_update_neon,
+    ln_fwd_apply: ln_fwd_apply_neon,
+    ln_bwd_apply: ln_bwd_apply_neon,
+    scale_inplace: scale_inplace_neon,
+    scale_f64_inplace: scale_f64_inplace_neon,
+    max_f64: max_f64_neon,
+};
+
+fn panel_madd_neon(ab: &[f32], prows: &[f32], inner: &mut [f32; TILE_N]) {
+    debug_assert_eq!(prows.len(), ab.len() * TILE_N);
+    // SAFETY: NEON is baseline on aarch64; loads/stores cover exact
+    // 4-float chunks of `prows` rows and `inner`.
+    unsafe {
+        let p = prows.as_ptr();
+        let mut acc = [vdupq_n_f32(0.0); 8];
+        for (t, &av) in ab.iter().enumerate() {
+            let a = vdupq_n_f32(av);
+            let row = p.add(t * TILE_N);
+            for (i, acc_i) in acc.iter_mut().enumerate() {
+                // vmul + vadd, never vfma: unfused like the scalar loop.
+                *acc_i = vaddq_f32(*acc_i, vmulq_f32(a, vld1q_f32(row.add(4 * i))));
+            }
+        }
+        let o = inner.as_mut_ptr();
+        for (i, &acc_i) in acc.iter().enumerate() {
+            vst1q_f32(o.add(4 * i), acc_i);
+        }
+    }
+}
+
+fn dense_madd_neon(arow: &[f32], panel: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), 4);
+    debug_assert_eq!(panel.len(), arow.len() * 4);
+    // SAFETY: NEON baseline; loads cover exact 4-float rows of `panel`,
+    // the store covers `out`'s 4 floats.
+    unsafe {
+        let p = panel.as_ptr();
+        let mut lo = vdupq_n_f64(0.0);
+        let mut hi = vdupq_n_f64(0.0);
+        for (t, &av) in arow.iter().enumerate() {
+            let a = vdupq_n_f64(av as f64);
+            let row = vld1q_f32(p.add(t * 4));
+            let rlo = vcvt_f64_f32(vget_low_f32(row));
+            let rhi = vcvt_high_f64_f32(row);
+            lo = vaddq_f64(lo, vmulq_f64(a, rlo));
+            hi = vaddq_f64(hi, vmulq_f64(a, rhi));
+        }
+        vst1q_f32(out.as_mut_ptr(), vcombine_f32(vcvt_f32_f64(lo), vcvt_f32_f64(hi)));
+    }
+}
+
+fn amax_neon(x: &[f32]) -> f32 {
+    // SAFETY: NEON baseline; the vector loop loads full 4-float chunks.
+    unsafe {
+        let zero = vdupq_n_f32(0.0);
+        let mut acc = zero;
+        let mut i = 0usize;
+        while i + 4 <= x.len() {
+            let v = vld1q_f32(x.as_ptr().add(i));
+            // Replace NaN lanes with 0 (the fold's neutral element) so
+            // FMAX's NaN propagation cannot leak — f32::max skips NaN.
+            let is_num = vceqq_f32(v, v);
+            let vabs = vbslq_f32(is_num, vabsq_f32(v), zero);
+            acc = vmaxq_f32(acc, vabs);
+            i += 4;
+        }
+        let mut lanes = [0.0f32; 4];
+        vst1q_f32(lanes.as_mut_ptr(), acc);
+        let mut m = 0.0f32;
+        for &l in &lanes {
+            m = m.max(l);
+        }
+        while i < x.len() {
+            m = m.max(x[i].abs());
+            i += 1;
+        }
+        m
+    }
+}
+
+fn encode_block_neon(pf: &PackedFormat, xb: &[f32], scale: f32, out: &mut [u8]) -> usize {
+    debug_assert_eq!(xb.len(), out.len());
+    let maxp = pf.max_payload();
+    // SAFETY: NEON baseline; vector loads cover full 4-float chunks, the
+    // lane store is 4 u32s into a [u32; 4]. Same algorithm as the x86
+    // kernels (see `super::x86`'s comments), with RNE via FCVTNS.
+    unsafe {
+        let scale_v = vdupq_n_f32(scale);
+        let abs_i = vdupq_n_u32(0x7FFF_FFFF);
+        let inf_i = vdupq_n_u32(0x7F80_0000);
+        let bias_v = vdupq_n_s32(127);
+        let emin_v = vdupq_n_s32(pf.emin);
+        let emax_v = vdupq_n_s32(pf.emax);
+        let m1 = pf.m1 as i32;
+        let m1_v = vdupq_n_s32(m1);
+        let two_m1_v = vdupq_n_s32(2 * m1);
+        let kmax_v = vdupq_n_s32(pf.kmax_top as i32);
+        let maxp_v = vdupq_n_u32(maxp as u32);
+        let step_bias_v = vdupq_n_s32(127 - pf.mbits);
+        let mbits_shift = vdupq_n_s32(pf.mbits);
+        let one_v = vdupq_n_s32(1);
+        let mut clamped = 0usize;
+        let mut buf = [0u32; 4];
+        let chunks = xb.len() / 4;
+        for c in 0..chunks {
+            let r = vdivq_f32(vld1q_f32(xb.as_ptr().add(c * 4)), scale_v);
+            let u = vreinterpretq_u32_f32(r);
+            let a_bits = vandq_u32(u, abs_i);
+            let a = vreinterpretq_f32_u32(a_bits);
+            let sign = vshlq_n_u32::<7>(vshrq_n_u32::<31>(u));
+            let e_raw = vsubq_s32(vreinterpretq_s32_u32(vshrq_n_u32::<23>(a_bits)), bias_v);
+            let e = vminq_s32(vmaxq_s32(e_raw, emin_v), emax_v);
+            let step = vreinterpretq_f32_u32(vshlq_n_u32::<23>(vreinterpretq_u32_s32(
+                vaddq_s32(e, step_bias_v),
+            )));
+            let q = vdivq_f32(a, step);
+            // FCVTNS: round-ties-even straight to i32. +Inf saturates to
+            // i32::MAX (clamped below); NaN gives 0 (overridden below).
+            let k0 = vcvtnq_s32_f32(q);
+            let is_top = vceqq_s32(e, emax_v);
+            let k = vbslq_s32(is_top, vminq_s32(k0, kmax_v), k0);
+            let bump = vbicq_u32(vceqq_s32(k, two_m1_v), is_top);
+            let e = vsubq_s32(e, vreinterpretq_s32_u32(bump)); // mask is -1 per lane
+            let k = vbslq_s32(bump, m1_v, k);
+            let pay_norm = vorrq_s32(
+                vshlq_s32(vaddq_s32(vsubq_s32(e, emin_v), one_v), mbits_shift),
+                vsubq_s32(k, m1_v),
+            );
+            let is_sub = vcgtq_s32(m1_v, k);
+            let payload = vbslq_s32(is_sub, k, pay_norm);
+            let code = vorrq_u32(sign, vreinterpretq_u32_s32(payload));
+            let is_zero = vceqq_u32(a_bits, vdupq_n_u32(0));
+            let code = vbicq_u32(code, is_zero);
+            let is_nan = vcgtq_u32(a_bits, inf_i);
+            let code = vbslq_u32(is_nan, maxp_v, code);
+            vst1q_u32(buf.as_mut_ptr(), code);
+            for (o, &ci) in out[c * 4..c * 4 + 4].iter_mut().zip(&buf) {
+                let byte = ci as u8;
+                clamped += ((byte & 0x7F) == maxp) as usize;
+                *o = byte;
+            }
+        }
+        for i in chunks * 4..xb.len() {
+            let code = pf.encode_elem(xb[i] / scale);
+            clamped += ((code & 0x7F) == maxp) as usize;
+            out[i] = code;
+        }
+        clamped
+    }
+}
+
+fn adam_update_neon(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    t: f32,
+    lr: f32,
+) -> f64 {
+    debug_assert!(g.len() == p.len() && m.len() == p.len() && v.len() == p.len());
+    let bias1 = 1.0 - ADAM_B1.powf(t);
+    let bias2 = 1.0 - ADAM_B2.powf(t);
+    let mut upd_sq = 0.0f64;
+    // SAFETY: NEON baseline; full 4-float chunks of equal-length slices.
+    unsafe {
+        let b1v = vdupq_n_f32(ADAM_B1);
+        let omb1v = vdupq_n_f32(1.0 - ADAM_B1);
+        let b2v = vdupq_n_f32(ADAM_B2);
+        let omb2v = vdupq_n_f32(1.0 - ADAM_B2);
+        let bias1v = vdupq_n_f32(bias1);
+        let bias2v = vdupq_n_f32(bias2);
+        let epsv = vdupq_n_f32(ADAM_EPS);
+        let lrv = vdupq_n_f32(lr);
+        let mut buf = [0.0f32; 4];
+        let chunks = p.len() / 4;
+        for c in 0..chunks {
+            let o = c * 4;
+            let gv = vld1q_f32(g.as_ptr().add(o));
+            let mv = vld1q_f32(m.as_ptr().add(o));
+            let vv = vld1q_f32(v.as_ptr().add(o));
+            let pv = vld1q_f32(p.as_ptr().add(o));
+            // Same association as the scalar loop; vmul + vadd, no fma.
+            let mn = vaddq_f32(vmulq_f32(b1v, mv), vmulq_f32(omb1v, gv));
+            let vn = vaddq_f32(vmulq_f32(b2v, vv), vmulq_f32(vmulq_f32(omb2v, gv), gv));
+            let mhat = vdivq_f32(mn, bias1v);
+            let vhat = vdivq_f32(vn, bias2v);
+            let denom = vaddq_f32(vsqrtq_f32(vhat), epsv);
+            let step = vmulq_f32(lrv, vdivq_f32(mhat, denom));
+            vst1q_f32(m.as_mut_ptr().add(o), mn);
+            vst1q_f32(v.as_mut_ptr().add(o), vn);
+            vst1q_f32(p.as_mut_ptr().add(o), vsubq_f32(pv, step));
+            vst1q_f32(buf.as_mut_ptr(), step);
+            for &s in &buf {
+                upd_sq += (s as f64) * (s as f64);
+            }
+        }
+        for i in chunks * 4..p.len() {
+            m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
+            v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
+            let mhat = m[i] / bias1;
+            let vhat = v[i] / bias2;
+            let step = lr * (mhat / (vhat.sqrt() + ADAM_EPS));
+            upd_sq += (step as f64) * (step as f64);
+            p[i] -= step;
+        }
+    }
+    upd_sq
+}
+
+fn sgd_update_neon(p: &mut [f32], g: &[f32], m: &mut [f32], lr: f32, momentum: f32) -> f64 {
+    debug_assert!(g.len() == p.len() && m.len() == p.len());
+    let mut upd_sq = 0.0f64;
+    // SAFETY: NEON baseline; full 4-float chunks of equal-length slices.
+    unsafe {
+        let mom_v = vdupq_n_f32(momentum);
+        let lrv = vdupq_n_f32(lr);
+        let mut buf = [0.0f32; 4];
+        let chunks = p.len() / 4;
+        for c in 0..chunks {
+            let o = c * 4;
+            let gv = vld1q_f32(g.as_ptr().add(o));
+            let mv = vld1q_f32(m.as_ptr().add(o));
+            let pv = vld1q_f32(p.as_ptr().add(o));
+            let mn = vaddq_f32(vmulq_f32(mom_v, mv), gv);
+            let step = vmulq_f32(lrv, mn);
+            vst1q_f32(m.as_mut_ptr().add(o), mn);
+            vst1q_f32(p.as_mut_ptr().add(o), vsubq_f32(pv, step));
+            vst1q_f32(buf.as_mut_ptr(), step);
+            for &s in &buf {
+                upd_sq += (s as f64) * (s as f64);
+            }
+        }
+        for i in chunks * 4..p.len() {
+            m[i] = momentum * m[i] + g[i];
+            let step = lr * m[i];
+            upd_sq += (step as f64) * (step as f64);
+            p[i] -= step;
+        }
+    }
+    upd_sq
+}
+
+fn ln_fwd_apply_neon(
+    row: &[f32],
+    mu: f64,
+    inv_std: f64,
+    gamma: &[f32],
+    xhat: &mut [f32],
+    z: &mut [f32],
+) {
+    debug_assert!(gamma.len() == row.len() && xhat.len() == row.len() && z.len() == row.len());
+    // SAFETY: NEON baseline; full 4-float chunks of equal-length slices.
+    unsafe {
+        let mu_v = vdupq_n_f64(mu);
+        let is_v = vdupq_n_f64(inv_std);
+        let chunks = row.len() / 4;
+        for c in 0..chunks {
+            let j = c * 4;
+            let r4 = vld1q_f32(row.as_ptr().add(j));
+            let lo = vmulq_f64(vsubq_f64(vcvt_f64_f32(vget_low_f32(r4)), mu_v), is_v);
+            let hi = vmulq_f64(vsubq_f64(vcvt_high_f64_f32(r4), mu_v), is_v);
+            let xh4 = vcombine_f32(vcvt_f32_f64(lo), vcvt_f32_f64(hi));
+            vst1q_f32(xhat.as_mut_ptr().add(j), xh4);
+            vst1q_f32(z.as_mut_ptr().add(j), vmulq_f32(xh4, vld1q_f32(gamma.as_ptr().add(j))));
+        }
+        for j in chunks * 4..row.len() {
+            let xh = ((row[j] as f64 - mu) * inv_std) as f32;
+            xhat[j] = xh;
+            z[j] = xh * gamma[j];
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn ln_bwd_apply_neon(
+    dz: &[f32],
+    xhat: &[f32],
+    gamma: &[f32],
+    m1: f64,
+    m2: f64,
+    inv_std: f64,
+    dgamma: &mut [f64],
+    dx: &mut [f32],
+) {
+    debug_assert!(
+        xhat.len() == dz.len()
+            && gamma.len() == dz.len()
+            && dgamma.len() == dz.len()
+            && dx.len() == dz.len()
+    );
+    // SAFETY: NEON baseline; full 4-element chunks of equal-length
+    // slices (f64 loads on `dgamma` are 2 lanes each).
+    unsafe {
+        let m1_v = vdupq_n_f64(m1);
+        let m2_v = vdupq_n_f64(m2);
+        let is_v = vdupq_n_f64(inv_std);
+        let chunks = dz.len() / 4;
+        for c in 0..chunks {
+            let j = c * 4;
+            let dz4 = vld1q_f32(dz.as_ptr().add(j));
+            let g4 = vld1q_f32(gamma.as_ptr().add(j));
+            let xh4 = vld1q_f32(xhat.as_ptr().add(j));
+            let dxh4 = vmulq_f32(dz4, g4); // f32 multiply first, like scalar
+            let dxh_lo = vcvt_f64_f32(vget_low_f32(dxh4));
+            let dxh_hi = vcvt_high_f64_f32(dxh4);
+            let dz_lo = vcvt_f64_f32(vget_low_f32(dz4));
+            let dz_hi = vcvt_high_f64_f32(dz4);
+            let xh_lo = vcvt_f64_f32(vget_low_f32(xh4));
+            let xh_hi = vcvt_high_f64_f32(xh4);
+            let dgp = dgamma.as_mut_ptr().add(j);
+            vst1q_f64(dgp, vaddq_f64(vld1q_f64(dgp), vmulq_f64(dz_lo, xh_lo)));
+            vst1q_f64(dgp.add(2), vaddq_f64(vld1q_f64(dgp.add(2)), vmulq_f64(dz_hi, xh_hi)));
+            let u_lo = vsubq_f64(vsubq_f64(dxh_lo, m1_v), vmulq_f64(xh_lo, m2_v));
+            let u_hi = vsubq_f64(vsubq_f64(dxh_hi, m1_v), vmulq_f64(xh_hi, m2_v));
+            let dx4 = vcombine_f32(
+                vcvt_f32_f64(vmulq_f64(is_v, u_lo)),
+                vcvt_f32_f64(vmulq_f64(is_v, u_hi)),
+            );
+            vst1q_f32(dx.as_mut_ptr().add(j), dx4);
+        }
+        for j in chunks * 4..dz.len() {
+            let dxh = (dz[j] * gamma[j]) as f64;
+            dgamma[j] += dz[j] as f64 * xhat[j] as f64;
+            dx[j] = (inv_std * (dxh - m1 - xhat[j] as f64 * m2)) as f32;
+        }
+    }
+}
+
+fn scale_inplace_neon(x: &mut [f32], s: f32) {
+    // SAFETY: NEON baseline; full 4-float chunks of `x`.
+    unsafe {
+        let sv = vdupq_n_f32(s);
+        let chunks = x.len() / 4;
+        for c in 0..chunks {
+            let ptr = x.as_mut_ptr().add(c * 4);
+            vst1q_f32(ptr, vmulq_f32(vld1q_f32(ptr), sv));
+        }
+        for v in &mut x[chunks * 4..] {
+            *v *= s;
+        }
+    }
+}
+
+fn scale_f64_inplace_neon(x: &mut [f32], s: f64) {
+    // SAFETY: NEON baseline; full 4-float chunks of `x`.
+    unsafe {
+        let sv = vdupq_n_f64(s);
+        let chunks = x.len() / 4;
+        for c in 0..chunks {
+            let ptr = x.as_mut_ptr().add(c * 4);
+            let v4 = vld1q_f32(ptr);
+            let lo = vmulq_f64(vcvt_f64_f32(vget_low_f32(v4)), sv);
+            let hi = vmulq_f64(vcvt_high_f64_f32(v4), sv);
+            vst1q_f32(ptr, vcombine_f32(vcvt_f32_f64(lo), vcvt_f32_f64(hi)));
+        }
+        for v in &mut x[chunks * 4..] {
+            *v = (*v as f64 * s) as f32;
+        }
+    }
+}
+
+fn max_f64_neon(x: &[f32]) -> f64 {
+    // SAFETY: NEON baseline; full 4-float chunks of `x`.
+    unsafe {
+        let neg_inf = vdupq_n_f32(f32::NEG_INFINITY);
+        let mut acc_lo = vdupq_n_f64(f64::NEG_INFINITY);
+        let mut acc_hi = vdupq_n_f64(f64::NEG_INFINITY);
+        let chunks = x.len() / 4;
+        for c in 0..chunks {
+            let v4 = vld1q_f32(x.as_ptr().add(c * 4));
+            // NaN lanes become −∞ (the fold's base) so FMAX's NaN
+            // propagation cannot leak — f64::max skips NaN.
+            let is_num = vceqq_f32(v4, v4);
+            let v4m = vbslq_f32(is_num, v4, neg_inf);
+            acc_lo = vmaxq_f64(acc_lo, vcvt_f64_f32(vget_low_f32(v4m)));
+            acc_hi = vmaxq_f64(acc_hi, vcvt_high_f64_f32(v4m));
+        }
+        let mut lanes = [0.0f64; 4];
+        vst1q_f64(lanes.as_mut_ptr(), acc_lo);
+        vst1q_f64(lanes.as_mut_ptr().add(2), acc_hi);
+        let mut m = f64::NEG_INFINITY;
+        for &l in &lanes {
+            m = m.max(l);
+        }
+        for &v in &x[chunks * 4..] {
+            m = m.max(v as f64);
+        }
+        m
+    }
+}

@@ -1,0 +1,141 @@
+//! Scalar reference implementations of every microkernel op — the
+//! always-available tier and the bitwise oracle the SIMD tables are
+//! property-tested against. These are the exact loops the pre-SIMD
+//! execution layer ran (moved here verbatim so `scalar`/`panel` tiers
+//! reproduce it bit-for-bit).
+
+use super::{ADAM_B1, ADAM_B2, ADAM_EPS, TILE_N};
+use crate::formats::packed::PackedFormat;
+
+pub(super) fn panel_madd(ab: &[f32], prows: &[f32], inner: &mut [f32; TILE_N]) {
+    inner.fill(0.0);
+    for (&av, prow) in ab.iter().zip(prows.chunks_exact(TILE_N)) {
+        for (l, &bv) in inner.iter_mut().zip(prow) {
+            *l += av * bv;
+        }
+    }
+}
+
+pub(super) fn dense_madd(arow: &[f32], panel: &[f32], out: &mut [f32]) {
+    let w = out.len();
+    debug_assert_eq!(panel.len(), arow.len() * w);
+    for (j, o) in out.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for (t, &a) in arow.iter().enumerate() {
+            acc += (a as f64) * (panel[t * w + j] as f64);
+        }
+        *o = acc as f32;
+    }
+}
+
+pub(super) fn amax(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |acc, &v| acc.max(v.abs()))
+}
+
+pub(super) fn encode_block(pf: &PackedFormat, xb: &[f32], scale: f32, out: &mut [u8]) -> usize {
+    debug_assert_eq!(xb.len(), out.len());
+    let maxp = pf.max_payload();
+    let mut clamped = 0usize;
+    for (c, &v) in out.iter_mut().zip(xb) {
+        let code = pf.encode_elem(v / scale);
+        clamped += ((code & 0x7F) == maxp) as usize;
+        *c = code;
+    }
+    clamped
+}
+
+pub(super) fn decode_block(lut: &[f32; 256], codes: &[u8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = lut[c as usize] * scale;
+    }
+}
+
+pub(super) fn adam_update(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    t: f32,
+    lr: f32,
+) -> f64 {
+    let bias1 = 1.0 - ADAM_B1.powf(t);
+    let bias2 = 1.0 - ADAM_B2.powf(t);
+    let mut upd_sq = 0.0f64;
+    for i in 0..p.len() {
+        m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
+        v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
+        let mhat = m[i] / bias1;
+        let vhat = v[i] / bias2;
+        let step = lr * (mhat / (vhat.sqrt() + ADAM_EPS));
+        upd_sq += (step as f64) * (step as f64);
+        p[i] -= step;
+    }
+    upd_sq
+}
+
+pub(super) fn sgd_update(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    lr: f32,
+    momentum: f32,
+) -> f64 {
+    let mut upd_sq = 0.0f64;
+    for i in 0..p.len() {
+        m[i] = momentum * m[i] + g[i];
+        let step = lr * m[i];
+        upd_sq += (step as f64) * (step as f64);
+        p[i] -= step;
+    }
+    upd_sq
+}
+
+pub(super) fn ln_fwd_apply(
+    row: &[f32],
+    mu: f64,
+    inv_std: f64,
+    gamma: &[f32],
+    xhat: &mut [f32],
+    z: &mut [f32],
+) {
+    for j in 0..row.len() {
+        let xh = ((row[j] as f64 - mu) * inv_std) as f32;
+        xhat[j] = xh;
+        z[j] = xh * gamma[j];
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(super) fn ln_bwd_apply(
+    dz: &[f32],
+    xhat: &[f32],
+    gamma: &[f32],
+    m1: f64,
+    m2: f64,
+    inv_std: f64,
+    dgamma: &mut [f64],
+    dx: &mut [f32],
+) {
+    for j in 0..dz.len() {
+        let dxh = (dz[j] * gamma[j]) as f64;
+        dgamma[j] += dz[j] as f64 * xhat[j] as f64;
+        dx[j] = (inv_std * (dxh - m1 - xhat[j] as f64 * m2)) as f32;
+    }
+}
+
+pub(super) fn scale_inplace(x: &mut [f32], s: f32) {
+    for v in x {
+        *v *= s;
+    }
+}
+
+pub(super) fn scale_f64_inplace(x: &mut [f32], s: f64) {
+    for v in x {
+        *v = (*v as f64 * s) as f32;
+    }
+}
+
+pub(super) fn max_f64(x: &[f32]) -> f64 {
+    x.iter().fold(f64::NEG_INFINITY, |acc, &v| acc.max(v as f64))
+}

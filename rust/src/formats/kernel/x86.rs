@@ -1,0 +1,879 @@
+//! x86_64 microkernels: AVX2 (8-lane) and the always-available SSE2
+//! baseline (4-lane).
+//!
+//! Parity notes (the contract is bitwise identity with
+//! [`super::scalar`]):
+//!
+//! * GEMM lanes use *unfused* `mul` + `add` — FMA instructions are never
+//!   emitted (rustc performs no floating-point contraction without
+//!   fast-math, so `_mm*_mul_*` + `_mm*_add_*` stay two rounded ops,
+//!   exactly like the scalar kernel).
+//! * `div`, `sqrt`, and f32↔f64 conversions are IEEE correctly-rounded
+//!   on both paths, so elementwise chains match bit-for-bit.
+//! * Round-ties-even uses the `2^23` magic-add trick (exact for
+//!   `q < 2^23`; larger quotients only occur in the top exponent band,
+//!   where they are clamped to `kmax_top` in the float domain before
+//!   the integer convert — the same value the scalar path clamps to).
+//! * `MAXPS`/`MINPS`/`MAXPD` return their *second* operand when either
+//!   input is NaN; every reduction keeps the accumulator in that slot,
+//!   which reproduces `f32::max`/`f64::max`'s skip-NaN semantics.
+//!
+//! Safety: SSE2 is part of the x86_64 baseline, so the SSE2 kernels are
+//! safe to call unconditionally. The AVX2 kernels are `target_feature`
+//! functions reachable only through [`AVX2_OPS`], which
+//! [`super::simd_ops`] hands out strictly after
+//! `is_x86_feature_detected!("avx2")`.
+
+use std::arch::x86_64::*;
+
+use super::{scalar, KernelOps, ADAM_B1, ADAM_B2, ADAM_EPS, TILE_N};
+use crate::formats::packed::PackedFormat;
+
+/// 2^23: adding and subtracting it rounds `0 <= q < 2^23` to the nearest
+/// integer, ties to even (the default MXCSR rounding mode).
+const RNE_MAGIC: f32 = 8_388_608.0;
+
+pub(super) fn avx2_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+pub(super) static SSE2_OPS: KernelOps = KernelOps {
+    name: "sse2",
+    dense_w: 4,
+    panel_madd: panel_madd_sse2,
+    dense_madd: dense_madd_sse2,
+    amax: amax_sse2,
+    encode_block: encode_block_sse2,
+    // The narrow ops below gain little at 2-lane f64 / without gathers;
+    // the SSE2 tier keeps the scalar reference for them.
+    decode_block: scalar::decode_block,
+    adam_update: adam_update_sse2,
+    sgd_update: sgd_update_sse2,
+    ln_fwd_apply: scalar::ln_fwd_apply,
+    ln_bwd_apply: scalar::ln_bwd_apply,
+    scale_inplace: scale_inplace_sse2,
+    scale_f64_inplace: scalar::scale_f64_inplace,
+    max_f64: scalar::max_f64,
+};
+
+pub(super) static AVX2_OPS: KernelOps = KernelOps {
+    name: "avx2",
+    dense_w: 8,
+    panel_madd: panel_madd_avx2,
+    dense_madd: dense_madd_avx2,
+    amax: amax_avx2,
+    encode_block: encode_block_avx2,
+    decode_block: decode_block_avx2,
+    adam_update: adam_update_avx2,
+    sgd_update: sgd_update_avx2,
+    ln_fwd_apply: ln_fwd_apply_avx2,
+    ln_bwd_apply: ln_bwd_apply_avx2,
+    scale_inplace: scale_inplace_avx2,
+    scale_f64_inplace: scale_f64_inplace_avx2,
+    max_f64: max_f64_avx2,
+};
+
+// ---------------------------------------------------------------------------
+// AVX2 safe wrappers (the table entries).
+//
+// SAFETY: every wrapper is only reachable through `AVX2_OPS`, which
+// `simd_ops()` returns strictly after `avx2_available()` reported true.
+// ---------------------------------------------------------------------------
+
+fn panel_madd_avx2(ab: &[f32], prows: &[f32], inner: &mut [f32; TILE_N]) {
+    // SAFETY: AVX2 availability checked at table selection (see above).
+    unsafe { panel_madd_avx2_impl(ab, prows, inner) }
+}
+
+fn dense_madd_avx2(arow: &[f32], panel: &[f32], out: &mut [f32]) {
+    // SAFETY: AVX2 availability checked at table selection.
+    unsafe { dense_madd_avx2_impl(arow, panel, out) }
+}
+
+fn amax_avx2(x: &[f32]) -> f32 {
+    // SAFETY: AVX2 availability checked at table selection.
+    unsafe { amax_avx2_impl(x) }
+}
+
+fn encode_block_avx2(pf: &PackedFormat, xb: &[f32], scale: f32, out: &mut [u8]) -> usize {
+    // SAFETY: AVX2 availability checked at table selection.
+    unsafe { encode_block_avx2_impl(pf, xb, scale, out) }
+}
+
+fn decode_block_avx2(lut: &[f32; 256], codes: &[u8], scale: f32, out: &mut [f32]) {
+    // SAFETY: AVX2 availability checked at table selection.
+    unsafe { decode_block_avx2_impl(lut, codes, scale, out) }
+}
+
+fn adam_update_avx2(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    t: f32,
+    lr: f32,
+) -> f64 {
+    // SAFETY: AVX2 availability checked at table selection.
+    unsafe { adam_update_avx2_impl(p, g, m, v, t, lr) }
+}
+
+fn sgd_update_avx2(p: &mut [f32], g: &[f32], m: &mut [f32], lr: f32, momentum: f32) -> f64 {
+    // SAFETY: AVX2 availability checked at table selection.
+    unsafe { sgd_update_avx2_impl(p, g, m, lr, momentum) }
+}
+
+fn ln_fwd_apply_avx2(
+    row: &[f32],
+    mu: f64,
+    inv_std: f64,
+    gamma: &[f32],
+    xhat: &mut [f32],
+    z: &mut [f32],
+) {
+    // SAFETY: AVX2 availability checked at table selection.
+    unsafe { ln_fwd_apply_avx2_impl(row, mu, inv_std, gamma, xhat, z) }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn ln_bwd_apply_avx2(
+    dz: &[f32],
+    xhat: &[f32],
+    gamma: &[f32],
+    m1: f64,
+    m2: f64,
+    inv_std: f64,
+    dgamma: &mut [f64],
+    dx: &mut [f32],
+) {
+    // SAFETY: AVX2 availability checked at table selection.
+    unsafe { ln_bwd_apply_avx2_impl(dz, xhat, gamma, m1, m2, inv_std, dgamma, dx) }
+}
+
+fn scale_inplace_avx2(x: &mut [f32], s: f32) {
+    // SAFETY: AVX2 availability checked at table selection.
+    unsafe { scale_inplace_avx2_impl(x, s) }
+}
+
+fn scale_f64_inplace_avx2(x: &mut [f32], s: f64) {
+    // SAFETY: AVX2 availability checked at table selection.
+    unsafe { scale_f64_inplace_avx2_impl(x, s) }
+}
+
+fn max_f64_avx2(x: &[f32]) -> f64 {
+    // SAFETY: AVX2 availability checked at table selection.
+    unsafe { max_f64_avx2_impl(x) }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 implementations.
+// ---------------------------------------------------------------------------
+
+#[target_feature(enable = "avx2")]
+unsafe fn panel_madd_avx2_impl(ab: &[f32], prows: &[f32], inner: &mut [f32; TILE_N]) {
+    debug_assert_eq!(prows.len(), ab.len() * TILE_N);
+    // SAFETY: all loads/stores stay inside `prows` (t·TILE_N + 24 + 8
+    // <= len) and `inner` (TILE_N = 32 floats); AVX2 is enabled by the
+    // caller contract.
+    unsafe {
+        let p = prows.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        for (t, &av) in ab.iter().enumerate() {
+            let a = _mm256_set1_ps(av);
+            let row = p.add(t * TILE_N);
+            // Unfused mul-then-add: each lane performs the scalar
+            // kernel's exact two rounded ops per t.
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(a, _mm256_loadu_ps(row)));
+            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(a, _mm256_loadu_ps(row.add(8))));
+            acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(a, _mm256_loadu_ps(row.add(16))));
+            acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(a, _mm256_loadu_ps(row.add(24))));
+        }
+        let o = inner.as_mut_ptr();
+        _mm256_storeu_ps(o, acc0);
+        _mm256_storeu_ps(o.add(8), acc1);
+        _mm256_storeu_ps(o.add(16), acc2);
+        _mm256_storeu_ps(o.add(24), acc3);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dense_madd_avx2_impl(arow: &[f32], panel: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), 8);
+    debug_assert_eq!(panel.len(), arow.len() * 8);
+    // SAFETY: loads stay inside `panel` (t·8 + 8 <= len); the two 4-wide
+    // stores cover exactly `out`'s 8 floats.
+    unsafe {
+        let p = panel.as_ptr();
+        let mut lo = _mm256_setzero_pd();
+        let mut hi = _mm256_setzero_pd();
+        for (t, &av) in arow.iter().enumerate() {
+            let a = _mm256_set1_pd(av as f64);
+            let row = _mm256_loadu_ps(p.add(t * 8));
+            let rlo = _mm256_cvtps_pd(_mm256_castps256_ps128(row));
+            let rhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(row));
+            // One serial f64 chain per output lane (unfused).
+            lo = _mm256_add_pd(lo, _mm256_mul_pd(a, rlo));
+            hi = _mm256_add_pd(hi, _mm256_mul_pd(a, rhi));
+        }
+        let o = out.as_mut_ptr();
+        _mm_storeu_ps(o, _mm256_cvtpd_ps(lo));
+        _mm_storeu_ps(o.add(4), _mm256_cvtpd_ps(hi));
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn amax_avx2_impl(x: &[f32]) -> f32 {
+    // SAFETY: the vector loop only loads full 8-float chunks inside `x`.
+    unsafe {
+        let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= x.len() {
+            let v = _mm256_and_ps(_mm256_loadu_ps(x.as_ptr().add(i)), absmask);
+            // max(v, acc): NaN in v yields the second operand (acc) —
+            // f32::max's skip-NaN rule.
+            acc = _mm256_max_ps(v, acc);
+            i += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut m = 0.0f32;
+        for &l in &lanes {
+            m = m.max(l); // lanes are NaN-free by construction
+        }
+        while i < x.len() {
+            m = m.max(x[i].abs());
+            i += 1;
+        }
+        m
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn encode_block_avx2_impl(
+    pf: &PackedFormat,
+    xb: &[f32],
+    scale: f32,
+    out: &mut [u8],
+) -> usize {
+    debug_assert_eq!(xb.len(), out.len());
+    let maxp = pf.max_payload();
+    // SAFETY: vector loads cover full 8-float chunks of `xb`; the lane
+    // buffer store is 8 i32s into a [i32; 8]; the scalar tail stays in
+    // bounds by the chunk iteration.
+    unsafe {
+        let scale_v = _mm256_set1_ps(scale);
+        let abs_i = _mm256_set1_epi32(0x7FFF_FFFF);
+        let inf_i = _mm256_set1_epi32(0x7F80_0000);
+        let bias_v = _mm256_set1_epi32(127);
+        let emin_v = _mm256_set1_epi32(pf.emin);
+        let emax_v = _mm256_set1_epi32(pf.emax);
+        let m1 = pf.m1 as i32;
+        let m1_v = _mm256_set1_epi32(m1);
+        let two_m1_v = _mm256_set1_epi32(2 * m1);
+        let kmax_f = _mm256_set1_ps(pf.kmax_top as f32);
+        let maxp_v = _mm256_set1_epi32(maxp as i32);
+        let magic = _mm256_set1_ps(RNE_MAGIC);
+        let step_bias_v = _mm256_set1_epi32(127 - pf.mbits);
+        let shift = _mm_cvtsi32_si128(pf.mbits);
+        let one_v = _mm256_set1_epi32(1);
+        let mut clamped = 0usize;
+        let mut buf = [0i32; 8];
+        let chunks = xb.len() / 8;
+        for c in 0..chunks {
+            let xc = xb.as_ptr().add(c * 8);
+            // r = x / scale — the same single f32 division the scalar
+            // path performs before `encode_elem`.
+            let r = _mm256_div_ps(_mm256_loadu_ps(xc), scale_v);
+            let u = _mm256_castps_si256(r);
+            let a_bits = _mm256_and_si256(u, abs_i);
+            let a = _mm256_castsi256_ps(a_bits);
+            let sign = _mm256_slli_epi32::<7>(_mm256_srli_epi32::<31>(u));
+            // e = clamp((a_bits >> 23) - 127, emin, emax)
+            let e_raw = _mm256_sub_epi32(_mm256_srli_epi32::<23>(a_bits), bias_v);
+            let e = _mm256_min_epi32(_mm256_max_epi32(e_raw, emin_v), emax_v);
+            // step = 2^(e - mbits): always a normal f32 for the MX formats.
+            let step =
+                _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(e, step_bias_v)));
+            let q = _mm256_div_ps(a, step);
+            // round-ties-even; exact below 2^23 (larger q only in the
+            // top band, clamped next).
+            let rn = _mm256_sub_ps(_mm256_add_ps(q, magic), magic);
+            let is_top = _mm256_cmpeq_epi32(e, emax_v);
+            // top band: clamp to kmax_top in the float domain. min's
+            // NaN rule (second operand) also maps NaN q here; the NaN
+            // lanes are overridden at the end regardless.
+            let rn_cl = _mm256_min_ps(rn, kmax_f);
+            let rn = _mm256_blendv_ps(rn, rn_cl, _mm256_castsi256_ps(is_top));
+            let k = _mm256_cvttps_epi32(rn);
+            // rounded up out of a lower band: e += 1, k = m1.
+            let bump = _mm256_andnot_si256(is_top, _mm256_cmpeq_epi32(k, two_m1_v));
+            let e = _mm256_sub_epi32(e, bump); // bump mask is -1 per lane
+            let k = _mm256_blendv_epi8(k, m1_v, bump);
+            // payload: k < m1 keeps k (subnormal ramp, incl. k == 0),
+            // else exp_field << mbits | (k - m1).
+            let pay_norm = _mm256_or_si256(
+                _mm256_sll_epi32(_mm256_add_epi32(_mm256_sub_epi32(e, emin_v), one_v), shift),
+                _mm256_sub_epi32(k, m1_v),
+            );
+            let is_sub = _mm256_cmpgt_epi32(m1_v, k);
+            let payload = _mm256_blendv_epi8(pay_norm, k, is_sub);
+            let code = _mm256_or_si256(sign, payload);
+            // Specials: exact ±0 encodes as 0; NaN drops its sign and
+            // becomes +max_payload (both exactly `encode_elem`).
+            let is_zero = _mm256_cmpeq_epi32(a_bits, _mm256_setzero_si256());
+            let code = _mm256_andnot_si256(is_zero, code);
+            let is_nan = _mm256_cmpgt_epi32(a_bits, inf_i);
+            let code = _mm256_blendv_epi8(code, maxp_v, is_nan);
+            _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, code);
+            for (o, &ci) in out[c * 8..c * 8 + 8].iter_mut().zip(&buf) {
+                let byte = ci as u8;
+                clamped += ((byte & 0x7F) == maxp) as usize;
+                *o = byte;
+            }
+        }
+        for i in chunks * 8..xb.len() {
+            let code = pf.encode_elem(xb[i] / scale);
+            clamped += ((code & 0x7F) == maxp) as usize;
+            out[i] = code;
+        }
+        clamped
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn decode_block_avx2_impl(lut: &[f32; 256], codes: &[u8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    // SAFETY: gather indices are zero-extended bytes (< 256), in bounds
+    // for the 256-entry LUT; byte loads and f32 stores cover exact
+    // 8-element chunks of `codes` / `out`.
+    unsafe {
+        let scale_v = _mm256_set1_ps(scale);
+        let chunks = codes.len() / 8;
+        for c in 0..chunks {
+            let idx =
+                _mm256_cvtepu8_epi32(_mm_loadl_epi64(codes.as_ptr().add(c * 8) as *const __m128i));
+            let vals = _mm256_i32gather_ps::<4>(lut.as_ptr(), idx);
+            _mm256_storeu_ps(out.as_mut_ptr().add(c * 8), _mm256_mul_ps(vals, scale_v));
+        }
+        for i in chunks * 8..codes.len() {
+            out[i] = lut[codes[i] as usize] * scale;
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn adam_update_avx2_impl(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    t: f32,
+    lr: f32,
+) -> f64 {
+    debug_assert!(g.len() == p.len() && m.len() == p.len() && v.len() == p.len());
+    let bias1 = 1.0 - ADAM_B1.powf(t);
+    let bias2 = 1.0 - ADAM_B2.powf(t);
+    let mut upd_sq = 0.0f64;
+    // SAFETY: all loads/stores cover full 8-float chunks of the four
+    // equal-length slices; the step buffer is a [f32; 8].
+    unsafe {
+        let b1v = _mm256_set1_ps(ADAM_B1);
+        let omb1v = _mm256_set1_ps(1.0 - ADAM_B1);
+        let b2v = _mm256_set1_ps(ADAM_B2);
+        let omb2v = _mm256_set1_ps(1.0 - ADAM_B2);
+        let bias1v = _mm256_set1_ps(bias1);
+        let bias2v = _mm256_set1_ps(bias2);
+        let epsv = _mm256_set1_ps(ADAM_EPS);
+        let lrv = _mm256_set1_ps(lr);
+        let mut buf = [0.0f32; 8];
+        let chunks = p.len() / 8;
+        for c in 0..chunks {
+            let o = c * 8;
+            let gv = _mm256_loadu_ps(g.as_ptr().add(o));
+            let mv = _mm256_loadu_ps(m.as_ptr().add(o));
+            let vv = _mm256_loadu_ps(v.as_ptr().add(o));
+            let pv = _mm256_loadu_ps(p.as_ptr().add(o));
+            // m = B1·m + (1-B1)·g ; v = B2·v + ((1-B2)·g)·g — the exact
+            // scalar association (left-to-right).
+            let mn = _mm256_add_ps(_mm256_mul_ps(b1v, mv), _mm256_mul_ps(omb1v, gv));
+            let vn =
+                _mm256_add_ps(_mm256_mul_ps(b2v, vv), _mm256_mul_ps(_mm256_mul_ps(omb2v, gv), gv));
+            let mhat = _mm256_div_ps(mn, bias1v);
+            let vhat = _mm256_div_ps(vn, bias2v);
+            let denom = _mm256_add_ps(_mm256_sqrt_ps(vhat), epsv);
+            let step = _mm256_mul_ps(lrv, _mm256_div_ps(mhat, denom));
+            _mm256_storeu_ps(m.as_mut_ptr().add(o), mn);
+            _mm256_storeu_ps(v.as_mut_ptr().add(o), vn);
+            _mm256_storeu_ps(p.as_mut_ptr().add(o), _mm256_sub_ps(pv, step));
+            _mm256_storeu_ps(buf.as_mut_ptr(), step);
+            // Σ(Δp)² stays a serial f64 chain in element order.
+            for &s in &buf {
+                upd_sq += (s as f64) * (s as f64);
+            }
+        }
+        for i in chunks * 8..p.len() {
+            m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
+            v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
+            let mhat = m[i] / bias1;
+            let vhat = v[i] / bias2;
+            let step = lr * (mhat / (vhat.sqrt() + ADAM_EPS));
+            upd_sq += (step as f64) * (step as f64);
+            p[i] -= step;
+        }
+    }
+    upd_sq
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn sgd_update_avx2_impl(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    lr: f32,
+    momentum: f32,
+) -> f64 {
+    debug_assert!(g.len() == p.len() && m.len() == p.len());
+    let mut upd_sq = 0.0f64;
+    // SAFETY: full 8-float chunks of equal-length slices.
+    unsafe {
+        let mom_v = _mm256_set1_ps(momentum);
+        let lrv = _mm256_set1_ps(lr);
+        let mut buf = [0.0f32; 8];
+        let chunks = p.len() / 8;
+        for c in 0..chunks {
+            let o = c * 8;
+            let gv = _mm256_loadu_ps(g.as_ptr().add(o));
+            let mv = _mm256_loadu_ps(m.as_ptr().add(o));
+            let pv = _mm256_loadu_ps(p.as_ptr().add(o));
+            let mn = _mm256_add_ps(_mm256_mul_ps(mom_v, mv), gv);
+            let step = _mm256_mul_ps(lrv, mn);
+            _mm256_storeu_ps(m.as_mut_ptr().add(o), mn);
+            _mm256_storeu_ps(p.as_mut_ptr().add(o), _mm256_sub_ps(pv, step));
+            _mm256_storeu_ps(buf.as_mut_ptr(), step);
+            for &s in &buf {
+                upd_sq += (s as f64) * (s as f64);
+            }
+        }
+        for i in chunks * 8..p.len() {
+            m[i] = momentum * m[i] + g[i];
+            let step = lr * m[i];
+            upd_sq += (step as f64) * (step as f64);
+            p[i] -= step;
+        }
+    }
+    upd_sq
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn ln_fwd_apply_avx2_impl(
+    row: &[f32],
+    mu: f64,
+    inv_std: f64,
+    gamma: &[f32],
+    xhat: &mut [f32],
+    z: &mut [f32],
+) {
+    debug_assert!(gamma.len() == row.len() && xhat.len() == row.len() && z.len() == row.len());
+    // SAFETY: full 4-float chunks of equal-length slices.
+    unsafe {
+        let mu_v = _mm256_set1_pd(mu);
+        let is_v = _mm256_set1_pd(inv_std);
+        let chunks = row.len() / 4;
+        for c in 0..chunks {
+            let j = c * 4;
+            let rd = _mm256_cvtps_pd(_mm_loadu_ps(row.as_ptr().add(j)));
+            let xh_d = _mm256_mul_pd(_mm256_sub_pd(rd, mu_v), is_v);
+            let xh4 = _mm256_cvtpd_ps(xh_d);
+            _mm_storeu_ps(xhat.as_mut_ptr().add(j), xh4);
+            let z4 = _mm_mul_ps(xh4, _mm_loadu_ps(gamma.as_ptr().add(j)));
+            _mm_storeu_ps(z.as_mut_ptr().add(j), z4);
+        }
+        for j in chunks * 4..row.len() {
+            let xh = ((row[j] as f64 - mu) * inv_std) as f32;
+            xhat[j] = xh;
+            z[j] = xh * gamma[j];
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn ln_bwd_apply_avx2_impl(
+    dz: &[f32],
+    xhat: &[f32],
+    gamma: &[f32],
+    m1: f64,
+    m2: f64,
+    inv_std: f64,
+    dgamma: &mut [f64],
+    dx: &mut [f32],
+) {
+    debug_assert!(
+        xhat.len() == dz.len()
+            && gamma.len() == dz.len()
+            && dgamma.len() == dz.len()
+            && dx.len() == dz.len()
+    );
+    // SAFETY: full 4-element chunks of equal-length slices (f64 loads on
+    // `dgamma` are 4 lanes = 32 bytes, in bounds by the chunk count).
+    unsafe {
+        let m1_v = _mm256_set1_pd(m1);
+        let m2_v = _mm256_set1_pd(m2);
+        let is_v = _mm256_set1_pd(inv_std);
+        let chunks = dz.len() / 4;
+        for c in 0..chunks {
+            let j = c * 4;
+            let dz4 = _mm_loadu_ps(dz.as_ptr().add(j));
+            let g4 = _mm_loadu_ps(gamma.as_ptr().add(j));
+            let xh4 = _mm_loadu_ps(xhat.as_ptr().add(j));
+            // dxh = (dz · gamma) as f64 — f32 multiply first, like the
+            // scalar pass.
+            let dxh_d = _mm256_cvtps_pd(_mm_mul_ps(dz4, g4));
+            let dz_d = _mm256_cvtps_pd(dz4);
+            let xh_d = _mm256_cvtps_pd(xh4);
+            let dg = _mm256_loadu_pd(dgamma.as_ptr().add(j));
+            _mm256_storeu_pd(
+                dgamma.as_mut_ptr().add(j),
+                _mm256_add_pd(dg, _mm256_mul_pd(dz_d, xh_d)),
+            );
+            let u = _mm256_sub_pd(_mm256_sub_pd(dxh_d, m1_v), _mm256_mul_pd(xh_d, m2_v));
+            _mm_storeu_ps(dx.as_mut_ptr().add(j), _mm256_cvtpd_ps(_mm256_mul_pd(is_v, u)));
+        }
+        for j in chunks * 4..dz.len() {
+            let dxh = (dz[j] * gamma[j]) as f64;
+            dgamma[j] += dz[j] as f64 * xhat[j] as f64;
+            dx[j] = (inv_std * (dxh - m1 - xhat[j] as f64 * m2)) as f32;
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn scale_inplace_avx2_impl(x: &mut [f32], s: f32) {
+    // SAFETY: full 8-float chunks of `x`.
+    unsafe {
+        let sv = _mm256_set1_ps(s);
+        let chunks = x.len() / 8;
+        for c in 0..chunks {
+            let ptr = x.as_mut_ptr().add(c * 8);
+            _mm256_storeu_ps(ptr, _mm256_mul_ps(_mm256_loadu_ps(ptr), sv));
+        }
+        for v in &mut x[chunks * 8..] {
+            *v *= s;
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn scale_f64_inplace_avx2_impl(x: &mut [f32], s: f64) {
+    // SAFETY: full 4-float chunks of `x`.
+    unsafe {
+        let sv = _mm256_set1_pd(s);
+        let chunks = x.len() / 4;
+        for c in 0..chunks {
+            let ptr = x.as_mut_ptr().add(c * 4);
+            let d = _mm256_mul_pd(_mm256_cvtps_pd(_mm_loadu_ps(ptr)), sv);
+            _mm_storeu_ps(ptr, _mm256_cvtpd_ps(d));
+        }
+        for v in &mut x[chunks * 4..] {
+            *v = (*v as f64 * s) as f32;
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn max_f64_avx2_impl(x: &[f32]) -> f64 {
+    // SAFETY: full 4-float chunks of `x`.
+    unsafe {
+        let mut acc = _mm256_set1_pd(f64::NEG_INFINITY);
+        let chunks = x.len() / 4;
+        for c in 0..chunks {
+            let vd = _mm256_cvtps_pd(_mm_loadu_ps(x.as_ptr().add(c * 4)));
+            // max(v, acc): NaN in v keeps acc — f64::max's skip-NaN rule.
+            acc = _mm256_max_pd(vd, acc);
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut m = f64::NEG_INFINITY;
+        for &l in &lanes {
+            m = m.max(l); // lanes are NaN-free
+        }
+        for &v in &x[chunks * 4..] {
+            m = m.max(v as f64);
+        }
+        m
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SSE2 implementations (x86_64 baseline — safe to call unconditionally).
+// ---------------------------------------------------------------------------
+
+/// `mask ? b : a` per bit (SSE2 has no blendv).
+#[inline(always)]
+unsafe fn blend_si128(a: __m128i, b: __m128i, mask: __m128i) -> __m128i {
+    // SAFETY: pure register ops; SSE2 is baseline on x86_64.
+    unsafe { _mm_or_si128(_mm_and_si128(mask, b), _mm_andnot_si128(mask, a)) }
+}
+
+#[inline(always)]
+unsafe fn min_epi32_sse2(a: __m128i, b: __m128i) -> __m128i {
+    // SAFETY: pure register ops.
+    unsafe { blend_si128(a, b, _mm_cmpgt_epi32(a, b)) }
+}
+
+#[inline(always)]
+unsafe fn max_epi32_sse2(a: __m128i, b: __m128i) -> __m128i {
+    // SAFETY: pure register ops.
+    unsafe { blend_si128(a, b, _mm_cmpgt_epi32(b, a)) }
+}
+
+fn panel_madd_sse2(ab: &[f32], prows: &[f32], inner: &mut [f32; TILE_N]) {
+    debug_assert_eq!(prows.len(), ab.len() * TILE_N);
+    // SAFETY: SSE2 is baseline on x86_64; loads/stores cover exact
+    // 4-float chunks of `prows` rows and `inner`.
+    unsafe {
+        let p = prows.as_ptr();
+        let mut acc = [_mm_setzero_ps(); 8];
+        for (t, &av) in ab.iter().enumerate() {
+            let a = _mm_set1_ps(av);
+            let row = p.add(t * TILE_N);
+            for (i, acc_i) in acc.iter_mut().enumerate() {
+                *acc_i = _mm_add_ps(*acc_i, _mm_mul_ps(a, _mm_loadu_ps(row.add(4 * i))));
+            }
+        }
+        let o = inner.as_mut_ptr();
+        for (i, &acc_i) in acc.iter().enumerate() {
+            _mm_storeu_ps(o.add(4 * i), acc_i);
+        }
+    }
+}
+
+fn dense_madd_sse2(arow: &[f32], panel: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), 4);
+    debug_assert_eq!(panel.len(), arow.len() * 4);
+    // SAFETY: SSE2 baseline; loads cover exact 4-float rows of `panel`,
+    // the store covers `out`'s 4 floats.
+    unsafe {
+        let p = panel.as_ptr();
+        let mut lo = _mm_setzero_pd();
+        let mut hi = _mm_setzero_pd();
+        for (t, &av) in arow.iter().enumerate() {
+            let a = _mm_set1_pd(av as f64);
+            let row = _mm_loadu_ps(p.add(t * 4));
+            let rlo = _mm_cvtps_pd(row);
+            let rhi = _mm_cvtps_pd(_mm_movehl_ps(row, row));
+            lo = _mm_add_pd(lo, _mm_mul_pd(a, rlo));
+            hi = _mm_add_pd(hi, _mm_mul_pd(a, rhi));
+        }
+        let flo = _mm_cvtpd_ps(lo);
+        let fhi = _mm_cvtpd_ps(hi);
+        _mm_storeu_ps(out.as_mut_ptr(), _mm_movelh_ps(flo, fhi));
+    }
+}
+
+fn amax_sse2(x: &[f32]) -> f32 {
+    // SAFETY: SSE2 baseline; vector loop loads full 4-float chunks.
+    unsafe {
+        let absmask = _mm_castsi128_ps(_mm_set1_epi32(0x7FFF_FFFF));
+        let mut acc = _mm_setzero_ps();
+        let mut i = 0usize;
+        while i + 4 <= x.len() {
+            let v = _mm_and_ps(_mm_loadu_ps(x.as_ptr().add(i)), absmask);
+            acc = _mm_max_ps(v, acc); // NaN in v keeps acc
+            i += 4;
+        }
+        let mut lanes = [0.0f32; 4];
+        _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut m = 0.0f32;
+        for &l in &lanes {
+            m = m.max(l);
+        }
+        while i < x.len() {
+            m = m.max(x[i].abs());
+            i += 1;
+        }
+        m
+    }
+}
+
+fn encode_block_sse2(pf: &PackedFormat, xb: &[f32], scale: f32, out: &mut [u8]) -> usize {
+    debug_assert_eq!(xb.len(), out.len());
+    let maxp = pf.max_payload();
+    // SAFETY: SSE2 baseline; vector loads cover full 4-float chunks, the
+    // lane store is 4 i32s into a [i32; 4]. Same algorithm as the AVX2
+    // kernel (see its comments); min/max/blend are emulated.
+    unsafe {
+        let scale_v = _mm_set1_ps(scale);
+        let abs_i = _mm_set1_epi32(0x7FFF_FFFF);
+        let inf_i = _mm_set1_epi32(0x7F80_0000);
+        let bias_v = _mm_set1_epi32(127);
+        let emin_v = _mm_set1_epi32(pf.emin);
+        let emax_v = _mm_set1_epi32(pf.emax);
+        let m1 = pf.m1 as i32;
+        let m1_v = _mm_set1_epi32(m1);
+        let two_m1_v = _mm_set1_epi32(2 * m1);
+        let kmax_f = _mm_set1_ps(pf.kmax_top as f32);
+        let maxp_v = _mm_set1_epi32(maxp as i32);
+        let magic = _mm_set1_ps(RNE_MAGIC);
+        let step_bias_v = _mm_set1_epi32(127 - pf.mbits);
+        let shift = _mm_cvtsi32_si128(pf.mbits);
+        let one_v = _mm_set1_epi32(1);
+        let mut clamped = 0usize;
+        let mut buf = [0i32; 4];
+        let chunks = xb.len() / 4;
+        for c in 0..chunks {
+            let r = _mm_div_ps(_mm_loadu_ps(xb.as_ptr().add(c * 4)), scale_v);
+            let u = _mm_castps_si128(r);
+            let a_bits = _mm_and_si128(u, abs_i);
+            let a = _mm_castsi128_ps(a_bits);
+            let sign = _mm_slli_epi32::<7>(_mm_srli_epi32::<31>(u));
+            let e_raw = _mm_sub_epi32(_mm_srli_epi32::<23>(a_bits), bias_v);
+            let e = min_epi32_sse2(max_epi32_sse2(e_raw, emin_v), emax_v);
+            let step = _mm_castsi128_ps(_mm_slli_epi32::<23>(_mm_add_epi32(e, step_bias_v)));
+            let q = _mm_div_ps(a, step);
+            let rn = _mm_sub_ps(_mm_add_ps(q, magic), magic);
+            let is_top = _mm_cmpeq_epi32(e, emax_v);
+            let rn_cl = _mm_min_ps(rn, kmax_f); // NaN -> kmax_f (2nd operand)
+            let rn = _mm_castsi128_ps(blend_si128(
+                _mm_castps_si128(rn),
+                _mm_castps_si128(rn_cl),
+                is_top,
+            ));
+            let k = _mm_cvttps_epi32(rn);
+            let bump = _mm_andnot_si128(is_top, _mm_cmpeq_epi32(k, two_m1_v));
+            let e = _mm_sub_epi32(e, bump);
+            let k = blend_si128(k, m1_v, bump);
+            let pay_norm = _mm_or_si128(
+                _mm_sll_epi32(_mm_add_epi32(_mm_sub_epi32(e, emin_v), one_v), shift),
+                _mm_sub_epi32(k, m1_v),
+            );
+            let is_sub = _mm_cmpgt_epi32(m1_v, k);
+            let payload = blend_si128(pay_norm, k, is_sub);
+            let code = _mm_or_si128(sign, payload);
+            let is_zero = _mm_cmpeq_epi32(a_bits, _mm_setzero_si128());
+            let code = _mm_andnot_si128(is_zero, code);
+            let is_nan = _mm_cmpgt_epi32(a_bits, inf_i);
+            let code = blend_si128(code, maxp_v, is_nan);
+            _mm_storeu_si128(buf.as_mut_ptr() as *mut __m128i, code);
+            for (o, &ci) in out[c * 4..c * 4 + 4].iter_mut().zip(&buf) {
+                let byte = ci as u8;
+                clamped += ((byte & 0x7F) == maxp) as usize;
+                *o = byte;
+            }
+        }
+        for i in chunks * 4..xb.len() {
+            let code = pf.encode_elem(xb[i] / scale);
+            clamped += ((code & 0x7F) == maxp) as usize;
+            out[i] = code;
+        }
+        clamped
+    }
+}
+
+fn adam_update_sse2(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    t: f32,
+    lr: f32,
+) -> f64 {
+    debug_assert!(g.len() == p.len() && m.len() == p.len() && v.len() == p.len());
+    let bias1 = 1.0 - ADAM_B1.powf(t);
+    let bias2 = 1.0 - ADAM_B2.powf(t);
+    let mut upd_sq = 0.0f64;
+    // SAFETY: SSE2 baseline; full 4-float chunks of equal-length slices.
+    unsafe {
+        let b1v = _mm_set1_ps(ADAM_B1);
+        let omb1v = _mm_set1_ps(1.0 - ADAM_B1);
+        let b2v = _mm_set1_ps(ADAM_B2);
+        let omb2v = _mm_set1_ps(1.0 - ADAM_B2);
+        let bias1v = _mm_set1_ps(bias1);
+        let bias2v = _mm_set1_ps(bias2);
+        let epsv = _mm_set1_ps(ADAM_EPS);
+        let lrv = _mm_set1_ps(lr);
+        let mut buf = [0.0f32; 4];
+        let chunks = p.len() / 4;
+        for c in 0..chunks {
+            let o = c * 4;
+            let gv = _mm_loadu_ps(g.as_ptr().add(o));
+            let mv = _mm_loadu_ps(m.as_ptr().add(o));
+            let vv = _mm_loadu_ps(v.as_ptr().add(o));
+            let pv = _mm_loadu_ps(p.as_ptr().add(o));
+            let mn = _mm_add_ps(_mm_mul_ps(b1v, mv), _mm_mul_ps(omb1v, gv));
+            let vn = _mm_add_ps(_mm_mul_ps(b2v, vv), _mm_mul_ps(_mm_mul_ps(omb2v, gv), gv));
+            let mhat = _mm_div_ps(mn, bias1v);
+            let vhat = _mm_div_ps(vn, bias2v);
+            let denom = _mm_add_ps(_mm_sqrt_ps(vhat), epsv);
+            let step = _mm_mul_ps(lrv, _mm_div_ps(mhat, denom));
+            _mm_storeu_ps(m.as_mut_ptr().add(o), mn);
+            _mm_storeu_ps(v.as_mut_ptr().add(o), vn);
+            _mm_storeu_ps(p.as_mut_ptr().add(o), _mm_sub_ps(pv, step));
+            _mm_storeu_ps(buf.as_mut_ptr(), step);
+            for &s in &buf {
+                upd_sq += (s as f64) * (s as f64);
+            }
+        }
+        for i in chunks * 4..p.len() {
+            m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
+            v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
+            let mhat = m[i] / bias1;
+            let vhat = v[i] / bias2;
+            let step = lr * (mhat / (vhat.sqrt() + ADAM_EPS));
+            upd_sq += (step as f64) * (step as f64);
+            p[i] -= step;
+        }
+    }
+    upd_sq
+}
+
+fn sgd_update_sse2(p: &mut [f32], g: &[f32], m: &mut [f32], lr: f32, momentum: f32) -> f64 {
+    debug_assert!(g.len() == p.len() && m.len() == p.len());
+    let mut upd_sq = 0.0f64;
+    // SAFETY: SSE2 baseline; full 4-float chunks of equal-length slices.
+    unsafe {
+        let mom_v = _mm_set1_ps(momentum);
+        let lrv = _mm_set1_ps(lr);
+        let mut buf = [0.0f32; 4];
+        let chunks = p.len() / 4;
+        for c in 0..chunks {
+            let o = c * 4;
+            let gv = _mm_loadu_ps(g.as_ptr().add(o));
+            let mv = _mm_loadu_ps(m.as_ptr().add(o));
+            let pv = _mm_loadu_ps(p.as_ptr().add(o));
+            let mn = _mm_add_ps(_mm_mul_ps(mom_v, mv), gv);
+            let step = _mm_mul_ps(lrv, mn);
+            _mm_storeu_ps(m.as_mut_ptr().add(o), mn);
+            _mm_storeu_ps(p.as_mut_ptr().add(o), _mm_sub_ps(pv, step));
+            _mm_storeu_ps(buf.as_mut_ptr(), step);
+            for &s in &buf {
+                upd_sq += (s as f64) * (s as f64);
+            }
+        }
+        for i in chunks * 4..p.len() {
+            m[i] = momentum * m[i] + g[i];
+            let step = lr * m[i];
+            upd_sq += (step as f64) * (step as f64);
+            p[i] -= step;
+        }
+    }
+    upd_sq
+}
+
+fn scale_inplace_sse2(x: &mut [f32], s: f32) {
+    // SAFETY: SSE2 baseline; full 4-float chunks of `x`.
+    unsafe {
+        let sv = _mm_set1_ps(s);
+        let chunks = x.len() / 4;
+        for c in 0..chunks {
+            let ptr = x.as_mut_ptr().add(c * 4);
+            _mm_storeu_ps(ptr, _mm_mul_ps(_mm_loadu_ps(ptr), sv));
+        }
+        for v in &mut x[chunks * 4..] {
+            *v *= s;
+        }
+    }
+}

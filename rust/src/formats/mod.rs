@@ -16,6 +16,11 @@
 //!   thread-parallel block GEMM that carries scales instead of
 //!   dequantizing. Bitwise identical to the oracle; several times faster
 //!   and allocation-free in steady state.
+//! * [`kernel`] — the SIMD microkernel layer underneath both: runtime
+//!   ISA dispatch (AVX2 / SSE2 / NEON / scalar) for the panel-GEMM
+//!   inner loop, the codec amax/encode/decode, the dense f64 GEMM and
+//!   the fused optimizer, every tier bitwise identical
+//!   (`MXSTAB_KERNEL={scalar,panel,simd}` overrides).
 //!
 //! Plus the shared vocabulary:
 //!
@@ -28,6 +33,7 @@
 pub mod codes;
 pub mod dot;
 pub mod gemm;
+pub mod kernel;
 pub mod packed;
 pub mod quant;
 pub mod spec;

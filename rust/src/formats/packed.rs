@@ -34,6 +34,7 @@
 use std::sync::OnceLock;
 
 use super::codes::positive_codes;
+use super::kernel;
 use super::quant::{bf16_rne, pow2};
 use super::spec::{ElemFormat, FormatId, BLOCK_SIZE};
 use crate::util::pool;
@@ -74,16 +75,20 @@ impl std::error::Error for PackError {}
 const PAR_THRESHOLD: usize = 1 << 14;
 
 /// Precomputed encode/decode tables for one MX element format.
+///
+/// The band constants are `pub(super)` so the SIMD microkernels
+/// ([`crate::formats::kernel`]) can reproduce `encode_elem`'s exact
+/// float/integer pipeline lane-parallel.
 pub struct PackedFormat {
     pub id: FormatId,
     pub elem: ElemFormat,
-    emin: i32,
-    emax: i32,
-    mbits: i32,
+    pub(super) emin: i32,
+    pub(super) emax: i32,
+    pub(super) mbits: i32,
     /// 2^mbits: first-normal mantissa integer.
-    m1: u64,
+    pub(super) m1: u64,
     /// Mantissa integer of `max_norm` in the top band (clamp target).
-    kmax_top: u64,
+    pub(super) kmax_top: u64,
     /// Code payload of `+max_norm` (= number of positive codes).
     max_payload: u8,
     /// Band step `2^(e - mbits)` indexed by `e - emin`.
@@ -200,10 +205,11 @@ impl PackedFormat {
         sign | payload as u8
     }
 
-    /// Shared-scale exponent for one block (mirror of `block_scale`).
+    /// Shared-scale exponent from a block's absolute max (mirror of
+    /// `block_scale`'s exponent math; the amax itself comes from the
+    /// active kernel tier).
     #[inline]
-    pub fn scale_exp(&self, block: &[f32], scale_bump: i32) -> i16 {
-        let m = block.iter().fold(0.0f32, |acc, &v| acc.max(v.abs()));
+    pub fn scale_exp_from_amax(&self, m: f32, scale_bump: i32) -> i16 {
         if m == 0.0 {
             return ZERO_BLOCK;
         }
@@ -213,8 +219,16 @@ impl PackedFormat {
         (fl - self.emax + scale_bump) as i16
     }
 
-    /// Encode a block-aligned slice into `codes`/`scales`. Returns the
-    /// number of elements that landed in the last quantization bin.
+    /// Shared-scale exponent for one block (mirror of `block_scale`).
+    #[inline]
+    pub fn scale_exp(&self, block: &[f32], scale_bump: i32) -> i16 {
+        self.scale_exp_from_amax(block.iter().fold(0.0f32, |acc, &v| acc.max(v.abs())), scale_bump)
+    }
+
+    /// Encode a block-aligned slice into `codes`/`scales` through the
+    /// active kernel tier ([`kernel::ops`] — bitwise identical across
+    /// tiers). Returns the number of elements that landed in the last
+    /// quantization bin.
     pub fn encode_slice(
         &self,
         x: &[f32],
@@ -225,32 +239,30 @@ impl PackedFormat {
         assert_eq!(x.len() % BLOCK_SIZE, 0);
         assert_eq!(x.len(), codes.len());
         assert_eq!(x.len() / BLOCK_SIZE, scales.len());
+        let ops = kernel::ops();
         let mut clamped = 0usize;
         for ((xb, cb), s) in
             x.chunks_exact(BLOCK_SIZE).zip(codes.chunks_exact_mut(BLOCK_SIZE)).zip(scales.iter_mut())
         {
-            let se = self.scale_exp(xb, scale_bump);
+            let se = self.scale_exp_from_amax((ops.amax)(xb), scale_bump);
             *s = se;
             if se == ZERO_BLOCK {
                 cb.fill(0);
                 continue;
             }
-            let scale = pow2(se as i32);
-            for (c, &v) in cb.iter_mut().zip(xb) {
-                let code = self.encode_elem(v / scale);
-                clamped += ((code & 0x7F) == self.max_payload) as usize;
-                *c = code;
-            }
+            clamped += (ops.encode_block)(self, xb, pow2(se as i32), cb);
         }
         clamped
     }
 
     /// Decode `codes`/`scales` into `out` (bitwise equal to the scalar
-    /// quantize→dequantize output for data produced by `encode_slice`).
+    /// quantize→dequantize output for data produced by `encode_slice`),
+    /// through the active kernel tier's LUT-decode op.
     pub fn decode_slice(&self, codes: &[u8], scales: &[i16], out: &mut [f32]) {
         assert_eq!(codes.len(), out.len());
         assert_eq!(codes.len() % BLOCK_SIZE, 0);
         assert_eq!(codes.len() / BLOCK_SIZE, scales.len());
+        let ops = kernel::ops();
         for ((cb, s), ob) in
             codes.chunks_exact(BLOCK_SIZE).zip(scales.iter()).zip(out.chunks_exact_mut(BLOCK_SIZE))
         {
@@ -258,10 +270,7 @@ impl PackedFormat {
                 ob.fill(0.0);
                 continue;
             }
-            let scale = pow2(*s as i32);
-            for (o, &c) in ob.iter_mut().zip(cb) {
-                *o = self.decode[c as usize] * scale;
-            }
+            (ops.decode_block)(&self.decode, cb, pow2(*s as i32), ob);
         }
     }
 }

@@ -83,6 +83,7 @@ fn parse_policies(spec: &str) -> Result<Vec<Policy>> {
 
 fn cmd_info<E: Engine>(engine: Arc<E>, cfg: &Config) -> Result<()> {
     println!("platform: {}", engine.platform());
+    println!("kernel: {}", mxstab::formats::kernel::describe());
     println!("artifacts: {}", cfg.artifacts.display());
     let mut t = Table::new(&["model", "params", "state MB"]);
     for name in engine.list()? {
@@ -110,6 +111,15 @@ fn cmd_train<E: Engine>(engine: Arc<E>, cfg: &Config, args: &Args) -> Result<()>
     let lr: f32 = args.parse_or("lr", 5e-4f32)?;
     let steps: usize = args.parse_or("steps", 200usize)?;
     let seed: i32 = args.parse_or("seed", 0i32)?;
+
+    // Surface the detected ISA tier + active kernel before the hot loop
+    // starts (MXSTAB_KERNEL={scalar,panel,simd} overrides; every tier is
+    // bitwise identical, they differ only in speed).
+    println!(
+        "kernel: {} | pool: {} threads",
+        mxstab::formats::kernel::describe(),
+        mxstab::util::pool::parallelism()
+    );
 
     let sweeper = Sweeper::new(engine);
     let runner = sweeper.runner(&bundle_name)?;

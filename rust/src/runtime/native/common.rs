@@ -18,15 +18,15 @@ use anyhow::{anyhow, ensure, Result};
 use super::cache::{CachedOp, Class, ExecCache, Site, Stage};
 use super::ops::{qgemm, quantize_site, QMat};
 use crate::formats::gemm::{transpose, transpose_into, PackedMatrix};
+use crate::formats::kernel;
 use crate::formats::packed::packed_qdq;
 use crate::formats::quant::bf16_rne;
 use crate::formats::spec::{hyper_idx, Fmt, FormatId};
 use crate::runtime::StepArgs;
 
-/// Adam constants (python/compile/formats.py).
-pub const ADAM_B1: f32 = 0.9;
-pub const ADAM_B2: f32 = 0.95;
-pub const ADAM_EPS: f32 = 1e-8;
+// Adam constants (python/compile/formats.py) — defined next to the
+// fused update microkernel and re-exported here for compatibility.
+pub use crate::formats::kernel::{ADAM_B1, ADAM_B2, ADAM_EPS};
 
 /// Host-resident training state: flat f32 tensors in state-spec order
 /// (params ‖ adam-m ‖ adam-v [‖ backend extras, e.g. the proxy teacher]),
@@ -307,6 +307,12 @@ pub fn ln_gamma_site(gamma: &[f32], fmt: &Fmt) -> (Vec<f32>, f32) {
 }
 
 /// Fused Adam / SGD(momentum) update for one tensor; returns Σ(Δp)².
+///
+/// Runs on the active microkernel tier ([`kernel::ops`]): the SIMD
+/// tables vectorize the per-element math with the scalar loop's exact
+/// op order (div/sqrt are correctly rounded), and Σ(Δp)² is accumulated
+/// serially from the stored per-element steps — so every tier updates
+/// the state *and* the metric bit-identically.
 #[allow(clippy::too_many_arguments)]
 pub fn adam_sgd_update(
     p: &mut [f32],
@@ -318,28 +324,12 @@ pub fn adam_sgd_update(
     sgd: bool,
     momentum: f32,
 ) -> f64 {
-    let mut upd_sq = 0.0f64;
+    let ops = kernel::ops();
     if sgd {
-        for i in 0..p.len() {
-            m[i] = momentum * m[i] + g[i];
-            let step = lr * m[i];
-            upd_sq += (step as f64) * (step as f64);
-            p[i] -= step;
-        }
+        (ops.sgd_update)(p, g, m, lr, momentum)
     } else {
-        let bias1 = 1.0 - ADAM_B1.powf(t);
-        let bias2 = 1.0 - ADAM_B2.powf(t);
-        for i in 0..p.len() {
-            m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
-            v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
-            let mhat = m[i] / bias1;
-            let vhat = v[i] / bias2;
-            let step = lr * (mhat / (vhat.sqrt() + ADAM_EPS));
-            upd_sq += (step as f64) * (step as f64);
-            p[i] -= step;
-        }
+        (ops.adam_update)(p, g, m, v, t, lr)
     }
-    upd_sq
 }
 
 /// Apply the fused optimizer to params `[0, k)` with moments at `[k, 2k)`

@@ -29,6 +29,7 @@ use super::common::{
 use super::model::swiglu_hidden;
 use super::ops::{act_bwd, act_fwd, layernorm_bwd, layernorm_fwd, qgemm, quantize_site, Activation};
 use crate::formats::gemm::{transpose, transpose_into};
+use crate::formats::kernel;
 use crate::formats::spec::{Fmt, BLOCK_SIZE};
 use crate::runtime::{Backend, Metrics, StepArgs, TensorSpec};
 use crate::util::rng::Xoshiro256;
@@ -424,9 +425,7 @@ impl LmModel {
                 let (qk, _) = quantize_site(ks, t, dh, fmt.a_fwd, fmt.quant_fwd, bump);
                 let ps = &mut probs[s * t * t..(s + 1) * t * t];
                 qgemm(&qq, &qk, t, t, dh, ps);
-                for sc in ps.iter_mut() {
-                    *sc *= inv_sqrt_dh;
-                }
+                (kernel::ops().scale_inplace)(ps, inv_sqrt_dh);
                 causal_softmax(ps, t);
                 // ctx = P·V — blocks along the key positions.
                 let (qp, fp) = quantize_site(ps, t, t, fmt.a_fwd, fmt.quant_fwd, bump);
@@ -934,12 +933,11 @@ impl Backend for LmModel {
 }
 
 /// Max-shifted log-sum-exp of one logits row (f64 accumulation) — the
-/// shared numerics of the training loss and the validation loss.
+/// shared numerics of the training loss and the validation loss. The max
+/// scan runs on the active microkernel tier (order-independent and
+/// NaN-skipping on every tier); the exp sum stays a serial f64 chain.
 fn row_logsumexp(row: &[f32]) -> f64 {
-    let mut mx = f64::NEG_INFINITY;
-    for &x in row {
-        mx = mx.max(x as f64);
-    }
+    let mx = (kernel::ops().max_f64)(row);
     let mut z = 0.0f64;
     for &x in row {
         z += ((x as f64) - mx).exp();
@@ -949,13 +947,13 @@ fn row_logsumexp(row: &[f32]) -> f64 {
 
 /// In-place causal softmax over `[T × T]` scores: row `i` normalizes over
 /// keys `0..=i` (f64 accumulation); masked entries become exactly 0.
+/// The max scan and the normalize pass run on the active microkernel
+/// tier (both bit-identical across tiers); the exp loop stays scalar.
 fn causal_softmax(s: &mut [f32], t: usize) {
+    let kops = kernel::ops();
     for i in 0..t {
         let row = &mut s[i * t..(i + 1) * t];
-        let mut mx = f64::NEG_INFINITY;
-        for &x in row[..=i].iter() {
-            mx = mx.max(x as f64);
-        }
+        let mx = (kops.max_f64)(&row[..=i]);
         let mut z = 0.0f64;
         for x in row[..=i].iter_mut() {
             let e = ((*x as f64) - mx).exp();
@@ -963,9 +961,7 @@ fn causal_softmax(s: &mut [f32], t: usize) {
             z += e;
         }
         let inv = 1.0 / z;
-        for x in row[..=i].iter_mut() {
-            *x = (*x as f64 * inv) as f32;
-        }
+        (kops.scale_f64_inplace)(&mut row[..=i], inv);
         for x in row[i + 1..].iter_mut() {
             *x = 0.0;
         }

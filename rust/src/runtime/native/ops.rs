@@ -18,6 +18,7 @@ use std::borrow::Cow;
 use std::sync::Arc;
 
 use crate::formats::gemm::{gemm, gemm_f32, PackedMatrix};
+use crate::formats::kernel;
 use crate::formats::quant::bf16_rne;
 use crate::formats::spec::{FormatId, BLOCK_SIZE};
 
@@ -117,12 +118,17 @@ pub const LN_EPS: f64 = 1e-5;
 /// Returns `(z, xhat, inv_std)`; `gamma_q` is supplied by the caller (it is
 /// a quantization site of its own, so the last-bin diagnostic stays with
 /// the caller).
+///
+/// The per-row μ/σ² reductions stay serial f64 (their accumulation order
+/// is part of the bitwise contract); the elementwise normalize-and-scale
+/// pass runs on the active microkernel tier, which is bit-identical.
 pub fn layernorm_fwd(
     x: &[f32],
     batch: usize,
     d: usize,
     gamma_q: &[f32],
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let ops = kernel::ops();
     let mut z = vec![0.0f32; x.len()];
     let mut xhat = vec![0.0f32; x.len()];
     let mut inv_std = vec![0.0f32; batch];
@@ -132,11 +138,14 @@ pub fn layernorm_fwd(
         let var = row.iter().map(|&v| (v as f64 - mu) * (v as f64 - mu)).sum::<f64>() / d as f64;
         let is = 1.0 / (var + LN_EPS).sqrt();
         inv_std[b] = is as f32;
-        for j in 0..d {
-            let xh = ((row[j] as f64 - mu) * is) as f32;
-            xhat[b * d + j] = xh;
-            z[b * d + j] = xh * gamma_q[j];
-        }
+        (ops.ln_fwd_apply)(
+            row,
+            mu,
+            is,
+            gamma_q,
+            &mut xhat[b * d..(b + 1) * d],
+            &mut z[b * d..(b + 1) * d],
+        );
     }
     (z, xhat, inv_std)
 }
@@ -144,6 +153,11 @@ pub fn layernorm_fwd(
 /// Backward LN: given `dz = ∂L/∂z`, returns `(dx, dgamma)`. The gamma
 /// quantization is straight-through (`qdq_ste` in the python mirror), so
 /// `dgamma = Σ_b dz ⊙ x̂` and the input path uses the *quantized* gamma.
+///
+/// The per-row m1/m2 reductions stay serial f64; the elementwise
+/// dγ-accumulate / dx pass runs on the active microkernel tier (per-j
+/// accumulation order over the batch is preserved, so every tier is
+/// bit-identical).
 pub fn layernorm_bwd(
     dz: &[f32],
     xhat: &[f32],
@@ -152,6 +166,7 @@ pub fn layernorm_bwd(
     batch: usize,
     d: usize,
 ) -> (Vec<f32>, Vec<f32>) {
+    let ops = kernel::ops();
     let mut dx = vec![0.0f32; dz.len()];
     let mut dgamma = vec![0.0f64; d];
     for b in 0..batch {
@@ -160,17 +175,22 @@ pub fn layernorm_bwd(
         let mut m2 = 0.0f64; // mean of dxhat ⊙ xhat
         for j in 0..d {
             let dxh = (dz[o + j] * gamma_q[j]) as f64;
-            dgamma[j] += dz[o + j] as f64 * xhat[o + j] as f64;
             m1 += dxh;
             m2 += dxh * xhat[o + j] as f64;
         }
         m1 /= d as f64;
         m2 /= d as f64;
         let is = inv_std[b] as f64;
-        for j in 0..d {
-            let dxh = (dz[o + j] * gamma_q[j]) as f64;
-            dx[o + j] = (is * (dxh - m1 - xhat[o + j] as f64 * m2)) as f32;
-        }
+        (ops.ln_bwd_apply)(
+            &dz[o..o + d],
+            &xhat[o..o + d],
+            gamma_q,
+            m1,
+            m2,
+            is,
+            &mut dgamma,
+            &mut dx[o..o + d],
+        );
     }
     (dx, dgamma.into_iter().map(|v| v as f32).collect())
 }

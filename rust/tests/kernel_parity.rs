@@ -1,0 +1,327 @@
+//! Cross-tier bitwise parity for the SIMD microkernel layer
+//! (DESIGN.md §Exec, "Microkernels & dispatch").
+//!
+//! Every kernel tier (`scalar`, `panel`, `simd`) must be **bitwise
+//! identical** on the packed codec, the quantized block GEMM (mixed
+//! format pairs, strip/tile tails, zero blocks, subnormals, NaN/Inf),
+//! the dense f32 GEMM, and — end to end — a multi-step fully-quantized
+//! native LM training trajectory. The per-op parity lives in
+//! `formats/kernel`'s unit tests; this suite proves the tiers compose
+//! identically through the full pipeline.
+//!
+//! [`mxstab::formats::kernel::force_tier`] is process-global, so every
+//! test here serializes on one mutex (and clears any stale override
+//! after a poisoning panic).
+
+use std::sync::{Mutex, MutexGuard};
+
+use mxstab::data::{Corpus, CorpusConfig};
+use mxstab::formats::dot::{encode, mx_dot};
+use mxstab::formats::gemm::{gemm, gemm_f32, gemm_ref, PackedMatrix};
+use mxstab::formats::kernel::{self, Tier};
+use mxstab::formats::packed::{packed_qdq, PackedVec};
+use mxstab::formats::quant::mx_qdq;
+use mxstab::formats::spec::{hyper_idx, Fmt, FormatId, BLOCK_SIZE};
+use mxstab::runtime::native::{LmConfig, LmModel, NativeState};
+use mxstab::runtime::{Backend, Metrics, StepArgs};
+use mxstab::util::rng::Xoshiro256;
+
+static TIER_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    let g = TIER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    kernel::force_tier(None); // clear any override a panicked test left
+    g
+}
+
+fn with_tier<T>(t: Tier, f: impl FnOnce() -> T) -> T {
+    kernel::force_tier(Some(t));
+    let r = f();
+    kernel::force_tier(None);
+    r
+}
+
+/// Every tier that exists on this machine (simd only when an ISA does).
+fn tiers() -> Vec<Tier> {
+    let mut v = vec![Tier::Scalar, Tier::Panel];
+    if kernel::simd_ops().is_some() {
+        v.push(Tier::Simd);
+    }
+    v
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Adversarial inputs: normals, wide dynamic range, f32 subnormals,
+/// all-zero blocks, ±inf, NaN, −0, and the §6.1 clamp cluster.
+fn adversarial(rng: &mut Xoshiro256, blocks: usize) -> Vec<f32> {
+    let mut x = Vec::with_capacity(blocks * BLOCK_SIZE);
+    for b in 0..blocks {
+        for i in 0..BLOCK_SIZE {
+            x.push(match (b * 7 + i) % 10 {
+                0 => rng.normal() as f32,
+                1 => (rng.normal() as f32) * (2.0f32).powi((rng.below(60) as i32) - 30),
+                2 => f32::from_bits(rng.below(1 << 23) as u32), // subnormal
+                3 => 0.0,
+                4 => -0.0,
+                5 => f32::INFINITY,
+                6 => f32::NEG_INFINITY,
+                7 => f32::NAN,
+                8 => 0.897, // clamp cluster
+                _ => rng.normal() as f32 * 0.01,
+            });
+        }
+    }
+    // One guaranteed all-zero block.
+    for v in x.iter_mut().take(BLOCK_SIZE) {
+        *v = 0.0;
+    }
+    x
+}
+
+const MX: [FormatId; 4] = [FormatId::E4M3, FormatId::E5M2, FormatId::E2M3, FormatId::E3M2];
+
+#[test]
+fn codec_bitwise_identical_across_tiers() {
+    let _g = lock();
+    let mut rng = Xoshiro256::seed_from(17);
+    for case in 0..8 {
+        let x = adversarial(&mut rng, 6);
+        for id in MX {
+            // The scalar oracle is tier-independent ground truth.
+            let (want, cw) = mx_qdq(&x, id, false);
+            for t in tiers() {
+                let (packed, got) = with_tier(t, || {
+                    (PackedVec::encode(&x, id, false), packed_qdq(&x, id, false))
+                });
+                assert_eq!(
+                    bits(&want),
+                    bits(&got.0),
+                    "{id:?} case {case} tier {}: qdq diverged",
+                    t.name()
+                );
+                assert_eq!(cw, got.1, "{id:?} case {case} tier {}: clamp count", t.name());
+                // Encoded bytes/scales must match across tiers too.
+                let reference = with_tier(Tier::Scalar, || PackedVec::encode(&x, id, false));
+                assert_eq!(packed.codes, reference.codes, "{id:?} tier {}", t.name());
+                assert_eq!(packed.scales, reference.scales, "{id:?} tier {}", t.name());
+                assert_eq!(packed.clamped, reference.clamped, "{id:?} tier {}", t.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_gemm_bitwise_identical_across_tiers() {
+    let _g = lock();
+    let mut rng = Xoshiro256::seed_from(29);
+    // Shapes crossing every tiling edge: single output, tile tails
+    // (n % TILE_N != 0), sub-tile n, odd m, and a pool fan-out.
+    for &(m, n, k) in
+        &[(1usize, 1usize, 32usize), (2, 7, 64), (37, 33, 96), (5, 32, 32), (96, 64, 128)]
+    {
+        let a = adversarial(&mut rng, m * k / BLOCK_SIZE);
+        let b = adversarial(&mut rng, n * k / BLOCK_SIZE);
+        for (ida, idb) in [
+            (FormatId::E4M3, FormatId::E4M3),
+            (FormatId::E4M3, FormatId::E5M2),
+            (FormatId::E5M2, FormatId::E2M3),
+            (FormatId::E2M3, FormatId::E3M2),
+        ] {
+            // gemm_ref never dispatches through the tier tables: it is
+            // the in-repo oracle (operands encoded under the scalar
+            // tier so the whole reference path is tier-free).
+            let mut reference = vec![0.0f32; m * n];
+            with_tier(Tier::Scalar, || {
+                let am = PackedMatrix::encode(&a, m, k, ida, false);
+                let bm = PackedMatrix::encode(&b, n, k, idb, false);
+                gemm_ref(&am, &bm, &mut reference);
+            });
+            for t in tiers() {
+                let got = with_tier(t, || {
+                    // Encode *and* multiply under the tier: the full
+                    // pipeline must be bit-identical, not just the GEMM.
+                    let am = PackedMatrix::encode(&a, m, k, ida, false);
+                    let bm = PackedMatrix::encode(&b, n, k, idb, false);
+                    let mut c = vec![0.0f32; m * n];
+                    gemm(&am, &bm, &mut c);
+                    c
+                });
+                assert_eq!(
+                    bits(&reference),
+                    bits(&got),
+                    "{ida:?}x{idb:?} {m}x{n}x{k} tier {}",
+                    t.name()
+                );
+            }
+        }
+    }
+    // Spot-check the oracle itself on a small shape: gemm under every
+    // tier equals the MxBlock scalar dot.
+    let (m, n, k) = (3usize, 5usize, 64usize);
+    let a: Vec<f32> = rng.normal_vec(m * k);
+    let b: Vec<f32> = rng.normal_vec(n * k);
+    let f = FormatId::E4M3.elem().unwrap();
+    for t in tiers() {
+        let c = with_tier(t, || {
+            let am = PackedMatrix::encode(&a, m, k, FormatId::E4M3, false);
+            let bm = PackedMatrix::encode(&b, n, k, FormatId::E4M3, false);
+            let mut c = vec![0.0f32; m * n];
+            gemm(&am, &bm, &mut c);
+            c
+        });
+        for r in 0..m {
+            let ea = encode(&a[r * k..(r + 1) * k], &f, 0);
+            for j in 0..n {
+                let eb = encode(&b[j * k..(j + 1) * k], &f, 0);
+                let want = mx_dot(&ea, &eb);
+                assert_eq!(
+                    c[r * n + j].to_bits(),
+                    want.to_bits(),
+                    "tier {} C[{r},{j}] vs mx_dot",
+                    t.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dense_gemm_f32_bitwise_identical_across_tiers() {
+    let _g = lock();
+    let mut rng = Xoshiro256::seed_from(43);
+    // Odd shapes: lane tails (n % dense_w != 0), strip tails, k of 1,
+    // and a fan-out-sized matrix.
+    for &(m, n, k) in &[(1usize, 3usize, 1usize), (4, 9, 7), (33, 17, 70), (128, 96, 64)] {
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(n * k);
+        let reference = with_tier(Tier::Scalar, || {
+            let mut c = vec![0.0f32; m * n];
+            gemm_f32(&a, &b, m, n, k, &mut c);
+            c
+        });
+        // The scalar tier must itself equal the naive f64 chain.
+        for r in 0..m.min(2) {
+            for j in 0..n.min(3) {
+                let mut acc = 0.0f64;
+                for x in 0..k {
+                    acc += (a[r * k + x] as f64) * (b[j * k + x] as f64);
+                }
+                assert_eq!(reference[r * n + j].to_bits(), (acc as f32).to_bits());
+            }
+        }
+        for t in tiers() {
+            let got = with_tier(t, || {
+                let mut c = vec![0.0f32; m * n];
+                gemm_f32(&a, &b, m, n, k, &mut c);
+                c
+            });
+            assert_eq!(bits(&reference), bits(&got), "{m}x{n}x{k} tier {}", t.name());
+        }
+    }
+}
+
+fn tiny_lm() -> LmModel {
+    LmModel::new(LmConfig { layers: 2, d_model: 32, n_heads: 1, vocab: 64, ctx: 32, batch: 2 })
+        .unwrap()
+}
+
+fn lm_args(m: &LmModel, corpus: &Corpus, fmt: Fmt, step: i32) -> StepArgs {
+    let (b, l) = m.tokens_shape().unwrap();
+    let mut hyper = vec![0.0f32; hyper_idx::HYPER_LEN];
+    hyper[hyper_idx::LR] = 2e-3;
+    let tokens = Some(corpus.batch(9, step as u64, b, l));
+    StepArgs { tokens, fmt: fmt.to_vec(), hyper, seed: 9, step }
+}
+
+fn metric_bits(m: &Metrics) -> [u32; 9] {
+    [
+        m.loss.to_bits(),
+        m.grad_norm.to_bits(),
+        m.ln_frac_first.to_bits(),
+        m.ln_frac_mean.to_bits(),
+        m.act_frac_mean.to_bits(),
+        m.update_norm.to_bits(),
+        m.param_norm.to_bits(),
+        m.eps_ratio.to_bits(),
+        m.cosine.to_bits(),
+    ]
+}
+
+/// Run `steps` fully-quantized LM training steps (last one paired, so
+/// the fp32 reference pass + gradient-bias diagnostics are covered) and
+/// return every per-step metric plus the final state snapshot.
+fn lm_trajectory(m: &LmModel, corpus: &Corpus, steps: i32) -> (Vec<[u32; 9]>, Vec<Vec<f32>>) {
+    let fmt = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+    let mut state: NativeState = m.init(5, 0.0, 1.0).unwrap();
+    let mut mets = Vec::new();
+    for step in 0..steps {
+        let args = lm_args(m, corpus, fmt, step);
+        let (s2, met) = if step == steps - 1 {
+            m.paired_step(state, &args).unwrap()
+        } else {
+            m.step(state, &args).unwrap()
+        };
+        state = s2;
+        mets.push(metric_bits(&met));
+    }
+    let snap = m.snapshot(&state).unwrap();
+    (mets, snap)
+}
+
+#[test]
+fn lm_trajectory_bitwise_identical_scalar_vs_simd() {
+    let _g = lock();
+    let m = tiny_lm();
+    let corpus = Corpus::new(CorpusConfig { vocab: m.config().vocab, ..Default::default() });
+    let steps = 4;
+    let (met_scalar, snap_scalar) = with_tier(Tier::Scalar, || lm_trajectory(&m, &corpus, steps));
+    for t in tiers() {
+        if t == Tier::Scalar {
+            continue;
+        }
+        let (met_t, snap_t) = with_tier(t, || lm_trajectory(&m, &corpus, steps));
+        assert_eq!(met_scalar, met_t, "metrics diverged under tier {}", t.name());
+        assert_eq!(snap_scalar.len(), snap_t.len());
+        for (i, (a, b)) in snap_scalar.iter().zip(&snap_t).enumerate() {
+            assert_eq!(
+                bits(a),
+                bits(b),
+                "state tensor {i} diverged under tier {} after {steps} steps",
+                t.name()
+            );
+        }
+        // Held-out eval must agree bit-for-bit too.
+        let toks = corpus.batch(mxstab::data::HELD_OUT_SEED, 0, 2, 33);
+        let fmt = Fmt::full(FormatId::E4M3, FormatId::E4M3).to_vec();
+        let state_s = with_tier(Tier::Scalar, || {
+            let (_, s) = lm_trajectory(&m, &corpus, 1);
+            m.restore(s).unwrap()
+        });
+        let ev_s = with_tier(Tier::Scalar, || m.eval(&state_s, &toks, &fmt).unwrap());
+        let ev_t = with_tier(t, || m.eval(&state_s, &toks, &fmt).unwrap());
+        assert_eq!(ev_s.to_bits(), ev_t.to_bits(), "eval diverged under tier {}", t.name());
+    }
+}
+
+#[test]
+fn scalar_tier_routes_gemm_to_reference_kernel() {
+    let _g = lock();
+    // Under the scalar tier, gemm() and gemm_ref() are the same code
+    // path — the MXSTAB_KERNEL=scalar CI leg relies on this.
+    let mut rng = Xoshiro256::seed_from(71);
+    let (m, n, k) = (6usize, 10usize, 64usize);
+    let a = rng.normal_vec(m * k);
+    let b = rng.normal_vec(n * k);
+    with_tier(Tier::Scalar, || {
+        let am = PackedMatrix::encode(&a, m, k, FormatId::E4M3, false);
+        let bm = PackedMatrix::encode(&b, n, k, FormatId::E4M3, false);
+        let mut c1 = vec![0.0f32; m * n];
+        let mut c2 = vec![0.0f32; m * n];
+        gemm(&am, &bm, &mut c1);
+        gemm_ref(&am, &bm, &mut c2);
+        assert_eq!(bits(&c1), bits(&c2));
+    });
+}
