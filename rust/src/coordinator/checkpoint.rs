@@ -8,16 +8,32 @@
 //! ring serves native host states and PJRT device buffers.
 //!
 //! Format: one directory per checkpoint with `meta.json` (backend name,
-//! step, tensor table) and `state.bin` (little-endian raw tensors,
-//! concatenated in state-spec order — all state tensors are f32).
+//! step, tensor table, FNV-1a content checksum) and `state.bin`
+//! (little-endian raw tensors, concatenated in state-spec order — all
+//! state tensors are f32).
+//!
+//! Crash safety: [`CheckpointStore::save`] stages both files in a sibling
+//! temp directory (files fsynced) and commits with one atomic directory
+//! rename, so a reader never sees a half-written checkpoint from *this*
+//! writer; [`CheckpointStore::load`] additionally verifies length and
+//! checksum, so torn files from any other source (crashed pre-discipline
+//! writers, fault injection, bad disks) are detected rather than
+//! restored. [`CheckpointStore::load_latest`] walks the ring newest-first
+//! and falls back to the previous entry when the newest is damaged —
+//! the contract the spool worker's crash-resume path builds on.
 
-use std::io::Read;
+use std::io::{Read, Write as _};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::runtime::Backend;
+use crate::util::faults::{self, FaultAction};
+use crate::util::fsio;
 use crate::util::json::Json;
+
+static CKPT_SEQ: AtomicU64 = AtomicU64::new(0);
 
 pub struct CheckpointStore {
     root: PathBuf,
@@ -35,6 +51,14 @@ impl CheckpointStore {
     }
 
     /// Save `state` for (run, step); evicts the oldest beyond `keep`.
+    ///
+    /// Atomic: both files are staged in a sibling temp directory (fsynced)
+    /// and committed with one directory rename, so a concurrent or
+    /// crash-interrupted save never leaves a half-written checkpoint at
+    /// the final path. If another writer already committed a *valid*
+    /// checkpoint for the same (run, step) — possible when a zombie
+    /// worker races its reclaimer, and harmless because training is
+    /// deterministic — the existing entry is kept.
     pub fn save<B: Backend>(
         &self,
         backend: &B,
@@ -42,8 +66,6 @@ impl CheckpointStore {
         step: usize,
         state: &B::State,
     ) -> Result<PathBuf> {
-        let dir = self.dir(run, step);
-        std::fs::create_dir_all(&dir)?;
         let spec = backend.state_spec();
         let tensors = backend.snapshot(state)?;
         if spec.len() != tensors.len() {
@@ -64,16 +86,79 @@ impl CheckpointStore {
                 blob.extend_from_slice(&v.to_le_bytes());
             }
         }
-        std::fs::write(dir.join("state.bin"), &blob)?;
         let meta = Json::obj(vec![
             ("bundle", Json::from(backend.name().to_string())),
             ("step", Json::from(step)),
             ("bytes", Json::from(blob.len())),
+            ("checksum", Json::from(format!("{:016x}", fsio::fnv64(&blob)))),
             ("tensors", Json::Arr(table)),
         ]);
-        std::fs::write(dir.join("meta.json"), meta.to_string())?;
+        let meta_text = meta.to_string();
+        let dir = self.dir(run, step);
+        let run_dir = self.root.join(run);
+        std::fs::create_dir_all(&run_dir)?;
+
+        // Fault point: tear the state blob *at the final path* (bypassing
+        // the temp+rename discipline, like a crashed legacy writer) so
+        // tests can prove `load`/`load_latest` detect it.
+        if let Some(FaultAction::TornWrite { keep }) = faults::check("ckpt.state", run, step) {
+            std::fs::create_dir_all(&dir)?;
+            std::fs::write(dir.join("state.bin"), &blob[..keep.min(blob.len())])?;
+            std::fs::write(dir.join("meta.json"), &meta_text)?;
+            return Err(anyhow!("injected torn checkpoint write: {run} step {step}"));
+        }
+
+        let tmp = run_dir.join(format!(
+            ".tmp-step{step:08}-{}-{}",
+            std::process::id(),
+            CKPT_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&tmp)?;
+        let staged = (|| -> Result<()> {
+            let files = [("state.bin", blob.as_slice()), ("meta.json", meta_text.as_bytes())];
+            for (name, bytes) in files {
+                let mut f = std::fs::File::create(tmp.join(name))?;
+                f.write_all(bytes)?;
+                f.sync_all()?;
+            }
+            Ok(())
+        })();
+        if let Err(e) = staged {
+            std::fs::remove_dir_all(&tmp).ok();
+            return Err(e);
+        }
+        if self.validate(run, step).is_ok() {
+            // A valid checkpoint for this exact (run, step) already exists
+            // (deterministic content) — keep it, drop ours.
+            std::fs::remove_dir_all(&tmp).ok();
+        } else {
+            std::fs::remove_dir_all(&dir).ok(); // clear a torn/partial entry
+            if let Err(e) = std::fs::rename(&tmp, &dir) {
+                std::fs::remove_dir_all(&tmp).ok();
+                // Lost a commit race to an identical writer: fine iff the
+                // winner's entry validates.
+                self.validate(run, step).map_err(|_| {
+                    anyhow!("committing checkpoint {}: {e}", dir.display())
+                })?;
+            }
+            fsio::fsync_dir(&run_dir);
+        }
         self.evict(run)?;
         Ok(dir)
+    }
+
+    /// Cheap integrity check of the checkpoint at (run, step): meta
+    /// parses, the recorded byte count matches `state.bin`, and the
+    /// content checksum (when present — older checkpoints predate it)
+    /// matches. Does not need a backend.
+    pub fn validate(&self, run: &str, step: usize) -> Result<()> {
+        let dir = self.dir(run, step);
+        let meta = Json::parse(
+            &std::fs::read_to_string(dir.join("meta.json"))
+                .with_context(|| format!("no checkpoint at {}", dir.display()))?,
+        )?;
+        let blob = std::fs::read(dir.join("state.bin"))?;
+        check_blob(&meta, &blob, &dir)
     }
 
     /// Restore the state saved at (run, step) onto `backend`.
@@ -89,6 +174,7 @@ impl CheckpointStore {
         }
         let mut blob = Vec::new();
         std::fs::File::open(dir.join("state.bin"))?.read_to_end(&mut blob)?;
+        check_blob(&meta, &blob, &dir)?;
         let spec = backend.state_spec();
         let mut tensors = Vec::with_capacity(spec.len());
         let mut off = 0usize;
@@ -134,6 +220,31 @@ impl CheckpointStore {
         self.list(run).pop()
     }
 
+    /// Restore the newest checkpoint that passes integrity checks,
+    /// walking the ring newest-first. A truncated or torn entry is
+    /// reported and skipped — the previous ring entry loads instead —
+    /// so a crash mid-checkpoint costs at most one checkpoint interval
+    /// of recomputation, never the run. Returns `None` when no valid
+    /// checkpoint exists (the caller starts from step 0).
+    pub fn load_latest<B: Backend>(
+        &self,
+        backend: &B,
+        run: &str,
+    ) -> Option<(usize, B::State)> {
+        for step in self.list(run).into_iter().rev() {
+            match self.load(backend, run, step) {
+                Ok(state) => return Some((step, state)),
+                Err(e) => {
+                    eprintln!(
+                        "[checkpoint] {run} step {step}: damaged entry skipped ({e:#}); \
+                         falling back to the previous ring entry"
+                    );
+                }
+            }
+        }
+        None
+    }
+
     fn evict(&self, run: &str) -> Result<()> {
         let steps = self.list(run);
         if steps.len() > self.keep {
@@ -142,5 +253,126 @@ impl CheckpointStore {
             }
         }
         Ok(())
+    }
+}
+
+/// Shared integrity check: recorded length and (when present) FNV-1a
+/// checksum must match the state blob.
+fn check_blob(meta: &Json, blob: &[u8], dir: &Path) -> Result<()> {
+    let want = meta.req("bytes")?.as_usize().unwrap_or(usize::MAX);
+    if want != blob.len() {
+        bail!(
+            "checkpoint {} torn: state.bin is {} bytes, meta records {want}",
+            dir.display(),
+            blob.len()
+        );
+    }
+    if let Some(sum) = meta.get("checksum").and_then(Json::as_str) {
+        let got = format!("{:016x}", fsio::fnv64(blob));
+        if sum != got {
+            bail!("checkpoint {} corrupt: checksum {got} != recorded {sum}", dir.display());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    use crate::coordinator::{RunConfig, Sweeper};
+    use crate::formats::spec::Fmt;
+    use crate::runtime::native::{NativeModel, NativeState};
+    use crate::runtime::NativeEngine;
+
+    fn trained_state() -> (Sweeper<NativeEngine>, Arc<NativeModel>, NativeState) {
+        let sweeper = Sweeper::new(NativeEngine::with_batch(8).unwrap());
+        let runner = sweeper.runner("proxy_gelu_ln_L1_D32").unwrap();
+        let backend = runner.backend.clone();
+        let out = runner.run(&RunConfig::new("ck", Fmt::fp32(), 1e-3, 2)).unwrap();
+        let state = out.final_state.unwrap();
+        (sweeper, backend, state)
+    }
+
+    #[test]
+    fn truncated_latest_falls_back_to_previous_ring_entry() {
+        let dir = std::env::temp_dir().join(format!("mxstab_ckpt_torn_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let store = CheckpointStore::new(&dir, 3);
+        let (_s, backend, state) = trained_state();
+        store.save(backend.as_ref(), "r", 5, &state).unwrap();
+        store.save(backend.as_ref(), "r", 10, &state).unwrap();
+
+        // Truncate the newest entry's blob: load must reject it and
+        // load_latest must fall back to step 5 instead of panicking.
+        let bin = store.dir("r", 10).join("state.bin");
+        let bytes = std::fs::read(&bin).unwrap();
+        std::fs::write(&bin, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(store.validate("r", 10).is_err(), "torn entry must not validate");
+        assert!(store.load(backend.as_ref(), "r", 10).is_err());
+        let (step, restored) = store.load_latest(backend.as_ref(), "r").expect("fallback");
+        assert_eq!(step, 5);
+        assert_eq!(restored.tensors, state.tensors, "previous entry restores bitwise");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scrambled_bytes_fail_the_checksum() {
+        let dir = std::env::temp_dir().join(format!("mxstab_ckpt_scr_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let store = CheckpointStore::new(&dir, 2);
+        let (_s, backend, state) = trained_state();
+        store.save(backend.as_ref(), "r", 3, &state).unwrap();
+        // Same length, flipped byte: only the checksum can catch this.
+        let bin = store.dir("r", 3).join("state.bin");
+        let mut bytes = std::fs::read(&bin).unwrap();
+        bytes[8] ^= 0x40;
+        std::fs::write(&bin, &bytes).unwrap();
+        let err = store.load(backend.as_ref(), "r", 3).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+        assert!(store.load_latest(backend.as_ref(), "r").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn injected_torn_save_is_reported_and_skipped_on_load() {
+        use crate::util::faults::{self, Fault, FaultAction};
+        let dir = std::env::temp_dir().join(format!("mxstab_ckpt_fault_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let store = CheckpointStore::new(&dir, 3);
+        let (_s, backend, state) = trained_state();
+        store.save(backend.as_ref(), "ckpt_fault_r", 4, &state).unwrap();
+        faults::arm(
+            Fault::new("ckpt.state", FaultAction::TornWrite { keep: 40 })
+                .with_scope("ckpt_fault_r"),
+        );
+        let err = store.save(backend.as_ref(), "ckpt_fault_r", 8, &state).unwrap_err();
+        assert!(format!("{err:#}").contains("torn"), "{err:#}");
+        // The torn step-8 entry exists on disk but must be skipped.
+        assert!(store.dir("ckpt_fault_r", 8).join("meta.json").exists());
+        let (step, _) = store.load_latest(backend.as_ref(), "ckpt_fault_r").expect("fallback");
+        assert_eq!(step, 4);
+        faults::clear_scope("ckpt_fault_r");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn no_temp_directories_survive_a_save() {
+        let dir = std::env::temp_dir().join(format!("mxstab_ckpt_tmp_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let store = CheckpointStore::new(&dir, 2);
+        let (_s, backend, state) = trained_state();
+        store.save(backend.as_ref(), "r", 1, &state).unwrap();
+        store.save(backend.as_ref(), "r", 1, &state).unwrap(); // idempotent re-save
+        let litter: Vec<String> = std::fs::read_dir(dir.join("r"))
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with(".tmp-"))
+            .collect();
+        assert!(litter.is_empty(), "staging dirs not cleaned: {litter:?}");
+        assert_eq!(store.list("r"), vec![1]);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

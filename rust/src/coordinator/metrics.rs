@@ -2,14 +2,25 @@
 //!
 //! Every run appends a row per logged step to an in-memory [`RunLog`]; the
 //! sweep scheduler serializes logs as JSONL under `runs/<sweep>/<run>.jsonl`
-//! plus a `summary.json` per run. Buffered, no per-step fsync (perf).
+//! plus a `summary.json` per run. Files are published with write-to-temp +
+//! rename ([`crate::util::fsio::write_atomic`]), so a crash mid-save never
+//! leaves a torn log, and non-finite metric values serialize as `null`
+//! (restored as NaN) so even a diverged run's log stays parseable JSONL.
+//!
+//! Row serialization is exact: f32 metrics widen to f64 (lossless), print
+//! in Rust's shortest-roundtrip form, and parse back to the identical
+//! bits. [`RunLog::rows_jsonl`] / [`RunLog::rows_from_jsonl`] are the one
+//! row codec — the spool worker persists partial logs at checkpoints and
+//! re-emits them after a crash-resume through the same functions, which
+//! is what makes a resumed job's final log *byte-identical* to an
+//! uninterrupted run's.
 
-use std::io::Write as _;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::runtime::Metrics;
+use crate::util::fsio;
 use crate::util::json::Json;
 
 /// One logged step.
@@ -113,50 +124,52 @@ impl RunLog {
         ])
     }
 
-    /// Write `<dir>/<name>.jsonl` (one row per step) and
-    /// `<dir>/<name>.summary.json`.
-    pub fn save(&self, dir: &Path) -> Result<()> {
-        std::fs::create_dir_all(dir)?;
-        let path = dir.join(format!("{}.jsonl", self.name));
-        let file = std::fs::File::create(&path)
-            .with_context(|| format!("creating {}", path.display()))?;
-        let mut w = std::io::BufWriter::new(file);
-        for r in &self.rows {
-            let j = Json::obj(vec![
-                ("step", Json::from(r.step)),
-                ("loss", Json::from(r.m.loss as f64)),
-                ("grad_norm", Json::from(r.m.grad_norm as f64)),
-                ("ln_frac_first", Json::from(r.m.ln_frac_first as f64)),
-                ("ln_frac_mean", Json::from(r.m.ln_frac_mean as f64)),
-                ("act_frac_mean", Json::from(r.m.act_frac_mean as f64)),
-                ("update_norm", Json::from(r.m.update_norm as f64)),
-                ("param_norm", Json::from(r.m.param_norm as f64)),
-                ("eps_ratio", Json::from(r.m.eps_ratio as f64)),
-                ("cosine", Json::from(r.m.cosine as f64)),
-            ]);
-            writeln!(w, "{j}")?;
-        }
-        w.flush()?;
-        std::fs::write(
-            dir.join(format!("{}.summary.json", self.name)),
-            self.summary_json().to_string(),
-        )?;
-        Ok(())
+    /// One JSONL row. Non-finite metrics become `null` so the line stays
+    /// valid JSON even after divergence; finite f32s widen losslessly to
+    /// f64 and print in shortest-roundtrip form, so serialize → parse →
+    /// serialize is byte-stable.
+    fn row_json(r: &Row) -> Json {
+        let num = |v: f32| if v.is_finite() { Json::from(v as f64) } else { Json::Null };
+        Json::obj(vec![
+            ("step", Json::from(r.step)),
+            ("loss", num(r.m.loss)),
+            ("grad_norm", num(r.m.grad_norm)),
+            ("ln_frac_first", num(r.m.ln_frac_first)),
+            ("ln_frac_mean", num(r.m.ln_frac_mean)),
+            ("act_frac_mean", num(r.m.act_frac_mean)),
+            ("update_norm", num(r.m.update_norm)),
+            ("param_norm", num(r.m.param_norm)),
+            ("eps_ratio", num(r.m.eps_ratio)),
+            ("cosine", num(r.m.cosine)),
+        ])
     }
 
-    /// Load a saved log (summary fields only partially restored).
-    pub fn load(dir: &Path, name: &str) -> Result<RunLog> {
-        let text = std::fs::read_to_string(dir.join(format!("{name}.jsonl")))?;
-        let mut log = RunLog::new(name);
+    /// Serialize rows to JSONL text. The single row codec: `save`, the
+    /// spool's partial-progress logs, and `done/` publication all call
+    /// this, which is what makes a crash-resumed job's log byte-identical
+    /// to an uninterrupted run's.
+    pub fn rows_jsonl(rows: &[Row]) -> String {
+        let mut out = String::new();
+        for r in rows {
+            out.push_str(&Self::row_json(r).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse JSONL text back into rows (inverse of [`Self::rows_jsonl`];
+    /// `null` metrics come back as NaN).
+    pub fn rows_from_jsonl(text: &str) -> Result<Vec<Row>> {
+        let mut rows = Vec::new();
         for line in text.lines() {
             if line.trim().is_empty() {
                 continue;
             }
             let j = Json::parse(line)?;
             let g = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN) as f32;
-            log.push(
-                j.get("step").and_then(Json::as_usize).unwrap_or(0),
-                Metrics {
+            rows.push(Row {
+                step: j.get("step").and_then(Json::as_usize).unwrap_or(0),
+                m: Metrics {
                     loss: g("loss"),
                     grad_norm: g("grad_norm"),
                     ln_frac_first: g("ln_frac_first"),
@@ -167,8 +180,33 @@ impl RunLog {
                     eps_ratio: g("eps_ratio"),
                     cosine: g("cosine"),
                 },
-            );
+            });
         }
+        Ok(rows)
+    }
+
+    /// Write `<dir>/<name>.jsonl` (one row per step) and
+    /// `<dir>/<name>.summary.json`, each via atomic temp + rename.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        fsio::write_atomic(
+            &dir.join(format!("{}.jsonl", self.name)),
+            Self::rows_jsonl(&self.rows).as_bytes(),
+            "runlog.jsonl",
+        )?;
+        fsio::write_atomic(
+            &dir.join(format!("{}.summary.json", self.name)),
+            self.summary_json().to_string().as_bytes(),
+            "runlog.summary",
+        )?;
+        Ok(())
+    }
+
+    /// Load a saved log (summary fields only partially restored).
+    pub fn load(dir: &Path, name: &str) -> Result<RunLog> {
+        let text = std::fs::read_to_string(dir.join(format!("{name}.jsonl")))?;
+        let mut log = RunLog::new(name);
+        log.rows = Self::rows_from_jsonl(&text)?;
         if let Ok(stext) = std::fs::read_to_string(dir.join(format!("{name}.summary.json"))) {
             let j = Json::parse(&stext)?;
             log.spikes = j.get("spikes").and_then(Json::as_usize).unwrap_or(0);
@@ -202,6 +240,27 @@ mod tests {
         assert_eq!(back.diverged_at, Some(15));
         assert!((back.final_loss() - 0.05).abs() < 1e-6);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn row_codec_is_byte_stable_and_null_safe() {
+        let mut rows = Vec::new();
+        for t in 0..8 {
+            let mut m = dummy(0.1 + 1.0 / (t + 1) as f32);
+            m.eps_ratio = 1.0e-7 * (t as f32 + 0.5);
+            rows.push(Row { step: t, m });
+        }
+        // Non-finite metrics must serialize (as null) and restore as NaN.
+        rows.push(Row { step: 8, m: dummy(f32::NAN) });
+        rows.push(Row { step: 9, m: dummy(f32::INFINITY) });
+        let text = RunLog::rows_jsonl(&rows);
+        assert!(text.contains("\"loss\":null"), "non-finite loss -> null: {text}");
+        let back = RunLog::rows_from_jsonl(&text).unwrap();
+        assert_eq!(back.len(), rows.len());
+        assert!(back[8].m.loss.is_nan() && back[9].m.loss.is_nan());
+        // serialize -> parse -> serialize is byte-identical (crash-resume
+        // parity depends on this).
+        assert_eq!(RunLog::rows_jsonl(&back), text);
     }
 
     #[test]

@@ -11,6 +11,10 @@
 //!   between steps; no recompilation)
 //! * [`metrics`] — metric capture, JSONL persistence
 //! * [`checkpoint`] — state persistence to a bounded per-run ring
+//! * [`spool`] — filesystem work queue (lease/heartbeat/exactly-once
+//!   completion) that lets N workers drain one sweep crash-tolerantly
+//! * [`worker`] — the lease → run → checkpoint → publish worker loop
+//!   with bitwise-exact crash-resume
 //!
 //! The whole layer is generic over [`crate::runtime::Backend`] /
 //! [`crate::runtime::Engine`] and always compiled: the native pure-rust
@@ -22,11 +26,15 @@ pub mod detect;
 pub mod intervene;
 pub mod metrics;
 pub mod run;
+pub mod spool;
 pub mod sweep;
+pub mod worker;
 
 pub use checkpoint::CheckpointStore;
 pub use detect::{Detector, DetectorConfig, Verdict};
 pub use intervene::{Intervention, Policy, Trigger};
 pub use metrics::RunLog;
 pub use run::{LrSchedule, Optimizer, RunConfig, RunOutcome, Runner};
+pub use spool::{Lease, LeaseInfo, Progress, Spool, SpoolStatus};
 pub use sweep::{Job, Sweeper};
+pub use worker::{run_worker, WorkerConfig, WorkerReport};

@@ -145,8 +145,24 @@ impl<B: Backend> Runner<B> {
     pub fn run_from(
         &self,
         cfg: &RunConfig,
+        state: B::State,
+        start_step: usize,
+    ) -> Result<RunOutcome<B>> {
+        self.run_observed(cfg, state, start_step, &mut |_, _, _| Ok(()))
+    }
+
+    /// [`Self::run_from`] with a per-step observer hook. After each step
+    /// the observer sees `(step, post-step state, log so far)`; the spool
+    /// worker uses it to checkpoint and heartbeat mid-run (and the fault
+    /// layer uses it to kill a worker at a chosen step). The observer runs
+    /// on the *post-step* state, so its step index is the step just
+    /// completed; an `Err` from the observer aborts the run.
+    pub fn run_observed(
+        &self,
+        cfg: &RunConfig,
         mut state: B::State,
         start_step: usize,
+        observe: &mut dyn FnMut(usize, &B::State, &RunLog) -> Result<()>,
     ) -> Result<RunOutcome<B>> {
         let mut log = RunLog::new(&cfg.name);
         log.meta = vec![
@@ -203,6 +219,7 @@ impl<B: Backend> Runner<B> {
             if step % cfg.log_every == 0 || verdict != Verdict::Healthy {
                 log.push(step, met);
             }
+            observe(step, &state, &log)?;
             if verdict == Verdict::Diverged && cfg.stop_on_divergence {
                 break;
             }

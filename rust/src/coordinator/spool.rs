@@ -1,0 +1,660 @@
+//! Work-queue sweep coordinator: a filesystem spool of jobs that N
+//! workers (threads or separate processes) drain cooperatively.
+//!
+//! Layout under the spool root:
+//!
+//! ```text
+//! pending/<id>.json            queued job descriptions (full RunConfig)
+//! leased/<id>#<token>.json     jobs owned by a worker (token fences the
+//! leased/<id>#<token>.hb         lease; heartbeat {worker, step, at_ms})
+//! done/<id>.jsonl              final metric rows (+ <id>.summary.json)
+//! failed/<id>.jsonl            error-marked results (+ summary)
+//! ckpt/<id>/step*/             bounded checkpoint ring per job
+//! logs/<id>.rows.jsonl         partial rows at the last checkpoint
+//! logs/<id>.resume.json        {next_step, interventions} at that point
+//! tmp/                         staging for exactly-once commits
+//! ```
+//!
+//! Correctness rests on three filesystem primitives:
+//!
+//! * **Lease = atomic rename.** `pending/<id>.json →
+//!   leased/<id>#<token>.json` succeeds for exactly one caller; losers
+//!   see `NotFound` and move on. Reclaim is the same rename in reverse.
+//! * **Completion = exactly-once link.** Results are staged in `tmp/`
+//!   and published with [`fsio::commit_new`] (`hard_link`, which refuses
+//!   an existing destination), so a zombie worker racing its reclaimer
+//!   produces exactly one `done/<id>.jsonl` — and because training is
+//!   deterministic, either writer's bytes are the same.
+//! * **Every mutable file is torn-write-safe.** Heartbeats, progress and
+//!   summaries go through [`fsio::write_atomic`]; checkpoints through
+//!   [`CheckpointStore`]'s staged directory commit.
+//!
+//! Staleness: a lease with no heartbeat refresh for `timeout_ms` is
+//! considered abandoned and any worker may [`Spool::reclaim_stale`] it
+//! back to `pending/`. The per-lease token keeps a reclaimed-then-
+//! re-leased job distinct from the zombie's old lease file.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::checkpoint::CheckpointStore;
+use super::detect::DetectorConfig;
+use super::intervene::{Intervention, Policy, Trigger};
+use super::metrics::{Row, RunLog};
+use super::run::{LrSchedule, Optimizer, RunConfig};
+use super::sweep::Job;
+use crate::formats::spec::Fmt;
+use crate::util::fsio;
+use crate::util::json::Json;
+
+const DIRS: [&str; 7] = ["pending", "leased", "done", "failed", "ckpt", "logs", "tmp"];
+
+static LEASE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A filesystem job spool (see module docs for the layout).
+pub struct Spool {
+    root: PathBuf,
+}
+
+/// An owned lease on one job. Dropping it does nothing — a worker that
+/// dies simply leaves the lease file behind for [`Spool::reclaim_stale`].
+#[derive(Debug, Clone)]
+pub struct Lease {
+    pub id: String,
+    pub token: String,
+    /// `leased/<id>#<token>.json`
+    pub path: PathBuf,
+}
+
+impl Lease {
+    fn hb_path(&self) -> PathBuf {
+        self.path.with_extension("hb")
+    }
+}
+
+/// One row of [`Spool::status`] for a leased job.
+#[derive(Debug, Clone)]
+pub struct LeaseInfo {
+    pub id: String,
+    pub worker: String,
+    pub step: usize,
+    pub age_ms: u64,
+    pub stale: bool,
+}
+
+/// Snapshot of the spool's per-state contents.
+#[derive(Debug, Clone, Default)]
+pub struct SpoolStatus {
+    pub pending: Vec<String>,
+    pub leased: Vec<LeaseInfo>,
+    pub done: Vec<String>,
+    pub failed: Vec<String>,
+}
+
+/// Partial results persisted at each checkpoint, used to resume.
+#[derive(Debug, Clone)]
+pub struct Progress {
+    pub next_step: usize,
+    pub rows: Vec<Row>,
+    pub interventions: Vec<(usize, String)>,
+}
+
+impl Spool {
+    /// Create (or reopen) a spool at `root`, making every state dir.
+    pub fn init(root: &Path) -> Result<Spool> {
+        let s = Spool { root: root.to_path_buf() };
+        for d in DIRS {
+            std::fs::create_dir_all(s.sub(d))
+                .with_context(|| format!("creating spool dir {}", s.sub(d).display()))?;
+        }
+        Ok(s)
+    }
+
+    /// Open an existing spool; bails when `root` isn't one.
+    pub fn open(root: &Path) -> Result<Spool> {
+        if !root.join("pending").is_dir() {
+            bail!("{} is not a spool directory (no pending/)", root.display());
+        }
+        Spool::init(root)
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn sub(&self, dir: &str) -> PathBuf {
+        self.root.join(dir)
+    }
+
+    /// Filesystem-safe job id derived from the run name.
+    pub fn job_id(name: &str) -> String {
+        let mut s: String = name
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || ".-_".contains(c) { c } else { '-' })
+            .collect();
+        if s.is_empty() {
+            s.push('j');
+        }
+        s
+    }
+
+    /// The checkpoint ring shared by all workers of this spool. `keep=2`
+    /// guarantees a fallback entry when the newest write was torn.
+    pub fn checkpoints(&self) -> CheckpointStore {
+        CheckpointStore::new(&self.sub("ckpt"), 2)
+    }
+
+    /// Queue a job. The id must be unused across the whole lifecycle
+    /// (pending/leased/done/failed), which makes re-running the same
+    /// sweep command idempotent.
+    pub fn enqueue(&self, job: &Job) -> Result<String> {
+        let id = Spool::job_id(&job.cfg.name);
+        let taken = self.sub("pending").join(format!("{id}.json")).exists()
+            || self.sub("done").join(format!("{id}.jsonl")).exists()
+            || self.sub("failed").join(format!("{id}.jsonl")).exists()
+            || self.lease_files().iter().any(|(_, lid)| *lid == id);
+        if taken {
+            bail!("job {id:?} already spooled");
+        }
+        fsio::write_atomic(
+            &self.sub("pending").join(format!("{id}.json")),
+            job_json(job).to_string().as_bytes(),
+            "spool.enqueue",
+        )?;
+        Ok(id)
+    }
+
+    /// Try to lease the alphabetically-first pending job. Exactly one of
+    /// any number of racing workers wins each job (atomic rename); the
+    /// winner's initial heartbeat is written before this returns.
+    pub fn try_lease(&self, worker: &str) -> Result<Option<Lease>> {
+        let mut names: Vec<String> = std::fs::read_dir(self.sub("pending"))
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter_map(|e| e.file_name().to_str().map(str::to_string))
+                    .filter(|n| n.ends_with(".json"))
+                    .collect()
+            })
+            .unwrap_or_default();
+        names.sort();
+        for name in names {
+            let id = name.strip_suffix(".json").unwrap_or(&name).to_string();
+            let token = format!(
+                "{}-{}",
+                std::process::id(),
+                LEASE_SEQ.fetch_add(1, Ordering::Relaxed)
+            );
+            let dst = self.sub("leased").join(format!("{id}#{token}.json"));
+            match std::fs::rename(self.sub("pending").join(&name), &dst) {
+                Ok(()) => {
+                    let lease = Lease { id, token, path: dst };
+                    self.heartbeat(&lease, worker, 0)?;
+                    return Ok(Some(lease));
+                }
+                // Someone else won this job; try the next one.
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+                Err(e) => return Err(anyhow!("leasing {id}: {e}")),
+            }
+        }
+        Ok(None)
+    }
+
+    /// Parse the job description held by a lease.
+    pub fn lease_job(&self, lease: &Lease) -> Result<Job> {
+        let text = std::fs::read_to_string(&lease.path)
+            .with_context(|| format!("reading lease {}", lease.path.display()))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("job {} is not valid JSON", lease.id))?;
+        job_from_json(&j).with_context(|| format!("job {}", lease.id))
+    }
+
+    /// Refresh the lease's liveness marker.
+    pub fn heartbeat(&self, lease: &Lease, worker: &str, step: usize) -> Result<()> {
+        let j = Json::obj(vec![
+            ("worker", Json::from(worker)),
+            ("step", Json::from(step)),
+            ("at_ms", Json::from(fsio::now_ms() as f64)),
+        ]);
+        fsio::write_atomic(&lease.hb_path(), j.to_string().as_bytes(), "spool.heartbeat")
+    }
+
+    /// Publish a finished job. Returns whether this caller won the
+    /// exactly-once commit (a `false` means a racing writer already
+    /// published — deterministic training makes the bytes identical, so
+    /// losing is harmless). The winner also retires the job's scratch
+    /// state (progress files + checkpoint ring).
+    pub fn complete(&self, lease: &Lease, log: &RunLog) -> Result<bool> {
+        let tmp = self.sub("tmp").join(format!("{}#{}.jsonl", lease.id, lease.token));
+        std::fs::write(&tmp, RunLog::rows_jsonl(&log.rows))
+            .with_context(|| format!("staging {}", tmp.display()))?;
+        let won = fsio::commit_new(&tmp, &self.sub("done").join(format!("{}.jsonl", lease.id)))?;
+        if won {
+            fsio::write_atomic(
+                &self.sub("done").join(format!("{}.summary.json", lease.id)),
+                log.summary_json().to_string().as_bytes(),
+                "spool.summary",
+            )?;
+            self.retire_scratch(&lease.id);
+        }
+        std::fs::remove_file(&lease.path).ok();
+        std::fs::remove_file(lease.hb_path()).ok();
+        Ok(won)
+    }
+
+    /// Record a failed job (unparseable description, run error, panic).
+    /// If the job was meanwhile completed by another worker the failure
+    /// is dropped — `done/` always wins over `failed/`.
+    pub fn fail(&self, lease: &Lease, log: &RunLog) -> Result<()> {
+        if !self.sub("done").join(format!("{}.jsonl", lease.id)).exists() {
+            let tmp = self.sub("tmp").join(format!("{}#{}.jsonl", lease.id, lease.token));
+            std::fs::write(&tmp, RunLog::rows_jsonl(&log.rows))?;
+            let dst = self.sub("failed").join(format!("{}.jsonl", lease.id));
+            if fsio::commit_new(&tmp, &dst)? {
+                fsio::write_atomic(
+                    &self.sub("failed").join(format!("{}.summary.json", lease.id)),
+                    log.summary_json().to_string().as_bytes(),
+                    "spool.summary",
+                )?;
+            }
+        }
+        std::fs::remove_file(&lease.path).ok();
+        std::fs::remove_file(lease.hb_path()).ok();
+        Ok(())
+    }
+
+    /// Move every lease whose heartbeat is older than `timeout_ms` back
+    /// to `pending/`. The rename is atomic, so concurrent reclaimers
+    /// recover each stale job exactly once. Returns the reclaimed ids.
+    pub fn reclaim_stale(&self, timeout_ms: u64) -> Result<Vec<String>> {
+        let mut reclaimed = Vec::new();
+        for (path, id) in self.lease_files() {
+            let (_worker, _step, age_ms) = self.lease_liveness(&path);
+            if age_ms <= timeout_ms {
+                continue;
+            }
+            let dst = self.sub("pending").join(format!("{id}.json"));
+            match std::fs::rename(&path, &dst) {
+                Ok(()) => {
+                    std::fs::remove_file(path.with_extension("hb")).ok();
+                    reclaimed.push(id);
+                }
+                // Zombie finished or another reclaimer won: nothing to do.
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => return Err(anyhow!("reclaiming {id}: {e}")),
+            }
+        }
+        Ok(reclaimed)
+    }
+
+    /// True when nothing is queued or running (drain workers exit here).
+    pub fn is_idle(&self) -> bool {
+        let has = |d: &str| {
+            std::fs::read_dir(self.sub(d))
+                .map(|rd| {
+                    rd.filter_map(|e| e.ok())
+                        .any(|e| e.file_name().to_string_lossy().ends_with(".json"))
+                })
+                .unwrap_or(false)
+        };
+        !has("pending") && !has("leased")
+    }
+
+    /// Per-state contents plus per-lease liveness, for `sweep-status`.
+    pub fn status(&self, timeout_ms: u64) -> Result<SpoolStatus> {
+        let ids = |d: &str, suffix: &str| -> Vec<String> {
+            let mut v: Vec<String> = std::fs::read_dir(self.sub(d))
+                .map(|rd| {
+                    rd.filter_map(|e| e.ok())
+                        .filter_map(|e| {
+                            e.file_name()
+                                .to_str()
+                                .and_then(|n| n.strip_suffix(suffix))
+                                .map(str::to_string)
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            v.sort();
+            v
+        };
+        let mut leased = Vec::new();
+        for (path, id) in self.lease_files() {
+            let (worker, step, age_ms) = self.lease_liveness(&path);
+            leased.push(LeaseInfo { id, worker, step, age_ms, stale: age_ms > timeout_ms });
+        }
+        Ok(SpoolStatus {
+            pending: ids("pending", ".json"),
+            leased,
+            done: ids("done", ".jsonl"),
+            failed: ids("failed", ".jsonl"),
+        })
+    }
+
+    /// Persist partial results at a checkpoint: all rows logged so far
+    /// and the interventions that already fired, both needed to rebuild
+    /// the exact final log after a resume.
+    pub fn save_progress(
+        &self,
+        id: &str,
+        next_step: usize,
+        rows: &[Row],
+        interventions: &[(usize, String)],
+    ) -> Result<()> {
+        fsio::write_atomic(
+            &self.sub("logs").join(format!("{id}.rows.jsonl")),
+            RunLog::rows_jsonl(rows).as_bytes(),
+            "spool.progress.rows",
+        )?;
+        let ivs = Json::Arr(
+            interventions
+                .iter()
+                .map(|(s, n)| {
+                    Json::obj(vec![
+                        ("step", Json::from(*s)),
+                        ("intervention", Json::from(n.clone())),
+                    ])
+                })
+                .collect(),
+        );
+        let resume =
+            Json::obj(vec![("next_step", Json::from(next_step)), ("interventions", ivs)]);
+        fsio::write_atomic(
+            &self.sub("logs").join(format!("{id}.resume.json")),
+            resume.to_string().as_bytes(),
+            "spool.progress.resume",
+        )
+    }
+
+    /// Load the partial results saved by [`Self::save_progress`], if any.
+    pub fn load_progress(&self, id: &str) -> Option<Progress> {
+        let text =
+            std::fs::read_to_string(self.sub("logs").join(format!("{id}.resume.json"))).ok()?;
+        let j = Json::parse(&text).ok()?;
+        let next_step = j.get("next_step")?.as_usize()?;
+        let interventions = j
+            .get("interventions")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .filter_map(|e| {
+                        Some((
+                            e.get("step")?.as_usize()?,
+                            e.get("intervention")?.as_str()?.to_string(),
+                        ))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        let rows_text =
+            std::fs::read_to_string(self.sub("logs").join(format!("{id}.rows.jsonl"))).ok()?;
+        let rows = RunLog::rows_from_jsonl(&rows_text).ok()?;
+        Some(Progress { next_step, rows, interventions })
+    }
+
+    /// `(lease file, job id)` for every current lease.
+    fn lease_files(&self) -> Vec<(PathBuf, String)> {
+        let mut v: Vec<(PathBuf, String)> = std::fs::read_dir(self.sub("leased"))
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter_map(|e| {
+                        let name = e.file_name();
+                        let stem = name.to_str()?.strip_suffix(".json")?;
+                        let id = stem.split('#').next().unwrap_or(stem).to_string();
+                        Some((e.path(), id))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        v.sort();
+        v
+    }
+
+    /// `(worker, step, heartbeat age in ms)` for a lease file; falls back
+    /// to the lease file's mtime when no heartbeat was written yet.
+    fn lease_liveness(&self, path: &Path) -> (String, usize, u64) {
+        if let Ok(text) = std::fs::read_to_string(path.with_extension("hb")) {
+            if let Ok(j) = Json::parse(&text) {
+                let worker =
+                    j.get("worker").and_then(Json::as_str).unwrap_or("?").to_string();
+                let step = j.get("step").and_then(Json::as_usize).unwrap_or(0);
+                let at = j.get("at_ms").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                return (worker, step, fsio::now_ms().saturating_sub(at));
+            }
+        }
+        let age = std::fs::metadata(path)
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|t| t.elapsed().ok())
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(u64::MAX);
+        ("?".to_string(), 0, age)
+    }
+
+    fn retire_scratch(&self, id: &str) {
+        std::fs::remove_file(self.sub("logs").join(format!("{id}.rows.jsonl"))).ok();
+        std::fs::remove_file(self.sub("logs").join(format!("{id}.resume.json"))).ok();
+        std::fs::remove_dir_all(self.sub("ckpt").join(id)).ok();
+    }
+}
+
+/// Look an intervention up by its wire name.
+pub fn intervention_by_name(name: &str) -> Option<Intervention> {
+    Intervention::ALL.iter().copied().find(|i| i.name() == name)
+}
+
+/// Serialize a [`Job`] (bundle + complete [`RunConfig`]) to JSON. Every
+/// field crosses the wire: a worker in another process must reconstruct
+/// the exact run, or crash-resume parity is lost.
+pub fn job_json(job: &Job) -> Json {
+    let cfg = &job.cfg;
+    let lr = match cfg.lr {
+        LrSchedule::Constant(v) => Json::obj(vec![
+            ("kind", Json::from("constant")),
+            ("lr", Json::from(v as f64)),
+        ]),
+        LrSchedule::WarmupCosine { lo, peak, warmup, total } => Json::obj(vec![
+            ("kind", Json::from("warmup_cosine")),
+            ("lo", Json::from(lo as f64)),
+            ("peak", Json::from(peak as f64)),
+            ("warmup", Json::from(warmup)),
+            ("total", Json::from(total)),
+        ]),
+    };
+    let optimizer = match cfg.optimizer {
+        Optimizer::Adam => Json::obj(vec![("kind", Json::from("adam"))]),
+        Optimizer::Sgd { momentum } => Json::obj(vec![
+            ("kind", Json::from("sgd")),
+            ("momentum", Json::from(momentum as f64)),
+        ]),
+    };
+    let policies = Json::Arr(
+        cfg.policies
+            .iter()
+            .map(|p| {
+                let mut fields = vec![("intervention", Json::from(p.intervention.name()))];
+                match p.trigger {
+                    Trigger::AtStep(s) => {
+                        fields.push(("trigger", Json::from("at_step")));
+                        fields.push(("step", Json::from(s)));
+                    }
+                    Trigger::OnGradGrowth(r) => {
+                        fields.push(("trigger", Json::from("grad_growth")));
+                        fields.push(("ratio", Json::from(r)));
+                    }
+                }
+                Json::obj(fields)
+            })
+            .collect(),
+    );
+    let detector = Json::obj(vec![
+        ("spike_factor", Json::from(cfg.detector.spike_factor)),
+        ("diverge_factor", Json::from(cfg.detector.diverge_factor)),
+        ("alpha", Json::from(cfg.detector.alpha)),
+        ("warmup", Json::from(cfg.detector.warmup)),
+        ("grad_window", Json::from(cfg.detector.grad_window)),
+    ]);
+    Json::obj(vec![
+        ("bundle", Json::from(job.bundle.clone())),
+        ("name", Json::from(cfg.name.clone())),
+        ("fmt", Json::arr_f32(&cfg.fmt.to_vec())),
+        ("lr", lr),
+        ("optimizer", optimizer),
+        ("steps", Json::from(cfg.steps)),
+        ("seed", Json::from(cfg.seed as f64)),
+        ("label_noise", Json::from(cfg.label_noise as f64)),
+        ("init_mode", Json::from(cfg.init_mode as f64)),
+        ("init_gain", Json::from(cfg.init_gain as f64)),
+        ("log_every", Json::from(cfg.log_every)),
+        ("paired", Json::from(cfg.paired)),
+        ("policies", policies),
+        ("stop_on_divergence", Json::from(cfg.stop_on_divergence)),
+        ("detector", detector),
+    ])
+}
+
+/// Inverse of [`job_json`].
+pub fn job_from_json(j: &Json) -> Result<Job> {
+    let f64_of = |j: &Json, k: &str| -> Result<f64> {
+        j.req(k)?.as_f64().ok_or_else(|| anyhow!("{k}: not a number"))
+    };
+    let usize_of = |j: &Json, k: &str| -> Result<usize> {
+        j.req(k)?.as_usize().ok_or_else(|| anyhow!("{k}: not an unsigned integer"))
+    };
+    let fmt_vec: Vec<f32> = j
+        .req("fmt")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("fmt: not an array"))?
+        .iter()
+        .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+        .collect();
+    let fmt = Fmt::from_vec(&fmt_vec).ok_or_else(|| anyhow!("fmt: bad vector"))?;
+    let lrj = j.req("lr")?;
+    let lr = match lrj.req("kind")?.as_str() {
+        Some("constant") => LrSchedule::Constant(f64_of(lrj, "lr")? as f32),
+        Some("warmup_cosine") => LrSchedule::WarmupCosine {
+            lo: f64_of(lrj, "lo")? as f32,
+            peak: f64_of(lrj, "peak")? as f32,
+            warmup: usize_of(lrj, "warmup")?,
+            total: usize_of(lrj, "total")?,
+        },
+        other => bail!("lr: unknown kind {other:?}"),
+    };
+    let oj = j.req("optimizer")?;
+    let optimizer = match oj.req("kind")?.as_str() {
+        Some("adam") => Optimizer::Adam,
+        Some("sgd") => Optimizer::Sgd { momentum: f64_of(oj, "momentum")? as f32 },
+        other => bail!("optimizer: unknown kind {other:?}"),
+    };
+    let mut policies = Vec::new();
+    for p in j.req("policies")?.as_arr().unwrap_or(&[]) {
+        let name = p.req("intervention")?.as_str().unwrap_or_default().to_string();
+        let iv = intervention_by_name(&name)
+            .ok_or_else(|| anyhow!("unknown intervention {name:?}"))?;
+        policies.push(match p.req("trigger")?.as_str() {
+            Some("at_step") => Policy::at_step(usize_of(p, "step")?, iv),
+            Some("grad_growth") => Policy::on_grad_growth(f64_of(p, "ratio")?, iv),
+            other => bail!("policy: unknown trigger {other:?}"),
+        });
+    }
+    let dj = j.req("detector")?;
+    let detector = DetectorConfig {
+        spike_factor: f64_of(dj, "spike_factor")?,
+        diverge_factor: f64_of(dj, "diverge_factor")?,
+        alpha: f64_of(dj, "alpha")?,
+        warmup: usize_of(dj, "warmup")?,
+        grad_window: usize_of(dj, "grad_window")?,
+    };
+    let name = j.req("name")?.as_str().unwrap_or_default().to_string();
+    let mut cfg = RunConfig::new(&name, fmt, 0.0, usize_of(j, "steps")?);
+    cfg.lr = lr;
+    cfg.optimizer = optimizer;
+    cfg.seed = f64_of(j, "seed")? as i32;
+    cfg.label_noise = f64_of(j, "label_noise")? as f32;
+    cfg.init_mode = f64_of(j, "init_mode")? as f32;
+    cfg.init_gain = f64_of(j, "init_gain")? as f32;
+    cfg.log_every = usize_of(j, "log_every")?.max(1);
+    cfg.paired = j.req("paired")?.as_bool().unwrap_or(false);
+    cfg.policies = policies;
+    cfg.stop_on_divergence = j.req("stop_on_divergence")?.as_bool().unwrap_or(false);
+    cfg.detector = detector;
+    let bundle = j.req("bundle")?.as_str().unwrap_or_default().to_string();
+    Ok(Job { bundle, cfg })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::spec::FormatId;
+
+    fn job() -> Job {
+        let mut cfg =
+            RunConfig::new("j x/1", Fmt::full(FormatId::E4M3, FormatId::E5M2), 2e-3, 40);
+        cfg.lr = LrSchedule::WarmupCosine { lo: 1e-4, peak: 2e-3, warmup: 4, total: 40 };
+        cfg.optimizer = Optimizer::Sgd { momentum: 0.9 };
+        cfg.seed = -3;
+        cfg.label_noise = 5e-3;
+        cfg.init_mode = 1.0;
+        cfg.init_gain = 1.5;
+        cfg.log_every = 2;
+        cfg.paired = true;
+        cfg.stop_on_divergence = true;
+        cfg.policies = vec![
+            Policy::at_step(7, Intervention::ToFp32),
+            Policy::on_grad_growth(3.0, Intervention::Bf16Act),
+        ];
+        cfg.detector.spike_factor = 50.0;
+        Job { bundle: "lm_L1_D32_H1_T32_V64".into(), cfg }
+    }
+
+    #[test]
+    fn job_json_roundtrips_every_field() {
+        let j = job();
+        let text = job_json(&j).to_string();
+        let back = job_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(job_json(&back).to_string(), text, "roundtrip is a fixed point");
+        assert_eq!(back.cfg.seed, -3);
+        assert_eq!(back.cfg.policies.len(), 2);
+        assert!(matches!(back.cfg.lr, LrSchedule::WarmupCosine { warmup: 4, .. }));
+        assert!(matches!(back.cfg.optimizer, Optimizer::Sgd { .. }));
+        assert_eq!(back.cfg.fmt.label(), j.cfg.fmt.label());
+    }
+
+    #[test]
+    fn job_ids_are_sanitized() {
+        assert_eq!(Spool::job_id("j x/1"), "j-x-1");
+        assert_eq!(Spool::job_id("ok_name-1.2"), "ok_name-1.2");
+        assert_eq!(Spool::job_id("a#b:c"), "a-b-c");
+    }
+
+    #[test]
+    fn duplicate_enqueue_is_rejected_across_the_lifecycle() {
+        let dir = std::env::temp_dir().join(format!("mxstab_spool_dup_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let spool = Spool::init(&dir).unwrap();
+        let j = job();
+        let id = spool.enqueue(&j).unwrap();
+        assert!(spool.enqueue(&j).is_err(), "same name cannot queue twice");
+        // Leasing moves it out of pending/, but the id is still taken.
+        let lease = spool.try_lease("dup_w").unwrap().unwrap();
+        assert_eq!(lease.id, id);
+        assert!(spool.enqueue(&j).is_err(), "leased id is still taken");
+        assert!(!spool.is_idle(), "a leased job keeps the spool busy");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn leased_job_parses_back() {
+        let dir =
+            std::env::temp_dir().join(format!("mxstab_spool_parse_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let spool = Spool::init(&dir).unwrap();
+        let j = job();
+        spool.enqueue(&j).unwrap();
+        let lease = spool.try_lease("parse_w").unwrap().unwrap();
+        let back = spool.lease_job(&lease).unwrap();
+        assert_eq!(job_json(&back).to_string(), job_json(&j).to_string());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,249 @@
+//! Spool worker: the lease → run → checkpoint → publish loop.
+//!
+//! A worker repeatedly leases a job from the [`Spool`], executes it with
+//! the run loop's observer hook ([`super::run::Runner::run_observed`]),
+//! checkpoints state + partial rows every `checkpoint_every` steps,
+//! heartbeats every step, and publishes the final log with the spool's
+//! exactly-once commit. When no job is leasable it reclaims stale leases
+//! and either polls (`--watch`) or exits once the spool drains.
+//!
+//! Crash-resume is bitwise exact: a reclaimed job restarts from the
+//! newest valid checkpoint with the rows and fired interventions saved
+//! alongside it, and because every backend step is a pure function of
+//! `(state, seed, step, fmt, hyper)` and batch selection is keyed by
+//! `(seed, step)`, the recomputed rows — serialized through the single
+//! row codec — match an uninterrupted run byte for byte. (Detector
+//! *summary* fields can differ after a resume, which is why parity is
+//! defined over the `done/<id>.jsonl` rows, not `summary.json`.)
+//!
+//! Fault points (see [`crate::util::faults`]): `"worker.step"` kills the
+//! worker at a chosen step via [`KilledByFault`] — caught here and
+//! treated as process death: **no cleanup**, the lease and heartbeat
+//! stay behind for another worker to reclaim. `"worker.heartbeat"`
+//! suppresses heartbeat refreshes so a live lease goes stale.
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::RunLog;
+use super::spool::{intervention_by_name, Lease, Spool};
+use super::sweep::{Job, Sweeper};
+use crate::runtime::{Backend, Engine};
+use crate::util::faults::{self, FaultAction, KilledByFault};
+
+/// Tunables for one worker.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    pub id: String,
+    /// Checkpoint state + progress every this many steps.
+    pub checkpoint_every: usize,
+    /// Leases with heartbeats older than this are reclaimed.
+    pub lease_timeout_ms: u64,
+    /// Idle poll interval.
+    pub poll_ms: u64,
+    /// Exit when the spool has no pending or leased jobs left; `false`
+    /// keeps the worker polling forever (`sweep-worker --watch`).
+    pub drain: bool,
+}
+
+impl WorkerConfig {
+    pub fn new(id: &str) -> WorkerConfig {
+        WorkerConfig {
+            id: id.to_string(),
+            checkpoint_every: 10,
+            lease_timeout_ms: 30_000,
+            poll_ms: 200,
+            drain: true,
+        }
+    }
+}
+
+/// What one [`run_worker`] call did.
+#[derive(Debug, Default)]
+pub struct WorkerReport {
+    pub completed: Vec<String>,
+    pub failed: Vec<String>,
+    pub reclaimed: Vec<String>,
+    /// The worker died to an injected kill fault (lease left behind).
+    pub killed: bool,
+}
+
+enum JobEnd {
+    Completed,
+    Failed,
+    Killed,
+}
+
+/// Drain (or watch) the spool as worker `wcfg.id`.
+pub fn run_worker<E: Engine>(
+    sweeper: &Sweeper<E>,
+    spool: &Spool,
+    wcfg: &WorkerConfig,
+) -> Result<WorkerReport> {
+    let mut report = WorkerReport::default();
+    loop {
+        if let Some(lease) = spool.try_lease(&wcfg.id)? {
+            match process(sweeper, spool, wcfg, &lease)? {
+                JobEnd::Completed => report.completed.push(lease.id.clone()),
+                JobEnd::Failed => report.failed.push(lease.id.clone()),
+                JobEnd::Killed => {
+                    report.killed = true;
+                    return Ok(report);
+                }
+            }
+            continue;
+        }
+        let reclaimed = spool.reclaim_stale(wcfg.lease_timeout_ms)?;
+        if !reclaimed.is_empty() {
+            report.reclaimed.extend(reclaimed);
+            continue;
+        }
+        if wcfg.drain && spool.is_idle() {
+            return Ok(report);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(wcfg.poll_ms));
+    }
+}
+
+fn process<E: Engine>(
+    sweeper: &Sweeper<E>,
+    spool: &Spool,
+    wcfg: &WorkerConfig,
+    lease: &Lease,
+) -> Result<JobEnd> {
+    let job = match spool.lease_job(lease) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("[{}] job {} unreadable: {e:#}", wcfg.id, lease.id);
+            let mut log = RunLog::new(&lease.id);
+            log.meta.push(("error".into(), format!("{e:#}")));
+            spool.fail(lease, &log)?;
+            return Ok(JobEnd::Failed);
+        }
+    };
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        execute(sweeper, spool, wcfg, lease, &job)
+    }));
+    match res {
+        Ok(Ok(log)) => {
+            let won = spool.complete(lease, &log)?;
+            eprintln!(
+                "[{}] {} done{}",
+                wcfg.id,
+                lease.id,
+                if won { "" } else { " (duplicate, dropped)" }
+            );
+            Ok(JobEnd::Completed)
+        }
+        Ok(Err(e)) => {
+            eprintln!("[{}] {} failed: {e:#}", wcfg.id, lease.id);
+            let mut log = RunLog::new(&job.cfg.name);
+            log.meta.push(("error".into(), format!("{e:#}")));
+            spool.fail(lease, &log)?;
+            Ok(JobEnd::Failed)
+        }
+        Err(payload) => {
+            if payload.downcast_ref::<KilledByFault>().is_some() {
+                // Simulated SIGKILL: leave the lease and heartbeat behind
+                // exactly as a dead process would.
+                return Ok(JobEnd::Killed);
+            }
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".into());
+            eprintln!("[{}] {} panicked: {msg}", wcfg.id, lease.id);
+            let mut log = RunLog::new(&job.cfg.name);
+            log.meta.push(("error".into(), format!("job panicked: {msg}")));
+            spool.fail(lease, &log)?;
+            Ok(JobEnd::Failed)
+        }
+    }
+}
+
+/// Run one leased job to completion, resuming from the newest valid
+/// checkpoint when one exists. Returns the *full* log (prior rows from
+/// before the resume point + freshly computed rows).
+fn execute<E: Engine>(
+    sweeper: &Sweeper<E>,
+    spool: &Spool,
+    wcfg: &WorkerConfig,
+    lease: &Lease,
+    job: &Job,
+) -> Result<RunLog> {
+    let runner = sweeper.runner(&job.bundle)?;
+    let backend = runner.backend.clone();
+    let store = spool.checkpoints();
+    let id = lease.id.clone();
+
+    // Resume point: newest checkpoint that passes integrity checks AND
+    // has progress covering it (rows saved at the same step or later).
+    let mut start = 0usize;
+    let mut resumed: Option<<E::Backend as Backend>::State> = None;
+    let mut prior_rows = Vec::new();
+    let mut fired: Vec<(usize, String)> = Vec::new();
+    if let Some((step, state)) = store.load_latest(backend.as_ref(), &id) {
+        if step > 0 {
+            if let Some(prog) = spool.load_progress(&id) {
+                if prog.next_step >= step {
+                    start = step;
+                    resumed = Some(state);
+                    prior_rows = prog.rows.into_iter().filter(|r| r.step < step).collect();
+                    fired = prog.interventions.into_iter().filter(|(s, _)| *s < step).collect();
+                }
+            }
+        }
+    }
+    let state = match resumed {
+        Some(s) => {
+            eprintln!("[{}] {} resuming from checkpoint step {start}", wcfg.id, id);
+            s
+        }
+        None => backend.init(job.cfg.seed, job.cfg.init_mode, job.cfg.init_gain)?,
+    };
+
+    // Replay already-fired interventions into the starting fmt and drop
+    // their policies so they don't fire twice. (Grad-growth triggers fire
+    // on detector state, which resets at resume; replaying by name keeps
+    // the *fmt trajectory* — what the compute sees — exact.)
+    let mut cfg = job.cfg.clone();
+    for (_, name) in &fired {
+        let iv = intervention_by_name(name)
+            .ok_or_else(|| anyhow!("progress names unknown intervention {name:?}"))?;
+        cfg.fmt = iv.apply(cfg.fmt);
+        if let Some(pos) =
+            cfg.policies.iter().position(|p| p.intervention.name() == name.as_str())
+        {
+            cfg.policies.remove(pos);
+        }
+    }
+
+    let out = runner.run_observed(&cfg, state, start, &mut |step, st, log| {
+        if let Some(FaultAction::Kill) = faults::check("worker.step", &wcfg.id, step) {
+            std::panic::panic_any(KilledByFault);
+        }
+        if (step + 1) % wcfg.checkpoint_every.max(1) == 0 {
+            store.save(backend.as_ref(), &id, step + 1, st)?;
+            let mut rows = prior_rows.clone();
+            rows.extend(log.rows.iter().copied());
+            let mut ivs = fired.clone();
+            ivs.extend(log.interventions.iter().cloned());
+            spool.save_progress(&id, step + 1, &rows, &ivs)?;
+        }
+        if faults::check("worker.heartbeat", &wcfg.id, step)
+            != Some(FaultAction::StallHeartbeat)
+        {
+            spool.heartbeat(lease, &wcfg.id, step + 1)?;
+        }
+        Ok(())
+    })?;
+
+    let mut log = out.log;
+    let mut rows = prior_rows;
+    rows.extend(log.rows.iter().copied());
+    log.rows = rows;
+    let mut ivs = fired;
+    ivs.extend(log.interventions.iter().cloned());
+    log.interventions = ivs;
+    Ok(log)
+}

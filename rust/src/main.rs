@@ -6,9 +6,25 @@
 //!                [--lr 5e-4] [--steps N] [--batch B] [--paired]
 //!                [--intervene <name>@<step>[,...]] [--require-finite]
 //! mxstab experiment <id|all> [--backend native|pjrt] [--scale quick|default|full] [--force]
+//! mxstab sweep --spool <dir> [--workers N | --procs N]         # spooled crash-tolerant sweep
+//!              [--bundles a,b] [--fmts e4m3-e4m3,...] [--lrs 1e-3,...] [--seeds 0,1]
+//!              [--steps N] [--log-every N] [--checkpoint-every N] [--lease-timeout-ms N]
+//! mxstab sweep-worker <spool-dir> [--id w0] [--watch]          # drain (or watch) a spool
+//! mxstab sweep-status <spool-dir>               # per-state counts + per-job progress
 //! mxstab codes [--format e4m3]                  # print the element-format code table
 //! mxstab fit --csv <file>                       # Chinchilla fit over (N,D,loss) rows
 //! ```
+//!
+//! `mxstab sweep` *without* `--spool` stays an alias for `experiment`.
+//! With `--spool` it enqueues the job grid into a work-queue directory
+//! and drains it with N in-process workers (or `--procs N` subprocesses
+//! running `sweep-worker`). Workers lease jobs by atomic rename,
+//! heartbeat every step, checkpoint every `--checkpoint-every` steps,
+//! and publish results exactly once; a killed worker's lease goes stale
+//! and is reclaimed by a sibling, which resumes from the newest valid
+//! checkpoint with a bitwise-identical trajectory. `MXSTAB_FAULT=
+//! "kill:<worker>@<step>[,stall-heartbeat:<worker>]"` injects faults
+//! into real runs (CI's `sweep-fault-e2e` job).
 //!
 //! The default backend is **native**: the pure-rust packed-MX trainer
 //! that runs on a bare machine. It serves both workloads — the
@@ -19,12 +35,15 @@
 //! `--backend pjrt` executes compiled HLO bundles instead and needs
 //! `--features xla` plus a real PJRT binding (DESIGN.md §6).
 
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 use mxstab::analysis::{fit_chinchilla, LossPoint};
 use mxstab::config::Config;
-use mxstab::coordinator::{Intervention, LrSchedule, Policy, RunConfig, Sweeper};
+use mxstab::coordinator::{
+    run_worker, Intervention, Job, LrSchedule, Policy, RunConfig, Spool, Sweeper, WorkerConfig,
+};
 use mxstab::experiments;
 use mxstab::formats::spec::{Fmt, FormatId};
 use mxstab::runtime::{Backend, Engine, NativeEngine};
@@ -271,6 +290,194 @@ fn cmd_fit(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Expand `--bundles/--fmts/--lrs/--seeds` into the spooled job grid.
+fn spool_jobs(args: &Args) -> Result<Vec<Job>> {
+    let split = |key: &str, default: &str| -> Vec<String> {
+        args.get_or(key, default)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect()
+    };
+    let bundles = split("bundles", "lm_L1_D32_H1_T32_V64");
+    let fmts = split("fmts", "e4m3-e4m3");
+    let lrs = split("lrs", "1e-3");
+    let seeds = split("seeds", "0");
+    let steps: usize = args.parse_or("steps", 60usize)?;
+    let log_every: usize = args.parse_or("log-every", 1usize)?;
+    let mut jobs = Vec::new();
+    for bundle in &bundles {
+        for fmt_spec in &fmts {
+            let fmt = parse_fmt(fmt_spec)?;
+            for lr_s in &lrs {
+                let lr: f32 = lr_s.parse().map_err(|_| anyhow!("bad lr {lr_s:?}"))?;
+                for seed_s in &seeds {
+                    let seed: i32 =
+                        seed_s.parse().map_err(|_| anyhow!("bad seed {seed_s:?}"))?;
+                    let name = format!("{bundle}_{}_lr{lr:.0e}_s{seed}", fmt.label());
+                    let mut cfg = RunConfig::new(&name, fmt, lr, steps);
+                    cfg.seed = seed;
+                    cfg.log_every = log_every;
+                    jobs.push(Job { bundle: bundle.clone(), cfg });
+                }
+            }
+        }
+    }
+    Ok(jobs)
+}
+
+fn print_spool_status(spool: &Spool, timeout_ms: u64) -> Result<()> {
+    let st = spool.status(timeout_ms)?;
+    println!(
+        "spool {}: pending {} | leased {} ({} stale) | done {} | failed {}",
+        spool.root().display(),
+        st.pending.len(),
+        st.leased.len(),
+        st.leased.iter().filter(|l| l.stale).count(),
+        st.done.len(),
+        st.failed.len()
+    );
+    let mut t = Table::new(&["job", "state", "worker", "step", "hb age ms"]);
+    let dash = || "-".to_string();
+    for id in &st.pending {
+        // A reclaimed job waiting in pending/ still shows its progress.
+        let step = spool.load_progress(id).map(|p| p.next_step).unwrap_or(0);
+        t.row(vec![id.clone(), "pending".into(), dash(), step.to_string(), dash()]);
+    }
+    for l in &st.leased {
+        t.row(vec![
+            l.id.clone(),
+            if l.stale { "stale".into() } else { "leased".into() },
+            l.worker.clone(),
+            l.step.to_string(),
+            l.age_ms.to_string(),
+        ]);
+    }
+    for id in &st.done {
+        t.row(vec![id.clone(), "done".into(), dash(), dash(), dash()]);
+    }
+    for id in &st.failed {
+        t.row(vec![id.clone(), "failed".into(), dash(), dash(), dash()]);
+    }
+    print!("{}", t.text());
+    Ok(())
+}
+
+fn cmd_spool_sweep(engine: Arc<NativeEngine>, args: &Args) -> Result<()> {
+    mxstab::util::faults::arm_from_env();
+    let root = PathBuf::from(args.get("spool").expect("--spool checked by caller"));
+    let spool = Spool::init(&root)?;
+    let mut queued = 0usize;
+    for job in spool_jobs(args)? {
+        match spool.enqueue(&job) {
+            Ok(_) => queued += 1,
+            Err(e) => eprintln!("skip: {e:#}"),
+        }
+    }
+    println!("spool {}: {queued} job(s) enqueued", root.display());
+    let checkpoint_every: usize = args.parse_or("checkpoint-every", 10usize)?;
+    let lease_timeout_ms: u64 = args.parse_or("lease-timeout-ms", 30_000u64)?;
+
+    if args.get("procs").is_some() {
+        // Subprocess workers: each runs `mxstab sweep-worker <spool>`.
+        let procs: usize = args.parse_or("procs", 2usize)?.max(1);
+        let exe = std::env::current_exe()?;
+        let mut children = Vec::new();
+        for i in 0..procs {
+            let id = format!("p{i}");
+            let child = std::process::Command::new(&exe)
+                .arg("sweep-worker")
+                .arg(root.as_os_str())
+                .args(["--id", &id])
+                .args(["--checkpoint-every", &checkpoint_every.to_string()])
+                .args(["--lease-timeout-ms", &lease_timeout_ms.to_string()])
+                .spawn()
+                .with_context(|| format!("spawning sweep-worker {id}"))?;
+            children.push((id, child));
+        }
+        for (id, mut child) in children {
+            let status = child.wait()?;
+            println!("[{id}] exit: {status}");
+        }
+    } else {
+        // In-process workers (the test/CI path): scoped threads whose
+        // compute fans into the shared pool.
+        let workers: usize = args.parse_or("workers", 2usize)?.max(1);
+        let sweeper = Sweeper::new(engine);
+        let mut reports = Vec::new();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|i| {
+                    let (sweeper, spool) = (&sweeper, &spool);
+                    let mut w = WorkerConfig::new(&format!("w{i}"));
+                    w.checkpoint_every = checkpoint_every;
+                    w.lease_timeout_ms = lease_timeout_ms;
+                    w.poll_ms = 50;
+                    s.spawn(move || (w.id.clone(), run_worker(sweeper, spool, &w)))
+                })
+                .collect();
+            for h in handles {
+                reports.push(h.join().expect("worker thread panicked"));
+            }
+        });
+        for (id, rep) in reports {
+            match rep {
+                Ok(r) => println!(
+                    "[{id}] completed={} failed={} reclaimed={}{}",
+                    r.completed.len(),
+                    r.failed.len(),
+                    r.reclaimed.len(),
+                    if r.killed { " KILLED" } else { "" }
+                ),
+                Err(e) => eprintln!("[{id}] worker error: {e:#}"),
+            }
+        }
+    }
+    print_spool_status(&spool, lease_timeout_ms)
+}
+
+fn cmd_sweep_worker(engine: Arc<NativeEngine>, args: &Args) -> Result<()> {
+    mxstab::util::faults::arm_from_env();
+    let root = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("spool"))
+        .ok_or_else(|| anyhow!("usage: mxstab sweep-worker <spool-dir>"))?;
+    let spool = Spool::open(Path::new(root))?;
+    let default_id = format!("pid{}", std::process::id());
+    let mut w = WorkerConfig::new(args.get_or("id", &default_id));
+    w.checkpoint_every = args.parse_or("checkpoint-every", 10usize)?;
+    w.lease_timeout_ms = args.parse_or("lease-timeout-ms", 30_000u64)?;
+    w.poll_ms = args.parse_or("poll-ms", 200u64)?;
+    w.drain = !args.flag("watch");
+    let report = run_worker(&Sweeper::new(engine), &spool, &w)?;
+    println!(
+        "[{}] completed={} failed={} reclaimed={}",
+        w.id,
+        report.completed.len(),
+        report.failed.len(),
+        report.reclaimed.len()
+    );
+    if report.killed {
+        // Simulated SIGKILL: die immediately, skipping all cleanup, with
+        // the conventional fatal-signal exit code.
+        std::process::exit(137);
+    }
+    Ok(())
+}
+
+fn cmd_sweep_status(args: &Args) -> Result<()> {
+    let root = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("spool"))
+        .ok_or_else(|| anyhow!("usage: mxstab sweep-status <spool-dir>"))?;
+    let spool = Spool::open(Path::new(root))?;
+    print_spool_status(&spool, args.parse_or("lease-timeout-ms", 30_000u64)?)
+}
+
 fn native_engine(args: &Args) -> Result<Arc<NativeEngine>> {
     // Only an explicit --batch overrides; otherwise each workload keeps
     // its own default (256 proxy rows / 16 LM token rows).
@@ -327,6 +534,17 @@ fn main() -> Result<()> {
             }
             _ => Err(unknown_backend()),
         },
+        // `sweep --spool` is the work-queue coordinator (native only);
+        // `sweep` without it stays an alias for `experiment`.
+        Some("sweep") if args.get("spool").is_some() => match backend.as_str() {
+            "native" => cmd_spool_sweep(native_engine(&args)?, &args),
+            _ => bail!("spooled sweeps run on the native backend only"),
+        },
+        Some("sweep-worker") => match backend.as_str() {
+            "native" => cmd_sweep_worker(native_engine(&args)?, &args),
+            _ => bail!("spool workers run on the native backend only"),
+        },
+        Some("sweep-status") => cmd_sweep_status(&args),
         Some("experiment") | Some("sweep") => match backend.as_str() {
             "native" => cmd_experiment(native_engine(&args)?, cfg, &args),
             "pjrt" | "xla" => {
@@ -348,8 +566,8 @@ fn main() -> Result<()> {
                 eprintln!("unknown subcommand {o:?}\n");
             }
             eprintln!(
-                "usage: mxstab <info|train|experiment|codes|fit> \
-                 [--backend native|pjrt] [options]\n\
+                "usage: mxstab <info|train|experiment|sweep|sweep-worker|sweep-status|\
+                 codes|fit> [--backend native|pjrt] [options]\n\
                  see rust/src/main.rs header for details"
             );
             Ok(())

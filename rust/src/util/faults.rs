@@ -1,0 +1,214 @@
+//! Fault-injection registry for the orchestration layer.
+//!
+//! The spool/worker subsystem (`coordinator::{spool, worker}`) is a
+//! crash-tolerance story, so its tests must be able to *cause* crashes
+//! deterministically: kill a worker at a chosen training step, stall its
+//! heartbeats so a live lease goes stale, or tear a file write in half.
+//! This module is the switchboard: production code calls [`check`] at
+//! named fault points (zero-cost when nothing is armed — one relaxed
+//! atomic load), and tests call [`arm`] to schedule actions at those
+//! points.
+//!
+//! Fault points are matched by `(point, scope, step)`:
+//! * `point` — the static site name, e.g. `"worker.step"`, `"ckpt.state"`,
+//!   `"spool.heartbeat"`, `"fsio.write"`.
+//! * `scope` — a dynamic discriminator (worker id, file label, run name).
+//!   A fault with `scope: Some(s)` only fires when the hit's scope
+//!   contains `s`; tests use unique scopes so parallel tests in the same
+//!   process never trip each other's faults.
+//! * `step` — fires once the hit's step reaches `at_step` (sites without
+//!   a step notion pass 0 and arm with `at_step: None`).
+//!
+//! Each armed fault fires at most `hits` times, then disarms itself.
+//! [`clear_scope`] removes a test's leftovers without disturbing others.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// What happens when an armed fault fires.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Simulate `SIGKILL`: the worker unwinds immediately via
+    /// [`KilledByFault`] and performs **no** cleanup — its lease file and
+    /// heartbeat stay behind exactly as a dead process would leave them.
+    Kill,
+    /// Suppress heartbeat writes so a *live* lease goes stale (tests the
+    /// reclaim-vs-zombie race and the exactly-once completion commit).
+    StallHeartbeat,
+    /// Tear the guarded write: only the first `keep` bytes reach the
+    /// final path, then the operation fails as if the process died
+    /// mid-write (tests torn-file detection on readers).
+    TornWrite { keep: usize },
+    /// Fail the guarded operation with an injected error.
+    Fail,
+}
+
+/// Panic payload used by [`FaultAction::Kill`] sites. Callers that
+/// `catch_unwind` must check for this payload and treat it as worker
+/// death (no cleanup, no error log) rather than a job failure.
+#[derive(Debug)]
+pub struct KilledByFault;
+
+/// One armed fault.
+#[derive(Debug, Clone)]
+pub struct Fault {
+    pub point: &'static str,
+    /// Fires only when the hit's scope contains this substring.
+    pub scope: Option<String>,
+    /// Fires only once the hit's step is `>=` this.
+    pub at_step: Option<usize>,
+    pub action: FaultAction,
+    /// Remaining trigger count (decremented per fire; 0 = disarmed).
+    pub hits: usize,
+}
+
+impl Fault {
+    pub fn new(point: &'static str, action: FaultAction) -> Fault {
+        Fault { point, scope: None, at_step: None, action, hits: 1 }
+    }
+
+    /// Kill the worker whose id contains `scope` at training step `step`.
+    pub fn kill_worker(scope: &str, step: usize) -> Fault {
+        Fault {
+            scope: Some(scope.to_string()),
+            at_step: Some(step),
+            ..Fault::new("worker.step", FaultAction::Kill)
+        }
+    }
+
+    /// Stall every heartbeat of the worker whose id contains `scope`.
+    pub fn stall_heartbeat(scope: &str) -> Fault {
+        Fault {
+            scope: Some(scope.to_string()),
+            hits: usize::MAX,
+            ..Fault::new("worker.heartbeat", FaultAction::StallHeartbeat)
+        }
+    }
+
+    pub fn with_scope(mut self, scope: &str) -> Fault {
+        self.scope = Some(scope.to_string());
+        self
+    }
+
+    pub fn at_step(mut self, step: usize) -> Fault {
+        self.at_step = Some(step);
+        self
+    }
+}
+
+static ARMED: AtomicUsize = AtomicUsize::new(0);
+static REGISTRY: Mutex<Vec<Fault>> = Mutex::new(Vec::new());
+
+/// Arm a fault. It stays armed until it has fired `hits` times or is
+/// cleared.
+pub fn arm(fault: Fault) {
+    let mut reg = REGISTRY.lock().unwrap();
+    reg.push(fault);
+    ARMED.store(reg.len(), Ordering::SeqCst);
+}
+
+/// Disarm every fault whose scope contains `scope` (test teardown).
+pub fn clear_scope(scope: &str) {
+    let mut reg = REGISTRY.lock().unwrap();
+    reg.retain(|f| f.scope.as_deref().map_or(true, |s| !s.contains(scope) && !scope.contains(s)));
+    ARMED.store(reg.len(), Ordering::SeqCst);
+}
+
+/// Disarm everything (only safe when no other test shares the process).
+pub fn clear_all() {
+    let mut reg = REGISTRY.lock().unwrap();
+    reg.clear();
+    ARMED.store(0, Ordering::SeqCst);
+}
+
+/// Fault-point hook: returns the action to take, if any fault matches.
+/// The fast path (nothing armed anywhere) is a single atomic load.
+pub fn check(point: &str, scope: &str, step: usize) -> Option<FaultAction> {
+    if ARMED.load(Ordering::Relaxed) == 0 {
+        return None;
+    }
+    let mut reg = REGISTRY.lock().unwrap();
+    let i = reg.iter().position(|f| {
+        f.hits > 0
+            && f.point == point
+            && f.scope.as_deref().map_or(true, |s| scope.contains(s))
+            && f.at_step.map_or(true, |s| step >= s)
+    })?;
+    if reg[i].hits != usize::MAX {
+        reg[i].hits -= 1;
+    }
+    let action = reg[i].action.clone();
+    if reg[i].hits == 0 {
+        reg.remove(i);
+    }
+    ARMED.store(reg.len(), Ordering::SeqCst);
+    Some(action)
+}
+
+/// Arm faults from an environment spec — the CLI-level hook CI's
+/// `sweep-fault-e2e` job uses to inject failures into a real `mxstab
+/// sweep` invocation without a test harness:
+/// `MXSTAB_FAULT="kill:<worker>@<step>[,stall-heartbeat:<worker>]"`.
+pub fn arm_from_env() {
+    let Ok(spec) = std::env::var("MXSTAB_FAULT") else {
+        return;
+    };
+    for part in spec.split(',').filter(|s| !s.is_empty()) {
+        let (kind, rest) = part.split_once(':').unwrap_or((part, ""));
+        match kind {
+            "kill" => {
+                let (scope, step) = rest.split_once('@').unwrap_or((rest, "0"));
+                let step = step.parse().unwrap_or(0);
+                arm(Fault::kill_worker(scope, step));
+            }
+            "stall-heartbeat" => arm(Fault::stall_heartbeat(rest)),
+            other => eprintln!("MXSTAB_FAULT: unknown fault kind {other:?} (ignored)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_is_none() {
+        assert_eq!(check("faults.test.nope", "faults_t0", 0), None);
+    }
+
+    #[test]
+    fn scope_and_step_matching() {
+        arm(Fault::kill_worker("faults_t1_w", 30));
+        // Wrong scope: never fires.
+        assert_eq!(check("worker.step", "other_worker", 99), None);
+        // Right scope, step too early: not yet.
+        assert_eq!(check("worker.step", "faults_t1_w0", 29), None);
+        // Fires at step >= 30, exactly once.
+        assert_eq!(check("worker.step", "faults_t1_w0", 30), Some(FaultAction::Kill));
+        assert_eq!(check("worker.step", "faults_t1_w0", 31), None);
+        clear_scope("faults_t1");
+    }
+
+    #[test]
+    fn stall_fires_repeatedly_until_cleared() {
+        arm(Fault::stall_heartbeat("faults_t2_w"));
+        for step in 0..5 {
+            assert_eq!(
+                check("worker.heartbeat", "faults_t2_w1", step),
+                Some(FaultAction::StallHeartbeat)
+            );
+        }
+        clear_scope("faults_t2");
+        assert_eq!(check("worker.heartbeat", "faults_t2_w1", 9), None);
+    }
+
+    #[test]
+    fn torn_write_plan_carries_keep() {
+        arm(Fault::new("fsio.write", FaultAction::TornWrite { keep: 7 }).with_scope("faults_t3"));
+        assert_eq!(
+            check("fsio.write", "faults_t3_label", 0),
+            Some(FaultAction::TornWrite { keep: 7 })
+        );
+        clear_scope("faults_t3");
+    }
+}

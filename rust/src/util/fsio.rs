@@ -1,0 +1,199 @@
+//! Crash-safe file I/O primitives for the orchestration layer.
+//!
+//! Everything the spool/worker/checkpoint machinery persists goes through
+//! these helpers so the discipline lives in one place:
+//!
+//! * [`write_atomic`] — write-to-temp + rename. A reader never observes a
+//!   half-written file: it sees the old content or the new content,
+//!   nothing in between. The temp file is fsynced before the rename and
+//!   the parent directory is fsynced after (best-effort on non-unix).
+//! * [`commit_new`] — exactly-once publication via `hard_link`, which
+//!   (unlike `rename`) fails if the destination already exists. Two
+//!   workers racing to finish the same job both build their result, but
+//!   exactly one link lands in `done/`.
+//! * [`fnv64`] — FNV-1a content checksum recorded beside checkpoint blobs
+//!   so torn writes (truncation *or* scrambled middles) are detected at
+//!   load time, not silently restored.
+//!
+//! [`write_atomic`] is also a fault point (`"fsio.write"`, scoped by the
+//! caller's label): tests interpose torn/partial writes here to prove the
+//! readers degrade instead of panicking.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::faults::{self, FaultAction};
+
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A process-unique sibling temp path for `path` (same directory, so the
+/// final `rename` never crosses a filesystem boundary).
+pub fn temp_sibling(path: &Path) -> PathBuf {
+    let file = path.file_name().and_then(|f| f.to_str()).unwrap_or("file");
+    let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    path.with_file_name(format!(".{file}.tmp-{}-{seq}", std::process::id()))
+}
+
+/// Best-effort directory fsync so a rename survives power loss (“fsync
+/// dir where cheap”). Errors are ignored: not every filesystem supports
+/// opening directories, and losing the *durability* upgrade must never
+/// fail the write itself.
+pub fn fsync_dir(dir: &Path) {
+    #[cfg(unix)]
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+    #[cfg(not(unix))]
+    let _ = dir;
+}
+
+/// Atomically replace `path` with `bytes`: write to a sibling temp file,
+/// fsync it, rename over `path`, fsync the parent directory.
+///
+/// `label` names the write for fault injection (e.g. `"ckpt.meta"`,
+/// `"spool.heartbeat"`); a `TornWrite` fault writes only a prefix of
+/// `bytes` **directly to the final path** — modelling a crash on a
+/// filesystem without the temp+rename discipline — and then fails the
+/// call as the crash would.
+pub fn write_atomic(path: &Path, bytes: &[u8], label: &str) -> Result<()> {
+    match faults::check("fsio.write", label, 0) {
+        Some(FaultAction::TornWrite { keep }) => {
+            let keep = keep.min(bytes.len());
+            std::fs::write(path, &bytes[..keep])
+                .with_context(|| format!("torn write to {}", path.display()))?;
+            return Err(anyhow!("injected torn write ({label}): {keep}/{} bytes", bytes.len()));
+        }
+        Some(FaultAction::Fail) => return Err(anyhow!("injected write failure ({label})")),
+        _ => {}
+    }
+    let tmp = temp_sibling(path);
+    let res = (|| -> Result<()> {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(())
+    })();
+    if res.is_err() {
+        std::fs::remove_file(&tmp).ok();
+    } else if let Some(dir) = path.parent() {
+        fsync_dir(dir);
+    }
+    res
+}
+
+/// Publish `tmp` at `dst` exactly once: succeeds (`Ok(true)`) for the
+/// first caller, returns `Ok(false)` if `dst` already exists (someone
+/// else won the race). The temp file is consumed either way.
+///
+/// Built on `hard_link` because it is the one std primitive that is both
+/// atomic and refuses to replace an existing destination — the property
+/// that makes double-leased job completions collapse to one `done/` log.
+pub fn commit_new(tmp: &Path, dst: &Path) -> Result<bool> {
+    let res = match std::fs::hard_link(tmp, dst) {
+        Ok(()) => {
+            if let Some(dir) = dst.parent() {
+                fsync_dir(dir);
+            }
+            Ok(true)
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => Ok(false),
+        Err(e) => Err(anyhow!("publishing {}: {e}", dst.display())),
+    };
+    std::fs::remove_file(tmp).ok();
+    res
+}
+
+/// FNV-1a 64-bit hash — the checkpoint content checksum. Not
+/// cryptographic; catches truncation and torn/scrambled bytes.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Milliseconds since the unix epoch (heartbeat timestamps).
+pub fn now_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::faults::{Fault, FaultAction};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("mxstab_fsio_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn write_atomic_replaces_content() {
+        let dir = tmpdir("replace");
+        let p = dir.join("a.json");
+        write_atomic(&p, b"old", "fsio_t_replace").unwrap();
+        write_atomic(&p, b"new content", "fsio_t_replace").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"new content");
+        // No temp litter left behind.
+        let litter: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp-"))
+            .collect();
+        assert!(litter.is_empty(), "temp files not cleaned: {litter:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_write_fault_leaves_prefix_and_fails() {
+        let dir = tmpdir("torn");
+        let p = dir.join("b.bin");
+        faults::arm(Fault::new("fsio.write", FaultAction::TornWrite { keep: 4 })
+            .with_scope("fsio_t_torn"));
+        let err = write_atomic(&p, b"0123456789", "fsio_t_torn").unwrap_err();
+        assert!(format!("{err:#}").contains("torn"), "{err:#}");
+        assert_eq!(std::fs::read(&p).unwrap(), b"0123", "prefix visible at the final path");
+        // Fault disarmed after one hit: the retry succeeds.
+        write_atomic(&p, b"0123456789", "fsio_t_torn").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"0123456789");
+        faults::clear_scope("fsio_t_torn");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn commit_new_is_exactly_once() {
+        let dir = tmpdir("commit");
+        let dst = dir.join("done.jsonl");
+        let t1 = dir.join("t1");
+        let t2 = dir.join("t2");
+        std::fs::write(&t1, b"winner").unwrap();
+        std::fs::write(&t2, b"loser").unwrap();
+        assert!(commit_new(&t1, &dst).unwrap(), "first commit wins");
+        assert!(!commit_new(&t2, &dst).unwrap(), "second commit loses");
+        assert_eq!(std::fs::read(&dst).unwrap(), b"winner");
+        assert!(!t1.exists() && !t2.exists(), "temps consumed");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fnv64_detects_mutation() {
+        let a = fnv64(b"some checkpoint blob");
+        let mut bytes = b"some checkpoint blob".to_vec();
+        bytes[5] ^= 1;
+        assert_ne!(a, fnv64(&bytes));
+        assert_ne!(a, fnv64(&b"some checkpoint blo"[..]), "truncation changes the hash");
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325, "offset basis");
+    }
+}

@@ -13,9 +13,15 @@
 //! * [`prop`] — miniature property-testing harness
 //! * [`pool`] — persistent worker pool with scoped fork-join (rayon-shaped)
 //! * [`arena`] — recycling scratch-buffer arena for the execution layer
+//! * [`fsio`] — crash-safe file I/O (atomic replace, exactly-once commit,
+//!   content checksums) for the spool/checkpoint layer
+//! * [`faults`] — fault-injection registry (kill/stall/torn-write) driven
+//!   by the orchestration tests
 
 pub mod arena;
 pub mod args;
+pub mod faults;
+pub mod fsio;
 pub mod json;
 pub mod pool;
 pub mod prop;

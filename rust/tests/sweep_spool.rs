@@ -1,0 +1,242 @@
+//! Adversarial integration tests for the spooled sweep coordinator:
+//! lease races, injected worker kills, stale-lease reclaim, exactly-once
+//! completion, and the headline invariant — a crash-resumed job's
+//! `done/<id>.jsonl` is **bitwise identical** to an uninterrupted run.
+//!
+//! All tests share one process (cargo runs them on parallel threads), so
+//! every test uses scope-unique worker ids / run names and clears its
+//! faults on exit — the fault registry only fires on matching scopes.
+
+use std::path::{Path, PathBuf};
+
+use mxstab::coordinator::{run_worker, Job, RunConfig, RunLog, Spool, Sweeper, WorkerConfig};
+use mxstab::formats::spec::{Fmt, FormatId};
+use mxstab::runtime::NativeEngine;
+use mxstab::util::faults::{self, Fault};
+
+fn tdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mxstab_spool_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+/// Tiny quantized transformer-LM job — big enough to have real state
+/// (embeddings, attention, Adam moments), small enough for seconds.
+fn lm_job(name: &str, seed: i32, steps: usize) -> Job {
+    let mut cfg = RunConfig::new(name, Fmt::full(FormatId::E4M3, FormatId::E4M3), 1e-3, steps);
+    cfg.seed = seed;
+    cfg.log_every = 1;
+    Job { bundle: "lm_L1_D32_H1_T32_V64".into(), cfg }
+}
+
+fn sweeper() -> Sweeper<NativeEngine> {
+    Sweeper::new(NativeEngine::with_batch(2).unwrap())
+}
+
+fn wcfg(id: &str, lease_timeout_ms: u64) -> WorkerConfig {
+    let mut w = WorkerConfig::new(id);
+    w.checkpoint_every = 10;
+    w.lease_timeout_ms = lease_timeout_ms;
+    w.poll_ms = 20;
+    w
+}
+
+fn jsonl_count(dir: &Path, sub: &str) -> usize {
+    std::fs::read_dir(dir.join(sub))
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .filter(|e| e.file_name().to_string_lossy().ends_with(".jsonl"))
+                .count()
+        })
+        .unwrap_or(0)
+}
+
+#[test]
+fn exactly_one_worker_wins_each_lease() {
+    let dir = tdir("race");
+    let spool = Spool::init(&dir).unwrap();
+    for round in 0..8 {
+        spool.enqueue(&lm_job(&format!("race_{round}"), 0, 1)).unwrap();
+        let s = &spool;
+        let wins: Vec<bool> = std::thread::scope(|sc| {
+            let handles: Vec<_> = (0..2)
+                .map(|w| {
+                    sc.spawn(move || s.try_lease(&format!("race_w{w}")).unwrap().is_some())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let winners = wins.iter().filter(|w| **w).count();
+        assert_eq!(winners, 1, "round {round}: exactly one lease winner, got {winners}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The tentpole invariant: kill a worker mid-job, let a sibling reclaim
+/// and resume from the checkpoint ring, and the final `done/` log must
+/// be byte-identical to both (a) an uninterrupted spooled run and (b) a
+/// plain single-process `Runner` run with no spool at all.
+#[test]
+fn killed_worker_resumes_bitwise_identical() {
+    let dir_g = tdir("parity_gold");
+    let dir_f = tdir("parity_fault");
+    let jobs = [lm_job("parity_a", 1, 60), lm_job("parity_b", 2, 60)];
+    let sw = sweeper();
+
+    // Golden: uninterrupted single-worker spooled run.
+    let golden = Spool::init(&dir_g).unwrap();
+    for j in &jobs {
+        golden.enqueue(j).unwrap();
+    }
+    let rep = run_worker(&sw, &golden, &wcfg("parity_gold_w", 60_000)).unwrap();
+    assert_eq!(rep.completed.len(), 2);
+    assert!(!rep.killed);
+
+    // Reference: the spool machinery must not perturb the trajectory.
+    let direct = sw.runner(&jobs[0].bundle).unwrap().run(&jobs[0].cfg).unwrap();
+    assert_eq!(
+        RunLog::rows_jsonl(&direct.log.rows).into_bytes(),
+        std::fs::read(dir_g.join("done/parity_a.jsonl")).unwrap(),
+        "spooled run must match a plain Runner run byte-for-byte"
+    );
+
+    // Faulted: two workers, one killed mid-job at step 35 (checkpoints
+    // land every 10 steps, so the survivor resumes at 30 and recomputes
+    // 30..35 before continuing).
+    faults::arm(Fault::kill_worker("parity_kw0", 35));
+    let faulted = Spool::init(&dir_f).unwrap();
+    for j in &jobs {
+        faulted.enqueue(j).unwrap();
+    }
+    std::thread::scope(|sc| {
+        let (sw, faulted) = (&sw, &faulted);
+        let h0 = sc.spawn(move || run_worker(sw, faulted, &wcfg("parity_kw0", 400)).unwrap());
+        let h1 = sc.spawn(move || run_worker(sw, faulted, &wcfg("parity_kw1", 400)).unwrap());
+        let (r0, r1) = (h0.join().unwrap(), h1.join().unwrap());
+        assert!(r0.killed, "the scoped kill fault must hit worker parity_kw0");
+        assert!(!r1.killed);
+        assert!(!r1.reclaimed.is_empty(), "the survivor reclaims the dead worker's lease");
+    });
+    faults::clear_scope("parity_kw0");
+
+    // Every job reached done/ exactly once, bitwise equal to golden.
+    assert_eq!(jsonl_count(&dir_f, "done"), 2);
+    assert_eq!(jsonl_count(&dir_f, "failed"), 0);
+    for id in ["parity_a", "parity_b"] {
+        assert_eq!(
+            std::fs::read(dir_f.join(format!("done/{id}.jsonl"))).unwrap(),
+            std::fs::read(dir_g.join(format!("done/{id}.jsonl"))).unwrap(),
+            "{id}: resumed trajectory must be bitwise identical"
+        );
+    }
+    std::fs::remove_dir_all(&dir_g).ok();
+    std::fs::remove_dir_all(&dir_f).ok();
+}
+
+/// A worker with stalled heartbeats is killed mid-job; its lease (whose
+/// heartbeat never advanced past the initial lease stamp) goes stale and
+/// a live worker reclaims and finishes from the checkpoint ring.
+#[test]
+fn stalled_heartbeat_lease_is_reclaimed() {
+    let dir = tdir("stall");
+    let spool = Spool::init(&dir).unwrap();
+    spool.enqueue(&lm_job("stall_a", 3, 20)).unwrap();
+    let sw = sweeper();
+
+    faults::arm(Fault::stall_heartbeat("stall_zw"));
+    faults::arm(Fault::kill_worker("stall_zw", 15));
+    let rep = run_worker(&sw, &spool, &wcfg("stall_zw", 60_000)).unwrap();
+    assert!(rep.killed);
+    faults::clear_scope("stall_zw");
+
+    std::thread::sleep(std::time::Duration::from_millis(120));
+    let rep = run_worker(&sw, &spool, &wcfg("stall_live", 100)).unwrap();
+    assert_eq!(rep.reclaimed, vec!["stall_a".to_string()]);
+    assert_eq!(rep.completed, vec!["stall_a".to_string()]);
+    let winner = std::fs::read(dir.join("done/stall_a.jsonl")).unwrap();
+    let direct = sw.runner("lm_L1_D32_H1_T32_V64").unwrap();
+    let out = direct.run(&lm_job("stall_a", 3, 20).cfg).unwrap();
+    assert_eq!(RunLog::rows_jsonl(&out.log.rows).into_bytes(), winner);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A zombie that wakes up *after* its job was reclaimed and completed
+/// must lose the exactly-once commit and leave the winner's log intact.
+#[test]
+fn duplicate_completion_loses_exactly_once_commit() {
+    let dir = tdir("dup_commit");
+    let spool = Spool::init(&dir).unwrap();
+    let job = lm_job("dupc_a", 4, 20);
+    spool.enqueue(&job).unwrap();
+    let sw = sweeper();
+
+    // Zombie leases, then goes silent without ever heartbeating again.
+    let zombie = spool.try_lease("dupc_zombie").unwrap().expect("lease");
+    std::thread::sleep(std::time::Duration::from_millis(120));
+
+    // A live worker reclaims the stale lease and finishes the job.
+    let rep = run_worker(&sw, &spool, &wcfg("dupc_live", 100)).unwrap();
+    assert_eq!(rep.reclaimed, vec!["dupc_a".to_string()]);
+    assert_eq!(rep.completed, vec!["dupc_a".to_string()]);
+    let winner = std::fs::read(dir.join("done/dupc_a.jsonl")).unwrap();
+
+    // The zombie finishes anyway and tries to publish: it must lose.
+    let out = sw.runner(&job.bundle).unwrap().run(&job.cfg).unwrap();
+    assert!(!spool.complete(&zombie, &out.log).unwrap(), "duplicate completion must lose");
+    assert_eq!(std::fs::read(dir.join("done/dupc_a.jsonl")).unwrap(), winner);
+    assert_eq!(jsonl_count(&dir, "done"), 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Killed before the first checkpoint: the reclaimer finds no usable
+/// ring entry and restarts from scratch — still bitwise identical.
+#[test]
+fn reclaim_before_first_checkpoint_restarts_from_scratch() {
+    let dir = tdir("fresh");
+    let spool = Spool::init(&dir).unwrap();
+    let job = lm_job("fresh_a", 5, 25);
+    spool.enqueue(&job).unwrap();
+    let sw = sweeper();
+
+    faults::arm(Fault::kill_worker("fresh_kw", 3));
+    let rep = run_worker(&sw, &spool, &wcfg("fresh_kw", 60_000)).unwrap();
+    assert!(rep.killed);
+    faults::clear_scope("fresh_kw");
+    assert!(
+        spool.checkpoints().latest("fresh_a").is_none(),
+        "killed at step 3 with checkpoint_every=10: no checkpoint exists"
+    );
+
+    std::thread::sleep(std::time::Duration::from_millis(120));
+    let rep = run_worker(&sw, &spool, &wcfg("fresh_live", 100)).unwrap();
+    assert_eq!(rep.reclaimed, vec!["fresh_a".to_string()]);
+    assert_eq!(rep.completed, vec!["fresh_a".to_string()]);
+    let direct = sw.runner(&job.bundle).unwrap().run(&job.cfg).unwrap();
+    assert_eq!(
+        RunLog::rows_jsonl(&direct.log.rows).into_bytes(),
+        std::fs::read(dir.join("done/fresh_a.jsonl")).unwrap()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A corrupted pending-job file routes to failed/ with an error-marked
+/// log while sibling jobs complete normally.
+#[test]
+fn corrupt_pending_job_fails_and_siblings_finish() {
+    let dir = tdir("corrupt");
+    let spool = Spool::init(&dir).unwrap();
+    spool.enqueue(&lm_job("corrupt_ok", 7, 15)).unwrap();
+    std::fs::write(dir.join("pending/corrupt_bad.json"), b"{ not json").unwrap();
+    let sw = sweeper();
+
+    let rep = run_worker(&sw, &spool, &wcfg("corrupt_w", 60_000)).unwrap();
+    assert_eq!(rep.completed, vec!["corrupt_ok".to_string()]);
+    assert_eq!(rep.failed, vec!["corrupt_bad".to_string()]);
+    assert!(dir.join("done/corrupt_ok.jsonl").exists());
+    assert!(dir.join("failed/corrupt_bad.jsonl").exists());
+    let summary =
+        std::fs::read_to_string(dir.join("failed/corrupt_bad.summary.json")).unwrap();
+    assert!(summary.contains("error"), "failure summary carries the error: {summary}");
+    assert!(spool.is_idle(), "nothing left queued or leased");
+    std::fs::remove_dir_all(&dir).ok();
+}
