@@ -15,6 +15,8 @@ FP8  E4M3   4      3      8       448         -6
 FP8  E5M2   5      2      15      57344       -14
 FP6  E2M3   2      3      2       7.5         0
 FP6  E3M2   3      2      4       28          -2
+FP4  E2M1   2      1      2       6.0         0
+INT4        1      2      1       3.5         1
 ==========  =====  =====  ======  ==========  =============
 
 ``e_max`` is the exponent of the largest *normal* value — the quantity the
@@ -35,6 +37,8 @@ E4M3 = 2  # MXFP8
 E5M2 = 3  # MXFP8
 E2M3 = 4  # MXFP6
 E3M2 = 5  # MXFP6
+E2M1 = 6  # MXFP4 (sub-byte: two codes per storage byte on the rust side)
+INT4 = 7  # INT4-style fixed-point-per-block (sub-byte, 1 exponent bit)
 
 FORMAT_NAMES = {
     FP32: "fp32",
@@ -43,6 +47,8 @@ FORMAT_NAMES = {
     E5M2: "e5m2",
     E2M3: "e2m3",
     E3M2: "e3m2",
+    E2M1: "e2m1",
+    INT4: "int4",
 }
 FORMAT_IDS = {v: k for k, v in FORMAT_NAMES.items()}
 
@@ -52,9 +58,13 @@ MX_CONSTANTS = {
     E5M2: (5, 2, 15, 57344.0, -14),
     E2M3: (2, 3, 2, 7.5, 0),
     E3M2: (3, 2, 4, 28.0, -2),
+    E2M1: (2, 1, 2, 6.0, 0),
+    INT4: (1, 2, 1, 3.5, 1),
 }
 
 BLOCK_SIZE = 32  # hardware MX block size (k in Algorithm 1)
+BLOCK_SIZES = (16, 32, 64)  # generalized geometries the runtime accepts
+TWO_LEVEL_SCALE_MAX = 448.0  # NVFP4 two-level: per-block scales cap at E4M3 max
 
 # ---------------------------------------------------------------------------
 # Runtime `fmt` vector layout: f32[FMT_LEN], one per training step call.
@@ -68,7 +78,10 @@ QUANT_FWD = 5   # 0/1: quantize forward GEMM operands at all
 QUANT_BWD = 6   # 0/1: quantize backward GEMM operands at all
 QUANT_LN = 7    # 0/1: quantize layer-norm affine (gamma) parameters
 SCALE_BUMP = 8  # 0/1: +1 on the shared exponent (Fig. 7 intervention)
-FMT_LEN = 9
+BLOCK_SIZE_IDX = 9  # block size (16/32/64; 0 decodes as 32)
+TWO_LEVEL = 10      # 0/1: NVFP4-style two-level (fp8 block × fp32 tensor) scaling
+FMT_LEN = 11
+FMT_LEN_V0 = 9      # original (pre-geometry) layout, still accepted by rust
 
 # ---------------------------------------------------------------------------
 # Runtime `hyper` vector layout: f32[HYPER_LEN].
@@ -94,12 +107,18 @@ def make_fmt(
     quant_bwd: bool = True,
     quant_ln: bool = True,
     scale_bump: bool = False,
+    block_size: int = BLOCK_SIZE,
+    two_level: bool = False,
 ):
     """Build the fmt vector (as a plain python list of floats).
 
     Backward formats default to the forward choices, matching the paper's
-    default of using the same element type in both passes.
+    default of using the same element type in both passes.  ``block_size``
+    and ``two_level`` select the generalized block geometry (rust
+    ``BlockGeom``); the defaults reproduce the classic OCP MX layout.
     """
+    if block_size not in BLOCK_SIZES:
+        raise ValueError(f"block_size {block_size} not in {BLOCK_SIZES}")
     g_bwd = a_fwd if g_bwd is None else g_bwd
     w_bwd = w_fwd if w_bwd is None else w_bwd
     a_bwd = a_fwd if a_bwd is None else a_bwd
@@ -113,4 +132,6 @@ def make_fmt(
     v[QUANT_BWD] = 1.0 if quant_bwd else 0.0
     v[QUANT_LN] = 1.0 if quant_ln else 0.0
     v[SCALE_BUMP] = 1.0 if scale_bump else 0.0
+    v[BLOCK_SIZE_IDX] = float(block_size)
+    v[TWO_LEVEL] = 1.0 if two_level else 0.0
     return v

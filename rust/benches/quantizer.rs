@@ -22,8 +22,11 @@
 
 use mxstab::bench::{jnum, smoke_mode, write_json, Bencher};
 use mxstab::formats::kernel::{self, Tier};
-use mxstab::formats::spec::FormatId;
-use mxstab::formats::{dot, gemm, mx_qdq, packed_qdq, PackedMatrix, PackedVec, QdqScratch};
+use mxstab::formats::spec::{BlockGeom, FormatId, BLOCK_SIZES};
+use mxstab::formats::{
+    dot, gemm, mx_qdq, packed_qdq, set_unpacked_subbyte_storage, PackedMatrix, PackedVec,
+    QdqScratch,
+};
 use mxstab::util::json::Json;
 use mxstab::util::rng::Xoshiro256;
 
@@ -33,7 +36,14 @@ fn main() -> anyhow::Result<()> {
     println!("kernel: {} (isa: {})\n", kernel::describe(), kernel::isa_name());
 
     let mut rng = Xoshiro256::seed_from(0);
-    let formats = [FormatId::E4M3, FormatId::E5M2, FormatId::E2M3, FormatId::E3M2];
+    let formats = [
+        FormatId::E4M3,
+        FormatId::E5M2,
+        FormatId::E2M3,
+        FormatId::E3M2,
+        FormatId::E2M1,
+        FormatId::Int4,
+    ];
     let sizes: &[usize] = if smoke_mode() { &[4096] } else { &[4096, 65536, 1 << 20] };
 
     let mut qdq_rows = Vec::new();
@@ -135,6 +145,98 @@ fn main() -> anyhow::Result<()> {
         ])
     };
 
+    // Storage density: effective bytes per element for every format ×
+    // block geometry (exact, from the encoded buffers — not timed). The
+    // acceptance bar for 4-bit formats is ≤ 0.6 bytes/elem at block 32.
+    let storage_rows = {
+        let n = 1 << 14;
+        let x = rng.normal_vec(n);
+        let mut rows = Vec::new();
+        println!("-- storage density (bytes per element) --");
+        for id in formats {
+            for &bs in &BLOCK_SIZES {
+                for two_level in [false, true] {
+                    let geom = BlockGeom::new(bs, two_level);
+                    let p = PackedVec::encode_geom(&x, id, false, geom);
+                    let bpe = p.bytes() as f64 / n as f64;
+                    if id.code_bits() == 4 {
+                        // One-level bs16 pays 2 scale bytes per 16 elems
+                        // (0.625 exactly) — the fine-granularity overhead
+                        // the block-size axis exists to measure.
+                        let bar = if bs == 16 && !two_level { 0.65 } else { 0.6 };
+                        assert!(
+                            bpe <= bar,
+                            "{id:?} bs{bs} 2lvl={two_level}: {bpe} bytes/elem > {bar}"
+                        );
+                    }
+                    rows.push(Json::obj(vec![
+                        ("format", Json::from(id.name())),
+                        ("block_size", Json::Num(bs as f64)),
+                        ("two_level", Json::Bool(two_level)),
+                        ("code_bits", Json::Num(id.code_bits() as f64)),
+                        ("bytes_per_elem", jnum(bpe)),
+                    ]));
+                    if !two_level {
+                        println!("  {:>5} bs{:<2}  {:.4} B/elem", id.name(), bs, bpe);
+                    }
+                }
+            }
+        }
+        println!();
+        Json::Arr(rows)
+    };
+
+    // Sub-byte decode: nibble-packed (two codes per byte, decode4 kernel)
+    // vs byte-expanded storage of the same FP4 data — the decode-MB/s
+    // cost/benefit of halving the code bytes.
+    let subbyte = {
+        let n = *sizes.last().unwrap();
+        let x = rng.normal_vec(n);
+        let bytes = (n * 4) as f64;
+        let mut out = vec![0.0f32; n];
+        let mut rows = Vec::new();
+        for id in [FormatId::E2M1, FormatId::Int4] {
+            let p4 = PackedVec::encode(&x, id, false);
+            assert!(p4.packed4(), "{id:?} must default to nibble storage");
+            set_unpacked_subbyte_storage(true);
+            let p8 = PackedVec::encode(&x, id, false);
+            set_unpacked_subbyte_storage(false);
+            assert!(!p8.packed4());
+            // Both storages must decode to identical bits before timing.
+            let (d4, d8) = (p4.decode(), p8.decode());
+            assert!(
+                d4.iter().zip(&d8).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{id:?}: nibble and byte storage decode diverged"
+            );
+            let r4 = b.run(&format!("decode-packed4/{}/{}", id.name(), n), || {
+                p4.decode_into(&mut out);
+                std::hint::black_box(&out);
+            });
+            let r8 = b.run(&format!("decode-packed8/{}/{}", id.name(), n), || {
+                p8.decode_into(&mut out);
+                std::hint::black_box(&out);
+            });
+            println!(
+                "subbyte decode {}: packed4 {:.2} GB/s vs packed8 {:.2} GB/s ({:.2}x)",
+                id.name(),
+                bytes / r4.mean_s / 1e9,
+                bytes / r8.mean_s / 1e9,
+                r8.mean_s / r4.mean_s
+            );
+            rows.push(Json::obj(vec![
+                ("format", Json::from(id.name())),
+                ("n", Json::Num(n as f64)),
+                ("packed4_decode_mb_per_s", jnum(bytes / r4.mean_s / 1e6)),
+                ("packed8_decode_mb_per_s", jnum(bytes / r8.mean_s / 1e6)),
+                ("packed4_vs_packed8", jnum(r8.mean_s / r4.mean_s)),
+                ("packed4_bytes_per_elem", jnum(p4.bytes() as f64 / n as f64)),
+                ("packed8_bytes_per_elem", jnum(p8.bytes() as f64 / n as f64)),
+            ]));
+        }
+        println!();
+        Json::Arr(rows)
+    };
+
     // Matvec: allocation-per-row scalar reference vs the packed engine.
     let matvec_rows = {
         let (rows, cols) = if smoke_mode() { (64, 512) } else { (256, 4096) };
@@ -177,7 +279,7 @@ fn main() -> anyhow::Result<()> {
 
     let report = Json::obj(vec![
         ("bench", Json::from("quantizer")),
-        ("schema", Json::Num(2.0)),
+        ("schema", Json::Num(3.0)),
         ("measured", Json::Bool(true)),
         ("smoke_mode", Json::Bool(smoke_mode())),
         ("pool_parallelism", Json::Num(mxstab::util::pool::parallelism() as f64)),
@@ -185,6 +287,8 @@ fn main() -> anyhow::Result<()> {
         ("kernel_isa", Json::from(kernel::isa_name())),
         ("headline", headline),
         ("qdq", Json::Arr(qdq_rows)),
+        ("storage", storage_rows),
+        ("subbyte_decode", subbyte),
         ("matvec", matvec_rows),
     ]);
     let path = write_json("BENCH_quantizer.json", &report)?;

@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
 
     let report = Json::obj(vec![
         ("bench", Json::from("step_throughput")),
-        ("schema", Json::Num(2.0)),
+        ("schema", Json::Num(3.0)),
         ("measured", Json::Bool(true)),
         ("smoke_mode", Json::Bool(smoke_mode())),
         ("pool_parallelism", Json::Num(mxstab::util::pool::parallelism() as f64)),
@@ -282,6 +282,7 @@ fn bench_native_step(b: &Bencher) -> anyhow::Result<Json> {
         ("e4m3-full", Fmt::full(FormatId::E4M3, FormatId::E4M3)),
         ("e4m3-bf16act", Fmt::bf16_act(FormatId::E4M3)),
         ("e4m3-fwdonly", Fmt::fwd_only(FormatId::E4M3, FormatId::E4M3)),
+        ("e2m1-full", Fmt::full(FormatId::E2M1, FormatId::E2M1)),
     ];
     let mut rows = Vec::new();
     for (label, fmt) in &schemes {
@@ -347,6 +348,8 @@ fn bench_native_lm_step(b: &Bencher) -> anyhow::Result<(Json, f64, f64)> {
         ("fp32", Fmt::fp32()),
         ("e4m3-full", Fmt::full(FormatId::E4M3, FormatId::E4M3)),
         ("e4m3-bf16act", Fmt::bf16_act(FormatId::E4M3)),
+        // Sub-byte storage: FP4 weights/activations, nibble-packed codes.
+        ("e2m1-full", Fmt::full(FormatId::E2M1, FormatId::E2M1)),
     ];
     let mut rows = Vec::new();
     let mut headline = 0.0f64;

@@ -111,6 +111,25 @@ mod tests {
     }
 
     #[test]
+    fn fp4_census() {
+        // OCP FP4 E2M1: exactly 7 positive codes 0.5, 1, 1.5, 2, 3, 4, 6
+        // (one subnormal 0.5 = 2^(0-1), then bands 0..=2).
+        let f = FormatId::E2M1.elem().unwrap();
+        let codes = positive_codes(&f);
+        assert_eq!(codes, vec![0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn int4_census() {
+        // INT4-style (1,2): a uniform half-step grid 0.5..3.5 — the single
+        // exponent bit only adds one normal band above the subnormal ramp,
+        // so the positive codes are equally spaced like a fixed-point grid.
+        let f = FormatId::Int4.elem().unwrap();
+        let codes = positive_codes(&f);
+        assert_eq!(codes, vec![0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5]);
+    }
+
+    #[test]
     fn overflow_threshold_limits() {
         let f = FormatId::E4M3.elem().unwrap();
         // absmax with mantissa → 2.0: threshold/absmax → 448+16 over 512 ≈ 0.90625

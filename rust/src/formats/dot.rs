@@ -15,8 +15,11 @@
 //! while [`mx_matvec_ref`] keeps the original allocation-per-row shape for
 //! cross-checks and benchmarks.
 
-use super::quant::{block_scale, quantize_elem};
-use super::spec::{ElemFormat, FormatId, BLOCK_SIZE};
+use super::quant::{
+    amax, block_scale, floor_log2, pow2, quantize_elem, two_level_block_eff,
+    two_level_tensor_scale,
+};
+use super::spec::{BlockGeom, ElemFormat, FormatId, BLOCK_SIZE};
 
 /// One MX-encoded block: shared scale + low-precision elements (stored
 /// dequantized *relative to the scale*, i.e. the P_i of Algorithm 1).
@@ -77,6 +80,74 @@ pub fn emulated_dot(a: &[MxBlock], b: &[MxBlock]) -> f32 {
     let mut acc = 0.0f64;
     for (x, y) in da.iter().zip(&db) {
         acc += (*x as f64) * (*y as f64);
+    }
+    acc as f32
+}
+
+/// Per-block effective scale under an arbitrary [`BlockGeom`]: the plain
+/// power-of-two MX scale, or the NVFP4-style fp8-per-block × fp32-per-tensor
+/// product when `two_level` is set. Zero-amax blocks scale to exactly 0.0.
+fn geom_block_scale(
+    block: &[f32],
+    f: &ElemFormat,
+    s_tensor: f32,
+    scale_bump: bool,
+    two_level: bool,
+) -> f32 {
+    let m = amax(block);
+    if m == 0.0 {
+        return 0.0;
+    }
+    if two_level {
+        two_level_block_eff(m, s_tensor, f, scale_bump)
+    } else {
+        pow2(floor_log2(m) - f.emax() + scale_bump as i32)
+    }
+}
+
+/// Geometry-generic scale-carried MX dot product over raw f32 slices: the
+/// scalar oracle the packed engine is property-tested against for every
+/// (block size × scaling mode) combination. Tensor scales for two-level
+/// mode are derived from the slices themselves; when the packed operand was
+/// encoded over a larger tensor (e.g. a whole matrix), use
+/// [`mx_dot_geom_scaled`] with the encoder's tensor scales instead.
+pub fn mx_dot_geom(a: &[f32], b: &[f32], id: FormatId, scale_bump: bool, geom: BlockGeom) -> f32 {
+    let f = id.elem().expect("mx format");
+    let (sa_t, sb_t) = if geom.two_level {
+        (two_level_tensor_scale(a, &f), two_level_tensor_scale(b, &f))
+    } else {
+        (1.0, 1.0)
+    };
+    mx_dot_geom_scaled(a, b, id, scale_bump, geom, sa_t, sb_t)
+}
+
+/// [`mx_dot_geom`] with explicit per-tensor scales (ignored unless
+/// `geom.two_level`). Blocks whose effective scale is 0.0 on either side
+/// contribute nothing, mirroring the packed engine's zero-block skip.
+pub fn mx_dot_geom_scaled(
+    a: &[f32],
+    b: &[f32],
+    id: FormatId,
+    scale_bump: bool,
+    geom: BlockGeom,
+    sa_t: f32,
+    sb_t: f32,
+) -> f32 {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len() % geom.block_size, 0);
+    let f = id.elem().expect("mx format");
+    let mut acc = 0.0f64;
+    for (ca, cb) in a.chunks(geom.block_size).zip(b.chunks(geom.block_size)) {
+        let sa = geom_block_scale(ca, &f, sa_t, scale_bump, geom.two_level);
+        let sb = geom_block_scale(cb, &f, sb_t, scale_bump, geom.two_level);
+        if sa == 0.0 || sb == 0.0 {
+            continue;
+        }
+        let mut inner = 0.0f32;
+        for (&x, &y) in ca.iter().zip(cb) {
+            inner += quantize_elem(x / sa, &f) * quantize_elem(y / sb, &f);
+        }
+        acc += (sa as f64) * (sb as f64) * inner as f64;
     }
     acc as f32
 }
@@ -183,6 +254,25 @@ mod tests {
         let z = encode(&vec![0.0; 32], &f, 0);
         let y = encode(&vec![1.0; 32], &f, 0);
         assert_eq!(mx_dot(&z, &y), 0.0);
+    }
+
+    #[test]
+    fn geom_dot_default_geometry_bitwise_equals_mx_dot() {
+        // With the default geometry (block 32, single-level pow2 scales),
+        // the geometry-generic oracle must reproduce the original MxBlock
+        // oracle bit for bit — same scales, same f32 element products, same
+        // f64 block carry.
+        let mut rng = crate::util::rng::Xoshiro256::seed_from(41);
+        for id in [FormatId::E4M3, FormatId::E5M2, FormatId::E2M1, FormatId::Int4] {
+            let f = id.elem().unwrap();
+            for _ in 0..16 {
+                let a: Vec<f32> = rng.normal_vec(96);
+                let b: Vec<f32> = rng.normal_vec(96);
+                let legacy = mx_dot(&encode(&a, &f, 0), &encode(&b, &f, 0));
+                let geom = mx_dot_geom(&a, &b, id, false, BlockGeom::default());
+                assert_eq!(legacy.to_bits(), geom.to_bits(), "{id:?}: {legacy} vs {geom}");
+            }
+        }
     }
 
     #[test]

@@ -6,11 +6,20 @@
 //! are expanded through the format's decode table and multiplied in f32,
 //! per-block partial sums are carried with the *product of the two shared
 //! scales* in f64 — never materialising a dequantized matrix. The
-//! accumulation order (f32 inner sum over the 32-element block, f64 across
-//! blocks, `(X_a · X_b) · Σ P_a P_b`) is exactly
+//! accumulation order (f32 inner sum over the block, f64 across blocks,
+//! `(X_a · X_b) · Σ P_a P_b`) is exactly
 //! [`mx_dot`](super::dot::mx_dot)'s, so results are bitwise identical to
 //! the scalar oracle and agree with
 //! [`emulated_dot`](super::dot::emulated_dot) to f32 round-off.
+//!
+//! The engine is geometry-generic ([`BlockGeom`]): any supported block
+//! size, power-of-two E8M0 scales or NVFP4-style two-level scales (both
+//! reduce to one effective f64 scale per block via
+//! [`PackedVec::block_scale_f64`]), and byte or nibble-packed code storage.
+//! Sub-byte operands are expanded through the nibble kernels
+//! (`decode4_block`/`unpack4`) before the f32 sweep, so the accumulation
+//! order — and therefore the bitwise contract against
+//! [`mx_dot_geom`](super::dot::mx_dot_geom) — is storage-independent.
 //!
 //! Two kernels implement that contract (DESIGN.md §Exec):
 //!
@@ -25,11 +34,13 @@
 //!   mul-then-add, so per-output-lane accumulation order is unchanged and
 //!   every tier stays bitwise identical to the oracle.
 //! * [`gemm_ref`] — the original row-wise kernel (LUT lookups in the inner
-//!   loop, `std::thread::scope` fan-out), kept verbatim as the in-repo
-//!   baseline for the parity suite and the before/after numbers in
-//!   `BENCH_step_throughput.json`. [`set_reference_kernel`] routes [`gemm`]
-//!   through it so whole-step baselines can be measured in-process, and
-//!   `MXSTAB_KERNEL=scalar` (the scalar tier) routes the same way.
+//!   loop, `std::thread::scope` fan-out), kept as the in-repo baseline for
+//!   the parity suite and the before/after numbers in
+//!   `BENCH_step_throughput.json`. Nibble-packed operands are expanded to
+//!   byte codes up front so the inner loop stays the original LUT sweep.
+//!   [`set_reference_kernel`] routes [`gemm`] through it so whole-step
+//!   baselines can be measured in-process, and `MXSTAB_KERNEL=scalar`
+//!   (the scalar tier) routes the same way.
 //!
 //! Parallelism: output-row strips fan out over the persistent worker pool
 //! ([`crate::util::pool`]); per-strip decode scratch comes from the
@@ -41,7 +52,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use super::kernel::{self, KernelOps, Tier, TILE_N};
 use super::packed::{PackedFormat, PackedVec, ZERO_BLOCK};
 use super::quant::pow2;
-use super::spec::{FormatId, BLOCK_SIZE};
+use super::spec::{BlockGeom, FormatId, BLOCK_SIZE};
 use crate::util::{arena, pool};
 
 /// Minimum output elements per worker before fan-out pays for itself.
@@ -57,44 +68,86 @@ pub struct PackedMatrix {
 }
 
 impl PackedMatrix {
-    /// Encode a row-major `rows × cols` f32 matrix (`cols` must be a
-    /// multiple of [`BLOCK_SIZE`]). One allocation for the whole matrix —
-    /// this replaces the old `Vec<MxBlock>`-per-row encode.
+    /// Encode a row-major `rows × cols` f32 matrix under the default
+    /// geometry (`cols` must be a multiple of [`BLOCK_SIZE`]). One
+    /// allocation for the whole matrix.
     pub fn encode(a: &[f32], rows: usize, cols: usize, id: FormatId, scale_bump: bool) -> Self {
+        Self::encode_geom(a, rows, cols, id, scale_bump, BlockGeom::default())
+    }
+
+    /// Encode under an arbitrary [`BlockGeom`]; `cols` must be a multiple
+    /// of the geometry's block size so rows stay block-aligned (partial
+    /// tail blocks are a flat-[`PackedVec`] feature only — a GEMM operand
+    /// with a mid-row tail would let blocks straddle rows).
+    pub fn encode_geom(
+        a: &[f32],
+        rows: usize,
+        cols: usize,
+        id: FormatId,
+        scale_bump: bool,
+        geom: BlockGeom,
+    ) -> Self {
         assert_eq!(a.len(), rows * cols, "matrix shape mismatch");
-        assert_eq!(cols % BLOCK_SIZE, 0, "cols {cols} % 32 != 0");
-        PackedMatrix { rows, cols, data: PackedVec::encode(a, id, scale_bump) }
+        assert_eq!(cols % geom.block_size, 0, "cols {cols} % {} != 0", geom.block_size);
+        PackedMatrix { rows, cols, data: PackedVec::encode_geom(a, id, scale_bump, geom) }
     }
 
     /// Encode the *transpose* of a row-major `rows × cols` matrix, i.e. a
     /// `cols × rows` packed matrix with quantization blocks along the
-    /// original row axis (`rows` must be a multiple of [`BLOCK_SIZE`]).
+    /// original row axis (`rows` must be a multiple of the block size).
     ///
     /// This is the backward-GEMM entry point: `dW = Xᵀ·G` and `dX = G·Wᵀ`
     /// reduce over the batch / output axes, so the operands must be
     /// re-blocked (and therefore re-quantized — exactly as the paper's
     /// backward pass does) along those axes before the packed [`gemm`].
     pub fn encode_t(a: &[f32], rows: usize, cols: usize, id: FormatId, scale_bump: bool) -> Self {
+        Self::encode_t_geom(a, rows, cols, id, scale_bump, BlockGeom::default())
+    }
+
+    /// [`PackedMatrix::encode_t`] under an arbitrary [`BlockGeom`].
+    pub fn encode_t_geom(
+        a: &[f32],
+        rows: usize,
+        cols: usize,
+        id: FormatId,
+        scale_bump: bool,
+        geom: BlockGeom,
+    ) -> Self {
         assert_eq!(a.len(), rows * cols, "matrix shape mismatch");
-        assert_eq!(rows % BLOCK_SIZE, 0, "rows {rows} % 32 != 0");
+        assert_eq!(rows % geom.block_size, 0, "rows {rows} % {} != 0", geom.block_size);
         let mut t = arena::local().take_f32(a.len());
         transpose_into(a, rows, cols, &mut t);
-        PackedMatrix { rows: cols, cols: rows, data: PackedVec::encode(&t, id, scale_bump) }
+        PackedMatrix {
+            rows: cols,
+            cols: rows,
+            data: PackedVec::encode_geom(&t, id, scale_bump, geom),
+        }
     }
 
     pub fn id(&self) -> FormatId {
         self.data.id
     }
 
-    fn blocks_per_row(&self) -> usize {
-        self.cols / BLOCK_SIZE
+    /// The block geometry this operand was encoded under.
+    pub fn geom(&self) -> BlockGeom {
+        self.data.geom()
     }
 
+    fn blocks_per_row(&self) -> usize {
+        self.cols / self.geom().block_size
+    }
+
+    /// Byte codes of row `r`. Only meaningful for byte-stored operands;
+    /// nibble-packed matrices must go through the decode kernels.
     pub fn row_codes(&self, r: usize) -> &[u8] {
+        assert!(!self.data.packed4(), "row_codes on nibble-packed storage");
         &self.data.codes[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// E8M0 scale exponents of row `r` (power-of-two scaling only; the
+    /// geometry-generic accessor is [`PackedVec::block_scale_f32`]).
     pub fn row_scales(&self, r: usize) -> &[i16] {
+        assert!(!self.geom().two_level, "row_scales under two-level scaling");
         let bpr = self.blocks_per_row();
         &self.data.scales[r * bpr..(r + 1) * bpr]
     }
@@ -117,8 +170,39 @@ fn scale_f64(e: i16) -> f64 {
     }
 }
 
+/// Effective f64 scale per block of `v` (pow2 exponent or two-level
+/// product; zero blocks → 0.0), widened from the exact f32 value the
+/// decode path uses.
+fn fill_block_scales(v: &PackedVec, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), v.n_blocks());
+    for (kb, o) in out.iter_mut().enumerate() {
+        *o = v.block_scale_f64(kb);
+    }
+}
+
+/// Expand the code region covering elements `[e0, e0 + out.len())` of `v`
+/// to *relative* element values (scale 1.0). Byte codes read the 256-entry
+/// LUT in place; nibble-packed codes go through the active tier's
+/// `decode4_block` (×1.0 is exact, so both routes are bitwise identical).
+/// `e0` must be even for packed storage — always true for block-aligned
+/// regions, since every supported block size is even.
+fn decode_codes_rel(v: &PackedVec, pf: &PackedFormat, e0: usize, out: &mut [f32], ops: &KernelOps) {
+    if v.packed4() {
+        debug_assert_eq!(e0 % 2, 0);
+        let cb = &v.codes[e0 / 2..e0 / 2 + out.len().div_ceil(2)];
+        (ops.decode4_block)(pf.decode16_table(), cb, 1.0, out);
+    } else {
+        let lut = pf.decode_table();
+        for (o, &c) in out.iter_mut().zip(&v.codes[e0..e0 + out.len()]) {
+            *o = lut[c as usize];
+        }
+    }
+}
+
 /// Scale-carried dot product of two packed rows (same contract and
-/// accumulation order as [`mx_dot`](super::dot::mx_dot)).
+/// accumulation order as [`mx_dot`](super::dot::mx_dot)). Byte-code,
+/// power-of-two-scale, default-block-size layout — the original packed
+/// contract; geometry-generic operands go through [`gemm`]/[`matvec`].
 pub fn packed_dot(
     pf: &PackedFormat,
     a_codes: &[u8],
@@ -148,67 +232,96 @@ pub fn packed_dot(
 }
 
 /// Matvec worker: fill `out[i] = MXdot(A[r0+i,:], x)` for one row strip.
+/// `ascale`/`xscale` carry the per-block effective f64 scales of the whole
+/// matrix / vector (zero blocks → 0.0, skipped — adding their exactly-zero
+/// contribution is a no-op).
 fn matvec_strip(
     a: &PackedMatrix,
-    lut: &[f32; 256],
+    pf: &PackedFormat,
     xdec: &[f32],
     xscale: &[f64],
+    ascale: &[f64],
     r0: usize,
     out: &mut [f32],
 ) {
     let bpr = a.blocks_per_row();
+    let bs = a.geom().block_size;
+    let k = a.cols;
+    let packed4 = a.data.packed4();
+    let ops = kernel::ops();
+    let lut = pf.decode_table();
+    let mut adec = arena::local().take_f32(if packed4 { k } else { 0 });
     for (i, o) in out.iter_mut().enumerate() {
         let r = r0 + i;
-        let codes = a.row_codes(r);
-        let scales = a.row_scales(r);
+        let row_scales = &ascale[r * bpr..(r + 1) * bpr];
+        if packed4 {
+            decode_codes_rel(&a.data, pf, r * k, &mut adec, ops);
+        }
+        let codes = if packed4 { &[][..] } else { &a.data.codes[r * k..(r + 1) * k] };
         let mut acc = 0.0f64;
         for kb in 0..bpr {
-            let sa = scales[kb];
-            if sa == ZERO_BLOCK || xscale[kb] == 0.0 {
+            let sa = row_scales[kb];
+            if sa == 0.0 || xscale[kb] == 0.0 {
                 continue;
             }
-            let ab = &codes[kb * BLOCK_SIZE..(kb + 1) * BLOCK_SIZE];
-            let xb = &xdec[kb * BLOCK_SIZE..(kb + 1) * BLOCK_SIZE];
+            let xb = &xdec[kb * bs..(kb + 1) * bs];
             let mut inner = 0.0f32;
-            for k in 0..BLOCK_SIZE {
-                inner += lut[ab[k] as usize] * xb[k];
+            if packed4 {
+                let ab = &adec[kb * bs..(kb + 1) * bs];
+                for t in 0..bs {
+                    inner += ab[t] * xb[t];
+                }
+            } else {
+                let ab = &codes[kb * bs..(kb + 1) * bs];
+                for t in 0..bs {
+                    inner += lut[ab[t] as usize] * xb[t];
+                }
             }
-            acc += scale_f64(sa) * xscale[kb] * inner as f64;
+            acc += sa * xscale[kb] * inner as f64;
         }
         *o = acc as f32;
     }
 }
 
 /// Quantized matrix–vector product `out[r] = MXdot(A[r,:], x)` on packed
-/// operands (the element formats of `a` and `x` may differ). The expanded
-/// input (`xdec`/`xscale`) lives in arena scratch — zero steady-state
-/// allocation beyond the output; rows fan out over the worker pool.
+/// operands (the element formats of `a` and `x` may differ; block sizes
+/// must match). The expanded input (`xdec`/`xscale`) lives in arena
+/// scratch — zero steady-state allocation beyond the output; rows fan out
+/// over the worker pool.
 pub fn matvec(a: &PackedMatrix, x: &PackedVec) -> Vec<f32> {
     assert_eq!(x.len(), a.cols, "matvec shape mismatch");
-    let lut = PackedFormat::of(a.id()).decode_table();
-    let lut_x = PackedFormat::of(x.id).decode_table();
+    assert_eq!(
+        a.geom().block_size,
+        x.geom().block_size,
+        "operand block sizes differ: {} vs {}",
+        a.geom().block_size,
+        x.geom().block_size
+    );
+    let pf_a = PackedFormat::of(a.id());
+    let pf_x = PackedFormat::of(x.id);
+    let ops = kernel::ops();
 
-    // Expand x once: relative element values + f64 block scales.
+    // Expand x once: relative element values + f64 block scales. The
+    // matrix scales expand too (one f64 per block) so the strip loop is
+    // storage- and scaling-mode-agnostic.
     let scratch = arena::local();
     let mut xdec = scratch.take_f32(x.len());
-    for (o, &c) in xdec.iter_mut().zip(&x.codes) {
-        *o = lut_x[c as usize];
-    }
+    decode_codes_rel(x, pf_x, 0, &mut xdec, ops);
     let mut xscale = scratch.take_f64(x.n_blocks());
-    for (o, &e) in xscale.iter_mut().zip(&x.scales) {
-        *o = scale_f64(e);
-    }
+    fill_block_scales(x, &mut xscale);
+    let mut ascale = scratch.take_f64(a.data.n_blocks());
+    fill_block_scales(&a.data, &mut ascale);
 
     let mut out = vec![0.0f32; a.rows];
     let threads = worker_count(a.rows * a.cols, a.rows);
     if threads <= 1 {
-        matvec_strip(a, lut, &xdec, &xscale, 0, &mut out);
+        matvec_strip(a, pf_a, &xdec, &xscale, &ascale, 0, &mut out);
     } else {
         let chunk = (a.rows + threads - 1) / threads;
-        let (xdec, xscale) = (&*xdec, &*xscale);
+        let (xdec, xscale, ascale) = (&*xdec, &*xscale, &*ascale);
         pool::scope(|s| {
             for (ci, oc) in out.chunks_mut(chunk).enumerate() {
-                s.spawn(move || matvec_strip(a, lut, xdec, xscale, ci * chunk, oc));
+                s.spawn(move || matvec_strip(a, pf_a, xdec, xscale, ascale, ci * chunk, oc));
             }
         });
     }
@@ -238,29 +351,39 @@ pub fn reference_kernel() -> bool {
 /// the innermost loop is then a pure f32 multiply-add over contiguous
 /// panels. The panel is stored j-innermost (`[k][TILE_N]` interleave) so
 /// one decoded A element broadcasts across [`TILE_N`] independent
-/// accumulator lanes — each output lane still accumulates its 32-element
-/// block sum in exactly the oracle's element order, keeping the result
+/// accumulator lanes — each output lane still accumulates its block
+/// sum in exactly the oracle's element order, keeping the result
 /// bitwise identical to [`gemm_ref`] and [`mx_dot`](super::dot::mx_dot).
+/// Nibble-packed operands decode through `decode4_block` (the A strip and
+/// a per-row B staging buffer) before the identical sweep.
 #[allow(clippy::too_many_arguments)]
 fn gemm_strip(
     a: &PackedMatrix,
     b: &PackedMatrix,
-    lut: &[f32; 256],
-    lut_b: &[f32; 256],
+    pf_a: &PackedFormat,
+    pf_b: &PackedFormat,
+    ascale: &[f64],
     bscale: &[f64],
     r0: usize,
     out_strip: &mut [f32],
 ) {
-    let (n, k, bpr) = (b.rows, a.cols, a.blocks_per_row());
+    let (n, k) = (b.rows, a.cols);
+    let bs = a.geom().block_size;
+    let bpr = a.blocks_per_row();
     let rows_here = out_strip.len() / n;
     let ops = kernel::ops();
     let scratch = arena::local();
 
     // Decode this strip's A rows once: relative element values.
     let mut adec = scratch.take_f32(rows_here * k);
-    for (d, &c) in adec.iter_mut().zip(&a.data.codes[r0 * k..(r0 + rows_here) * k]) {
-        *d = lut[c as usize];
-    }
+    decode_codes_rel(&a.data, pf_a, r0 * k, &mut adec, ops);
+
+    // Nibble-packed B rows stage through a contiguous row decode before
+    // the j-innermost panel scatter; byte rows scatter straight from the
+    // 256-entry LUT.
+    let b_packed4 = b.data.packed4();
+    let mut brow = scratch.take_f32(if b_packed4 { k } else { 0 });
+    let lut_b = pf_b.decode_table();
 
     let mut panel = scratch.take_f32(TILE_N * k);
     let mut acc = [0.0f64; TILE_N];
@@ -268,27 +391,34 @@ fn gemm_strip(
     for jt in (0..n).step_by(TILE_N) {
         let jw = TILE_N.min(n - jt);
         // Decode the B panel once per tile, j-innermost:
-        // panel[(kb·32 + t)·TILE_N + jo] = lut_b[B[jt+jo, kb·32 + t]].
+        // panel[(kb·bs + t)·TILE_N + jo] = lut_b[B[jt+jo, kb·bs + t]].
         for jo in 0..jw {
-            let codes = &b.data.codes[(jt + jo) * k..(jt + jo + 1) * k];
-            for (idx, &c) in codes.iter().enumerate() {
-                panel[idx * TILE_N + jo] = lut_b[c as usize];
+            let j = jt + jo;
+            if b_packed4 {
+                decode_codes_rel(&b.data, pf_b, j * k, &mut brow, ops);
+                for (idx, &v) in brow.iter().enumerate() {
+                    panel[idx * TILE_N + jo] = v;
+                }
+            } else {
+                let codes = &b.data.codes[j * k..(j + 1) * k];
+                for (idx, &c) in codes.iter().enumerate() {
+                    panel[idx * TILE_N + jo] = lut_b[c as usize];
+                }
             }
         }
         for i in 0..rows_here {
-            let a_scales = a.row_scales(r0 + i);
+            let row_scales = &ascale[(r0 + i) * bpr..(r0 + i + 1) * bpr];
             let arow = &adec[i * k..(i + 1) * k];
             acc[..jw].fill(0.0);
             for kb in 0..bpr {
-                let sa = a_scales[kb];
-                if sa == ZERO_BLOCK {
+                let sa_f = row_scales[kb];
+                if sa_f == 0.0 {
                     continue;
                 }
-                let sa_f = scale_f64(sa);
-                let ab = &arow[kb * BLOCK_SIZE..(kb + 1) * BLOCK_SIZE];
-                let prows = &panel[kb * BLOCK_SIZE * TILE_N..(kb + 1) * BLOCK_SIZE * TILE_N];
+                let ab = &arow[kb * bs..(kb + 1) * bs];
+                let prows = &panel[kb * bs * TILE_N..(kb + 1) * bs * TILE_N];
                 // Lane jo accumulates its block inner product in element
-                // order t = 0..32 — the oracle's order, vectorized across
+                // order t = 0..bs — the oracle's order, vectorized across
                 // the TILE_N output lanes by the active microkernel tier
                 // (unfused mul-then-add, so every tier is bitwise equal).
                 (ops.panel_madd)(ab, prows, &mut inner);
@@ -311,7 +441,9 @@ fn gemm_strip(
 /// operands (B is stored with its reduction axis contiguous, i.e. as the
 /// transposed right-hand side — the layout `w·xᵀ` style Linears produce).
 /// The two operands may use *different* MX element formats (the paper's
-/// per-tensor-class format selection: e.g. E4M3 weights × E5M2 gradients).
+/// per-tensor-class format selection: e.g. E4M3 weights × E5M2 gradients)
+/// and different scaling modes, but must share one block size so the
+/// reduction blocks align.
 ///
 /// Tiling: each pool task owns a horizontal strip of C; every
 /// [`TILE_N`]-row panel of B (and the strip's A rows) is decoded once into
@@ -319,66 +451,96 @@ fn gemm_strip(
 /// `X_a·X_b` per block. Bitwise identical to [`gemm_ref`].
 pub fn gemm(a: &PackedMatrix, b: &PackedMatrix, out: &mut [f32]) {
     assert_eq!(a.cols, b.cols, "reduction dims differ: {} vs {}", a.cols, b.cols);
+    assert_eq!(
+        a.geom().block_size,
+        b.geom().block_size,
+        "operand block sizes differ: {} vs {}",
+        a.geom().block_size,
+        b.geom().block_size
+    );
     assert_eq!(out.len(), a.rows * b.rows, "output shape mismatch");
     // The scalar kernel tier *is* the row-wise reference kernel
     // (MXSTAB_KERNEL=scalar); the bench toggle takes priority.
     if reference_kernel() || kernel::tier() == Tier::Scalar {
         return gemm_ref(a, b, out);
     }
-    let lut = PackedFormat::of(a.id()).decode_table();
-    let lut_b = PackedFormat::of(b.id()).decode_table();
+    let pf_a = PackedFormat::of(a.id());
+    let pf_b = PackedFormat::of(b.id());
     let n = b.rows;
 
-    // Per-block f64 scales for B, computed once into arena scratch.
-    let mut bscale_buf = arena::local().take_f64(b.data.scales.len());
-    for (o, &e) in bscale_buf.iter_mut().zip(&b.data.scales) {
-        *o = scale_f64(e);
-    }
-    let bscale: &[f64] = &bscale_buf;
+    // Per-block effective f64 scales for both operands (pow2 exponents or
+    // two-level products), computed once into arena scratch.
+    let scratch = arena::local();
+    let mut ascale_buf = scratch.take_f64(a.data.n_blocks());
+    fill_block_scales(&a.data, &mut ascale_buf);
+    let mut bscale_buf = scratch.take_f64(b.data.n_blocks());
+    fill_block_scales(&b.data, &mut bscale_buf);
+    let (ascale, bscale): (&[f64], &[f64]) = (&ascale_buf, &bscale_buf);
 
     let threads = worker_count(a.rows * n, a.rows);
     if threads <= 1 {
-        gemm_strip(a, b, lut, lut_b, bscale, 0, out);
+        gemm_strip(a, b, pf_a, pf_b, ascale, bscale, 0, out);
     } else {
         let rows_per = (a.rows + threads - 1) / threads;
         pool::scope(|s| {
             for (ci, oc) in out.chunks_mut(rows_per * n).enumerate() {
-                s.spawn(move || gemm_strip(a, b, lut, lut_b, bscale, ci * rows_per, oc));
+                s.spawn(move || gemm_strip(a, b, pf_a, pf_b, ascale, bscale, ci * rows_per, oc));
             }
         });
     }
 }
 
+/// Byte-code view of a packed operand's codes: `None` when they are
+/// already byte-stored, an owned expansion (scalar `unpack4` — exact byte
+/// math, identical on every tier) for nibble-packed storage.
+fn unpack_codes(v: &PackedVec) -> Option<Vec<u8>> {
+    if !v.packed4() {
+        return None;
+    }
+    let mut out = vec![0u8; v.len()];
+    (kernel::scalar_ops().unpack4)(&v.codes, &mut out);
+    Some(out)
+}
+
 /// The original row-wise GEMM worker (LUT lookups in the innermost loop),
-/// kept verbatim as the baseline/oracle for the panel-decoded kernel.
+/// kept as the baseline/oracle for the panel-decoded kernel. Operand
+/// codes arrive pre-expanded to bytes; scales arrive as per-block
+/// effective f64 values.
 #[allow(clippy::too_many_arguments)]
 fn gemm_strip_ref(
     a: &PackedMatrix,
     b: &PackedMatrix,
-    lut: &[f32; 256],
-    lut_b: &[f32; 256],
+    a_codes: &[u8],
+    b_codes: &[u8],
+    pf_a: &PackedFormat,
+    pf_b: &PackedFormat,
+    ascale: &[f64],
     bscale: &[f64],
     r0: usize,
     out_strip: &mut [f32],
 ) {
-    let (n, bpr) = (b.rows, a.blocks_per_row());
+    let (n, k) = (b.rows, a.cols);
+    let bs = a.geom().block_size;
+    let bpr = a.blocks_per_row();
     let rows_here = out_strip.len() / n;
+    let lut = pf_a.decode_table();
+    let lut_b = pf_b.decode_table();
     let mut acc = [0.0f64; TILE_N];
-    let mut adec = [0.0f32; BLOCK_SIZE];
+    let mut adec_buf = [0.0f32; 64]; // max supported block size
+    let adec = &mut adec_buf[..bs];
     for jt in (0..n).step_by(TILE_N) {
         let jw = TILE_N.min(n - jt);
         for i in 0..rows_here {
             let r = r0 + i;
-            let a_codes = a.row_codes(r);
-            let a_scales = a.row_scales(r);
+            let row_codes = &a_codes[r * k..(r + 1) * k];
+            let row_scales = &ascale[r * bpr..(r + 1) * bpr];
             acc[..jw].fill(0.0);
             for kb in 0..bpr {
-                let sa = a_scales[kb];
-                if sa == ZERO_BLOCK {
+                let sa_f = row_scales[kb];
+                if sa_f == 0.0 {
                     continue;
                 }
-                let sa_f = scale_f64(sa);
-                let ab = &a_codes[kb * BLOCK_SIZE..(kb + 1) * BLOCK_SIZE];
+                let ab = &row_codes[kb * bs..(kb + 1) * bs];
                 for (d, &c) in adec.iter_mut().zip(ab) {
                     *d = lut[c as usize];
                 }
@@ -388,10 +550,10 @@ fn gemm_strip_ref(
                     if sb == 0.0 {
                         continue;
                     }
-                    let bb = &b.data.codes[j * b.cols + kb * BLOCK_SIZE..][..BLOCK_SIZE];
+                    let bb = &b_codes[j * k + kb * bs..][..bs];
                     let mut inner = 0.0f32;
-                    for k in 0..BLOCK_SIZE {
-                        inner += adec[k] * lut_b[bb[k] as usize];
+                    for t in 0..bs {
+                        inner += adec[t] * lut_b[bb[t] as usize];
                     }
                     *av += sa_f * sb * inner as f64;
                 }
@@ -403,28 +565,52 @@ fn gemm_strip_ref(
     }
 }
 
-/// The pre-panel GEMM entry point, preserved bit-for-bit (row-wise kernel,
-/// `std::thread::scope` fan-out, per-call thread counts). The parity suite
-/// asserts [`gemm`] ≡ `gemm_ref` bitwise; `benches/step_throughput.rs`
-/// times it as the before/after baseline.
+/// The pre-panel GEMM entry point (row-wise kernel, `std::thread::scope`
+/// fan-out, per-call thread counts). The parity suite asserts [`gemm`] ≡
+/// `gemm_ref` bitwise; `benches/step_throughput.rs` times it as the
+/// before/after baseline.
 pub fn gemm_ref(a: &PackedMatrix, b: &PackedMatrix, out: &mut [f32]) {
     assert_eq!(a.cols, b.cols, "reduction dims differ: {} vs {}", a.cols, b.cols);
+    assert_eq!(
+        a.geom().block_size,
+        b.geom().block_size,
+        "operand block sizes differ: {} vs {}",
+        a.geom().block_size,
+        b.geom().block_size
+    );
     assert_eq!(out.len(), a.rows * b.rows, "output shape mismatch");
-    let lut = PackedFormat::of(a.id()).decode_table();
-    let lut_b = PackedFormat::of(b.id()).decode_table();
+    let pf_a = PackedFormat::of(a.id());
+    let pf_b = PackedFormat::of(b.id());
     let n = b.rows;
 
-    let bscale: Vec<f64> = b.data.scales.iter().map(|&e| scale_f64(e)).collect();
+    let ascale: Vec<f64> = (0..a.data.n_blocks()).map(|kb| a.data.block_scale_f64(kb)).collect();
+    let bscale: Vec<f64> = (0..b.data.n_blocks()).map(|kb| b.data.block_scale_f64(kb)).collect();
+    let (a_bytes, b_bytes) = (unpack_codes(&a.data), unpack_codes(&b.data));
+    let a_codes: &[u8] = a_bytes.as_deref().unwrap_or(&a.data.codes);
+    let b_codes: &[u8] = b_bytes.as_deref().unwrap_or(&b.data.codes);
 
     let threads = ref_worker_count(a.rows * n, a.rows);
     if threads <= 1 {
-        gemm_strip_ref(a, b, lut, lut_b, &bscale, 0, out);
+        gemm_strip_ref(a, b, a_codes, b_codes, pf_a, pf_b, &ascale, &bscale, 0, out);
     } else {
         let rows_per = (a.rows + threads - 1) / threads;
-        let bscale = &bscale;
+        let (ascale, bscale) = (&ascale, &bscale);
         std::thread::scope(|s| {
             for (ci, oc) in out.chunks_mut(rows_per * n).enumerate() {
-                s.spawn(move || gemm_strip_ref(a, b, lut, lut_b, bscale, ci * rows_per, oc));
+                s.spawn(move || {
+                    gemm_strip_ref(
+                        a,
+                        b,
+                        a_codes,
+                        b_codes,
+                        pf_a,
+                        pf_b,
+                        ascale,
+                        bscale,
+                        ci * rows_per,
+                        oc,
+                    )
+                });
             }
         });
     }
@@ -585,7 +771,9 @@ fn ref_worker_count(out_elems: usize, rows: usize) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::formats::dot::{emulated_dot, encode, mx_dot};
+    use crate::formats::dot::{emulated_dot, encode, mx_dot, mx_dot_geom, mx_dot_geom_scaled};
+    use crate::formats::quant::two_level_tensor_scale;
+    use crate::formats::spec::BLOCK_SIZES;
     use crate::util::prop;
     use crate::util::rng::Xoshiro256;
 
@@ -635,6 +823,88 @@ mod tests {
             let got = matvec(&am, &xv);
             for (r, (g, e)) in got.iter().zip(&expect).enumerate() {
                 assert_eq!(g.to_bits(), e.to_bits(), "{id:?} row {r}: {g} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn subbyte_matvec_matches_geom_oracle() {
+        let mut rng = Xoshiro256::seed_from(5150);
+        let (rows, cols) = (19, 96);
+        let a: Vec<f32> = rng.normal_vec(rows * cols);
+        let x: Vec<f32> = rng.normal_vec(cols);
+        for id in [FormatId::E2M1, FormatId::Int4] {
+            let am = PackedMatrix::encode(&a, rows, cols, id, false);
+            let xv = PackedVec::encode(&x, id, false);
+            assert!(am.data.packed4() && xv.packed4(), "{id:?} must nibble-pack");
+            let got = matvec(&am, &xv);
+            for (r, g) in got.iter().enumerate() {
+                let want = mx_dot_geom(
+                    &a[r * cols..(r + 1) * cols],
+                    &x,
+                    id,
+                    false,
+                    BlockGeom::default(),
+                );
+                assert_eq!(g.to_bits(), want.to_bits(), "{id:?} row {r}: {g} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn subbyte_and_geometry_gemm_matches_scalar_oracle() {
+        // Every (format × block size × scaling mode) through both GEMM
+        // kernels, bitwise against the geometry-generic scalar oracle.
+        // Two-level tensor scales are per-operand (whole matrix), so the
+        // oracle receives them explicitly.
+        let _guard = TOGGLE_LOCK.lock().unwrap();
+        let mut rng = Xoshiro256::seed_from(909);
+        let (m, n, k) = (5, 9, 128);
+        let a: Vec<f32> = rng.normal_vec(m * k);
+        let b: Vec<f32> = rng.normal_vec(n * k);
+        for id in [FormatId::E2M1, FormatId::Int4, FormatId::E4M3] {
+            let f = id.elem().unwrap();
+            for bs in BLOCK_SIZES {
+                for two_level in [false, true] {
+                    let geom = BlockGeom::new(bs, two_level);
+                    let am = PackedMatrix::encode_geom(&a, m, k, id, false, geom);
+                    let bm = PackedMatrix::encode_geom(&b, n, k, id, false, geom);
+                    let (sa_t, sb_t) = if two_level {
+                        (two_level_tensor_scale(&a, &f), two_level_tensor_scale(&b, &f))
+                    } else {
+                        (1.0, 1.0)
+                    };
+                    let mut fast = vec![0.0f32; m * n];
+                    let mut reference = vec![0.0f32; m * n];
+                    gemm(&am, &bm, &mut fast);
+                    gemm_ref(&am, &bm, &mut reference);
+                    for r in 0..m {
+                        for j in 0..n {
+                            let want = mx_dot_geom_scaled(
+                                &a[r * k..(r + 1) * k],
+                                &b[j * k..(j + 1) * k],
+                                id,
+                                false,
+                                geom,
+                                sa_t,
+                                sb_t,
+                            );
+                            let tag = format!("{id:?} bs={bs} 2lvl={two_level} C[{r},{j}]");
+                            assert_eq!(
+                                fast[r * n + j].to_bits(),
+                                want.to_bits(),
+                                "{tag}: panel {} vs oracle {want}",
+                                fast[r * n + j]
+                            );
+                            assert_eq!(
+                                reference[r * n + j].to_bits(),
+                                want.to_bits(),
+                                "{tag}: ref {} vs oracle {want}",
+                                reference[r * n + j]
+                            );
+                        }
+                    }
+                }
             }
         }
     }
@@ -777,7 +1047,8 @@ mod tests {
     fn panel_gemm_bitwise_equals_reference_kernel() {
         // Shapes crossing every tiling edge: single row, tile tails
         // (n % TILE_N ≠ 0), sub-tile n, odd m, and a multi-strip fan-out
-        // (m·n > PAR_MIN_OUT engages the pool).
+        // (m·n > PAR_MIN_OUT engages the pool). Sub-byte operands ride
+        // the same sweep, including mixed nibble×byte pairs.
         let _guard = TOGGLE_LOCK.lock().unwrap();
         let mut rng = Xoshiro256::seed_from(101);
         for &(m, n, k) in
@@ -789,6 +1060,8 @@ mod tests {
                 (FormatId::E4M3, FormatId::E4M3),
                 (FormatId::E4M3, FormatId::E5M2),
                 (FormatId::E2M3, FormatId::E3M2),
+                (FormatId::E2M1, FormatId::Int4),
+                (FormatId::E2M1, FormatId::E4M3),
             ] {
                 let am = PackedMatrix::encode(&a, m, k, ida, false);
                 let bm = PackedMatrix::encode(&b, n, k, idb, false);
@@ -853,5 +1126,32 @@ mod tests {
         );
         assert_eq!(am.row_codes(3).len(), cols);
         assert_eq!(am.row_scales(3).len(), cols / BLOCK_SIZE);
+    }
+
+    #[test]
+    fn geometry_encode_matches_geom_qdq() {
+        // PackedMatrix under a non-default geometry decodes bitwise like
+        // the scalar geometry oracle.
+        let mut rng = Xoshiro256::seed_from(606);
+        let (rows, cols) = (4, 128);
+        let a = rng.normal_vec(rows * cols);
+        for id in [FormatId::E2M1, FormatId::E4M3] {
+            for bs in BLOCK_SIZES {
+                for two_level in [false, true] {
+                    let geom = BlockGeom::new(bs, two_level);
+                    let am = PackedMatrix::encode_geom(&a, rows, cols, id, false, geom);
+                    assert_eq!(am.geom(), geom);
+                    let (want, _) = crate::formats::quant::mx_qdq_geom(&a, id, false, geom);
+                    let got = am.decode();
+                    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "{id:?} bs={bs} 2lvl={two_level} [{i}]: {g} vs {w}"
+                        );
+                    }
+                }
+            }
+        }
     }
 }

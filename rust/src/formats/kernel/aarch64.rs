@@ -29,8 +29,12 @@ pub(super) static NEON_OPS: KernelOps = KernelOps {
     amax: amax_neon,
     encode_block: encode_block_neon,
     // 256-entry LUT decode has no NEON gather; the scalar loop is the
-    // honest baseline here.
+    // honest baseline here. The 16-entry nibble LUT *does* fit vtbl
+    // range (64 bytes), so decode4 is table-lookup vectorized.
     decode_block: scalar::decode_block,
+    pack4: pack4_neon,
+    unpack4: unpack4_neon,
+    decode4_block: decode4_block_neon,
     adam_update: adam_update_neon,
     sgd_update: sgd_update_neon,
     ln_fwd_apply: ln_fwd_apply_neon,
@@ -180,6 +184,104 @@ fn encode_block_neon(pf: &PackedFormat, xb: &[f32], scale: f32, out: &mut [u8]) 
             out[i] = code;
         }
         clamped
+    }
+}
+
+fn pack4_neon(codes: &[u8], out: &mut [u8]) {
+    debug_assert_eq!(out.len(), codes.len().div_ceil(2));
+    // SAFETY: NEON baseline; the vector loop loads full 16-byte chunks
+    // of `codes` and stores 8-byte chunks of `out`; the tail is scalar.
+    unsafe {
+        let mut i = 0usize;
+        let mut o = 0usize;
+        while i + 16 <= codes.len() {
+            let c = vld1q_u8(codes.as_ptr().add(i));
+            // byte code → nibble code: (c >> 4) & 8 | c & 7.
+            let sign = vandq_u8(vshrq_n_u8::<4>(c), vdupq_n_u8(0x08));
+            let nibs = vorrq_u8(sign, vandq_u8(c, vdupq_n_u8(0x07)));
+            // Even elements to the low nibble, odd elements shifted high.
+            let even = vuzp1q_u8(nibs, nibs);
+            let odd = vuzp2q_u8(nibs, nibs);
+            let packed = vorrq_u8(even, vshlq_n_u8::<4>(odd));
+            vst1_u8(out.as_mut_ptr().add(o), vget_low_u8(packed));
+            i += 16;
+            o += 8;
+        }
+        let nib = |c: u8| ((c >> 4) & 0x8) | (c & 0x7);
+        for (oi, pair) in out[o..].iter_mut().zip(codes[i..].chunks(2)) {
+            let hi = if pair.len() > 1 { nib(pair[1]) } else { 0 };
+            *oi = (hi << 4) | nib(pair[0]);
+        }
+    }
+}
+
+fn unpack4_neon(packed: &[u8], out: &mut [u8]) {
+    debug_assert_eq!(packed.len(), out.len().div_ceil(2));
+    // SAFETY: NEON baseline; each iteration loads 8 packed bytes and
+    // stores one full 16-byte chunk of `out`; the tail is scalar.
+    unsafe {
+        let mut e = 0usize;
+        while e + 16 <= out.len() {
+            let pb = vld1_u8(packed.as_ptr().add(e / 2));
+            let lo = vand_u8(pb, vdup_n_u8(0x0F));
+            let hi = vshr_n_u8::<4>(pb);
+            // Interleave: low nibble is the even element.
+            let nibs = vcombine_u8(vzip1_u8(lo, hi), vzip2_u8(lo, hi));
+            // nibble → byte code: (n & 8) << 4 | n & 7.
+            let sign = vshlq_n_u8::<4>(vandq_u8(nibs, vdupq_n_u8(0x08)));
+            let code = vorrq_u8(sign, vandq_u8(nibs, vdupq_n_u8(0x07)));
+            vst1q_u8(out.as_mut_ptr().add(e), code);
+            e += 16;
+        }
+        for (i, o) in out.iter_mut().enumerate().skip(e) {
+            let n = if i % 2 == 0 { packed[i / 2] & 0xF } else { packed[i / 2] >> 4 };
+            *o = ((n & 0x8) << 4) | (n & 0x7);
+        }
+    }
+}
+
+fn decode4_block_neon(lut16: &[f32; 16], packed: &[u8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(packed.len(), out.len().div_ceil(2));
+    // SAFETY: NEON baseline; the 16-entry f32 LUT is exactly 64 bytes —
+    // vqtbl4q range — loaded once; each iteration loads 8 packed bytes
+    // (in bounds: e + 16 <= out.len() implies e/2 + 8 <= packed.len())
+    // and stores four 4-float chunks of `out`; the tail is scalar.
+    unsafe {
+        // The LUT as a 64-byte table: element n occupies bytes 4n..4n+4
+        // (little-endian f32), so the byte indices for nibble n are
+        // 4n·0x01010101 + 0x03020100 per output lane.
+        let lut = vld1q_u8_x4(lut16.as_ptr() as *const u8);
+        let sv = vdupq_n_f32(scale);
+        let mut e = 0usize;
+        while e + 16 <= out.len() {
+            let pb = vld1_u8(packed.as_ptr().add(e / 2));
+            let lo = vand_u8(pb, vdup_n_u8(0x0F));
+            let hi = vshr_n_u8::<4>(pb);
+            let nibs = vcombine_u8(vzip1_u8(lo, hi), vzip2_u8(lo, hi));
+            let n16_lo = vmovl_u8(vget_low_u8(nibs));
+            let n16_hi = vmovl_u8(vget_high_u8(nibs));
+            for (g, n16) in [n16_lo, n16_hi].into_iter().enumerate() {
+                for (h, n32) in
+                    [vmovl_u16(vget_low_u16(n16)), vmovl_u16(vget_high_u16(n16))]
+                        .into_iter()
+                        .enumerate()
+                {
+                    let idx = vaddq_u32(
+                        vmulq_n_u32(n32, 0x0404_0404),
+                        vdupq_n_u32(0x0302_0100),
+                    );
+                    let bytes = vqtbl4q_u8(lut, vreinterpretq_u8_u32(idx));
+                    let vals = vreinterpretq_f32_u8(bytes);
+                    let off = e + g * 8 + h * 4;
+                    vst1q_f32(out.as_mut_ptr().add(off), vmulq_f32(vals, sv));
+                }
+            }
+            e += 16;
+        }
+        for (i, o) in out.iter_mut().enumerate().skip(e) {
+            let n = if i % 2 == 0 { packed[i / 2] & 0xF } else { packed[i / 2] >> 4 };
+            *o = lut16[n as usize] * scale;
+        }
     }
 }
 

@@ -132,6 +132,20 @@ pub struct KernelOps {
     pub encode_block: fn(pf: &PackedFormat, xb: &[f32], scale: f32, out: &mut [u8]) -> usize,
     /// LUT decode of one block: `out[i] = lut[codes[i]] · scale`.
     pub decode_block: fn(lut: &[f32; 256], codes: &[u8], scale: f32, out: &mut [f32]),
+    /// Pack byte codes (`sign << 7 | payload`, payload ≤ 7) into nibble
+    /// pairs (`sign << 3 | payload`; low nibble = even element). `out`
+    /// holds `codes.len().div_ceil(2)` bytes; an odd tail leaves the
+    /// final high nibble 0.
+    pub pack4: fn(codes: &[u8], out: &mut [u8]),
+    /// Inverse of [`KernelOps::pack4`]: expand nibble pairs back to
+    /// byte codes (`packed.len() == out.len().div_ceil(2)`).
+    pub unpack4: fn(packed: &[u8], out: &mut [u8]),
+    /// LUT decode of one nibble-packed block:
+    /// `out[i] = lut16[nibble(packed, i)] · scale` — the sub-byte
+    /// sibling of [`KernelOps::decode_block`], bitwise identical to
+    /// unpack-then-decode because `lut16` is the nibble image of the
+    /// byte table.
+    pub decode4_block: fn(lut16: &[f32; 16], packed: &[u8], scale: f32, out: &mut [f32]),
     /// Fused Adam update for one tensor (bias corrections from `t`
     /// inside); returns Σ(Δp)² accumulated serially in element order.
     pub adam_update:
@@ -172,6 +186,9 @@ static SCALAR_OPS: KernelOps = KernelOps {
     amax: scalar::amax,
     encode_block: scalar::encode_block,
     decode_block: scalar::decode_block,
+    pack4: scalar::pack4,
+    unpack4: scalar::unpack4,
+    decode4_block: scalar::decode4_block,
     adam_update: scalar::adam_update,
     sgd_update: scalar::sgd_update,
     ln_fwd_apply: scalar::ln_fwd_apply,
@@ -435,6 +452,65 @@ mod tests {
                 (scalar_ops().decode_block)(lut, &codes, scale, &mut a);
                 (simd.decode_block)(lut, &codes, scale, &mut b);
                 assert_eq!(bits(&a), bits(&b), "{id:?} scale {scale:e}");
+            }
+        }
+    }
+
+    #[test]
+    fn nibble_pack_roundtrip_and_parity() {
+        // The full 4-bit code domain: payload 0..=7 with and without the
+        // sign bit — every byte code a 4-bit format can emit.
+        let valid: Vec<u8> = (0u8..8).chain(0x80..0x88).collect();
+        let mut codes = Vec::new();
+        for &a in &valid {
+            for &b in &valid {
+                codes.push(a);
+                codes.push(b);
+            }
+        }
+        let mut packed = vec![0u8; codes.len() / 2];
+        (scalar_ops().pack4)(&codes, &mut packed);
+        let mut back = vec![0u8; codes.len()];
+        (scalar_ops().unpack4)(&packed, &mut back);
+        assert_eq!(codes, back, "scalar pack4/unpack4 must be inverses");
+        let Some(simd) = simd_ops() else { return };
+        for n in [codes.len(), 64, 33, 32, 31, 16, 15, 8, 3, 1] {
+            let mut a = vec![0u8; n.div_ceil(2)];
+            let mut b = vec![0u8; n.div_ceil(2)];
+            (scalar_ops().pack4)(&codes[..n], &mut a);
+            (simd.pack4)(&codes[..n], &mut b);
+            assert_eq!(a, b, "pack4 n={n}");
+            let mut ua = vec![0u8; n];
+            let mut ub = vec![0u8; n];
+            (scalar_ops().unpack4)(&a, &mut ua);
+            (simd.unpack4)(&a, &mut ub);
+            assert_eq!(ua, ub, "unpack4 n={n}");
+            assert_eq!(ua, codes[..n], "roundtrip n={n}");
+        }
+    }
+
+    #[test]
+    fn decode4_parity_over_every_nibble_pair() {
+        // Every possible packed byte = every (low, high) nibble pair.
+        let packed: Vec<u8> = (0..=255u8).collect();
+        for id in [FormatId::E2M1, FormatId::Int4] {
+            let pf = PackedFormat::of(id);
+            let lut16 = pf.decode16_table();
+            for scale in [pow2(-140), pow2(-126), pow2(-3), 1.0, pow2(60), pow2(127)] {
+                let mut want = vec![0.0f32; 512];
+                (scalar_ops().decode4_block)(lut16, &packed, scale, &mut want);
+                // Scalar decode4 must agree with unpack-then-byte-decode.
+                let mut bytes = vec![0u8; 512];
+                (scalar_ops().unpack4)(&packed, &mut bytes);
+                let mut via_bytes = vec![0.0f32; 512];
+                (scalar_ops().decode_block)(pf.decode_table(), &bytes, scale, &mut via_bytes);
+                assert_eq!(bits(&want), bits(&via_bytes), "{id:?} scale {scale:e}");
+                let Some(simd) = simd_ops() else { continue };
+                for n in [512usize, 480, 64, 37, 32, 16, 5, 1] {
+                    let mut got = vec![0.0f32; n];
+                    (simd.decode4_block)(lut16, &packed[..n.div_ceil(2)], scale, &mut got);
+                    assert_eq!(bits(&want[..n]), bits(&got), "{id:?} n={n} scale={scale:e}");
+                }
             }
         }
     }

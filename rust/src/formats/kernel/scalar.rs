@@ -51,6 +51,37 @@ pub(super) fn decode_block(lut: &[f32; 256], codes: &[u8], scale: f32, out: &mut
     }
 }
 
+/// Byte code (`sign << 7 | payload`) → nibble code (`sign << 3 | payload`).
+/// Lossless when the payload fits 3 bits — the 4-bit element formats.
+#[inline(always)]
+fn nib(code: u8) -> u8 {
+    ((code >> 4) & 0x8) | (code & 0x7)
+}
+
+pub(super) fn pack4(codes: &[u8], out: &mut [u8]) {
+    debug_assert_eq!(out.len(), codes.len().div_ceil(2));
+    for (o, pair) in out.iter_mut().zip(codes.chunks(2)) {
+        let hi = if pair.len() > 1 { nib(pair[1]) } else { 0 };
+        *o = (hi << 4) | nib(pair[0]);
+    }
+}
+
+pub(super) fn unpack4(packed: &[u8], out: &mut [u8]) {
+    debug_assert_eq!(packed.len(), out.len().div_ceil(2));
+    for (i, o) in out.iter_mut().enumerate() {
+        let n = if i % 2 == 0 { packed[i / 2] & 0xF } else { packed[i / 2] >> 4 };
+        *o = ((n & 0x8) << 4) | (n & 0x7);
+    }
+}
+
+pub(super) fn decode4_block(lut16: &[f32; 16], packed: &[u8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(packed.len(), out.len().div_ceil(2));
+    for (i, o) in out.iter_mut().enumerate() {
+        let n = if i % 2 == 0 { packed[i / 2] & 0xF } else { packed[i / 2] >> 4 };
+        *o = lut16[n as usize] * scale;
+    }
+}
+
 pub(super) fn adam_update(
     p: &mut [f32],
     g: &[f32],

@@ -47,6 +47,11 @@ pub(super) static SSE2_OPS: KernelOps = KernelOps {
     // The narrow ops below gain little at 2-lane f64 / without gathers;
     // the SSE2 tier keeps the scalar reference for them.
     decode_block: scalar::decode_block,
+    pack4: pack4_sse2,
+    unpack4: unpack4_sse2,
+    // 16-entry f32 LUT decode needs a gather; scalar is the honest
+    // SSE2 baseline (the nibble extraction alone doesn't pay).
+    decode4_block: scalar::decode4_block,
     adam_update: adam_update_sse2,
     sgd_update: sgd_update_sse2,
     ln_fwd_apply: scalar::ln_fwd_apply,
@@ -64,6 +69,11 @@ pub(super) static AVX2_OPS: KernelOps = KernelOps {
     amax: amax_avx2,
     encode_block: encode_block_avx2,
     decode_block: decode_block_avx2,
+    // Nibble pack/unpack are pure byte shuffles — the SSE2 shift/mask
+    // kernels already saturate them; AVX2 adds a LUT-gather decode4.
+    pack4: pack4_sse2,
+    unpack4: unpack4_sse2,
+    decode4_block: decode4_block_avx2,
     adam_update: adam_update_avx2,
     sgd_update: sgd_update_avx2,
     ln_fwd_apply: ln_fwd_apply_avx2,
@@ -103,6 +113,11 @@ fn encode_block_avx2(pf: &PackedFormat, xb: &[f32], scale: f32, out: &mut [u8]) 
 fn decode_block_avx2(lut: &[f32; 256], codes: &[u8], scale: f32, out: &mut [f32]) {
     // SAFETY: AVX2 availability checked at table selection.
     unsafe { decode_block_avx2_impl(lut, codes, scale, out) }
+}
+
+fn decode4_block_avx2(lut16: &[f32; 16], packed: &[u8], scale: f32, out: &mut [f32]) {
+    // SAFETY: AVX2 availability checked at table selection.
+    unsafe { decode4_block_avx2_impl(lut16, packed, scale, out) }
 }
 
 fn adam_update_avx2(
@@ -360,6 +375,39 @@ unsafe fn decode_block_avx2_impl(lut: &[f32; 256], codes: &[u8], scale: f32, out
         }
         for i in chunks * 8..codes.len() {
             out[i] = lut[codes[i] as usize] * scale;
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn decode4_block_avx2_impl(lut16: &[f32; 16], packed: &[u8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(packed.len(), out.len().div_ceil(2));
+    // SAFETY: each iteration loads 8 packed bytes at e/2 (in bounds:
+    // e + 16 <= out.len() implies e/2 + 8 <= packed.len()), gathers from
+    // the 16-entry LUT with nibble indices (< 16), and stores two full
+    // 8-float chunks of `out`; the scalar tail stays in bounds.
+    unsafe {
+        let scale_v = _mm256_set1_ps(scale);
+        let nib_mask = _mm_set1_epi8(0x0F);
+        let mut e = 0usize;
+        while e + 16 <= out.len() {
+            // 8 packed bytes → 16 nibbles in element order: low nibble
+            // is the even element, so interleave (lo, hi) byte-wise.
+            let pb = _mm_loadl_epi64(packed.as_ptr().add(e / 2) as *const __m128i);
+            let lo = _mm_and_si128(pb, nib_mask);
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(pb), nib_mask);
+            let nibs = _mm_unpacklo_epi8(lo, hi);
+            let idx0 = _mm256_cvtepu8_epi32(nibs);
+            let idx1 = _mm256_cvtepu8_epi32(_mm_srli_si128::<8>(nibs));
+            let v0 = _mm256_i32gather_ps::<4>(lut16.as_ptr(), idx0);
+            let v1 = _mm256_i32gather_ps::<4>(lut16.as_ptr(), idx1);
+            _mm256_storeu_ps(out.as_mut_ptr().add(e), _mm256_mul_ps(v0, scale_v));
+            _mm256_storeu_ps(out.as_mut_ptr().add(e + 8), _mm256_mul_ps(v1, scale_v));
+            e += 16;
+        }
+        for (i, o) in out.iter_mut().enumerate().skip(e) {
+            let n = if i % 2 == 0 { packed[i / 2] & 0xF } else { packed[i / 2] >> 4 };
+            *o = lut16[n as usize] * scale;
         }
     }
 }
@@ -770,6 +818,87 @@ fn encode_block_sse2(pf: &PackedFormat, xb: &[f32], scale: f32, out: &mut [u8]) 
             out[i] = code;
         }
         clamped
+    }
+}
+
+/// Byte codes → nibble codes in-register: `(c >> 4) & 0x8 | c & 0x7`
+/// per byte. 16-bit shifts are safe here because the shifted bit (the
+/// masked sign, 0x80) stays inside its own byte.
+#[inline(always)]
+unsafe fn nib16_sse2(v: __m128i) -> __m128i {
+    // SAFETY: pure register ops; SSE2 is baseline on x86_64.
+    unsafe {
+        let sign = _mm_and_si128(
+            _mm_srli_epi16::<4>(_mm_and_si128(v, _mm_set1_epi8(0x80u8 as i8))),
+            _mm_set1_epi8(0x08),
+        );
+        _mm_or_si128(sign, _mm_and_si128(v, _mm_set1_epi8(0x07)))
+    }
+}
+
+fn pack4_sse2(codes: &[u8], out: &mut [u8]) {
+    debug_assert_eq!(out.len(), codes.len().div_ceil(2));
+    // SAFETY: SSE2 baseline; the vector loop loads two full 16-byte
+    // chunks of `codes` and stores one 16-byte chunk of `out` per
+    // iteration; the scalar tail stays in bounds.
+    unsafe {
+        let lo_mask = _mm_set1_epi16(0x00FF);
+        let mut i = 0usize;
+        let mut o = 0usize;
+        while i + 32 <= codes.len() {
+            let a = nib16_sse2(_mm_loadu_si128(codes.as_ptr().add(i) as *const __m128i));
+            let b = nib16_sse2(_mm_loadu_si128(codes.as_ptr().add(i + 16) as *const __m128i));
+            // Each u16 lane holds (odd << 8) | even; the packed byte is
+            // even | odd << 4 = (lane | lane >> 4) & 0xFF.
+            let pa = _mm_and_si128(_mm_or_si128(a, _mm_srli_epi16::<4>(a)), lo_mask);
+            let pb = _mm_and_si128(_mm_or_si128(b, _mm_srli_epi16::<4>(b)), lo_mask);
+            _mm_storeu_si128(out.as_mut_ptr().add(o) as *mut __m128i, _mm_packus_epi16(pa, pb));
+            i += 32;
+            o += 16;
+        }
+        let nib = |c: u8| ((c >> 4) & 0x8) | (c & 0x7);
+        for (oi, pair) in out[o..].iter_mut().zip(codes[i..].chunks(2)) {
+            let hi = if pair.len() > 1 { nib(pair[1]) } else { 0 };
+            *oi = (hi << 4) | nib(pair[0]);
+        }
+    }
+}
+
+/// Nibble codes → byte codes in-register: `(n & 8) << 4 | n & 7` per
+/// byte — again the shifted bit stays inside its byte, so 16-bit shifts
+/// are safe.
+#[inline(always)]
+unsafe fn expand_nib_sse2(n: __m128i) -> __m128i {
+    // SAFETY: pure register ops; SSE2 is baseline on x86_64.
+    unsafe {
+        _mm_or_si128(
+            _mm_slli_epi16::<4>(_mm_and_si128(n, _mm_set1_epi8(0x08))),
+            _mm_and_si128(n, _mm_set1_epi8(0x07)),
+        )
+    }
+}
+
+fn unpack4_sse2(packed: &[u8], out: &mut [u8]) {
+    debug_assert_eq!(packed.len(), out.len().div_ceil(2));
+    // SAFETY: SSE2 baseline; each iteration loads 16 packed bytes and
+    // stores two 16-byte chunks of `out`; the scalar tail stays in
+    // bounds.
+    unsafe {
+        let nib_mask = _mm_set1_epi8(0x0F);
+        let mut e = 0usize;
+        while e + 32 <= out.len() {
+            let v = _mm_loadu_si128(packed.as_ptr().add(e / 2) as *const __m128i);
+            let lo = _mm_and_si128(v, nib_mask);
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(v), nib_mask);
+            let o = out.as_mut_ptr().add(e);
+            _mm_storeu_si128(o as *mut __m128i, expand_nib_sse2(_mm_unpacklo_epi8(lo, hi)));
+            _mm_storeu_si128(o.add(16) as *mut __m128i, expand_nib_sse2(_mm_unpackhi_epi8(lo, hi)));
+            e += 32;
+        }
+        for (i, o) in out.iter_mut().enumerate().skip(e) {
+            let n = if i % 2 == 0 { packed[i / 2] & 0xF } else { packed[i / 2] >> 4 };
+            *o = ((n & 0x8) << 4) | (n & 0x7);
+        }
     }
 }
 

@@ -12,10 +12,12 @@
 //!   obvious, and the ground truth every fast path is property-tested
 //!   against.
 //! * [`packed`] + [`gemm`] — the **hot path**: a packed bit-true codec
-//!   (u8 element codes + power-of-two block scales) and a cache-tiled,
-//!   thread-parallel block GEMM that carries scales instead of
-//!   dequantizing. Bitwise identical to the oracle; several times faster
-//!   and allocation-free in steady state.
+//!   (u8 element codes — or two 4-bit codes per byte for E2M1/INT4 — plus
+//!   power-of-two block scales, or fp8-per-block × fp32-per-tensor
+//!   two-level scales) and a cache-tiled, thread-parallel block GEMM that
+//!   carries scales instead of dequantizing. Block sizes 16/32/64 via
+//!   [`spec::BlockGeom`]. Bitwise identical to the oracle; several times
+//!   faster and allocation-free in steady state.
 //! * [`kernel`] — the SIMD microkernel layer underneath both: runtime
 //!   ISA dispatch (AVX2 / SSE2 / NEON / scalar) for the panel-GEMM
 //!   inner loop, the codec amax/encode/decode, the dense f64 GEMM and
@@ -38,7 +40,11 @@ pub mod packed;
 pub mod quant;
 pub mod spec;
 
+pub use dot::{mx_dot_geom, mx_dot_geom_scaled};
 pub use gemm::{gemm, gemm_f32, matvec, transpose, PackedMatrix};
-pub use packed::{packed_qdq, PackError, PackedFormat, PackedVec, QdqScratch};
-pub use quant::{mx_qdq, mx_qdq_with_mask, quantize_elem};
-pub use spec::{ElemFormat, Fmt, FormatId, BLOCK_SIZE};
+pub use packed::{
+    packed_qdq, packed_qdq_geom, set_unpacked_subbyte_storage, unpacked_subbyte_storage,
+    PackError, PackedFormat, PackedVec, QdqScratch,
+};
+pub use quant::{mx_qdq, mx_qdq_geom, mx_qdq_with_mask, quantize_elem, two_level_tensor_scale};
+pub use spec::{BlockGeom, ElemFormat, Fmt, FormatId, BLOCK_SIZE, BLOCK_SIZES};

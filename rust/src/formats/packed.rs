@@ -2,41 +2,52 @@
 //!
 //! The scalar reference ([`crate::formats::quant`]) re-derives band steps
 //! per element and materialises dequantized `f32`s; this module stores MX
-//! tensors the way hardware does — one element *code* byte per value plus
-//! one power-of-two shared scale per 32-element block — and moves between
-//! the two representations through lookup tables derived from
-//! [`super::codes::positive_codes`].
+//! tensors the way hardware does — element *codes* plus one shared scale
+//! per block — and moves between the two representations through lookup
+//! tables derived from [`super::codes::positive_codes`].
 //!
 //! Layout per encoded vector:
 //! * `codes: Vec<u8>` — `sign << 7 | payload`, where payload is the
 //!   ordinal of the positive code (0 = zero, 1 = smallest subnormal, ...,
 //!   `n_codes` = max normal). For the FP8 formats this is exactly the OCP
 //!   `s eeee mmm` / `s eeeee mm` bit layout; FP6 codes occupy the low 6
-//!   bits of the byte.
-//! * `scales: Vec<i16>` — per-block power-of-two exponents (E8M0 in the
-//!   OCP sense, widened to i16 so blocks whose absmax is an f32 subnormal
-//!   keep the exact scalar-path scale; [`PackedVec::scale_e8m0`] exposes
-//!   the clamped 8-bit biased form). [`ZERO_BLOCK`] marks all-zero blocks.
+//!   bits of the byte. The 4-bit element types (E2M1/FP4, INT4) are
+//!   **nibble-packed**: two codes per byte (`sign << 3 | payload`, low
+//!   nibble = even element), halving code traffic; block sizes are even,
+//!   so blocks never straddle a byte.
+//! * scales — either `scales: Vec<i16>` of per-block power-of-two
+//!   exponents (E8M0 in the OCP sense, widened to i16 so blocks whose
+//!   absmax is an f32 subnormal keep the exact scalar-path scale;
+//!   [`PackedVec::scale_e8m0`] exposes the clamped 8-bit biased form;
+//!   [`ZERO_BLOCK`] marks all-zero blocks), or — under NVFP4-style
+//!   two-level scaling — `scales8: Vec<u8>` of per-block E4M3 scale codes
+//!   (code 0 = zero block) alongside one fp32 `tensor_scale`.
 //!
 //! Bit-exactness contract (property-tested in `tests/packed_roundtrip.rs`
-//! and re-checked here): `decode(encode(x))` is **bitwise identical** to
-//! [`mx_qdq`](crate::formats::quant::mx_qdq) for every [`FormatId`] and
-//! every input, including subnormals, all-zero blocks, clamp-region
-//! values, ±0, and inf/NaN. Encode performs the *same* float operations
-//! as `quantize_elem` (divide by a power-of-two band step, then
-//! `round_ties_even`), so the two paths cannot diverge by rounding.
+//! / `tests/packed_subbyte.rs` and re-checked here): `decode(encode(x))`
+//! is **bitwise identical** to [`mx_qdq`](crate::formats::quant::mx_qdq)
+//! (and, for non-default [`BlockGeom`]s, to
+//! [`mx_qdq_geom`](crate::formats::quant::mx_qdq_geom)) for every
+//! [`FormatId`] and every input, including subnormals, all-zero blocks,
+//! clamp-region values, ±0, inf/NaN, and trailing partial blocks. Encode
+//! performs the *same* float operations as `quantize_elem` (divide by the
+//! block scale, then `round_ties_even`), so the two paths cannot diverge
+//! by rounding.
 //!
 //! Large inputs are processed block-parallel over the persistent worker
 //! pool ([`crate::util::pool`] — shared with the GEMM engine and the sweep
 //! scheduler, so nested parallelism cannot oversubscribe cores); results
-//! are independent of the task count because blocks are independent.
+//! are independent of the task count because blocks are independent. Task
+//! boundaries are always block-aligned — and blocks are even-sized — so a
+//! packed byte-group (two nibble codes) can never straddle two workers.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::OnceLock;
 
 use super::codes::positive_codes;
 use super::kernel;
-use super::quant::{bf16_rne, pow2};
-use super::spec::{ElemFormat, FormatId, BLOCK_SIZE};
+use super::quant::{amax, bf16_rne, pow2, two_level_tensor_scale};
+use super::spec::{BlockGeom, ElemFormat, FormatId, BLOCK_SIZE};
 use crate::util::pool;
 
 /// Scale-exponent sentinel for an all-zero (or all-NaN) block: the block
@@ -45,25 +56,20 @@ use crate::util::pool;
 pub const ZERO_BLOCK: i16 = i16::MIN;
 
 /// Typed error for the fallible packed-codec constructors. The in-repo MX
-/// call sites validate their formats/shapes up front and keep using the
+/// call sites validate their formats up front and keep using the
 /// infallible [`PackedFormat::of`] / [`PackedVec::encode`]; the `try_`
-/// variants exist for consumers that feed runtime-selected formats or
-/// unvalidated lengths and want an error value instead of a panic.
+/// variants exist for consumers that feed runtime-selected formats and
+/// want an error value instead of a panic.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PackError {
     /// fp32/bf16 carry no MX block layout — there is nothing to pack.
     NotMx(FormatId),
-    /// Input length is not a multiple of [`BLOCK_SIZE`].
-    Unaligned { len: usize },
 }
 
 impl std::fmt::Display for PackError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             PackError::NotMx(id) => write!(f, "{id:?} is not an MX element format"),
-            PackError::Unaligned { len } => {
-                write!(f, "input length {len} is not a multiple of {BLOCK_SIZE}")
-            }
         }
     }
 }
@@ -73,6 +79,23 @@ impl std::error::Error for PackError {}
 /// Per-element work (in f32s) below which encode/decode stay single
 /// threaded; above, blocks are fanned out over the worker pool.
 const PAR_THRESHOLD: usize = 1 << 14;
+
+/// Debug/test toggle: force 4-bit element types to spend a full byte per
+/// code (the pre-sub-byte layout). Values are unaffected — `decode16` is
+/// the nibble image of the byte `decode` table — which is exactly what
+/// the u8-vs-nibble trajectory equality test asserts.
+static UNPACKED_SUBBYTE: AtomicBool = AtomicBool::new(false);
+
+/// Force byte-per-code storage for 4-bit formats (see [`UNPACKED_SUBBYTE`]).
+/// Process-global; intended for tests and A/B benches.
+pub fn set_unpacked_subbyte_storage(on: bool) {
+    UNPACKED_SUBBYTE.store(on, Ordering::SeqCst);
+}
+
+/// Is byte-per-code storage currently forced for 4-bit formats?
+pub fn unpacked_subbyte_storage() -> bool {
+    UNPACKED_SUBBYTE.load(Ordering::SeqCst)
+}
 
 /// Precomputed encode/decode tables for one MX element format.
 ///
@@ -95,6 +118,10 @@ pub struct PackedFormat {
     step: Vec<f32>,
     /// code byte → value relative to the block scale (sign applied).
     decode: [f32; 256],
+    /// nibble code → relative value: `decode16[n] == decode[byte(n)]`
+    /// with `byte(n) = (n & 8) << 4 | (n & 7)`. Meaningful (lossless) for
+    /// formats whose payload fits 3 bits — the 4-bit element types.
+    pub(super) decode16: [f32; 16],
 }
 
 impl PackedFormat {
@@ -104,6 +131,9 @@ impl PackedFormat {
         let m1 = 1u64 << mbits;
         let codes = positive_codes(&elem);
         assert!(codes.len() < 128, "{}: payload must fit 7 bits", elem.name);
+        if id.code_bits() == 4 {
+            assert!(codes.len() <= 7, "{}: 4-bit payload must fit 3 bits", elem.name);
+        }
         let max_payload = codes.len() as u8;
         // kmax_top from the top payload's mantissa field: payload layout is
         // exp_field << mbits | (k - 2^mbits).
@@ -121,8 +151,25 @@ impl PackedFormat {
         // sign, exactly like `quantize_elem`'s `-q` branch).
         decode[0x80] = -0.0;
 
+        let mut decode16 = [0.0f32; 16];
+        for (n, d) in decode16.iter_mut().enumerate() {
+            *d = decode[((n & 0x8) << 4) | (n & 0x7)];
+        }
+
         let step = (emin..=emax).map(|e| pow2(e - mbits)).collect();
-        PackedFormat { id, elem, emin, emax, mbits, m1, kmax_top, max_payload, step, decode }
+        PackedFormat {
+            id,
+            elem,
+            emin,
+            emax,
+            mbits,
+            m1,
+            kmax_top,
+            max_payload,
+            step,
+            decode,
+            decode16,
+        }
     }
 
     /// The interned table set for an MX format (panics for fp32/bf16 —
@@ -134,13 +181,15 @@ impl PackedFormat {
     /// Fallible variant of [`PackedFormat::of`]: a typed error instead of
     /// a panic for non-MX element formats.
     pub fn try_of(id: FormatId) -> Result<&'static PackedFormat, PackError> {
-        static TABLES: OnceLock<[PackedFormat; 4]> = OnceLock::new();
+        static TABLES: OnceLock<[PackedFormat; 6]> = OnceLock::new();
         let tables = TABLES.get_or_init(|| {
             [
                 PackedFormat::new(FormatId::E4M3),
                 PackedFormat::new(FormatId::E5M2),
                 PackedFormat::new(FormatId::E2M3),
                 PackedFormat::new(FormatId::E3M2),
+                PackedFormat::new(FormatId::E2M1),
+                PackedFormat::new(FormatId::Int4),
             ]
         });
         match id {
@@ -148,6 +197,8 @@ impl PackedFormat {
             FormatId::E5M2 => Ok(&tables[1]),
             FormatId::E2M3 => Ok(&tables[2]),
             FormatId::E3M2 => Ok(&tables[3]),
+            FormatId::E2M1 => Ok(&tables[4]),
+            FormatId::Int4 => Ok(&tables[5]),
             _ => Err(PackError::NotMx(id)),
         }
     }
@@ -156,6 +207,12 @@ impl PackedFormat {
     #[inline]
     pub fn decode_table(&self) -> &[f32; 256] {
         &self.decode
+    }
+
+    /// The 16-entry nibble → relative-value table (4-bit formats).
+    #[inline]
+    pub fn decode16_table(&self) -> &[f32; 16] {
+        &self.decode16
     }
 
     /// Payload (sign-stripped code) of ±max_norm — the "last bin".
@@ -222,13 +279,13 @@ impl PackedFormat {
     /// Shared-scale exponent for one block (mirror of `block_scale`).
     #[inline]
     pub fn scale_exp(&self, block: &[f32], scale_bump: i32) -> i16 {
-        self.scale_exp_from_amax(block.iter().fold(0.0f32, |acc, &v| acc.max(v.abs())), scale_bump)
+        self.scale_exp_from_amax(amax(block), scale_bump)
     }
 
-    /// Encode a block-aligned slice into `codes`/`scales` through the
+    /// Encode a block-aligned slice into byte `codes`/`scales` through the
     /// active kernel tier ([`kernel::ops`] — bitwise identical across
-    /// tiers). Returns the number of elements that landed in the last
-    /// quantization bin.
+    /// tiers), default MX geometry. Returns the number of elements that
+    /// landed in the last quantization bin.
     pub fn encode_slice(
         &self,
         x: &[f32],
@@ -237,27 +294,12 @@ impl PackedFormat {
         scale_bump: i32,
     ) -> usize {
         assert_eq!(x.len() % BLOCK_SIZE, 0);
-        assert_eq!(x.len(), codes.len());
-        assert_eq!(x.len() / BLOCK_SIZE, scales.len());
-        let ops = kernel::ops();
-        let mut clamped = 0usize;
-        for ((xb, cb), s) in
-            x.chunks_exact(BLOCK_SIZE).zip(codes.chunks_exact_mut(BLOCK_SIZE)).zip(scales.iter_mut())
-        {
-            let se = self.scale_exp_from_amax((ops.amax)(xb), scale_bump);
-            *s = se;
-            if se == ZERO_BLOCK {
-                cb.fill(0);
-                continue;
-            }
-            clamped += (ops.encode_block)(self, xb, pow2(se as i32), cb);
-        }
-        clamped
+        self.encode_region(x, codes, scales, &mut [], 1.0, BlockGeom::default(), scale_bump)
     }
 
-    /// Decode `codes`/`scales` into `out` (bitwise equal to the scalar
-    /// quantize→dequantize output for data produced by `encode_slice`),
-    /// through the active kernel tier's LUT-decode op.
+    /// Decode byte `codes`/`scales` into `out` (bitwise equal to the
+    /// scalar quantize→dequantize output for data produced by
+    /// `encode_slice`), through the active kernel tier's LUT-decode op.
     pub fn decode_slice(&self, codes: &[u8], scales: &[i16], out: &mut [f32]) {
         assert_eq!(codes.len(), out.len());
         assert_eq!(codes.len() % BLOCK_SIZE, 0);
@@ -273,122 +315,344 @@ impl PackedFormat {
             (ops.decode_block)(&self.decode, cb, pow2(*s as i32), ob);
         }
     }
+
+    /// Geometry-general encode into *byte* codes plus per-block scales:
+    /// `scales` (i16 exponents) in power-of-two mode, `scales8` (E4M3
+    /// codes) + `s_tensor` under two-level scaling — exactly one of the
+    /// two scale slices is non-empty. The trailing partial block (if any)
+    /// runs through the scalar kernel table (bitwise-identical by the
+    /// tier-parity contract); full blocks use the active tier.
+    #[allow(clippy::too_many_arguments)]
+    fn encode_region(
+        &self,
+        x: &[f32],
+        codes: &mut [u8],
+        scales: &mut [i16],
+        scales8: &mut [u8],
+        s_tensor: f32,
+        geom: BlockGeom,
+        scale_bump: i32,
+    ) -> usize {
+        debug_assert_eq!(x.len(), codes.len());
+        let ops = kernel::ops();
+        let scalar = kernel::scalar_ops();
+        let bs = geom.block_size;
+        let e4m3 = if geom.two_level { Some(PackedFormat::of(FormatId::E4M3)) } else { None };
+        let mut clamped = 0usize;
+        for (bi, (xb, cb)) in x.chunks(bs).zip(codes.chunks_mut(bs)).enumerate() {
+            let o = if xb.len() == bs { ops } else { scalar };
+            let m = (o.amax)(xb);
+            let scale = match e4m3 {
+                Some(e4m3) => {
+                    if m == 0.0 {
+                        scales8[bi] = 0;
+                        cb.fill(0);
+                        continue;
+                    }
+                    // Shared two-level math (see quant::two_level_block_eff,
+                    // the oracle's identical float-op sequence): E4M3-quantize
+                    // the raw per-block scale, pin underflow to the min
+                    // subnormal, then apply the fp32 tensor scale.
+                    let mut raw = (m / s_tensor) / self.elem.max_norm();
+                    if scale_bump != 0 {
+                        raw *= 2.0;
+                    }
+                    let mut code = e4m3.encode_elem(raw);
+                    if code == 0 {
+                        code = 1;
+                    }
+                    scales8[bi] = code;
+                    e4m3.decode[code as usize] * s_tensor
+                }
+                None => {
+                    let se = self.scale_exp_from_amax(m, scale_bump);
+                    scales[bi] = se;
+                    if se == ZERO_BLOCK {
+                        cb.fill(0);
+                        continue;
+                    }
+                    pow2(se as i32)
+                }
+            };
+            clamped += (o.encode_block)(self, xb, scale, cb);
+        }
+        clamped
+    }
 }
 
 /// Pool-task count for `len` elements of block-parallel work (bounded by
 /// the shared pool so concurrent callers cannot multiply thread counts).
-fn n_threads(len: usize) -> usize {
+/// Never exceeds the number of *full* blocks: every task owns at least
+/// one whole block — and blocks are even-sized — so a packed sub-byte
+/// byte-group can never straddle two workers (a lone tail block stays
+/// single-threaded).
+fn n_threads(len: usize, block_size: usize) -> usize {
     if len < PAR_THRESHOLD {
         return 1;
     }
-    pool::parallelism().min(len / (PAR_THRESHOLD / 2)).max(1)
+    let full_blocks = len / block_size;
+    pool::parallelism().min(len / (PAR_THRESHOLD / 2)).min(full_blocks).max(1)
 }
 
 /// Block-aligned chunk length splitting `len` across `threads` workers.
-fn chunk_len(len: usize, threads: usize) -> usize {
-    let blocks = len / BLOCK_SIZE;
+/// The trailing partial block (if any) rides with the final chunk.
+fn chunk_len(len: usize, threads: usize, block_size: usize) -> usize {
+    let blocks = len / block_size;
     let per = (blocks + threads - 1) / threads;
-    per.max(1) * BLOCK_SIZE
+    per.max(1) * block_size
 }
 
-/// A packed MX vector: element codes + per-block shared-scale exponents.
+/// A packed MX vector: element codes + per-block shared scales, under an
+/// arbitrary [`BlockGeom`]. 4-bit element types store two codes per byte
+/// (see the module docs for the layout).
 #[derive(Debug, Clone)]
 pub struct PackedVec {
     pub id: FormatId,
+    /// Element codes: one byte per element, or — for 4-bit formats unless
+    /// [`set_unpacked_subbyte_storage`] is on — two nibble codes per byte.
     pub codes: Vec<u8>,
+    /// Per-block power-of-two scale exponents (empty under two-level).
     pub scales: Vec<i16>,
+    /// Per-block E4M3 scale codes (two-level mode only; 0 = zero block).
+    pub scales8: Vec<u8>,
+    /// The fp32 per-tensor scale (two-level mode; 1.0 otherwise).
+    pub tensor_scale: f32,
     /// Elements that hit the last quantization bin during encode.
     pub clamped: usize,
+    geom: BlockGeom,
+    len: usize,
+    packed4: bool,
 }
 
 impl PackedVec {
-    /// Encode a block-aligned f32 slice (parallel for large inputs).
-    /// Panics on non-MX formats or unaligned lengths — use
+    /// Encode an f32 slice under the default MX geometry (parallel for
+    /// large inputs). Panics on non-MX formats — use
     /// [`PackedVec::try_encode`] for runtime-selected formats.
     pub fn encode(x: &[f32], id: FormatId, scale_bump: bool) -> PackedVec {
-        Self::try_encode(x, id, scale_bump).unwrap_or_else(|e| panic!("{e}"))
+        Self::encode_geom(x, id, scale_bump, BlockGeom::default())
+    }
+
+    /// Encode under an explicit block geometry. A trailing partial block
+    /// (`len % block_size != 0`) is quantized with its own amax.
+    pub fn encode_geom(x: &[f32], id: FormatId, scale_bump: bool, geom: BlockGeom) -> PackedVec {
+        Self::try_encode_geom(x, id, scale_bump, geom).unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Fallible variant of [`PackedVec::encode`]: returns a typed
-    /// [`PackError`] for non-MX element formats and unaligned inputs.
+    /// [`PackError`] for non-MX element formats.
     pub fn try_encode(x: &[f32], id: FormatId, scale_bump: bool) -> Result<PackedVec, PackError> {
+        Self::try_encode_geom(x, id, scale_bump, BlockGeom::default())
+    }
+
+    /// Fallible variant of [`PackedVec::encode_geom`].
+    pub fn try_encode_geom(
+        x: &[f32],
+        id: FormatId,
+        scale_bump: bool,
+        geom: BlockGeom,
+    ) -> Result<PackedVec, PackError> {
         let pf = PackedFormat::try_of(id)?;
-        if x.len() % BLOCK_SIZE != 0 {
-            return Err(PackError::Unaligned { len: x.len() });
-        }
-        let mut codes = vec![0u8; x.len()];
-        let mut scales = vec![0i16; x.len() / BLOCK_SIZE];
+        let bs = geom.block_size;
+        debug_assert!(bs % 2 == 0, "block sizes must be even for nibble packing");
+        let n = x.len();
+        let n_blocks = n.div_ceil(bs);
+        let packed4 = id.code_bits() == 4 && !unpacked_subbyte_storage();
         let bump = scale_bump as i32;
-        let threads = n_threads(x.len());
-        let clamped = if threads <= 1 {
-            pf.encode_slice(x, &mut codes, &mut scales, bump)
+        let s_tensor = if geom.two_level { two_level_tensor_scale(x, &pf.elem) } else { 1.0 };
+
+        let mut byte_codes = vec![0u8; n];
+        let (mut scales, mut scales8) = if geom.two_level {
+            (Vec::new(), vec![0u8; n_blocks])
         } else {
-            let chunk = chunk_len(x.len(), threads);
-            let mut counts = vec![0usize; x.len().div_ceil(chunk)];
+            (vec![0i16; n_blocks], Vec::new())
+        };
+
+        let threads = n_threads(n, bs);
+        let clamped = if threads <= 1 {
+            pf.encode_region(x, &mut byte_codes, &mut scales, &mut scales8, s_tensor, geom, bump)
+        } else {
+            let chunk = chunk_len(n, threads, bs);
+            let n_chunks = n.div_ceil(chunk);
+            let mut counts = vec![0usize; n_chunks];
             pool::scope(|s| {
-                for (((xs, cs), ss), count) in x
-                    .chunks(chunk)
-                    .zip(codes.chunks_mut(chunk))
-                    .zip(scales.chunks_mut(chunk / BLOCK_SIZE))
-                    .zip(counts.iter_mut())
-                {
-                    s.spawn(move || *count = pf.encode_slice(xs, cs, ss, bump));
+                let mut xs = x;
+                let mut cs = byte_codes.as_mut_slice();
+                let mut sc = scales.as_mut_slice();
+                let mut s8 = scales8.as_mut_slice();
+                for count in counts.iter_mut() {
+                    let take = chunk.min(xs.len());
+                    let nb = take.div_ceil(bs);
+                    let (x0, xr) = xs.split_at(take);
+                    let (c0, cr) = cs.split_at_mut(take);
+                    let (s0, sr) = sc.split_at_mut(nb.min(sc.len()));
+                    let (e0, er) = s8.split_at_mut(nb.min(s8.len()));
+                    (xs, cs, sc, s8) = (xr, cr, sr, er);
+                    s.spawn(move || {
+                        *count = pf.encode_region(x0, c0, s0, e0, s_tensor, geom, bump);
+                    });
                 }
             });
             counts.iter().sum()
         };
-        Ok(PackedVec { id, codes, scales, clamped })
+
+        let codes = if packed4 { pack_nibbles(&byte_codes) } else { byte_codes };
+        Ok(PackedVec {
+            id,
+            codes,
+            scales,
+            scales8,
+            tensor_scale: s_tensor,
+            clamped,
+            geom,
+            len: n,
+            packed4,
+        })
     }
 
+    /// Number of encoded *elements* (not bytes — see [`PackedVec::bytes`]).
     pub fn len(&self) -> usize {
-        self.codes.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.codes.is_empty()
+        self.len == 0
     }
 
     pub fn n_blocks(&self) -> usize {
-        self.scales.len()
+        if self.geom.two_level {
+            self.scales8.len()
+        } else {
+            self.scales.len()
+        }
     }
 
-    /// Packed memory footprint in bytes (codes + scales).
+    /// The block geometry this vector was encoded under.
+    pub fn geom(&self) -> BlockGeom {
+        self.geom
+    }
+
+    /// Are two 4-bit codes packed per byte?
+    pub fn packed4(&self) -> bool {
+        self.packed4
+    }
+
+    /// Packed memory footprint in bytes: codes plus scale storage (2 per
+    /// block for i16 exponents; 1 per block + the 4-byte tensor scale
+    /// under two-level scaling).
     pub fn bytes(&self) -> usize {
-        self.codes.len() + 2 * self.scales.len()
+        let scale_bytes = if self.geom.two_level {
+            self.scales8.len() + std::mem::size_of::<f32>()
+        } else {
+            2 * self.scales.len()
+        };
+        self.codes.len() + scale_bytes
+    }
+
+    /// Does block `kb` decode to all zeros (zero/NaN-only source block)?
+    #[inline]
+    pub fn is_zero_block(&self, kb: usize) -> bool {
+        if self.geom.two_level {
+            self.scales8[kb] == 0
+        } else {
+            self.scales[kb] == ZERO_BLOCK
+        }
+    }
+
+    /// Effective f32 scale of block `kb`: `2^e` in power-of-two mode, the
+    /// decoded E4M3 scale times the tensor scale under two-level. Zero
+    /// blocks report 0.0. The two-level product is computed in f32 —
+    /// the exact op sequence encode used — so decode stays bitwise.
+    #[inline]
+    pub fn block_scale_f32(&self, kb: usize) -> f32 {
+        if self.geom.two_level {
+            let c = self.scales8[kb];
+            if c == 0 {
+                return 0.0;
+            }
+            PackedFormat::of(FormatId::E4M3).decode[c as usize] * self.tensor_scale
+        } else {
+            let e = self.scales[kb];
+            if e == ZERO_BLOCK {
+                0.0
+            } else {
+                pow2(e as i32)
+            }
+        }
+    }
+
+    /// [`PackedVec::block_scale_f32`] widened to f64 *after* the f32
+    /// computation (the GEMM engine's per-block scale product must match
+    /// the decode path's f32 scale bitwise).
+    #[inline]
+    pub fn block_scale_f64(&self, kb: usize) -> f64 {
+        self.block_scale_f32(kb) as f64
     }
 
     /// Decode into a caller-provided buffer (parallel for large inputs).
     pub fn decode_into(&self, out: &mut [f32]) {
-        assert_eq!(out.len(), self.codes.len());
+        assert_eq!(out.len(), self.len);
+        if self.len == 0 {
+            return;
+        }
         let pf = PackedFormat::of(self.id);
-        let threads = n_threads(out.len());
+        let bs = self.geom.block_size;
+        let threads = n_threads(self.len, bs);
         if threads <= 1 {
-            pf.decode_slice(&self.codes, &self.scales, out);
+            self.decode_region(pf, 0, out);
         } else {
-            let chunk = chunk_len(out.len(), threads);
+            let chunk = chunk_len(self.len, threads, bs);
+            let blocks_per_chunk = chunk / bs;
             pool::scope(|s| {
-                for ((cs, ss), os) in self
-                    .codes
-                    .chunks(chunk)
-                    .zip(self.scales.chunks(chunk / BLOCK_SIZE))
-                    .zip(out.chunks_mut(chunk))
-                {
-                    s.spawn(move || pf.decode_slice(cs, ss, os));
+                for (i, os) in out.chunks_mut(chunk).enumerate() {
+                    let b0 = i * blocks_per_chunk;
+                    s.spawn(move || self.decode_region(pf, b0, os));
                 }
             });
         }
     }
 
+    /// Decode blocks `[block0, ...)` into `out` (which must start at the
+    /// element boundary of `block0`). Full blocks go through the active
+    /// kernel tier; a trailing partial block uses the scalar table.
+    fn decode_region(&self, pf: &PackedFormat, block0: usize, out: &mut [f32]) {
+        let ops = kernel::ops();
+        let scalar = kernel::scalar_ops();
+        let bs = self.geom.block_size;
+        for (i, ob) in out.chunks_mut(bs).enumerate() {
+            let kb = block0 + i;
+            if self.is_zero_block(kb) {
+                ob.fill(0.0);
+                continue;
+            }
+            let scale = self.block_scale_f32(kb);
+            let o = if ob.len() == bs { ops } else { scalar };
+            if self.packed4 {
+                let start = kb * bs / 2;
+                let cb = &self.codes[start..start + ob.len().div_ceil(2)];
+                (o.decode4_block)(&pf.decode16, cb, scale, ob);
+            } else {
+                let start = kb * bs;
+                let cb = &self.codes[start..start + ob.len()];
+                (o.decode_block)(&pf.decode, cb, scale, ob);
+            }
+        }
+    }
+
     pub fn decode(&self) -> Vec<f32> {
-        let mut out = vec![0.0f32; self.codes.len()];
+        let mut out = vec![0.0f32; self.len];
         self.decode_into(&mut out);
         out
     }
 
     /// Block scale in OCP E8M0 form (biased u8), when representable.
-    /// `None` for zero blocks and for exponents outside `[-127, 127]`
-    /// (f32-subnormal absmax corner — kept exact via the i16 widening).
+    /// `None` for zero blocks, for exponents outside `[-127, 127]`
+    /// (f32-subnormal absmax corner — kept exact via the i16 widening),
+    /// and under two-level scaling (whose block scales are E4M3-coded,
+    /// not E8M0).
     pub fn scale_e8m0(&self, block: usize) -> Option<u8> {
+        if self.geom.two_level {
+            return None;
+        }
         let e = self.scales[block];
         if e == ZERO_BLOCK || !(-127..=127).contains(&(e as i32)) {
             return None;
@@ -397,16 +661,36 @@ impl PackedVec {
     }
 }
 
+/// Pack byte codes (`sign << 7 | payload`, payload ≤ 7) into nibble pairs
+/// (`sign << 3 | payload`, low nibble = even element) through the active
+/// kernel tier.
+fn pack_nibbles(byte_codes: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; byte_codes.len().div_ceil(2)];
+    (kernel::ops().pack4)(byte_codes, &mut out);
+    out
+}
+
 /// Drop-in replacement for [`mx_qdq`](crate::formats::quant::mx_qdq):
 /// quantize→dequantize through the packed codec. Returns (values,
 /// last-bin count); bitwise identical to the scalar path for every
 /// [`FormatId`].
 pub fn packed_qdq(x: &[f32], id: FormatId, scale_bump: bool) -> (Vec<f32>, usize) {
+    packed_qdq_geom(x, id, scale_bump, BlockGeom::default())
+}
+
+/// [`packed_qdq`] under an explicit [`BlockGeom`] — bitwise identical to
+/// [`mx_qdq_geom`](crate::formats::quant::mx_qdq_geom).
+pub fn packed_qdq_geom(
+    x: &[f32],
+    id: FormatId,
+    scale_bump: bool,
+    geom: BlockGeom,
+) -> (Vec<f32>, usize) {
     match id {
         FormatId::Fp32 => (x.to_vec(), 0),
         FormatId::Bf16 => {
             let mut out = x.to_vec();
-            let threads = n_threads(out.len());
+            let threads = n_threads(out.len(), BLOCK_SIZE);
             if threads <= 1 {
                 for v in &mut out {
                     *v = bf16_rne(*v);
@@ -426,7 +710,7 @@ pub fn packed_qdq(x: &[f32], id: FormatId, scale_bump: bool) -> (Vec<f32>, usize
             (out, 0)
         }
         _ => {
-            let p = PackedVec::encode(x, id, scale_bump);
+            let p = PackedVec::encode_geom(x, id, scale_bump, geom);
             let mut out = vec![0.0f32; x.len()];
             p.decode_into(&mut out);
             (out, p.clamped)
@@ -436,7 +720,9 @@ pub fn packed_qdq(x: &[f32], id: FormatId, scale_bump: bool) -> (Vec<f32>, usize
 
 /// Reusable-buffer roundtrip for hot loops: encode `x` into the scratch
 /// buffers and decode into `out`, with zero heap allocation after the
-/// first call. Returns the last-bin count.
+/// first call. Returns the last-bin count. (Byte-code scratch — storage
+/// density is irrelevant for a fused roundtrip that never persists the
+/// codes.)
 pub struct QdqScratch {
     codes: Vec<u8>,
     scales: Vec<i16>,
@@ -460,13 +746,13 @@ impl QdqScratch {
         self.scales.resize(x.len() / BLOCK_SIZE, 0);
         let pf = PackedFormat::of(id);
         let bump = scale_bump as i32;
-        let threads = n_threads(x.len());
+        let threads = n_threads(x.len(), BLOCK_SIZE);
         if threads <= 1 {
             let c = pf.encode_slice(x, &mut self.codes, &mut self.scales, bump);
             pf.decode_slice(&self.codes, &self.scales, out);
             c
         } else {
-            let chunk = chunk_len(x.len(), threads);
+            let chunk = chunk_len(x.len(), threads, BLOCK_SIZE);
             let mut counts = vec![0usize; x.len().div_ceil(chunk)];
             pool::scope(|s| {
                 for ((((xs, cs), ss), os), count) in x
@@ -497,10 +783,17 @@ impl Default for QdqScratch {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::formats::quant::{mx_qdq, quantize_elem};
+    use crate::formats::quant::{mx_qdq, mx_qdq_geom, quantize_elem};
     use crate::util::prop;
 
-    const MX: [FormatId; 4] = [FormatId::E4M3, FormatId::E5M2, FormatId::E2M3, FormatId::E3M2];
+    const MX: [FormatId; 6] = [
+        FormatId::E4M3,
+        FormatId::E5M2,
+        FormatId::E2M3,
+        FormatId::E3M2,
+        FormatId::E2M1,
+        FormatId::Int4,
+    ];
 
     fn bits(v: &[f32]) -> Vec<u32> {
         v.iter().map(|x| x.to_bits()).collect()
@@ -519,6 +812,23 @@ mod tests {
             }
             assert_eq!(pf.decode[0].to_bits(), 0.0f32.to_bits());
             assert_eq!(pf.decode[0x80].to_bits(), (-0.0f32).to_bits());
+        }
+    }
+
+    #[test]
+    fn decode16_is_the_nibble_image_of_decode() {
+        for id in [FormatId::E2M1, FormatId::Int4] {
+            let pf = PackedFormat::of(id);
+            for nib in 0..16usize {
+                let byte = ((nib & 0x8) << 4) | (nib & 0x7);
+                assert_eq!(
+                    pf.decode16[nib].to_bits(),
+                    pf.decode[byte].to_bits(),
+                    "{id:?} nibble {nib}"
+                );
+            }
+            // Nibble 8 is -0.0, matching byte code 0x80.
+            assert_eq!(pf.decode16[8].to_bits(), (-0.0f32).to_bits());
         }
     }
 
@@ -621,6 +931,59 @@ mod tests {
     }
 
     #[test]
+    fn nibble_packing_halves_code_bytes() {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from(3);
+        let x = rng.normal_vec(4 * BLOCK_SIZE);
+        for id in [FormatId::E2M1, FormatId::Int4] {
+            let p = PackedVec::encode(&x, id, false);
+            assert!(p.packed4());
+            assert_eq!(p.len(), x.len());
+            assert_eq!(p.codes.len(), x.len() / 2);
+            // 0.5 code bytes + 2 scale bytes per 32-element block:
+            // 0.5625 effective bytes/elem (≤ the 0.6 acceptance bar).
+            assert_eq!(p.bytes(), x.len() / 2 + 2 * 4);
+            assert!((p.bytes() as f64 / x.len() as f64) <= 0.6);
+            // And an 8-bit format still spends a full byte per code.
+            let p8 = PackedVec::encode(&x, FormatId::E4M3, false);
+            assert!(!p8.packed4());
+            assert_eq!(p8.codes.len(), x.len());
+        }
+    }
+
+    #[test]
+    fn unpacked_storage_toggle_is_bitwise_invisible() {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from(9);
+        let x = rng.normal_vec(8 * BLOCK_SIZE);
+        for id in [FormatId::E2M1, FormatId::Int4] {
+            let packed = PackedVec::encode(&x, id, false);
+            set_unpacked_subbyte_storage(true);
+            let unpacked = PackedVec::encode(&x, id, false);
+            set_unpacked_subbyte_storage(false);
+            assert!(packed.packed4() && !unpacked.packed4());
+            assert_eq!(packed.codes.len() * 2, unpacked.codes.len());
+            assert_eq!(packed.clamped, unpacked.clamped);
+            assert_eq!(bits(&packed.decode()), bits(&unpacked.decode()), "{id:?}");
+        }
+    }
+
+    #[test]
+    fn tails_and_geometries_match_the_geom_oracle() {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from(21);
+        let x = rng.normal_vec(3 * 64 + 13); // tails for every block size
+        for id in MX {
+            for bs in crate::formats::spec::BLOCK_SIZES {
+                for two_level in [false, true] {
+                    let geom = BlockGeom::new(bs, two_level);
+                    let (want, cw) = mx_qdq_geom(&x, id, false, geom);
+                    let (got, cg) = packed_qdq_geom(&x, id, false, geom);
+                    assert_eq!(cw, cg, "{id:?} bs={bs} 2lvl={two_level} clamp count");
+                    assert_eq!(bits(&want), bits(&got), "{id:?} bs={bs} 2lvl={two_level}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn scratch_qdq_matches_and_reuses() {
         let mut rng = crate::util::rng::Xoshiro256::seed_from(11);
         let x = rng.normal_vec(4096);
@@ -640,8 +1003,16 @@ mod tests {
         // identical to the single-threaded scalar result.
         let mut rng = crate::util::rng::Xoshiro256::seed_from(5);
         let x = rng.normal_vec(PAR_THRESHOLD * 4);
-        let (a, ca) = mx_qdq(&x, FormatId::E4M3, false);
-        let (b, cb) = packed_qdq(&x, FormatId::E4M3, false);
+        for id in [FormatId::E4M3, FormatId::E2M1] {
+            let (a, ca) = mx_qdq(&x, id, false);
+            let (b, cb) = packed_qdq(&x, id, false);
+            assert_eq!(bits(&a), bits(&b), "{id:?}");
+            assert_eq!(ca, cb);
+        }
+        // With a tail riding on the parallel fan-out.
+        let xt = &x[..PAR_THRESHOLD * 4 - 7];
+        let (a, ca) = mx_qdq_geom(xt, FormatId::E2M1, false, BlockGeom::default());
+        let (b, cb) = packed_qdq_geom(xt, FormatId::E2M1, false, BlockGeom::default());
         assert_eq!(bits(&a), bits(&b));
         assert_eq!(ca, cb);
     }
@@ -657,14 +1028,13 @@ mod tests {
             PackedVec::try_encode(&x, FormatId::Bf16, false).unwrap_err(),
             PackError::NotMx(FormatId::Bf16)
         );
-        // Unaligned input: typed error too.
-        assert_eq!(
-            PackedVec::try_encode(&x[..7], FormatId::E4M3, false).unwrap_err(),
-            PackError::Unaligned { len: 7 }
-        );
         // Errors render a human-readable message.
         assert!(PackError::NotMx(FormatId::Fp32).to_string().contains("Fp32"));
-        assert!(PackError::Unaligned { len: 7 }.to_string().contains('7'));
+        // Unaligned lengths are legal now: the tail block carries its own
+        // scale (parity with the geom oracle is tested above).
+        let t = PackedVec::try_encode(&x[..7], FormatId::E4M3, false).unwrap();
+        assert_eq!(t.len(), 7);
+        assert_eq!(t.n_blocks(), 1);
         // The fallible path agrees with the infallible one on success.
         let a = PackedVec::try_encode(&x, FormatId::E4M3, false).unwrap();
         let b = PackedVec::encode(&x, FormatId::E4M3, false);
@@ -682,5 +1052,9 @@ mod tests {
         let z = PackedVec::encode(&vec![0.0f32; 32], FormatId::E4M3, false);
         assert_eq!(z.scale_e8m0(0), None);
         assert_eq!(z.decode(), vec![0.0f32; 32]);
+        // Two-level vectors expose no E8M0 view.
+        let t = PackedVec::encode_geom(&x, FormatId::E4M3, false, BlockGeom::new(32, true));
+        assert_eq!(t.scale_e8m0(0), None);
+        assert_eq!(t.bytes(), 64 + 2 + 4);
     }
 }

@@ -5,7 +5,7 @@
 //! round-half-to-even onto the normal+subnormal element grid with
 //! clamp-to-max-normal on overflow (the paper's §6.1 mechanism).
 
-use super::spec::{ElemFormat, FormatId, BLOCK_SIZE};
+use super::spec::{BlockGeom, ElemFormat, FormatId, BLOCK_SIZE, TWO_LEVEL_SCALE_MAX};
 
 /// floor(log2(x)) for positive normal f32 x, from the exponent bits (exact).
 #[inline]
@@ -122,6 +122,101 @@ pub fn mx_qdq(x: &[f32], id: FormatId, scale_bump: bool) -> (Vec<f32>, usize) {
             (out, clamped)
         }
     }
+}
+
+/// NaN-skipping absolute max over a slice (the fold every block/tensor
+/// amax in the codec uses: `f32::max` drops a NaN operand, so NaN inputs
+/// never become the scale).
+#[inline]
+pub fn amax(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |acc, &v| acc.max(v.abs()))
+}
+
+/// The fp32 per-tensor scale of NVFP4-style two-level scaling: maps the
+/// tensor amax onto `max_norm(elem) · 448` so the largest per-block scale
+/// lands on E4M3's max normal. All-zero tensors get the neutral scale 1.0;
+/// an underflowed-to-zero quotient is clamped to the smallest positive
+/// f32 so division by the scale stays finite.
+pub fn two_level_tensor_scale(x: &[f32], f: &ElemFormat) -> f32 {
+    let m = amax(x);
+    if m == 0.0 {
+        return 1.0;
+    }
+    let s = m / (f.max_norm() * TWO_LEVEL_SCALE_MAX);
+    if s == 0.0 {
+        f32::MIN_POSITIVE
+    } else {
+        s
+    }
+}
+
+/// The effective per-block scale of two-level scaling: the raw quotient
+/// `amax_b / (S · max_norm)` quantized onto the E4M3 grid, times the fp32
+/// tensor scale. A nonzero block whose E4M3 scale underflows to zero is
+/// pinned to E4M3's min subnormal (2^-9) so its elements stay finite;
+/// zero blocks return 0.0 (the zero-block sentinel). `scale_bump` doubles
+/// the raw scale — the same one-exponent headroom the E8M0 bump buys.
+///
+/// This helper is the single source of the two-level scale math: both the
+/// scalar oracle ([`mx_qdq_geom`]) and the packed codec derive block
+/// scales through the identical float-op sequence, which is what keeps
+/// the two paths bitwise-equal.
+pub fn two_level_block_eff(amax_b: f32, s_tensor: f32, f: &ElemFormat, scale_bump: bool) -> f32 {
+    if amax_b == 0.0 {
+        return 0.0;
+    }
+    let e4m3 = ElemFormat::new("E4M3", 4, 3);
+    let mut raw = (amax_b / s_tensor) / f.max_norm();
+    if scale_bump {
+        raw *= 2.0;
+    }
+    let mut s8 = quantize_elem(raw, &e4m3);
+    if s8 == 0.0 {
+        s8 = e4m3.min_subnormal();
+    }
+    s8 * s_tensor
+}
+
+/// Quantize→dequantize under an arbitrary [`BlockGeom`]: any supported
+/// block size, power-of-two or two-level scaling, and a trailing partial
+/// block (`len % block_size != 0`) quantized with its own amax. This is
+/// the scalar *oracle* the packed sub-byte codec is parity-tested
+/// against; with the default geometry it is bitwise-identical to
+/// [`mx_qdq`].
+pub fn mx_qdq_geom(
+    x: &[f32],
+    id: FormatId,
+    scale_bump: bool,
+    geom: BlockGeom,
+) -> (Vec<f32>, usize) {
+    let f = match id.elem() {
+        Some(f) => f,
+        None => return mx_qdq(x, id, scale_bump),
+    };
+    let mut out = x.to_vec();
+    let maxn = f.max_norm();
+    let s_tensor = if geom.two_level { two_level_tensor_scale(x, &f) } else { 1.0 };
+    let mut clamped = 0usize;
+    for block in out.chunks_mut(geom.block_size) {
+        let m = amax(block);
+        if m == 0.0 {
+            block.fill(0.0);
+            continue;
+        }
+        let scale = if geom.two_level {
+            two_level_block_eff(m, s_tensor, &f, scale_bump)
+        } else {
+            pow2(floor_log2(m) - f.emax() + scale_bump as i32)
+        };
+        for v in block.iter_mut() {
+            let q = quantize_elem(*v / scale, &f);
+            if q.abs() >= maxn {
+                clamped += 1;
+            }
+            *v = q * scale;
+        }
+    }
+    (out, clamped)
 }
 
 /// Like [`mx_qdq`] but also returns the per-element last-bin mask.
@@ -369,6 +464,91 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn geom_oracle_with_default_geometry_matches_mx_qdq_bitwise() {
+        prop::forall("qdq-geom-default", 64, |rng| {
+            let x = prop::gen_f32_vec(rng, 96);
+            for id in [FormatId::E4M3, FormatId::E2M1, FormatId::Int4] {
+                let (want, cw) = mx_qdq(&x, id, false);
+                let (got, cg) = mx_qdq_geom(&x, id, false, BlockGeom::default());
+                if cw != cg {
+                    return Err(format!("{id:?}: clamp count diverged"));
+                }
+                if want.iter().zip(&got).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                    return Err(format!("{id:?}: geom oracle diverged from mx_qdq"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fp4_and_int4_grids() {
+        let e2m1 = FormatId::E2M1.elem().unwrap();
+        // The full OCP FP4 positive grid passes through exactly.
+        for v in [0.5f32, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0] {
+            assert_eq!(quantize_elem(v, &e2m1), v, "{v}");
+            assert_eq!(quantize_elem(-v, &e2m1), -v, "-{v}");
+        }
+        assert_eq!(quantize_elem(100.0, &e2m1), 6.0);
+        assert_eq!(quantize_elem(2.5, &e2m1), 2.0, "ties-to-even in [2,4)");
+
+        let int4 = FormatId::Int4.elem().unwrap();
+        for (i, v) in [0.5f32, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5].iter().enumerate() {
+            assert_eq!(quantize_elem(*v, &int4), *v, "code {i}");
+        }
+        assert_eq!(quantize_elem(9.0, &int4), 3.5);
+        // Uniform grid: midpoints resolve by ties-to-even everywhere.
+        assert_eq!(quantize_elem(2.75, &int4), 3.0);
+    }
+
+    #[test]
+    fn two_level_scale_properties() {
+        let f = FormatId::E2M1.elem().unwrap();
+        // Tensor scale maps amax onto max_norm·448.
+        let x = vec![6.0f32 * 448.0; 32];
+        let s = two_level_tensor_scale(&x, &f);
+        assert_eq!(s, 1.0);
+        // Nonzero block never gets a zero effective scale.
+        let eff = two_level_block_eff(1e-38, s, &f, false);
+        assert!(eff > 0.0, "underflow guard must keep the block finite");
+        // Zero block keeps the sentinel.
+        assert_eq!(two_level_block_eff(0.0, s, &f, false), 0.0);
+        // All-zero tensor: neutral scale.
+        assert_eq!(two_level_tensor_scale(&[0.0; 8], &f), 1.0);
+        // Bump doubles the raw scale before E4M3 rounding.
+        let a = two_level_block_eff(3.0, 1.0, &f, false);
+        let b = two_level_block_eff(3.0, 1.0, &f, true);
+        assert_eq!(b, 2.0 * a);
+    }
+
+    #[test]
+    fn geom_oracle_handles_tails_and_block_sizes() {
+        let mut x = vec![0.0f32; 75]; // 75 = 2·32 + 11-tail for bs=32
+        for (i, v) in x.iter_mut().enumerate() {
+            *v = ((i as f32) - 40.0) * 0.37;
+        }
+        for bs in crate::formats::spec::BLOCK_SIZES {
+            for two_level in [false, true] {
+                let geom = BlockGeom::new(bs, two_level);
+                let (y, _) = mx_qdq_geom(&x, FormatId::E2M1, false, geom);
+                assert_eq!(y.len(), x.len());
+                assert!(y.iter().all(|v| v.is_finite()), "bs={bs} two_level={two_level}");
+                if !two_level {
+                    // Power-of-two scaling is idempotent at any block size
+                    // (two-level is not: re-quantizing moves the tensor
+                    // amax and with it the fp32 scale).
+                    let (y2, _) = mx_qdq_geom(&y, FormatId::E2M1, false, geom);
+                    assert_eq!(
+                        y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        y2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "bs={bs} not idempotent"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

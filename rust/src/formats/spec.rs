@@ -4,8 +4,53 @@
 //! vector layouts must match field-for-field (cross-checked by the golden
 //! integration tests that execute the compiled quantizer artifact).
 
-/// Hardware MX block size (k in the paper's Algorithm 1).
+/// Default hardware MX block size (k in the paper's Algorithm 1). Runs can
+/// select other geometries via [`BlockGeom`]; this constant remains the
+/// OCP MX default and the value assumed wherever no geometry is given.
 pub const BLOCK_SIZE: usize = 32;
+
+/// The block sizes the generalized geometry supports (NVFP4 uses 16, OCP
+/// MX uses 32; 64 probes the coarse end the block-size ablations cover).
+pub const BLOCK_SIZES: [usize; 3] = [16, 32, 64];
+
+/// The per-tensor second-level scale ceiling for two-level scaling: the
+/// fp32 tensor scale maps the largest per-block scale onto E4M3's max
+/// normal (448), mirroring the NVFP4 recipe.
+pub const TWO_LEVEL_SCALE_MAX: f32 = 448.0;
+
+/// Block geometry of one quantization site: how many elements share a
+/// scale, and whether the scale is a plain power of two (E8M0, classic MX)
+/// or an NVFP4-style two-level scheme (fp8 E4M3 per-block scale × one fp32
+/// per-tensor scale).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BlockGeom {
+    pub block_size: usize,
+    pub two_level: bool,
+}
+
+impl Default for BlockGeom {
+    fn default() -> Self {
+        BlockGeom { block_size: BLOCK_SIZE, two_level: false }
+    }
+}
+
+impl BlockGeom {
+    pub const fn new(block_size: usize, two_level: bool) -> BlockGeom {
+        BlockGeom { block_size, two_level }
+    }
+
+    /// Is this the classic MX geometry (32-element power-of-two scale)?
+    pub fn is_default(&self) -> bool {
+        *self == BlockGeom::default()
+    }
+
+    /// One-byte cache-key encoding: block size in the low 7 bits (16/32/64
+    /// all fit), two-level flag in the top bit.
+    pub fn key_byte(&self) -> u8 {
+        debug_assert!(self.block_size <= 0x7F);
+        (self.block_size as u8) | ((self.two_level as u8) << 7)
+    }
+}
 
 /// Runtime format ids (values carried inside the `fmt` tensor).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -17,16 +62,23 @@ pub enum FormatId {
     E5M2 = 3,
     E2M3 = 4,
     E3M2 = 5,
+    /// FP4 (OCP MXFP4 element type): 1 sign, 2 exponent, 1 mantissa bits.
+    E2M1 = 6,
+    /// Uniform symmetric 4-bit grid (±0.5·k, k = 1..7) expressed as a
+    /// one-exponent-band float format so the shared codec applies.
+    Int4 = 7,
 }
 
 impl FormatId {
-    pub const ALL: [FormatId; 6] = [
+    pub const ALL: [FormatId; 8] = [
         FormatId::Fp32,
         FormatId::Bf16,
         FormatId::E4M3,
         FormatId::E5M2,
         FormatId::E2M3,
         FormatId::E3M2,
+        FormatId::E2M1,
+        FormatId::Int4,
     ];
 
     pub fn name(self) -> &'static str {
@@ -37,11 +89,24 @@ impl FormatId {
             FormatId::E5M2 => "e5m2",
             FormatId::E2M3 => "e2m3",
             FormatId::E3M2 => "e3m2",
+            FormatId::E2M1 => "e2m1",
+            FormatId::Int4 => "int4",
         }
     }
 
+    /// Parse a format name, case-insensitively, accepting the aliases the
+    /// papers' naming conventions use (`fp4`/`mxfp4` → `e2m1`, `mxfp8` →
+    /// `e4m3`, `fp8` → `e4m3`, `mxfp6` → `e2m3`) so CLI/sweep fmt strings
+    /// never fall through to a silent `None`.
     pub fn from_name(s: &str) -> Option<FormatId> {
-        Self::ALL.iter().copied().find(|f| f.name() == s)
+        let lower = s.to_ascii_lowercase();
+        let canonical = match lower.as_str() {
+            "fp4" | "mxfp4" => "e2m1",
+            "fp8" | "mxfp8" => "e4m3",
+            "mxfp6" => "e2m3",
+            other => other,
+        };
+        Self::ALL.iter().copied().find(|f| f.name() == canonical)
     }
 
     /// Inverse of `self as u8` — decodes the ids carried in the runtime
@@ -51,7 +116,24 @@ impl FormatId {
     }
 
     pub fn is_mx(self) -> bool {
-        matches!(self, FormatId::E4M3 | FormatId::E5M2 | FormatId::E2M3 | FormatId::E3M2)
+        matches!(
+            self,
+            FormatId::E4M3
+                | FormatId::E5M2
+                | FormatId::E2M3
+                | FormatId::E3M2
+                | FormatId::E2M1
+                | FormatId::Int4
+        )
+    }
+
+    /// Bits one element code occupies in packed storage: 4 for the FP4 /
+    /// INT4 element types (two codes per byte), 8 otherwise.
+    pub fn code_bits(self) -> usize {
+        match self {
+            FormatId::E2M1 | FormatId::Int4 => 4,
+            _ => 8,
+        }
     }
 
     /// MX element-format constants; `None` for fp32/bf16.
@@ -61,6 +143,8 @@ impl FormatId {
             FormatId::E5M2 => Some(ElemFormat::new("E5M2", 5, 2)),
             FormatId::E2M3 => Some(ElemFormat::new("E2M3", 2, 3)),
             FormatId::E3M2 => Some(ElemFormat::new("E3M2", 3, 2)),
+            FormatId::E2M1 => Some(ElemFormat::new("E2M1", 2, 1)),
+            FormatId::Int4 => Some(ElemFormat::new("INT4", 1, 2)),
             _ => None,
         }
     }
@@ -93,11 +177,11 @@ impl ElemFormat {
 
     /// Exponent of the largest normal value.
     ///
-    /// OCP MX quirk: E4M3-style formats (and the FP6 formats) reclaim the
-    /// top exponent code for normal values (only one NaN encoding), so
+    /// OCP MX quirk: E4M3-style formats (and the FP6/FP4 formats) reclaim
+    /// the top exponent code for normal values (only one NaN encoding), so
     /// emax = bias + 1... except E5M2 which follows IEEE (emax = bias).
     /// Net effect, matching the published tables:
-    /// E4M3→8, E5M2→15, E2M3→2, E3M2→4.
+    /// E4M3→8, E5M2→15, E2M3→2, E3M2→4, E2M1→2, INT4→1.
     pub fn emax(&self) -> i32 {
         match self.name {
             "E5M2" => self.bias(),
@@ -105,7 +189,8 @@ impl ElemFormat {
         }
     }
 
-    /// Largest finite magnitude (e.g. 448 for E4M3, 57344 for E5M2).
+    /// Largest finite magnitude (e.g. 448 for E4M3, 57344 for E5M2,
+    /// 6 for E2M1, 3.5 for the INT4 grid).
     pub fn max_norm(&self) -> f32 {
         let frac = match self.name {
             // E4M3 loses its top mantissa code to NaN: 2 - 2^-(m-1) ... the
@@ -113,7 +198,7 @@ impl ElemFormat {
             "E4M3" => 2.0 - 2.0f32.powi(-(self.mbits as i32 - 1)),
             // E5M2 IEEE: full mantissa below inf: 2 - 2^-m → 1.75·2^15.
             "E5M2" => 2.0 - 2.0f32.powi(-(self.mbits as i32)),
-            // FP6 formats have no NaN/inf codes: full mantissa.
+            // FP6/FP4 formats have no NaN/inf codes: full mantissa.
             _ => 2.0 - 2.0f32.powi(-(self.mbits as i32)),
         };
         frac * 2.0f32.powi(self.emax())
@@ -126,6 +211,9 @@ impl ElemFormat {
 }
 
 /// Index constants for the runtime `fmt` vector (f32[FMT_LEN]).
+///
+/// Indices 9/10 (block geometry) were appended after the original layout;
+/// length-9 vectors from older spools still decode (default geometry).
 pub mod fmt_idx {
     pub const W_FMT_FWD: usize = 0;
     pub const A_FMT_FWD: usize = 1;
@@ -136,7 +224,11 @@ pub mod fmt_idx {
     pub const QUANT_BWD: usize = 6;
     pub const QUANT_LN: usize = 7;
     pub const SCALE_BUMP: usize = 8;
-    pub const FMT_LEN: usize = 9;
+    pub const BLOCK_SIZE: usize = 9; // 16/32/64 (0 decodes as 32)
+    pub const TWO_LEVEL: usize = 10; // 0/1: NVFP4-style two-level scaling
+    pub const FMT_LEN: usize = 11;
+    /// Length of the original (pre-geometry) fmt vector, still accepted.
+    pub const FMT_LEN_V0: usize = 9;
 }
 
 /// Index constants for the runtime `hyper` vector (f32[HYPER_LEN]).
@@ -161,6 +253,8 @@ pub struct Fmt {
     pub quant_bwd: bool,
     pub quant_ln: bool,
     pub scale_bump: bool,
+    /// Block geometry applied at every MX quantization site of this run.
+    pub geom: BlockGeom,
 }
 
 impl Fmt {
@@ -187,6 +281,7 @@ impl Fmt {
             quant_bwd: true,
             quant_ln: true,
             scale_bump: false,
+            geom: BlockGeom::default(),
         }
     }
 
@@ -220,6 +315,11 @@ impl Fmt {
         Fmt { scale_bump: true, ..self }
     }
 
+    /// Select a non-default block geometry for every quantization site.
+    pub fn with_geom(self, geom: BlockGeom) -> Fmt {
+        Fmt { geom, ..self }
+    }
+
     /// Serialize to the runtime f32 vector the step executables consume.
     pub fn to_vec(&self) -> Vec<f32> {
         use fmt_idx::*;
@@ -233,6 +333,8 @@ impl Fmt {
         v[QUANT_BWD] = self.quant_bwd as u8 as f32;
         v[QUANT_LN] = self.quant_ln as u8 as f32;
         v[SCALE_BUMP] = self.scale_bump as u8 as f32;
+        v[BLOCK_SIZE] = self.geom.block_size as f32;
+        v[TWO_LEVEL] = self.geom.two_level as u8 as f32;
         v
     }
 
@@ -240,10 +342,12 @@ impl Fmt {
     /// [`Fmt::to_vec`]) — what a native backend does with `StepArgs::fmt`.
     /// Returns `None` for short vectors or unknown format ids (including
     /// negative or non-integral values, which a bare `as u8` cast would
-    /// silently saturate onto a valid id).
+    /// silently saturate onto a valid id). Length-9 vectors (the layout
+    /// before block geometry existed) decode with the default geometry, so
+    /// spooled jobs from older runs stay resumable.
     pub fn from_vec(v: &[f32]) -> Option<Fmt> {
         use fmt_idx::*;
-        if v.len() < FMT_LEN {
+        if v.len() < FMT_LEN_V0 {
             return None;
         }
         let id = |i: usize| {
@@ -252,6 +356,19 @@ impl Fmt {
                 return None;
             }
             FormatId::from_id(x as u8)
+        };
+        let geom = if v.len() >= FMT_LEN {
+            let bs = v[BLOCK_SIZE];
+            let block_size = if bs == 0.0 {
+                crate::formats::spec::BLOCK_SIZE
+            } else if BLOCK_SIZES.contains(&(bs as usize)) && bs.fract() == 0.0 {
+                bs as usize
+            } else {
+                return None;
+            };
+            BlockGeom::new(block_size, v[TWO_LEVEL] > 0.5)
+        } else {
+            BlockGeom::default()
         };
         Some(Fmt {
             w_fwd: id(W_FMT_FWD)?,
@@ -263,11 +380,12 @@ impl Fmt {
             quant_bwd: v[QUANT_BWD] > 0.5,
             quant_ln: v[QUANT_LN] > 0.5,
             scale_bump: v[SCALE_BUMP] > 0.5,
+            geom,
         })
     }
 
     /// Short human-readable label used in logs/reports, e.g.
-    /// `e4m3-bf16`, `e5m2-e5m2(fwd)`, `fp32`.
+    /// `e4m3-bf16`, `e5m2-e5m2(fwd)`, `e2m1-e2m1(bs16)(2lvl)`, `fp32`.
     pub fn label(&self) -> String {
         if !self.quant_fwd && !self.quant_bwd {
             return "fp32".into();
@@ -283,6 +401,12 @@ impl Fmt {
         }
         if self.scale_bump {
             s.push_str("(bump)");
+        }
+        if self.geom.block_size != BLOCK_SIZE {
+            s.push_str(&format!("(bs{})", self.geom.block_size));
+        }
+        if self.geom.two_level {
+            s.push_str("(2lvl)");
         }
         s
     }
@@ -314,6 +438,29 @@ mod tests {
         assert_eq!(e3m2.emax(), 4);
         assert_eq!(e3m2.max_norm(), 28.0);
         assert_eq!(e3m2.emin(), -2);
+
+        // OCP FP4 (E2M1): max 6.0, min subnormal 0.5, emax 2.
+        let e2m1 = FormatId::E2M1.elem().unwrap();
+        assert_eq!(e2m1.emax(), 2);
+        assert_eq!(e2m1.max_norm(), 6.0);
+        assert_eq!(e2m1.emin(), 0);
+        assert_eq!(e2m1.min_subnormal(), 0.5);
+
+        // INT4 grid: one exponent band at e=1 plus the subnormal ramp gives
+        // the uniform ±{0.5, 1.0, ..., 3.5} grid.
+        let int4 = FormatId::Int4.elem().unwrap();
+        assert_eq!(int4.emax(), 1);
+        assert_eq!(int4.max_norm(), 3.5);
+        assert_eq!(int4.emin(), 1);
+        assert_eq!(int4.min_subnormal(), 0.5);
+    }
+
+    #[test]
+    fn code_bits_by_format() {
+        assert_eq!(FormatId::E4M3.code_bits(), 8);
+        assert_eq!(FormatId::E3M2.code_bits(), 8);
+        assert_eq!(FormatId::E2M1.code_bits(), 4);
+        assert_eq!(FormatId::Int4.code_bits(), 4);
     }
 
     #[test]
@@ -325,6 +472,13 @@ mod tests {
         assert_eq!(v[fmt_idx::G_FMT_BWD], 3.0); // e5m2
         assert_eq!(v[fmt_idx::QUANT_FWD], 1.0);
         assert_eq!(v[fmt_idx::SCALE_BUMP], 0.0);
+        assert_eq!(v[fmt_idx::BLOCK_SIZE], 32.0);
+        assert_eq!(v[fmt_idx::TWO_LEVEL], 0.0);
+
+        let g = f.with_geom(BlockGeom::new(16, true));
+        let v = g.to_vec();
+        assert_eq!(v[fmt_idx::BLOCK_SIZE], 16.0);
+        assert_eq!(v[fmt_idx::TWO_LEVEL], 1.0);
     }
 
     #[test]
@@ -334,6 +488,12 @@ mod tests {
         assert_eq!(Fmt::fwd_only(FormatId::E5M2, FormatId::E5M2).label(), "e5m2-e5m2(fwd)");
         assert_eq!(Fmt::bf16_act(FormatId::E4M3).label(), "e4m3-bf16(noln)");
         assert_eq!(Fmt::mx_mix().label(), "e4m3-e4m3/bwd:e5m2");
+        assert_eq!(
+            Fmt::full(FormatId::E2M1, FormatId::E2M1)
+                .with_geom(BlockGeom::new(16, true))
+                .label(),
+            "e2m1-e2m1(bs16)(2lvl)"
+        );
     }
 
     #[test]
@@ -344,6 +504,8 @@ mod tests {
             Fmt::mx_mix(),
             Fmt::bf16_act(FormatId::E2M3),
             Fmt::fwd_only(FormatId::E5M2, FormatId::E5M2).with_scale_bump(),
+            Fmt::full(FormatId::E2M1, FormatId::Int4).with_geom(BlockGeom::new(64, false)),
+            Fmt::full(FormatId::E2M1, FormatId::E2M1).with_geom(BlockGeom::new(16, true)),
         ] {
             assert_eq!(Fmt::from_vec(&f.to_vec()), Some(f));
         }
@@ -355,6 +517,18 @@ mod tests {
         assert_eq!(Fmt::from_vec(&bad), None, "negative id must not saturate to fp32");
         bad[fmt_idx::W_FMT_FWD] = 2.9;
         assert_eq!(Fmt::from_vec(&bad), None, "fractional id must not truncate to e4m3");
+        let mut bad_bs = Fmt::fp32().to_vec();
+        bad_bs[fmt_idx::BLOCK_SIZE] = 24.0;
+        assert_eq!(Fmt::from_vec(&bad_bs), None, "unsupported block size");
+    }
+
+    #[test]
+    fn legacy_length9_vectors_decode_with_default_geometry() {
+        let f = Fmt::mx_mix();
+        let v9: Vec<f32> = f.to_vec()[..fmt_idx::FMT_LEN_V0].to_vec();
+        let decoded = Fmt::from_vec(&v9).expect("length-9 vector must decode");
+        assert_eq!(decoded, f);
+        assert_eq!(decoded.geom, BlockGeom::default());
     }
 
     #[test]
@@ -362,6 +536,15 @@ mod tests {
         for f in FormatId::ALL {
             assert_eq!(FormatId::from_name(f.name()), Some(f));
         }
-        assert_eq!(FormatId::from_name("fp4"), None);
+        // Case-insensitivity and the papers' aliases.
+        assert_eq!(FormatId::from_name("E4M3"), Some(FormatId::E4M3));
+        assert_eq!(FormatId::from_name("FP32"), Some(FormatId::Fp32));
+        assert_eq!(FormatId::from_name("fp4"), Some(FormatId::E2M1));
+        assert_eq!(FormatId::from_name("MXFP4"), Some(FormatId::E2M1));
+        assert_eq!(FormatId::from_name("mxfp8"), Some(FormatId::E4M3));
+        assert_eq!(FormatId::from_name("fp8"), Some(FormatId::E4M3));
+        assert_eq!(FormatId::from_name("mxfp6"), Some(FormatId::E2M3));
+        assert_eq!(FormatId::from_name("INT4"), Some(FormatId::Int4));
+        assert_eq!(FormatId::from_name("fp5"), None);
     }
 }

@@ -45,13 +45,14 @@ use mxstab::coordinator::{
     run_worker, Intervention, Job, LrSchedule, Policy, RunConfig, Spool, Sweeper, WorkerConfig,
 };
 use mxstab::experiments;
-use mxstab::formats::spec::{Fmt, FormatId};
+use mxstab::formats::spec::{Fmt, FormatId, BLOCK_SIZES};
 use mxstab::runtime::{Backend, Engine, NativeEngine};
 use mxstab::util::args::Args;
 use mxstab::util::table::Table;
 
 fn parse_fmt(spec: &str) -> Result<Fmt> {
-    // Grammar: fp32 | mx-mix | <w>-<a>[:fwd][:noln][:bump]  e.g. e4m3-bf16:fwd
+    // Grammar: fp32 | mx-mix | <w>-<a>[:fwd][:noln][:bump][:bs16|:bs32|:bs64][:2lvl]
+    // e.g. e4m3-bf16:fwd, e2m1-e2m1:bs16:2lvl (NVFP4-style geometry).
     if spec == "fp32" {
         return Ok(Fmt::fp32());
     }
@@ -71,7 +72,11 @@ fn parse_fmt(spec: &str) -> Result<Fmt> {
             "fwd" => fmt.quant_bwd = false,
             "noln" => fmt.quant_ln = false,
             "bump" => fmt.scale_bump = true,
-            _ => bail!("unknown format flag {flag:?}"),
+            "2lvl" => fmt.geom.two_level = true,
+            _ => match flag.strip_prefix("bs").and_then(|n| n.parse::<usize>().ok()) {
+                Some(bs) if BLOCK_SIZES.contains(&bs) => fmt.geom.block_size = bs,
+                _ => bail!("unknown format flag {flag:?}"),
+            },
         }
     }
     Ok(fmt)

@@ -5,7 +5,7 @@
 //! quantized linear layer used to transpose and re-encode them on every
 //! forward and backward of every layer — once per paired pass, once per
 //! eval, every step for the proxy's frozen teacher. [`ExecCache`] memoizes
-//! those operands per `(site, stage, format, bump)` key:
+//! those operands per `(site, stage, format, bump, geometry)` key:
 //!
 //! * **Param entries** are invalidated as a set by
 //!   [`ExecCache::invalidate_params`], which
@@ -77,8 +77,10 @@ pub enum Class {
 }
 
 /// Full cache key: site, stage, effective element format (`FormatId as
-/// u8`), scale-bump flag.
-pub type Key = (Site, Stage, u8, bool);
+/// u8`), scale-bump flag, block-geometry byte
+/// ([`BlockGeom::key_byte`](crate::formats::spec::BlockGeom::key_byte) —
+/// block size | two-level bit).
+pub type Key = (Site, Stage, u8, bool, u8);
 
 /// A memoized operand. Entries are `Arc`-shared so lookups are O(1)
 /// pointer clones regardless of tensor size.
@@ -228,7 +230,7 @@ mod tests {
     }
 
     fn key(tensor: usize, stage: Stage) -> Key {
-        (Site::new(tensor, 0), stage, 0, false)
+        (Site::new(tensor, 0), stage, 0, false, 32)
     }
 
     #[test]
@@ -260,12 +262,21 @@ mod tests {
         c.get_or_insert(Class::Param, key(0, Stage::FwdW), || dense(1.0));
         let other_stage = c.get_or_insert(Class::Param, key(0, Stage::BwdW), || dense(2.0));
         assert_eq!(other_stage.into_dense()[0], 2.0);
-        let other_fmt =
-            c.get_or_insert(Class::Param, (Site::new(0, 0), Stage::FwdW, 3, false), || dense(4.0));
+        let other_fmt = c
+            .get_or_insert(Class::Param, (Site::new(0, 0), Stage::FwdW, 3, false, 32), || {
+                dense(4.0)
+            });
         assert_eq!(other_fmt.into_dense()[0], 4.0);
-        let other_layer =
-            c.get_or_insert(Class::Param, (Site::new(0, 1), Stage::FwdW, 0, false), || dense(5.0));
+        let other_layer = c
+            .get_or_insert(Class::Param, (Site::new(0, 1), Stage::FwdW, 0, false, 32), || {
+                dense(5.0)
+            });
         assert_eq!(other_layer.into_dense()[0], 5.0);
+        let other_geom = c
+            .get_or_insert(Class::Param, (Site::new(0, 0), Stage::FwdW, 0, false, 16), || {
+                dense(6.0)
+            });
+        assert_eq!(other_geom.into_dense()[0], 6.0);
     }
 
     #[test]

@@ -19,9 +19,9 @@ use super::cache::{CachedOp, Class, ExecCache, Site, Stage};
 use super::ops::{qgemm, quantize_site, QMat};
 use crate::formats::gemm::{transpose, transpose_into, PackedMatrix};
 use crate::formats::kernel;
-use crate::formats::packed::packed_qdq;
+use crate::formats::packed::packed_qdq_geom;
 use crate::formats::quant::bf16_rne;
-use crate::formats::spec::{hyper_idx, Fmt, FormatId};
+use crate::formats::spec::{hyper_idx, BlockGeom, Fmt, FormatId};
 use crate::runtime::StepArgs;
 
 // Adam constants (python/compile/formats.py) — defined next to the
@@ -85,9 +85,12 @@ impl<'c> WeightCtx<'c> {
 pub fn weight_fwd_site<'a>(w: &[f32], k: usize, n: usize, fmt: &Fmt, cx: WeightCtx) -> QMat<'a> {
     debug_assert_eq!(w.len(), k * n);
     let eff = if fmt.quant_fwd { fmt.w_fwd } else { FormatId::Fp32 };
+    // The fp32 transpose and bf16 rounding are geometry-independent; only
+    // MX-packed entries key on the block geometry.
+    let g0 = BlockGeom::default().key_byte();
     let wt = cx
         .ex
-        .get_or_insert(cx.class, (cx.site, Stage::FwdT, FormatId::Fp32 as u8, false), || {
+        .get_or_insert(cx.class, (cx.site, Stage::FwdT, FormatId::Fp32 as u8, false, g0), || {
             CachedOp::Dense(Arc::new(transpose(w, k, n)))
         })
         .into_dense();
@@ -96,17 +99,26 @@ pub fn weight_fwd_site<'a>(w: &[f32], k: usize, n: usize, fmt: &Fmt, cx: WeightC
         FormatId::Bf16 => {
             let rounded = cx
                 .ex
-                .get_or_insert(cx.class, (cx.site, Stage::FwdW, eff as u8, false), || {
+                .get_or_insert(cx.class, (cx.site, Stage::FwdW, eff as u8, false, g0), || {
                     CachedOp::Dense(Arc::new(wt.iter().map(|&v| bf16_rne(v)).collect()))
                 })
                 .into_dense();
             QMat::DenseShared(rounded)
         }
         _ => {
+            let geom = fmt.geom;
+            let key = (cx.site, Stage::FwdW, eff as u8, fmt.scale_bump, geom.key_byte());
             let packed = cx
                 .ex
-                .get_or_insert(cx.class, (cx.site, Stage::FwdW, eff as u8, fmt.scale_bump), || {
-                    CachedOp::Packed(Arc::new(PackedMatrix::encode(&wt, n, k, eff, fmt.scale_bump)))
+                .get_or_insert(cx.class, key, || {
+                    CachedOp::Packed(Arc::new(PackedMatrix::encode_geom(
+                        &wt,
+                        n,
+                        k,
+                        eff,
+                        fmt.scale_bump,
+                        geom,
+                    )))
                 })
                 .into_packed();
             QMat::MxShared(packed)
@@ -129,19 +141,29 @@ pub fn weight_bwd_site<'a>(
     match eff {
         FormatId::Fp32 => QMat::Dense(Cow::Borrowed(w)),
         FormatId::Bf16 => {
+            let g0 = BlockGeom::default().key_byte();
             let rounded = cx
                 .ex
-                .get_or_insert(cx.class, (cx.site, Stage::BwdW, eff as u8, false), || {
+                .get_or_insert(cx.class, (cx.site, Stage::BwdW, eff as u8, false, g0), || {
                     CachedOp::Dense(Arc::new(w.iter().map(|&v| bf16_rne(v)).collect()))
                 })
                 .into_dense();
             QMat::DenseShared(rounded)
         }
         _ => {
+            let geom = fmt.geom;
+            let key = (cx.site, Stage::BwdW, eff as u8, fmt.scale_bump, geom.key_byte());
             let packed = cx
                 .ex
-                .get_or_insert(cx.class, (cx.site, Stage::BwdW, eff as u8, fmt.scale_bump), || {
-                    CachedOp::Packed(Arc::new(PackedMatrix::encode(w, k, n, eff, fmt.scale_bump)))
+                .get_or_insert(cx.class, key, || {
+                    CachedOp::Packed(Arc::new(PackedMatrix::encode_geom(
+                        w,
+                        k,
+                        n,
+                        eff,
+                        fmt.scale_bump,
+                        geom,
+                    )))
                 })
                 .into_packed();
             QMat::MxShared(packed)
@@ -181,7 +203,7 @@ pub fn decode_args(args: &StepArgs) -> Result<(Fmt, Hyper)> {
 /// share the result across every projection fed by the same activation
 /// (q/k/v, the SwiGLU pair) instead of re-encoding per GEMM.
 pub fn quantize_fwd_act<'a>(x: &'a [f32], rows: usize, cols: usize, fmt: &Fmt) -> (QMat<'a>, f32) {
-    quantize_site(x, rows, cols, fmt.a_fwd, fmt.quant_fwd, fmt.scale_bump)
+    quantize_site(x, rows, cols, fmt.a_fwd, fmt.quant_fwd, fmt.scale_bump, fmt.geom)
 }
 
 /// `y[m×n] = qx · Q_w(w[k×n])` over a pre-quantized input (blocks along
@@ -226,7 +248,7 @@ pub fn qlinear_fwd(
 /// axis). Share the result across every weight gradient taken against
 /// the same activation (q/k/v, the SwiGLU pair) via [`qlinear_bwd_pre`].
 pub fn quantize_bwd_act<'a>(xt: &'a [f32], k: usize, m: usize, fmt: &Fmt) -> QMat<'a> {
-    quantize_site(xt, k, m, fmt.a_bwd, fmt.quant_bwd, fmt.scale_bump).0
+    quantize_site(xt, k, m, fmt.a_bwd, fmt.quant_bwd, fmt.scale_bump, fmt.geom).0
 }
 
 /// Backward linear over a pre-quantized transposed input `qxt = Q_a(xᵀ)`:
@@ -255,14 +277,14 @@ pub fn qlinear_bwd_pre(
     debug_assert_eq!(dw.len(), k * n);
     let (en, bump) = (fmt.quant_bwd, fmt.scale_bump);
 
-    let (qdy, _) = quantize_site(dy, m, n, fmt.g_bwd, en, bump);
+    let (qdy, _) = quantize_site(dy, m, n, fmt.g_bwd, en, bump, fmt.geom);
     let qw = weight_bwd_site(w, k, n, fmt, cx); // blocks along n
     let mut dx = vec![0.0f32; m * k];
     qgemm(&qdy, &qw, m, k, n, &mut dx);
 
     let mut dyt = cx.ex.arena().take_f32(dy.len()); // [n,m]
     transpose_into(dy, m, n, &mut dyt);
-    let (qdyt, _) = quantize_site(&dyt, n, m, fmt.g_bwd, en, bump);
+    let (qdyt, _) = quantize_site(&dyt, n, m, fmt.g_bwd, en, bump, fmt.geom);
     qgemm(qxt, &qdyt, k, n, m, dw);
     dx
 }
@@ -302,7 +324,7 @@ pub fn qlinear_bwd(
 pub fn ln_gamma_site(gamma: &[f32], fmt: &Fmt) -> (Vec<f32>, f32) {
     let on = fmt.quant_ln && fmt.quant_fwd;
     let eff = if on { fmt.w_fwd } else { FormatId::Fp32 };
-    let (gq, clamped) = packed_qdq(gamma, eff, fmt.scale_bump);
+    let (gq, clamped) = packed_qdq_geom(gamma, eff, fmt.scale_bump, fmt.geom);
     (gq, clamped as f32 / gamma.len().max(1) as f32)
 }
 

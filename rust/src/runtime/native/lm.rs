@@ -421,16 +421,16 @@ impl LmModel {
                 let ks = &kh[s * t * dh..(s + 1) * t * dh];
                 let vs = &vh[s * t * dh..(s + 1) * t * dh];
                 // scores = Q·Kᵀ / √dh — blocks along the head dim.
-                let (qq, fq) = quantize_site(qs, t, dh, fmt.a_fwd, fmt.quant_fwd, bump);
-                let (qk, _) = quantize_site(ks, t, dh, fmt.a_fwd, fmt.quant_fwd, bump);
+                let (qq, fq) = quantize_site(qs, t, dh, fmt.a_fwd, fmt.quant_fwd, bump, fmt.geom);
+                let (qk, _) = quantize_site(ks, t, dh, fmt.a_fwd, fmt.quant_fwd, bump, fmt.geom);
                 let ps = &mut probs[s * t * t..(s + 1) * t * t];
                 qgemm(&qq, &qk, t, t, dh, ps);
                 (kernel::ops().scale_inplace)(ps, inv_sqrt_dh);
                 causal_softmax(ps, t);
                 // ctx = P·V — blocks along the key positions.
-                let (qp, fp) = quantize_site(ps, t, t, fmt.a_fwd, fmt.quant_fwd, bump);
+                let (qp, fp) = quantize_site(ps, t, t, fmt.a_fwd, fmt.quant_fwd, bump, fmt.geom);
                 let vt = transpose(vs, t, dh); // [dh, T]
-                let (qv, _) = quantize_site(&vt, dh, t, fmt.a_fwd, fmt.quant_fwd, bump);
+                let (qv, _) = quantize_site(&vt, dh, t, fmt.a_fwd, fmt.quant_fwd, bump, fmt.geom);
                 qgemm(&qp, &qv, t, dh, t, &mut ctx_h[s * t * dh..(s + 1) * t * dh]);
                 fq_sum += fq;
                 fp_sum += fp;
@@ -644,16 +644,16 @@ impl LmModel {
                 let dos = &do_h[s * t * dh..(s + 1) * t * dh];
 
                 // dP = Q_g(dO)·Q_a(V)ᵀ — both re-blocked along the head dim.
-                let (qdo, _) = quantize_site(dos, t, dh, gf, en, bump);
-                let (qv, _) = quantize_site(vs, t, dh, af, en, bump);
+                let (qdo, _) = quantize_site(dos, t, dh, gf, en, bump, fmt.geom);
+                let (qv, _) = quantize_site(vs, t, dh, af, en, bump, fmt.geom);
                 let mut dp = vec![0.0f32; t * t];
                 qgemm(&qdo, &qv, t, t, dh, &mut dp);
 
                 // dV = Q_a(Pᵀ)·Q_g(dO) — both re-blocked along the queries.
                 let pt = transpose(ps, t, t);
                 let dot_ = transpose(dos, t, dh);
-                let (qpt, _) = quantize_site(&pt, t, t, af, en, bump);
-                let (qdot, _) = quantize_site(&dot_, dh, t, gf, en, bump);
+                let (qpt, _) = quantize_site(&pt, t, t, af, en, bump, fmt.geom);
+                let (qdot, _) = quantize_site(&dot_, dh, t, gf, en, bump, fmt.geom);
                 qgemm(&qpt, &qdot, t, dh, t, &mut dvh[s * t * dh..(s + 1) * t * dh]);
 
                 // Softmax backward (fp32) + the 1/√dh score scale.
@@ -661,15 +661,15 @@ impl LmModel {
 
                 // dQ = Q_g(dS)·Q_a(K) — blocks along the key positions.
                 let kt = transpose(ks, t, dh);
-                let (qds, _) = quantize_site(&ds, t, t, gf, en, bump);
-                let (qkt, _) = quantize_site(&kt, dh, t, af, en, bump);
+                let (qds, _) = quantize_site(&ds, t, t, gf, en, bump, fmt.geom);
+                let (qkt, _) = quantize_site(&kt, dh, t, af, en, bump, fmt.geom);
                 qgemm(&qds, &qkt, t, dh, t, &mut dqh[s * t * dh..(s + 1) * t * dh]);
 
                 // dK = Q_g(dSᵀ)·Q_a(Q) — blocks along the query positions.
                 let dst = transpose(&ds, t, t);
                 let qt = transpose(qs, t, dh);
-                let (qdst, _) = quantize_site(&dst, t, t, gf, en, bump);
-                let (qqt, _) = quantize_site(&qt, dh, t, af, en, bump);
+                let (qdst, _) = quantize_site(&dst, t, t, gf, en, bump, fmt.geom);
+                let (qqt, _) = quantize_site(&qt, dh, t, af, en, bump, fmt.geom);
                 qgemm(&qdst, &qqt, t, dh, t, &mut dkh[s * t * dh..(s + 1) * t * dh]);
             }
             let dq = self.merge_heads(&dqh);

@@ -20,7 +20,7 @@ use std::sync::Arc;
 use crate::formats::gemm::{gemm, gemm_f32, PackedMatrix};
 use crate::formats::kernel;
 use crate::formats::quant::bf16_rne;
-use crate::formats::spec::{FormatId, BLOCK_SIZE};
+use crate::formats::spec::{BlockGeom, FormatId};
 
 /// One GEMM operand after its quantization site. Layout contract: row-major
 /// with the reduction axis contiguous (the `A[m×k]` / `B[n×k]ᵀ` convention
@@ -67,6 +67,8 @@ impl QMat<'_> {
 /// clamping).
 ///
 /// Matches `model._maybe`: a disabled site folds to fp32 passthrough.
+/// `geom` selects the block geometry (size + two-level scaling) for MX
+/// formats; fp32/bf16 sites ignore it.
 pub fn quantize_site(
     x: &[f32],
     rows: usize,
@@ -74,6 +76,7 @@ pub fn quantize_site(
     id: FormatId,
     enabled: bool,
     bump: bool,
+    geom: BlockGeom,
 ) -> (QMat<'_>, f32) {
     debug_assert_eq!(x.len(), rows * cols);
     let eff = if enabled { id } else { FormatId::Fp32 };
@@ -84,8 +87,8 @@ pub fn quantize_site(
             (QMat::Dense(Cow::Owned(v)), 0.0)
         }
         _ => {
-            debug_assert_eq!(cols % BLOCK_SIZE, 0, "reduction axis must be block-aligned");
-            let m = PackedMatrix::encode(x, rows, cols, eff, bump);
+            debug_assert_eq!(cols % geom.block_size, 0, "reduction axis must be block-aligned");
+            let m = PackedMatrix::encode_geom(x, rows, cols, eff, bump, geom);
             let frac = m.data.clamped as f32 / x.len().max(1) as f32;
             (QMat::Mx(m), frac)
         }
@@ -303,18 +306,18 @@ mod tests {
     #[test]
     fn quantize_site_dispatch() {
         let x: Vec<f32> = (0..64).map(|i| i as f32 * 0.1 - 3.0).collect();
-        let (q, f) = quantize_site(&x, 2, 32, FormatId::Fp32, true, false);
+        let (q, f) = quantize_site(&x, 2, 32, FormatId::Fp32, true, false, BlockGeom::default());
         assert!(matches!(q, QMat::Dense(Cow::Borrowed(_))));
         assert_eq!(f, 0.0);
         // Disabled site folds to fp32 even for an MX id.
-        let (q, _) = quantize_site(&x, 2, 32, FormatId::E4M3, false, false);
+        let (q, _) = quantize_site(&x, 2, 32, FormatId::E4M3, false, false, BlockGeom::default());
         assert!(matches!(q, QMat::Dense(Cow::Borrowed(_))));
-        let (q, _) = quantize_site(&x, 2, 32, FormatId::Bf16, true, false);
+        let (q, _) = quantize_site(&x, 2, 32, FormatId::Bf16, true, false, BlockGeom::default());
         match q {
             QMat::Dense(v) => assert!(v.iter().zip(&x).all(|(a, b)| *a == bf16_rne(*b))),
             _ => panic!("bf16 site must be dense"),
         }
-        let (q, frac) = quantize_site(&x, 2, 32, FormatId::E4M3, true, false);
+        let (q, frac) = quantize_site(&x, 2, 32, FormatId::E4M3, true, false, BlockGeom::default());
         match q {
             QMat::Mx(m) => {
                 let (want, clamped) =
@@ -335,8 +338,8 @@ mod tests {
         let (m, n, k) = (5, 7, 64);
         let a = rng.normal_vec(m * k);
         let b = rng.normal_vec(n * k);
-        let (qa, _) = quantize_site(&a, m, k, FormatId::E4M3, true, false);
-        let (qb, _) = quantize_site(&b, n, k, FormatId::E4M3, true, false);
+        let (qa, _) = quantize_site(&a, m, k, FormatId::E4M3, true, false, BlockGeom::default());
+        let (qb, _) = quantize_site(&b, n, k, FormatId::E4M3, true, false, BlockGeom::default());
         let mut c_packed = vec![0.0f32; m * n];
         qgemm(&qa, &qb, m, n, k, &mut c_packed);
         let da = match &qa {

@@ -1,0 +1,264 @@
+//! Sub-byte packed storage + generalized block geometry (DESIGN.md
+//! §Formats, "Storage layout").
+//!
+//! Proves the PR-level contract of the nibble-packed codec: for every
+//! (element format × block size × scaling mode) combination the packed
+//! path is **bitwise identical** to the scalar `mx_qdq_geom` /
+//! `mx_dot_geom` oracles — on adversarial inputs (subnormal amax, zero
+//! blocks, NaN/Inf, non-multiple-of-block tails) — and a multi-step
+//! fully-quantized FP4 LM training trajectory is bitwise independent of
+//! whether 4-bit codes are stored packed (two per byte) or expanded to
+//! one byte each.
+//!
+//! [`set_unpacked_subbyte_storage`] is process-global, so tests that flip
+//! it (or assert storage density, which depends on it) serialize on one
+//! mutex and restore the default on entry.
+
+use std::sync::{Mutex, MutexGuard};
+
+use mxstab::data::{Corpus, CorpusConfig};
+use mxstab::formats::dot::mx_dot_geom;
+use mxstab::formats::gemm::{gemm, PackedMatrix};
+use mxstab::formats::packed::{packed_qdq_geom, set_unpacked_subbyte_storage, PackedVec};
+use mxstab::formats::quant::mx_qdq_geom;
+use mxstab::formats::spec::{hyper_idx, BlockGeom, Fmt, FormatId, BLOCK_SIZES};
+use mxstab::runtime::native::{LmConfig, LmModel, NativeState};
+use mxstab::runtime::{Backend, Metrics, StepArgs};
+use mxstab::util::rng::Xoshiro256;
+
+static STORAGE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    let g = STORAGE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    set_unpacked_subbyte_storage(false); // restore the packed default
+    g
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Every geometry the runtime accepts.
+fn geometries() -> Vec<BlockGeom> {
+    let mut v = Vec::new();
+    for &bs in &BLOCK_SIZES {
+        for two_level in [false, true] {
+            v.push(BlockGeom::new(bs, two_level));
+        }
+    }
+    v
+}
+
+/// Adversarial input of `len` elements: normals, wide dynamic range, f32
+/// subnormals, ±0, ±inf, NaN, the §6.1 clamp cluster — plus one
+/// guaranteed all-zero block and one all-subnormal (subnormal-amax) block.
+fn adversarial(rng: &mut Xoshiro256, len: usize, block_size: usize) -> Vec<f32> {
+    let mut x = Vec::with_capacity(len);
+    for i in 0..len {
+        x.push(match i % 10 {
+            0 => rng.normal() as f32,
+            1 => (rng.normal() as f32) * (2.0f32).powi((rng.below(60) as i32) - 30),
+            2 => f32::from_bits(rng.below(1 << 23) as u32), // subnormal
+            3 => 0.0,
+            4 => -0.0,
+            5 => f32::INFINITY,
+            6 => f32::NEG_INFINITY,
+            7 => f32::NAN,
+            8 => 0.897, // clamp cluster
+            _ => rng.normal() as f32 * 0.01,
+        });
+    }
+    for v in x.iter_mut().take(block_size.min(len)) {
+        *v = 0.0;
+    }
+    if len >= 2 * block_size {
+        for v in x.iter_mut().skip(block_size).take(block_size) {
+            *v = f32::from_bits(1 + rng.below(100) as u32); // subnormal amax
+        }
+    }
+    x
+}
+
+const SUBBYTE: [FormatId; 2] = [FormatId::E2M1, FormatId::Int4];
+
+#[test]
+fn qdq_bitwise_parity_for_every_format_geometry_and_tail() {
+    let _g = lock();
+    let mut rng = Xoshiro256::seed_from(7);
+    for geom in geometries() {
+        // Block-aligned and ragged-tail lengths (tails are legal in the
+        // flat codec; the last block is simply shorter).
+        for len in [4 * geom.block_size, 4 * geom.block_size + 7, geom.block_size - 1] {
+            let x = adversarial(&mut rng, len, geom.block_size);
+            for id in FormatId::ALL {
+                let (want, cw) = mx_qdq_geom(&x, id, false, geom);
+                let (got, cg) = packed_qdq_geom(&x, id, false, geom);
+                assert_eq!(
+                    bits(&want),
+                    bits(&got),
+                    "{id:?} {geom:?} len {len}: packed qdq diverged from oracle"
+                );
+                assert_eq!(cw, cg, "{id:?} {geom:?} len {len}: clamp count");
+                // Scale-bump variant too.
+                let (want_b, _) = mx_qdq_geom(&x, id, true, geom);
+                let (got_b, _) = packed_qdq_geom(&x, id, true, geom);
+                assert_eq!(bits(&want_b), bits(&got_b), "{id:?} {geom:?} len {len}: bump");
+            }
+        }
+    }
+}
+
+#[test]
+fn nibble_storage_is_dense_and_roundtrips() {
+    let _g = lock();
+    let mut rng = Xoshiro256::seed_from(11);
+    for geom in geometries() {
+        for len in [6 * geom.block_size, 6 * geom.block_size + 13] {
+            let x = adversarial(&mut rng, len, geom.block_size);
+            for id in SUBBYTE {
+                let p = PackedVec::encode_geom(&x, id, false, geom);
+                assert!(p.packed4(), "{id:?} must pack two codes per byte by default");
+                assert_eq!(p.codes.len(), len.div_ceil(2), "{id:?} {geom:?} len {len}");
+                // Effective storage: 0.5 B/elem of codes plus scale
+                // overhead. Block 16 pays the most per-block scale (2-byte
+                // one-level scales: 0.625 exactly; two-level at these short
+                // lengths: ~0.605, the f32 tensor scale barely amortized);
+                // blocks 32/64 stay under 0.6.
+                let bpe = p.bytes() as f64 / len as f64;
+                let bar = if geom.block_size == 16 { 0.65 } else { 0.6 };
+                assert!(bpe <= bar, "{id:?} {geom:?} len {len}: {bpe} bytes/elem > {bar}");
+                // Decode equals the oracle qdq values.
+                let mut dec = vec![0.0f32; len];
+                p.decode_into(&mut dec);
+                let (want, _) = mx_qdq_geom(&x, id, false, geom);
+                assert_eq!(bits(&want), bits(&dec), "{id:?} {geom:?} len {len}: decode");
+            }
+        }
+    }
+}
+
+#[test]
+fn byte_expanded_storage_is_bitwise_equal_to_nibble_packed() {
+    let _g = lock();
+    let mut rng = Xoshiro256::seed_from(13);
+    for geom in geometries() {
+        let len = 5 * geom.block_size;
+        let x = adversarial(&mut rng, len, geom.block_size);
+        for id in SUBBYTE {
+            let (nib, _) = packed_qdq_geom(&x, id, false, geom);
+            set_unpacked_subbyte_storage(true);
+            let p = PackedVec::encode_geom(&x, id, false, geom);
+            let (byte, _) = packed_qdq_geom(&x, id, false, geom);
+            set_unpacked_subbyte_storage(false);
+            assert!(!p.packed4(), "toggle must force byte storage");
+            assert_eq!(bits(&nib), bits(&byte), "{id:?} {geom:?}: storage changed values");
+        }
+    }
+}
+
+#[test]
+fn subbyte_gemm_matches_geom_dot_oracle() {
+    let _g = lock();
+    // Single-row operands so the two-level per-tensor scale of the matrix
+    // equals the per-slice scale the self-contained oracle derives.
+    let mut rng = Xoshiro256::seed_from(17);
+    for geom in geometries() {
+        let k = 4 * geom.block_size;
+        let a: Vec<f32> = rng.normal_vec(k);
+        let b: Vec<f32> = rng.normal_vec(k);
+        for id in SUBBYTE {
+            let am = PackedMatrix::encode_geom(&a, 1, k, id, false, geom);
+            let bm = PackedMatrix::encode_geom(&b, 1, k, id, false, geom);
+            let mut c = [0.0f32];
+            gemm(&am, &bm, &mut c);
+            let want = mx_dot_geom(&a, &b, id, false, geom);
+            assert_eq!(
+                c[0].to_bits(),
+                want.to_bits(),
+                "{id:?} {geom:?}: gemm {} vs oracle {want}",
+                c[0]
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: FP4 LM training trajectories.
+// ---------------------------------------------------------------------------
+
+fn tiny_lm() -> LmModel {
+    LmModel::new(LmConfig { layers: 2, d_model: 32, n_heads: 1, vocab: 64, ctx: 32, batch: 2 })
+        .unwrap()
+}
+
+fn lm_args(m: &LmModel, corpus: &Corpus, fmt: Fmt, step: i32) -> StepArgs {
+    let (b, l) = m.tokens_shape().unwrap();
+    let mut hyper = vec![0.0f32; hyper_idx::HYPER_LEN];
+    hyper[hyper_idx::LR] = 2e-3;
+    let tokens = Some(corpus.batch(9, step as u64, b, l));
+    StepArgs { tokens, fmt: fmt.to_vec(), hyper, seed: 9, step }
+}
+
+fn metric_bits(m: &Metrics) -> [u32; 4] {
+    [
+        m.loss.to_bits(),
+        m.grad_norm.to_bits(),
+        m.update_norm.to_bits(),
+        m.param_norm.to_bits(),
+    ]
+}
+
+/// Run `steps` fully-quantized LM steps under `fmt` and return per-step
+/// metric bits plus the final state snapshot.
+fn lm_trajectory(
+    m: &LmModel,
+    corpus: &Corpus,
+    fmt: Fmt,
+    steps: i32,
+) -> (Vec<[u32; 4]>, Vec<Vec<f32>>) {
+    let mut state: NativeState = m.init(5, 0.0, 1.0).unwrap();
+    let mut mets = Vec::new();
+    for step in 0..steps {
+        let args = lm_args(m, corpus, fmt, step);
+        let (s2, met) = m.step(state, &args).unwrap();
+        state = s2;
+        mets.push(metric_bits(&met));
+    }
+    let snap = m.snapshot(&state).unwrap();
+    (mets, snap)
+}
+
+#[test]
+fn fp4_lm_trajectory_bitwise_equal_u8_vs_nibble_storage() {
+    let _g = lock();
+    let m = tiny_lm();
+    let corpus = Corpus::new(CorpusConfig { vocab: m.config().vocab, ..Default::default() });
+    let fmt = Fmt::full(FormatId::E2M1, FormatId::E2M1);
+    let steps = 4;
+    let (met_nib, snap_nib) = lm_trajectory(&m, &corpus, fmt, steps);
+    set_unpacked_subbyte_storage(true);
+    let (met_u8, snap_u8) = lm_trajectory(&m, &corpus, fmt, steps);
+    set_unpacked_subbyte_storage(false);
+    assert_eq!(met_nib, met_u8, "metrics diverged between nibble and byte storage");
+    assert_eq!(snap_nib.len(), snap_u8.len());
+    for (i, (a, b)) in snap_nib.iter().zip(&snap_u8).enumerate() {
+        assert_eq!(bits(a), bits(b), "state tensor {i} diverged after {steps} steps");
+    }
+}
+
+#[test]
+fn lm_trains_under_fp4_two_level_small_block_geometry() {
+    let _g = lock();
+    // Smoke the full runtime threading of a non-default geometry: block
+    // size 16 with NVFP4-style two-level scaling, FP4 everywhere.
+    let m = tiny_lm();
+    let corpus = Corpus::new(CorpusConfig { vocab: m.config().vocab, ..Default::default() });
+    let fmt = Fmt::full(FormatId::E2M1, FormatId::E2M1).with_geom(BlockGeom::new(16, true));
+    let (mets, snap) = lm_trajectory(&m, &corpus, fmt, 2);
+    for (s, mb) in mets.iter().enumerate() {
+        for (i, &b) in mb.iter().enumerate() {
+            assert!(f32::from_bits(b).is_finite(), "step {s} metric {i} not finite");
+        }
+    }
+    assert!(snap.iter().flatten().all(|v| v.is_finite()), "state blew up");
+}
