@@ -1,0 +1,486 @@
+//! A minimal Rust lexer for static analysis — comment/string/raw-string
+//! aware so rule keywords inside literals or comments never false-positive.
+//!
+//! This is deliberately not a full Rust lexer: it only needs to be sound
+//! for the token classes the `analyze` rules consume. Guarantees:
+//!
+//! - line comments, block comments (nested), and doc comments become
+//!   [`TokKind::Comment`] tokens carrying their full text;
+//! - string / raw-string / byte-string / char literals become opaque
+//!   [`TokKind::Str`] / [`TokKind::Char`] tokens — their contents are
+//!   never re-tokenized;
+//! - identifiers and keywords are [`TokKind::Ident`]; raw identifiers
+//!   (`r#match`) keep their `r#` prefix in `text` so ident-keyed rules
+//!   do not match them;
+//! - numeric literals are [`TokKind::Number`] with a `float` flag
+//!   (fractional part, exponent, or `f32`/`f64` suffix);
+//! - the only multi-char punctuation tokens are `::`, `==`, and `!=`
+//!   (the ones rules look at); everything else is single-char
+//!   [`TokKind::Punct`].
+//!
+//! Positions are 1-based (line, column), columns counted in chars.
+
+/// Token classification. See module docs for exact semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Number { float: bool },
+    Str,
+    Char,
+    Lifetime,
+    Comment,
+    Punct,
+}
+
+/// One token with its 1-based source position.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+struct Cursor {
+    chars: Vec<char>,
+    pos: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Cursor {
+    fn new(src: &str) -> Self {
+        Cursor { chars: src.chars().collect(), pos: 0, line: 1, col: 1 }
+    }
+
+    fn eof(&self) -> bool {
+        self.pos >= self.chars.len()
+    }
+
+    /// Char `k` positions ahead of the cursor (0 = current), or '\0'.
+    fn peek(&self, k: usize) -> char {
+        self.chars.get(self.pos + k).copied().unwrap_or('\0')
+    }
+
+    fn bump(&mut self) -> char {
+        let c = self.chars[self.pos];
+        self.pos += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        c
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into tokens. Never fails: unrecognized bytes become
+/// single-char puncts, and unterminated literals run to end of input.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let mut cur = Cursor::new(src);
+    let mut out = Vec::new();
+
+    while !cur.eof() {
+        let c = cur.peek(0);
+        let line = cur.line;
+        let col = cur.col;
+
+        // Whitespace.
+        if c.is_whitespace() {
+            cur.bump();
+            continue;
+        }
+
+        // Comments.
+        if c == '/' && cur.peek(1) == '/' {
+            let mut text = String::new();
+            while !cur.eof() && cur.peek(0) != '\n' {
+                text.push(cur.bump());
+            }
+            out.push(Tok { kind: TokKind::Comment, text, line, col });
+            continue;
+        }
+        if c == '/' && cur.peek(1) == '*' {
+            let mut text = String::new();
+            text.push(cur.bump()); // '/'
+            text.push(cur.bump()); // '*'
+            let mut depth = 1usize;
+            while !cur.eof() && depth > 0 {
+                if cur.peek(0) == '/' && cur.peek(1) == '*' {
+                    depth += 1;
+                    text.push(cur.bump());
+                    text.push(cur.bump());
+                } else if cur.peek(0) == '*' && cur.peek(1) == '/' {
+                    depth -= 1;
+                    text.push(cur.bump());
+                    text.push(cur.bump());
+                } else {
+                    text.push(cur.bump());
+                }
+            }
+            out.push(Tok { kind: TokKind::Comment, text, line, col });
+            continue;
+        }
+
+        // Raw strings / raw byte strings / raw idents: r"..", r#".."#,
+        // br".."; r#ident.
+        if c == 'r' || ((c == 'b' || c == 'c') && cur.peek(1) == 'r') {
+            let r_off = if c == 'r' { 0 } else { 1 };
+            let after_r = cur.peek(r_off + 1);
+            if after_r == '"' || after_r == '#' {
+                // Count hashes to find the opening quote; `r#ident` has
+                // hashes followed by an ident char, not a quote.
+                let mut hashes = 0usize;
+                while cur.peek(r_off + 1 + hashes) == '#' {
+                    hashes += 1;
+                }
+                if cur.peek(r_off + 1 + hashes) == '"' {
+                    let mut text = String::new();
+                    for _ in 0..(r_off + 1 + hashes + 1) {
+                        text.push(cur.bump());
+                    }
+                    // Scan to `"` followed by `hashes` hashes.
+                    'raw: while !cur.eof() {
+                        if cur.peek(0) == '"' {
+                            let mut ok = true;
+                            for k in 0..hashes {
+                                if cur.peek(1 + k) != '#' {
+                                    ok = false;
+                                    break;
+                                }
+                            }
+                            if ok {
+                                for _ in 0..(1 + hashes) {
+                                    text.push(cur.bump());
+                                }
+                                break 'raw;
+                            }
+                        }
+                        text.push(cur.bump());
+                    }
+                    out.push(Tok { kind: TokKind::Str, text, line, col });
+                    continue;
+                }
+                if c == 'r' && hashes >= 1 && is_ident_start(cur.peek(1 + hashes)) {
+                    // Raw identifier: keep the whole `r#name` as text so
+                    // keyword-keyed rules never match it.
+                    let mut text = String::new();
+                    for _ in 0..(1 + hashes) {
+                        text.push(cur.bump());
+                    }
+                    while !cur.eof() && is_ident_continue(cur.peek(0)) {
+                        text.push(cur.bump());
+                    }
+                    out.push(Tok { kind: TokKind::Ident, text, line, col });
+                    continue;
+                }
+            }
+        }
+
+        // Byte strings / byte chars: b"..", b'.'.
+        if (c == 'b' || c == 'c') && cur.peek(1) == '"' {
+            let mut text = String::new();
+            text.push(cur.bump()); // prefix
+            text.push(cur.bump()); // '"'
+            while !cur.eof() {
+                let d = cur.bump();
+                text.push(d);
+                if d == '\\' && !cur.eof() {
+                    text.push(cur.bump());
+                } else if d == '"' {
+                    break;
+                }
+            }
+            out.push(Tok { kind: TokKind::Str, text, line, col });
+            continue;
+        }
+        if c == 'b' && cur.peek(1) == '\'' {
+            let mut text = String::new();
+            text.push(cur.bump()); // 'b'
+            text.push(cur.bump()); // '\''
+            while !cur.eof() {
+                let d = cur.bump();
+                text.push(d);
+                if d == '\\' && !cur.eof() {
+                    text.push(cur.bump());
+                } else if d == '\'' {
+                    break;
+                }
+            }
+            out.push(Tok { kind: TokKind::Char, text, line, col });
+            continue;
+        }
+
+        // Plain strings.
+        if c == '"' {
+            let mut text = String::new();
+            text.push(cur.bump());
+            while !cur.eof() {
+                let d = cur.bump();
+                text.push(d);
+                if d == '\\' && !cur.eof() {
+                    text.push(cur.bump());
+                } else if d == '"' {
+                    break;
+                }
+            }
+            out.push(Tok { kind: TokKind::Str, text, line, col });
+            continue;
+        }
+
+        // Char literal vs lifetime. `'a'` / `'\n'` are chars; `'a` (no
+        // closing quote right after) is a lifetime.
+        if c == '\'' {
+            let p1 = cur.peek(1);
+            if p1 == '\\' || (cur.peek(2) == '\'' && p1 != '\'') {
+                let mut text = String::new();
+                text.push(cur.bump()); // '\''
+                while !cur.eof() {
+                    let d = cur.bump();
+                    text.push(d);
+                    if d == '\\' && !cur.eof() {
+                        text.push(cur.bump());
+                    } else if d == '\'' {
+                        break;
+                    }
+                }
+                out.push(Tok { kind: TokKind::Char, text, line, col });
+                continue;
+            }
+            if is_ident_start(p1) {
+                let mut text = String::new();
+                text.push(cur.bump()); // '\''
+                while !cur.eof() && is_ident_continue(cur.peek(0)) {
+                    text.push(cur.bump());
+                }
+                out.push(Tok { kind: TokKind::Lifetime, text, line, col });
+                continue;
+            }
+            // Bare quote (e.g. inside macro weirdness): single punct.
+            cur.bump();
+            out.push(Tok { kind: TokKind::Punct, text: "'".into(), line, col });
+            continue;
+        }
+
+        // Identifiers / keywords.
+        if is_ident_start(c) {
+            let mut text = String::new();
+            while !cur.eof() && is_ident_continue(cur.peek(0)) {
+                text.push(cur.bump());
+            }
+            out.push(Tok { kind: TokKind::Ident, text, line, col });
+            continue;
+        }
+
+        // Numbers. A leading digit always starts a number; `.5` is not
+        // valid Rust so `.` never starts one.
+        if c.is_ascii_digit() {
+            let mut text = String::new();
+            let mut float = false;
+            if c == '0' && matches!(cur.peek(1), 'x' | 'o' | 'b') {
+                text.push(cur.bump());
+                text.push(cur.bump());
+                while !cur.eof()
+                    && (cur.peek(0).is_ascii_alphanumeric() || cur.peek(0) == '_')
+                {
+                    text.push(cur.bump());
+                }
+                out.push(Tok { kind: TokKind::Number { float: false }, text, line, col });
+                continue;
+            }
+            while !cur.eof() && (cur.peek(0).is_ascii_digit() || cur.peek(0) == '_') {
+                text.push(cur.bump());
+            }
+            // Fraction: `1.5` yes; `x.0` never reaches here; `1..2` and
+            // `1.max()` must not consume the dot.
+            if cur.peek(0) == '.' && cur.peek(1).is_ascii_digit() {
+                float = true;
+                text.push(cur.bump()); // '.'
+                while !cur.eof() && (cur.peek(0).is_ascii_digit() || cur.peek(0) == '_') {
+                    text.push(cur.bump());
+                }
+            } else if cur.peek(0) == '.'
+                && cur.peek(1) != '.'
+                && !is_ident_start(cur.peek(1))
+            {
+                // Trailing-dot float: `2.` followed by `)`, `,`, etc.
+                float = true;
+                text.push(cur.bump());
+            }
+            // Exponent.
+            if matches!(cur.peek(0), 'e' | 'E') {
+                let sign = matches!(cur.peek(1), '+' | '-');
+                let digit_at = if sign { 2 } else { 1 };
+                if cur.peek(digit_at).is_ascii_digit() {
+                    float = true;
+                    text.push(cur.bump()); // e/E
+                    if sign {
+                        text.push(cur.bump());
+                    }
+                    while !cur.eof()
+                        && (cur.peek(0).is_ascii_digit() || cur.peek(0) == '_')
+                    {
+                        text.push(cur.bump());
+                    }
+                }
+            }
+            // Suffix (u32, i64, f32, f64, usize, ...).
+            if is_ident_start(cur.peek(0)) {
+                let mut suffix = String::new();
+                while !cur.eof() && is_ident_continue(cur.peek(0)) {
+                    suffix.push(cur.bump());
+                }
+                if suffix == "f32" || suffix == "f64" {
+                    float = true;
+                }
+                text.push_str(&suffix);
+            }
+            out.push(Tok { kind: TokKind::Number { float }, text, line, col });
+            continue;
+        }
+
+        // Punctuation. Only the compounds the rules consume are fused.
+        let two: String = [c, cur.peek(1)].iter().collect();
+        if two == "::" || two == "==" || two == "!=" {
+            cur.bump();
+            cur.bump();
+            out.push(Tok { kind: TokKind::Punct, text: two, line, col });
+            continue;
+        }
+        cur.bump();
+        out.push(Tok { kind: TokKind::Punct, text: c.to_string(), line, col });
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn keywords_in_comments_are_not_idents() {
+        let src = "// mul_add and unsafe and HashMap live here\nlet x = 1;\n\
+                   /* Instant::now() in a block comment,\n /* nested unsafe */ \
+                   still a comment */\nfn f() {}\n";
+        let ids = idents(src);
+        assert!(!ids.iter().any(|i| i == "mul_add"));
+        assert!(!ids.iter().any(|i| i == "unsafe"));
+        assert!(!ids.iter().any(|i| i == "HashMap"));
+        assert!(!ids.iter().any(|i| i == "Instant"));
+        assert_eq!(ids, vec!["let", "x", "fn", "f"]);
+    }
+
+    #[test]
+    fn keywords_in_strings_are_not_idents() {
+        let src = r##"let s = "mul_add unsafe"; let r = r#"HashMap "quoted" unwrap()"#; let b = b"Instant";"##;
+        let ids = idents(src);
+        for kw in ["mul_add", "unsafe", "HashMap", "unwrap", "Instant"] {
+            assert!(!ids.iter().any(|i| i == kw), "leaked {kw} from a literal");
+        }
+        let strs: Vec<_> = lex(src)
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .collect();
+        assert_eq!(strs.len(), 3);
+        assert!(strs[1].text.contains("\"quoted\""), "raw string must swallow quotes");
+    }
+
+    #[test]
+    fn raw_idents_keep_their_prefix() {
+        let ids = idents("let r#unsafe = 1;");
+        assert!(ids.iter().any(|i| i == "r#unsafe"));
+        assert!(!ids.iter().any(|i| i == "unsafe"));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let toks = lex("let c: char = 'x'; fn f<'a>(v: &'a str) -> &'a str { v }");
+        let chars: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::Char).collect();
+        let lifes: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+        assert_eq!(chars.len(), 1);
+        assert_eq!(chars[0].text, "'x'");
+        assert_eq!(lifes.len(), 3);
+        assert!(lifes.iter().all(|t| t.text == "'a"));
+        // Escaped char with a quote-lookalike payload.
+        let toks = lex(r"let q = '\''; let s = '\\';");
+        assert_eq!(
+            toks.iter().filter(|t| t.kind == TokKind::Char).count(),
+            2
+        );
+    }
+
+    #[test]
+    fn float_classification() {
+        let floats: Vec<(String, bool)> = lex(
+            "let a = 1.5; let b = 2; let c = 1e3; let d = 7f32; let e = 0x1f; \
+             let f = t.0; let g = 1..4; let h = 3.0f64; let i = 2.;",
+        )
+        .into_iter()
+        .filter_map(|t| match t.kind {
+            TokKind::Number { float } => Some((t.text, float)),
+            _ => None,
+        })
+        .collect();
+        let as_map: std::collections::BTreeMap<String, bool> =
+            floats.into_iter().collect();
+        assert!(as_map["1.5"]);
+        assert!(!as_map["2"]);
+        assert!(as_map["1e3"]);
+        assert!(as_map["7f32"]);
+        assert!(!as_map["0x1f"]);
+        assert!(!as_map["0"], "tuple index .0 is not a float");
+        assert!(!as_map["1"], "range start 1..4 is not a float");
+        assert!(!as_map["4"]);
+        assert!(as_map["3.0f64"]);
+        assert!(as_map["2."]);
+    }
+
+    #[test]
+    fn positions_are_one_based_lines_and_cols() {
+        let toks = lex("ab cd\n  ef\n");
+        assert_eq!(toks[0].text, "ab");
+        assert_eq!((toks[0].line, toks[0].col), (1, 1));
+        assert_eq!(toks[1].text, "cd");
+        assert_eq!((toks[1].line, toks[1].col), (1, 4));
+        assert_eq!(toks[2].text, "ef");
+        assert_eq!((toks[2].line, toks[2].col), (2, 3));
+    }
+
+    #[test]
+    fn compound_puncts_are_limited_to_rule_set() {
+        let toks = lex("a::b == c != d; e += f; g -> h");
+        let puncts: Vec<String> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Punct)
+            .map(|t| t.text.clone())
+            .collect();
+        assert!(puncts.contains(&"::".to_string()));
+        assert!(puncts.contains(&"==".to_string()));
+        assert!(puncts.contains(&"!=".to_string()));
+        // `+=` and `->` stay split: rules never consume them fused.
+        assert!(puncts.contains(&"+".to_string()));
+        assert!(puncts.contains(&">".to_string()));
+        assert!(!puncts.contains(&"+=".to_string()));
+        assert!(!puncts.contains(&"->".to_string()));
+    }
+}

@@ -1,0 +1,499 @@
+//! `mxstab analyze` — the repo-invariant static-analysis pass.
+//!
+//! A lightweight lexer ([`lexer`]) plus a rule engine ([`rules`]) that
+//! walks `rust/src`, `rust/tests`, and `rust/benches` and emits
+//! rustc-style `file:line:col` diagnostics. The rules encode the repo's
+//! real numerical/concurrency contract (no FMA in parity paths, no
+//! wall-clock reads in trajectory code, confined `unsafe`, ...);
+//! see DESIGN.md §"Static analysis & enforced invariants".
+//!
+//! Suppressions use a scoped pragma grammar inside ordinary line
+//! comments. Two forms are recognized (shown here split so the analyzer
+//! never mistakes its own docs for a pragma): the comment text
+//! `analyze:` followed by `allow(rule, "reason")` suppresses the rule on
+//! the pragma's own line and on the next code line; the `allow-file`
+//! form suppresses the rule for the whole file. `--strict` additionally
+//! fails the run when an allow matched nothing (dead pragmas rot).
+
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use self::lexer::{Tok, TokKind};
+
+/// Where a file lives — rules scope themselves by class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FileClass {
+    Src,
+    Tests,
+    Benches,
+}
+
+/// One diagnostic, rustc-style.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}:{}: error[{}]: {}",
+            self.file, self.line, self.col, self.rule, self.message
+        )
+    }
+}
+
+/// A lexed source file plus the metadata rules need.
+pub struct SrcFile {
+    /// Display path, normalized to forward slashes.
+    pub path: String,
+    pub class: FileClass,
+    /// Non-comment tokens, in source order.
+    pub code: Vec<Tok>,
+    /// Comment tokens, in source order.
+    pub comments: Vec<Tok>,
+    /// First line of an in-file `#[cfg(test)]` region, if any. The
+    /// heuristic treats everything at/after that line as test code —
+    /// safe in the false-negative direction only.
+    pub test_from_line: Option<u32>,
+}
+
+impl SrcFile {
+    /// True when `line` is inside test code (a tests/ file, or at/after
+    /// an in-file `#[cfg(test)]` marker).
+    pub fn in_tests(&self, line: u32) -> bool {
+        self.class == FileClass::Tests
+            || self.test_from_line.is_some_and(|t| line >= t)
+    }
+
+    pub fn path_has(&self, needle: &str) -> bool {
+        self.path.contains(needle)
+    }
+
+    pub fn path_ends(&self, suffix: &str) -> bool {
+        self.path.ends_with(suffix)
+    }
+}
+
+/// Engine options.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Options {
+    /// Ignore every rule's path scope and apply all rules to all files.
+    /// Used by the fixture self-test, where no single real path could
+    /// be in-scope for all six rules at once.
+    pub ignore_scope: bool,
+}
+
+/// A parsed allow pragma.
+struct Allow {
+    rule: &'static str,
+    line: u32,
+    file_level: bool,
+    used: bool,
+}
+
+/// Result of analyzing one file.
+pub struct FileOutcome {
+    pub violations: Vec<Diagnostic>,
+    pub unused_allows: Vec<Diagnostic>,
+}
+
+/// Whole-run report.
+pub struct Report {
+    pub violations: Vec<Diagnostic>,
+    pub unused_allows: Vec<Diagnostic>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn ok(&self, strict: bool) -> bool {
+        self.violations.is_empty() && (!strict || self.unused_allows.is_empty())
+    }
+
+    pub fn to_json(&self, strict: bool) -> String {
+        use crate::util::json::Json;
+        let diag_json = |d: &Diagnostic| {
+            Json::obj(vec![
+                ("file", Json::from(d.file.as_str())),
+                ("line", Json::Num(d.line as f64)),
+                ("col", Json::Num(d.col as f64)),
+                ("rule", Json::from(d.rule)),
+                ("message", Json::from(d.message.as_str())),
+            ])
+        };
+        let j = Json::obj(vec![
+            ("ok", Json::Bool(self.ok(strict))),
+            ("strict", Json::Bool(strict)),
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            (
+                "violations",
+                Json::Arr(self.violations.iter().map(diag_json).collect()),
+            ),
+            (
+                "unused_allows",
+                Json::Arr(self.unused_allows.iter().map(diag_json).collect()),
+            ),
+        ]);
+        let mut s = String::new();
+        j.write(&mut s);
+        s
+    }
+}
+
+/// The pragma introducer, assembled at runtime so this source file's own
+/// comments can mention the grammar without tripping the parser on
+/// itself.
+fn pragma_intro() -> String {
+    format!("{}{}", "analyze", ":")
+}
+
+/// Parse `allow(...)` / `allow-file(...)` pragmas out of a comment.
+/// Returns parsed allows; malformed pragmas become `bad-pragma`
+/// diagnostics so typos fail loudly instead of silently not suppressing.
+fn parse_pragmas(
+    file: &str,
+    comments: &[Tok],
+    diags: &mut Vec<Diagnostic>,
+) -> Vec<Allow> {
+    let intro = pragma_intro();
+    let mut allows = Vec::new();
+    for c in comments {
+        let Some(idx) = c.text.find(&intro) else { continue };
+        // Only honor the pragma when nothing but comment markers and
+        // whitespace precede it — prose that merely *mentions* the
+        // grammar mid-sentence is not a pragma.
+        if !c.text[..idx].chars().all(|ch| matches!(ch, '/' | '!' | '*' | ' ' | '\t')) {
+            continue;
+        }
+        let body = c.text[idx + intro.len()..].trim();
+        let (file_level, rest) = if let Some(r) = body.strip_prefix("allow-file(") {
+            (true, r)
+        } else if let Some(r) = body.strip_prefix("allow(") {
+            (false, r)
+        } else {
+            diags.push(Diagnostic {
+                file: file.to_string(),
+                line: c.line,
+                col: c.col,
+                rule: "bad-pragma",
+                message: format!(
+                    "unrecognized {} pragma; expected allow(rule, \"reason\") \
+                     or allow-file(rule, \"reason\")",
+                    intro
+                ),
+            });
+            continue;
+        };
+        // Find the closing `")` so reasons may contain bare parens.
+        let Some(end) = rest.find("\")") else {
+            diags.push(Diagnostic {
+                file: file.to_string(),
+                line: c.line,
+                col: c.col,
+                rule: "bad-pragma",
+                message: "pragma missing closing `\")`".to_string(),
+            });
+            continue;
+        };
+        let inner = &rest[..end + 1];
+        let Some(comma) = inner.find(',') else {
+            diags.push(Diagnostic {
+                file: file.to_string(),
+                line: c.line,
+                col: c.col,
+                rule: "bad-pragma",
+                message: "pragma needs a rule name and a quoted reason".to_string(),
+            });
+            continue;
+        };
+        let rule_name = inner[..comma].trim();
+        let reason = inner[comma + 1..].trim();
+        if !(reason.starts_with('"') && reason.ends_with('"') && reason.len() > 2) {
+            diags.push(Diagnostic {
+                file: file.to_string(),
+                line: c.line,
+                col: c.col,
+                rule: "bad-pragma",
+                message: "pragma reason must be a non-empty quoted string".to_string(),
+            });
+            continue;
+        }
+        let Some(rule) = rules::RULES.iter().find(|r| r.name == rule_name) else {
+            diags.push(Diagnostic {
+                file: file.to_string(),
+                line: c.line,
+                col: c.col,
+                rule: "bad-pragma",
+                message: format!("unknown rule `{rule_name}` in pragma"),
+            });
+            continue;
+        };
+        allows.push(Allow { rule: rule.name, line: c.line, file_level, used: false });
+    }
+    allows
+}
+
+/// First line at/after `from_line` that holds a code token, if any.
+fn next_code_line(code: &[Tok], from_line: u32) -> Option<u32> {
+    code.iter().map(|t| t.line).find(|&l| l > from_line)
+}
+
+/// Line of the first `#[cfg(test)]` occurrence in token space.
+fn find_cfg_test(code: &[Tok]) -> Option<u32> {
+    code.windows(3).find_map(|w| {
+        (w[0].kind == TokKind::Ident
+            && w[0].text == "cfg"
+            && w[1].text == "("
+            && w[2].kind == TokKind::Ident
+            && w[2].text == "test")
+            .then_some(w[0].line)
+    })
+}
+
+/// Analyze one in-memory source file under `display_path`.
+pub fn analyze_source(display_path: &str, source: &str, opts: &Options) -> FileOutcome {
+    let toks = lexer::lex(source);
+    let (comments, code): (Vec<Tok>, Vec<Tok>) =
+        toks.into_iter().partition(|t| t.kind == TokKind::Comment);
+    let path = display_path.replace('\\', "/");
+    let class = if path.contains("tests/") && !path.contains("src/") {
+        FileClass::Tests
+    } else if path.contains("benches/") && !path.contains("src/") {
+        FileClass::Benches
+    } else {
+        FileClass::Src
+    };
+    let test_from_line = find_cfg_test(&code);
+    let file = SrcFile { path, class, code, comments, test_from_line };
+
+    let mut raw = Vec::new();
+    let mut allows = parse_pragmas(&file.path, &file.comments, &mut raw);
+    for rule in rules::RULES {
+        if opts.ignore_scope || (rule.applies)(&file) {
+            (rule.check)(&file, &mut raw);
+        }
+    }
+
+    // Apply suppressions: an allow covers a diagnostic of its rule when
+    // it is file-level, on the same line, or on the line directly above
+    // (more precisely: the violation sits on the next code line after
+    // the pragma).
+    let mut violations = Vec::new();
+    for d in raw {
+        let mut suppressed = false;
+        for a in allows.iter_mut() {
+            if a.rule != d.rule {
+                continue;
+            }
+            let hit = a.file_level
+                || a.line == d.line
+                || next_code_line(&file.code, a.line) == Some(d.line);
+            if hit {
+                a.used = true;
+                suppressed = true;
+                // Keep scanning so every matching allow is marked used.
+            }
+        }
+        if !suppressed {
+            violations.push(d);
+        }
+    }
+    let unused_allows = allows
+        .iter()
+        .filter(|a| !a.used)
+        .map(|a| Diagnostic {
+            file: file.path.clone(),
+            line: a.line,
+            col: 1,
+            rule: "unused-allow",
+            message: format!(
+                "allow({}) matched no diagnostic — remove the stale pragma",
+                a.rule
+            ),
+        })
+        .collect();
+
+    violations.sort();
+    FileOutcome { violations, unused_allows }
+}
+
+/// Recursively collect `.rs` files under `root`, sorted for determinism.
+/// Skips build output, vendored code, analyzer fixtures, and dotdirs.
+fn collect_rs(root: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(root)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if p.is_dir() {
+            if matches!(name, "target" | "vendor" | "testdata") || name.starts_with('.') {
+                continue;
+            }
+            collect_rs(&p, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Analyze a set of files and/or directory roots.
+pub fn analyze_paths(paths: &[PathBuf], opts: &Options) -> std::io::Result<Report> {
+    let mut files = Vec::new();
+    for p in paths {
+        if p.is_dir() {
+            collect_rs(p, &mut files)?;
+        } else {
+            files.push(p.clone());
+        }
+    }
+    // A root may be both passed explicitly and nested under another.
+    let files: BTreeSet<PathBuf> = files.into_iter().collect();
+
+    let mut violations = Vec::new();
+    let mut unused_allows = Vec::new();
+    let mut files_scanned = 0usize;
+    for f in &files {
+        let source = std::fs::read_to_string(f)?;
+        let display = f.to_string_lossy().to_string();
+        let outcome = analyze_source(&display, &source, opts);
+        violations.extend(outcome.violations);
+        unused_allows.extend(outcome.unused_allows);
+        files_scanned += 1;
+    }
+    violations.sort();
+    unused_allows.sort();
+    Ok(Report { violations, unused_allows, files_scanned })
+}
+
+/// The default roots for a bare `mxstab analyze`: `rust/{src,tests,benches}`
+/// relative to `base`, falling back to `{src,tests,benches}` when invoked
+/// from inside `rust/`.
+pub fn default_roots(base: &Path) -> Vec<PathBuf> {
+    let prefix = if base.join("rust/src").is_dir() {
+        base.join("rust")
+    } else {
+        base.to_path_buf()
+    };
+    ["src", "tests", "benches"]
+        .iter()
+        .map(|d| prefix.join(d))
+        .filter(|p| p.is_dir())
+        .collect()
+}
+
+/// Render a human-readable report to a string (one diagnostic per line
+/// plus a trailing summary).
+pub fn render_report(report: &Report, strict: bool) -> String {
+    let mut out = String::new();
+    for d in &report.violations {
+        let _ = writeln!(out, "{}", d.render());
+    }
+    if strict {
+        for d in &report.unused_allows {
+            let _ = writeln!(out, "{}", d.render());
+        }
+    }
+    let _ = writeln!(
+        out,
+        "analyze: {} file(s), {} violation(s), {} unused allow(s){}",
+        report.files_scanned,
+        report.violations.len(),
+        report.unused_allows.len(),
+        if strict { " [strict]" } else { "" }
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(path: &str, src: &str) -> FileOutcome {
+        analyze_source(path, src, &Options::default())
+    }
+
+    #[test]
+    fn pragma_suppresses_next_code_line_and_same_line() {
+        let src = format!(
+            "fn f() {{\n    // {} allow(no-wallclock, \"heartbeat only\")\n    \
+             let t = std::time::Instant::now();\n    \
+             let u = std::time::Instant::now(); // {} allow(no-wallclock, \"cli\")\n}}\n",
+            "analyze:", "analyze:"
+        );
+        let out = run("src/util/fsio.rs", &src);
+        assert!(out.violations.is_empty(), "{:?}", out.violations);
+        assert!(out.unused_allows.is_empty());
+    }
+
+    #[test]
+    fn file_level_pragma_covers_whole_file() {
+        let src = format!(
+            "// {} allow-file(no-unordered-iter, \"point lookups only\")\n\
+             use std::collections::HashMap;\nfn g(m: &HashMap<u32, u32>) {{}}\n",
+            "analyze:"
+        );
+        let out = run("src/runtime/pjrt.rs", &src);
+        assert!(out.violations.is_empty(), "{:?}", out.violations);
+        assert!(out.unused_allows.is_empty());
+    }
+
+    #[test]
+    fn unused_allow_is_reported() {
+        let src = format!(
+            "// {} allow(no-fma, \"nothing here actually fuses\")\nfn h() {{}}\n",
+            "analyze:"
+        );
+        let out = run("src/formats/gemm.rs", &src);
+        assert!(out.violations.is_empty());
+        assert_eq!(out.unused_allows.len(), 1);
+        assert_eq!(out.unused_allows[0].rule, "unused-allow");
+    }
+
+    #[test]
+    fn malformed_and_unknown_pragmas_fail_loudly() {
+        let src = format!(
+            "// {} allow(no-such-rule, \"typo\")\n// {} allow(no-fma\nfn f() {{}}\n",
+            "analyze:", "analyze:"
+        );
+        let out = run("src/formats/gemm.rs", &src);
+        let rules: Vec<_> = out.violations.iter().map(|d| d.rule).collect();
+        assert_eq!(rules, vec!["bad-pragma", "bad-pragma"]);
+    }
+
+    #[test]
+    fn prose_mentioning_the_grammar_is_not_a_pragma() {
+        let src = format!(
+            "// Suppressions go through the {} allow(rule, \"reason\") grammar.\nfn f() {{}}\n",
+            "analyze:"
+        );
+        let out = run("src/formats/gemm.rs", &src);
+        assert!(out.violations.is_empty(), "{:?}", out.violations);
+        assert!(out.unused_allows.is_empty(), "{:?}", out.unused_allows);
+    }
+
+    #[test]
+    fn cfg_test_region_exempts_rules_that_skip_tests() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    \
+                   fn t() { let m = std::collections::HashMap::<u32, u32>::new(); \
+                   assert!(m.is_empty()); }\n}\n";
+        let out = run("src/coordinator/spool.rs", src);
+        assert!(out.violations.is_empty(), "{:?}", out.violations);
+    }
+
+    #[test]
+    fn class_from_path() {
+        let src_file = "fn a() { let x = 1.5; if x == 1.5 {} }";
+        assert_eq!(run("tests/parity.rs", src_file).violations.len(), 0);
+        assert_eq!(run("src/formats/spec.rs", src_file).violations.len(), 1);
+    }
+}

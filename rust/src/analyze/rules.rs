@@ -1,0 +1,414 @@
+//! The rule set: each rule encodes one invariant the repo's
+//! bitwise-parity / crash-resume story depends on. Rules operate on the
+//! token stream of [`super::SrcFile`] — never on raw text — so keywords
+//! inside comments, strings, and raw strings can never false-positive.
+
+use super::{Diagnostic, FileClass, SrcFile};
+use crate::analyze::lexer::TokKind;
+
+/// One analysis rule.
+pub struct Rule {
+    pub name: &'static str,
+    /// One-line summary for `--help`-style listings and DESIGN.md.
+    pub summary: &'static str,
+    /// Path/class scope. `--no-scope` bypasses this.
+    pub applies: fn(&SrcFile) -> bool,
+    pub check: fn(&SrcFile, &mut Vec<Diagnostic>),
+}
+
+pub const RULES: &[Rule] = &[
+    Rule {
+        name: "no-fma",
+        summary: "mul_add / FMA intrinsics forbidden in formats/ and \
+                  runtime/native/ (bitwise parity requires unfused mul+add)",
+        applies: |f| f.path_has("src/formats/") || f.path_has("src/runtime/native/"),
+        check: check_no_fma,
+    },
+    Rule {
+        name: "unsafe-confinement",
+        summary: "unsafe outside formats/kernel/{x86,aarch64}.rs needs a \
+                  pragma; every unsafe needs a SAFETY comment",
+        applies: |_| true,
+        check: check_unsafe_confinement,
+    },
+    Rule {
+        name: "no-wallclock",
+        summary: "SystemTime::now / Instant::now forbidden in trajectory- \
+                  and row-codec-affecting modules",
+        applies: |f| {
+            f.class == FileClass::Src
+                && (f.path_has("src/formats/")
+                    || f.path_has("src/runtime/native/")
+                    || f.path_has("src/coordinator/")
+                    || f.path_has("src/data/")
+                    || f.path_has("src/util/"))
+        },
+        check: check_no_wallclock,
+    },
+    Rule {
+        name: "no-unordered-iter",
+        summary: "HashMap/HashSet forbidden in serialization and fmt-vector \
+                  paths (iteration order must be deterministic)",
+        applies: |f| {
+            f.class == FileClass::Src
+                && (f.path_has("src/coordinator/")
+                    || f.path_has("src/formats/")
+                    || f.path_has("src/runtime/")
+                    || f.path_has("src/util/")
+                    || f.path_has("src/data/")
+                    || f.path_has("src/report/"))
+        },
+        check: check_no_unordered_iter,
+    },
+    Rule {
+        name: "float-eq",
+        summary: "== / != against non-zero float literals or NAN/INFINITY \
+                  outside tests (use to_bits() for exact compares)",
+        applies: |f| f.class == FileClass::Src,
+        check: check_float_eq,
+    },
+    Rule {
+        name: "no-bare-unwrap-in-crash-path",
+        summary: "unwrap()/expect() forbidden in coordinator/spool.rs, \
+                  coordinator/worker.rs, util/fsio.rs (crash paths must \
+                  degrade, not abort)",
+        applies: |f| {
+            f.path_ends("coordinator/spool.rs")
+                || f.path_ends("coordinator/worker.rs")
+                || f.path_ends("util/fsio.rs")
+        },
+        check: check_no_bare_unwrap,
+    },
+];
+
+fn diag(f: &SrcFile, line: u32, col: u32, rule: &'static str, message: String) -> Diagnostic {
+    Diagnostic { file: f.path.clone(), line, col, rule, message }
+}
+
+/// Intrinsic-name prefixes that fuse a multiply and an add/sub. The
+/// bitwise-parity contract (scalar == SIMD == every tier) requires the
+/// unfused two-rounding sequence everywhere.
+const FMA_PREFIXES: &[&str] = &[
+    "_mm_fmadd", "_mm256_fmadd", "_mm512_fmadd",
+    "_mm_fmsub", "_mm256_fmsub", "_mm512_fmsub",
+    "_mm_fnmadd", "_mm256_fnmadd", "_mm512_fnmadd",
+    "_mm_fnmsub", "_mm256_fnmsub", "_mm512_fnmsub",
+    "vfma", "vfms",
+];
+
+fn check_no_fma(f: &SrcFile, out: &mut Vec<Diagnostic>) {
+    for t in &f.code {
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let fused = t.text == "mul_add"
+            || FMA_PREFIXES.iter().any(|p| t.text.starts_with(p));
+        if fused {
+            out.push(diag(
+                f,
+                t.line,
+                t.col,
+                "no-fma",
+                format!(
+                    "`{}` fuses mul+add into one rounding; the bitwise-parity \
+                     contract requires the unfused sequence",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+/// Files where `unsafe` is architecturally expected: the per-ISA SIMD
+/// kernel modules. Everywhere else each site needs an explicit pragma.
+fn in_kernel_isa_file(f: &SrcFile) -> bool {
+    f.path_ends("formats/kernel/x86.rs") || f.path_ends("formats/kernel/aarch64.rs")
+}
+
+fn check_unsafe_confinement(f: &SrcFile, out: &mut Vec<Diagnostic>) {
+    let unsafe_lines: Vec<u32> = f
+        .code
+        .iter()
+        .filter(|t| t.kind == TokKind::Ident && t.text == "unsafe")
+        .map(|t| t.line)
+        .collect();
+    for (i, t) in f.code.iter().enumerate() {
+        if t.kind != TokKind::Ident || t.text != "unsafe" {
+            continue;
+        }
+        if !in_kernel_isa_file(f) {
+            out.push(diag(
+                f,
+                t.line,
+                t.col,
+                "unsafe-confinement",
+                "`unsafe` outside formats/kernel/{x86,aarch64}.rs — add an \
+                 allow pragma with the safety argument"
+                    .to_string(),
+            ));
+        }
+        // SAFETY-comment requirement, all files. Exemption: an
+        // `unsafe fn` directly under `#[target_feature(...)]` — its
+        // obligation is discharged at the (separately checked) call
+        // sites, and the kernel files carry ~30 such decls.
+        let is_tf_fn = f.code.get(i + 1).is_some_and(|n| n.text == "fn")
+            && f.code.iter().any(|a| {
+                a.kind == TokKind::Ident
+                    && a.text == "target_feature"
+                    && a.line <= t.line
+                    && t.line.saturating_sub(a.line) <= 3
+            });
+        if is_tf_fn {
+            continue;
+        }
+        let has_safety = f.comments.iter().any(|c| {
+            c.text.contains("SAFETY")
+                && c.line <= t.line
+                && t.line - c.line <= 8
+                // The comment must belong to *this* site: no other
+                // unsafe token strictly between it and us.
+                && !unsafe_lines.iter().any(|&ul| ul > c.line && ul < t.line)
+        });
+        if !has_safety {
+            out.push(diag(
+                f,
+                t.line,
+                t.col,
+                "unsafe-confinement",
+                "`unsafe` without a `// SAFETY:` comment directly above"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+fn check_no_wallclock(f: &SrcFile, out: &mut Vec<Diagnostic>) {
+    for w in f.code.windows(3) {
+        if w[0].kind == TokKind::Ident
+            && (w[0].text == "SystemTime" || w[0].text == "Instant")
+            && w[1].text == "::"
+            && w[2].kind == TokKind::Ident
+            && w[2].text == "now"
+            && !f.in_tests(w[0].line)
+        {
+            out.push(diag(
+                f,
+                w[0].line,
+                w[0].col,
+                "no-wallclock",
+                format!(
+                    "`{}::now()` in a trajectory-affecting module — wall-clock \
+                     reads break bitwise reproducibility (pragma heartbeat/CLI \
+                     sites with a reason)",
+                    w[0].text
+                ),
+            ));
+        }
+    }
+}
+
+fn check_no_unordered_iter(f: &SrcFile, out: &mut Vec<Diagnostic>) {
+    for t in &f.code {
+        if t.kind == TokKind::Ident
+            && (t.text == "HashMap" || t.text == "HashSet")
+            && !f.in_tests(t.line)
+        {
+            out.push(diag(
+                f,
+                t.line,
+                t.col,
+                "no-unordered-iter",
+                format!(
+                    "`{}` in a serialization/fmt-vector path — iteration order \
+                     is nondeterministic; use BTreeMap/BTreeSet or a Vec",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+/// True when the token at `i` (plus neighbors) denotes a float operand
+/// that makes `==`/`!=` exact-compare-suspect: a non-zero float literal,
+/// or a `NAN`/`INFINITY` path. Comparisons against literal `0.0` are
+/// exempt — exact zero-block detection is part of the codec contract.
+fn float_operand_is_suspect(f: &SrcFile, i: usize) -> bool {
+    let Some(t) = f.code.get(i) else { return false };
+    if let TokKind::Number { float: true } = t.kind {
+        let cleaned: String = t
+            .text
+            .replace('_', "")
+            .trim_end_matches("f32")
+            .trim_end_matches("f64")
+            .trim_end_matches('.')
+            .to_string();
+        return match cleaned.parse::<f64>() {
+            Ok(v) => v != 0.0,
+            Err(_) => true,
+        };
+    }
+    if t.kind == TokKind::Ident
+        && matches!(t.text.as_str(), "NAN" | "INFINITY" | "NEG_INFINITY")
+    {
+        return true;
+    }
+    false
+}
+
+fn check_float_eq(f: &SrcFile, out: &mut Vec<Diagnostic>) {
+    for (i, t) in f.code.iter().enumerate() {
+        if t.kind != TokKind::Punct || (t.text != "==" && t.text != "!=") {
+            continue;
+        }
+        if f.in_tests(t.line) {
+            continue;
+        }
+        let suspect = (i > 0 && float_operand_is_suspect(f, i - 1))
+            || float_operand_is_suspect(f, i + 1)
+            // `x == f32::NAN` puts the ident two tokens right of `==`
+            // (`f32` `::` `NAN`); same on the left, two tokens back.
+            || f.code.get(i + 1).is_some_and(|n| n.text == "f32" || n.text == "f64")
+                && float_operand_is_suspect(f, i + 3)
+            || i >= 2
+                && f.code[i - 1].kind == TokKind::Ident
+                && f.code[i - 2].text == "::"
+                && float_operand_is_suspect(f, i - 1);
+        if suspect {
+            out.push(diag(
+                f,
+                t.line,
+                t.col,
+                "float-eq",
+                format!(
+                    "`{}` against a float constant outside tests — exact float \
+                     equality is fragile; compare via to_bits()",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+fn check_no_bare_unwrap(f: &SrcFile, out: &mut Vec<Diagnostic>) {
+    for w in f.code.windows(3) {
+        if w[0].text == "."
+            && w[1].kind == TokKind::Ident
+            && (w[1].text == "unwrap" || w[1].text == "expect")
+            && w[2].text == "("
+            && !f.in_tests(w[1].line)
+        {
+            out.push(diag(
+                f,
+                w[1].line,
+                w[1].col,
+                "no-bare-unwrap-in-crash-path",
+                format!(
+                    "`.{}()` in a crash-tolerance path — a panic here aborts \
+                     the worker instead of degrading; propagate the error",
+                    w[1].text
+                ),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::analyze::{analyze_source, Options};
+
+    fn violations(path: &str, src: &str) -> Vec<(&'static str, u32, u32)> {
+        analyze_source(path, src, &Options::default())
+            .violations
+            .into_iter()
+            .map(|d| (d.rule, d.line, d.col))
+            .collect()
+    }
+
+    #[test]
+    fn no_fma_flags_mul_add_and_intrinsics_in_scope_only() {
+        let src = "fn f(a: f32, b: f32, c: f32) -> f32 { a.mul_add(b, c) }";
+        assert_eq!(violations("src/formats/gemm.rs", src), vec![("no-fma", 1, 41)]);
+        // Out of scope: fine.
+        assert!(violations("src/report/svg.rs", src).is_empty());
+        // Intrinsic prefixes.
+        let src = "unsafe { _mm256_fmadd_ps(a, b, c) }";
+        let v = violations("src/formats/quant.rs", src);
+        assert!(v.iter().any(|(r, _, _)| *r == "no-fma"));
+        // vfmaq in a comment must NOT fire (the aarch64 kernel docs
+        // mention it).
+        let src = "// NEON: no vfmaq_f32 anywhere — parity needs mul then add\nfn g() {}";
+        assert!(violations("src/formats/kernel/aarch64.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_needs_pragma_outside_kernels_and_safety_everywhere() {
+        let src = "fn f(p: *const u8) -> u8 { unsafe { *p } }";
+        let v = violations("src/util/pool.rs", src);
+        // Both the confinement diagnostic and the missing-SAFETY one.
+        assert_eq!(v.len(), 2);
+        assert!(v.iter().all(|(r, _, _)| *r == "unsafe-confinement"));
+
+        // In a kernel ISA file with a SAFETY comment: clean.
+        let src = "fn f(p: *const u8) -> u8 {\n    // SAFETY: p is valid per caller contract.\n    unsafe { *p }\n}";
+        assert!(violations("src/formats/kernel/x86.rs", src).is_empty());
+        // In a kernel ISA file without one: SAFETY diagnostic only.
+        let src = "fn f(p: *const u8) -> u8 { unsafe { *p } }";
+        assert_eq!(violations("src/formats/kernel/x86.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn target_feature_unsafe_fn_is_exempt_from_safety_comment() {
+        let src = "#[target_feature(enable = \"avx2\")]\nunsafe fn kern(p: *const f32) {}\n";
+        assert!(violations("src/formats/kernel/x86.rs", src).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_cannot_be_shared_across_sites() {
+        let src = "// SAFETY: only covers the first site.\nunsafe fn a() {}\nfn b() { unsafe { a() } }\n";
+        let v = violations("src/formats/kernel/x86.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].1, 3, "second site must not inherit the comment");
+    }
+
+    #[test]
+    fn wallclock_flagged_in_scope_not_in_tests() {
+        let src = "fn f() { let t = std::time::Instant::now(); }";
+        assert_eq!(violations("src/coordinator/run.rs", src).len(), 1);
+        assert!(violations("src/report/svg.rs", src).is_empty(), "out of scope");
+        assert!(violations("tests/smoke.rs", src).is_empty(), "tests exempt");
+        let src = "#[cfg(test)]\nmod tests {\n    fn f() { let t = std::time::Instant::now(); }\n}";
+        assert!(violations("src/util/fsio.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unordered_iter_flagged_in_scope() {
+        let src = "use std::collections::HashMap;\nfn f() { let m: HashMap<u32, u32> = HashMap::new(); }";
+        let v = violations("src/coordinator/spool.rs", src);
+        assert_eq!(v.len(), 3, "use + type + ctor: {v:?}");
+        assert!(violations("src/analyze/mod.rs", src).is_empty(), "out of scope");
+    }
+
+    #[test]
+    fn float_eq_zero_exempt_nonzero_flagged() {
+        assert!(violations("src/formats/quant.rs", "fn f(x: f32) -> bool { x == 0.0 }").is_empty());
+        assert!(violations("src/formats/quant.rs", "fn f(x: f32) -> bool { x != 0.0f32 }").is_empty());
+        let v = violations("src/formats/quant.rs", "fn f(x: f32) -> bool { x == 1.5 }");
+        assert_eq!(v, vec![("float-eq", 1, 26)]);
+        let v = violations("src/formats/quant.rs", "fn f(x: f32) -> bool { x == f32::INFINITY }");
+        assert_eq!(v.len(), 1);
+        let v = violations("src/formats/quant.rs", "fn f(x: f32) -> bool { f32::NAN != x }");
+        assert_eq!(v.len(), 1);
+    }
+
+    #[test]
+    fn unwrap_flagged_only_in_crash_paths() {
+        let src = "fn f() { std::fs::read_to_string(\"x\").unwrap(); }";
+        assert_eq!(violations("src/coordinator/spool.rs", src).len(), 1);
+        assert_eq!(violations("src/coordinator/worker.rs", src).len(), 1);
+        assert_eq!(violations("src/util/fsio.rs", src).len(), 1);
+        assert!(violations("src/formats/spec.rs", src).is_empty());
+        // Integer `==` untouched by float-eq even right next to unwrap.
+        let src = "fn f() -> bool { \"1\".parse::<u32>().unwrap() == 1 }";
+        assert!(violations("src/formats/spec.rs", src).is_empty());
+    }
+}

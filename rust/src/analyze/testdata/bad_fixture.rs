@@ -1,0 +1,41 @@
+//! Deliberate-violation fixture for the `mxstab analyze` self-test.
+//!
+//! This file is NEVER compiled: the directory walker skips `testdata/`
+//! and no module declares it. `tests/analyze_fixture.rs` and the CI
+//! `analyze` job run the pass over it with `--no-scope` and assert that
+//! each rule fires at exactly the marked position — and that none of
+//! the NEGATIVE lines (rule keywords inside comments, strings, and raw
+//! strings) produce a diagnostic.
+
+use std::collections::HashMap; // VIOLATION[no-unordered-iter]
+
+pub fn fused(a: f32, b: f32, c: f32) -> f32 {
+    a.mul_add(b, c) // VIOLATION[no-fma]
+}
+
+pub fn stamp() -> f64 {
+    let t = std::time::Instant::now(); // VIOLATION[no-wallclock]
+    t.elapsed().as_secs_f64()
+}
+
+pub fn is_half(x: f32) -> bool {
+    x == 1.5 // VIOLATION[float-eq]
+}
+
+pub fn read_spool(path: &str) -> String {
+    std::fs::read_to_string(path).unwrap() // VIOLATION[no-bare-unwrap-in-crash-path]
+}
+
+pub fn read_raw(p: *const u8) -> u8 {
+    unsafe { *p } // VIOLATION[unsafe-confinement] — fires twice: unconfined + missing safety comment
+}
+
+// NEGATIVE: mul_add, unsafe, HashMap, Instant::now() in this comment must not fire.
+pub const PLAIN: &str = "NEGATIVE: mul_add and unwrap() inside a plain string";
+pub const RAW: &str = r#"NEGATIVE: HashMap "quoted" Instant::now() unsafe mul_add"#;
+
+pub fn heartbeat_demo() -> f64 {
+    // analyze: allow(no-wallclock, "fixture demo: the self-test asserts this allow is consumed")
+    let t = std::time::Instant::now();
+    t.elapsed().as_secs_f64()
+}

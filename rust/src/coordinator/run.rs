@@ -174,6 +174,7 @@ impl<B: Backend> Runner<B> {
         let mut detector = Detector::new(cfg.detector.clone());
         let mut fmt = cfg.fmt;
         let mut pending: Vec<Policy> = cfg.policies.clone();
+        // analyze: allow(no-wallclock, "wallclock_s is summary telemetry only; it never enters rows or the trajectory")
         let t0 = Instant::now();
 
         let tokens_shape = self.backend.tokens_shape();

@@ -35,13 +35,18 @@
 //! the unit tests below) asserts all of this on adversarial inputs —
 //! zero blocks, subnormals, NaN/Inf, clamp clusters, raw bit patterns.
 //!
-//! **Unsafe boundaries.** All `unsafe` lives in the ISA submodules
-//! (`x86.rs`, `aarch64.rs`) under `#![deny(unsafe_op_in_unsafe_fn)]`
-//! (enforced for the whole `formats/kernel/` tree by this file). The
-//! dispatch layer only hands out an ISA table after the corresponding
-//! feature check (AVX2 via `is_x86_feature_detected!`; SSE2 and NEON
-//! are baseline on their targets), so the safe `fn` pointers in the
-//! tables can never execute unsupported instructions.
+//! **Unsafe boundaries.** Within `formats/kernel/`, all `unsafe` lives
+//! in the ISA submodules (`x86.rs`, `aarch64.rs`) under
+//! `#![deny(unsafe_op_in_unsafe_fn)]` (set here for the whole tree, and
+//! crate-wide via `[lints.rust]`). This file itself contains none. The
+//! confinement is mechanically enforced: the `unsafe-confinement` rule
+//! of `mxstab analyze` fails CI on `unsafe` outside those two files
+//! unless the site carries a justified allow pragma (DESIGN.md
+//! §Static-analysis). The dispatch layer only hands out an ISA table
+//! after the corresponding feature check (AVX2 via
+//! `is_x86_feature_detected!`; SSE2 and NEON are baseline on their
+//! targets), so the safe `fn` pointers in the tables can never execute
+//! unsupported instructions.
 #![deny(unsafe_op_in_unsafe_fn)]
 
 use std::sync::atomic::{AtomicU8, Ordering};

@@ -660,18 +660,22 @@ unsafe fn max_f64_avx2_impl(x: &[f32]) -> f64 {
 // ---------------------------------------------------------------------------
 
 /// `mask ? b : a` per bit (SSE2 has no blendv).
+// SAFETY: callers need no preconditions — pure SSE2 register ops, baseline
+// on x86_64.
 #[inline(always)]
 unsafe fn blend_si128(a: __m128i, b: __m128i, mask: __m128i) -> __m128i {
     // SAFETY: pure register ops; SSE2 is baseline on x86_64.
     unsafe { _mm_or_si128(_mm_and_si128(mask, b), _mm_andnot_si128(mask, a)) }
 }
 
+// SAFETY: callers need no preconditions — pure SSE2 register ops.
 #[inline(always)]
 unsafe fn min_epi32_sse2(a: __m128i, b: __m128i) -> __m128i {
     // SAFETY: pure register ops.
     unsafe { blend_si128(a, b, _mm_cmpgt_epi32(a, b)) }
 }
 
+// SAFETY: callers need no preconditions — pure SSE2 register ops.
 #[inline(always)]
 unsafe fn max_epi32_sse2(a: __m128i, b: __m128i) -> __m128i {
     // SAFETY: pure register ops.
@@ -824,6 +828,7 @@ fn encode_block_sse2(pf: &PackedFormat, xb: &[f32], scale: f32, out: &mut [u8]) 
 /// Byte codes → nibble codes in-register: `(c >> 4) & 0x8 | c & 0x7`
 /// per byte. 16-bit shifts are safe here because the shifted bit (the
 /// masked sign, 0x80) stays inside its own byte.
+// SAFETY: callers need no preconditions — pure SSE2 register ops.
 #[inline(always)]
 unsafe fn nib16_sse2(v: __m128i) -> __m128i {
     // SAFETY: pure register ops; SSE2 is baseline on x86_64.
@@ -867,6 +872,7 @@ fn pack4_sse2(codes: &[u8], out: &mut [u8]) {
 /// Nibble codes → byte codes in-register: `(n & 8) << 4 | n & 7` per
 /// byte — again the shifted bit stays inside its byte, so 16-bit shifts
 /// are safe.
+// SAFETY: callers need no preconditions — pure SSE2 register ops.
 #[inline(always)]
 unsafe fn expand_nib_sse2(n: __m128i) -> __m128i {
     // SAFETY: pure register ops; SSE2 is baseline on x86_64.

@@ -26,6 +26,7 @@
 //! execution sits behind `xla` (DESIGN.md §6).
 
 pub mod analysis;
+pub mod analyze;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -13,6 +13,8 @@
 //! mxstab sweep-status <spool-dir>               # per-state counts + per-job progress
 //! mxstab codes [--format e4m3]                  # print the element-format code table
 //! mxstab fit --csv <file>                       # Chinchilla fit over (N,D,loss) rows
+//! mxstab analyze [paths...] [--json] [--strict] [--no-scope]
+//!                                               # repo-invariant static analysis
 //! ```
 //!
 //! `mxstab sweep` *without* `--spool` stays an alias for `experiment`.
@@ -369,7 +371,7 @@ fn print_spool_status(spool: &Spool, timeout_ms: u64) -> Result<()> {
 }
 
 fn cmd_spool_sweep(engine: Arc<NativeEngine>, args: &Args) -> Result<()> {
-    mxstab::util::faults::arm_from_env();
+    mxstab::util::faults::arm_from_env()?;
     let root = PathBuf::from(args.get("spool").expect("--spool checked by caller"));
     let spool = Spool::init(&root)?;
     let mut queued = 0usize;
@@ -442,7 +444,7 @@ fn cmd_spool_sweep(engine: Arc<NativeEngine>, args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep_worker(engine: Arc<NativeEngine>, args: &Args) -> Result<()> {
-    mxstab::util::faults::arm_from_env();
+    mxstab::util::faults::arm_from_env()?;
     let root = args
         .positional
         .first()
@@ -481,6 +483,47 @@ fn cmd_sweep_status(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("usage: mxstab sweep-status <spool-dir>"))?;
     let spool = Spool::open(Path::new(root))?;
     print_spool_status(&spool, args.parse_or("lease-timeout-ms", 30_000u64)?)
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    use mxstab::analyze::{analyze_paths, default_roots, render_report, Options};
+    let mut paths: Vec<PathBuf> = args.positional.iter().map(PathBuf::from).collect();
+    // The Args grammar reads a bare word after `--json` as its value, so
+    // `analyze --json <path>` lands in options; accept that spelling too
+    // (the captured value is a path) so flags and paths compose freely.
+    let mut flag = |name: &str| {
+        if args.flag(name) {
+            true
+        } else if let Some(v) = args.get(name) {
+            paths.push(PathBuf::from(v));
+            true
+        } else {
+            false
+        }
+    };
+    let opts = Options { ignore_scope: flag("no-scope") };
+    let strict = flag("strict");
+    let json = flag("json");
+    if paths.is_empty() {
+        paths = default_roots(Path::new("."));
+    }
+    if paths.is_empty() {
+        bail!(
+            "analyze: no rust/{{src,tests,benches}} roots found under the \
+             current directory (pass explicit paths)"
+        );
+    }
+    let report =
+        analyze_paths(&paths, &opts).map_err(|e| anyhow!("analyze: walking sources: {e}"))?;
+    if json {
+        println!("{}", report.to_json(strict));
+    } else {
+        print!("{}", render_report(&report, strict));
+    }
+    if !report.ok(strict) {
+        std::process::exit(1);
+    }
+    Ok(())
 }
 
 fn native_engine(args: &Args) -> Result<Arc<NativeEngine>> {
@@ -566,13 +609,14 @@ fn main() -> Result<()> {
         },
         Some("codes") => cmd_codes(&args),
         Some("fit") => cmd_fit(&args),
+        Some("analyze") => cmd_analyze(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}\n");
             }
             eprintln!(
                 "usage: mxstab <info|train|experiment|sweep|sweep-worker|sweep-status|\
-                 codes|fit> [--backend native|pjrt] [options]\n\
+                 codes|fit|analyze> [--backend native|pjrt] [options]\n\
                  see rust/src/main.rs header for details"
             );
             Ok(())

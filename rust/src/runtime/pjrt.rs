@@ -10,6 +10,7 @@
 //! manifest) and exposes typed `init` / `step` / `eval` entry points over
 //! a [`State`] (the flat tensor list whose layout the manifest defines).
 
+// analyze: allow-file(no-unordered-iter, "executable/bundle caches are point lookups; nothing iterates or serializes them")
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
@@ -25,8 +26,9 @@ use super::{Backend, Engine, Metrics, StepArgs};
 /// (untupled by the patched PJRT wrapper) feed straight back as inputs.
 pub struct State(pub Vec<xla::PjRtBuffer>);
 
-// PJRT CPU buffers are internally synchronized; moving a State between
-// coordinator threads is safe.
+// SAFETY: PJRT CPU buffers are internally synchronized; moving a State
+// between coordinator threads is safe.
+// analyze: allow(unsafe-confinement, "Send for device-buffer state; PJRT CPU buffers are internally synchronized")
 unsafe impl Send for State {}
 
 impl State {
@@ -91,9 +93,12 @@ pub struct Session {
     cache: Mutex<HashMap<PathBuf, Arc<xla::PjRtLoadedExecutable>>>,
 }
 
-// The PJRT CPU client is thread-safe (TFRT CPU client); executions from
-// multiple rust threads are serialized internally per device queue.
+// SAFETY: the PJRT CPU client is thread-safe (TFRT CPU client); executions
+// from multiple rust threads are serialized internally per device queue.
+// analyze: allow(unsafe-confinement, "Send for the PJRT session; the TFRT CPU client is thread-safe")
 unsafe impl Send for Session {}
+// SAFETY: same TFRT-client thread-safety argument as Send above.
+// analyze: allow(unsafe-confinement, "Sync for the PJRT session; the TFRT CPU client is thread-safe")
 unsafe impl Sync for Session {}
 
 impl Session {
@@ -164,9 +169,12 @@ pub struct Bundle {
     tokens_dims: Option<Vec<usize>>,
 }
 
-// Executables are immutable after compilation and the TFRT CPU client is
-// thread-safe; bundles are shared read-only across sweep worker threads.
+// SAFETY: executables are immutable after compilation and the TFRT CPU
+// client is thread-safe; bundles are shared read-only across workers.
+// analyze: allow(unsafe-confinement, "Send for compiled-executable handles; immutable after compilation")
 unsafe impl Send for Bundle {}
+// SAFETY: same immutable-after-compilation argument as Send above.
+// analyze: allow(unsafe-confinement, "Sync for compiled-executable handles; immutable after compilation")
 unsafe impl Sync for Bundle {}
 
 impl Bundle {

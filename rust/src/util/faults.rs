@@ -94,6 +94,80 @@ impl Fault {
         self.at_step = Some(step);
         self
     }
+
+    /// Render this fault back into its `MXSTAB_FAULT` spec entry, when
+    /// it is one of the env-expressible kinds ([`Fault::kill_worker`],
+    /// [`Fault::stall_heartbeat`]). Inverse of [`parse_spec`].
+    pub fn spec_entry(&self) -> Option<String> {
+        match (self.point, &self.action) {
+            ("worker.step", FaultAction::Kill) => {
+                let scope = self.scope.as_deref()?;
+                Some(format!("kill:{scope}@{}", self.at_step.unwrap_or(0)))
+            }
+            ("worker.heartbeat", FaultAction::StallHeartbeat) => {
+                Some(format!("stall-heartbeat:{}", self.scope.as_deref()?))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Render a fault list back into an `MXSTAB_FAULT` spec string, or
+/// `None` if any entry is not env-expressible.
+pub fn render_spec(faults: &[Fault]) -> Option<String> {
+    faults
+        .iter()
+        .map(Fault::spec_entry)
+        .collect::<Option<Vec<_>>>()
+        .map(|v| v.join(","))
+}
+
+/// Parse an `MXSTAB_FAULT` spec string into faults without arming them.
+///
+/// Grammar: `<entry>[,<entry>...]` with entries `kill:<worker>@<step>`
+/// (the `@<step>` defaults to 0 when omitted) and
+/// `stall-heartbeat:<worker>`. Malformed entries are hard errors — a
+/// fault spec that silently arms nothing would make a fault-injection
+/// test pass vacuously.
+pub fn parse_spec(spec: &str) -> Result<Vec<Fault>, String> {
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|s| !s.is_empty()) {
+        let (kind, rest) = part.split_once(':').unwrap_or((part, ""));
+        match kind {
+            "kill" => {
+                let (scope, step_s) = rest.split_once('@').unwrap_or((rest, "0"));
+                if scope.is_empty() {
+                    return Err(format!(
+                        "MXSTAB_FAULT entry {part:?}: `kill:` needs a worker \
+                         scope, e.g. kill:w0@30"
+                    ));
+                }
+                let step = step_s.parse::<usize>().map_err(|_| {
+                    format!(
+                        "MXSTAB_FAULT entry {part:?}: bad step {step_s:?} \
+                         (expected a non-negative integer)"
+                    )
+                })?;
+                out.push(Fault::kill_worker(scope, step));
+            }
+            "stall-heartbeat" => {
+                if rest.is_empty() {
+                    return Err(format!(
+                        "MXSTAB_FAULT entry {part:?}: `stall-heartbeat:` needs \
+                         a worker scope, e.g. stall-heartbeat:w1"
+                    ));
+                }
+                out.push(Fault::stall_heartbeat(rest));
+            }
+            other => {
+                return Err(format!(
+                    "MXSTAB_FAULT: unknown fault kind {other:?} \
+                     (known: kill, stall-heartbeat)"
+                ));
+            }
+        }
+    }
+    Ok(out)
 }
 
 static ARMED: AtomicUsize = AtomicUsize::new(0);
@@ -149,22 +223,16 @@ pub fn check(point: &str, scope: &str, step: usize) -> Option<FaultAction> {
 /// `sweep-fault-e2e` job uses to inject failures into a real `mxstab
 /// sweep` invocation without a test harness:
 /// `MXSTAB_FAULT="kill:<worker>@<step>[,stall-heartbeat:<worker>]"`.
-pub fn arm_from_env() {
+/// A malformed spec is an error, not a warning: an operator who typoes
+/// a fault spec must find out before the sweep runs fault-free.
+pub fn arm_from_env() -> anyhow::Result<()> {
     let Ok(spec) = std::env::var("MXSTAB_FAULT") else {
-        return;
+        return Ok(());
     };
-    for part in spec.split(',').filter(|s| !s.is_empty()) {
-        let (kind, rest) = part.split_once(':').unwrap_or((part, ""));
-        match kind {
-            "kill" => {
-                let (scope, step) = rest.split_once('@').unwrap_or((rest, "0"));
-                let step = step.parse().unwrap_or(0);
-                arm(Fault::kill_worker(scope, step));
-            }
-            "stall-heartbeat" => arm(Fault::stall_heartbeat(rest)),
-            other => eprintln!("MXSTAB_FAULT: unknown fault kind {other:?} (ignored)"),
-        }
+    for fault in parse_spec(&spec).map_err(|e| anyhow::anyhow!("{e}"))? {
+        arm(fault);
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -200,6 +268,46 @@ mod tests {
         }
         clear_scope("faults_t2");
         assert_eq!(check("worker.heartbeat", "faults_t2_w1", 9), None);
+    }
+
+    #[test]
+    fn spec_round_trips_through_parse_and_render() {
+        let spec = "kill:w0@30,stall-heartbeat:w1";
+        let faults = parse_spec(spec).expect("valid spec");
+        assert_eq!(faults.len(), 2);
+        assert_eq!(faults[0].point, "worker.step");
+        assert_eq!(faults[0].scope.as_deref(), Some("w0"));
+        assert_eq!(faults[0].at_step, Some(30));
+        assert_eq!(faults[1].point, "worker.heartbeat");
+        assert_eq!(render_spec(&faults).as_deref(), Some(spec));
+        // `kill:w2` (no @step) defaults to step 0 and renders as such.
+        let faults = parse_spec("kill:w2").expect("valid spec");
+        assert_eq!(render_spec(&faults).as_deref(), Some("kill:w2@0"));
+        // The empty spec arms nothing.
+        assert!(parse_spec("").expect("empty is fine").is_empty());
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected_with_clear_errors() {
+        let e = parse_spec("kill:").unwrap_err();
+        assert!(e.contains("needs a worker scope"), "{e}");
+        let e = parse_spec("kill:w0@banana").unwrap_err();
+        assert!(e.contains("bad step"), "{e}");
+        let e = parse_spec("detonate:w0").unwrap_err();
+        assert!(e.contains("unknown fault kind"), "{e}");
+        assert!(e.contains("detonate"), "{e}");
+        let e = parse_spec("stall-heartbeat:").unwrap_err();
+        assert!(e.contains("needs a worker scope"), "{e}");
+        // One bad entry poisons the whole spec — nothing half-arms.
+        let e = parse_spec("kill:w0@30,bogus:w1").unwrap_err();
+        assert!(e.contains("bogus"), "{e}");
+    }
+
+    #[test]
+    fn non_env_faults_do_not_render() {
+        let f = Fault::new("fsio.write", FaultAction::Fail);
+        assert_eq!(f.spec_entry(), None);
+        assert_eq!(render_spec(&[f]), None);
     }
 
     #[test]

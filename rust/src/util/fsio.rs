@@ -122,6 +122,7 @@ pub fn fnv64(bytes: &[u8]) -> u64 {
 
 /// Milliseconds since the unix epoch (heartbeat timestamps).
 pub fn now_ms() -> u64 {
+    // analyze: allow(no-wallclock, "heartbeat/lease timestamps only; trajectory state never reads the clock")
     std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_millis() as u64)

@@ -208,6 +208,7 @@ impl<'scope, 'env> Scope<'scope, 'env> {
         // everything it borrows from 'scope/'env) outlives its execution.
         // The transmute only erases the lifetime bound; the vtable and
         // layout are unchanged.
+        // analyze: allow(unsafe-confinement, "lifetime-erased task box; scope() joins every task before returning")
         let task: ErasedTask = unsafe {
             std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, ErasedTask>(task)
         };

@@ -1,0 +1,102 @@
+//! The analyzer must flag the committed bad fixture: one deliberate
+//! violation per rule, each at the exact `file:line:col` the marker
+//! sits on — and none of the NEGATIVE lines (rule keywords inside
+//! comments, strings, and raw strings) may produce a diagnostic.
+
+use mxstab::analyze::{analyze_source, Options};
+
+const FIXTURE: &str = include_str!("../src/analyze/testdata/bad_fixture.rs");
+const PATH: &str = "rust/src/analyze/testdata/bad_fixture.rs";
+
+/// (line, col) of `token` on the line carrying `marker`, both 1-based.
+fn line_col(marker: &str, token: &str) -> (u32, u32) {
+    for (i, l) in FIXTURE.lines().enumerate() {
+        if l.contains(marker) {
+            let col = l.find(token).unwrap_or_else(|| {
+                panic!("marker line {marker:?} does not contain {token:?}")
+            });
+            return ((i + 1) as u32, (col + 1) as u32);
+        }
+    }
+    panic!("fixture has no line with marker {marker:?}");
+}
+
+#[test]
+fn fixture_trips_every_rule_at_the_marked_position() {
+    // --no-scope: no single real path is in-scope for all six rules at
+    // once (no-fma wants formats/, the unwrap rule wants spool/worker/
+    // fsio), so the fixture self-test disables path scoping.
+    let out = analyze_source(PATH, FIXTURE, &Options { ignore_scope: true });
+
+    let expected = [
+        ("no-unordered-iter", line_col("VIOLATION[no-unordered-iter]", "HashMap")),
+        ("no-fma", line_col("VIOLATION[no-fma]", "mul_add")),
+        ("no-wallclock", line_col("VIOLATION[no-wallclock]", "Instant")),
+        ("float-eq", line_col("VIOLATION[float-eq]", "==")),
+        (
+            "no-bare-unwrap-in-crash-path",
+            line_col("VIOLATION[no-bare-unwrap-in-crash-path]", "unwrap"),
+        ),
+        ("unsafe-confinement", line_col("VIOLATION[unsafe-confinement]", "unsafe")),
+    ];
+    for (rule, (line, col)) in expected {
+        assert!(
+            out.violations
+                .iter()
+                .any(|d| d.rule == rule && d.line == line && d.col == col),
+            "rule {rule} did not fire at {line}:{col}; got:\n{}",
+            out.violations
+                .iter()
+                .map(|d| d.render())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+
+    // The unconfined unsafe block also lacks a SAFETY comment: two
+    // diagnostics on the same token.
+    let unsafe_diags = out
+        .violations
+        .iter()
+        .filter(|d| d.rule == "unsafe-confinement")
+        .count();
+    assert_eq!(unsafe_diags, 2, "unconfined + missing-SAFETY");
+
+    // Exactly the planted violations, nothing more: 5 single-diagnostic
+    // rules + the double-diagnostic unsafe site.
+    assert_eq!(out.violations.len(), 7, "unexpected extra diagnostics");
+
+    // NEGATIVE lines (keywords in comments / strings / raw strings)
+    // must stay silent.
+    let negative_lines: Vec<u32> = FIXTURE
+        .lines()
+        .enumerate()
+        .filter(|(_, l)| l.contains("NEGATIVE"))
+        .map(|(i, _)| (i + 1) as u32)
+        .collect();
+    assert!(negative_lines.len() >= 3, "fixture lost its NEGATIVE controls");
+    for d in &out.violations {
+        assert!(
+            !negative_lines.contains(&d.line),
+            "false positive on a NEGATIVE line: {}",
+            d.render()
+        );
+    }
+
+    // The demo pragma suppresses its wallclock read AND is counted as
+    // used — the self-test covers the allow-consumption path too.
+    assert!(
+        out.unused_allows.is_empty(),
+        "the fixture's allow pragma must be consumed: {:?}",
+        out.unused_allows
+            .iter()
+            .map(|d| d.render())
+            .collect::<Vec<_>>()
+    );
+    let wallclock = out
+        .violations
+        .iter()
+        .filter(|d| d.rule == "no-wallclock")
+        .count();
+    assert_eq!(wallclock, 1, "the pragma'd Instant::now must be suppressed");
+}

@@ -1,0 +1,34 @@
+//! The shipped tree must be clean under `mxstab analyze --strict`: zero
+//! violations and zero unused allows. This is the same invariant CI's
+//! `analyze` job enforces via the binary; running it as a cargo test
+//! keeps `cargo test` self-contained on a bare machine.
+
+use std::path::Path;
+
+use mxstab::analyze::{analyze_paths, default_roots, Options};
+
+#[test]
+fn shipped_tree_is_clean_under_strict_analyze() {
+    // CARGO_MANIFEST_DIR is rust/, so default_roots resolves src/,
+    // tests/, benches/ directly.
+    let roots = default_roots(Path::new(env!("CARGO_MANIFEST_DIR")));
+    assert!(!roots.is_empty(), "no source roots found");
+    let report =
+        analyze_paths(&roots, &Options::default()).expect("walking the source tree");
+    let rendered: Vec<String> = report
+        .violations
+        .iter()
+        .chain(report.unused_allows.iter())
+        .map(|d| d.render())
+        .collect();
+    assert!(
+        report.violations.is_empty() && report.unused_allows.is_empty(),
+        "analyze must be clean on the shipped tree:\n{}",
+        rendered.join("\n")
+    );
+    assert!(
+        report.files_scanned >= 60,
+        "suspiciously few files scanned ({}) — did the walker break?",
+        report.files_scanned
+    );
+}
