@@ -1,0 +1,157 @@
+#!/usr/bin/env python3
+"""Gate the committed bench trajectory against freshly measured numbers.
+
+Two jobs, both stdlib-only (the repo has no python deps):
+
+1. Structural validation of the committed ``BENCH_TRAJECTORY.json``:
+   schema, non-empty append-only entries, the last entry naming every
+   bench the repo ships, and null headlines only under
+   ``measured: false``.
+
+2. Regression gating (``--fresh``): load the freshly regenerated
+   ``BENCH_<name>.json`` files at the repo root and
+
+   - require ``measured: true`` and a non-null value for every headline
+     key the trajectory's last entry tracks for that bench;
+   - when the fresh run is full-size (``smoke_mode: false``), require
+     every ``*speedup*`` headline to stay at or above
+     ``tolerance x`` the last *measured* trajectory value for the same
+     key. Smoke runs (CI) skip the numeric comparison — reduced-size
+     numbers are too noisy to gate on — but still enforce presence and
+     non-null-ness.
+
+Exit status is nonzero on any violation; every violation is printed.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+TRAJECTORY = REPO_ROOT / "BENCH_TRAJECTORY.json"
+
+# Every bench binary the repo ships must be tracked by the trajectory's
+# newest entry. Extend this set when adding a [[bench]] target.
+KNOWN_BENCHES = {"quantizer", "step_throughput", "container_load"}
+
+
+def fail(errors, msg):
+    errors.append(msg)
+    print(f"bench_gate: {msg}", file=sys.stderr)
+
+
+def validate_trajectory(traj, errors):
+    if traj.get("schema") != 1:
+        fail(errors, f"unknown trajectory schema {traj.get('schema')!r}")
+    entries = traj.get("entries")
+    if not isinstance(entries, list) or not entries:
+        fail(errors, "trajectory has no entries")
+        return
+    tol = traj.get("tolerance")
+    if not isinstance(tol, (int, float)) or not 0 < tol <= 1:
+        fail(errors, f"tolerance must be in (0, 1], got {tol!r}")
+    seen = set()
+    for i, e in enumerate(entries):
+        pr = e.get("pr")
+        if not isinstance(pr, str) or not pr:
+            fail(errors, f"entry {i} has no 'pr' label")
+            continue
+        if pr in seen:
+            fail(errors, f"duplicate entry for {pr!r} (entries are append-only)")
+        seen.add(pr)
+        heads = e.get("headlines")
+        if not isinstance(heads, dict) or not heads:
+            fail(errors, f"{pr!r}: no headlines object")
+            continue
+        unknown = set(heads) - KNOWN_BENCHES
+        if unknown:
+            fail(errors, f"{pr!r}: unknown benches {sorted(unknown)}")
+        for bench, keys in heads.items():
+            if not isinstance(keys, dict) or not keys:
+                fail(errors, f"{pr!r}/{bench}: empty headline map")
+                continue
+            for key, val in keys.items():
+                if val is None and e.get("measured") is not False:
+                    fail(errors, f"{pr!r}/{bench}/{key}: null headline on a measured entry")
+                if val is not None and not isinstance(val, (int, float)):
+                    fail(errors, f"{pr!r}/{bench}/{key}: non-numeric headline {val!r}")
+    last = entries[-1]
+    missing = KNOWN_BENCHES - set(last.get("headlines", {}))
+    if missing:
+        fail(errors, f"last entry {last.get('pr')!r} does not track {sorted(missing)}")
+
+
+def last_measured(traj, bench, key):
+    """Newest trajectory value for headlines[bench][key] on a measured entry."""
+    for e in reversed(traj.get("entries", [])):
+        if e.get("measured") is not True:
+            continue
+        val = e.get("headlines", {}).get(bench, {}).get(key)
+        if isinstance(val, (int, float)):
+            return e["pr"], val
+    return None, None
+
+
+def gate_fresh(traj, errors):
+    tol = traj.get("tolerance", 0.8)
+    tracked = traj["entries"][-1].get("headlines", {})
+    for bench, keys in sorted(tracked.items()):
+        path = REPO_ROOT / f"BENCH_{bench}.json"
+        if not path.exists():
+            fail(errors, f"{path.name}: missing (run `cargo bench --bench {bench}`)")
+            continue
+        fresh = json.loads(path.read_text())
+        if fresh.get("measured") is not True:
+            fail(errors, f"{path.name}: measured is not true — placeholder, not a fresh run")
+            continue
+        smoke = bool(fresh.get("smoke_mode"))
+        headline = fresh.get("headline", {})
+        for key in sorted(keys):
+            val = headline.get(key)
+            if not isinstance(val, (int, float)):
+                fail(errors, f"{path.name}: headline {key} is {val!r} on a measured run")
+                continue
+            if smoke or "speedup" not in key:
+                continue
+            pr, ref = last_measured(traj, bench, key)
+            if ref is None:
+                continue
+            if val < tol * ref:
+                fail(
+                    errors,
+                    f"{path.name}: headline {key} regressed — {val:.3f} vs "
+                    f"{ref:.3f} recorded by {pr!r} (tolerance {tol})",
+                )
+            else:
+                print(f"bench_gate: {bench}/{key} ok — {val:.3f} vs {ref:.3f} ({pr!r})")
+        if smoke:
+            print(f"bench_gate: {bench}: smoke run — presence checked, numbers not gated")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--fresh",
+        action="store_true",
+        help="also gate freshly measured BENCH_*.json files against the trajectory",
+    )
+    args = ap.parse_args()
+    errors = []
+    try:
+        traj = json.loads(TRAJECTORY.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_gate: cannot load {TRAJECTORY.name}: {e}", file=sys.stderr)
+        return 1
+    validate_trajectory(traj, errors)
+    if args.fresh and not errors:
+        gate_fresh(traj, errors)
+    if errors:
+        print(f"bench_gate: FAIL ({len(errors)} violation(s))", file=sys.stderr)
+        return 1
+    print("bench_gate: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,8 +26,9 @@ pub const RULES: &[Rule] = &[
     },
     Rule {
         name: "unsafe-confinement",
-        summary: "unsafe outside formats/kernel/{x86,aarch64}.rs needs a \
-                  pragma; every unsafe needs a SAFETY comment",
+        summary: "unsafe outside formats/kernel/{x86,aarch64}.rs and \
+                  util/mmap.rs needs a pragma; every unsafe needs a \
+                  SAFETY comment",
         applies: |_| true,
         check: check_unsafe_confinement,
     },
@@ -119,10 +120,16 @@ fn check_no_fma(f: &SrcFile, out: &mut Vec<Diagnostic>) {
     }
 }
 
-/// Files where `unsafe` is architecturally expected: the per-ISA SIMD
-/// kernel modules. Everywhere else each site needs an explicit pragma.
-fn in_kernel_isa_file(f: &SrcFile) -> bool {
-    f.path_ends("formats/kernel/x86.rs") || f.path_ends("formats/kernel/aarch64.rs")
+/// Files where `unsafe` is architecturally expected — the sanctioned
+/// unsafe boundaries: the per-ISA SIMD kernel modules and the mmap
+/// wrapper (raw `mmap`/`munmap` FFI plus the borrowed-window casts
+/// behind the `.mxc` zero-copy container). Everywhere else each site
+/// needs an explicit pragma; SAFETY comments are required everywhere,
+/// these files included.
+fn in_sanctioned_unsafe_file(f: &SrcFile) -> bool {
+    f.path_ends("formats/kernel/x86.rs")
+        || f.path_ends("formats/kernel/aarch64.rs")
+        || f.path_ends("util/mmap.rs")
 }
 
 fn check_unsafe_confinement(f: &SrcFile, out: &mut Vec<Diagnostic>) {
@@ -136,14 +143,14 @@ fn check_unsafe_confinement(f: &SrcFile, out: &mut Vec<Diagnostic>) {
         if t.kind != TokKind::Ident || t.text != "unsafe" {
             continue;
         }
-        if !in_kernel_isa_file(f) {
+        if !in_sanctioned_unsafe_file(f) {
             out.push(diag(
                 f,
                 t.line,
                 t.col,
                 "unsafe-confinement",
-                "`unsafe` outside formats/kernel/{x86,aarch64}.rs — add an \
-                 allow pragma with the safety argument"
+                "`unsafe` outside formats/kernel/{x86,aarch64}.rs and \
+                 util/mmap.rs — add an allow pragma with the safety argument"
                     .to_string(),
             ));
         }
@@ -354,6 +361,22 @@ mod tests {
         // In a kernel ISA file without one: SAFETY diagnostic only.
         let src = "fn f(p: *const u8) -> u8 { unsafe { *p } }";
         assert_eq!(violations("src/formats/kernel/x86.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn mmap_wrapper_is_a_sanctioned_unsafe_boundary() {
+        // util/mmap.rs is sanctioned: no confinement diagnostic when the
+        // site carries its SAFETY comment.
+        let src = "fn f(p: *const u8) -> u8 {\n    // SAFETY: p is valid per caller contract.\n    unsafe { *p }\n}";
+        assert!(violations("src/util/mmap.rs", src).is_empty());
+        // SAFETY comments are still mandatory inside the boundary.
+        let src = "fn f(p: *const u8) -> u8 { unsafe { *p } }";
+        let v = violations("src/util/mmap.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v.iter().all(|(r, _, _)| *r == "unsafe-confinement"));
+        // Other util files stay unsanctioned.
+        let v = violations("src/util/fsio.rs", src);
+        assert_eq!(v.len(), 2, "{v:?}");
     }
 
     #[test]

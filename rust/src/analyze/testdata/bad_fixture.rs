@@ -31,6 +31,7 @@ pub fn read_raw(p: *const u8) -> u8 {
 }
 
 // NEGATIVE: mul_add, unsafe, HashMap, Instant::now() in this comment must not fire.
+// NEGATIVE: util/mmap.rs is a sanctioned unsafe boundary; naming unsafe here must not fire.
 pub const PLAIN: &str = "NEGATIVE: mul_add and unwrap() inside a plain string";
 pub const RAW: &str = r#"NEGATIVE: HashMap "quoted" Instant::now() unsafe mul_add"#;
 

@@ -59,6 +59,11 @@ impl CheckpointStore {
     /// checkpoint for the same (run, step) — possible when a zombie
     /// worker races its reclaimer, and harmless because training is
     /// deterministic — the existing entry is kept.
+    ///
+    /// Tensors stream into the staged `state.bin` one at a time with an
+    /// incremental FNV-1a running alongside — the full state blob is
+    /// never materialized, so peak save memory is one tensor, not the
+    /// whole model.
     pub fn save<B: Backend>(
         &self,
         backend: &B,
@@ -71,8 +76,8 @@ impl CheckpointStore {
         if spec.len() != tensors.len() {
             bail!("state arity {} != spec {}", tensors.len(), spec.len());
         }
-        let mut blob: Vec<u8> = Vec::with_capacity(backend.state_bytes());
         let mut table = Vec::new();
+        let mut total = 0usize;
         for (ts, data) in spec.iter().zip(&tensors) {
             if data.len() != ts.elems() {
                 bail!("tensor {}: {} elems, expected {}", ts.name, data.len(), ts.elems());
@@ -80,31 +85,49 @@ impl CheckpointStore {
             table.push(Json::obj(vec![
                 ("name", Json::from(ts.name.clone())),
                 ("shape", Json::Arr(ts.shape.iter().map(|&d| Json::from(d)).collect())),
-                ("offset", Json::from(blob.len())),
+                ("offset", Json::from(total)),
             ]));
-            for v in data {
-                blob.extend_from_slice(&v.to_le_bytes());
-            }
+            total += 4 * data.len();
         }
-        let meta = Json::obj(vec![
-            ("bundle", Json::from(backend.name().to_string())),
-            ("step", Json::from(step)),
-            ("bytes", Json::from(blob.len())),
-            ("checksum", Json::from(format!("{:016x}", fsio::fnv64(&blob)))),
-            ("tensors", Json::Arr(table)),
-        ]);
-        let meta_text = meta.to_string();
+        let meta_text_for = |checksum: u64| {
+            Json::obj(vec![
+                ("bundle", Json::from(backend.name().to_string())),
+                ("step", Json::from(step)),
+                ("bytes", Json::from(total)),
+                ("checksum", Json::from(format!("{checksum:016x}"))),
+                ("tensors", Json::Arr(table.clone())),
+            ])
+            .to_string()
+        };
         let dir = self.dir(run, step);
         let run_dir = self.root.join(run);
         std::fs::create_dir_all(&run_dir)?;
 
         // Fault point: tear the state blob *at the final path* (bypassing
         // the temp+rename discipline, like a crashed legacy writer) so
-        // tests can prove `load`/`load_latest` detect it.
+        // tests can prove `load`/`load_latest` detect it. The meta still
+        // records the full-blob checksum, which needs its own hash pass
+        // here — the final path only ever sees the torn prefix.
         if let Some(FaultAction::TornWrite { keep }) = faults::check("ckpt.state", run, step) {
             std::fs::create_dir_all(&dir)?;
-            std::fs::write(dir.join("state.bin"), &blob[..keep.min(blob.len())])?;
-            std::fs::write(dir.join("meta.json"), &meta_text)?;
+            let mut hash = fsio::Fnv64::new();
+            let mut chunk = Vec::new();
+            for data in &tensors {
+                le_chunk(data, &mut chunk);
+                hash.update(&chunk);
+            }
+            let mut f = std::fs::File::create(dir.join("state.bin"))?;
+            let mut left = keep.min(total);
+            for data in &tensors {
+                if left == 0 {
+                    break;
+                }
+                le_chunk(data, &mut chunk);
+                let take = left.min(chunk.len());
+                f.write_all(&chunk[..take])?;
+                left -= take;
+            }
+            std::fs::write(dir.join("meta.json"), meta_text_for(hash.finish()))?;
             return Err(anyhow!("injected torn checkpoint write: {run} step {step}"));
         }
 
@@ -115,12 +138,18 @@ impl CheckpointStore {
         ));
         std::fs::create_dir_all(&tmp)?;
         let staged = (|| -> Result<()> {
-            let files = [("state.bin", blob.as_slice()), ("meta.json", meta_text.as_bytes())];
-            for (name, bytes) in files {
-                let mut f = std::fs::File::create(tmp.join(name))?;
-                f.write_all(bytes)?;
-                f.sync_all()?;
+            let mut f = std::fs::File::create(tmp.join("state.bin"))?;
+            let mut hash = fsio::Fnv64::new();
+            let mut chunk = Vec::new();
+            for data in &tensors {
+                le_chunk(data, &mut chunk);
+                hash.update(&chunk);
+                f.write_all(&chunk)?;
             }
+            f.sync_all()?;
+            let mut f = std::fs::File::create(tmp.join("meta.json"))?;
+            f.write_all(meta_text_for(hash.finish()).as_bytes())?;
+            f.sync_all()?;
             Ok(())
         })();
         if let Err(e) = staged {
@@ -253,6 +282,16 @@ impl CheckpointStore {
             }
         }
         Ok(())
+    }
+}
+
+/// Serialize one f32 tensor little-endian into a reusable buffer — the
+/// unit of streaming for [`CheckpointStore::save`]'s chunked write+hash.
+fn le_chunk(data: &[f32], chunk: &mut Vec<u8>) {
+    chunk.clear();
+    chunk.reserve(4 * data.len());
+    for v in data {
+        chunk.extend_from_slice(&v.to_le_bytes());
     }
 }
 

@@ -78,6 +78,11 @@ pub struct RunConfig {
     /// intervention studies keep running to show the divergence shape).
     pub stop_on_divergence: bool,
     pub detector: DetectorConfig,
+    /// Optional `.mxc` container path: start the run from its weights
+    /// (zero-copy mmap load + pre-packed operand seeding) instead of a
+    /// fresh `init`. The trajectory is bitwise identical either way when
+    /// the container was packed from the same parameters.
+    pub weights: Option<String>,
 }
 
 impl RunConfig {
@@ -97,6 +102,7 @@ impl RunConfig {
             policies: vec![],
             stop_on_divergence: false,
             detector: DetectorConfig::default(),
+            weights: None,
         }
     }
 
@@ -134,9 +140,22 @@ impl<B: Backend> Runner<B> {
         Runner { backend, corpus }
     }
 
-    /// Train from scratch according to `cfg`.
+    /// The step-0 state for `cfg`: the `.mxc` container's weights
+    /// (O(header) zero-copy mmap load, [`Backend::load_weights`]) when
+    /// `cfg.weights` is set, a fresh seeded init otherwise.
+    pub fn initial_state(&self, cfg: &RunConfig) -> Result<B::State> {
+        match &cfg.weights {
+            Some(path) => {
+                let mxc = crate::formats::container::MxcFile::open(std::path::Path::new(path))?;
+                self.backend.load_weights(&mxc)
+            }
+            None => self.backend.init(cfg.seed, cfg.init_mode, cfg.init_gain),
+        }
+    }
+
+    /// Train from scratch (or from `cfg.weights`) according to `cfg`.
     pub fn run(&self, cfg: &RunConfig) -> Result<RunOutcome<B>> {
-        let state = self.backend.init(cfg.seed, cfg.init_mode, cfg.init_gain)?;
+        let state = self.initial_state(cfg)?;
         self.run_from(cfg, state, 0)
     }
 
@@ -244,7 +263,7 @@ impl<B: Backend> Runner<B> {
         cfg: &RunConfig,
         snapshot_step: usize,
     ) -> Result<(RunOutcome<B>, B::State)> {
-        let mut state = self.backend.init(cfg.seed, cfg.init_mode, cfg.init_gain)?;
+        let mut state = self.initial_state(cfg)?;
         // Advance to the snapshot point.
         let mut pre = cfg.clone();
         pre.steps = snapshot_step;

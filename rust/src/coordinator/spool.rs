@@ -495,7 +495,7 @@ pub fn job_json(job: &Job) -> Json {
         ("warmup", Json::from(cfg.detector.warmup)),
         ("grad_window", Json::from(cfg.detector.grad_window)),
     ]);
-    Json::obj(vec![
+    let mut fields = vec![
         ("bundle", Json::from(job.bundle.clone())),
         ("name", Json::from(cfg.name.clone())),
         ("fmt", Json::arr_f32(&cfg.fmt.to_vec())),
@@ -511,7 +511,13 @@ pub fn job_json(job: &Job) -> Json {
         ("policies", policies),
         ("stop_on_divergence", Json::from(cfg.stop_on_divergence)),
         ("detector", detector),
-    ])
+    ];
+    // Optional so pre-container job files (and their byte-exact fixed
+    // point) are unchanged when no weights path is configured.
+    if let Some(w) = &cfg.weights {
+        fields.push(("weights", Json::from(w.clone())));
+    }
+    Json::obj(fields)
 }
 
 /// Inverse of [`job_json`].
@@ -579,6 +585,7 @@ pub fn job_from_json(j: &Json) -> Result<Job> {
     cfg.policies = policies;
     cfg.stop_on_divergence = j.req("stop_on_divergence")?.as_bool().unwrap_or(false);
     cfg.detector = detector;
+    cfg.weights = j.get("weights").and_then(|w| w.as_str()).map(|w| w.to_string());
     let bundle = j.req("bundle")?.as_str().unwrap_or_default().to_string();
     Ok(Job { bundle, cfg })
 }
@@ -612,6 +619,7 @@ mod tests {
     fn job_json_roundtrips_every_field() {
         let j = job();
         let text = job_json(&j).to_string();
+        assert!(!text.contains("weights"), "no weights key unless configured");
         let back = job_from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(job_json(&back).to_string(), text, "roundtrip is a fixed point");
         assert_eq!(back.cfg.seed, -3);
@@ -619,6 +627,14 @@ mod tests {
         assert!(matches!(back.cfg.lr, LrSchedule::WarmupCosine { warmup: 4, .. }));
         assert!(matches!(back.cfg.optimizer, Optimizer::Sgd { .. }));
         assert_eq!(back.cfg.fmt.label(), j.cfg.fmt.label());
+        assert_eq!(back.cfg.weights, None);
+
+        let mut j = job();
+        j.cfg.weights = Some("runs/model.mxc".into());
+        let text = job_json(&j).to_string();
+        let back = job_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(job_json(&back).to_string(), text, "weights key roundtrips");
+        assert_eq!(back.cfg.weights.as_deref(), Some("runs/model.mxc"));
     }
 
     #[test]

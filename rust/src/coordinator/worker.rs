@@ -199,7 +199,9 @@ fn execute<E: Engine>(
             eprintln!("[{}] {} resuming from checkpoint step {start}", wcfg.id, id);
             s
         }
-        None => backend.init(job.cfg.seed, job.cfg.init_mode, job.cfg.init_gain)?,
+        // Fresh start: seeded init, or the job's `.mxc` weights container
+        // (zero-copy mmap load) when one is configured.
+        None => runner.initial_state(&job.cfg)?,
     };
 
     // Replay already-fired interventions into the starting fmt and drop

@@ -1,0 +1,770 @@
+//! The `.mxc` zero-copy packed-weight container (DESIGN.md §Container).
+//!
+//! A gguf-flavored, little-endian, append-only model file:
+//!
+//! ```text
+//! offset  size       field
+//! 0       4          magic "MXC1"
+//! 4       4          u32 version (currently 1)
+//! 8       8          u64 meta_len
+//! 16      meta_len   JSON metadata (workload, fmt vector, tensor +
+//!                    site tables with per-section FNV-1a checksums)
+//! …       …          zero padding to the next 64-byte boundary
+//! D       …          data region: 64-byte-aligned sections
+//! ```
+//!
+//! Section offsets in the metadata are relative to the data region start
+//! `D = align64(16 + meta_len)`, so the metadata never depends on its own
+//! serialized length. Two kinds of sections exist:
+//!
+//! * **tensor** sections — the fp32 master state (params ‖ moments ‖
+//!   extras, in `state_spec` order) as raw little-endian f32s. These are
+//!   what `snapshot`/`restore` round-trip.
+//! * **site** sections — the *pre-packed* forward weight operands: the
+//!   verbatim [`PackedVec`] storage (`codes` + `scales`/`scales8`) that
+//!   [`weight_fwd_site`](crate::runtime::native::common::weight_fwd_site)
+//!   would produce at startup. The reader rebuilds each operand with
+//!   [`PackedVec::from_parts`] borrowing the mapped bytes zero-copy, so
+//!   loading performs **no f32 re-encode** — and because the stored bytes
+//!   are the exact encoder output (including the clamp counter), a run
+//!   started from a mapped container is bitwise identical to one that
+//!   re-encoded from the fp32 masters.
+//!
+//! [`MxcFile::open`] performs O(header) *structural* validation only
+//! (magic/version/bounds/alignment/format-tag consistency) — by design it
+//! never touches the data region, so opening a multi-gigabyte container
+//! costs a map plus a metadata parse. Master tensors are checksummed when
+//! they are actually read ([`MxcFile::tensor_f32`], which consumes every
+//! byte anyway); [`MxcFile::verify`] runs the full checksum pass over all
+//! sections for explicit integrity checks. Every rejection is a typed
+//! [`MxcError`] raised *before* any decode of the offending bytes.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use super::gemm::PackedMatrix;
+use super::packed::PackedVec;
+use super::spec::{BlockGeom, Fmt, FormatId, BLOCK_SIZES};
+use crate::util::fsio::{self, fnv64};
+use crate::util::json::Json;
+use crate::util::mmap::{Bytes, Mapping, Words};
+
+pub const MAGIC: [u8; 4] = *b"MXC1";
+pub const VERSION: u32 = 1;
+/// Section alignment: one cache line / typical SIMD vector multiple, and
+/// — because the data region itself starts 64-aligned and file mappings
+/// are page-aligned — enough to make the i16 scale sections 2-aligned for
+/// the zero-copy [`Words`] view.
+pub const ALIGN: usize = 64;
+
+/// Typed rejection reasons. Hostile containers fail with one of these
+/// before any section byte is decoded.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MxcError {
+    /// Underlying I/O failure (open/map/write).
+    Io(String),
+    BadMagic([u8; 4]),
+    BadVersion(u32),
+    /// A structural bound exceeded what the file actually holds.
+    Truncated { what: String, need: usize, have: usize },
+    /// A section offset violating the 64-byte alignment rule.
+    Misaligned { what: String, offset: usize },
+    /// FNV-1a mismatch for one section.
+    Checksum { section: String, want: u64, got: u64 },
+    /// Metadata parse/schema error (bad JSON, missing/ill-typed keys).
+    Meta(String),
+    /// Format tag and storage geometry disagree (e.g. a byte-code format
+    /// claiming nibble packing, a block size outside the supported set,
+    /// or a site whose tags contradict the container's run `Fmt`).
+    FmtGeometry(String),
+}
+
+impl std::fmt::Display for MxcError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MxcError::Io(e) => write!(f, "mxc i/o: {e}"),
+            MxcError::BadMagic(m) => write!(f, "not an .mxc container (magic {m:02x?})"),
+            MxcError::BadVersion(v) => {
+                write!(f, "unsupported .mxc version {v} (expected {VERSION})")
+            }
+            MxcError::Truncated { what, need, have } => {
+                write!(f, "truncated container: {what} needs {need} bytes, file has {have}")
+            }
+            MxcError::Misaligned { what, offset } => {
+                write!(f, "misaligned section: {what} at offset {offset} (must be {ALIGN}-aligned)")
+            }
+            MxcError::Checksum { section, want, got } => {
+                write!(f, "checksum mismatch in {section}: stored {want:016x}, computed {got:016x}")
+            }
+            MxcError::Meta(e) => write!(f, "bad container metadata: {e}"),
+            MxcError::FmtGeometry(e) => write!(f, "format/geometry disagreement: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for MxcError {}
+
+/// One data-region window (offset relative to the data region).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Section {
+    pub offset: usize,
+    pub bytes: usize,
+    pub checksum: u64,
+}
+
+/// Metadata of one fp32 master tensor.
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub section: Section,
+}
+
+/// Metadata of one pre-packed forward weight site. `k`/`n` are the
+/// packed matrix's reduction/output extents: the stored operand is the
+/// `[n × k]` transposed weight, blocks along `k`.
+#[derive(Debug, Clone)]
+pub struct SiteMeta {
+    pub name: String,
+    pub tensor: usize,
+    pub layer: usize,
+    pub k: usize,
+    pub n: usize,
+    pub fmt: FormatId,
+    pub bump: bool,
+    pub geom: BlockGeom,
+    pub packed4: bool,
+    pub len: usize,
+    pub clamped: usize,
+    pub tensor_scale: f32,
+    pub codes: Section,
+    /// i16 scale exponents (power-of-two scaling) — exclusive with
+    /// `scales8`.
+    pub scales: Option<Section>,
+    /// E4M3 scale codes (two-level scaling).
+    pub scales8: Option<Section>,
+}
+
+/// Parsed container metadata.
+#[derive(Debug, Clone)]
+pub struct MxcMeta {
+    pub workload: String,
+    pub fmt: Fmt,
+    pub fmt_vec: Vec<f32>,
+    pub tensors: Vec<TensorMeta>,
+    pub sites: Vec<SiteMeta>,
+}
+
+/// Writer-side description of one fp32 master tensor.
+pub struct TensorIn<'a> {
+    pub name: &'a str,
+    pub shape: Vec<usize>,
+    pub data: &'a [f32],
+}
+
+/// Writer-side description of one pre-packed weight site.
+pub struct SiteIn<'a> {
+    pub name: String,
+    pub tensor: usize,
+    pub layer: usize,
+    pub mat: &'a PackedMatrix,
+}
+
+fn align_up(n: usize) -> usize {
+    n.div_ceil(ALIGN) * ALIGN
+}
+
+fn hex16(h: u64) -> String {
+    format!("{h:016x}")
+}
+
+fn section_json(s: &Section) -> Json {
+    Json::obj(vec![
+        ("offset", Json::from(s.offset)),
+        ("bytes", Json::from(s.bytes)),
+        ("fnv", Json::from(hex16(s.checksum))),
+    ])
+}
+
+/// Serialize and atomically write a container. Returns the total file
+/// size in bytes. The write goes through [`fsio::write_atomic`] under a
+/// `"mxc.pack <path>"` fault label, so torn-write fault injection covers
+/// packing exactly like checkpointing.
+pub fn write(
+    path: &Path,
+    workload: &str,
+    fmt: &Fmt,
+    tensors: &[TensorIn<'_>],
+    sites: &[SiteIn<'_>],
+) -> Result<usize, MxcError> {
+    // Lay out the data region first (offsets are meta-independent).
+    let mut off = 0usize;
+    let mut tensor_meta = Vec::with_capacity(tensors.len());
+    for t in tensors {
+        let nbytes = 4 * t.data.len();
+        assert_eq!(
+            t.shape.iter().product::<usize>(),
+            t.data.len(),
+            "tensor {} shape/data mismatch",
+            t.name
+        );
+        tensor_meta.push((off, nbytes));
+        off = align_up(off + nbytes);
+    }
+    let mut site_meta = Vec::with_capacity(sites.len());
+    for s in sites {
+        let v = &s.mat.data;
+        let codes = (off, v.codes.len());
+        off = align_up(off + v.codes.len());
+        let scale_bytes =
+            if v.geom().two_level { v.scales8.len() } else { 2 * v.scales.len() };
+        let scales = (off, scale_bytes);
+        off = align_up(off + scale_bytes);
+        site_meta.push((codes, scales));
+    }
+    let data_len = off;
+
+    // Fill the data region and checksum each section as it lands.
+    let mut data = vec![0u8; data_len];
+    let mut tensor_json = Vec::with_capacity(tensors.len());
+    for (t, &(o, nbytes)) in tensors.iter().zip(&tensor_meta) {
+        let dst = &mut data[o..o + nbytes];
+        for (c, v) in dst.chunks_exact_mut(4).zip(t.data) {
+            c.copy_from_slice(&v.to_le_bytes());
+        }
+        let sec = Section { offset: o, bytes: nbytes, checksum: fnv64(&data[o..o + nbytes]) };
+        tensor_json.push(Json::obj(vec![
+            ("name", Json::from(t.name)),
+            ("shape", Json::Arr(t.shape.iter().map(|&d| Json::from(d)).collect())),
+            ("section", section_json(&sec)),
+        ]));
+    }
+    let mut site_json = Vec::with_capacity(sites.len());
+    for (s, &((co, cb), (so, sb))) in sites.iter().zip(&site_meta) {
+        let v = &s.mat.data;
+        data[co..co + cb].copy_from_slice(&v.codes);
+        if v.geom().two_level {
+            data[so..so + sb].copy_from_slice(&v.scales8);
+        } else {
+            for (c, e) in data[so..so + sb].chunks_exact_mut(2).zip(v.scales.iter()) {
+                c.copy_from_slice(&e.to_le_bytes());
+            }
+        }
+        let codes = Section { offset: co, bytes: cb, checksum: fnv64(&data[co..co + cb]) };
+        let scales = Section { offset: so, bytes: sb, checksum: fnv64(&data[so..so + sb]) };
+        let scale_key = if v.geom().two_level { "scales8" } else { "scales" };
+        site_json.push(Json::obj(vec![
+            ("name", Json::from(s.name.as_str())),
+            ("tensor", Json::from(s.tensor)),
+            ("layer", Json::from(s.layer)),
+            ("k", Json::from(s.mat.cols)),
+            ("n", Json::from(s.mat.rows)),
+            ("fmt", Json::from(v.id.name())),
+            // The bump flag is not part of PackedVec storage; sites are
+            // packed under the container's run fmt by construction.
+            ("bump", Json::from(fmt.scale_bump)),
+            ("block_size", Json::from(v.geom().block_size)),
+            ("two_level", Json::from(v.geom().two_level)),
+            ("packed4", Json::from(v.packed4())),
+            ("len", Json::from(v.len())),
+            ("clamped", Json::from(v.clamped)),
+            ("tscale_bits", Json::from(v.tensor_scale.to_bits() as usize)),
+            ("codes", section_json(&codes)),
+            (scale_key, section_json(&scales)),
+        ]));
+    }
+
+    let meta = Json::obj(vec![
+        ("container", Json::from("mxc")),
+        ("version", Json::from(VERSION as usize)),
+        ("workload", Json::from(workload)),
+        ("fmt", Json::arr_f32(&fmt.to_vec())),
+        ("tensors", Json::Arr(tensor_json)),
+        ("sites", Json::Arr(site_json)),
+    ]);
+    let meta_bytes = meta.to_string().into_bytes();
+
+    let data_start = align_up(16 + meta_bytes.len());
+    let mut file = Vec::with_capacity(data_start + data_len);
+    file.extend_from_slice(&MAGIC);
+    file.extend_from_slice(&VERSION.to_le_bytes());
+    file.extend_from_slice(&(meta_bytes.len() as u64).to_le_bytes());
+    file.extend_from_slice(&meta_bytes);
+    file.resize(data_start, 0);
+    file.extend_from_slice(&data);
+
+    // The label carries the destination path so fault-injection tests can
+    // tear one specific pack without tripping concurrent packs elsewhere
+    // in the process.
+    let label = format!("mxc.pack {}", path.display());
+    fsio::write_atomic(path, &file, &label).map_err(|e| MxcError::Io(format!("{e:#}")))?;
+    Ok(file.len())
+}
+
+// ---------------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------------
+
+/// An open container: a shared mapping plus validated metadata.
+#[derive(Debug)]
+pub struct MxcFile {
+    map: Arc<Mapping>,
+    data_start: usize,
+    meta: MxcMeta,
+}
+
+fn mreq<'a>(j: &'a Json, key: &str, ctx: &str) -> Result<&'a Json, MxcError> {
+    j.get(key).ok_or_else(|| MxcError::Meta(format!("{ctx}: missing key {key:?}")))
+}
+
+fn musize(j: &Json, key: &str, ctx: &str) -> Result<usize, MxcError> {
+    let n = mreq(j, key, ctx)?
+        .as_f64()
+        .ok_or_else(|| MxcError::Meta(format!("{ctx}: {key} is not a number")))?;
+    if n < 0.0 || n.fract() != 0.0 || n > (1u64 << 53) as f64 {
+        return Err(MxcError::Meta(format!("{ctx}: {key}={n} is not an exact unsigned integer")));
+    }
+    Ok(n as usize)
+}
+
+fn mstr<'a>(j: &'a Json, key: &str, ctx: &str) -> Result<&'a str, MxcError> {
+    mreq(j, key, ctx)?
+        .as_str()
+        .ok_or_else(|| MxcError::Meta(format!("{ctx}: {key} is not a string")))
+}
+
+fn mbool(j: &Json, key: &str, ctx: &str) -> Result<bool, MxcError> {
+    mreq(j, key, ctx)?
+        .as_bool()
+        .ok_or_else(|| MxcError::Meta(format!("{ctx}: {key} is not a bool")))
+}
+
+fn parse_section(j: &Json, ctx: &str) -> Result<Section, MxcError> {
+    let offset = musize(j, "offset", ctx)?;
+    let bytes = musize(j, "bytes", ctx)?;
+    let fnv = mstr(j, "fnv", ctx)?;
+    let checksum = u64::from_str_radix(fnv, 16)
+        .map_err(|_| MxcError::Meta(format!("{ctx}: bad fnv hex {fnv:?}")))?;
+    Ok(Section { offset, bytes, checksum })
+}
+
+impl MxcFile {
+    /// Map (unix) or read (elsewhere) and structurally validate `path` —
+    /// O(header): the data region is bounds-checked but never touched.
+    pub fn open(path: &Path) -> Result<MxcFile, MxcError> {
+        let map = Mapping::map(path).map_err(|e| MxcError::Io(e.to_string()))?;
+        Self::from_mapping(Arc::new(map))
+    }
+
+    /// Force the owned-heap read path (the A-side of mmap-vs-heap parity
+    /// tests; also what a platform without mmap gets via [`MxcFile::open`]).
+    pub fn open_heap(path: &Path) -> Result<MxcFile, MxcError> {
+        let map = Mapping::read(path).map_err(|e| MxcError::Io(e.to_string()))?;
+        Self::from_mapping(Arc::new(map))
+    }
+
+    /// Validate a pre-built mapping (tests use this for byte surgery).
+    pub fn from_mapping(map: Arc<Mapping>) -> Result<MxcFile, MxcError> {
+        let b = map.bytes();
+        if b.len() < 16 {
+            return Err(MxcError::Truncated {
+                what: "header".into(),
+                need: 16,
+                have: b.len(),
+            });
+        }
+        if b[..4] != MAGIC {
+            return Err(MxcError::BadMagic([b[0], b[1], b[2], b[3]]));
+        }
+        let version = u32::from_le_bytes([b[4], b[5], b[6], b[7]]);
+        if version != VERSION {
+            return Err(MxcError::BadVersion(version));
+        }
+        let meta_len = u64::from_le_bytes(b[8..16].try_into().expect("8 bytes")) as usize;
+        let meta_end = 16usize.checked_add(meta_len).ok_or(MxcError::Truncated {
+            what: "metadata".into(),
+            need: usize::MAX,
+            have: b.len(),
+        })?;
+        if meta_end > b.len() {
+            return Err(MxcError::Truncated {
+                what: "metadata".into(),
+                need: meta_end,
+                have: b.len(),
+            });
+        }
+        let meta_text = std::str::from_utf8(&b[16..meta_end])
+            .map_err(|e| MxcError::Meta(format!("metadata is not utf-8: {e}")))?;
+        let meta_json =
+            Json::parse(meta_text).map_err(|e| MxcError::Meta(format!("metadata parse: {e:#}")))?;
+        let data_start = align_up(meta_end);
+        let data_len = b.len().saturating_sub(data_start);
+        let meta = Self::validate_meta(&meta_json, data_len)?;
+        Ok(MxcFile { map, data_start, meta })
+    }
+
+    fn validate_meta(j: &Json, data_len: usize) -> Result<MxcMeta, MxcError> {
+        let ctx = "container";
+        if mstr(j, "container", ctx)? != "mxc" {
+            return Err(MxcError::Meta("container key is not \"mxc\"".into()));
+        }
+        let workload = mstr(j, "workload", ctx)?.to_string();
+        let fmt_vec: Vec<f32> = mreq(j, "fmt", ctx)?
+            .as_arr()
+            .ok_or_else(|| MxcError::Meta("fmt is not an array".into()))?
+            .iter()
+            .map(|v| v.as_f64().map(|n| n as f32))
+            .collect::<Option<_>>()
+            .ok_or_else(|| MxcError::Meta("fmt has non-numeric entries".into()))?;
+        let fmt = Fmt::from_vec(&fmt_vec)
+            .ok_or_else(|| MxcError::Meta(format!("undecodable fmt vector {fmt_vec:?}")))?;
+
+        let check_section = |s: &Section, what: &str| -> Result<(), MxcError> {
+            if s.offset % ALIGN != 0 {
+                return Err(MxcError::Misaligned { what: what.into(), offset: s.offset });
+            }
+            let end = s
+                .offset
+                .checked_add(s.bytes)
+                .ok_or_else(|| MxcError::Truncated {
+                    what: what.into(),
+                    need: usize::MAX,
+                    have: data_len,
+                })?;
+            if end > data_len {
+                return Err(MxcError::Truncated { what: what.into(), need: end, have: data_len });
+            }
+            Ok(())
+        };
+
+        let mut tensors = Vec::new();
+        for t in mreq(j, "tensors", ctx)?
+            .as_arr()
+            .ok_or_else(|| MxcError::Meta("tensors is not an array".into()))?
+        {
+            let name = mstr(t, "name", "tensor")?.to_string();
+            let tctx = format!("tensor {name}");
+            let shape_json = mreq(t, "shape", &tctx)?
+                .as_arr()
+                .ok_or_else(|| MxcError::Meta(format!("{tctx}: shape is not an array")))?;
+            let mut shape = Vec::with_capacity(shape_json.len());
+            for (i, d) in shape_json.iter().enumerate() {
+                let dim = d
+                    .as_f64()
+                    .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                    .ok_or_else(|| MxcError::Meta(format!("{tctx}: bad shape dim {i}")))?;
+                shape.push(dim as usize);
+            }
+            let section = parse_section(mreq(t, "section", &tctx)?, &tctx)?;
+            if section.bytes != 4 * shape.iter().product::<usize>() {
+                return Err(MxcError::Meta(format!(
+                    "{tctx}: section bytes {} != 4·prod(shape {shape:?})",
+                    section.bytes
+                )));
+            }
+            check_section(&section, &tctx)?;
+            tensors.push(TensorMeta { name, shape, section });
+        }
+
+        let mut sites = Vec::new();
+        for s in mreq(j, "sites", ctx)?
+            .as_arr()
+            .ok_or_else(|| MxcError::Meta("sites is not an array".into()))?
+        {
+            let name = mstr(s, "name", "site")?.to_string();
+            let sctx = format!("site {name}");
+            let id = mstr(s, "fmt", &sctx)?;
+            let fmt_id = FormatId::from_name(id)
+                .ok_or_else(|| MxcError::Meta(format!("{sctx}: unknown format {id:?}")))?;
+            if !fmt_id.is_mx() {
+                return Err(MxcError::FmtGeometry(format!(
+                    "{sctx}: {id} is not an MX element format — nothing to pack"
+                )));
+            }
+            let block_size = musize(s, "block_size", &sctx)?;
+            if !BLOCK_SIZES.contains(&block_size) {
+                return Err(MxcError::FmtGeometry(format!(
+                    "{sctx}: unsupported block size {block_size}"
+                )));
+            }
+            let geom = BlockGeom::new(block_size, mbool(s, "two_level", &sctx)?);
+            let packed4 = mbool(s, "packed4", &sctx)?;
+            if packed4 && fmt_id.code_bits() != 4 {
+                return Err(MxcError::FmtGeometry(format!(
+                    "{sctx}: {id} is a byte-code format but claims nibble packing"
+                )));
+            }
+            let (k, n) = (musize(s, "k", &sctx)?, musize(s, "n", &sctx)?);
+            let len = musize(s, "len", &sctx)?;
+            if len != k * n {
+                return Err(MxcError::FmtGeometry(format!("{sctx}: len {len} != k·n = {}", k * n)));
+            }
+            if k == 0 || k % block_size != 0 {
+                return Err(MxcError::FmtGeometry(format!(
+                    "{sctx}: reduction extent {k} is not a positive multiple of {block_size}"
+                )));
+            }
+            let (tensor, layer) = (musize(s, "tensor", &sctx)?, musize(s, "layer", &sctx)?);
+            if tensor > u16::MAX as usize || layer > u16::MAX as usize {
+                return Err(MxcError::Meta(format!("{sctx}: tensor/layer out of u16 range")));
+            }
+            let bump = mbool(s, "bump", &sctx)?;
+            // Sites must agree with the container's run fmt: they are the
+            // weight-forward operands that fmt will ask for at runtime.
+            if !fmt.quant_fwd || fmt_id != fmt.w_fwd || bump != fmt.scale_bump || geom != fmt.geom
+            {
+                return Err(MxcError::FmtGeometry(format!(
+                    "{sctx}: tags ({id}, bump {bump}, bs{block_size}) contradict the \
+                     container fmt {}",
+                    fmt.label()
+                )));
+            }
+            let clamped = musize(s, "clamped", &sctx)?;
+            let ts_bits = musize(s, "tscale_bits", &sctx)?;
+            if ts_bits > u32::MAX as usize {
+                return Err(MxcError::Meta(format!("{sctx}: tscale_bits out of u32 range")));
+            }
+            let tensor_scale = f32::from_bits(ts_bits as u32);
+
+            let codes = parse_section(mreq(s, "codes", &sctx)?, &sctx)?;
+            let want_code_bytes = if packed4 { len.div_ceil(2) } else { len };
+            if codes.bytes != want_code_bytes {
+                return Err(MxcError::FmtGeometry(format!(
+                    "{sctx}: {} code bytes for len {len} (expected {want_code_bytes})",
+                    codes.bytes
+                )));
+            }
+            check_section(&codes, &format!("{sctx} codes"))?;
+            let n_blocks = len / block_size;
+            let (scales, scales8) = if geom.two_level {
+                let sec = parse_section(mreq(s, "scales8", &sctx)?, &sctx)?;
+                if sec.bytes != n_blocks {
+                    return Err(MxcError::FmtGeometry(format!(
+                        "{sctx}: {} scales8 bytes for {n_blocks} blocks",
+                        sec.bytes
+                    )));
+                }
+                check_section(&sec, &format!("{sctx} scales8"))?;
+                (None, Some(sec))
+            } else {
+                let sec = parse_section(mreq(s, "scales", &sctx)?, &sctx)?;
+                if sec.bytes != 2 * n_blocks {
+                    return Err(MxcError::FmtGeometry(format!(
+                        "{sctx}: {} scale bytes for {n_blocks} i16 blocks",
+                        sec.bytes
+                    )));
+                }
+                check_section(&sec, &format!("{sctx} scales"))?;
+                (Some(sec), None)
+            };
+            sites.push(SiteMeta {
+                name,
+                tensor,
+                layer,
+                k,
+                n,
+                fmt: fmt_id,
+                bump,
+                geom,
+                packed4,
+                len,
+                clamped,
+                tensor_scale,
+                codes,
+                scales,
+                scales8,
+            });
+        }
+        Ok(MxcMeta { workload, fmt, fmt_vec, tensors, sites })
+    }
+
+    pub fn meta(&self) -> &MxcMeta {
+        &self.meta
+    }
+
+    /// Is the underlying storage a live mmap (vs the heap fallback)?
+    pub fn is_mmap(&self) -> bool {
+        self.map.is_mmap()
+    }
+
+    fn data(&self) -> &[u8] {
+        &self.map.bytes()[self.data_start..]
+    }
+
+    fn section_bytes(&self, s: &Section) -> &[u8] {
+        &self.data()[s.offset..s.offset + s.bytes]
+    }
+
+    /// Full FNV-1a pass over every section (tensors and sites). O(file);
+    /// the explicit integrity check `mxstab pack --verify` and the
+    /// hostile-container tests use this.
+    pub fn verify(&self) -> Result<(), MxcError> {
+        let check = |sec: &Section, name: String| -> Result<(), MxcError> {
+            let got = fnv64(self.section_bytes(sec));
+            if got != sec.checksum {
+                return Err(MxcError::Checksum { section: name, want: sec.checksum, got });
+            }
+            Ok(())
+        };
+        for t in &self.meta.tensors {
+            check(&t.section, format!("tensor {}", t.name))?;
+        }
+        for s in &self.meta.sites {
+            check(&s.codes, format!("site {} codes", s.name))?;
+            if let Some(sec) = &s.scales {
+                check(sec, format!("site {} scales", s.name))?;
+            }
+            if let Some(sec) = &s.scales8 {
+                check(sec, format!("site {} scales8", s.name))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Decode master tensor `i` to owned f32s. The section checksum is
+    /// verified first — this path reads every byte anyway, so integrity
+    /// here is free (unlike the zero-copy site path, which stays lazy).
+    pub fn tensor_f32(&self, i: usize) -> Result<Vec<f32>, MxcError> {
+        let t = &self.meta.tensors[i];
+        let raw = self.section_bytes(&t.section);
+        let got = fnv64(raw);
+        if got != t.section.checksum {
+            return Err(MxcError::Checksum {
+                section: format!("tensor {}", t.name),
+                want: t.section.checksum,
+                got,
+            });
+        }
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Rebuild the packed forward operand of site `i`, borrowing codes
+    /// and scales zero-copy from the mapping (an owned copy only on a
+    /// platform where the i16 view is impossible — misaligned base or
+    /// big-endian, which the [`Words::mapped`] constructor rules out).
+    /// No f32 touches, no encode: O(1) beyond the metadata already held.
+    pub fn site_matrix(&self, i: usize) -> PackedMatrix {
+        let s = &self.meta.sites[i];
+        let base = self.data_start; // absolute offsets into the mapping
+        let codes = Bytes::mapped(self.map.clone(), base + s.codes.offset, s.codes.bytes);
+        let scales = match &s.scales {
+            Some(sec) => {
+                let (off, words) = (base + sec.offset, sec.bytes / 2);
+                Words::mapped(self.map.clone(), off, words)
+                    .unwrap_or_else(|| Words::copied_le(&self.map, off, words))
+            }
+            None => Words::from(Vec::new()),
+        };
+        let scales8 = match &s.scales8 {
+            Some(sec) => Bytes::mapped(self.map.clone(), base + sec.offset, sec.bytes),
+            None => Bytes::from(Vec::new()),
+        };
+        let data = PackedVec::from_parts(
+            s.fmt,
+            codes,
+            scales,
+            scales8,
+            s.tensor_scale,
+            s.clamped,
+            s.geom,
+            s.len,
+            s.packed4,
+        );
+        PackedMatrix::from_parts(s.n, s.k, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::spec::BLOCK_SIZE;
+    use crate::util::rng::Xoshiro256;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("mxstab-mxc-{}-{tag}.mxc", std::process::id()))
+    }
+
+    fn sample(fmt: &Fmt, n: usize, k: usize) -> (Vec<f32>, PackedMatrix) {
+        let mut rng = Xoshiro256::seed_from(17);
+        let wt = rng.normal_vec(n * k);
+        let m = PackedMatrix::encode_geom(&wt, n, k, fmt.w_fwd, fmt.scale_bump, fmt.geom);
+        (wt, m)
+    }
+
+    fn roundtrip(fmt: Fmt, tag: &str) {
+        let (n, k) = (8, 2 * BLOCK_SIZE);
+        let (_, mat) = sample(&fmt, n, k);
+        let tdata: Vec<f32> = (0..96).map(|i| i as f32 * 0.25 - 3.0).collect();
+        let path = tmp(tag);
+        let written = write(
+            &path,
+            "unit_workload",
+            &fmt,
+            &[TensorIn { name: "p_w", shape: vec![96], data: &tdata }],
+            &[SiteIn { name: "w".into(), tensor: 1, layer: 0, mat: &mat }],
+        )
+        .unwrap();
+        assert!(written > 16, "non-trivial file");
+
+        for heap in [false, true] {
+            let f = if heap { MxcFile::open_heap(&path) } else { MxcFile::open(&path) }.unwrap();
+            assert_eq!(f.meta().workload, "unit_workload");
+            assert_eq!(f.meta().fmt, fmt);
+            f.verify().unwrap();
+            assert_eq!(f.tensor_f32(0).unwrap(), tdata);
+            let got = f.site_matrix(0);
+            assert_eq!(got.rows, n);
+            assert_eq!(got.cols, k);
+            // Bitwise-identical storage and decode across both read modes.
+            assert_eq!(got.data, mat.data, "storage mismatch (heap={heap})");
+            let a: Vec<u32> = got.decode().iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = mat.decode().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "decode mismatch (heap={heap})");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn roundtrips_byte_formats() {
+        roundtrip(Fmt::full(FormatId::E4M3, FormatId::E4M3), "e4m3");
+    }
+
+    #[test]
+    fn roundtrips_nibble_formats() {
+        roundtrip(Fmt::full(FormatId::E2M1, FormatId::E2M1), "e2m1");
+    }
+
+    #[test]
+    fn roundtrips_two_level_and_bump() {
+        roundtrip(
+            Fmt::full(FormatId::E2M1, FormatId::E2M1)
+                .with_geom(BlockGeom::new(16, true))
+                .with_scale_bump(),
+            "2lvl",
+        );
+    }
+
+    #[test]
+    fn sections_are_aligned_and_zero_copy_on_unix() {
+        let fmt = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+        let (n, k) = (4, BLOCK_SIZE);
+        let (_, mat) = sample(&fmt, n, k);
+        let path = tmp("align");
+        write(&path, "w", &fmt, &[], &[SiteIn { name: "w".into(), tensor: 0, layer: 0, mat: &mat }])
+            .unwrap();
+        let f = MxcFile::open(&path).unwrap();
+        let s = &f.meta().sites[0];
+        assert_eq!(s.codes.offset % ALIGN, 0);
+        assert_eq!(s.scales.as_ref().unwrap().offset % ALIGN, 0);
+        let got = f.site_matrix(0);
+        if f.is_mmap() && cfg!(target_endian = "little") {
+            assert!(got.data.codes.is_mapped(), "codes must borrow the mapping");
+            assert!(got.data.scales.is_mapped(), "scales must borrow the mapping");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

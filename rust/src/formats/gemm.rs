@@ -124,6 +124,17 @@ impl PackedMatrix {
         }
     }
 
+    /// Rehydrate a matrix from pre-packed storage (the `.mxc` container
+    /// read path) — no encode work, same shape invariants as
+    /// [`PackedMatrix::encode_geom`]. The [`PackedVec`] typically borrows
+    /// its codes/scales zero-copy from a file mapping.
+    pub fn from_parts(rows: usize, cols: usize, data: PackedVec) -> Self {
+        let bs = data.geom().block_size;
+        assert_eq!(data.len(), rows * cols, "matrix shape mismatch");
+        assert_eq!(cols % bs, 0, "cols {cols} % {bs} != 0");
+        PackedMatrix { rows, cols, data }
+    }
+
     pub fn id(&self) -> FormatId {
         self.data.id
     }

@@ -31,8 +31,12 @@
 //! * [`codes`] — exact code enumeration, relative code gaps (paper Fig. 5
 //!   left) and the Eq. 10 overflow criterion; the packed decode tables are
 //!   derived from [`codes::positive_codes`].
+//! * [`container`] — the `.mxc` zero-copy packed-weight container: fp32
+//!   masters + pre-packed forward weight operands in one mmap-able,
+//!   checksummed, 64-byte-aligned file (DESIGN.md §Container).
 
 pub mod codes;
+pub mod container;
 pub mod dot;
 pub mod gemm;
 pub mod kernel;

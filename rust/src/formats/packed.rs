@@ -48,6 +48,7 @@ use super::codes::positive_codes;
 use super::kernel;
 use super::quant::{amax, bf16_rne, pow2, two_level_tensor_scale};
 use super::spec::{BlockGeom, ElemFormat, FormatId, BLOCK_SIZE};
+use crate::util::mmap::{Bytes, Words};
 use crate::util::pool;
 
 /// Scale-exponent sentinel for an all-zero (or all-NaN) block: the block
@@ -405,16 +406,18 @@ fn chunk_len(len: usize, threads: usize, block_size: usize) -> usize {
 /// A packed MX vector: element codes + per-block shared scales, under an
 /// arbitrary [`BlockGeom`]. 4-bit element types store two codes per byte
 /// (see the module docs for the layout).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PackedVec {
     pub id: FormatId,
     /// Element codes: one byte per element, or — for 4-bit formats unless
     /// [`set_unpacked_subbyte_storage`] is on — two nibble codes per byte.
-    pub codes: Vec<u8>,
+    /// Owned by the encode path; a borrowed `.mxc` container window via
+    /// [`PackedVec::from_parts`] (both deref to the same `&[u8]`).
+    pub codes: Bytes,
     /// Per-block power-of-two scale exponents (empty under two-level).
-    pub scales: Vec<i16>,
+    pub scales: Words,
     /// Per-block E4M3 scale codes (two-level mode only; 0 = zero block).
-    pub scales8: Vec<u8>,
+    pub scales8: Bytes,
     /// The fp32 per-tensor scale (two-level mode; 1.0 otherwise).
     pub tensor_scale: f32,
     /// Elements that hit the last quantization bin during encode.
@@ -498,15 +501,50 @@ impl PackedVec {
         let codes = if packed4 { pack_nibbles(&byte_codes) } else { byte_codes };
         Ok(PackedVec {
             id,
-            codes,
-            scales,
-            scales8,
+            codes: codes.into(),
+            scales: scales.into(),
+            scales8: scales8.into(),
             tensor_scale: s_tensor,
             clamped,
             geom,
             len: n,
             packed4,
         })
+    }
+
+    /// Rehydrate an encoded vector from pre-packed storage — the `.mxc`
+    /// container read path. Performs **no encode work**: the parts are
+    /// the verbatim output of an earlier [`PackedVec::encode_geom`]
+    /// (possibly borrowed zero-copy from a [`crate::util::mmap::Mapping`]),
+    /// so a vector built here is bitwise identical to a fresh encode of
+    /// the same source data. Storage geometry is validated eagerly; the
+    /// caller (the container reader) has already type-checked the format
+    /// tags.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        id: FormatId,
+        codes: Bytes,
+        scales: Words,
+        scales8: Bytes,
+        tensor_scale: f32,
+        clamped: usize,
+        geom: BlockGeom,
+        len: usize,
+        packed4: bool,
+    ) -> PackedVec {
+        let pf = PackedFormat::of(id); // panics for non-MX, like encode
+        assert!(!packed4 || pf.id.code_bits() == 4, "{id:?} cannot be nibble-packed");
+        let code_bytes = if packed4 { len.div_ceil(2) } else { len };
+        assert_eq!(codes.len(), code_bytes, "{id:?}: code storage length");
+        let n_blocks = len.div_ceil(geom.block_size);
+        if geom.two_level {
+            assert_eq!(scales8.len(), n_blocks, "{id:?}: scales8 length");
+            assert!(scales.is_empty(), "{id:?}: i16 scales under two-level");
+        } else {
+            assert_eq!(scales.len(), n_blocks, "{id:?}: scales length");
+            assert!(scales8.is_empty(), "{id:?}: scales8 without two-level");
+        }
+        PackedVec { id, codes, scales, scales8, tensor_scale, clamped, geom, len, packed4 }
     }
 
     /// Number of encoded *elements* (not bytes — see [`PackedVec::bytes`]).

@@ -4,7 +4,11 @@
 //! mxstab info    [--backend native|pjrt]        # platform + model inventory
 //! mxstab train   [--backend native|pjrt] [--bundle <name>] [--fmt e4m3-e4m3]
 //!                [--lr 5e-4] [--steps N] [--batch B] [--paired]
+//!                [--weights model.mxc]                # start from a packed container
 //!                [--intervene <name>@<step>[,...]] [--require-finite]
+//! mxstab pack    <bundle> [--fmt e4m3-e4m3] [--seed N] [--out|-o model.mxc]
+//!                [--from-checkpoint <ckpt-root> --run <id> [--step N]]
+//!                                               # write a zero-copy .mxc weight container
 //! mxstab experiment <id|all> [--backend native|pjrt] [--scale quick|default|full] [--force]
 //! mxstab sweep --spool <dir> [--workers N | --procs N]         # spooled crash-tolerant sweep
 //!              [--bundles a,b] [--fmts e4m3-e4m3,...] [--lrs 1e-3,...] [--seeds 0,1]
@@ -44,7 +48,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use mxstab::analysis::{fit_chinchilla, LossPoint};
 use mxstab::config::Config;
 use mxstab::coordinator::{
-    run_worker, Intervention, Job, LrSchedule, Policy, RunConfig, Spool, Sweeper, WorkerConfig,
+    run_worker, CheckpointStore, Intervention, Job, LrSchedule, Policy, RunConfig, Spool,
+    Sweeper, WorkerConfig,
 };
 use mxstab::experiments;
 use mxstab::formats::spec::{Fmt, FormatId, BLOCK_SIZES};
@@ -161,6 +166,10 @@ fn cmd_train<E: Engine>(engine: Arc<E>, cfg: &Config, args: &Args) -> Result<()>
     rc.seed = seed;
     rc.paired = args.flag("paired");
     rc.log_every = args.parse_or("log-every", 1usize)?;
+    // Start from a packed `.mxc` container (zero-copy mmap load) instead
+    // of a fresh init; the trajectory is bitwise identical when the
+    // container was packed from the same init.
+    rc.weights = args.get("weights").map(str::to_string);
     if let Some(spec) = args.get("intervene") {
         rc.policies = parse_policies(spec)?;
     }
@@ -229,6 +238,77 @@ fn cmd_train<E: Engine>(engine: Arc<E>, cfg: &Config, args: &Args) -> Result<()>
     if args.flag("require-finite") && !(all_finite && val_finite && !l.rows.is_empty()) {
         bail!("run produced non-finite metrics (or no rows)");
     }
+    Ok(())
+}
+
+/// `mxstab pack <bundle> [--fmt <spec>] [--seed N] [--out|-o model.mxc]
+/// [--from-checkpoint <ckpt-root> --run <id> [--step N]]` — write a
+/// `.mxc` zero-copy weight container: fp32 master tensors plus every
+/// forward weight operand pre-packed under `--fmt`. Training started with
+/// `--weights model.mxc` then skips all startup f32 re-encodes (the
+/// operands mmap straight out of the file) and is bitwise identical to a
+/// run started from the same init/checkpoint in memory.
+fn cmd_pack(engine: Arc<NativeEngine>, args: &Args) -> Result<()> {
+    let bundle_name = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("bundle"))
+        .ok_or_else(|| {
+            anyhow!(
+                "usage: mxstab pack <bundle> [--fmt <spec>] [--seed N] [--out|-o model.mxc] \
+                 [--from-checkpoint <ckpt-root> --run <id> [--step N]]"
+            )
+        })?
+        .to_string();
+    let fmt = parse_fmt(args.get_or("fmt", "e4m3-e4m3"))?;
+    let backend = engine.load(&bundle_name)?;
+
+    let tensors = if let Some(root) = args.get("from-checkpoint") {
+        // Export a trained state: restore from the checkpoint ring.
+        let run = args
+            .get("run")
+            .ok_or_else(|| anyhow!("--from-checkpoint needs --run <id>"))?;
+        let store = CheckpointStore::new(Path::new(root), usize::MAX);
+        let state = match args.get("step") {
+            Some(_) => {
+                let step: usize = args.parse_or("step", 0usize)?;
+                store.load(backend.as_ref(), run, step)?
+            }
+            None => {
+                store
+                    .load_latest(backend.as_ref(), run)
+                    .ok_or_else(|| anyhow!("no valid checkpoint for run {run:?} under {root}"))?
+                    .1
+            }
+        };
+        backend.snapshot(&state)?
+    } else {
+        // Pack a fresh deterministic init (seed/init knobs as in train).
+        let seed: i32 = args.parse_or("seed", 0i32)?;
+        let init_mode: f32 = args.parse_or("init-mode", 0.0f32)?;
+        let init_gain: f32 = args.parse_or("init-gain", 1.0f32)?;
+        let state = backend.init(seed, init_mode, init_gain)?;
+        backend.snapshot(&state)?
+    };
+
+    let out =
+        PathBuf::from(args.get("out").or_else(|| args.get("o")).unwrap_or("model.mxc"));
+    let bytes = mxstab::runtime::pack_to_container(backend.as_ref(), &tensors, &fmt, &out)?;
+    // Prove the artifact loads: O(header) open + full checksum pass.
+    let mxc = mxstab::formats::container::MxcFile::open(&out)?;
+    mxc.verify()?;
+    let meta = mxc.meta();
+    println!(
+        "{}: {} bytes | workload {} | fmt {} | {} tensors | {} packed sites ({}) | verified",
+        out.display(),
+        bytes,
+        meta.workload,
+        fmt.label(),
+        meta.tensors.len(),
+        meta.sites.len(),
+        if mxc.is_mmap() { "mmap" } else { "heap" },
+    );
     Ok(())
 }
 
@@ -607,6 +687,10 @@ fn main() -> Result<()> {
             }
             _ => Err(unknown_backend()),
         },
+        Some("pack") => match backend.as_str() {
+            "native" => cmd_pack(native_engine(&args)?, &args),
+            _ => bail!("`pack` runs on the native backend only"),
+        },
         Some("codes") => cmd_codes(&args),
         Some("fit") => cmd_fit(&args),
         Some("analyze") => cmd_analyze(&args),
@@ -615,7 +699,7 @@ fn main() -> Result<()> {
                 eprintln!("unknown subcommand {o:?}\n");
             }
             eprintln!(
-                "usage: mxstab <info|train|experiment|sweep|sweep-worker|sweep-status|\
+                "usage: mxstab <info|train|pack|experiment|sweep|sweep-worker|sweep-status|\
                  codes|fit|analyze> [--backend native|pjrt] [options]\n\
                  see rust/src/main.rs header for details"
             );

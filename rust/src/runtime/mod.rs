@@ -11,7 +11,10 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{ensure, Context, Result};
+
+use crate::formats::container::{self, MxcFile};
+use crate::formats::Fmt;
 
 pub mod manifest;
 pub mod native;
@@ -94,6 +97,133 @@ pub trait Backend: Send + Sync + 'static {
 
     /// Rebuild a state from host tensors in [`Backend::state_spec`] order.
     fn restore(&self, tensors: Vec<Vec<f32>>) -> Result<Self::State>;
+
+    /// The forward weight-GEMM sites this model quantizes, in a stable
+    /// order — what `mxstab pack` pre-encodes into a `.mxc` container.
+    /// Empty (the default) means the backend has no packable sites and
+    /// containers for it carry master tensors only.
+    fn pack_sites(&self) -> Vec<PackSite> {
+        Vec::new()
+    }
+
+    /// Build a run state from an opened `.mxc` container: master tensors
+    /// are restored from the file (checksummed, O(state) copy) and — for
+    /// backends that override this — pre-packed weight operands are
+    /// seeded into the execution cache zero-copy, so startup performs no
+    /// f32 re-encode. The default restores tensors only.
+    fn load_weights(&self, mxc: &MxcFile) -> Result<Self::State> {
+        state_from_container(self, mxc)
+    }
+}
+
+/// One packable forward weight site: a `[k × n]` row-major slab at
+/// `offset` inside state tensor `tensor` (layer slab `layer`). The packed
+/// operand is the transposed `[n × k]` matrix
+/// [`weight_fwd_site`](native::common::weight_fwd_site) builds — blocks
+/// along `k`, the forward reduction axis.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackSite {
+    /// Human-readable site name (e.g. `wq.3`, `head`).
+    pub name: String,
+    /// State-tensor index the weight slab lives in.
+    pub tensor: usize,
+    /// Layer slab index within the tensor (0 for unlayered tensors).
+    pub layer: usize,
+    /// Element offset of the slab inside the tensor.
+    pub offset: usize,
+    /// Reduction extent (input features).
+    pub k: usize,
+    /// Output extent.
+    pub n: usize,
+}
+
+/// The generic tensor-restore half of [`Backend::load_weights`]: match
+/// the container's tensor table against [`Backend::state_spec`] by name
+/// and shape, decode (checksum-verified), and [`Backend::restore`].
+pub fn state_from_container<B: Backend + ?Sized>(
+    backend: &B,
+    mxc: &MxcFile,
+) -> Result<B::State> {
+    let meta = mxc.meta();
+    ensure!(
+        meta.workload == backend.name(),
+        "container holds weights for {:?}, backend is {:?}",
+        meta.workload,
+        backend.name()
+    );
+    let spec = backend.state_spec();
+    ensure!(
+        meta.tensors.len() == spec.len(),
+        "container has {} tensors, state spec wants {}",
+        meta.tensors.len(),
+        spec.len()
+    );
+    let mut tensors = Vec::with_capacity(spec.len());
+    for (i, (ts, tm)) in spec.iter().zip(&meta.tensors).enumerate() {
+        ensure!(
+            ts.name == tm.name && ts.shape == tm.shape,
+            "state tensor {i}: spec {}{:?} vs container {}{:?}",
+            ts.name,
+            ts.shape,
+            tm.name,
+            tm.shape
+        );
+        tensors.push(mxc.tensor_f32(i).with_context(|| format!("reading tensor {}", tm.name))?);
+    }
+    backend.restore(tensors)
+}
+
+/// Pack a backend's weights into a `.mxc` container: snapshot (or accept
+/// pre-loaded) master tensors plus every [`Backend::pack_sites`] operand
+/// pre-encoded under `fmt`'s forward weight format. Sites are only
+/// packed when the forward weight format is an MX element type — fp32 /
+/// bf16 runs get a master-only container.
+pub fn pack_to_container<B: Backend + ?Sized>(
+    backend: &B,
+    tensors: &[Vec<f32>],
+    fmt: &Fmt,
+    path: &std::path::Path,
+) -> Result<usize> {
+    use crate::formats::gemm::{transpose, PackedMatrix};
+    let spec = backend.state_spec();
+    ensure!(
+        tensors.len() == spec.len(),
+        "have {} tensors, state spec wants {}",
+        tensors.len(),
+        spec.len()
+    );
+    let tensor_in: Vec<container::TensorIn<'_>> = spec
+        .iter()
+        .zip(tensors)
+        .map(|(ts, data)| container::TensorIn {
+            name: &ts.name,
+            shape: ts.shape.clone(),
+            data,
+        })
+        .collect();
+    let eff = if fmt.quant_fwd { Some(fmt.w_fwd) } else { None };
+    let mut mats = Vec::new();
+    if let Some(eff) = eff.filter(|e| e.is_mx()) {
+        for site in backend.pack_sites() {
+            let w = &tensors[site.tensor][site.offset..site.offset + site.k * site.n];
+            // The exact operand weight_fwd_site builds: transpose, then
+            // encode with blocks along k.
+            let wt = transpose(w, site.k, site.n);
+            let mat =
+                PackedMatrix::encode_geom(&wt, site.n, site.k, eff, fmt.scale_bump, fmt.geom);
+            mats.push((site, mat));
+        }
+    }
+    let site_in: Vec<container::SiteIn<'_>> = mats
+        .iter()
+        .map(|(site, mat)| container::SiteIn {
+            name: site.name.clone(),
+            tensor: site.tensor,
+            layer: site.layer,
+            mat,
+        })
+        .collect();
+    Ok(container::write(path, backend.name(), fmt, &tensor_in, &site_in)?)
 }
 
 /// A backend factory + registry: resolves model/bundle names to loaded

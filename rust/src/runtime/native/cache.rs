@@ -172,6 +172,48 @@ impl ExecCache {
         (self.hits.load(Ordering::SeqCst), self.misses.load(Ordering::SeqCst))
     }
 
+    /// Look up `key` without computing anything on a miss. A hit counts
+    /// toward [`ExecCache::stats`]; a miss counts nothing — the caller is
+    /// expected to follow up with [`ExecCache::get_or_insert`], which
+    /// records the miss. Always `None` while the cache is disabled.
+    ///
+    /// This is the zero-re-encode fast path for weight sites whose
+    /// operand was [seeded](ExecCache::seed) from a `.mxc` container: a
+    /// hit returns the mapped operand without ever touching the fp32
+    /// master (no transpose, no encode).
+    pub fn peek(&self, class: Class, key: Key) -> Option<CachedOp> {
+        if !self.enabled() {
+            return None;
+        }
+        let m = self.inner.lock().unwrap();
+        let map = match class {
+            Class::Param => &m.param,
+            Class::Static => &m.statics,
+        };
+        let hit = map.get(&key).cloned();
+        if hit.is_some() {
+            self.hits.fetch_add(1, Ordering::SeqCst);
+        }
+        hit
+    }
+
+    /// Pre-populate `key` with an externally built operand (the `.mxc`
+    /// container load path) without touching the hit/miss counters.
+    /// First insert wins; an existing entry is kept — by the cache
+    /// contract both must decode identically, and keeping the resident
+    /// one avoids re-sharing. Seeded [`Class::Param`] entries are dropped
+    /// by the first [`ExecCache::invalidate_params`], exactly like
+    /// computed ones — after the optimizer commits an update the mapped
+    /// bytes no longer describe the weights.
+    pub fn seed(&self, class: Class, key: Key, op: CachedOp) {
+        let mut m = self.inner.lock().unwrap();
+        let map = match class {
+            Class::Param => &mut m.param,
+            Class::Static => &mut m.statics,
+        };
+        map.entry(key).or_insert(op);
+    }
+
     /// Fetch the entry for `key`, computing and memoizing it on a miss.
     /// `make` must not re-enter the cache (the entry lock is held while
     /// it runs so concurrent lookups of the same key encode only once).
@@ -277,6 +319,32 @@ mod tests {
                 dense(6.0)
             });
         assert_eq!(other_geom.into_dense()[0], 6.0);
+    }
+
+    #[test]
+    fn peek_and_seed_drive_the_container_load_path() {
+        let c = ExecCache::new();
+        // Cold peek: no entry, no stats movement.
+        assert!(c.peek(Class::Param, key(0, Stage::FwdW)).is_none());
+        assert_eq!(c.stats(), (0, 0));
+        // Seed is invisible to the counters; the next peek is a pure hit.
+        c.seed(Class::Param, key(0, Stage::FwdW), dense(7.0));
+        assert_eq!(c.stats(), (0, 0));
+        let hit = c.peek(Class::Param, key(0, Stage::FwdW)).expect("seeded entry");
+        assert_eq!(hit.into_dense()[0], 7.0);
+        assert_eq!(c.stats(), (1, 0), "peek hit counts, seed does not");
+        // First insert wins: re-seeding does not replace.
+        c.seed(Class::Param, key(0, Stage::FwdW), dense(9.0));
+        let still = c.peek(Class::Param, key(0, Stage::FwdW)).unwrap();
+        assert_eq!(still.into_dense()[0], 7.0);
+        // Param seeds die with the version bump, statics survive.
+        c.seed(Class::Static, key(3, Stage::FwdW), dense(1.0));
+        c.invalidate_params();
+        assert!(c.peek(Class::Param, key(0, Stage::FwdW)).is_none());
+        assert!(c.peek(Class::Static, key(3, Stage::FwdW)).is_some());
+        // Disabled cache never answers a peek.
+        c.set_enabled(false);
+        assert!(c.peek(Class::Static, key(3, Stage::FwdW)).is_none());
     }
 
     #[test]

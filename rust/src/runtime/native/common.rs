@@ -88,36 +88,48 @@ pub fn weight_fwd_site<'a>(w: &[f32], k: usize, n: usize, fmt: &Fmt, cx: WeightC
     // The fp32 transpose and bf16 rounding are geometry-independent; only
     // MX-packed entries key on the block geometry.
     let g0 = BlockGeom::default().key_byte();
+    let t_key = (cx.site, Stage::FwdT, FormatId::Fp32 as u8, false, g0);
+    // Resolve the *final* forward operand by key before materializing the
+    // fp32 transpose: a warm or seeded FwdW entry (e.g. packed weights
+    // mapped from a `.mxc` container) must serve without ever touching
+    // the master tensor — no transpose, no encode.
+    let w_key = match eff {
+        FormatId::Fp32 => t_key,
+        FormatId::Bf16 => (cx.site, Stage::FwdW, eff as u8, false, g0),
+        _ => (cx.site, Stage::FwdW, eff as u8, fmt.scale_bump, fmt.geom.key_byte()),
+    };
+    if let Some(hit) = cx.ex.peek(cx.class, w_key) {
+        return match hit {
+            CachedOp::Dense(v) => QMat::DenseShared(v),
+            CachedOp::Packed(p) => QMat::MxShared(p),
+        };
+    }
     let wt = cx
         .ex
-        .get_or_insert(cx.class, (cx.site, Stage::FwdT, FormatId::Fp32 as u8, false, g0), || {
-            CachedOp::Dense(Arc::new(transpose(w, k, n)))
-        })
+        .get_or_insert(cx.class, t_key, || CachedOp::Dense(Arc::new(transpose(w, k, n))))
         .into_dense();
     match eff {
         FormatId::Fp32 => QMat::DenseShared(wt),
         FormatId::Bf16 => {
             let rounded = cx
                 .ex
-                .get_or_insert(cx.class, (cx.site, Stage::FwdW, eff as u8, false, g0), || {
+                .get_or_insert(cx.class, w_key, || {
                     CachedOp::Dense(Arc::new(wt.iter().map(|&v| bf16_rne(v)).collect()))
                 })
                 .into_dense();
             QMat::DenseShared(rounded)
         }
         _ => {
-            let geom = fmt.geom;
-            let key = (cx.site, Stage::FwdW, eff as u8, fmt.scale_bump, geom.key_byte());
             let packed = cx
                 .ex
-                .get_or_insert(cx.class, key, || {
+                .get_or_insert(cx.class, w_key, || {
                     CachedOp::Packed(Arc::new(PackedMatrix::encode_geom(
                         &wt,
                         n,
                         k,
                         eff,
                         fmt.scale_bump,
-                        geom,
+                        fmt.geom,
                     )))
                 })
                 .into_packed();

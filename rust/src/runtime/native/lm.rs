@@ -31,12 +31,16 @@ use super::ops::{act_bwd, act_fwd, layernorm_bwd, layernorm_fwd, qgemm, quantize
 use crate::formats::gemm::{transpose, transpose_into};
 use crate::formats::kernel;
 use crate::formats::spec::{Fmt, BLOCK_SIZE};
-use crate::runtime::{Backend, Metrics, StepArgs, TensorSpec};
+use crate::formats::container::MxcFile;
+use crate::runtime::{Backend, Metrics, PackSite, StepArgs, TensorSpec};
 use crate::util::rng::Xoshiro256;
 
 /// The built-in LM ladder (OLMo-style naming by rough parameter count);
-/// any `lm_L<l>_D<d>[_H<h>][_T<ctx>][_V<vocab>]` name also loads.
-pub const LM_LADDER: [&str; 3] = ["lm_olmo_1m", "lm_olmo_4m", "lm_olmo_12m"];
+/// any `lm_L<l>_D<d>[_H<h>][_T<ctx>][_V<vocab>]` name also loads. The
+/// upper rungs default to smaller token batches so a ladder sweep's
+/// per-step memory stays roughly flat across rungs.
+pub const LM_LADDER: [&str; 5] =
+    ["lm_olmo_1m", "lm_olmo_4m", "lm_olmo_12m", "lm_olmo_30m", "lm_olmo_90m"];
 
 /// Default token batch rows for LM models (tokens/step = batch · ctx).
 pub const DEFAULT_LM_BATCH: usize = 16;
@@ -73,18 +77,21 @@ impl LmConfig {
     }
 
     fn preset(name: &str) -> Option<LmConfig> {
-        let base = |layers, d_model, n_heads| LmConfig {
+        let base = |layers, d_model, n_heads, batch| LmConfig {
             layers,
             d_model,
             n_heads,
             vocab: 512,
             ctx: 64,
-            batch: DEFAULT_LM_BATCH,
+            batch,
         };
+        let b = DEFAULT_LM_BATCH;
         match name {
-            "lm_olmo_1m" => Some(base(3, 160, 5)),
-            "lm_olmo_4m" => Some(base(5, 256, 8)),
-            "lm_olmo_12m" => Some(base(6, 384, 12)),
+            "lm_olmo_1m" => Some(base(3, 160, 5, b)),
+            "lm_olmo_4m" => Some(base(5, 256, 8, b)),
+            "lm_olmo_12m" => Some(base(6, 384, 12, b)),
+            "lm_olmo_30m" => Some(base(9, 512, 8, b / 2)),
+            "lm_olmo_90m" => Some(base(12, 768, 12, b / 4)),
             _ => None,
         }
     }
@@ -930,6 +937,36 @@ impl Backend for LmModel {
         }
         Ok(NativeState::new(tensors))
     }
+
+    /// Every quantized forward weight GEMM, in deterministic order: the
+    /// per-layer q/k/v/o projections and SwiGLU MLP matrices, then the LM
+    /// head. The embedding (a gather) and the LN gammas (element-wise)
+    /// have no packed weight operand. Slab coordinates mirror the
+    /// `LmParams::layer` slicing and the [`WeightCtx::param`] sites the
+    /// forward pass uses, so `.mxc` seeds land on exactly the keys
+    /// [`super::common::weight_fwd_site`] peeks.
+    fn pack_sites(&self) -> Vec<PackSite> {
+        let (d, hm, v) = (self.cfg.d_model, self.cfg.mlp_hidden(), self.cfg.vocab);
+        let mut sites = Vec::with_capacity(7 * self.cfg.layers + 1);
+        let mut push = |name: String, tensor: usize, layer: usize, per: usize, k: usize, n: usize| {
+            sites.push(PackSite { name, tensor, layer, offset: layer * per, k, n });
+        };
+        for l in 0..self.cfg.layers {
+            for (idx, tag) in [(WQ, "wq"), (WK, "wk"), (WV, "wv"), (WO, "wo")] {
+                push(format!("{tag}.{l}"), idx, l, d * d, d, d);
+            }
+            for (idx, tag) in [(W1, "w1"), (WG, "wg")] {
+                push(format!("{tag}.{l}"), idx, l, d * hm, d, hm);
+            }
+            push(format!("w2.{l}"), W2, l, hm * d, hm, d);
+        }
+        push("head".to_string(), HEAD, 0, d * v, d, v);
+        sites
+    }
+
+    fn load_weights(&self, mxc: &MxcFile) -> Result<NativeState> {
+        super::load_packed_state(self, mxc)
+    }
 }
 
 /// Max-shifted log-sum-exp of one logits row (f64 accumulation) — the
@@ -1055,6 +1092,38 @@ mod tests {
             m.n_params()
         );
         assert_eq!(m.state_spec().len(), 3 * K_TENSORS, "p/m/v, no teacher");
+    }
+
+    #[test]
+    fn ladder_upper_rungs_scale_batch_down() {
+        let c30 = LmConfig::parse("lm_olmo_30m", None).unwrap();
+        assert_eq!((c30.layers, c30.d_model, c30.n_heads, c30.batch), (9, 512, 8, 8));
+        let c90 = LmConfig::parse("lm_olmo_90m", None).unwrap();
+        assert_eq!((c90.layers, c90.d_model, c90.n_heads, c90.batch), (12, 768, 12, 4));
+        assert!((25e6..35e6).contains(&(c30.n_params() as f64)), "got {}", c30.n_params());
+        assert!((80e6..95e6).contains(&(c90.n_params() as f64)), "got {}", c90.n_params());
+        // An explicit --batch still overrides the per-rung default.
+        assert_eq!(LmConfig::parse("lm_olmo_90m", Some(2)).unwrap().batch, 2);
+    }
+
+    #[test]
+    fn pack_sites_tile_the_weight_tensors() {
+        let cfg = LmConfig::parse("lm_L2_D64_H2_T32_V256", None).unwrap();
+        let m = LmModel::new(cfg).unwrap();
+        let sites = m.pack_sites();
+        assert_eq!(sites.len(), 7 * cfg.layers + 1);
+        let spec = m.state_spec();
+        let mut names = std::collections::BTreeSet::new();
+        for s in &sites {
+            assert!(names.insert(s.name.clone()), "duplicate site {}", s.name);
+            assert!(s.offset + s.k * s.n <= spec[s.tensor].elems(), "{} overruns", s.name);
+            assert_eq!(s.k % BLOCK_SIZE, 0, "{}: k must be block-aligned", s.name);
+        }
+        // The per-tensor slabs exactly tile each packed weight tensor.
+        for idx in [WQ, WK, WV, WO, W1, WG, W2, HEAD] {
+            let total: usize = sites.iter().filter(|s| s.tensor == idx).map(|s| s.k * s.n).sum();
+            assert_eq!(total, spec[idx].elems(), "tensor {} fully tiled", PNAMES[idx]);
+        }
     }
 
     #[test]

@@ -39,7 +39,10 @@ pub use lm::{LmConfig, LmModel, DEFAULT_LM_BATCH, LM_LADDER};
 pub use model::{ProxyConfig, ProxyModel};
 pub use ops::Activation;
 
-use super::{Backend, Engine, Metrics, StepArgs, TensorSpec};
+use crate::formats::container::MxcFile;
+
+use super::{Backend, Engine, Metrics, PackSite, StepArgs, TensorSpec};
+use cache::{CachedOp, Class, Site, Stage};
 
 /// Default proxy batch size (python `ProxyConfig.batch`).
 pub const DEFAULT_BATCH: usize = 256;
@@ -150,6 +153,71 @@ impl Backend for NativeModel {
     fn restore(&self, tensors: Vec<Vec<f32>>) -> Result<NativeState> {
         dispatch!(self, m => m.restore(tensors))
     }
+
+    fn pack_sites(&self) -> Vec<PackSite> {
+        match self {
+            // The proxy's weight layout is trivially cheap to re-encode;
+            // containers for it carry master tensors only.
+            NativeModel::Proxy(_) => Vec::new(),
+            NativeModel::Lm(m) => m.pack_sites(),
+        }
+    }
+
+    fn load_weights(&self, mxc: &MxcFile) -> Result<NativeState> {
+        load_packed_state(self, mxc)
+    }
+}
+
+/// Container load with zero f32 re-encode — the shared
+/// [`Backend::load_weights`] body of every native backend: restore the
+/// master tensors (generic path), then seed every pre-packed forward
+/// weight operand into the fresh state's exec cache as a zero-copy view
+/// over the container mapping. The first forward pass peek-hits each
+/// site, so startup cost is O(header) + the master-tensor copy — no
+/// transpose, no encode. Seeds use the parameter class, so the first
+/// optimizer step drops them exactly like any memoized operand.
+pub fn load_packed_state<B>(backend: &B, mxc: &MxcFile) -> Result<NativeState>
+where
+    B: Backend<State = NativeState> + ?Sized,
+{
+    let meta = mxc.meta();
+    if !meta.sites.is_empty() {
+        // A container's packed sites must be this model's sites — wrong
+        // shapes seeded under matching keys would corrupt the forward
+        // pass, so reject up front instead of trusting tags.
+        let want = backend.pack_sites();
+        ensure!(
+            meta.sites.len() == want.len(),
+            "container packs {} sites, model {} has {}",
+            meta.sites.len(),
+            backend.name(),
+            want.len()
+        );
+        for (sm, ps) in meta.sites.iter().zip(&want) {
+            ensure!(
+                sm.tensor == ps.tensor && sm.layer == ps.layer && sm.k == ps.k && sm.n == ps.n,
+                "container site {:?} ({}x{} at tensor {} layer {}) does not match \
+                 model site {:?} ({}x{} at tensor {} layer {})",
+                sm.name,
+                sm.k,
+                sm.n,
+                sm.tensor,
+                sm.layer,
+                ps.name,
+                ps.k,
+                ps.n,
+                ps.tensor,
+                ps.layer
+            );
+        }
+    }
+    let state = super::state_from_container(backend, mxc)?;
+    for (i, sm) in meta.sites.iter().enumerate() {
+        let site = Site::new(sm.tensor, sm.layer);
+        let key = (site, Stage::FwdW, sm.fmt as u8, sm.bump, sm.geom.key_byte());
+        state.exec.seed(Class::Param, key, CachedOp::Packed(Arc::new(mxc.site_matrix(i))));
+    }
+    Ok(state)
 }
 
 /// Resolves proxy- and LM-model names to [`NativeModel`]s; the native

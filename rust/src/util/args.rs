@@ -1,7 +1,9 @@
 //! Tiny CLI argument parser (no `clap` offline).
 //!
 //! Grammar: `mxstab <subcommand> [positional ...] [--flag] [--key value]`.
-//! `--key=value` is also accepted.
+//! `--key=value` is also accepted, as are single-letter short options
+//! (`-o value`); subcommands resolve their own short aliases (e.g.
+//! `pack`'s `-o` ↔ `--out`).
 
 use std::collections::BTreeMap;
 
@@ -20,7 +22,12 @@ impl Args {
         let mut out = Args::default();
         let mut iter = argv.into_iter().peekable();
         while let Some(a) = iter.next() {
-            if let Some(rest) = a.strip_prefix("--") {
+            let key = a.strip_prefix("--").or_else(|| {
+                // `-o`-style short options: exactly one letter, so
+                // negative numeric values (`-1e-3`) stay positional.
+                a.strip_prefix('-').filter(|r| r.len() == 1 && r.chars().all(|c| c.is_alphabetic()))
+            });
+            if let Some(rest) = key {
                 if let Some((k, v)) = rest.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
                 } else if iter.peek().map_or(false, |n| !n.starts_with("--")) {
@@ -88,5 +95,16 @@ mod tests {
     fn flag_followed_by_flag() {
         let a = p("run --force --dry");
         assert!(a.flag("force") && a.flag("dry"));
+    }
+
+    #[test]
+    fn short_options_and_negative_values() {
+        let a = p("pack lm_olmo_12m --fmt e4m3-e4m3 -o model.mxc");
+        assert_eq!(a.positional, vec!["lm_olmo_12m"]);
+        assert_eq!(a.get("o"), Some("model.mxc"));
+        // Negative numbers are values/positionals, never short options.
+        let a = p("train --init-mode -0.5 -1e-3");
+        assert_eq!(a.get("init-mode"), Some("-0.5"));
+        assert_eq!(a.positional, vec!["-1e-3"]);
     }
 }

@@ -109,15 +109,44 @@ pub fn commit_new(tmp: &Path, dst: &Path) -> Result<bool> {
     res
 }
 
+/// Incremental FNV-1a 64-bit hasher: feed bytes in any chunking, the
+/// digest equals [`fnv64`] over the concatenation. Lets the checkpoint
+/// and container writers hash tensors *while streaming* them to disk
+/// instead of materializing one contiguous blob first.
+#[derive(Clone)]
+pub struct Fnv64 {
+    h: u64,
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64 { h: 0xcbf2_9ce4_8422_2325 }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.h ^= b as u64;
+            self.h = self.h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.h
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Fnv64 {
+        Fnv64::new()
+    }
+}
+
 /// FNV-1a 64-bit hash — the checkpoint content checksum. Not
 /// cryptographic; catches truncation and torn/scrambled bytes.
 pub fn fnv64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
+    let mut h = Fnv64::new();
+    h.update(bytes);
+    h.finish()
 }
 
 /// Milliseconds since the unix epoch (heartbeat timestamps).
@@ -196,5 +225,19 @@ mod tests {
         assert_ne!(a, fnv64(&bytes));
         assert_ne!(a, fnv64(&b"some checkpoint blo"[..]), "truncation changes the hash");
         assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325, "offset basis");
+    }
+
+    #[test]
+    fn incremental_fnv_matches_one_shot_for_any_chunking() {
+        let data: Vec<u8> = (0u32..1024).map(|i| (i * 31 + 7) as u8).collect();
+        let whole = fnv64(&data);
+        for chunk in [1usize, 3, 64, 1000, 1024] {
+            let mut h = Fnv64::new();
+            for c in data.chunks(chunk) {
+                h.update(c);
+            }
+            assert_eq!(h.finish(), whole, "chunk size {chunk}");
+        }
+        assert_eq!(Fnv64::new().finish(), fnv64(b""));
     }
 }

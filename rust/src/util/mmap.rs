@@ -1,0 +1,442 @@
+//! Read-only file mappings + borrowed byte/word storage (DESIGN.md
+//! §Container).
+//!
+//! This module is the crate's *only* sanctioned unsafe boundary outside
+//! the SIMD kernel ISA files (`mxstab analyze` enforces that — see
+//! `analyze/rules.rs`). It wraps the raw unix `mmap`/`munmap` calls in a
+//! safe [`Mapping`] type and confines the one aligned-pointer cast the
+//! zero-copy weight path needs (`&[u8]` → `&[i16]` for little-endian
+//! scale exponents) behind constructors that verify every precondition.
+//!
+//! * [`Mapping`] — an immutable byte view of a file. On unix it is a
+//!   `PROT_READ`/`MAP_SHARED` mapping (N processes serving the same
+//!   container share one set of resident pages); elsewhere — and via
+//!   [`Mapping::read`] everywhere — it falls back to an owned heap read
+//!   with the identical API, so callers never branch on platform.
+//! * [`Bytes`] / [`Words`] — `Cow`-style storage for the packed codec's
+//!   `codes`/`scales8` bytes and `scales` i16 exponents: either owned
+//!   vectors (the encode path) or borrowed windows of a shared
+//!   [`Mapping`] (the `.mxc` container reader). Both deref to plain
+//!   slices, so every downstream consumer (GEMM panel decode, the
+//!   operand cache, tests) is storage-agnostic and bitwise identical
+//!   across modes.
+//!
+//! Safety contract: a [`Mapping`] must view an *immutable* file. Mapped
+//! containers are written atomically (`fsio::write_atomic` — rename into
+//! place) and never modified afterwards; truncating a file while a
+//! process has it mapped is outside the contract (on unix it raises
+//! `SIGBUS`, exactly as it would for any mmap consumer).
+
+use std::ops::Deref;
+use std::path::Path;
+use std::sync::Arc;
+use std::{fs, io};
+
+#[cfg(unix)]
+mod sys {
+    //! Minimal libc surface for the mapping calls (the crate vendors no
+    //! libc binding; these two symbols are in every unix libc).
+    pub use std::ffi::c_void;
+    pub type CInt = i32;
+    pub type OffT = i64;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: CInt,
+            flags: CInt,
+            fd: CInt,
+            offset: OffT,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> CInt;
+    }
+
+    pub const PROT_READ: CInt = 0x1;
+    pub const MAP_SHARED: CInt = 0x1;
+
+    pub fn map_failed(ptr: *mut c_void) -> bool {
+        ptr as isize == -1
+    }
+}
+
+enum Inner {
+    /// A live `mmap(2)` region (unix only), munmapped on drop.
+    #[cfg(unix)]
+    Mmap { ptr: *mut sys::c_void, len: usize },
+    /// Owned heap bytes (the portable fallback and [`Mapping::read`]).
+    Heap(Vec<u8>),
+}
+
+/// An immutable, shareable byte view of a file (see module docs).
+pub struct Mapping {
+    inner: Inner,
+}
+
+// SAFETY: the mapped region is PROT_READ for its entire lifetime and this
+// type exposes it only as `&[u8]`; no interior mutability, so moving the
+// owner across threads cannot race anything.
+#[cfg(unix)]
+unsafe impl Send for Mapping {}
+
+// SAFETY: all access is through `&self` returning shared `&[u8]` views of
+// read-only memory; concurrent readers are safe by construction.
+#[cfg(unix)]
+unsafe impl Sync for Mapping {}
+
+impl Mapping {
+    /// Map `path` read-only. Unix: a shared `mmap` (O(header) — no bytes
+    /// are read until touched, and resident pages are shared between
+    /// processes mapping the same file). Elsewhere: [`Mapping::read`].
+    /// Empty files yield an empty heap mapping (zero-length `mmap` is
+    /// EINVAL on most systems).
+    pub fn map(path: &Path) -> io::Result<Mapping> {
+        #[cfg(unix)]
+        {
+            Self::map_unix(path)
+        }
+        #[cfg(not(unix))]
+        {
+            Self::read(path)
+        }
+    }
+
+    /// Read `path` fully into an owned heap buffer behind the same API
+    /// (the portable fallback; also the A-side of mmap-vs-heap parity
+    /// tests).
+    pub fn read(path: &Path) -> io::Result<Mapping> {
+        Ok(Mapping { inner: Inner::Heap(fs::read(path)?) })
+    }
+
+    /// Wrap an in-memory buffer (tests, hostile-container surgery).
+    pub fn from_vec(bytes: Vec<u8>) -> Mapping {
+        Mapping { inner: Inner::Heap(bytes) }
+    }
+
+    #[cfg(unix)]
+    fn map_unix(path: &Path) -> io::Result<Mapping> {
+        use std::os::unix::io::AsRawFd;
+        let f = fs::File::open(path)?;
+        let len = f.metadata()?.len();
+        if len == 0 {
+            return Ok(Mapping::from_vec(Vec::new()));
+        }
+        let len = usize::try_from(len)
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "file too large to map"))?;
+        // SAFETY: addr=null lets the kernel choose the placement; the fd
+        // is a freshly opened readable file that outlives the call (mmap
+        // keeps its own reference to the file); PROT_READ/MAP_SHARED with
+        // offset 0 and a length validated against the file size. The
+        // result is checked against MAP_FAILED before use.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_SHARED,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        if sys::map_failed(ptr) {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Mapping { inner: Inner::Mmap { ptr, len } })
+    }
+
+    /// The full byte view.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.inner {
+            // SAFETY: `ptr` came from a successful mmap of exactly `len`
+            // bytes, is never unmapped before Drop, and the region is
+            // read-only for its whole lifetime — the invariants
+            // `from_raw_parts` needs hold until `&self` expires.
+            #[cfg(unix)]
+            Inner::Mmap { ptr, len } => unsafe {
+                std::slice::from_raw_parts(*ptr as *const u8, *len)
+            },
+            Inner::Heap(v) => v,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.inner {
+            #[cfg(unix)]
+            Inner::Mmap { len, .. } => *len,
+            Inner::Heap(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Is this a live `mmap` (as opposed to the heap fallback)?
+    pub fn is_mmap(&self) -> bool {
+        match &self.inner {
+            #[cfg(unix)]
+            Inner::Mmap { .. } => true,
+            Inner::Heap(_) => false,
+        }
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        match &self.inner {
+            // SAFETY: `ptr`/`len` are exactly what mmap returned and the
+            // region has not been unmapped before (Drop runs once); after
+            // this the only owner is gone, so no dangling view survives.
+            // munmap cannot fail for a valid full-region unmap; the
+            // result is ignored deliberately.
+            #[cfg(unix)]
+            Inner::Mmap { ptr, len } => unsafe {
+                let _ = sys::munmap(*ptr, *len);
+            },
+            Inner::Heap(_) => {}
+        }
+    }
+}
+
+impl std::fmt::Debug for Mapping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mapping {{ len: {}, mmap: {} }}", self.len(), self.is_mmap())
+    }
+}
+
+/// Byte storage for packed element codes / E4M3 scale codes: an owned
+/// vector (encode path) or a borrowed window of a shared [`Mapping`]
+/// (zero-copy container reads). Derefs to `&[u8]`.
+#[derive(Clone)]
+pub enum Bytes {
+    Owned(Vec<u8>),
+    Mapped { map: Arc<Mapping>, off: usize, len: usize },
+}
+
+impl Bytes {
+    /// Borrow `len` bytes of `map` at `off`. Panics if out of bounds —
+    /// container metadata is bounds-checked before storage is built.
+    pub fn mapped(map: Arc<Mapping>, off: usize, len: usize) -> Bytes {
+        assert!(off.checked_add(len).is_some_and(|end| end <= map.len()), "mapped window OOB");
+        Bytes::Mapped { map, off, len }
+    }
+
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, Bytes::Mapped { .. })
+    }
+}
+
+impl Deref for Bytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        match self {
+            Bytes::Owned(v) => v,
+            Bytes::Mapped { map, off, len } => &map.bytes()[*off..*off + *len],
+        }
+    }
+}
+
+impl From<Vec<u8>> for Bytes {
+    fn from(v: Vec<u8>) -> Bytes {
+        Bytes::Owned(v)
+    }
+}
+
+impl PartialEq for Bytes {
+    fn eq(&self, other: &Bytes) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl PartialEq<Vec<u8>> for Bytes {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl PartialEq<Bytes> for Vec<u8> {
+    fn eq(&self, other: &Bytes) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl std::fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(&self[..], f)
+    }
+}
+
+/// i16 storage for per-block scale exponents: an owned vector or a
+/// zero-copy little-endian view into a [`Mapping`]. Derefs to `&[i16]`.
+#[derive(Clone)]
+pub enum Words {
+    Owned(Vec<i16>),
+    /// `len` i16 words at *byte* offset `off`. Constructed only by
+    /// [`Words::mapped`], which verifies bounds, 2-byte pointer
+    /// alignment, and a little-endian target — the invariants the deref
+    /// cast relies on.
+    Mapped { map: Arc<Mapping>, off: usize, len: usize },
+}
+
+impl Words {
+    /// Borrow `len` little-endian i16 words at byte offset `off`, when a
+    /// zero-copy view is possible (little-endian target, 2-byte-aligned
+    /// address, in bounds). `None` otherwise — callers fall back to
+    /// [`Words::copied_le`], which is value-identical.
+    pub fn mapped(map: Arc<Mapping>, off: usize, len: usize) -> Option<Words> {
+        let nbytes = len.checked_mul(2)?;
+        let bytes = map.bytes().get(off..off.checked_add(nbytes)?)?;
+        if cfg!(target_endian = "big") || (bytes.as_ptr() as usize) % 2 != 0 {
+            return None;
+        }
+        Some(Words::Mapped { map, off, len })
+    }
+
+    /// Decode `len` little-endian i16 words at byte offset `off` into an
+    /// owned vector (the portable / misaligned fallback).
+    pub fn copied_le(map: &Mapping, off: usize, len: usize) -> Words {
+        let bytes = &map.bytes()[off..off + 2 * len];
+        Words::Owned(
+            bytes.chunks_exact(2).map(|c| i16::from_le_bytes([c[0], c[1]])).collect(),
+        )
+    }
+
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, Words::Mapped { .. })
+    }
+}
+
+impl Deref for Words {
+    type Target = [i16];
+
+    fn deref(&self) -> &[i16] {
+        match self {
+            Words::Owned(v) => v,
+            Words::Mapped { map, off, len } => {
+                let b = &map.bytes()[*off..*off + 2 * *len];
+                // SAFETY: [`Words::mapped`] verified bounds, 2-byte
+                // alignment of this exact address (the mapping's base
+                // never moves), and a little-endian target, so
+                // reinterpreting the bytes as `len` i16s is valid; the
+                // region is read-only and outlives the borrow via `map`.
+                unsafe { std::slice::from_raw_parts(b.as_ptr().cast::<i16>(), *len) }
+            }
+        }
+    }
+}
+
+impl From<Vec<i16>> for Words {
+    fn from(v: Vec<i16>) -> Words {
+        Words::Owned(v)
+    }
+}
+
+impl PartialEq for Words {
+    fn eq(&self, other: &Words) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl PartialEq<Vec<i16>> for Words {
+    fn eq(&self, other: &Vec<i16>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl PartialEq<Words> for Vec<i16> {
+    fn eq(&self, other: &Words) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl std::fmt::Debug for Words {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(&self[..], f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("mxstab-mmap-{}-{tag}", std::process::id()))
+    }
+
+    #[test]
+    fn map_and_read_agree_with_fs() {
+        let path = tmp("agree");
+        let data: Vec<u8> = (0u32..4096).map(|i| (i * 7 + 3) as u8).collect();
+        fs::write(&path, &data).unwrap();
+        let mapped = Mapping::map(&path).unwrap();
+        let heap = Mapping::read(&path).unwrap();
+        assert_eq!(mapped.bytes(), &data[..]);
+        assert_eq!(heap.bytes(), &data[..]);
+        assert_eq!(mapped.len(), data.len());
+        assert!(!heap.is_mmap());
+        #[cfg(unix)]
+        assert!(mapped.is_mmap());
+        fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_file_maps_empty() {
+        let path = tmp("empty");
+        fs::write(&path, []).unwrap();
+        let m = Mapping::map(&path).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.bytes(), &[] as &[u8]);
+        fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn bytes_storage_modes_are_equal() {
+        let map = Arc::new(Mapping::from_vec(vec![1u8, 2, 3, 4, 5, 6]));
+        let owned = Bytes::from(vec![3u8, 4, 5]);
+        let mapped = Bytes::mapped(map, 2, 3);
+        assert!(mapped.is_mapped() && !owned.is_mapped());
+        assert_eq!(owned, mapped);
+        assert_eq!(&mapped[..], &[3, 4, 5]);
+        assert_eq!(mapped.len(), 3);
+        let cloned = mapped.clone();
+        assert_eq!(cloned, owned);
+    }
+
+    #[test]
+    #[should_panic(expected = "mapped window OOB")]
+    fn bytes_out_of_bounds_window_panics() {
+        let map = Arc::new(Mapping::from_vec(vec![0u8; 4]));
+        let _ = Bytes::mapped(map, 2, 3);
+    }
+
+    #[test]
+    fn words_zero_copy_matches_copied_le() {
+        // 2-byte-aligned offset within the (allocator-aligned) buffer.
+        let mut raw = Vec::new();
+        let vals: [i16; 5] = [0, -1, i16::MIN, i16::MAX, 1234];
+        raw.extend_from_slice(&[0u8; 8]); // padding before the window
+        for v in vals {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        let map = Arc::new(Mapping::from_vec(raw));
+        let copied = Words::copied_le(&map, 8, vals.len());
+        assert_eq!(&copied[..], &vals[..]);
+        if let Some(zc) = Words::mapped(map.clone(), 8, vals.len()) {
+            assert!(zc.is_mapped());
+            assert_eq!(zc, copied);
+            assert_eq!(&zc[..], &vals[..]);
+        }
+        // A misaligned byte offset must refuse the zero-copy view (the
+        // base of a heap Vec is at least 2-aligned, so +9 is odd).
+        assert!(Words::mapped(map, 9, 2).is_none());
+    }
+
+    #[test]
+    fn words_bounds_are_checked() {
+        let map = Arc::new(Mapping::from_vec(vec![0u8; 6]));
+        assert!(Words::mapped(map.clone(), 0, 3).is_some() || cfg!(target_endian = "big"));
+        assert!(Words::mapped(map, 2, 3).is_none(), "window past the end");
+    }
+}

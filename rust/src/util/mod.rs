@@ -17,12 +17,16 @@
 //!   content checksums) for the spool/checkpoint layer
 //! * [`faults`] — fault-injection registry (kill/stall/torn-write) driven
 //!   by the orchestration tests
+//! * [`mmap`] — read-only file mappings + borrowed byte/word storage for
+//!   the zero-copy `.mxc` weight container (the crate's one sanctioned
+//!   unsafe boundary outside the kernel ISA files)
 
 pub mod arena;
 pub mod args;
 pub mod faults;
 pub mod fsio;
 pub mod json;
+pub mod mmap;
 pub mod pool;
 pub mod prop;
 pub mod rng;

@@ -32,3 +32,25 @@ fn shipped_tree_is_clean_under_strict_analyze() {
         report.files_scanned
     );
 }
+
+#[test]
+fn mmap_boundary_is_clean_under_confinement() {
+    // util/mmap.rs is the one sanctioned unsafe file outside the kernel
+    // ISA modules: every unsafe block there must carry its SAFETY
+    // comment, and the sanctioning must make the file scan clean without
+    // any allow pragma. Analyzing it in isolation (default scoped
+    // options, same as the tree pass) pins that down.
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("src/util/mmap.rs");
+    let source = std::fs::read_to_string(&path).expect("reading src/util/mmap.rs");
+    assert!(source.contains("unsafe"), "mmap.rs lost its unsafe boundary?");
+    let out = mxstab::analyze::analyze_source(
+        "rust/src/util/mmap.rs",
+        &source,
+        &Options::default(),
+    );
+    assert!(
+        out.violations.is_empty(),
+        "util/mmap.rs must scan clean as a sanctioned boundary:\n{}",
+        out.violations.iter().map(|d| d.render()).collect::<Vec<_>>().join("\n")
+    );
+}

@@ -1,0 +1,325 @@
+//! `.mxc` container integration suite (DESIGN.md §Container): the
+//! bitwise-parity bar for mmap'd weight loading, the zero-re-encode
+//! startup guarantee, hostile-container rejection with typed errors
+//! before any decode, and torn-write fault injection on `mxstab pack`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use mxstab::coordinator::{RunConfig, Runner};
+use mxstab::data::{Corpus, CorpusConfig};
+use mxstab::formats::container::{self, MxcError, MxcFile, SiteIn, TensorIn, ALIGN};
+use mxstab::formats::gemm::PackedMatrix;
+use mxstab::formats::spec::{hyper_idx, Fmt, FormatId, BLOCK_SIZE};
+use mxstab::runtime::native::cache::{CachedOp, Class, Site, Stage};
+use mxstab::runtime::native::{NativeEngine, NativeModel};
+use mxstab::runtime::{pack_to_container, Backend, Engine, StepArgs};
+use mxstab::util::faults::{self, Fault, FaultAction};
+use mxstab::util::mmap::Mapping;
+use mxstab::util::rng::Xoshiro256;
+
+const MODEL: &str = "lm_L1_D32_H1_T32_V64";
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mxstab-ct-{}-{tag}.mxc", std::process::id()))
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn lm_runner() -> Runner<NativeModel> {
+    let engine = NativeEngine::with_batch(2).unwrap();
+    let model = engine.load(MODEL).unwrap();
+    let corpus = Arc::new(Corpus::new(CorpusConfig { vocab: 64, ..Default::default() }));
+    Runner::new(model, Some(corpus))
+}
+
+/// Pack `MODEL`'s seed-`seed` init into a container at `path`.
+fn pack_fresh(runner: &Runner<NativeModel>, fmt: &Fmt, seed: i32, path: &PathBuf) {
+    let backend = runner.backend.as_ref();
+    let state = backend.init(seed, 0.0, 1.0).unwrap();
+    let tensors = backend.snapshot(&state).unwrap();
+    pack_to_container(backend, &tensors, fmt, path).unwrap();
+}
+
+/// The parity bar is absolute: a trajectory started from `.mxc` weights
+/// (mmap'd AND heap-loaded) must be bitwise identical to one started
+/// from a fresh seeded init — exercised for byte-code (E4M3) and
+/// nibble-packed (E2M1) site storage.
+#[test]
+fn trajectory_from_container_is_bitwise_identical_to_fresh_init() {
+    for (fmt, tag) in [
+        (Fmt::full(FormatId::E4M3, FormatId::E4M3), "parity-e4m3"),
+        (Fmt::full(FormatId::E2M1, FormatId::E2M1), "parity-e2m1"),
+    ] {
+        let runner = lm_runner();
+        let mut cfg = RunConfig::new("parity", fmt, 1e-2, 4);
+        cfg.seed = 11;
+
+        let fresh = runner.run(&cfg).unwrap();
+        let fresh_state = fresh.final_state.as_ref().unwrap();
+
+        let path = tmp(tag);
+        pack_fresh(&runner, &fmt, cfg.seed, &path);
+
+        // A: via RunConfig.weights — the mmap fast path.
+        let mut via_weights = cfg.clone();
+        via_weights.weights = Some(path.to_string_lossy().into_owned());
+        let mapped = runner.run(&via_weights).unwrap();
+
+        // B: explicit heap load (the no-mmap platform fallback).
+        let heap_mxc = MxcFile::open_heap(&path).unwrap();
+        assert!(!heap_mxc.is_mmap());
+        let heap_state = runner.backend.load_weights(&heap_mxc).unwrap();
+        let heaped = runner.run_from(&cfg, heap_state, 0).unwrap();
+
+        for (out, label) in [(&mapped, "mmap"), (&heaped, "heap")] {
+            assert_eq!(out.log.rows.len(), fresh.log.rows.len(), "{tag} {label}: rows");
+            for (a, b) in out.log.rows.iter().zip(&fresh.log.rows) {
+                assert_eq!(a.step, b.step, "{tag} {label}");
+                let s = a.step;
+                assert_eq!(a.m.loss.to_bits(), b.m.loss.to_bits(), "{tag} {label} step {s}");
+                assert_eq!(
+                    a.m.grad_norm.to_bits(),
+                    b.m.grad_norm.to_bits(),
+                    "{tag} {label} step {s}"
+                );
+            }
+            let st = out.final_state.as_ref().unwrap();
+            for (a, b) in st.tensors.iter().zip(&fresh_state.tensors) {
+                assert_eq!(bits(a), bits(b), "{tag} {label}: final state diverged");
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// Loading from a container must perform zero f32 re-encodes at startup:
+/// the load itself touches no cache counters, every forward weight site
+/// is pre-seeded with the container operand under the exact runtime key,
+/// and the first step skips at least one encode per site versus a fresh
+/// init — at bitwise-identical results.
+#[test]
+fn container_load_seeds_every_site_and_skips_reencode() {
+    let fmt = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+    let runner = lm_runner();
+    let backend = runner.backend.as_ref();
+    let path = tmp("seed");
+    pack_fresh(&runner, &fmt, 5, &path);
+
+    let mxc = MxcFile::open(&path).unwrap();
+    mxc.verify().unwrap();
+    let sites = backend.pack_sites();
+    assert!(!sites.is_empty());
+    assert_eq!(mxc.meta().sites.len(), sites.len(), "every pack site stored");
+
+    // O(header) + map: the load itself does no cache work at all.
+    let seeded = backend.load_weights(&mxc).unwrap();
+    assert_eq!(seeded.exec.stats(), (0, 0), "load must not touch hit/miss counters");
+    let fresh = backend.init(5, 0.0, 1.0).unwrap();
+    for (a, b) in seeded.tensors.iter().zip(&fresh.tensors) {
+        assert_eq!(bits(a), bits(b), "restored masters must match the packed init");
+    }
+
+    // Every forward weight site is resident: peeking the exact runtime
+    // key returns the container operand, bitwise equal to site_matrix.
+    let probe = backend.load_weights(&mxc).unwrap();
+    for (i, sm) in mxc.meta().sites.iter().enumerate() {
+        let key = (
+            Site::new(sm.tensor, sm.layer),
+            Stage::FwdW,
+            sm.fmt as u8,
+            sm.bump,
+            sm.geom.key_byte(),
+        );
+        let hit = probe
+            .exec
+            .peek(Class::Param, key)
+            .unwrap_or_else(|| panic!("site {i} ({}) not seeded", sm.name));
+        match hit {
+            CachedOp::Packed(p) => {
+                let want = mxc.site_matrix(i);
+                assert_eq!(p.rows, want.rows, "{}", sm.name);
+                assert_eq!(p.cols, want.cols, "{}", sm.name);
+                assert_eq!(p.data, want.data, "seeded operand differs for {}", sm.name);
+            }
+            CachedOp::Dense(_) => panic!("weight site {} seeded as dense", sm.name),
+        }
+    }
+
+    // One identical training step each: bitwise-equal results, and the
+    // seeded run serves every forward weight from the container (one
+    // peek hit per site, at least one fewer encode per site).
+    let corpus = runner.corpus.as_ref().unwrap();
+    let (bt, len) = backend.tokens_shape().unwrap();
+    let mut hyper = vec![0.0f32; hyper_idx::HYPER_LEN];
+    hyper[hyper_idx::LR] = 1e-2;
+    let args = StepArgs {
+        tokens: Some(corpus.batch(5, 0, bt, len)),
+        fmt: fmt.to_vec(),
+        hyper,
+        seed: 5,
+        step: 0,
+    };
+    let (s1, m1) = backend.step(seeded, &args).unwrap();
+    let (s2, m2) = backend.step(fresh, &args).unwrap();
+    assert_eq!(m1.loss.to_bits(), m2.loss.to_bits());
+    assert_eq!(m1.grad_norm.to_bits(), m2.grad_norm.to_bits());
+    for (a, b) in s1.tensors.iter().zip(&s2.tensors) {
+        assert_eq!(bits(a), bits(b), "post-step state diverged");
+    }
+    let (seeded_hits, seeded_misses) = s1.exec.stats();
+    let (_, fresh_misses) = s2.exec.stats();
+    let n_sites = sites.len() as u64;
+    assert!(
+        seeded_hits >= n_sites,
+        "every site must peek-hit its seeded operand ({seeded_hits} hits, {n_sites} sites)"
+    );
+    assert!(
+        seeded_misses + n_sites <= fresh_misses,
+        "seeded run must skip >= one encode per site ({seeded_misses} vs {fresh_misses})"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Hostile containers: byte surgery on a valid file, every rejection typed
+// and raised before any decode of the offending bytes.
+// ---------------------------------------------------------------------------
+
+/// A small valid container (one 32-f32 tensor, one e4m3 site) as raw
+/// file bytes. Data-region layout (offsets relative to the region):
+/// tensor at 0 (128 bytes), codes at 128 (256 bytes), scales at 384
+/// (16 bytes), padded to 448.
+fn valid_container_bytes(tag: &str) -> Vec<u8> {
+    let fmt = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+    let mut rng = Xoshiro256::seed_from(3);
+    let (n, k) = (4, 2 * BLOCK_SIZE);
+    let wt = rng.normal_vec(n * k);
+    let mat = PackedMatrix::encode_geom(&wt, n, k, fmt.w_fwd, fmt.scale_bump, fmt.geom);
+    let tdata: Vec<f32> = (0..32).map(|i| i as f32 * 0.5 - 8.0).collect();
+    let path = tmp(tag);
+    container::write(
+        &path,
+        "hostile_workload",
+        &fmt,
+        &[TensorIn { name: "p_w", shape: vec![32], data: &tdata }],
+        &[SiteIn { name: "w".into(), tensor: 0, layer: 0, mat: &mat }],
+    )
+    .unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    bytes
+}
+
+fn open_bytes(bytes: Vec<u8>) -> Result<MxcFile, MxcError> {
+    MxcFile::from_mapping(Arc::new(Mapping::from_vec(bytes)))
+}
+
+/// Absolute file offset of the data region: `align64(16 + meta_len)`.
+fn data_start(bytes: &[u8]) -> usize {
+    let meta_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    (16 + meta_len).div_ceil(ALIGN) * ALIGN
+}
+
+/// Same-length in-place metadata edit (keeps `meta_len` and the data
+/// region byte-exact, so the mutation under test is the only change).
+fn patch_meta(bytes: &mut [u8], from: &str, to: &str) {
+    assert_eq!(from.len(), to.len(), "patch must preserve length");
+    let hay = String::from_utf8_lossy(bytes).into_owned();
+    let at = hay.find(from).unwrap_or_else(|| panic!("metadata lacks {from:?}"));
+    bytes[at..at + to.len()].copy_from_slice(to.as_bytes());
+}
+
+#[test]
+fn hostile_containers_are_rejected_with_typed_errors() {
+    let good = valid_container_bytes("hostile");
+    let parsed = open_bytes(good.clone()).expect("baseline must open");
+
+    // Bad magic.
+    let mut b = good.clone();
+    b[0] = b'Z';
+    match open_bytes(b) {
+        Err(MxcError::BadMagic(m)) => assert_eq!(m[0], b'Z'),
+        other => panic!("expected BadMagic, got {other:?}"),
+    }
+
+    // Unsupported version.
+    let mut b = good.clone();
+    b[4] = 9;
+    assert!(matches!(open_bytes(b), Err(MxcError::BadVersion(9))));
+
+    // Header truncation.
+    assert!(matches!(open_bytes(good[..10].to_vec()), Err(MxcError::Truncated { .. })));
+
+    // Data-region truncation: cutting ALIGN bytes off the tail removes
+    // the trailing padding (< ALIGN) plus at least one byte of the last
+    // section, so its bound check fails structurally at open.
+    let b = good[..good.len() - ALIGN].to_vec();
+    assert!(matches!(open_bytes(b), Err(MxcError::Truncated { .. })));
+
+    // Misaligned section offset (the site codes live at 128).
+    let mut b = good.clone();
+    patch_meta(&mut b, "\"offset\":128", "\"offset\":129");
+    assert!(matches!(open_bytes(b), Err(MxcError::Misaligned { offset: 129, .. })));
+
+    // Format tag / geometry disagreement: an unsupported block size...
+    let mut b = good.clone();
+    patch_meta(&mut b, "\"block_size\":32", "\"block_size\":33");
+    assert!(matches!(open_bytes(b), Err(MxcError::FmtGeometry(_))));
+
+    // ...and a site element format contradicting the container run fmt.
+    let mut b = good.clone();
+    patch_meta(&mut b, "\"fmt\":\"e4m3\"", "\"fmt\":\"e5m2\"");
+    assert!(matches!(open_bytes(b), Err(MxcError::FmtGeometry(_))));
+
+    // Corrupted site codes: open stays O(header)-clean (checksums are
+    // lazy by design), verify() catches the flip.
+    let codes_at = data_start(&good) + parsed.meta().sites[0].codes.offset;
+    let mut b = good.clone();
+    b[codes_at] ^= 0xff;
+    let f = open_bytes(b).expect("structure is intact");
+    match f.verify() {
+        Err(MxcError::Checksum { section, .. }) => assert!(section.contains("codes"), "{section}"),
+        other => panic!("expected Checksum, got {other:?}"),
+    }
+
+    // Corrupted tensor bytes: caught by the decode-time checksum.
+    let tensor_at = data_start(&good) + parsed.meta().tensors[0].section.offset;
+    let mut b = good.clone();
+    b[tensor_at] ^= 0x01;
+    let f = open_bytes(b).expect("open never reads tensor bytes");
+    assert!(matches!(f.tensor_f32(0), Err(MxcError::Checksum { .. })));
+}
+
+/// A torn `pack` write (crash mid-write) must leave a file that is
+/// rejected at open — the packing path shares `write_atomic`'s fault
+/// point, scoped by destination path.
+#[test]
+fn torn_pack_write_is_detected_at_open() {
+    let fmt = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+    let mut rng = Xoshiro256::seed_from(7);
+    let (n, k) = (4, BLOCK_SIZE);
+    let wt = rng.normal_vec(n * k);
+    let mat = PackedMatrix::encode_geom(&wt, n, k, fmt.w_fwd, fmt.scale_bump, fmt.geom);
+    let site = || SiteIn { name: "w".into(), tensor: 0, layer: 0, mat: &mat };
+    let path = tmp("torn");
+    let scope = path.file_name().unwrap().to_str().unwrap().to_string();
+
+    faults::arm(Fault::new("fsio.write", FaultAction::TornWrite { keep: 40 }).with_scope(&scope));
+    let err = container::write(&path, "torn_workload", &fmt, &[], &[site()]).unwrap_err();
+    faults::clear_scope(&scope);
+    assert!(matches!(err, MxcError::Io(ref m) if m.contains("torn")), "{err}");
+
+    // 40 bytes: valid magic + version, but the metadata is cut short —
+    // typed rejection, no decode.
+    assert!(matches!(MxcFile::open(&path), Err(MxcError::Truncated { .. })));
+
+    // The fault disarmed after one hit: the retry lands a good file.
+    container::write(&path, "torn_workload", &fmt, &[], &[site()]).unwrap();
+    let f = MxcFile::open(&path).unwrap();
+    f.verify().unwrap();
+    assert_eq!(f.meta().workload, "torn_workload");
+    std::fs::remove_file(&path).ok();
+}
