@@ -71,11 +71,12 @@ pub const RULES: &[Rule] = &[
     Rule {
         name: "no-bare-unwrap-in-crash-path",
         summary: "unwrap()/expect() forbidden in coordinator/spool.rs, \
-                  coordinator/worker.rs, util/fsio.rs (crash paths must \
-                  degrade, not abort)",
+                  coordinator/worker.rs, coordinator/guard.rs, util/fsio.rs \
+                  (crash paths must degrade, not abort)",
         applies: |f| {
             f.path_ends("coordinator/spool.rs")
                 || f.path_ends("coordinator/worker.rs")
+                || f.path_ends("coordinator/guard.rs")
                 || f.path_ends("util/fsio.rs")
         },
         check: check_no_bare_unwrap,

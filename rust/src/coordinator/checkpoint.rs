@@ -71,6 +71,24 @@ impl CheckpointStore {
         step: usize,
         state: &B::State,
     ) -> Result<PathBuf> {
+        self.save_with_aux(backend, run, step, state, None)
+    }
+
+    /// [`Self::save`] plus an optional auxiliary JSON document staged and
+    /// committed atomically *with* the checkpoint (as `aux.json`). The
+    /// spool worker stores the serialized detector + guard state here:
+    /// keeping it inside the checkpoint directory (rather than in the
+    /// progress file) ties it to exactly this step, so a resume that
+    /// falls back to an older ring entry automatically gets the matching
+    /// trajectory state.
+    pub fn save_with_aux<B: Backend>(
+        &self,
+        backend: &B,
+        run: &str,
+        step: usize,
+        state: &B::State,
+        aux: Option<&Json>,
+    ) -> Result<PathBuf> {
         let spec = backend.state_spec();
         let tensors = backend.snapshot(state)?;
         if spec.len() != tensors.len() {
@@ -150,6 +168,11 @@ impl CheckpointStore {
             let mut f = std::fs::File::create(tmp.join("meta.json"))?;
             f.write_all(meta_text_for(hash.finish()).as_bytes())?;
             f.sync_all()?;
+            if let Some(doc) = aux {
+                let mut f = std::fs::File::create(tmp.join("aux.json"))?;
+                f.write_all(doc.to_string().as_bytes())?;
+                f.sync_all()?;
+            }
             Ok(())
         })();
         if let Err(e) = staged {
@@ -224,6 +247,27 @@ impl CheckpointStore {
             bail!("checkpoint size mismatch: consumed {off}, file {}", blob.len());
         }
         backend.restore(tensors)
+    }
+
+    /// Read the auxiliary document saved with the checkpoint at
+    /// (run, step), if any (`None` for pre-aux checkpoints or parse
+    /// failures — callers fall back to fresh trajectory state, which is
+    /// safe but may cost detector fidelity on very old checkpoints).
+    pub fn load_aux(&self, run: &str, step: usize) -> Option<Json> {
+        let text = std::fs::read_to_string(self.dir(run, step).join("aux.json")).ok()?;
+        Json::parse(&text).ok()
+    }
+
+    /// Drop every checkpoint of `run` strictly newer than `step`. The
+    /// guard calls this after a rollback: entries past the rollback point
+    /// describe a trajectory that no longer exists, and a crash-resume
+    /// picking one up would diverge from the recovered timeline.
+    pub fn remove_newer(&self, run: &str, step: usize) {
+        for s in self.list(run) {
+            if s > step {
+                std::fs::remove_dir_all(self.dir(run, s)).ok();
+            }
+        }
     }
 
     /// List available checkpoint steps for a run (ascending).
@@ -393,6 +437,25 @@ mod tests {
         let (step, _) = store.load_latest(backend.as_ref(), "ckpt_fault_r").expect("fallback");
         assert_eq!(step, 4);
         faults::clear_scope("ckpt_fault_r");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn aux_document_rides_the_checkpoint_and_remove_newer_prunes() {
+        let dir = std::env::temp_dir().join(format!("mxstab_ckpt_aux_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let store = CheckpointStore::new(&dir, 5);
+        let (_s, backend, state) = trained_state();
+        let aux = Json::obj(vec![("detector", Json::from("stub"))]);
+        store.save_with_aux(backend.as_ref(), "r", 10, &state, Some(&aux)).unwrap();
+        store.save(backend.as_ref(), "r", 20, &state).unwrap();
+        store.save_with_aux(backend.as_ref(), "r", 30, &state, Some(&aux)).unwrap();
+        assert_eq!(store.load_aux("r", 10).unwrap().to_string(), aux.to_string());
+        assert!(store.load_aux("r", 20).is_none(), "aux-less checkpoints read back None");
+        // A rollback to step 10 invalidates steps 20 and 30.
+        store.remove_newer("r", 10);
+        assert_eq!(store.list("r"), vec![10]);
+        assert!(store.validate("r", 10).is_ok());
         std::fs::remove_dir_all(&dir).ok();
     }
 

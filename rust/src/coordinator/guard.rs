@@ -1,0 +1,590 @@
+//! Rollback-and-escalate stabilization guard (self-healing runs).
+//!
+//! The paper's mitigation result (§6.2, Fig. 7) is that an MX instability
+//! can be averted by changing the precision scheme *in situ*. The
+//! coordinator's `Policy` machinery applies such interventions at
+//! pre-scheduled steps; this module closes the loop at runtime: when the
+//! [`super::detect::Detector`] returns [`Verdict::Diverged`] (or, when
+//! configured, a burst of [`Verdict::Spike`]s), the guard
+//!
+//! 1. **rolls back** to the newest pre-divergence snapshot from its
+//!    in-run snapshot ring (periodic [`Backend::clone_state`]),
+//! 2. **escalates**: applies the next rung of a configurable intervention
+//!    ladder (default `skip-ln-quant → bf16-act-fwd → bf16-act → fp32`) —
+//!    never de-escalating, matching the paper's one-way interventions,
+//! 3. **replays** from the rollback step. Steps are pure in
+//!    `(state, seed, step, fmt, hyper)`, so a replay whose escalation did
+//!    *not* change the fmt must reproduce the dropped rows bit for bit —
+//!    the guard asserts this.
+//!
+//! A retry budget and per-rung cooldown bound the work; exhausting either
+//! moves the run to a **quarantined** terminal state (recorded, not a
+//! panic — a thousand-model sweep keeps going). Every verdict, rollback,
+//! escalation, and replay completion lands in a structured flight
+//! recorder ([`GuardEvent`]) serialized as `<run>.guard.jsonl`, so
+//! "which rung saved which run" analysis falls straight out of sweep
+//! output.
+//!
+//! Everything the guard decides is a deterministic function of the
+//! trajectory in *step space* (no wallclock, no randomness), and
+//! [`GuardState`] is serializable: the spool worker persists it with each
+//! checkpoint, so a worker killed mid-recovery re-derives the identical
+//! recovery on resume — the crash-parity contract of `tests/sweep_spool.rs`
+//! extends through rollbacks.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use super::detect::{Detector, Verdict};
+use super::intervene::{Intervention, Policy, DEFAULT_LADDER};
+use super::metrics::Row;
+use crate::formats::spec::Fmt;
+use crate::runtime::{Backend, Metrics};
+use crate::util::json::Json;
+
+/// Guard tuning. Attached to a [`super::run::RunConfig`]; serialized into
+/// spool job files so every worker runs the same guard.
+#[derive(Debug, Clone)]
+pub struct GuardConfig {
+    /// Escalation ladder, cheapest rung first. Rungs are cumulative: the
+    /// fmt after k escalations is the base fmt folded through rungs 0..k.
+    pub ladder: Vec<Intervention>,
+    /// Snapshot cadence in steps. Under the spool worker this is forced
+    /// onto the checkpoint grid so rollback targets are identical across
+    /// crash-resumes.
+    pub snapshot_every: usize,
+    /// Snapshots retained in the in-memory ring.
+    pub ring_keep: usize,
+    /// Max recoveries before the run is quarantined.
+    pub retry_budget: usize,
+    /// Minimum healthy steps after a recovery before a *spike-triggered*
+    /// recovery may fire again (divergence always recovers — replaying a
+    /// diverged trajectory under an unchanged fmt would diverge again).
+    pub cooldown: usize,
+    /// Spikes since the last recovery that trigger a recovery; 0 disables
+    /// spike-triggered recovery (divergence-only, the default).
+    pub spikes_to_recover: usize,
+}
+
+impl Default for GuardConfig {
+    fn default() -> Self {
+        GuardConfig {
+            ladder: DEFAULT_LADDER.to_vec(),
+            snapshot_every: 20,
+            ring_keep: 3,
+            retry_budget: 8,
+            cooldown: 50,
+            spikes_to_recover: 0,
+        }
+    }
+}
+
+impl GuardConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "ladder",
+                Json::Arr(self.ladder.iter().map(|i| Json::from(i.name())).collect()),
+            ),
+            ("snapshot_every", Json::from(self.snapshot_every)),
+            ("ring_keep", Json::from(self.ring_keep)),
+            ("retry_budget", Json::from(self.retry_budget)),
+            ("cooldown", Json::from(self.cooldown)),
+            ("spikes_to_recover", Json::from(self.spikes_to_recover)),
+        ])
+    }
+
+    /// Inverse of [`Self::to_json`]. Unknown rung names are hard errors —
+    /// a job that silently dropped a rung would quarantine early.
+    pub fn from_json(j: &Json) -> Result<GuardConfig> {
+        let mut ladder = Vec::new();
+        for rung in j.req("ladder")?.as_arr().unwrap_or(&[]) {
+            let name = rung.as_str().unwrap_or("");
+            match Intervention::by_name(name) {
+                Some(i) => ladder.push(i),
+                None => bail!("guard config: unknown ladder rung {name:?}"),
+            }
+        }
+        if ladder.is_empty() {
+            bail!("guard config: empty ladder");
+        }
+        let d = GuardConfig::default();
+        let get = |k: &str, dv: usize| j.get(k).and_then(Json::as_usize).unwrap_or(dv);
+        Ok(GuardConfig {
+            ladder,
+            snapshot_every: get("snapshot_every", d.snapshot_every),
+            ring_keep: get("ring_keep", d.ring_keep),
+            retry_budget: get("retry_budget", d.retry_budget),
+            cooldown: get("cooldown", d.cooldown),
+            spikes_to_recover: get("spikes_to_recover", d.spikes_to_recover),
+        })
+    }
+}
+
+/// One completed rollback, recorded in [`super::metrics::RunLog`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Recovery {
+    /// Step whose verdict triggered the rollback.
+    pub at_step: usize,
+    /// Step the trajectory was rewound to.
+    pub to_step: usize,
+    /// Ladder rung applied (wire name).
+    pub rung: String,
+    /// 1-based recovery ordinal (counts against the retry budget).
+    pub retry: usize,
+}
+
+impl Recovery {
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("at_step", Json::from(self.at_step)),
+            ("to_step", Json::from(self.to_step)),
+            ("rung", Json::from(self.rung.clone())),
+            ("retry", Json::from(self.retry)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Recovery> {
+        Some(Recovery {
+            at_step: j.get("at_step")?.as_usize()?,
+            to_step: j.get("to_step")?.as_usize()?,
+            rung: j.get("rung")?.as_str()?.to_string(),
+            retry: j.get("retry")?.as_usize()?,
+        })
+    }
+}
+
+/// One flight-recorder entry. Deliberately wallclock-free: events are
+/// pure functions of the trajectory, so a crash-resumed run regenerates
+/// an identical recorder.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GuardEvent {
+    pub step: usize,
+    /// `spike` | `diverged` | `rollback` | `replay-done` | `quarantine`.
+    pub kind: String,
+    /// Rung applied (rollback events only).
+    pub rung: Option<String>,
+    /// Rollback target (rollback events only).
+    pub to_step: Option<usize>,
+    /// Recovery ordinal (rollback events only).
+    pub retry: Option<usize>,
+}
+
+impl GuardEvent {
+    pub fn json(&self) -> Json {
+        let mut fields = vec![
+            ("step", Json::from(self.step)),
+            ("kind", Json::from(self.kind.clone())),
+        ];
+        if let Some(r) = &self.rung {
+            fields.push(("rung", Json::from(r.clone())));
+        }
+        if let Some(t) = self.to_step {
+            fields.push(("to_step", Json::from(t)));
+        }
+        if let Some(n) = self.retry {
+            fields.push(("retry", Json::from(n)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Option<GuardEvent> {
+        Some(GuardEvent {
+            step: j.get("step")?.as_usize()?,
+            kind: j.get("kind")?.as_str()?.to_string(),
+            rung: j.get("rung").and_then(Json::as_str).map(str::to_string),
+            to_step: j.get("to_step").and_then(Json::as_usize),
+            retry: j.get("retry").and_then(Json::as_usize),
+        })
+    }
+}
+
+/// The serializable part of the guard: everything needed to re-derive an
+/// in-flight recovery after a crash. The snapshot ring itself is *not*
+/// here — under the spool it lives on the checkpoint grid, so the newest
+/// checkpoint doubles as the newest ring entry.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GuardState {
+    /// Rungs fired so far (the next escalation uses `ladder[ladder_pos]`).
+    pub ladder_pos: usize,
+    pub recoveries: Vec<Recovery>,
+    /// Terminal: ladder or budget exhausted at this step.
+    pub quarantined_at: Option<usize>,
+    /// Spikes observed since the last recovery (spike-burst trigger).
+    pub spikes_since: usize,
+    /// While `Some(u)`, steps `<= u` are a replay of a rolled-back
+    /// segment (cleared by the first healthy verdict at `u`).
+    pub replay_until: Option<usize>,
+    /// Flight recorder (chronological).
+    pub events: Vec<GuardEvent>,
+}
+
+impl GuardState {
+    /// Whether `step` lies inside an in-flight rollback replay.
+    pub fn in_replay(&self, step: usize) -> bool {
+        self.replay_until.is_some_and(|u| step <= u)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<usize>| v.map(Json::from).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("ladder_pos", Json::from(self.ladder_pos)),
+            ("quarantined_at", opt(self.quarantined_at)),
+            ("spikes_since", Json::from(self.spikes_since)),
+            ("replay_until", opt(self.replay_until)),
+            (
+                "recoveries",
+                Json::Arr(self.recoveries.iter().map(Recovery::json).collect()),
+            ),
+            ("events", Json::Arr(self.events.iter().map(GuardEvent::json).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<GuardState> {
+        let mut recoveries = Vec::new();
+        for r in j.get("recoveries")?.as_arr()? {
+            recoveries.push(Recovery::from_json(r)?);
+        }
+        let mut events = Vec::new();
+        for e in j.get("events")?.as_arr()? {
+            events.push(GuardEvent::from_json(e)?);
+        }
+        Some(GuardState {
+            ladder_pos: j.get("ladder_pos")?.as_usize()?,
+            recoveries,
+            quarantined_at: j.get("quarantined_at").and_then(Json::as_usize),
+            spikes_since: j.get("spikes_since").and_then(Json::as_usize).unwrap_or(0),
+            replay_until: j.get("replay_until").and_then(Json::as_usize),
+            events,
+        })
+    }
+}
+
+/// One ring snapshot: everything a rollback must restore.
+struct RingEntry<B: Backend> {
+    step: usize,
+    state: B::State,
+    detector: Detector,
+    pending: Vec<Policy>,
+    /// Active fmt at snapshot time (base + policies + rungs `0..ladder_pos`).
+    fmt: Fmt,
+    /// Rungs already folded into `fmt` when the snapshot was taken.
+    ladder_pos: usize,
+    rows_len: usize,
+    interventions_len: usize,
+}
+
+/// What the run loop must do after [`Guard::on_verdict`].
+pub enum GuardOutcome<B: Backend> {
+    Continue,
+    /// Terminal: record, observe once more, stop stepping.
+    Quarantined,
+    Rollback(Rollback<B>),
+}
+
+/// Restoration payload for a rollback (consumed by the run loop).
+pub struct Rollback<B: Backend> {
+    pub to_step: usize,
+    pub state: B::State,
+    pub detector: Detector,
+    pub pending: Vec<Policy>,
+    /// Post-escalation fmt to replay under.
+    pub fmt: Fmt,
+    pub rows_len: usize,
+    pub interventions_len: usize,
+    pub rung: String,
+    /// The escalation did not change the fmt — replay must be bitwise
+    /// identical to the dropped segment (asserted via [`Guard::check_replay`]).
+    pub identity_replay: bool,
+}
+
+fn fmt_bits(f: Fmt) -> Vec<u32> {
+    f.to_vec().iter().map(|v| v.to_bits()).collect()
+}
+
+fn metrics_bits(m: &Metrics) -> [u32; 9] {
+    [
+        m.loss.to_bits(),
+        m.grad_norm.to_bits(),
+        m.ln_frac_first.to_bits(),
+        m.ln_frac_mean.to_bits(),
+        m.act_frac_mean.to_bits(),
+        m.update_norm.to_bits(),
+        m.param_norm.to_bits(),
+        m.eps_ratio.to_bits(),
+        m.cosine.to_bits(),
+    ]
+}
+
+/// The live guard owned by a guarded run loop.
+pub struct Guard<B: Backend> {
+    pub cfg: GuardConfig,
+    pub state: GuardState,
+    ring: VecDeque<RingEntry<B>>,
+    /// Rows dropped by the last rollback, kept only while asserting an
+    /// identity replay.
+    replay_rows: Vec<Row>,
+}
+
+impl<B: Backend> Guard<B> {
+    pub fn new(cfg: GuardConfig, resume: Option<GuardState>) -> Guard<B> {
+        Guard {
+            cfg,
+            state: resume.unwrap_or_default(),
+            ring: VecDeque::new(),
+            replay_rows: Vec::new(),
+        }
+    }
+
+    /// Fold the rungs fired so far into a base fmt (resume path: the
+    /// worker re-derives the effective fmt from `cfg.fmt` + replayed
+    /// policies + this).
+    pub fn apply_rungs(&self, base: Fmt) -> Fmt {
+        self.cfg.ladder[..self.state.ladder_pos.min(self.cfg.ladder.len())]
+            .iter()
+            .fold(base, |f, rung| rung.apply(f))
+    }
+
+    /// 1-based count of active rungs, for row tagging.
+    pub fn active_rung(&self) -> Option<u32> {
+        (self.state.ladder_pos > 0).then_some(self.state.ladder_pos as u32)
+    }
+
+    /// Snapshot at the top of the loop when the step is on the snapshot
+    /// grid (plus a baseline snapshot at the very first step seen, so a
+    /// divergence before the first grid point can still roll back).
+    #[allow(clippy::too_many_arguments)]
+    pub fn maybe_snapshot(
+        &mut self,
+        backend: &B,
+        step: usize,
+        state: &B::State,
+        detector: &Detector,
+        pending: &[Policy],
+        fmt: Fmt,
+        rows_len: usize,
+        interventions_len: usize,
+    ) -> Result<()> {
+        let due = self.ring.is_empty() || step % self.cfg.snapshot_every.max(1) == 0;
+        if !due || self.ring.back().is_some_and(|e| e.step == step) {
+            // Not on the grid, or a rollback just restored exactly this
+            // step (the retained target entry already covers it).
+            return Ok(());
+        }
+        self.ring.push_back(RingEntry {
+            step,
+            state: backend.clone_state(state)?,
+            detector: detector.clone(),
+            pending: pending.to_vec(),
+            fmt,
+            ladder_pos: self.state.ladder_pos,
+            rows_len,
+            interventions_len,
+        });
+        while self.ring.len() > self.cfg.ring_keep.max(1) {
+            self.ring.pop_front();
+        }
+        Ok(())
+    }
+
+    fn push_event(
+        &mut self,
+        step: usize,
+        kind: &str,
+        rung: Option<String>,
+        to_step: Option<usize>,
+        retry: Option<usize>,
+    ) {
+        self.state.events.push(GuardEvent { step, kind: kind.to_string(), rung, to_step, retry });
+    }
+
+    /// Decide what to do about this step's verdict. Must be called
+    /// *after* the step's row (if any) was pushed, and before the run
+    /// loop advances the step.
+    pub fn on_verdict(
+        &mut self,
+        backend: &B,
+        step: usize,
+        verdict: Verdict,
+    ) -> Result<GuardOutcome<B>> {
+        match verdict {
+            Verdict::Healthy => {
+                if self.state.replay_until.is_some_and(|u| step >= u) {
+                    // The replay re-passed the step that diverged without
+                    // incident: recovery complete.
+                    self.state.replay_until = None;
+                    self.replay_rows.clear();
+                    self.push_event(step, "replay-done", None, None, None);
+                }
+                Ok(GuardOutcome::Continue)
+            }
+            Verdict::Spike => {
+                self.state.spikes_since += 1;
+                self.push_event(step, "spike", None, None, None);
+                let burst = self.cfg.spikes_to_recover > 0
+                    && self.state.spikes_since >= self.cfg.spikes_to_recover;
+                if burst && self.cooldown_ok(step) {
+                    self.recover(backend, step)
+                } else {
+                    Ok(GuardOutcome::Continue)
+                }
+            }
+            Verdict::Diverged => {
+                self.push_event(step, "diverged", None, None, None);
+                // No cooldown gate: replaying a diverged trajectory under
+                // an unchanged fmt would diverge again deterministically.
+                self.recover(backend, step)
+            }
+        }
+    }
+
+    fn cooldown_ok(&self, step: usize) -> bool {
+        self.state
+            .recoveries
+            .last()
+            .is_none_or(|r| step >= r.to_step + self.cfg.cooldown)
+    }
+
+    fn recover(&mut self, backend: &B, step: usize) -> Result<GuardOutcome<B>> {
+        let retry = self.state.recoveries.len() + 1;
+        if self.state.ladder_pos >= self.cfg.ladder.len() || retry > self.cfg.retry_budget {
+            self.state.quarantined_at = Some(step);
+            self.push_event(step, "quarantine", None, None, Some(retry - 1));
+            return Ok(GuardOutcome::Quarantined);
+        }
+        let rung = self.cfg.ladder[self.state.ladder_pos];
+        self.state.ladder_pos += 1;
+        let Some(entry) = self.ring.back() else {
+            bail!("stabilization guard: empty snapshot ring at step {step}");
+        };
+        // Re-fold every rung fired since the snapshot (rungs are
+        // cumulative — an entry taken before rung k must gain rungs
+        // k..ladder_pos, not just the newest one).
+        let fmt = self.cfg.ladder[entry.ladder_pos..self.state.ladder_pos]
+            .iter()
+            .fold(entry.fmt, |f, r| r.apply(f));
+        let identity_replay = fmt_bits(fmt) == fmt_bits(entry.fmt);
+        let rb = Rollback {
+            to_step: entry.step,
+            state: backend.clone_state(&entry.state)?,
+            detector: entry.detector.clone(),
+            pending: entry.pending.clone(),
+            fmt,
+            rows_len: entry.rows_len,
+            interventions_len: entry.interventions_len,
+            rung: rung.name().to_string(),
+            identity_replay,
+        };
+        self.state.recoveries.push(Recovery {
+            at_step: step,
+            to_step: rb.to_step,
+            rung: rb.rung.clone(),
+            retry,
+        });
+        self.state.spikes_since = 0;
+        self.state.replay_until = Some(step.max(self.state.replay_until.unwrap_or(0)));
+        self.push_event(step, "rollback", Some(rb.rung.clone()), Some(rb.to_step), Some(retry));
+        Ok(GuardOutcome::Rollback(rb))
+    }
+
+    /// Arm the identity-replay assertion with the rows the rollback
+    /// dropped (no-op unless the rollback reported `identity_replay`).
+    pub fn arm_replay_check(&mut self, identity: bool, dropped: Vec<Row>) {
+        self.replay_rows = if identity { dropped } else { Vec::new() };
+    }
+
+    /// Replay-bitwise contract: a replayed row at a step the dropped
+    /// segment also logged must carry bit-identical metrics when the fmt
+    /// did not change. (Rung tags are excluded — the replay legitimately
+    /// carries a higher ladder position.)
+    pub fn check_replay(&self, row: &Row) -> Result<()> {
+        if let Some(expect) = self.replay_rows.iter().find(|r| r.step == row.step) {
+            if metrics_bits(&row.m) != metrics_bits(&expect.m) {
+                bail!(
+                    "stabilization guard: replay under an unchanged fmt produced \
+                     different metrics at step {} — the step function is not pure \
+                     in (state, seed, step, fmt, hyper)",
+                    row.step
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Consume the guard at end of run.
+    pub fn into_state(self) -> GuardState {
+        self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::spec::FormatId;
+
+    #[test]
+    fn guard_config_roundtrips_and_rejects_bad_rungs() {
+        let cfg = GuardConfig { retry_budget: 3, ..GuardConfig::default() };
+        let j = cfg.to_json();
+        let back = GuardConfig::from_json(&j).unwrap();
+        assert_eq!(back.ladder, cfg.ladder);
+        assert_eq!(back.retry_budget, 3);
+        assert_eq!(back.to_json().to_string(), j.to_string());
+        let bad = Json::parse(r#"{"ladder":["skip-ln-quant","nonsense"]}"#).unwrap();
+        assert!(GuardConfig::from_json(&bad).is_err());
+        let empty = Json::parse(r#"{"ladder":[]}"#).unwrap();
+        assert!(GuardConfig::from_json(&empty).is_err());
+    }
+
+    #[test]
+    fn guard_state_roundtrips_through_json() {
+        let st = GuardState {
+            ladder_pos: 2,
+            recoveries: vec![Recovery {
+                at_step: 41,
+                to_step: 40,
+                rung: "skip-ln-quant".into(),
+                retry: 1,
+            }],
+            quarantined_at: None,
+            spikes_since: 1,
+            replay_until: Some(41),
+            events: vec![
+                GuardEvent {
+                    step: 41,
+                    kind: "diverged".into(),
+                    rung: None,
+                    to_step: None,
+                    retry: None,
+                },
+                GuardEvent {
+                    step: 41,
+                    kind: "rollback".into(),
+                    rung: Some("skip-ln-quant".into()),
+                    to_step: Some(40),
+                    retry: Some(1),
+                },
+            ],
+        };
+        let j = st.to_json();
+        let back = GuardState::from_json(&j).expect("roundtrip");
+        assert_eq!(back, st);
+        assert_eq!(back.to_json().to_string(), j.to_string());
+        assert!(st.in_replay(40) && st.in_replay(41) && !st.in_replay(42));
+    }
+
+    #[test]
+    fn rungs_fold_cumulatively() {
+        let cfg = GuardConfig::default();
+        let mut g: Guard<crate::runtime::native::NativeModel> =
+            Guard::new(cfg, Some(GuardState { ladder_pos: 2, ..Default::default() }));
+        let base = Fmt::full(FormatId::E4M3, FormatId::E4M3);
+        let f = g.apply_rungs(base);
+        // skip-ln-quant then bf16-act-fwd: LN unquantized AND fwd acts bf16.
+        assert!(!f.quant_ln);
+        assert_eq!(f.a_fwd, FormatId::Bf16);
+        g.state.ladder_pos = 0;
+        assert_eq!(fmt_bits(g.apply_rungs(base)), fmt_bits(base));
+    }
+}

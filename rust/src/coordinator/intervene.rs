@@ -39,6 +39,12 @@ impl Intervention {
         Intervention::Bf16Act,
     ];
 
+    /// Look up an intervention by its wire name (the `--intervene` /
+    /// `--guard-ladder` vocabulary, also used in job and log JSON).
+    pub fn by_name(name: &str) -> Option<Intervention> {
+        Intervention::ALL.iter().copied().find(|i| i.name() == name)
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             Intervention::ToFp32 => "fp32",
@@ -78,6 +84,40 @@ impl Intervention {
             },
         }
     }
+}
+
+/// The stabilization guard's default escalation ladder: cheapest rung
+/// first (the paper's Fig. 7 finding that LN-quant is the dominant
+/// instability source), full-precision fallback last. The guard never
+/// de-escalates — interventions are one-way, as in the paper.
+pub const DEFAULT_LADDER: [Intervention; 4] = [
+    Intervention::SkipLnQuant,
+    Intervention::Bf16ActFwdOnly,
+    Intervention::Bf16Act,
+    Intervention::ToFp32,
+];
+
+/// Parse a `--guard-ladder` spec: comma-separated intervention names in
+/// escalation order, e.g. `"skip-ln-quant,bf16-act,fp32"`. Unknown names
+/// are hard errors listing the full vocabulary.
+pub fn parse_ladder(spec: &str) -> Result<Vec<Intervention>, String> {
+    let mut out = Vec::new();
+    for name in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        match Intervention::by_name(name) {
+            Some(i) => out.push(i),
+            None => {
+                let known: Vec<&str> = Intervention::ALL.iter().map(|i| i.name()).collect();
+                return Err(format!(
+                    "unknown intervention {name:?} in ladder (known: {})",
+                    known.join(", ")
+                ));
+            }
+        }
+    }
+    if out.is_empty() {
+        return Err("empty guard ladder (give at least one rung)".to_string());
+    }
+    Ok(out)
 }
 
 /// When to fire an intervention.
@@ -150,6 +190,32 @@ mod tests {
         let f = Intervention::BumpExponent.apply(base);
         assert!(f.scale_bump);
         assert_eq!(f.w_fwd, base.w_fwd);
+    }
+
+    #[test]
+    fn by_name_covers_the_full_menu() {
+        for i in Intervention::ALL {
+            assert_eq!(Intervention::by_name(i.name()), Some(i));
+        }
+        assert_eq!(Intervention::by_name("warp-core-eject"), None);
+    }
+
+    #[test]
+    fn ladder_parses_in_order_and_rejects_unknowns() {
+        let l = parse_ladder("skip-ln-quant, bf16-act ,fp32").expect("valid ladder");
+        assert_eq!(
+            l,
+            vec![Intervention::SkipLnQuant, Intervention::Bf16Act, Intervention::ToFp32]
+        );
+        let e = parse_ladder("skip-ln-quant,nope").unwrap_err();
+        assert!(e.contains("nope") && e.contains("skip-ln-quant"), "{e}");
+        assert!(parse_ladder("").is_err(), "empty ladder must be rejected");
+        // Every default rung clears LN quantization — the paper's dominant
+        // instability source is cured by the very first escalation.
+        for rung in DEFAULT_LADDER {
+            let f = rung.apply(Fmt::full(FormatId::E4M3, FormatId::E4M3));
+            assert!(!f.quant_ln, "{} must clear quant_ln", rung.name());
+        }
     }
 
     #[test]

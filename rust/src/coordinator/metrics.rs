@@ -19,6 +19,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
+use super::guard::{GuardEvent, Recovery};
 use crate::runtime::Metrics;
 use crate::util::fsio;
 use crate::util::json::Json;
@@ -28,6 +29,11 @@ use crate::util::json::Json;
 pub struct Row {
     pub step: usize,
     pub m: Metrics,
+    /// Stabilization-guard ladder position active when the row was
+    /// logged (1-based rung count; `None` = no rung active). Serialized
+    /// only when `Some`, so unguarded logs — including every pre-guard
+    /// (v0) log — keep their exact historical byte layout.
+    pub rung: Option<u32>,
 }
 
 /// Full metric history for one training run.
@@ -41,6 +47,13 @@ pub struct RunLog {
     pub interventions: Vec<(usize, String)>,
     pub spikes: usize,
     pub diverged_at: Option<usize>,
+    /// Guard rollbacks performed during the run (empty when unguarded).
+    pub recoveries: Vec<Recovery>,
+    /// Guard flight-recorder events (spike/diverged/rollback/replay-done/
+    /// quarantine), saved as `<name>.guard.jsonl` beside the row log.
+    pub guard_events: Vec<GuardEvent>,
+    /// The guard exhausted its ladder/budget and stopped the run.
+    pub quarantined: bool,
     pub wallclock_s: f64,
 }
 
@@ -50,7 +63,7 @@ impl RunLog {
     }
 
     pub fn push(&mut self, step: usize, m: Metrics) {
-        self.rows.push(Row { step, m });
+        self.rows.push(Row { step, m, rung: None });
     }
 
     pub fn losses(&self) -> Vec<f64> {
@@ -87,7 +100,7 @@ impl RunLog {
     }
 
     pub fn summary_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::from(self.name.clone())),
             (
                 "meta",
@@ -121,7 +134,18 @@ impl RunLog {
                 ),
             ),
             ("wallclock_s", Json::from(self.wallclock_s)),
-        ])
+        ];
+        // Guard fields appear only when the guard actually acted, so
+        // unguarded (and all pre-guard v0) summaries keep their exact
+        // historical shape.
+        if !self.recoveries.is_empty() || self.quarantined {
+            fields.push((
+                "recoveries",
+                Json::Arr(self.recoveries.iter().map(Recovery::json).collect()),
+            ));
+            fields.push(("quarantined", Json::from(self.quarantined)));
+        }
+        Json::obj(fields)
     }
 
     /// One JSONL row. Non-finite metrics become `null` so the line stays
@@ -130,7 +154,7 @@ impl RunLog {
     /// serialize is byte-stable.
     fn row_json(r: &Row) -> Json {
         let num = |v: f32| if v.is_finite() { Json::from(v as f64) } else { Json::Null };
-        Json::obj(vec![
+        let mut fields = vec![
             ("step", Json::from(r.step)),
             ("loss", num(r.m.loss)),
             ("grad_norm", num(r.m.grad_norm)),
@@ -141,7 +165,11 @@ impl RunLog {
             ("param_norm", num(r.m.param_norm)),
             ("eps_ratio", num(r.m.eps_ratio)),
             ("cosine", num(r.m.cosine)),
-        ])
+        ];
+        if let Some(rung) = r.rung {
+            fields.push(("rung", Json::from(rung as usize)));
+        }
+        Json::obj(fields)
     }
 
     /// Serialize rows to JSONL text. The single row codec: `save`, the
@@ -169,6 +197,7 @@ impl RunLog {
             let g = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN) as f32;
             rows.push(Row {
                 step: j.get("step").and_then(Json::as_usize).unwrap_or(0),
+                rung: j.get("rung").and_then(Json::as_usize).map(|v| v as u32),
                 m: Metrics {
                     loss: g("loss"),
                     grad_norm: g("grad_norm"),
@@ -185,8 +214,37 @@ impl RunLog {
         Ok(rows)
     }
 
+    /// Serialize guard flight-recorder events to JSONL (one event per
+    /// line, deterministic in step space — no wallclock). The single
+    /// event codec: `save` and the spool's `done/` publication both call
+    /// this, so a crash-resumed guarded job's recorder is byte-identical
+    /// to an uninterrupted one's.
+    pub fn guard_jsonl(events: &[GuardEvent]) -> String {
+        let mut out = String::new();
+        for e in events {
+            out.push_str(&e.json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse flight-recorder JSONL (inverse of [`Self::guard_jsonl`]).
+    pub fn guard_from_jsonl(text: &str) -> Result<Vec<GuardEvent>> {
+        let mut events = Vec::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let j = Json::parse(line)?;
+            events.push(
+                GuardEvent::from_json(&j)
+                    .ok_or_else(|| anyhow::anyhow!("malformed guard event: {line}"))?,
+            );
+        }
+        Ok(events)
+    }
+
     /// Write `<dir>/<name>.jsonl` (one row per step) and
-    /// `<dir>/<name>.summary.json`, each via atomic temp + rename.
+    /// `<dir>/<name>.summary.json`, each via atomic temp + rename; a
+    /// guarded run with recorder events also writes
+    /// `<dir>/<name>.guard.jsonl`.
     pub fn save(&self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
         fsio::write_atomic(
@@ -199,6 +257,13 @@ impl RunLog {
             self.summary_json().to_string().as_bytes(),
             "runlog.summary",
         )?;
+        if !self.guard_events.is_empty() {
+            fsio::write_atomic(
+                &dir.join(format!("{}.guard.jsonl", self.name)),
+                Self::guard_jsonl(&self.guard_events).as_bytes(),
+                "runlog.guard",
+            )?;
+        }
         Ok(())
     }
 
@@ -211,6 +276,13 @@ impl RunLog {
             let j = Json::parse(&stext)?;
             log.spikes = j.get("spikes").and_then(Json::as_usize).unwrap_or(0);
             log.diverged_at = j.get("diverged_at").and_then(Json::as_usize);
+            log.quarantined = j.get("quarantined").and_then(Json::as_bool).unwrap_or(false);
+            if let Some(recs) = j.get("recoveries").and_then(Json::as_arr) {
+                log.recoveries = recs.iter().filter_map(Recovery::from_json).collect();
+            }
+        }
+        if let Ok(gtext) = std::fs::read_to_string(dir.join(format!("{name}.guard.jsonl"))) {
+            log.guard_events = Self::guard_from_jsonl(&gtext)?;
         }
         Ok(log)
     }
@@ -248,11 +320,11 @@ mod tests {
         for t in 0..8 {
             let mut m = dummy(0.1 + 1.0 / (t + 1) as f32);
             m.eps_ratio = 1.0e-7 * (t as f32 + 0.5);
-            rows.push(Row { step: t, m });
+            rows.push(Row { step: t, m, rung: None });
         }
         // Non-finite metrics must serialize (as null) and restore as NaN.
-        rows.push(Row { step: 8, m: dummy(f32::NAN) });
-        rows.push(Row { step: 9, m: dummy(f32::INFINITY) });
+        rows.push(Row { step: 8, m: dummy(f32::NAN), rung: None });
+        rows.push(Row { step: 9, m: dummy(f32::INFINITY), rung: None });
         let text = RunLog::rows_jsonl(&rows);
         assert!(text.contains("\"loss\":null"), "non-finite loss -> null: {text}");
         let back = RunLog::rows_from_jsonl(&text).unwrap();
@@ -261,6 +333,23 @@ mod tests {
         // serialize -> parse -> serialize is byte-identical (crash-resume
         // parity depends on this).
         assert_eq!(RunLog::rows_jsonl(&back), text);
+    }
+
+    #[test]
+    fn rung_field_is_versioned_and_byte_stable() {
+        // v0 lines (no "rung" key) decode to rung: None and re-serialize
+        // byte-identically — old logs keep their exact layout.
+        let v0 = RunLog::rows_jsonl(&[Row { step: 3, m: dummy(0.25), rung: None }]);
+        assert!(!v0.contains("rung"), "unguarded rows must not grow a rung key: {v0}");
+        let back = RunLog::rows_from_jsonl(&v0).unwrap();
+        assert_eq!(back[0].rung, None);
+        assert_eq!(RunLog::rows_jsonl(&back), v0);
+        // Guarded rows carry the rung and round-trip byte-stably too.
+        let v1 = RunLog::rows_jsonl(&[Row { step: 4, m: dummy(0.25), rung: Some(2) }]);
+        assert!(v1.contains("\"rung\":2"), "{v1}");
+        let back = RunLog::rows_from_jsonl(&v1).unwrap();
+        assert_eq!(back[0].rung, Some(2));
+        assert_eq!(RunLog::rows_jsonl(&back), v1);
     }
 
     #[test]

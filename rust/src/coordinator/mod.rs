@@ -9,6 +9,9 @@
 //!   divergence and grad-norm-growth tracking)
 //! * [`intervene`] — the Fig. 7 in-situ intervention engine (fmt rewrites
 //!   between steps; no recompilation)
+//! * [`guard`] — self-healing stabilization guard: rollback to an in-run
+//!   snapshot and escalate up an intervention ladder on divergence, with
+//!   serializable recovery state and a structured flight recorder
 //! * [`metrics`] — metric capture, JSONL persistence
 //! * [`checkpoint`] — state persistence to a bounded per-run ring
 //! * [`spool`] — filesystem work queue (lease/heartbeat/exactly-once
@@ -23,6 +26,7 @@
 
 pub mod checkpoint;
 pub mod detect;
+pub mod guard;
 pub mod intervene;
 pub mod metrics;
 pub mod run;
@@ -32,9 +36,12 @@ pub mod worker;
 
 pub use checkpoint::CheckpointStore;
 pub use detect::{Detector, DetectorConfig, Verdict};
+pub use guard::{Guard, GuardConfig, GuardEvent, GuardState, Recovery};
 pub use intervene::{Intervention, Policy, Trigger};
 pub use metrics::RunLog;
-pub use run::{LrSchedule, Optimizer, RunConfig, RunOutcome, Runner};
-pub use spool::{Lease, LeaseInfo, Progress, Spool, SpoolStatus};
+pub use run::{
+    LrSchedule, ObsEvent, Observed, Optimizer, Resume, RunConfig, RunOutcome, Runner,
+};
+pub use spool::{GuardHealth, Lease, LeaseInfo, Progress, Spool, SpoolStatus};
 pub use sweep::{Job, Sweeper};
 pub use worker::{run_worker, WorkerConfig, WorkerReport};

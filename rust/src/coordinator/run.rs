@@ -15,11 +15,13 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::detect::{Detector, DetectorConfig, Verdict};
+use super::guard::{Guard, GuardConfig, GuardOutcome, GuardState};
 use super::intervene::Policy;
 use super::metrics::RunLog;
 use crate::data::Corpus;
 use crate::formats::spec::{hyper_idx, Fmt};
 use crate::runtime::{Backend, StepArgs};
+use crate::util::faults::{self, FaultAction};
 
 /// Learning-rate schedule (paper Appendix D: linear warmup + cosine decay).
 #[derive(Debug, Clone, Copy)]
@@ -78,6 +80,9 @@ pub struct RunConfig {
     /// intervention studies keep running to show the divergence shape).
     pub stop_on_divergence: bool,
     pub detector: DetectorConfig,
+    /// Self-healing: roll back + escalate on divergence instead of
+    /// stopping or burning steps to NaN (`--auto-stabilize`).
+    pub guard: Option<GuardConfig>,
     /// Optional `.mxc` container path: start the run from its weights
     /// (zero-copy mmap load + pre-packed operand seeding) instead of a
     /// fresh `init`. The trajectory is bitwise identical either way when
@@ -102,6 +107,7 @@ impl RunConfig {
             policies: vec![],
             stop_on_divergence: false,
             detector: DetectorConfig::default(),
+            guard: None,
             weights: None,
         }
     }
@@ -123,10 +129,48 @@ impl RunConfig {
 }
 
 /// Outcome of [`Runner::run`]: the metric log plus the final model state
-/// (kept so callers can eval / continue / snapshot).
+/// (kept so callers can eval / continue / snapshot) and the final
+/// detector (kept so segmented runs — [`Runner::run_with_snapshot`], the
+/// spool's crash-resume — score later steps exactly as one continuous
+/// run would).
 pub struct RunOutcome<B: Backend> {
     pub log: RunLog,
     pub final_state: Option<B::State>,
+    pub detector: Detector,
+}
+
+/// What the observer is being shown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObsEvent {
+    /// A training step just completed; `step` is the step index and the
+    /// state is post-step.
+    Stepped,
+    /// The stabilization guard rolled the trajectory back; `step` (and
+    /// `to_step`) name the restored step and the state is the restored
+    /// pre-divergence state. Rows/interventions past the rollback point
+    /// have been dropped from the log.
+    RolledBack { to_step: usize },
+}
+
+/// Everything the per-step observer can see. The detector and guard
+/// references let the spool worker persist *resumable* trajectory state
+/// with each checkpoint.
+pub struct Observed<'a, B: Backend> {
+    pub step: usize,
+    pub state: &'a B::State,
+    pub log: &'a RunLog,
+    pub detector: &'a Detector,
+    pub guard: Option<&'a GuardState>,
+    pub event: ObsEvent,
+}
+
+/// Mid-trajectory restart payload for [`Runner::run_resumed`]: the
+/// detector/guard state saved alongside the checkpoint being resumed
+/// from. `None` fields start fresh (pre-guard checkpoints).
+#[derive(Default)]
+pub struct Resume {
+    pub detector: Option<Detector>,
+    pub guard: Option<GuardState>,
 }
 
 /// Executes one training run over a loaded backend.
@@ -167,21 +211,35 @@ impl<B: Backend> Runner<B> {
         state: B::State,
         start_step: usize,
     ) -> Result<RunOutcome<B>> {
-        self.run_observed(cfg, state, start_step, &mut |_, _, _| Ok(()))
+        self.run_observed(cfg, state, start_step, &mut |_| Ok(()))
     }
 
     /// [`Self::run_from`] with a per-step observer hook. After each step
-    /// the observer sees `(step, post-step state, log so far)`; the spool
-    /// worker uses it to checkpoint and heartbeat mid-run (and the fault
-    /// layer uses it to kill a worker at a chosen step). The observer runs
-    /// on the *post-step* state, so its step index is the step just
-    /// completed; an `Err` from the observer aborts the run.
+    /// the observer sees an [`Observed`] view (step index, post-step
+    /// state, log/detector/guard so far); the spool worker uses it to
+    /// checkpoint and heartbeat mid-run (and the fault layer uses it to
+    /// kill a worker at a chosen step). An `Err` from the observer aborts
+    /// the run.
     pub fn run_observed(
+        &self,
+        cfg: &RunConfig,
+        state: B::State,
+        start_step: usize,
+        observe: &mut dyn FnMut(Observed<'_, B>) -> Result<()>,
+    ) -> Result<RunOutcome<B>> {
+        self.run_resumed(cfg, state, start_step, Resume::default(), observe)
+    }
+
+    /// [`Self::run_observed`] continuing from mid-trajectory detector and
+    /// guard state (crash-resume). This is *the* training loop; every
+    /// other entry point delegates here.
+    pub fn run_resumed(
         &self,
         cfg: &RunConfig,
         mut state: B::State,
         start_step: usize,
-        observe: &mut dyn FnMut(usize, &B::State, &RunLog) -> Result<()>,
+        resume: Resume,
+        observe: &mut dyn FnMut(Observed<'_, B>) -> Result<()>,
     ) -> Result<RunOutcome<B>> {
         let mut log = RunLog::new(&cfg.name);
         log.meta = vec![
@@ -190,14 +248,37 @@ impl<B: Backend> Runner<B> {
             ("steps".into(), cfg.steps.to_string()),
             ("seed".into(), cfg.seed.to_string()),
         ];
-        let mut detector = Detector::new(cfg.detector.clone());
+        let mut detector =
+            resume.detector.unwrap_or_else(|| Detector::new(cfg.detector.clone()));
+        let mut guard: Option<Guard<B>> =
+            cfg.guard.clone().map(|gc| Guard::new(gc, resume.guard));
         let mut fmt = cfg.fmt;
+        if let Some(g) = &guard {
+            // Rungs fired before the resume point re-apply on top of the
+            // base fmt (after the worker's policy replay).
+            fmt = g.apply_rungs(fmt);
+        }
         let mut pending: Vec<Policy> = cfg.policies.clone();
         // analyze: allow(no-wallclock, "wallclock_s is summary telemetry only; it never enters rows or the trajectory")
         let t0 = Instant::now();
 
         let tokens_shape = self.backend.tokens_shape();
-        for step in start_step..cfg.steps {
+        let mut step = start_step;
+        while step < cfg.steps {
+            // Snapshot *before* the step so a rollback target precedes
+            // any divergence detected at or after it.
+            if let Some(g) = &mut guard {
+                g.maybe_snapshot(
+                    self.backend.as_ref(),
+                    step,
+                    &state,
+                    &detector,
+                    &pending,
+                    fmt,
+                    log.rows.len(),
+                    log.interventions.len(),
+                )?;
+            }
             // Interventions fire *before* the step, matching the paper's
             // "intervene at step s" semantics.
             let growth = detector.grad_growth();
@@ -228,31 +309,112 @@ impl<B: Backend> Runner<B> {
                 seed: cfg.seed,
                 step: step as i32,
             };
-            let (next, met) = if cfg.paired && self.backend.has_paired() {
+            let (next, mut met) = if cfg.paired && self.backend.has_paired() {
                 self.backend.paired_step(state, &args)?
             } else {
                 self.backend.step(state, &args)?
             };
             state = next;
 
+            // Deterministic instability injection (tests/CI): a
+            // "metrics.loss" fault models an LN-quant-sourced blowup, so
+            // it only fires while LN quantization is active — any ladder
+            // rung that clears `quant_ln` cures it, like the paper's
+            // interventions cure the real thing. Gating on the fmt (not
+            // on hit counts) keeps the injection a pure function of
+            // `(run, step, fmt)`, which rollback-replay and crash-resume
+            // both rely on.
+            if fmt.quant_ln {
+                match faults::check("metrics.loss", &cfg.name, step) {
+                    Some(FaultAction::NanLoss) => {
+                        met.loss = f32::NAN;
+                        met.grad_norm = f32::NAN;
+                    }
+                    Some(FaultAction::SpikeLoss { factor }) => {
+                        met.loss = (met.loss as f64 * factor) as f32;
+                        met.grad_norm = (met.grad_norm as f64 * factor) as f32;
+                    }
+                    _ => {}
+                }
+            }
+
             let verdict = detector.push(met.loss as f64, met.grad_norm as f64);
             if step % cfg.log_every == 0 || verdict != Verdict::Healthy {
-                log.push(step, met);
+                let rung = guard.as_ref().and_then(Guard::active_rung);
+                log.rows.push(super::metrics::Row { step, m: met, rung });
             }
-            observe(step, &state, &log)?;
+
+            if let Some(g) = &mut guard {
+                if let Some(row) = log.rows.last() {
+                    if row.step == step {
+                        g.check_replay(row)?;
+                    }
+                }
+                match g.on_verdict(self.backend.as_ref(), step, verdict)? {
+                    GuardOutcome::Continue => {}
+                    GuardOutcome::Quarantined => {
+                        observe(Observed {
+                            step,
+                            state: &state,
+                            log: &log,
+                            detector: &detector,
+                            guard: Some(&g.state),
+                            event: ObsEvent::Stepped,
+                        })?;
+                        break;
+                    }
+                    GuardOutcome::Rollback(rb) => {
+                        g.arm_replay_check(
+                            rb.identity_replay,
+                            log.rows[rb.rows_len..].to_vec(),
+                        );
+                        log.rows.truncate(rb.rows_len);
+                        log.interventions.truncate(rb.interventions_len);
+                        state = rb.state;
+                        detector = rb.detector;
+                        pending = rb.pending;
+                        fmt = rb.fmt;
+                        observe(Observed {
+                            step: rb.to_step,
+                            state: &state,
+                            log: &log,
+                            detector: &detector,
+                            guard: Some(&g.state),
+                            event: ObsEvent::RolledBack { to_step: rb.to_step },
+                        })?;
+                        step = rb.to_step;
+                        continue;
+                    }
+                }
+            }
+
+            observe(Observed {
+                step,
+                state: &state,
+                log: &log,
+                detector: &detector,
+                guard: guard.as_ref().map(|g| &g.state),
+                event: ObsEvent::Stepped,
+            })?;
+            // Unguarded runs stop here if asked; non-finite loss already
+            // yields `Verdict::Diverged` (a guarded run never reaches
+            // this with a Diverged verdict — it rolled back or broke).
             if verdict == Verdict::Diverged && cfg.stop_on_divergence {
                 break;
             }
-            // Hard stop on NaN state — no point burning cycles.
-            if !met.loss.is_finite() && cfg.stop_on_divergence {
-                break;
-            }
+            step += 1;
         }
 
         log.spikes = detector.spikes;
         log.diverged_at = detector.diverged_at;
+        if let Some(g) = guard {
+            let gs = g.into_state();
+            log.quarantined = gs.quarantined_at.is_some();
+            log.recoveries = gs.recoveries;
+            log.guard_events = gs.events;
+        }
         log.wallclock_s = t0.elapsed().as_secs_f64();
-        Ok(RunOutcome { log, final_state: Some(state) })
+        Ok(RunOutcome { log, final_state: Some(state), detector })
     }
 
     /// Train `steps`, snapshot the state at `snapshot_step`, return both the
@@ -269,18 +431,21 @@ impl<B: Backend> Runner<B> {
         pre.steps = snapshot_step;
         pre.name = format!("{}@pre", cfg.name);
         let out = self.run_from(&pre, state, 0)?;
-        state = out.final_state.unwrap();
+        state = out
+            .final_state
+            .ok_or_else(|| anyhow::anyhow!("pre-segment returned no state"))?;
         let snapshot = self.backend.clone_state(&state)?;
-        // Continue the baseline to the end.
-        let mut post = cfg.clone();
-        post.name = cfg.name.clone();
-        let mut full = self.run_from(&post, state, snapshot_step)?;
-        // Merge logs: pre + post.
+        // Continue the baseline to the end, *threading the detector*: a
+        // fresh detector would have `prev_loss = None` at the boundary,
+        // silently missing a ≥κ× spike exactly at `snapshot_step`.
+        let post = cfg.clone();
+        let resume = Resume { detector: Some(out.detector), guard: None };
+        let mut full = self.run_resumed(&post, state, snapshot_step, resume, &mut |_| Ok(()))?;
+        // Merge logs: pre + post. Spike/divergence counters are already
+        // cumulative via the threaded detector.
         let mut rows = out.log.rows;
         rows.extend(full.log.rows.iter().copied());
         full.log.rows = rows;
-        full.log.spikes += out.log.spikes;
-        full.log.diverged_at = out.log.diverged_at.or(full.log.diverged_at);
         Ok((full, snapshot))
     }
 }

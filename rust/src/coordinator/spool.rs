@@ -7,11 +7,13 @@
 //! pending/<id>.json            queued job descriptions (full RunConfig)
 //! leased/<id>#<token>.json     jobs owned by a worker (token fences the
 //! leased/<id>#<token>.hb         lease; heartbeat {worker, step, at_ms})
-//! done/<id>.jsonl              final metric rows (+ <id>.summary.json)
+//! done/<id>.jsonl              final metric rows (+ <id>.summary.json,
+//!                                + <id>.guard.jsonl for guarded runs)
 //! failed/<id>.jsonl            error-marked results (+ summary)
 //! ckpt/<id>/step*/             bounded checkpoint ring per job
 //! logs/<id>.rows.jsonl         partial rows at the last checkpoint
-//! logs/<id>.resume.json        {next_step, interventions} at that point
+//! logs/<id>.resume.json        {next_step, interventions[, guard]} at
+//!                                that point
 //! tmp/                         staging for exactly-once commits
 //! ```
 //!
@@ -41,6 +43,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::checkpoint::CheckpointStore;
 use super::detect::DetectorConfig;
+use super::guard::GuardConfig;
 use super::intervene::{Intervention, Policy, Trigger};
 use super::metrics::{Row, RunLog};
 use super::run::{LrSchedule, Optimizer, RunConfig};
@@ -84,6 +87,15 @@ pub struct LeaseInfo {
     pub stale: bool,
 }
 
+/// Stabilization-guard health of one job, for `sweep-status`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct GuardHealth {
+    /// Rollback+escalate recoveries performed so far.
+    pub recoveries: usize,
+    /// Terminal: the guard exhausted its ladder/budget.
+    pub quarantined: bool,
+}
+
 /// Snapshot of the spool's per-state contents.
 #[derive(Debug, Clone, Default)]
 pub struct SpoolStatus {
@@ -91,6 +103,10 @@ pub struct SpoolStatus {
     pub leased: Vec<LeaseInfo>,
     pub done: Vec<String>,
     pub failed: Vec<String>,
+    /// Guard health per job id (only jobs whose guard acted appear),
+    /// aggregated from `done/`/`failed/` summaries and, for in-flight
+    /// jobs, the progress files.
+    pub guard: std::collections::BTreeMap<String, GuardHealth>,
 }
 
 /// Partial results persisted at each checkpoint, used to resume.
@@ -99,6 +115,10 @@ pub struct Progress {
     pub next_step: usize,
     pub rows: Vec<Row>,
     pub interventions: Vec<(usize, String)>,
+    /// Serialized [`crate::coordinator::GuardState`] at the progress
+    /// point (status display; the authoritative resume copy rides the
+    /// checkpoint's `aux.json`).
+    pub guard: Option<Json>,
 }
 
 impl Spool {
@@ -236,6 +256,13 @@ impl Spool {
                 log.summary_json().to_string().as_bytes(),
                 "spool.summary",
             )?;
+            if !log.guard_events.is_empty() {
+                fsio::write_atomic(
+                    &self.sub("done").join(format!("{}.guard.jsonl", lease.id)),
+                    RunLog::guard_jsonl(&log.guard_events).as_bytes(),
+                    "spool.guard",
+                )?;
+            }
             self.retire_scratch(&lease.id);
         }
         std::fs::remove_file(&lease.path).ok();
@@ -329,7 +356,60 @@ impl Spool {
             leased,
             done: ids("done", ".jsonl"),
             failed: ids("failed", ".jsonl"),
+            guard: self.guard_health(),
         })
+    }
+
+    /// Guard health per job, from terminal summaries (`done/`, `failed/`)
+    /// and — for jobs still in flight — the progress files' guard state.
+    /// Unreadable/partial files are skipped, not errors: status must keep
+    /// working while workers are actively rewriting these files.
+    fn guard_health(&self) -> std::collections::BTreeMap<String, GuardHealth> {
+        let mut out = std::collections::BTreeMap::new();
+        let read_json = |p: &Path| {
+            std::fs::read_to_string(p).ok().and_then(|t| Json::parse(&t).ok())
+        };
+        for d in ["done", "failed"] {
+            let Ok(rd) = std::fs::read_dir(self.sub(d)) else { continue };
+            for entry in rd.filter_map(|e| e.ok()) {
+                let name = entry.file_name();
+                let Some(id) = name.to_str().and_then(|n| n.strip_suffix(".summary.json"))
+                else {
+                    continue;
+                };
+                let Some(j) = read_json(&entry.path()) else { continue };
+                let recoveries =
+                    j.get("recoveries").and_then(Json::as_arr).map_or(0, |a| a.len());
+                let quarantined =
+                    j.get("quarantined").and_then(Json::as_bool).unwrap_or(false);
+                if recoveries > 0 || quarantined {
+                    out.insert(id.to_string(), GuardHealth { recoveries, quarantined });
+                }
+            }
+        }
+        if let Ok(rd) = std::fs::read_dir(self.sub("logs")) {
+            for entry in rd.filter_map(|e| e.ok()) {
+                let name = entry.file_name();
+                let Some(id) = name.to_str().and_then(|n| n.strip_suffix(".resume.json"))
+                else {
+                    continue;
+                };
+                if out.contains_key(id) {
+                    continue; // terminal state wins over in-flight progress
+                }
+                let Some(g) = read_json(&entry.path()).and_then(|j| j.get("guard").cloned())
+                else {
+                    continue;
+                };
+                let recoveries =
+                    g.get("recoveries").and_then(Json::as_arr).map_or(0, |a| a.len());
+                let quarantined = g.get("quarantined_at").and_then(Json::as_usize).is_some();
+                if recoveries > 0 || quarantined {
+                    out.insert(id.to_string(), GuardHealth { recoveries, quarantined });
+                }
+            }
+        }
+        out
     }
 
     /// Persist partial results at a checkpoint: all rows logged so far
@@ -341,6 +421,7 @@ impl Spool {
         next_step: usize,
         rows: &[Row],
         interventions: &[(usize, String)],
+        guard: Option<&Json>,
     ) -> Result<()> {
         fsio::write_atomic(
             &self.sub("logs").join(format!("{id}.rows.jsonl")),
@@ -358,8 +439,13 @@ impl Spool {
                 })
                 .collect(),
         );
-        let resume =
-            Json::obj(vec![("next_step", Json::from(next_step)), ("interventions", ivs)]);
+        let mut fields = vec![("next_step", Json::from(next_step)), ("interventions", ivs)];
+        // Optional so unguarded progress files keep their pre-guard byte
+        // layout (crash-parity fixtures compare them directly).
+        if let Some(g) = guard {
+            fields.push(("guard", g.clone()));
+        }
+        let resume = Json::obj(fields);
         fsio::write_atomic(
             &self.sub("logs").join(format!("{id}.resume.json")),
             resume.to_string().as_bytes(),
@@ -390,7 +476,7 @@ impl Spool {
         let rows_text =
             std::fs::read_to_string(self.sub("logs").join(format!("{id}.rows.jsonl"))).ok()?;
         let rows = RunLog::rows_from_jsonl(&rows_text).ok()?;
-        Some(Progress { next_step, rows, interventions })
+        Some(Progress { next_step, rows, interventions, guard: j.get("guard").cloned() })
     }
 
     /// `(lease file, job id)` for every current lease.
@@ -441,7 +527,7 @@ impl Spool {
 
 /// Look an intervention up by its wire name.
 pub fn intervention_by_name(name: &str) -> Option<Intervention> {
-    Intervention::ALL.iter().copied().find(|i| i.name() == name)
+    Intervention::by_name(name)
 }
 
 /// Serialize a [`Job`] (bundle + complete [`RunConfig`]) to JSON. Every
@@ -517,6 +603,10 @@ pub fn job_json(job: &Job) -> Json {
     if let Some(w) = &cfg.weights {
         fields.push(("weights", Json::from(w.clone())));
     }
+    // Optional so pre-guard job files stay byte-identical.
+    if let Some(g) = &cfg.guard {
+        fields.push(("guard", g.to_json()));
+    }
     Json::obj(fields)
 }
 
@@ -586,6 +676,12 @@ pub fn job_from_json(j: &Json) -> Result<Job> {
     cfg.stop_on_divergence = j.req("stop_on_divergence")?.as_bool().unwrap_or(false);
     cfg.detector = detector;
     cfg.weights = j.get("weights").and_then(|w| w.as_str()).map(|w| w.to_string());
+    cfg.guard = match j.get("guard") {
+        Some(g) => {
+            Some(GuardConfig::from_json(g).map_err(|e| anyhow!("guard: {e}"))?)
+        }
+        None => None,
+    };
     let bundle = j.req("bundle")?.as_str().unwrap_or_default().to_string();
     Ok(Job { bundle, cfg })
 }
@@ -635,6 +731,26 @@ mod tests {
         let back = job_from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(job_json(&back).to_string(), text, "weights key roundtrips");
         assert_eq!(back.cfg.weights.as_deref(), Some("runs/model.mxc"));
+    }
+
+    #[test]
+    fn guard_key_is_versioned_and_roundtrips() {
+        let j = job();
+        let text = job_json(&j).to_string();
+        assert!(!text.contains("guard"), "no guard key unless configured");
+
+        let mut j = job();
+        j.cfg.guard = Some(GuardConfig {
+            retry_budget: 3,
+            ladder: vec![Intervention::SkipLnQuant, Intervention::ToFp32],
+            ..GuardConfig::default()
+        });
+        let text = job_json(&j).to_string();
+        let back = job_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(job_json(&back).to_string(), text, "guard key roundtrips");
+        let g = back.cfg.guard.expect("guard survives the wire");
+        assert_eq!(g.retry_budget, 3);
+        assert_eq!(g.ladder, vec![Intervention::SkipLnQuant, Intervention::ToFp32]);
     }
 
     #[test]

@@ -12,23 +12,36 @@
 //! alongside it, and because every backend step is a pure function of
 //! `(state, seed, step, fmt, hyper)` and batch selection is keyed by
 //! `(seed, step)`, the recomputed rows — serialized through the single
-//! row codec — match an uninterrupted run byte for byte. (Detector
-//! *summary* fields can differ after a resume, which is why parity is
-//! defined over the `done/<id>.jsonl` rows, not `summary.json`.)
+//! row codec — match an uninterrupted run byte for byte. Each checkpoint
+//! also carries an `aux.json` with the serialized detector and (for
+//! guarded jobs) [`GuardState`], so detector-dependent behavior — spike
+//! rows, grad-growth triggers, the stabilization guard's whole
+//! rollback/escalate policy — resumes from *exactly* the trajectory
+//! state at that step, and a worker killed mid-recovery re-derives the
+//! identical recovery. Guarded jobs get their snapshot cadence forced
+//! onto the checkpoint grid, which pins every rollback target to a step
+//! the resume path can also reach.
 //!
 //! Fault points (see [`crate::util::faults`]): `"worker.step"` kills the
 //! worker at a chosen step via [`KilledByFault`] — caught here and
 //! treated as process death: **no cleanup**, the lease and heartbeat
-//! stay behind for another worker to reclaim. `"worker.heartbeat"`
-//! suppresses heartbeat refreshes so a live lease goes stale.
+//! stay behind for another worker to reclaim. `"guard.replay"` is the
+//! same kill but only consulted while the guard is replaying a
+//! rolled-back segment, so tests can die *mid-recovery* specifically.
+//! `"worker.heartbeat"` suppresses heartbeat refreshes so a live lease
+//! goes stale.
 
 use anyhow::{anyhow, Result};
 
+use super::detect::Detector;
+use super::guard::GuardState;
 use super::metrics::RunLog;
+use super::run::{ObsEvent, Observed, Resume};
 use super::spool::{intervention_by_name, Lease, Spool};
 use super::sweep::{Job, Sweeper};
 use crate::runtime::{Backend, Engine};
 use crate::util::faults::{self, FaultAction, KilledByFault};
+use crate::util::json::Json;
 
 /// Tunables for one worker.
 #[derive(Debug, Clone)]
@@ -205,9 +218,10 @@ fn execute<E: Engine>(
     };
 
     // Replay already-fired interventions into the starting fmt and drop
-    // their policies so they don't fire twice. (Grad-growth triggers fire
-    // on detector state, which resets at resume; replaying by name keeps
-    // the *fmt trajectory* — what the compute sees — exact.)
+    // their policies so they don't fire twice. (Guard escalations are
+    // *not* in this list — they live in the checkpoint's GuardState and
+    // re-apply via `Guard::apply_rungs` inside the run loop.) Replaying
+    // by name keeps the *fmt trajectory* — what the compute sees — exact.
     let mut cfg = job.cfg.clone();
     for (_, name) in &fired {
         let iv = intervention_by_name(name)
@@ -219,18 +233,83 @@ fn execute<E: Engine>(
             cfg.policies.remove(pos);
         }
     }
-
-    let out = runner.run_observed(&cfg, state, start, &mut |step, st, log| {
-        if let Some(FaultAction::Kill) = faults::check("worker.step", &wcfg.id, step) {
-            std::panic::panic_any(KilledByFault);
+    // Pin the guard's snapshot cadence to the checkpoint grid: rollback
+    // targets are then absolute step-space points an interrupted-and-
+    // resumed worker reproduces exactly (crash parity through recoveries).
+    if let Some(g) = &mut cfg.guard {
+        g.snapshot_every = wcfg.checkpoint_every.max(1);
+    }
+    // Trajectory state saved with the checkpoint being resumed from: the
+    // detector (spike rows + grad-growth triggers are verdict-dependent)
+    // and the guard (ladder position, retry count, flight recorder).
+    let mut resume = Resume::default();
+    if start > 0 {
+        if let Some(aux) = store.load_aux(&id, start) {
+            resume.detector = aux
+                .get("detector")
+                .and_then(|d| Detector::from_json(cfg.detector.clone(), d));
+            resume.guard = aux.get("guard").and_then(GuardState::from_json);
         }
-        if (step + 1) % wcfg.checkpoint_every.max(1) == 0 {
-            store.save(backend.as_ref(), &id, step + 1, st)?;
-            let mut rows = prior_rows.clone();
-            rows.extend(log.rows.iter().copied());
-            let mut ivs = fired.clone();
-            ivs.extend(log.interventions.iter().cloned());
-            spool.save_progress(&id, step + 1, &rows, &ivs)?;
+    }
+
+    let out = runner.run_resumed(&cfg, state, start, resume, &mut |ob| {
+        let step = ob.step;
+        match ob.event {
+            ObsEvent::Stepped => {
+                if let Some(FaultAction::Kill) = faults::check("worker.step", &wcfg.id, step)
+                {
+                    std::panic::panic_any(KilledByFault);
+                }
+                if ob.guard.is_some_and(|g| g.in_replay(step)) {
+                    if let Some(FaultAction::Kill) =
+                        faults::check("guard.replay", &wcfg.id, step)
+                    {
+                        std::panic::panic_any(KilledByFault);
+                    }
+                }
+                if (step + 1) % wcfg.checkpoint_every.max(1) == 0 {
+                    let mut aux = vec![("detector", ob.detector.to_json())];
+                    if let Some(g) = ob.guard {
+                        aux.push(("guard", g.to_json()));
+                    }
+                    store.save_with_aux(
+                        backend.as_ref(),
+                        &id,
+                        step + 1,
+                        ob.state,
+                        Some(&Json::obj(aux)),
+                    )?;
+                    let mut rows = prior_rows.clone();
+                    rows.extend(ob.log.rows.iter().copied());
+                    let mut ivs = fired.clone();
+                    ivs.extend(ob.log.interventions.iter().cloned());
+                    spool.save_progress(
+                        &id,
+                        step + 1,
+                        &rows,
+                        &ivs,
+                        ob.guard.map(GuardState::to_json).as_ref(),
+                    )?;
+                }
+            }
+            ObsEvent::RolledBack { to_step } => {
+                // Checkpoints past the rollback target describe the
+                // abandoned trajectory; drop them so a crash during the
+                // replay resumes from (at latest) the rollback target,
+                // whose aux state re-derives this same recovery.
+                store.remove_newer(&id, to_step);
+                let mut rows = prior_rows.clone();
+                rows.extend(ob.log.rows.iter().copied());
+                let mut ivs = fired.clone();
+                ivs.extend(ob.log.interventions.iter().cloned());
+                spool.save_progress(
+                    &id,
+                    to_step,
+                    &rows,
+                    &ivs,
+                    ob.guard.map(GuardState::to_json).as_ref(),
+                )?;
+            }
         }
         if faults::check("worker.heartbeat", &wcfg.id, step)
             != Some(FaultAction::StallHeartbeat)

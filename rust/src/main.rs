@@ -6,6 +6,9 @@
 //!                [--lr 5e-4] [--steps N] [--batch B] [--paired]
 //!                [--weights model.mxc]                # start from a packed container
 //!                [--intervene <name>@<step>[,...]] [--require-finite]
+//!                [--auto-stabilize [--guard-ladder a,b,..] [--guard-snapshot-every N]
+//!                 [--guard-ring N] [--guard-retries N] [--guard-cooldown N]
+//!                 [--guard-spikes N]]           # self-healing rollback + escalate
 //! mxstab pack    <bundle> [--fmt e4m3-e4m3] [--seed N] [--out|-o model.mxc]
 //!                [--from-checkpoint <ckpt-root> --run <id> [--step N]]
 //!                                               # write a zero-copy .mxc weight container
@@ -13,6 +16,7 @@
 //! mxstab sweep --spool <dir> [--workers N | --procs N]         # spooled crash-tolerant sweep
 //!              [--bundles a,b] [--fmts e4m3-e4m3,...] [--lrs 1e-3,...] [--seeds 0,1]
 //!              [--steps N] [--log-every N] [--checkpoint-every N] [--lease-timeout-ms N]
+//!              [--auto-stabilize [--guard-* as in train]]   # guard every job in the grid
 //! mxstab sweep-worker <spool-dir> [--id w0] [--watch]          # drain (or watch) a spool
 //! mxstab sweep-status <spool-dir>               # per-state counts + per-job progress
 //! mxstab codes [--format e4m3]                  # print the element-format code table
@@ -48,8 +52,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use mxstab::analysis::{fit_chinchilla, LossPoint};
 use mxstab::config::Config;
 use mxstab::coordinator::{
-    run_worker, CheckpointStore, Intervention, Job, LrSchedule, Policy, RunConfig, Spool,
-    Sweeper, WorkerConfig,
+    run_worker, CheckpointStore, GuardConfig, Intervention, Job, LrSchedule, Policy,
+    RunConfig, Spool, Sweeper, WorkerConfig,
 };
 use mxstab::experiments;
 use mxstab::formats::spec::{Fmt, FormatId, BLOCK_SIZES};
@@ -97,19 +101,34 @@ fn parse_policies(spec: &str) -> Result<Vec<Policy>> {
             let (name, at) = p
                 .split_once('@')
                 .ok_or_else(|| anyhow!("intervention spec {p:?}: expected <name>@<step>"))?;
-            let iv = Intervention::ALL
-                .iter()
-                .copied()
-                .find(|i| i.name() == name)
-                .ok_or_else(|| {
-                    let known: Vec<&str> = Intervention::ALL.iter().map(|i| i.name()).collect();
-                    anyhow!("unknown intervention {name:?} (known: {known:?})")
-                })?;
+            let iv = Intervention::by_name(name).ok_or_else(|| {
+                let known: Vec<&str> = Intervention::ALL.iter().map(|i| i.name()).collect();
+                anyhow!("unknown intervention {name:?} (known: {known:?})")
+            })?;
             let step: usize =
                 at.parse().map_err(|_| anyhow!("bad intervention step {at:?}"))?;
             Ok(Policy::at_step(step, iv))
         })
         .collect()
+}
+
+/// Parse the `--auto-stabilize` family into a [`GuardConfig`] (`None`
+/// when the flag is absent — runs stay unguarded by default).
+fn guard_config_from(args: &Args) -> Result<Option<GuardConfig>> {
+    if !args.flag("auto-stabilize") {
+        return Ok(None);
+    }
+    let mut g = GuardConfig::default();
+    if let Some(spec) = args.get("guard-ladder") {
+        g.ladder =
+            mxstab::coordinator::intervene::parse_ladder(spec).map_err(|e| anyhow!("{e}"))?;
+    }
+    g.snapshot_every = args.parse_or("guard-snapshot-every", g.snapshot_every)?;
+    g.ring_keep = args.parse_or("guard-ring", g.ring_keep)?;
+    g.retry_budget = args.parse_or("guard-retries", g.retry_budget)?;
+    g.cooldown = args.parse_or("guard-cooldown", g.cooldown)?;
+    g.spikes_to_recover = args.parse_or("guard-spikes", g.spikes_to_recover)?;
+    Ok(Some(g))
 }
 
 fn cmd_info<E: Engine>(engine: Arc<E>, cfg: &Config) -> Result<()> {
@@ -134,6 +153,9 @@ fn cmd_info<E: Engine>(engine: Arc<E>, cfg: &Config) -> Result<()> {
 }
 
 fn cmd_train<E: Engine>(engine: Arc<E>, cfg: &Config, args: &Args) -> Result<()> {
+    // `MXSTAB_FAULT="nan:<run>@<step>"` injects a deterministic loss
+    // blowup into a real train run (CI's guard-e2e job).
+    mxstab::util::faults::arm_from_env()?;
     // The native engine parses any proxy_<act>_<ln|noln>_L<d>_D<w> or
     // lm_* name (ladder preset or lm_L<l>_D<d>[_H<h>][_T<ctx>][_V<v>]);
     // the default is small enough to train in seconds on a laptop.
@@ -173,6 +195,7 @@ fn cmd_train<E: Engine>(engine: Arc<E>, cfg: &Config, args: &Args) -> Result<()>
     if let Some(spec) = args.get("intervene") {
         rc.policies = parse_policies(spec)?;
     }
+    rc.guard = guard_config_from(args)?;
 
     let t0 = std::time::Instant::now();
     let out = runner.run(&rc)?;
@@ -193,7 +216,22 @@ fn cmd_train<E: Engine>(engine: Arc<E>, cfg: &Config, args: &Args) -> Result<()>
     for (step, name) in &l.interventions {
         println!("intervention@{step}: {name}");
     }
+    for r in &l.recoveries {
+        println!(
+            "recovery@{}: rolled back to step {} and escalated to {} (retry {})",
+            r.at_step, r.to_step, r.rung, r.retry
+        );
+    }
+    if l.quarantined {
+        println!("quarantined: the guard exhausted its ladder/retry budget");
+    }
     println!("log: {}", cfg.runs.join("manual").join(format!("{}.jsonl", l.name)).display());
+    if !l.guard_events.is_empty() {
+        println!(
+            "guard log: {}",
+            cfg.runs.join("manual").join(format!("{}.guard.jsonl", l.name)).display()
+        );
+    }
 
     // LM bundles: held-out validation eval + the corpus-entropy yardstick
     // (a model that learned nothing beyond unigram stats sits above it).
@@ -392,6 +430,7 @@ fn spool_jobs(args: &Args) -> Result<Vec<Job>> {
     let seeds = split("seeds", "0");
     let steps: usize = args.parse_or("steps", 60usize)?;
     let log_every: usize = args.parse_or("log-every", 1usize)?;
+    let guard = guard_config_from(args)?;
     let mut jobs = Vec::new();
     for bundle in &bundles {
         for fmt_spec in &fmts {
@@ -405,6 +444,7 @@ fn spool_jobs(args: &Args) -> Result<Vec<Job>> {
                     let mut cfg = RunConfig::new(&name, fmt, lr, steps);
                     cfg.seed = seed;
                     cfg.log_every = log_every;
+                    cfg.guard = guard.clone();
                     jobs.push(Job { bundle: bundle.clone(), cfg });
                 }
             }
@@ -416,20 +456,35 @@ fn spool_jobs(args: &Args) -> Result<Vec<Job>> {
 fn print_spool_status(spool: &Spool, timeout_ms: u64) -> Result<()> {
     let st = spool.status(timeout_ms)?;
     println!(
-        "spool {}: pending {} | leased {} ({} stale) | done {} | failed {}",
+        "spool {}: pending {} | leased {} ({} stale) | done {} | failed {} | \
+         recovered {} | quarantined {}",
         spool.root().display(),
         st.pending.len(),
         st.leased.len(),
         st.leased.iter().filter(|l| l.stale).count(),
         st.done.len(),
-        st.failed.len()
+        st.failed.len(),
+        st.guard.values().filter(|g| g.recoveries > 0).count(),
+        st.guard.values().filter(|g| g.quarantined).count(),
     );
-    let mut t = Table::new(&["job", "state", "worker", "step", "hb age ms"]);
+    let mut t = Table::new(&["job", "state", "worker", "step", "hb age ms", "guard"]);
     let dash = || "-".to_string();
+    let guard_cell = |id: &str| match st.guard.get(id) {
+        Some(g) if g.quarantined => "quarantined".to_string(),
+        Some(g) => format!("recovered x{}", g.recoveries),
+        None => dash(),
+    };
     for id in &st.pending {
         // A reclaimed job waiting in pending/ still shows its progress.
         let step = spool.load_progress(id).map(|p| p.next_step).unwrap_or(0);
-        t.row(vec![id.clone(), "pending".into(), dash(), step.to_string(), dash()]);
+        t.row(vec![
+            id.clone(),
+            "pending".into(),
+            dash(),
+            step.to_string(),
+            dash(),
+            guard_cell(id),
+        ]);
     }
     for l in &st.leased {
         t.row(vec![
@@ -438,13 +493,14 @@ fn print_spool_status(spool: &Spool, timeout_ms: u64) -> Result<()> {
             l.worker.clone(),
             l.step.to_string(),
             l.age_ms.to_string(),
+            guard_cell(&l.id),
         ]);
     }
     for id in &st.done {
-        t.row(vec![id.clone(), "done".into(), dash(), dash(), dash()]);
+        t.row(vec![id.clone(), "done".into(), dash(), dash(), dash(), guard_cell(id)]);
     }
     for id in &st.failed {
-        t.row(vec![id.clone(), "failed".into(), dash(), dash(), dash()]);
+        t.row(vec![id.clone(), "failed".into(), dash(), dash(), dash(), guard_cell(id)]);
     }
     print!("{}", t.text());
     Ok(())

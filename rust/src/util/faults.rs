@@ -17,7 +17,10 @@
 //!   contains `s`; tests use unique scopes so parallel tests in the same
 //!   process never trip each other's faults.
 //! * `step` — fires once the hit's step reaches `at_step` (sites without
-//!   a step notion pass 0 and arm with `at_step: None`).
+//!   a step notion pass 0 and arm with `at_step: None`); faults armed
+//!   with `exact` fire only when the step matches exactly, which makes
+//!   them pure functions of `(scope, step)` — deterministic under
+//!   rollback-replay and crash-resume.
 //!
 //! Each armed fault fires at most `hits` times, then disarms itself.
 //! [`clear_scope`] removes a test's leftovers without disturbing others.
@@ -26,7 +29,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// What happens when an armed fault fires.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum FaultAction {
     /// Simulate `SIGKILL`: the worker unwinds immediately via
     /// [`KilledByFault`] and performs **no** cleanup — its lease file and
@@ -41,6 +44,13 @@ pub enum FaultAction {
     TornWrite { keep: usize },
     /// Fail the guarded operation with an injected error.
     Fail,
+    /// Overwrite the step's loss and grad norm with NaN at the
+    /// `"metrics.loss"` point — a deterministic hard divergence for
+    /// exercising detector/guard paths without hunting a real blowup.
+    NanLoss,
+    /// Multiply the step's loss and grad norm by `factor` at the
+    /// `"metrics.loss"` point — a deterministic loss spike.
+    SpikeLoss { factor: f64 },
 }
 
 /// Panic payload used by [`FaultAction::Kill`] sites. Callers that
@@ -55,8 +65,14 @@ pub struct Fault {
     pub point: &'static str,
     /// Fires only when the hit's scope contains this substring.
     pub scope: Option<String>,
-    /// Fires only once the hit's step is `>=` this.
+    /// Fires only once the hit's step is `>=` this — or `==` when
+    /// `exact` is set.
     pub at_step: Option<usize>,
+    /// Match `at_step` exactly instead of `>=`. Loss faults use this so
+    /// injection is a pure function of `(scope, step)`: a rollback-replay
+    /// or a crash-resumed worker that revisits the step re-fires the
+    /// fault identically, which the guard's determinism contract needs.
+    pub exact: bool,
     pub action: FaultAction,
     /// Remaining trigger count (decremented per fire; 0 = disarmed).
     pub hits: usize,
@@ -64,7 +80,7 @@ pub struct Fault {
 
 impl Fault {
     pub fn new(point: &'static str, action: FaultAction) -> Fault {
-        Fault { point, scope: None, at_step: None, action, hits: 1 }
+        Fault { point, scope: None, at_step: None, exact: false, action, hits: 1 }
     }
 
     /// Kill the worker whose id contains `scope` at training step `step`.
@@ -73,6 +89,32 @@ impl Fault {
             scope: Some(scope.to_string()),
             at_step: Some(step),
             ..Fault::new("worker.step", FaultAction::Kill)
+        }
+    }
+
+    /// Inject NaN into the loss/grad metrics of the run whose name
+    /// contains `scope`, at exactly training step `step`. Never
+    /// self-disarms: replays and resumes that revisit the step re-fire it.
+    pub fn nan_loss(scope: &str, step: usize) -> Fault {
+        Fault {
+            scope: Some(scope.to_string()),
+            at_step: Some(step),
+            exact: true,
+            hits: usize::MAX,
+            ..Fault::new("metrics.loss", FaultAction::NanLoss)
+        }
+    }
+
+    /// Multiply the loss/grad metrics of the run whose name contains
+    /// `scope` by 1000 at exactly training step `step` (a ≥100× spike by
+    /// the paper's κ = 100 rule at any sane loss scale).
+    pub fn spike_loss(scope: &str, step: usize) -> Fault {
+        Fault {
+            scope: Some(scope.to_string()),
+            at_step: Some(step),
+            exact: true,
+            hits: usize::MAX,
+            ..Fault::new("metrics.loss", FaultAction::SpikeLoss { factor: 1000.0 })
         }
     }
 
@@ -97,7 +139,8 @@ impl Fault {
 
     /// Render this fault back into its `MXSTAB_FAULT` spec entry, when
     /// it is one of the env-expressible kinds ([`Fault::kill_worker`],
-    /// [`Fault::stall_heartbeat`]). Inverse of [`parse_spec`].
+    /// [`Fault::stall_heartbeat`], [`Fault::nan_loss`],
+    /// [`Fault::spike_loss`]). Inverse of [`parse_spec`].
     pub fn spec_entry(&self) -> Option<String> {
         match (self.point, &self.action) {
             ("worker.step", FaultAction::Kill) => {
@@ -106,6 +149,12 @@ impl Fault {
             }
             ("worker.heartbeat", FaultAction::StallHeartbeat) => {
                 Some(format!("stall-heartbeat:{}", self.scope.as_deref()?))
+            }
+            ("metrics.loss", FaultAction::NanLoss) => {
+                Some(format!("nan:{}@{}", self.scope.as_deref()?, self.at_step.unwrap_or(0)))
+            }
+            ("metrics.loss", FaultAction::SpikeLoss { .. }) => {
+                Some(format!("spike:{}@{}", self.scope.as_deref()?, self.at_step.unwrap_or(0)))
             }
             _ => None,
         }
@@ -125,30 +174,44 @@ pub fn render_spec(faults: &[Fault]) -> Option<String> {
 /// Parse an `MXSTAB_FAULT` spec string into faults without arming them.
 ///
 /// Grammar: `<entry>[,<entry>...]` with entries `kill:<worker>@<step>`
-/// (the `@<step>` defaults to 0 when omitted) and
-/// `stall-heartbeat:<worker>`. Malformed entries are hard errors — a
-/// fault spec that silently arms nothing would make a fault-injection
-/// test pass vacuously.
+/// (the `@<step>` defaults to 0 when omitted),
+/// `stall-heartbeat:<worker>`, `nan:<run>@<step>`, and
+/// `spike:<run>@<step>` (loss-metric faults firing at exactly that
+/// step of the run whose name contains the scope). Malformed entries
+/// are hard errors — a fault spec that silently arms nothing would make
+/// a fault-injection test pass vacuously.
 pub fn parse_spec(spec: &str) -> Result<Vec<Fault>, String> {
+    fn scope_step<'a>(part: &str, kind: &str, rest: &'a str) -> Result<(&'a str, usize), String> {
+        let (scope, step_s) = rest.split_once('@').unwrap_or((rest, "0"));
+        if scope.is_empty() {
+            return Err(format!(
+                "MXSTAB_FAULT entry {part:?}: `{kind}:` needs a scope, \
+                 e.g. {kind}:w0@30"
+            ));
+        }
+        let step = step_s.parse::<usize>().map_err(|_| {
+            format!(
+                "MXSTAB_FAULT entry {part:?}: bad step {step_s:?} \
+                 (expected a non-negative integer)"
+            )
+        })?;
+        Ok((scope, step))
+    }
     let mut out = Vec::new();
     for part in spec.split(',').filter(|s| !s.is_empty()) {
         let (kind, rest) = part.split_once(':').unwrap_or((part, ""));
         match kind {
             "kill" => {
-                let (scope, step_s) = rest.split_once('@').unwrap_or((rest, "0"));
-                if scope.is_empty() {
-                    return Err(format!(
-                        "MXSTAB_FAULT entry {part:?}: `kill:` needs a worker \
-                         scope, e.g. kill:w0@30"
-                    ));
-                }
-                let step = step_s.parse::<usize>().map_err(|_| {
-                    format!(
-                        "MXSTAB_FAULT entry {part:?}: bad step {step_s:?} \
-                         (expected a non-negative integer)"
-                    )
-                })?;
+                let (scope, step) = scope_step(part, kind, rest)?;
                 out.push(Fault::kill_worker(scope, step));
+            }
+            "nan" => {
+                let (scope, step) = scope_step(part, kind, rest)?;
+                out.push(Fault::nan_loss(scope, step));
+            }
+            "spike" => {
+                let (scope, step) = scope_step(part, kind, rest)?;
+                out.push(Fault::spike_loss(scope, step));
             }
             "stall-heartbeat" => {
                 if rest.is_empty() {
@@ -162,7 +225,7 @@ pub fn parse_spec(spec: &str) -> Result<Vec<Fault>, String> {
             other => {
                 return Err(format!(
                     "MXSTAB_FAULT: unknown fault kind {other:?} \
-                     (known: kill, stall-heartbeat)"
+                     (known: kill, stall-heartbeat, nan, spike)"
                 ));
             }
         }
@@ -206,7 +269,7 @@ pub fn check(point: &str, scope: &str, step: usize) -> Option<FaultAction> {
         f.hits > 0
             && f.point == point
             && f.scope.as_deref().map_or(true, |s| scope.contains(s))
-            && f.at_step.map_or(true, |s| step >= s)
+            && f.at_step.map_or(true, |s| if f.exact { step == s } else { step >= s })
     })?;
     if reg[i].hits != usize::MAX {
         reg[i].hits -= 1;
@@ -290,7 +353,7 @@ mod tests {
     #[test]
     fn malformed_specs_are_rejected_with_clear_errors() {
         let e = parse_spec("kill:").unwrap_err();
-        assert!(e.contains("needs a worker scope"), "{e}");
+        assert!(e.contains("needs a scope"), "{e}");
         let e = parse_spec("kill:w0@banana").unwrap_err();
         assert!(e.contains("bad step"), "{e}");
         let e = parse_spec("detonate:w0").unwrap_err();
@@ -301,6 +364,35 @@ mod tests {
         // One bad entry poisons the whole spec — nothing half-arms.
         let e = parse_spec("kill:w0@30,bogus:w1").unwrap_err();
         assert!(e.contains("bogus"), "{e}");
+    }
+
+    #[test]
+    fn loss_faults_fire_exactly_at_step_and_refire_on_replay() {
+        arm(Fault::nan_loss("faults_t4_run", 40));
+        // Not before, not after — only exactly at the armed step.
+        assert_eq!(check("metrics.loss", "faults_t4_run", 39), None);
+        assert_eq!(check("metrics.loss", "faults_t4_run", 41), None);
+        assert_eq!(check("metrics.loss", "faults_t4_run", 40), Some(FaultAction::NanLoss));
+        // A rollback-replay revisiting the step re-fires identically.
+        assert_eq!(check("metrics.loss", "faults_t4_run", 40), Some(FaultAction::NanLoss));
+        clear_scope("faults_t4");
+        assert_eq!(check("metrics.loss", "faults_t4_run", 40), None);
+    }
+
+    #[test]
+    fn loss_fault_specs_round_trip() {
+        let faults = parse_spec("nan:lm_run@40,spike:proxy_run@7").expect("valid spec");
+        assert_eq!(faults.len(), 2);
+        assert_eq!(faults[0].point, "metrics.loss");
+        assert_eq!(faults[0].action, FaultAction::NanLoss);
+        assert!(faults[0].exact);
+        assert_eq!(faults[0].hits, usize::MAX);
+        assert_eq!(faults[1].action, FaultAction::SpikeLoss { factor: 1000.0 });
+        assert_eq!(render_spec(&faults).as_deref(), Some("nan:lm_run@40,spike:proxy_run@7"));
+        let e = parse_spec("nan:").unwrap_err();
+        assert!(e.contains("needs a scope"), "{e}");
+        let e = parse_spec("spike:r@x").unwrap_err();
+        assert!(e.contains("bad step"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,318 @@
+//! Adversarial integration tests for the rollback-and-escalate
+//! stabilization guard: deterministic divergence injection, bitwise
+//! rollback-replay proofs, quarantine terminal states, and crash parity
+//! through a recovery (a worker killed *mid-replay* must resume to a
+//! byte-identical log and flight recorder).
+//!
+//! All tests share one process (cargo runs them on parallel threads), so
+//! every test uses scope-unique run names / worker ids and clears its
+//! faults on exit — the fault registry only fires on matching scopes.
+
+use std::path::PathBuf;
+
+use mxstab::coordinator::metrics::Row;
+use mxstab::coordinator::{
+    run_worker, GuardConfig, Intervention, Job, Policy, RunConfig, RunLog, Spool, Sweeper,
+    WorkerConfig,
+};
+use mxstab::formats::spec::{Fmt, FormatId};
+use mxstab::runtime::NativeEngine;
+use mxstab::util::faults::{self, Fault, FaultAction};
+
+const BUNDLE: &str = "lm_L1_D32_H1_T32_V64";
+
+fn sweeper() -> Sweeper<NativeEngine> {
+    Sweeper::new(NativeEngine::with_batch(2).unwrap())
+}
+
+fn lm_cfg(name: &str, steps: usize) -> RunConfig {
+    let mut cfg = RunConfig::new(name, Fmt::full(FormatId::E4M3, FormatId::E4M3), 1e-3, steps);
+    cfg.log_every = 1;
+    cfg
+}
+
+fn tdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mxstab_guard_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+/// Rows with the rung tag dropped, for bitwise comparison against an
+/// unguarded oracle (the guard legitimately tags replayed rows).
+fn strip_rungs(rows: &[Row]) -> Vec<Row> {
+    rows.iter().map(|r| Row { rung: None, ..*r }).collect()
+}
+
+fn kinds(log: &RunLog) -> Vec<&str> {
+    log.guard_events.iter().map(|e| e.kind.as_str()).collect()
+}
+
+/// The headline proof. An injected NaN at step 40 diverges a guarded
+/// run; the guard rolls back to its step-40 snapshot, escalates to
+/// `skip-ln-quant` (which cures the LN-quant-gated fault), and replays.
+/// The result must be bitwise identical to an *unguarded oracle* that
+/// applied the same intervention at step 40 via the policy engine —
+/// prefix and suffix both — and the run must not read as diverged.
+#[test]
+fn recovered_run_matches_the_intervention_oracle_bitwise() {
+    faults::arm(Fault::nan_loss("guardrec_a", 40));
+    let sw = sweeper();
+    let runner = sw.runner(BUNDLE).unwrap();
+
+    let mut cfg = lm_cfg("guardrec_a", 60);
+    cfg.guard = Some(GuardConfig { snapshot_every: 10, ..GuardConfig::default() });
+    let guarded = runner.run(&cfg).unwrap().log;
+    faults::clear_scope("guardrec_a");
+
+    // Unguarded baseline (different name: the fault never fires).
+    let baseline = runner.run(&lm_cfg("guardrec_base", 60)).unwrap().log;
+    // Oracle: the same escalation applied by the Fig. 7 policy engine.
+    let mut oracle_cfg = lm_cfg("guardrec_oracle", 60);
+    oracle_cfg.policies = vec![Policy::at_step(40, Intervention::SkipLnQuant)];
+    let oracle = runner.run(&oracle_cfg).unwrap().log;
+
+    assert_eq!(guarded.recoveries.len(), 1);
+    let r = &guarded.recoveries[0];
+    assert_eq!((r.at_step, r.to_step, r.rung.as_str(), r.retry), (40, 40, "skip-ln-quant", 1));
+    assert_eq!(kinds(&guarded), ["diverged", "rollback", "replay-done"]);
+    assert!(!guarded.quarantined);
+    assert_eq!(guarded.diverged_at, None, "a recovered run must not read as diverged");
+    assert!(guarded.interventions.is_empty(), "guard rungs are not policy interventions");
+
+    // Prefix (steps < 40): untouched by the recovery, bitwise = baseline.
+    assert_eq!(guarded.rows.len(), 60, "the NaN row was dropped by the rollback");
+    assert!(guarded.rows[..40].iter().all(|r| r.rung.is_none()));
+    assert_eq!(
+        RunLog::rows_jsonl(&guarded.rows[..40]),
+        RunLog::rows_jsonl(&baseline.rows[..40]),
+        "pre-divergence prefix must be bitwise identical to the unguarded baseline"
+    );
+    // Suffix (steps >= 40): rung-tagged, otherwise bitwise = oracle.
+    assert!(guarded.rows[40..].iter().all(|r| r.rung == Some(1)));
+    assert_eq!(
+        RunLog::rows_jsonl(&strip_rungs(&guarded.rows[40..])),
+        RunLog::rows_jsonl(&oracle.rows[40..]),
+        "post-recovery suffix must be bitwise identical to the intervention oracle"
+    );
+    assert!(guarded.final_loss().is_finite());
+}
+
+/// Divergence at the very first step: the baseline snapshot (taken at
+/// the first step seen, before anything ran) is the rollback target.
+#[test]
+fn divergence_at_step_zero_rolls_back_to_the_baseline_snapshot() {
+    faults::arm(Fault::nan_loss("guardzero_a", 0));
+    let sw = sweeper();
+    let mut cfg = lm_cfg("guardzero_a", 12);
+    cfg.guard = Some(GuardConfig { snapshot_every: 10, ..GuardConfig::default() });
+    let log = sw.runner(BUNDLE).unwrap().run(&cfg).unwrap().log;
+    faults::clear_scope("guardzero_a");
+
+    assert_eq!(log.recoveries.len(), 1);
+    let r = &log.recoveries[0];
+    assert_eq!((r.at_step, r.to_step, r.rung.as_str()), (0, 0, "skip-ln-quant"));
+    assert_eq!(log.rows.len(), 12);
+    assert!(log.rows.iter().all(|r| r.rung == Some(1)), "every row is post-escalation");
+    assert!(log.final_loss().is_finite());
+}
+
+/// A rung that does *not* cure the fault: the NaN re-fires during the
+/// replay (loss faults are exact-step and never self-disarm), so the
+/// guard must escalate again from the same snapshot — two recoveries,
+/// then a clean finish under the rung that works.
+#[test]
+fn divergence_during_replay_escalates_a_second_rung() {
+    faults::arm(Fault::nan_loss("guardreplay_a", 5));
+    let sw = sweeper();
+    let mut cfg = lm_cfg("guardreplay_a", 12);
+    // forward-only leaves quant_ln set, so the injected LN-quant blowup
+    // re-fires at step 5 of the replay; skip-ln-quant then cures it.
+    cfg.guard = Some(GuardConfig {
+        ladder: vec![Intervention::ForwardOnly, Intervention::SkipLnQuant],
+        snapshot_every: 10,
+        ..GuardConfig::default()
+    });
+    let log = sw.runner(BUNDLE).unwrap().run(&cfg).unwrap().log;
+    faults::clear_scope("guardreplay_a");
+
+    let recs: Vec<_> = log
+        .recoveries
+        .iter()
+        .map(|r| (r.at_step, r.to_step, r.rung.as_str(), r.retry))
+        .collect();
+    assert_eq!(
+        recs,
+        [(5, 0, "forward-only", 1), (5, 0, "skip-ln-quant", 2)],
+        "both recoveries restart from the step-0 baseline snapshot"
+    );
+    assert_eq!(kinds(&log), ["diverged", "rollback", "diverged", "rollback", "replay-done"]);
+    assert!(!log.quarantined);
+    assert!(log.final_loss().is_finite());
+    assert_eq!(log.rows.len(), 12);
+    assert!(log.rows.iter().all(|r| r.rung == Some(2)));
+}
+
+/// Ladder exhausted: a single rung that cannot cure the fault drives the
+/// run to the quarantined terminal state — an `Ok` return with the NaN
+/// rows retained (so `--require-finite` style gates still fail it), not
+/// a panic or an `Err`.
+#[test]
+fn exhausted_ladder_quarantines_instead_of_erroring() {
+    faults::arm(Fault::nan_loss("guardladd_a", 5));
+    let sw = sweeper();
+    let mut cfg = lm_cfg("guardladd_a", 12);
+    cfg.guard = Some(GuardConfig {
+        ladder: vec![Intervention::ForwardOnly],
+        snapshot_every: 10,
+        ..GuardConfig::default()
+    });
+    let log = sw.runner(BUNDLE).unwrap().run(&cfg).unwrap().log;
+    faults::clear_scope("guardladd_a");
+
+    assert!(log.quarantined);
+    assert_eq!(log.recoveries.len(), 1, "the one rung was spent before quarantine");
+    assert_eq!(kinds(&log), ["diverged", "rollback", "diverged", "quarantine"]);
+    assert_eq!(log.rows.last().unwrap().step, 5, "the run stopped at the divergence");
+    assert!(log.rows.last().unwrap().m.loss.is_nan(), "quarantined runs keep the NaN row");
+    assert!(log.summary_json().to_string().contains("\"quarantined\":true"));
+}
+
+/// Retry budget exhausted mid-ladder. The first rung is an *identity*
+/// escalation (the base fmt already has `quant_bwd` off, so forward-only
+/// changes nothing), which also exercises the replay-bitwise assertion:
+/// the replayed segment — including the NaN row — must reproduce the
+/// dropped rows bit for bit, or the run errors.
+#[test]
+fn retry_budget_quarantines_and_identity_replay_is_bitwise_checked() {
+    faults::arm(Fault::nan_loss("guardbudget_a", 5));
+    let sw = sweeper();
+    let mut cfg = lm_cfg("guardbudget_a", 12);
+    cfg.fmt = Fmt { quant_bwd: false, ..cfg.fmt };
+    cfg.guard = Some(GuardConfig {
+        ladder: vec![Intervention::ForwardOnly, Intervention::BumpExponent],
+        snapshot_every: 10,
+        retry_budget: 1,
+        ..GuardConfig::default()
+    });
+    // The identity replay re-fires the NaN at step 5 with bit-identical
+    // metrics (asserted internally by Guard::check_replay), diverges
+    // again, and the second recovery exceeds the budget of 1.
+    let log = sw.runner(BUNDLE).unwrap().run(&cfg).unwrap().log;
+    faults::clear_scope("guardbudget_a");
+
+    assert!(log.quarantined);
+    assert_eq!(log.recoveries.len(), 1);
+    assert_eq!(log.recoveries[0].rung, "forward-only");
+    assert_eq!(kinds(&log), ["diverged", "rollback", "diverged", "quarantine"]);
+}
+
+/// Regression for the segmented-run detector blind spot: a ≥κ× loss
+/// spike at exactly the snapshot boundary of `run_with_snapshot` must
+/// still be counted. (A fresh detector in the post-segment would have
+/// `prev_loss = None` at the boundary and silently miss it.)
+#[test]
+fn spike_at_snapshot_boundary_is_detected() {
+    faults::arm(Fault::spike_loss("guardsnap_a", 10));
+    let sw = sweeper();
+    let cfg = lm_cfg("guardsnap_a", 20);
+    let (full, _snap) = sw.runner(BUNDLE).unwrap().run_with_snapshot(&cfg, 10).unwrap();
+    faults::clear_scope("guardsnap_a");
+
+    assert_eq!(full.log.spikes, 1, "boundary spike must survive the segment split");
+    assert_eq!(full.log.rows.len(), 20, "pre + post rows merge seamlessly");
+}
+
+/// End-to-end `OnGradGrowth` trigger: an injected 1000× grad-norm spike
+/// at step 10 pushes the detector's trailing growth ratio over the
+/// threshold, so the policy fires at the *next* step boundary.
+#[test]
+fn grad_growth_policy_fires_end_to_end() {
+    faults::arm(Fault::spike_loss("guardgrow_a", 10));
+    let sw = sweeper();
+    let mut cfg = lm_cfg("guardgrow_a", 15);
+    cfg.policies = vec![Policy::on_grad_growth(100.0, Intervention::SkipLnQuant)];
+    let log = sw.runner(BUNDLE).unwrap().run(&cfg).unwrap().log;
+    faults::clear_scope("guardgrow_a");
+
+    assert_eq!(
+        log.interventions,
+        vec![(11, "skip-ln-quant".to_string())],
+        "the growth trigger fires at the first step boundary after the spike"
+    );
+    assert_eq!(log.spikes, 1);
+}
+
+/// Crash parity *through* a recovery: a worker killed mid-replay (via
+/// the `guard.replay` fault point) leaves a lease behind; the reclaiming
+/// worker resumes from the rollback-target checkpoint, re-derives the
+/// identical recovery from the persisted detector + guard state, and
+/// publishes a `done/` log **and flight recorder** byte-identical to an
+/// uninterrupted guarded run's.
+#[test]
+fn worker_killed_mid_recovery_resumes_bitwise_identical() {
+    let dir_g = tdir("kill_gold");
+    let dir_f = tdir("kill_fault");
+    // NaN at step 45 — off the checkpoint grid (every 10), so the
+    // rollback lands at 40 and the replay spans steps 40..45, giving the
+    // mid-replay kill a window to land in.
+    faults::arm(Fault::nan_loss("guardkill_a", 45));
+    let mut cfg = lm_cfg("guardkill_a", 60);
+    cfg.guard = Some(GuardConfig::default()); // worker pins cadence to the grid
+    let job = Job { bundle: BUNDLE.into(), cfg };
+    let sw = sweeper();
+
+    // Golden: uninterrupted single-worker guarded run.
+    let golden = Spool::init(&dir_g).unwrap();
+    golden.enqueue(&job).unwrap();
+    let rep = run_worker(&sw, &golden, &{
+        let mut w = WorkerConfig::new("guardkill_gw");
+        w.checkpoint_every = 10;
+        w.poll_ms = 20;
+        w
+    })
+    .unwrap();
+    assert_eq!(rep.completed, vec!["guardkill_a".to_string()]);
+    let gold_log = std::fs::read(dir_g.join("done/guardkill_a.jsonl")).unwrap();
+    let gold_rec = std::fs::read(dir_g.join("done/guardkill_a.guard.jsonl")).unwrap();
+    assert!(
+        String::from_utf8_lossy(&gold_rec).contains("\"kind\":\"rollback\""),
+        "the published flight recorder must show the recovery"
+    );
+
+    // Faulted: kill the first worker while it replays step 42 (strictly
+    // inside the 40..45 replay window), then let a second worker reclaim.
+    faults::arm(
+        Fault::new("guard.replay", FaultAction::Kill).with_scope("guardkill_kw0").at_step(42),
+    );
+    let faulted = Spool::init(&dir_f).unwrap();
+    faulted.enqueue(&job).unwrap();
+    let mut w0 = WorkerConfig::new("guardkill_kw0");
+    w0.checkpoint_every = 10;
+    w0.poll_ms = 20;
+    let rep = run_worker(&sw, &faulted, &w0).unwrap();
+    assert!(rep.killed, "the guard.replay fault must kill the worker mid-recovery");
+    faults::clear_scope("guardkill_kw0");
+
+    std::thread::sleep(std::time::Duration::from_millis(120));
+    let mut w1 = WorkerConfig::new("guardkill_kw1");
+    w1.checkpoint_every = 10;
+    w1.lease_timeout_ms = 100;
+    w1.poll_ms = 20;
+    let rep = run_worker(&sw, &faulted, &w1).unwrap();
+    faults::clear_scope("guardkill_a");
+    assert_eq!(rep.reclaimed, vec!["guardkill_a".to_string()]);
+    assert_eq!(rep.completed, vec!["guardkill_a".to_string()]);
+
+    assert_eq!(
+        std::fs::read(dir_f.join("done/guardkill_a.jsonl")).unwrap(),
+        gold_log,
+        "resumed-through-recovery rows must be bitwise identical"
+    );
+    assert_eq!(
+        std::fs::read(dir_f.join("done/guardkill_a.guard.jsonl")).unwrap(),
+        gold_rec,
+        "the re-derived recovery must produce an identical flight recorder"
+    );
+    std::fs::remove_dir_all(&dir_g).ok();
+    std::fs::remove_dir_all(&dir_f).ok();
+}
